@@ -1,0 +1,73 @@
+//! Quickstart: generate a synthetic dataset, build the full Proxima index
+//! stack (Vamana graph + PQ + gap encoding), run Algorithm 1, and report
+//! recall/QPS — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart -- --dataset sift-s --scale 0.05
+//! ```
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::SearchService;
+use proxima::dataset::ground_truth::brute_force;
+use proxima::dataset::synth::SynthSpec;
+use proxima::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let name = args.get_or("dataset", "sift-s");
+    let scale = args.get_f64("scale", 0.05);
+    let k = args.get_usize("k", 10);
+
+    // 1. Synthesize a Table I-style dataset.
+    let spec = SynthSpec::by_name(name, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    let ds = spec.generate();
+    println!(
+        "dataset {}: {} base vectors, dim {}, metric {}",
+        ds.name,
+        ds.n_base(),
+        ds.dim(),
+        ds.metric.name()
+    );
+
+    // 2. Build the index stack (graph + PQ + gap encoding). `true` attaches
+    //    the AOT/XLA runtime when artifacts/ exists.
+    let t0 = std::time::Instant::now();
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams::default(),
+        &PqParams::for_dim(ds.dim()),
+        SearchParams::default(),
+        true,
+    );
+    println!(
+        "index built in {:.1}s ({} edges, XLA runtime: {})",
+        t0.elapsed().as_secs_f64(),
+        svc.graph.n_edges(),
+        svc.runtime.is_some()
+    );
+
+    // 3. Exact ground truth for scoring.
+    let gt = brute_force(&ds, k);
+
+    // 4. Search all queries.
+    let t0 = std::time::Instant::now();
+    let mut recall = 0.0;
+    for qi in 0..ds.n_queries() {
+        let out = svc.search(ds.queries.row(qi), k);
+        recall += proxima::dataset::recall_at_k(&out.ids, gt.row(qi), k);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    recall /= ds.n_queries() as f64;
+
+    println!(
+        "recall@{k} = {recall:.4}  |  {:.0} QPS  |  mean latency {:.0} us  |  early-term rate {:.0}%",
+        ds.n_queries() as f64 / secs,
+        svc.mean_latency_us(),
+        100.0 * svc.stats.early_terminated.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / ds.n_queries() as f64
+    );
+    assert!(recall > 0.7, "quickstart recall sanity failed: {recall}");
+    println!("quickstart OK");
+    Ok(())
+}

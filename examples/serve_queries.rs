@@ -1,0 +1,116 @@
+//! End-to-end serving driver (the EXPERIMENTS.md §End-to-end run): builds
+//! the index, starts the TCP coordinator (router → dynamic batcher →
+//! worker pool, ADTs through the AOT/XLA runtime when present), then
+//! drives it with concurrent closed-loop clients and reports recall,
+//! throughput and the latency distribution.
+//!
+//! ```bash
+//! cargo run --release --example serve_queries -- --scale 0.05 --clients 4 --requests 400
+//! ```
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::{Client, Server};
+use proxima::coordinator::SearchService;
+use proxima::dataset::ground_truth::brute_force;
+use proxima::dataset::synth::SynthSpec;
+use proxima::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let name = args.get_or("dataset", "sift-s");
+    let scale = args.get_f64("scale", 0.05);
+    let clients = args.get_usize("clients", 4);
+    let total_requests = args.get_usize("requests", 400);
+    let k = args.get_usize("k", 10);
+
+    let spec = SynthSpec::by_name(name, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    let ds = spec.generate();
+    println!(
+        "[serve] building index over {} x {}d ({})...",
+        ds.n_base(),
+        ds.dim(),
+        ds.metric.name()
+    );
+    let svc = Arc::new(SearchService::build(
+        &ds,
+        &GraphParams::default(),
+        &PqParams::for_dim(ds.dim()),
+        SearchParams::default(),
+        true,
+    ));
+    println!("[serve] XLA runtime attached: {}", svc.runtime.is_some());
+    let gt = brute_force(&ds, k);
+
+    let (handle, _join) = spawn(
+        svc.clone(),
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        2,
+    );
+    let server = Server::start(svc.clone(), handle, 0)?;
+    println!("[serve] listening on {}", server.addr);
+
+    // Closed-loop clients.
+    let addr = server.addr;
+    let t0 = std::time::Instant::now();
+    let per_client = total_requests / clients;
+    let results: Vec<(Vec<f64>, f64)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let ds = &ds;
+            let gt = &gt;
+            handles.push(scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut lats = Vec::with_capacity(per_client);
+                let mut recall = 0.0;
+                for i in 0..per_client {
+                    let qi = (c * per_client + i) % ds.n_queries();
+                    let t = std::time::Instant::now();
+                    let (ids, _dists, _server_lat) =
+                        client.search(ds.queries.row(qi), k).expect("search");
+                    lats.push(t.elapsed().as_secs_f64() * 1e6);
+                    recall += proxima::dataset::recall_at_k(&ids, gt.row(qi), k);
+                }
+                (lats, recall / per_client as f64)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut all_lats: Vec<f64> = results.iter().flat_map(|(l, _)| l.clone()).collect();
+    let recall: f64 = results.iter().map(|(_, r)| r).sum::<f64>() / clients as f64;
+    all_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let served = all_lats.len();
+    let pct = |p: f64| all_lats[((served - 1) as f64 * p) as usize];
+
+    println!("\n=== end-to-end serving results ===");
+    println!("requests served     : {served}");
+    println!("concurrent clients  : {clients}");
+    println!("throughput          : {:.0} QPS", served as f64 / wall);
+    println!("recall@{k}          : {recall:.4}");
+    println!(
+        "latency p50/p95/p99 : {:.0} / {:.0} / {:.0} us",
+        pct(0.50),
+        pct(0.95),
+        pct(0.99)
+    );
+    println!(
+        "early-terminated    : {:.0}%",
+        100.0 * svc.stats.early_terminated.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / served as f64
+    );
+
+    // Shut down cleanly.
+    let mut c = Client::connect(addr)?;
+    c.shutdown().ok();
+    server.stop();
+    assert!(recall > 0.7, "serving recall sanity failed: {recall}");
+    println!("serve_queries OK");
+    Ok(())
+}

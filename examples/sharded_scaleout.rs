@@ -1,0 +1,84 @@
+//! Scale-out serving: partition the base set across several (simulated)
+//! accelerator shards, fan out queries, merge top-k — then drive the
+//! single-shard and sharded services with the Poisson open-loop load
+//! generator and compare latency under load (§IV-E scalability story).
+//!
+//! ```bash
+//! cargo run --release --example sharded_scaleout -- --scale 0.03 --shards 4
+//! ```
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::loadgen;
+use proxima::coordinator::shard::ShardedService;
+use proxima::coordinator::SearchService;
+use proxima::dataset::ground_truth::brute_force;
+use proxima::dataset::synth::SynthSpec;
+use proxima::util::cli::Args;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let name = args.get_or("dataset", "sift-s");
+    let scale = args.get_f64("scale", 0.03);
+    let n_shards = args.get_usize("shards", 4);
+    let k = 10;
+
+    let spec = SynthSpec::by_name(name, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    let ds = spec.generate();
+    let gp = GraphParams::default();
+    let pq = PqParams::for_dim(ds.dim());
+    let params = SearchParams::default();
+
+    println!(
+        "[shard] building 1-shard and {n_shards}-shard indexes over {} x {}d...",
+        ds.n_base(),
+        ds.dim()
+    );
+    let single = ShardedService::build(&ds, 1, &gp, &pq, params.clone());
+    let sharded = ShardedService::build(&ds, n_shards, &gp, &pq, params.clone());
+    let gt = brute_force(&ds, k);
+
+    // Recall parity check.
+    let recall = |sh: &ShardedService| {
+        let mut r = 0.0;
+        for qi in 0..ds.n_queries() {
+            let out = sh.search(ds.queries.row(qi), k);
+            r += proxima::dataset::recall_at_k(&out.ids, gt.row(qi), k);
+        }
+        r / ds.n_queries() as f64
+    };
+    let r1 = recall(&single);
+    let rn = recall(&sharded);
+    println!("[shard] recall@{k}: 1 shard {r1:.4}  |  {n_shards} shards {rn:.4}");
+
+    // Load test the single-shard service through the load generator.
+    let svc: Arc<SearchService> = Arc::new(
+        SearchService::build(&ds, &gp, &pq, params, false),
+    );
+    println!("\n{:<12} {:>10} {:>10} {:>10} {:>10} {:>6}", "offered", "achieved", "p50", "p95", "p99", "late");
+    for target in [200.0, 1000.0, 4000.0] {
+        let rep = loadgen::run(
+            svc.clone(),
+            &ds.queries,
+            k,
+            target,
+            Duration::from_millis(800),
+            2,
+            7,
+        );
+        println!(
+            "{:<12} {:>10.0} {:>9.0}u {:>9.0}u {:>9.0}u {:>6}",
+            format!("{target} QPS"),
+            rep.achieved_qps,
+            rep.p50_us,
+            rep.p95_us,
+            rep.p99_us,
+            rep.late_starts
+        );
+    }
+    assert!(rn >= r1 - 0.05, "sharded recall regressed: {r1} -> {rn}");
+    println!("sharded_scaleout OK");
+    Ok(())
+}

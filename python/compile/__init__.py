@@ -1,0 +1,2 @@
+"""Build-time compile path: JAX/Pallas models AOT-lowered to HLO text for
+the rust PJRT runtime. Never imported at request time."""

@@ -1,0 +1,129 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** artifacts + manifest.json.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the image's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and aot_recipe). The rust runtime loads these
+with ``HloModuleProto::from_text_file``.
+
+Run once per build: ``cd python && python -m compile.aot --out ../artifacts``
+(the Makefile's ``artifacts`` target; a no-op when inputs are unchanged
+thanks to make's timestamp check).
+
+Artifact set: for every (metric, D, M) the synthetic Table I registry
+needs — (l2, 128, 32), (ip, 96, 24), (l2/ip shared tables below) plus
+(l2, 100, 25) for GLOVE-like angular data (angular = ip partials + a bias
+the rust runtime folds in) — emit ``adt``, ``scan``, ``rerank`` and ``gt``
+programs with fixed batch shapes.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed batch shapes shared with the rust runtime (manifest carries them).
+SCAN_B = 512
+RERANK_B = 256
+GT_Q = 16
+GT_N = 2048
+C = 256
+
+# (dim, m) pairs used by the dataset registry; metric variants for each.
+SHAPES = [(128, 32), (96, 24), (100, 25)]
+METRICS = ["l2", "ip"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation (return_tuple=True) -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_entries():
+    """Yield (name, lowered-fn, example-args, meta) for every artifact."""
+    for dim, m in SHAPES:
+        dsub = dim // m
+        for metric in METRICS:
+            yield (
+                f"adt_{metric}_d{dim}",
+                model.make_adt_fn(metric, m, C, dsub),
+                (f32(dim), f32(m, C, dsub)),
+                {"kind": "adt", "metric": metric, "dim": dim, "m": m, "c": C, "dsub": dsub},
+            )
+            yield (
+                f"rerank_{metric}_d{dim}",
+                model.make_rerank_fn(metric, dim, RERANK_B),
+                (f32(dim), f32(RERANK_B, dim)),
+                {"kind": "rerank", "metric": metric, "dim": dim, "batch": RERANK_B},
+            )
+            yield (
+                f"gt_{metric}_d{dim}",
+                model.make_gt_fn(metric, dim, GT_Q, GT_N),
+                (f32(GT_Q, dim), f32(GT_N, dim)),
+                {"kind": "gt", "metric": metric, "dim": dim, "q": GT_Q, "n": GT_N},
+            )
+        # The scan is metric-independent (pure table gather).
+        yield (
+            f"scan_m{m}",
+            model.make_scan_fn(m, C, SCAN_B),
+            (f32(m, C), i32(SCAN_B, m)),
+            {"kind": "scan", "m": m, "c": C, "batch": SCAN_B},
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma list of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "version": 1,
+        "scan_b": SCAN_B,
+        "rerank_b": RERANK_B,
+        "gt_q": GT_Q,
+        "gt_n": GT_N,
+        "artifacts": [],
+    }
+    for name, fn, example_args, meta in build_entries():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {"name": name, "file": fname, **meta}
+        manifest["artifacts"].append(entry)
+        print(f"[aot] {name}: {len(text)} chars -> {path}")
+
+    man_path = os.path.join(args.out, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {man_path} ({len(manifest['artifacts'])} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,112 @@
+"""Layer-1 Pallas kernels for the Proxima search engine's dense hot spots.
+
+Three kernels (paper §IV-D modules):
+
+* ``adt_*`` — the PQ module: build the M x C asymmetric distance table for
+  one query against the codebook (Eq. 3's ADT_i tables).
+* ``pq_scan`` — the distance-computation module's LUT-accumulate: PQ
+  distances for a batch of codes against a prebuilt ADT.
+* ``rerank_*`` — accurate distance for a batch of raw vectors (the rerank
+  step, §III-C).
+
+All kernels are written for ``interpret=True`` (the CPU PJRT plugin cannot
+run Mosaic custom-calls — see /opt/xla-example/README.md). TPU mapping
+notes live in DESIGN.md §2: the ADT tiles for VMEM residency (32 KB table),
+the scan is a one-hot MXU contraction when B is large, and rerank is a
+plain broadcast-reduce; BlockSpecs below express the VMEM tiling intent
+even though the interpret path executes them as single blocks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "adt_l2",
+    "adt_ip",
+    "pq_scan",
+    "rerank_l2",
+    "rerank_ip",
+]
+
+
+def _adt_l2_kernel(q_ref, cb_ref, o_ref):
+    # q: (M, 1, dsub) broadcast against cb: (M, C, dsub) -> (M, C)
+    diff = cb_ref[...] - q_ref[...]
+    o_ref[...] = jnp.sum(diff * diff, axis=-1)
+
+
+def _adt_ip_kernel(q_ref, cb_ref, o_ref):
+    o_ref[...] = -jnp.sum(cb_ref[...] * q_ref[...], axis=-1)
+
+
+def adt_l2(q, codebook):
+    """L2 ADT. q: (M, 1, dsub) f32; codebook: (M, C, dsub) f32 -> (M, C)."""
+    m, c, _ = codebook.shape
+    return pl.pallas_call(
+        _adt_l2_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.float32),
+        interpret=True,
+    )(q, codebook)
+
+
+def adt_ip(q, codebook):
+    """Inner-product ADT (negated partial dots; the angular +1 bias is
+    folded in by the runtime — see ``distance::Metric::adt_bias``)."""
+    m, c, _ = codebook.shape
+    return pl.pallas_call(
+        _adt_ip_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.float32),
+        interpret=True,
+    )(q, codebook)
+
+
+def _pq_scan_kernel(adt_ref, codes_ref, o_ref):
+    # adt: (M, C) flattened gather; codes: (B, M) int32.
+    adt = adt_ref[...]
+    codes = codes_ref[...]
+    m, c = adt.shape
+    flat = adt.reshape(m * c)
+    # out[b] = sum_m adt[m, codes[b, m]]
+    idx = codes + (jnp.arange(m, dtype=jnp.int32) * c)[None, :]
+    o_ref[...] = jnp.sum(flat[idx], axis=-1)
+
+
+def pq_scan(adt, codes):
+    """Batched Eq. 3: adt (M, C) f32, codes (B, M) int32 -> (B,) f32."""
+    b, _ = codes.shape
+    return pl.pallas_call(
+        _pq_scan_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(adt, codes)
+
+
+def _rerank_l2_kernel(q_ref, x_ref, o_ref):
+    diff = x_ref[...] - q_ref[...][None, :]
+    o_ref[...] = jnp.sum(diff * diff, axis=-1)
+
+
+def _rerank_ip_kernel(q_ref, x_ref, o_ref):
+    o_ref[...] = -jnp.dot(x_ref[...], q_ref[...])
+
+
+def rerank_l2(q, xs):
+    """Squared-L2 rerank distances. q: (D,), xs: (B, D) -> (B,)."""
+    b, _ = xs.shape
+    return pl.pallas_call(
+        _rerank_l2_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(q, xs)
+
+
+def rerank_ip(q, xs):
+    """Negative-inner-product rerank distances (angular bias folded by the
+    caller for unit vectors: 1 + ip)."""
+    b, _ = xs.shape
+    return pl.pallas_call(
+        _rerank_ip_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(q, xs)

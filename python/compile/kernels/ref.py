@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (the pytest suite
+asserts allclose between kernels and these references, and the rust unit
+tests implement the same formulas natively — three-way agreement)."""
+
+import jax.numpy as jnp
+
+
+def adt_ref(q_sub, codebook, metric):
+    """q_sub: (M, 1, dsub); codebook: (M, C, dsub) -> (M, C).
+
+    metric: "l2" (squared euclidean partials) or "ip" (negated dots; the
+    angular bias is applied outside, matching the rust runtime)."""
+    if metric == "l2":
+        d = codebook - q_sub
+        return jnp.sum(d * d, axis=-1)
+    elif metric == "ip":
+        return -jnp.sum(codebook * q_sub, axis=-1)
+    raise ValueError(metric)
+
+
+def pq_scan_ref(adt, codes):
+    """adt: (M, C); codes: (B, M) int -> (B,). out[b] = sum_m adt[m, codes[b,m]]."""
+    m = adt.shape[0]
+    return jnp.sum(adt[jnp.arange(m)[None, :], codes], axis=-1)
+
+
+def rerank_ref(q, xs, metric):
+    """q: (D,); xs: (B, D) -> (B,)."""
+    if metric == "l2":
+        d = xs - q[None, :]
+        return jnp.sum(d * d, axis=-1)
+    elif metric == "ip":
+        return -(xs @ q)
+    raise ValueError(metric)
+
+
+def batch_dists_ref(qs, xs, metric):
+    """qs: (Q, D); xs: (N, D) -> (Q, N) distance matrix."""
+    if metric == "l2":
+        qq = jnp.sum(qs * qs, axis=-1, keepdims=True)
+        xx = jnp.sum(xs * xs, axis=-1)[None, :]
+        return qq + xx - 2.0 * (qs @ xs.T)
+    elif metric == "ip":
+        return -(qs @ xs.T)
+    raise ValueError(metric)

@@ -1,0 +1,79 @@
+"""Layer-2 JAX compute graphs wrapping the Layer-1 Pallas kernels.
+
+Each ``make_*`` returns a function with *fixed* shapes (AOT requirement)
+that returns a 1-tuple — the ``return_tuple=True`` lowering convention the
+rust loader unwraps with ``to_tuple1`` (see /opt/xla-example/README.md).
+
+Functions
+---------
+* ``make_adt_fn(metric, m, c, dsub)``   — query (D,) -> ADT (M, C)
+* ``make_scan_fn(m, c, b)``             — ADT + codes (B, M) -> dists (B,)
+* ``make_rerank_fn(metric, d, b)``      — query + raw batch -> dists (B,)
+* ``make_gt_fn(metric, d, q, n)``       — brute-force distance matrix
+  (ground-truth path; plain jnp so XLA's GEMM does the heavy lifting)
+"""
+
+import jax.numpy as jnp
+
+from .kernels import pq, ref
+
+
+def make_adt_fn(metric, m, c, dsub):
+    """ADT builder: (query (m*dsub,), codebook (m, c, dsub)) -> (m, c)."""
+    kernel = pq.adt_l2 if metric == "l2" else pq.adt_ip
+
+    def fn(query, codebook):
+        q_sub = query.reshape(m, 1, dsub)
+        return (kernel(q_sub, codebook),)
+
+    fn.__name__ = f"adt_{metric}_m{m}c{c}d{dsub}"
+    return fn
+
+
+def make_scan_fn(m, c, b):
+    """PQ scan: (adt (m, c), codes (b, m) int32) -> (b,)."""
+    del c  # shape carried by the adt argument
+
+    def fn(adt, codes):
+        return (pq.pq_scan(adt, codes),)
+
+    fn.__name__ = f"scan_m{m}b{b}"
+    return fn
+
+
+def make_rerank_fn(metric, d, b):
+    """Rerank: (query (d,), xs (b, d)) -> (b,)."""
+    kernel = pq.rerank_l2 if metric == "l2" else pq.rerank_ip
+
+    def fn(query, xs):
+        return (kernel(query, xs),)
+
+    fn.__name__ = f"rerank_{metric}_d{d}b{b}"
+    return fn
+
+
+def make_gt_fn(metric, d, q, n):
+    """Ground-truth tile: (queries (q, d), base (n, d)) -> (q, n)."""
+    del d
+
+    def fn(queries, base):
+        return (ref.batch_dists_ref(queries, base, metric),)
+
+    fn.__name__ = f"gt_{metric}_q{q}n{n}"
+    return fn
+
+
+def compose_pq_distance(query, codebook, codes, metric):
+    """Reference composition used by tests: ADT + scan == distance between
+    the query and each code's decoded vector."""
+    m, c, dsub = codebook.shape
+    adt = ref.adt_ref(query.reshape(m, 1, dsub), codebook, metric)
+    return ref.pq_scan_ref(adt, codes)
+
+
+def decode(codebook, codes):
+    """Decode PQ codes to vectors: (b, m) -> (b, m*dsub)."""
+    m, _, dsub = codebook.shape
+    b = codes.shape[0]
+    sub = codebook[jnp.arange(m)[None, :], codes]  # (b, m, dsub)
+    return sub.reshape(b, m * dsub)

@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (m, c, dsub, batch) and values; every kernel must
+match ref.py within float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pq, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@st.composite
+def adt_case(draw):
+    m = draw(st.integers(1, 8))
+    c = draw(st.integers(1, 32))
+    dsub = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, c, dsub, seed
+
+
+@given(adt_case())
+@settings(**SETTINGS)
+def test_adt_l2_matches_ref(case):
+    m, c, dsub, seed = case
+    rng = np.random.default_rng(seed)
+    q = rand(rng, m, 1, dsub)
+    cb = rand(rng, m, c, dsub)
+    out = pq.adt_l2(q, cb)
+    expect = ref.adt_ref(q, cb, "l2")
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@given(adt_case())
+@settings(**SETTINGS)
+def test_adt_ip_matches_ref(case):
+    m, c, dsub, seed = case
+    rng = np.random.default_rng(seed)
+    q = rand(rng, m, 1, dsub)
+    cb = rand(rng, m, c, dsub)
+    out = pq.adt_ip(q, cb)
+    expect = ref.adt_ref(q, cb, "ip")
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def scan_case(draw):
+    m = draw(st.integers(1, 8))
+    c = draw(st.integers(1, 32))
+    b = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, c, b, seed
+
+
+@given(scan_case())
+@settings(**SETTINGS)
+def test_pq_scan_matches_ref(case):
+    m, c, b, seed = case
+    rng = np.random.default_rng(seed)
+    adt = rand(rng, m, c)
+    codes = jnp.asarray(rng.integers(0, c, size=(b, m)), dtype=jnp.int32)
+    out = pq.pq_scan(adt, codes)
+    expect = ref.pq_scan_ref(adt, codes)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+@st.composite
+def rerank_case(draw):
+    d = draw(st.integers(1, 64))
+    b = draw(st.integers(1, 64))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return d, b, seed
+
+
+@given(rerank_case())
+@settings(**SETTINGS)
+def test_rerank_l2_matches_ref(case):
+    d, b, seed = case
+    rng = np.random.default_rng(seed)
+    q = rand(rng, d)
+    xs = rand(rng, b, d)
+    out = pq.rerank_l2(q, xs)
+    expect = ref.rerank_ref(q, xs, "l2")
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@given(rerank_case())
+@settings(**SETTINGS)
+def test_rerank_ip_matches_ref(case):
+    d, b, seed = case
+    rng = np.random.default_rng(seed)
+    q = rand(rng, d)
+    xs = rand(rng, b, d)
+    out = pq.rerank_ip(q, xs)
+    expect = ref.rerank_ref(q, xs, "ip")
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_adt_zero_query_l2_is_squared_norms():
+    cb = jnp.ones((2, 3, 4), dtype=jnp.float32) * 2.0
+    q = jnp.zeros((2, 1, 4), dtype=jnp.float32)
+    out = pq.adt_l2(q, cb)
+    np.testing.assert_allclose(out, jnp.full((2, 3), 16.0))
+
+
+def test_pq_scan_selects_exact_entries():
+    adt = jnp.asarray([[1.0, 2.0], [10.0, 20.0]], dtype=jnp.float32)
+    codes = jnp.asarray([[0, 1], [1, 0]], dtype=jnp.int32)
+    out = pq.pq_scan(adt, codes)
+    np.testing.assert_allclose(out, [21.0, 12.0])
+
+
+def test_kernels_jit_compatible():
+    """Kernels must lower inside jax.jit (the AOT precondition)."""
+    q = jnp.ones((4, 1, 2), dtype=jnp.float32)
+    cb = jnp.ones((4, 8, 2), dtype=jnp.float32)
+    jit_adt = jax.jit(pq.adt_l2)
+    np.testing.assert_allclose(jit_adt(q, cb), jnp.zeros((4, 8)), atol=1e-6)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_scan_of_adt_equals_decoded_distance(metric):
+    """End-to-end PQ identity: ADT + scan == distance(q, decode(code))."""
+    from compile import model
+
+    rng = np.random.default_rng(7)
+    m, c, dsub, b = 4, 16, 3, 10
+    q = rand(rng, m * dsub)
+    cb = rand(rng, m, c, dsub)
+    codes = jnp.asarray(rng.integers(0, c, size=(b, m)), dtype=jnp.int32)
+
+    kernel = pq.adt_l2 if metric == "l2" else pq.adt_ip
+    adt = kernel(q.reshape(m, 1, dsub), cb)
+    dists = pq.pq_scan(adt, codes)
+
+    decoded = model.decode(cb, codes)
+    expect = ref.rerank_ref(q, decoded, metric)
+    np.testing.assert_allclose(dists, expect, rtol=1e-4, atol=1e-4)

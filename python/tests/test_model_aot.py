@@ -1,0 +1,105 @@
+"""L2 model shape checks and AOT lowering smoke tests."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_gt_fn_l2_matches_bruteforce():
+    rng = np.random.default_rng(1)
+    qs = jnp.asarray(rng.standard_normal((3, 8)), dtype=jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((20, 8)), dtype=jnp.float32)
+    fn = model.make_gt_fn("l2", 8, 3, 20)
+    (out,) = fn(qs, xs)
+    naive = np.array(
+        [[np.sum((np.array(q) - np.array(x)) ** 2) for x in xs] for q in qs]
+    )
+    np.testing.assert_allclose(out, naive, rtol=1e-3, atol=1e-3)
+
+
+def test_gt_fn_ip():
+    rng = np.random.default_rng(2)
+    qs = jnp.asarray(rng.standard_normal((2, 4)), dtype=jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((5, 4)), dtype=jnp.float32)
+    fn = model.make_gt_fn("ip", 4, 2, 5)
+    (out,) = fn(qs, xs)
+    np.testing.assert_allclose(out, -(np.array(qs) @ np.array(xs).T), rtol=1e-5)
+
+
+def test_adt_fn_shapes():
+    fn = model.make_adt_fn("l2", 4, 16, 3)
+    q = jnp.zeros(12, dtype=jnp.float32)
+    cb = jnp.zeros((4, 16, 3), dtype=jnp.float32)
+    (adt,) = fn(q, cb)
+    assert adt.shape == (4, 16)
+    assert adt.dtype == jnp.float32
+
+
+def test_lowering_produces_hlo_text():
+    """Every artifact entry must lower to parseable HLO text."""
+    seen = set()
+    for name, fn, args, meta in aot.build_entries():
+        assert name not in seen, f"duplicate artifact name {name}"
+        seen.add(name)
+        # Lower the smallest dim only to keep the test fast.
+        if meta.get("dim", 96) != 96:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text
+    assert len(seen) >= 15  # 3 shapes x 2 metrics x 3 kinds + 3 scans
+
+
+def test_full_aot_cli(tmp_path):
+    """The Makefile entry point end-to-end for one artifact."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    out = tmp_path / "artifacts"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--only", "scan_m24"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["artifacts"][0]["name"] == "scan_m24"
+    hlo = (out / "scan_m24.hlo.txt").read_text()
+    assert hlo.startswith("HloModule")
+
+
+def test_decode_roundtrip_identity_codebook():
+    # Codebook where centroid j of every subspace is the constant j.
+    m, c, dsub = 3, 4, 2
+    cb = jnp.broadcast_to(
+        jnp.arange(c, dtype=jnp.float32)[None, :, None], (m, c, dsub)
+    )
+    codes = jnp.asarray([[0, 1, 2], [3, 3, 3]], dtype=jnp.int32)
+    dec = model.decode(cb, codes)
+    expect = np.array(
+        [[0, 0, 1, 1, 2, 2], [3, 3, 3, 3, 3, 3]], dtype=np.float32
+    )
+    np.testing.assert_allclose(dec, expect)
+
+
+def test_compose_pq_distance_consistency():
+    rng = np.random.default_rng(3)
+    m, c, dsub, b = 4, 8, 2, 6
+    q = jnp.asarray(rng.standard_normal(m * dsub), dtype=jnp.float32)
+    cb = jnp.asarray(rng.standard_normal((m, c, dsub)), dtype=jnp.float32)
+    codes = jnp.asarray(rng.integers(0, c, size=(b, m)), dtype=jnp.int32)
+    d1 = model.compose_pq_distance(q, cb, codes, "l2")
+    d2 = ref.rerank_ref(q, model.decode(cb, codes), "l2")
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-4)

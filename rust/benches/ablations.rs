@@ -1,0 +1,11 @@
+//! Ablation benches for the DESIGN.md §7 design choices (β, repetition
+//! rate, MUX ratio, custom vs commodity core).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    for (i, t) in figures::ablations::run("sift-s", scale).iter().enumerate() {
+        t.print();
+        t.write_csv(&format!("ablations_part{i}")).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 3 (roofline + LLC miss + distance-compute share).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let t = figures::fig03::run(&figures::small_datasets(), scale);
+    t.print();
+    t.write_csv("fig03_profiling").ok();
+}

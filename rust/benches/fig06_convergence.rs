@@ -1,0 +1,13 @@
+//! Regenerates Fig 6a (convergence vs T) and Fig 6b (traffic vs degree R).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    for (i, t) in figures::fig06::run(&figures::small_datasets(), scale)
+        .iter()
+        .enumerate()
+    {
+        t.print();
+        t.write_csv(&format!("fig06_part{i}")).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Regenerates Fig 9 (3D NAND density/area/read-latency design space).
+use proxima::figures;
+
+fn main() {
+    let t = figures::fig09::run();
+    t.print();
+    t.write_csv("fig09_nand_tradeoffs").ok();
+}

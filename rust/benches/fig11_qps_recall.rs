@@ -1,0 +1,16 @@
+//! Regenerates Fig 11 (QPS vs recall for Proxima/HNSW/DiskANN-PQ/IVF).
+//! Quick mode uses the two small datasets; PROXIMA_SCALE=full sweeps all
+//! six Table I lookalikes at 0.5 registry scale.
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let datasets = if proxima::util::bench::full_scale() {
+        figures::all_datasets()
+    } else {
+        figures::small_datasets()
+    };
+    let t = figures::fig11::run(&datasets, scale);
+    t.print();
+    t.write_csv("fig11_qps_recall").ok();
+}

@@ -1,0 +1,13 @@
+//! Regenerates Fig 12 (throughput + energy efficiency vs CPU/GPU/ANNA).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let mut datasets = figures::small_datasets();
+    if proxima::util::bench::full_scale() {
+        datasets.extend(figures::large_datasets());
+    }
+    let t = figures::fig12::run(&datasets, scale);
+    t.print();
+    t.write_csv("fig12_hw_comparison").ok();
+}

@@ -1,0 +1,9 @@
+//! Regenerates Fig 13 (graph algorithms on the Proxima NSP accelerator).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let t = figures::fig13::run(&figures::small_datasets(), scale);
+    t.print();
+    t.write_csv("fig13_algos_on_accel").ok();
+}

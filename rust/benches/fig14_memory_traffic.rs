@@ -1,0 +1,9 @@
+//! Regenerates Fig 14 (memory traffic: HNSW vs DiskANN-PQ vs Proxima).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let t = figures::fig14::run(&figures::small_datasets(), scale);
+    t.print();
+    t.write_csv("fig14_memory_traffic").ok();
+}

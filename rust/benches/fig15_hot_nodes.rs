@@ -1,0 +1,9 @@
+//! Regenerates Fig 15 (runtime breakdown vs hot-node percentage).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let t = figures::fig15::run(&[figures::small_datasets()[0]], scale);
+    t.print();
+    t.write_csv("fig15_hot_nodes").ok();
+}

@@ -1,0 +1,14 @@
+//! Regenerates Fig 16 (queue-size sensitivity sweep).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let name = if proxima::util::bench::full_scale() {
+        "bigann-100m-s"
+    } else {
+        "bigann-10m-s"
+    };
+    let t = figures::fig16::run(&[name], scale);
+    t.print();
+    t.write_csv("fig16_queue_size").ok();
+}

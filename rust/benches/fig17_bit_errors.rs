@@ -1,0 +1,9 @@
+//! Regenerates Fig 17 (recall vs 3D NAND raw bit-error rate).
+use proxima::figures;
+
+fn main() {
+    let scale = figures::default_scale();
+    let t = figures::fig17::run(&figures::small_datasets(), scale);
+    t.print();
+    t.write_csv("fig17_bit_errors").ok();
+}

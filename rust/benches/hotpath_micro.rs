@@ -1,0 +1,120 @@
+//! Hot-path microbenchmarks — the §Perf baseline/after numbers in
+//! EXPERIMENTS.md come from here:
+//!
+//! * PQ LUT-accumulate (the per-hop inner loop)
+//! * accurate L2 distance (rerank inner loop)
+//! * ADT build: native vs AOT/XLA artifact
+//! * candidate-list insert, bitonic sort, gap row decode
+//! * DES event throughput
+
+use proxima::dataset::synth::tiny_uniform;
+use proxima::distance::Metric;
+use proxima::pq::PqCodebook;
+use proxima::search::beam::CandidateList;
+use proxima::search::bitonic::bitonic_sort;
+use proxima::util::bench::{bench, black_box};
+use proxima::util::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+
+    // --- PQ distance (M=32, C=256): the traversal hot path. ---
+    let ds = tiny_uniform(2000, 128, Metric::L2, 2);
+    let cb = PqCodebook::train(&ds.base, Metric::L2, 32, 256, 2000, 6, 3);
+    let codes = cb.encode(&ds.base);
+    let adt = cb.build_adt(ds.queries.row(0));
+    let ids: Vec<usize> = (0..1000).map(|_| rng.gen_range(2000)).collect();
+    let r = bench("pq_distance_m32 x1000", || {
+        let mut acc = 0.0f32;
+        for &i in &ids {
+            acc += adt.pq_distance(codes.row(i));
+        }
+        acc
+    });
+    println!(
+        "  -> {:.1} M pq-dists/s",
+        r.per_sec(1000.0) / 1e6
+    );
+
+    // --- Accurate L2 distance (D=128). ---
+    let q = ds.queries.row(0).to_vec();
+    let r = bench("l2_distance_d128 x1000", || {
+        let mut acc = 0.0f32;
+        for &i in &ids {
+            acc += proxima::distance::l2_sq(&q, ds.base.row(i));
+        }
+        acc
+    });
+    println!("  -> {:.1} M dists/s", r.per_sec(1000.0) / 1e6);
+
+    // --- ADT build: native. ---
+    bench("adt_build_native d128 m32 c256", || {
+        cb.build_adt(&q)
+    });
+
+    // --- ADT build: XLA artifact (when present). ---
+    if let Some(rt) = proxima::runtime::Runtime::open_default() {
+        match proxima::runtime::executor::XlaDistance::new(&rt, Metric::L2, 128, 32, 256) {
+            Ok(dist) => {
+                bench("adt_build_xla    d128 m32 c256", || {
+                    dist.build_adt(&cb, &q).unwrap()
+                });
+                // Batch rerank through the artifact.
+                let rerank_ids: Vec<u32> = (0..256u32).collect();
+                bench("rerank_xla batch=256 d128", || {
+                    dist.rerank(&ds.base, &q, &rerank_ids).unwrap()
+                });
+            }
+            Err(e) => println!("(xla executors unavailable: {e})"),
+        }
+    } else {
+        println!("(artifacts/ missing; run `make artifacts` for XLA benches)");
+    }
+
+    // --- Candidate list maintenance. ---
+    let inserts: Vec<(f32, u32)> = (0..1000)
+        .map(|i| (rng.next_f32(), i as u32))
+        .collect();
+    bench("candidate_list_insert L=150 x1000", || {
+        let mut cl = CandidateList::new(150);
+        for &(d, id) in &inserts {
+            cl.insert(d, id);
+        }
+        cl.len()
+    });
+
+    // --- Bitonic sort (hardware-model validation path). ---
+    let mut data: Vec<(f32, u32)> = (0..256).map(|i| (rng.next_f32(), i)).collect();
+    bench("bitonic_sort n=256", || {
+        let mut v = data.clone();
+        bitonic_sort(&mut v);
+        v[0]
+    });
+    data.truncate(200);
+
+    // --- Gap row decode. ---
+    let lists: Vec<Vec<u32>> = (0..1000)
+        .map(|_| (0..32).map(|_| rng.gen_range(100_000) as u32).collect())
+        .collect();
+    let gap = proxima::gap::GapGraph::encode(&lists);
+    let mut buf = Vec::new();
+    bench("gap_decode_row R=32 x1000", || {
+        let mut acc = 0u32;
+        for v in 0..1000 {
+            gap.decode_row(v, &mut buf);
+            acc = acc.wrapping_add(buf.first().copied().unwrap_or(0));
+        }
+        acc
+    });
+
+    // --- DES throughput. ---
+    let w = proxima::figures::Workbench::get("sift-s", 0.012, 10);
+    let (traces, _) = proxima::figures::collect_traces(&w, proxima::figures::Algo::Proxima, 60, 10);
+    let mapping = proxima::figures::default_mapping(&w, 0.0);
+    let cfg = proxima::engine::EngineConfig::paper(w.ds.dim(), w.codebook.m);
+    let n_ops: usize = traces.iter().map(|t| t.len()).sum();
+    let r = bench("des_simulate full-workload", || {
+        black_box(proxima::engine::sim::simulate(&cfg, &mapping, &traces))
+    });
+    println!("  -> {:.2} M trace-ops/s", r.per_sec(n_ops as f64) / 1e6);
+}

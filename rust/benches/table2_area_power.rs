@@ -1,0 +1,8 @@
+//! Regenerates Table II (area and power breakdown).
+use proxima::figures;
+
+fn main() {
+    let t = figures::tables::table2();
+    t.print();
+    t.write_csv("table2_area_power").ok();
+}

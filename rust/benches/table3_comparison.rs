@@ -1,0 +1,9 @@
+//! Regenerates Table III (cross-accelerator comparison).
+use proxima::figures;
+
+fn main() {
+    for t in [figures::tables::table1(1.0), figures::tables::table3()] {
+        t.print();
+    }
+    figures::tables::table3().write_csv("table3_comparison").ok();
+}

@@ -1,0 +1,122 @@
+//! Set-associative LRU cache simulator — reproduces the Fig 3b LLC-miss
+//! profiling. The graph search's node fetches are turned into byte
+//! addresses (raw vectors and adjacency rows laid out contiguously by
+//! vertex id, as malloc'd arrays are) and streamed through a modeled LLC.
+
+/// Set-associative LRU cache.
+pub struct CacheSim {
+    sets: Vec<Vec<u64>>, // per-set tag stack, front = MRU
+    assoc: usize,
+    line_bytes: u64,
+    n_sets: u64,
+    pub accesses: u64,
+    pub misses: u64,
+}
+
+impl CacheSim {
+    /// `size_bytes` total, `assoc`-way, `line_bytes` lines.
+    pub fn new(size_bytes: u64, assoc: usize, line_bytes: u64) -> CacheSim {
+        let n_sets = (size_bytes / line_bytes / assoc as u64).max(1);
+        CacheSim {
+            sets: vec![Vec::with_capacity(assoc); n_sets as usize],
+            assoc,
+            line_bytes,
+            n_sets,
+            accesses: 0,
+            misses: 0,
+        }
+    }
+
+    /// EPYC 7543-class LLC: 32 MB, 16-way, 64 B lines (one CCD's L3 is
+    /// what a single search thread effectively sees).
+    pub fn epyc_llc() -> CacheSim {
+        CacheSim::new(32 << 20, 16, 64)
+    }
+
+    /// Touch `bytes` starting at `addr`; returns misses incurred.
+    pub fn access(&mut self, addr: u64, bytes: u64) -> u64 {
+        let first = addr / self.line_bytes;
+        let last = (addr + bytes.max(1) - 1) / self.line_bytes;
+        let mut misses = 0;
+        for line in first..=last {
+            self.accesses += 1;
+            let set = (line % self.n_sets) as usize;
+            let tag = line / self.n_sets;
+            let stack = &mut self.sets[set];
+            if let Some(pos) = stack.iter().position(|&t| t == tag) {
+                let t = stack.remove(pos);
+                stack.insert(0, t);
+            } else {
+                self.misses += 1;
+                misses += 1;
+                stack.insert(0, tag);
+                if stack.len() > self.assoc {
+                    stack.pop();
+                }
+            }
+        }
+        misses
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_scan_misses_once_per_line() {
+        let mut c = CacheSim::new(1 << 20, 8, 64);
+        for i in 0..1000u64 {
+            c.access(i * 8, 8); // 8-byte strides
+        }
+        // 8000 bytes = 125 lines; each missed once, hit 7 times.
+        assert_eq!(c.misses, 125);
+        assert!((c.miss_rate() - 0.125).abs() < 0.01);
+    }
+
+    #[test]
+    fn working_set_inside_cache_hits() {
+        let mut c = CacheSim::new(1 << 16, 8, 64); // 64 KB
+        for _round in 0..10 {
+            for i in 0..512u64 {
+                c.access(i * 64, 64); // 32 KB working set
+            }
+        }
+        // First round misses, rest hit.
+        assert_eq!(c.misses, 512);
+    }
+
+    #[test]
+    fn working_set_exceeding_cache_thrashes() {
+        let mut c = CacheSim::new(1 << 16, 8, 64); // 64 KB
+        for _round in 0..5 {
+            for i in 0..4096u64 {
+                c.access(i * 64, 64); // 256 KB >> 64 KB
+            }
+        }
+        assert!(c.miss_rate() > 0.9, "miss rate {}", c.miss_rate());
+    }
+
+    #[test]
+    fn random_large_footprint_high_miss_rate() {
+        // The Fig 3b phenomenon: random vertex access over a footprint
+        // far beyond LLC -> 80-95% misses.
+        let mut c = CacheSim::epyc_llc();
+        let mut rng = crate::util::rng::Xoshiro256pp::seed_from_u64(1);
+        let n_nodes = 2_000_000u64;
+        let vec_bytes = 512; // 128-dim f32
+        for _ in 0..200_000 {
+            let v = rng.gen_range(n_nodes as usize) as u64;
+            c.access(v * vec_bytes, vec_bytes);
+        }
+        assert!(c.miss_rate() > 0.8, "miss rate {}", c.miss_rate());
+    }
+}

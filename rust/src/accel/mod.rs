@@ -1,0 +1,6 @@
+//! Baseline platform models (Fig 12, Table III) and the profiling
+//! substrates behind Fig 3 (LRU cache simulator, roofline).
+
+pub mod cachesim;
+pub mod models;
+pub mod roofline;

@@ -1,0 +1,296 @@
+//! Analytic throughput/energy models of the baseline platforms in Fig 12
+//! and Table III. Each model encodes the *mechanism* the paper attributes
+//! the platform's cost to (DESIGN.md §1):
+//!
+//! * **CPU (HNSW)** — pointer-chasing graph traversal: LLC-missing line
+//!   fills on a dependent chain (low MLP), overlapped compute.
+//! * **GPU (GGNN)** — massively batched, bandwidth-bound streaming of the
+//!   same traffic at GDDR6 rates.
+//! * **ANNA** — IVF-PQ ASIC: streams PQ code clusters from its 64 GB/s
+//!   DRAM interface; on-chip compute is not the bottleneck, and frequent
+//!   off-chip transfers dominate energy (§V-C).
+//! * **VStore** — near-storage graph search behind a 9.9 GB/s aggregated
+//!   SSD-internal interface.
+//!
+//! QPS numbers are mechanistic estimates — Fig 12's acceptance criterion
+//! is the *ordering and ratio band*, not absolute values.
+
+use crate::search::SearchStats;
+
+/// Performance of a platform on one workload.
+#[derive(Clone, Copy, Debug)]
+pub struct PlatformPerf {
+    pub qps: f64,
+    pub watts: f64,
+}
+
+impl PlatformPerf {
+    pub fn qps_per_watt(&self) -> f64 {
+        self.qps / self.watts
+    }
+}
+
+/// CPU model (EPYC 7543-class).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    pub cores: usize,
+    /// DRAM line-fill latency (ns).
+    pub mem_latency_ns: f64,
+    /// Memory-level parallelism achievable on a dependent traversal chain.
+    pub mlp: f64,
+    /// LLC miss fraction for graph ANNS (Fig 3b: 0.8–0.9).
+    pub llc_miss: f64,
+    /// Scalar+SIMD distance throughput per core (GFLOP/s, achieved).
+    pub core_gflops: f64,
+    pub tdp_w: f64,
+}
+
+impl Default for CpuModel {
+    fn default() -> Self {
+        CpuModel {
+            cores: 16, // paper profiles on a 16-core config
+            mem_latency_ns: 85.0,
+            mlp: 2.0,
+            llc_miss: 0.85,
+            core_gflops: 35.0,
+            tdp_w: 225.0,
+        }
+    }
+}
+
+impl CpuModel {
+    /// Per-query stats of the algorithm the platform runs (HNSW for the
+    /// Fig 12 CPU bar), D = dimension.
+    pub fn perf(&self, per_query: &SearchStats, dim: usize) -> PlatformPerf {
+        let lines = per_query.total_bytes() as f64 / 64.0;
+        let mem_ns = lines * self.llc_miss * self.mem_latency_ns / self.mlp;
+        let flops = per_query.exact_dists as f64 * 3.0 * dim as f64
+            + per_query.pq_dists as f64 * 32.0;
+        let compute_ns = flops / self.core_gflops; // GFLOP/s == FLOP/ns
+        let per_query_ns = mem_ns.max(compute_ns);
+        PlatformPerf {
+            qps: self.cores as f64 / (per_query_ns * 1e-9),
+            watts: self.tdp_w,
+        }
+    }
+}
+
+/// GPU model (GGNN on an A40).
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// Achievable fraction of peak GDDR6 bandwidth on batched ANNS.
+    pub eff_gbps: f64,
+    /// Per-hop serialization cost: GGNN's best-first traversal advances
+    /// one frontier step per kernel-level round; within a round thousands
+    /// of queries batch, but a query's own hops cannot overlap (global
+    /// sync + dependent gather ≈ 100 ns amortized per hop per query).
+    pub hop_sync_ns: f64,
+    pub board_w: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        GpuModel {
+            eff_gbps: 696.0 * 0.6,
+            hop_sync_ns: 50.0,
+            board_w: 300.0,
+        }
+    }
+}
+
+impl GpuModel {
+    pub fn perf(&self, per_query: &SearchStats) -> PlatformPerf {
+        // Bandwidth-bound streaming plus the traversal's serial rounds.
+        let bw_ns = per_query.total_bytes() as f64 / self.eff_gbps;
+        let sync_ns = per_query.hops as f64 * self.hop_sync_ns;
+        let ns = bw_ns.max(sync_ns);
+        PlatformPerf {
+            qps: 1.0 / (ns * 1e-9),
+            watts: self.board_w,
+        }
+    }
+}
+
+/// ANNA model (IVF-PQ ASIC, HPCA'22).
+#[derive(Clone, Copy, Debug)]
+pub struct AnnaModel {
+    /// Off-chip DRAM bandwidth (Table III: 64 GB/s).
+    pub dram_gbps: f64,
+    /// Fixed per-query cost: coarse quantizer + cluster DRAM row
+    /// activations + front-end handling.
+    pub fixed_ns: f64,
+    pub chip_w: f64,
+}
+
+impl Default for AnnaModel {
+    fn default() -> Self {
+        AnnaModel {
+            dram_gbps: 64.0,
+            fixed_ns: 1500.0,
+            chip_w: 13.0,
+        }
+    }
+}
+
+impl AnnaModel {
+    /// `per_query` must be IVF-PQ stats (PQ scan traffic dominates).
+    pub fn perf(&self, per_query: &SearchStats) -> PlatformPerf {
+        let ns = per_query.total_bytes() as f64 / self.dram_gbps + self.fixed_ns;
+        PlatformPerf {
+            qps: 1.0 / (ns * 1e-9),
+            watts: self.chip_w,
+        }
+    }
+}
+
+/// VStore model (in-storage graph accelerator, DAC'22).
+#[derive(Clone, Copy, Debug)]
+pub struct VstoreModel {
+    /// Aggregated SSD-internal bandwidth (Table III: 9.9 GB/s).
+    pub ssd_gbps: f64,
+    pub device_w: f64,
+}
+
+impl Default for VstoreModel {
+    fn default() -> Self {
+        VstoreModel {
+            ssd_gbps: 9.9,
+            device_w: 18.0,
+        }
+    }
+}
+
+impl VstoreModel {
+    /// VStore runs a DiskANN-PQ-like search near storage.
+    pub fn perf(&self, per_query: &SearchStats) -> PlatformPerf {
+        let ns = per_query.total_bytes() as f64 / self.ssd_gbps;
+        PlatformPerf {
+            qps: 1.0 / (ns * 1e-9),
+            watts: self.device_w,
+        }
+    }
+}
+
+/// Static spec-sheet rows of Table III.
+pub struct SpecRow {
+    pub design: &'static str,
+    pub platform: &'static str,
+    pub includes_storage: bool,
+    pub memory: &'static str,
+    pub capacity_gb: f64,
+    pub peak_bw_gbps: f64,
+    pub density_gb_per_mm2: f64,
+}
+
+/// Table III contents (Proxima density is recomputed by the area model in
+/// the bench; this is the citation baseline).
+pub fn table3_rows() -> Vec<SpecRow> {
+    vec![
+        SpecRow {
+            design: "DiskANN-PQ",
+            platform: "CPU",
+            includes_storage: false,
+            memory: "DRAM-DDR4-3200",
+            capacity_gb: 128.0,
+            peak_bw_gbps: 102.0,
+            density_gb_per_mm2: 0.2,
+        },
+        SpecRow {
+            design: "GGNN",
+            platform: "GPU",
+            includes_storage: false,
+            memory: "HBM2",
+            capacity_gb: 32.0,
+            peak_bw_gbps: 900.0,
+            density_gb_per_mm2: 0.7,
+        },
+        SpecRow {
+            design: "ANNA",
+            platform: "ASIC",
+            includes_storage: false,
+            memory: "DRAM",
+            capacity_gb: 0.0,
+            peak_bw_gbps: 64.0,
+            density_gb_per_mm2: 0.2,
+        },
+        SpecRow {
+            design: "VStore",
+            platform: "FPGA+SSD",
+            includes_storage: true,
+            memory: "DRAM+SSD",
+            capacity_gb: 32.0,
+            peak_bw_gbps: 9.9,
+            density_gb_per_mm2: 4.2,
+        },
+        SpecRow {
+            design: "Proxima",
+            platform: "3D NAND SLC",
+            includes_storage: true,
+            memory: "3D NAND",
+            capacity_gb: 54.0,
+            peak_bw_gbps: 254.0,
+            density_gb_per_mm2: 1.7,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hnsw_like() -> SearchStats {
+        SearchStats {
+            exact_dists: 2500,
+            bytes_raw: 2500 * 512,
+            bytes_index: 120 * 256,
+            ..Default::default()
+        }
+    }
+
+    fn diskann_pq_like() -> SearchStats {
+        SearchStats {
+            pq_dists: 2500,
+            exact_dists: 60,
+            bytes_pq: 2500 * 32,
+            bytes_index: 120 * 256,
+            bytes_raw: 60 * 512,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cpu_qps_plausible_band() {
+        let p = CpuModel::default().perf(&hnsw_like(), 128);
+        // Real HNSW on a 16-core box at recall .9+: O(10^4) QPS.
+        assert!(p.qps > 3_000.0 && p.qps < 100_000.0, "cpu qps {}", p.qps);
+    }
+
+    #[test]
+    fn gpu_faster_than_cpu() {
+        let cpu = CpuModel::default().perf(&hnsw_like(), 128);
+        let gpu = GpuModel::default().perf(&hnsw_like());
+        assert!(gpu.qps > cpu.qps, "gpu {} vs cpu {}", gpu.qps, cpu.qps);
+    }
+
+    #[test]
+    fn vstore_bandwidth_starved() {
+        let v = VstoreModel::default().perf(&diskann_pq_like());
+        let g = GpuModel::default().perf(&diskann_pq_like());
+        assert!(v.qps < g.qps / 10.0);
+    }
+
+    #[test]
+    fn energy_efficiency_ordering() {
+        // ASIC/NSP designs beat CPU on QPS/W by orders of magnitude.
+        let cpu = CpuModel::default().perf(&hnsw_like(), 128);
+        let anna = AnnaModel::default().perf(&diskann_pq_like());
+        assert!(anna.qps_per_watt() > 10.0 * cpu.qps_per_watt());
+    }
+
+    #[test]
+    fn table3_has_five_designs() {
+        let rows = table3_rows();
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().any(|r| r.design == "Proxima" && r.includes_storage));
+    }
+}

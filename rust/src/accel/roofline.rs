@@ -1,0 +1,106 @@
+//! Roofline model of the software baselines' platform (Fig 3a).
+//!
+//! Attainable GFLOP/s = min(peak_flops, intensity × peak_bw). The graph
+//! ANNS algorithms' computational intensity comes straight from their
+//! measured [`SearchStats`]: FLOPs = distance computations × (2–3)·D;
+//! bytes = the traffic counters. The paper's point: all three tools land
+//! deep in the memory-bound region.
+
+use crate::search::SearchStats;
+
+/// Platform roofline parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Roofline {
+    /// Peak GFLOP/s.
+    pub peak_gflops: f64,
+    /// Peak DRAM bandwidth GB/s.
+    pub peak_gbps: f64,
+}
+
+impl Roofline {
+    /// AMD EPYC 7543 (paper's profiling box): 32 cores × 2.8 GHz × 32
+    /// FLOP/cycle (AVX2 FMA) ≈ 2.8 TFLOP/s, 8-ch DDR4-3200 ≈ 204.8 GB/s.
+    pub fn epyc_7543() -> Roofline {
+        Roofline {
+            peak_gflops: 2867.0,
+            peak_gbps: 204.8,
+        }
+    }
+
+    /// NVIDIA A40: 37.4 TF fp32, 696 GB/s GDDR6.
+    pub fn a40() -> Roofline {
+        Roofline {
+            peak_gflops: 37_400.0,
+            peak_gbps: 696.0,
+        }
+    }
+
+    /// Ridge point (FLOP/byte) separating memory- and compute-bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_gflops / self.peak_gbps
+    }
+
+    /// Attainable GFLOP/s at a given intensity.
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        (intensity * self.peak_gbps).min(self.peak_gflops)
+    }
+
+    pub fn is_memory_bound(&self, intensity: f64) -> bool {
+        intensity < self.ridge()
+    }
+}
+
+/// FLOPs for one distance computation of dimension `d` (sub, mul, add per
+/// element ≈ 3·D for L2; 2·D for dot).
+pub fn dist_flops(d: usize, l2: bool) -> f64 {
+    if l2 {
+        3.0 * d as f64
+    } else {
+        2.0 * d as f64
+    }
+}
+
+/// Computational intensity (FLOP/byte) of a search run from its counters.
+pub fn intensity(stats: &SearchStats, dim: usize, m: usize, l2: bool) -> f64 {
+    let flops = stats.exact_dists as f64 * dist_flops(dim, l2)
+        // PQ distance: M lookups + M adds ≈ M flops.
+        + stats.pq_dists as f64 * m as f64;
+    let bytes = stats.total_bytes() as f64;
+    if bytes == 0.0 {
+        0.0
+    } else {
+        flops / bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ridge_point_epyc() {
+        let r = Roofline::epyc_7543();
+        assert!((r.ridge() - 14.0).abs() < 1.0, "ridge {}", r.ridge());
+    }
+
+    #[test]
+    fn attainable_clamps_at_peak() {
+        let r = Roofline::epyc_7543();
+        assert_eq!(r.attainable(1000.0), r.peak_gflops);
+        assert!((r.attainable(1.0) - r.peak_gbps).abs() < 1e-9);
+    }
+
+    #[test]
+    fn graph_anns_is_memory_bound() {
+        // HNSW-like: one accurate distance per 512-byte raw fetch.
+        let stats = SearchStats {
+            exact_dists: 1000,
+            bytes_raw: 1000 * 512,
+            bytes_index: 1000 * 256,
+            ..Default::default()
+        };
+        let i = intensity(&stats, 128, 32, true);
+        assert!(i < 1.0, "intensity {i}");
+        assert!(Roofline::epyc_7543().is_memory_bound(i));
+    }
+}

@@ -1,0 +1,293 @@
+//! Configuration system: layered defaults → config file → CLI overrides.
+//!
+//! The config file format is a flat `key = value` / `# comment` text file
+//! (a TOML subset; the offline image has no `toml` crate). Keys use dotted
+//! sections, e.g. `search.beta = 1.06`, `nand.n_bl = 36864`. Every
+//! experiment binary resolves its parameters through [`Config`] so runs are
+//! reproducible from a single file + command line.
+
+use crate::util::cli::Args;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Flat key/value config store with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key = value` lines; `#` and `;` start comments; section
+    /// headers `[sec]` prefix following keys with `sec.`.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split(&['#', ';'][..]).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = sec.trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(format!("line {}: expected 'key = value'", lineno + 1));
+            };
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim().trim_matches('"');
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, val.to_string());
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Overlay CLI options: `--set key=value` entries and direct `--key
+    /// value` options (dots allowed in key names).
+    pub fn overlay_args(&mut self, args: &Args) {
+        for (k, v) in &args.options {
+            if k == "set" {
+                if let Some(eq) = v.find('=') {
+                    self.values
+                        .insert(v[..eq].to_string(), v[eq + 1..].to_string());
+                }
+            } else {
+                self.values.insert(k.clone(), v.clone());
+            }
+        }
+    }
+
+    pub fn set(&mut self, key: &str, val: impl ToString) {
+        self.values.insert(key.to_string(), val.to_string());
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.typed(key, default)
+    }
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.typed(key, default)
+    }
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.typed(key, default)
+    }
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.typed(key, default)
+    }
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get_str(key) {
+            Some("true" | "1" | "yes" | "on") => true,
+            Some("false" | "0" | "no" | "off") => false,
+            Some(other) => panic!("config {key}: expected bool, got '{other}'"),
+            None => default,
+        }
+    }
+
+    fn typed<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get_str(key) {
+            None => default,
+            Some(s) => s
+                .parse::<T>()
+                .unwrap_or_else(|_| panic!("config {key}: cannot parse '{s}'")),
+        }
+    }
+
+    /// Dump as a config-file string (stable order).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.values {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+}
+
+/// Search algorithm parameters (paper §III + §V-A defaults).
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    /// Candidate list capacity L.
+    pub l: usize,
+    /// Result count k.
+    pub k: usize,
+    /// PQ error ratio β (§III-C; paper default 1.06 for SIFT).
+    pub beta: f32,
+    /// Early-termination repetition rate r (§III-D; paper sweeps 1..15).
+    pub repetition: usize,
+    /// Dynamic-list step T_step (§III-D; paper default 4).
+    pub t_step: usize,
+    /// Initial working list size T_0.
+    pub t_init: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams {
+            l: 150,
+            k: 10,
+            beta: 1.06,
+            repetition: 3,
+            t_step: 4,
+            t_init: 16,
+        }
+    }
+}
+
+impl SearchParams {
+    pub fn from_config(cfg: &Config) -> SearchParams {
+        let d = SearchParams::default();
+        SearchParams {
+            l: cfg.get_usize("search.l", d.l),
+            k: cfg.get_usize("search.k", d.k),
+            beta: cfg.get_f32("search.beta", d.beta),
+            repetition: cfg.get_usize("search.repetition", d.repetition),
+            t_step: cfg.get_usize("search.t_step", d.t_step),
+            t_init: cfg.get_usize("search.t_init", d.t_init),
+        }
+    }
+}
+
+/// PQ parameters (paper §V-A: M=32, C=256; we derive M from D when the
+/// dimension is not divisible by 32 — see DESIGN.md).
+#[derive(Clone, Debug)]
+pub struct PqParams {
+    pub m: usize,
+    pub c: usize,
+    pub train_sample: usize,
+    pub kmeans_iters: usize,
+}
+
+impl PqParams {
+    /// Paper-style default for a given dimension: dsub = 4 → M = D/4,
+    /// matching the 32-subvector split at D=128.
+    pub fn for_dim(dim: usize) -> PqParams {
+        let dsub = [4usize, 2, 5, 3, 1]
+            .into_iter()
+            .find(|d| dim % d == 0)
+            .unwrap_or(1);
+        PqParams {
+            m: dim / dsub,
+            c: 256,
+            train_sample: 20_000,
+            kmeans_iters: 12,
+        }
+    }
+
+    pub fn from_config(cfg: &Config, dim: usize) -> PqParams {
+        let d = PqParams::for_dim(dim);
+        PqParams {
+            m: cfg.get_usize("pq.m", d.m),
+            c: cfg.get_usize("pq.c", d.c),
+            train_sample: cfg.get_usize("pq.train_sample", d.train_sample),
+            kmeans_iters: cfg.get_usize("pq.kmeans_iters", d.kmeans_iters),
+        }
+    }
+}
+
+/// Graph-building parameters (paper §V-A: R=64, L=150 DiskANN / 500 HNSW).
+#[derive(Clone, Debug)]
+pub struct GraphParams {
+    pub r: usize,
+    pub build_l: usize,
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for GraphParams {
+    fn default() -> Self {
+        GraphParams {
+            r: 32,
+            build_l: 64,
+            alpha: 1.2,
+            seed: 42,
+        }
+    }
+}
+
+impl GraphParams {
+    pub fn from_config(cfg: &Config) -> GraphParams {
+        let d = GraphParams::default();
+        GraphParams {
+            r: cfg.get_usize("graph.r", d.r),
+            build_l: cfg.get_usize("graph.build_l", d.build_l),
+            alpha: cfg.get_f32("graph.alpha", d.alpha),
+            seed: cfg.get_u64("graph.seed", d.seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::parse(
+            "# comment\nscale = 0.5\n[search]\nl = 200\nbeta = 1.08 ; inline\n[nand]\nn_bl = 36864\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_f64("scale", 1.0), 0.5);
+        assert_eq!(cfg.get_usize("search.l", 0), 200);
+        assert_eq!(cfg.get_f32("search.beta", 0.0), 1.08);
+        assert_eq!(cfg.get_usize("nand.n_bl", 0), 36864);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn cli_overlay_wins() {
+        let mut cfg = Config::parse("search.l = 100\n").unwrap();
+        let args = crate::util::cli::Args::parse(
+            vec!["--set".to_string(), "search.l=250".to_string()],
+            false,
+        );
+        cfg.overlay_args(&args);
+        assert_eq!(cfg.get_usize("search.l", 0), 250);
+    }
+
+    #[test]
+    fn search_params_defaults_match_paper() {
+        let p = SearchParams::default();
+        assert_eq!(p.beta, 1.06);
+        assert_eq!(p.t_step, 4);
+    }
+
+    #[test]
+    fn pq_params_dsub() {
+        assert_eq!(PqParams::for_dim(128).m, 32);
+        assert_eq!(PqParams::for_dim(96).m, 24);
+        assert_eq!(PqParams::for_dim(100).m, 25);
+    }
+
+    #[test]
+    fn dump_roundtrip() {
+        let mut cfg = Config::new();
+        cfg.set("a.b", 3);
+        cfg.set("c", "x");
+        let re = Config::parse(&cfg.dump()).unwrap();
+        assert_eq!(re.get_usize("a.b", 0), 3);
+        assert_eq!(re.get_str("c"), Some("x"));
+    }
+}

@@ -1,0 +1,223 @@
+//! Dynamic batcher: collects queries and flushes either when the batch is
+//! full or when the oldest request exceeds its deadline — the standard
+//! serving trade-off (throughput vs tail latency) the paper's scheduler
+//! makes in hardware with its N_q queues.
+
+use super::SearchService;
+use crate::search::SearchOutput;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One queued request.
+pub struct Request {
+    pub query: Vec<f32>,
+    pub k: usize,
+    pub respond: mpsc::Sender<SearchOutput>,
+    pub enqueued: Instant,
+}
+
+/// Handle for submitting queries to the batching loop.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl BatcherHandle {
+    /// Submit and wait for the result.
+    pub fn query(&self, query: Vec<f32>, k: usize) -> Option<SearchOutput> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                query,
+                k,
+                respond: tx,
+                enqueued: Instant::now(),
+            })
+            .ok()?;
+        rx.recv().ok()
+    }
+}
+
+/// Spawn the batching loop + `workers` search threads. Returns the submit
+/// handle; dropping every handle shuts the loop down.
+pub fn spawn(
+    service: Arc<SearchService>,
+    policy: BatchPolicy,
+    workers: usize,
+) -> (BatcherHandle, std::thread::JoinHandle<BatchStats>) {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let handle = BatcherHandle { tx };
+    let join = std::thread::spawn(move || run_loop(service, policy, workers, rx));
+    (handle, join)
+}
+
+/// Counters the loop returns on shutdown.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    pub batches: u64,
+    pub queries: u64,
+    pub size_triggered: u64,
+    pub deadline_triggered: u64,
+}
+
+fn run_loop(
+    service: Arc<SearchService>,
+    policy: BatchPolicy,
+    workers: usize,
+    rx: mpsc::Receiver<Request>,
+) -> BatchStats {
+    let mut stats = BatchStats::default();
+    let mut pending: Vec<Request> = Vec::new();
+    loop {
+        // Block for the first request of a batch.
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break, // all senders gone
+            }
+        }
+        // Accumulate until full or deadline.
+        let deadline = pending[0].enqueued + policy.max_wait;
+        while pending.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if pending.len() >= policy.max_batch {
+            stats.size_triggered += 1;
+        } else {
+            stats.deadline_triggered += 1;
+        }
+        stats.batches += 1;
+        stats.queries += pending.len() as u64;
+
+        // Dispatch: ADTs first (the batchable stage), then searches across
+        // a small worker pool.
+        let batch: Vec<Request> = std::mem::take(&mut pending);
+        let svc = service.clone();
+        std::thread::scope(|scope| {
+            let chunk = batch.len().div_ceil(workers.max(1));
+            for part in batch.chunks(chunk) {
+                let svc = svc.clone();
+                scope.spawn(move || {
+                    for req in part {
+                        let out = svc.search(&req.query, req.k);
+                        let _ = req.respond.send(out);
+                    }
+                });
+            }
+        });
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, PqParams, SearchParams};
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+
+    fn service() -> (crate::dataset::Dataset, Arc<SearchService>) {
+        let ds = tiny_uniform(300, 12, Metric::L2, 91);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 12,
+                build_l: 24,
+                alpha: 1.2,
+                seed: 91,
+            },
+            &PqParams {
+                m: 6,
+                c: 16,
+                train_sample: 300,
+                kmeans_iters: 5,
+            },
+            SearchParams {
+                l: 50,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        );
+        (ds, Arc::new(svc))
+    }
+
+    #[test]
+    fn batcher_answers_all_queries() {
+        let (ds, svc) = service();
+        let (handle, join) = spawn(svc, BatchPolicy::default(), 2);
+        let mut outs = Vec::new();
+        for q in 0..ds.n_queries() {
+            outs.push(handle.query(ds.queries.row(q).to_vec(), 5).unwrap());
+        }
+        assert!(outs.iter().all(|o| o.ids.len() == 5));
+        drop(handle);
+        let stats = join.join().unwrap();
+        assert_eq!(stats.queries, ds.n_queries() as u64);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn deadline_triggers_on_single_query() {
+        let (ds, svc) = service();
+        let (handle, join) = spawn(
+            svc,
+            BatchPolicy {
+                max_batch: 1000,
+                max_wait: Duration::from_millis(1),
+            },
+            1,
+        );
+        let out = handle.query(ds.queries.row(0).to_vec(), 5).unwrap();
+        assert_eq!(out.ids.len(), 5);
+        drop(handle);
+        let stats = join.join().unwrap();
+        assert!(stats.deadline_triggered >= 1);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (ds, svc) = service();
+        let (handle, join) = spawn(svc, BatchPolicy::default(), 2);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let h = handle.clone();
+                let q = ds.queries.row(t % ds.n_queries()).to_vec();
+                scope.spawn(move || {
+                    for _ in 0..5 {
+                        let out = h.query(q.clone(), 3).unwrap();
+                        assert_eq!(out.ids.len(), 3);
+                    }
+                });
+            }
+        });
+        drop(handle);
+        let stats = join.join().unwrap();
+        assert_eq!(stats.queries, 20);
+    }
+}

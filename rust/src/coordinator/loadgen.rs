@@ -1,0 +1,144 @@
+//! Open-loop load generator: Poisson arrivals at a target QPS against a
+//! [`SearchService`], measuring the latency distribution under load — the
+//! serving-side complement to the closed-loop clients in the examples.
+
+use super::SearchService;
+use crate::util::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Result of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub offered_qps: f64,
+    pub achieved_qps: f64,
+    pub completed: usize,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Requests whose start fell behind schedule by > 10 ms (overload).
+    pub late_starts: usize,
+}
+
+/// Drive `service` at `target_qps` for `duration` with `workers` threads.
+/// Queries cycle through `queries` (row-major, dim = service dim).
+pub fn run(
+    service: Arc<SearchService>,
+    queries: &crate::dataset::VectorSet,
+    k: usize,
+    target_qps: f64,
+    duration: Duration,
+    workers: usize,
+    seed: u64,
+) -> LoadReport {
+    // Pre-draw the Poisson schedule.
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut schedule: Vec<f64> = Vec::new(); // seconds from start
+    let mut t = 0.0f64;
+    while t < duration.as_secs_f64() {
+        let gap = -rng.next_f64().max(1e-12).ln() / target_qps;
+        t += gap;
+        schedule.push(t);
+    }
+    let n = schedule.len();
+    let next = AtomicUsize::new(0);
+    let late = AtomicUsize::new(0);
+    let start = Instant::now();
+
+    let lat_chunks: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let svc = service.clone();
+            let next = &next;
+            let late = &late;
+            let schedule = &schedule;
+            handles.push(scope.spawn(move || {
+                let mut lats = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let due = Duration::from_secs_f64(schedule[i]);
+                    let now = start.elapsed();
+                    if now < due {
+                        std::thread::sleep(due - now);
+                    } else if now - due > Duration::from_millis(10) {
+                        late.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let qi = i % queries.len();
+                    let t0 = Instant::now();
+                    let _ = svc.search(queries.row(qi), k);
+                    lats.push(t0.elapsed().as_secs_f64() * 1e6);
+                }
+                lats
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let lats: Vec<f64> = lat_chunks.into_iter().flatten().collect();
+    LoadReport {
+        offered_qps: target_qps,
+        achieved_qps: lats.len() as f64 / wall,
+        completed: lats.len(),
+        p50_us: crate::util::percentile(&lats, 50.0),
+        p95_us: crate::util::percentile(&lats, 95.0),
+        p99_us: crate::util::percentile(&lats, 99.0),
+        late_starts: late.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, PqParams, SearchParams};
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+
+    #[test]
+    fn loadgen_completes_schedule_and_measures() {
+        let ds = tiny_uniform(300, 8, Metric::L2, 41);
+        let svc = Arc::new(SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 41,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 300,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 30,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        ));
+        let report = run(
+            svc,
+            &ds.queries,
+            5,
+            200.0,
+            Duration::from_millis(300),
+            2,
+            1,
+        );
+        assert!(report.completed > 20, "completed {}", report.completed);
+        assert!(report.p50_us > 0.0);
+        assert!(report.p99_us >= report.p50_us);
+        // Light load on a tiny index: should keep up with the schedule.
+        assert!(
+            report.achieved_qps > report.offered_qps * 0.5,
+            "achieved {} of {}",
+            report.achieved_qps,
+            report.offered_qps
+        );
+    }
+}

@@ -1,0 +1,236 @@
+//! L3 coordinator: the serving layer around the Proxima search algorithm.
+//!
+//! * [`SearchService`] — owns one loaded index (base vectors, graph, PQ,
+//!   gap encoding) and answers queries; the per-query ADT is built through
+//!   the AOT/XLA artifact when a [`Runtime`](crate::runtime::Runtime) is
+//!   attached (Python never runs here), with a native fallback.
+//! * [`batcher`] — dynamic batching (size- or deadline-triggered).
+//! * [`server`] — a TCP line-protocol front end + client, on std threads
+//!   (the offline image has no tokio; see DESIGN.md §1).
+
+pub mod batcher;
+pub mod loadgen;
+pub mod shard;
+pub mod server;
+
+use crate::config::{GraphParams, PqParams, SearchParams};
+use crate::dataset::{Dataset, VectorSet};
+use crate::distance::Metric;
+use crate::gap::GapGraph;
+use crate::graph::{vamana, Graph};
+use crate::pq::{Adt, PqCodebook, PqCodes};
+use crate::runtime::service::RuntimeHandle;
+use crate::search::beam::SearchContext;
+use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::search::{SearchOutput, SearchStats};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated service counters (exported by the `stats` RPC).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    pub queries: AtomicU64,
+    pub early_terminated: AtomicU64,
+    pub pq_dists: AtomicU64,
+    pub exact_dists: AtomicU64,
+    pub total_latency_us: AtomicU64,
+}
+
+/// One loaded, queryable index.
+pub struct SearchService {
+    pub name: String,
+    pub metric: Metric,
+    pub base: VectorSet,
+    pub graph: Graph,
+    pub codebook: PqCodebook,
+    pub codes: PqCodes,
+    pub gap: Option<GapGraph>,
+    pub params: SearchParams,
+    pub features: ProximaFeatures,
+    /// AOT runtime service thread; when present the per-query ADT (and
+    /// batch APIs) run through the compiled XLA artifacts. The PJRT
+    /// handles are pinned to that thread (they are not `Send`).
+    pub runtime: Option<RuntimeHandle>,
+    pub stats: ServiceStats,
+}
+
+impl SearchService {
+    /// Build the full index stack from a dataset (train PQ, build Vamana,
+    /// gap-encode). This is the "index build" phase, not the request path.
+    pub fn build(
+        ds: &Dataset,
+        gp: &GraphParams,
+        pq: &PqParams,
+        params: SearchParams,
+        use_xla: bool,
+    ) -> SearchService {
+        let graph = vamana::build(&ds.base, ds.metric, gp);
+        let codebook = PqCodebook::train(
+            &ds.base,
+            ds.metric,
+            pq.m,
+            pq.c,
+            pq.train_sample,
+            pq.kmeans_iters,
+            gp.seed ^ 0xC0DE,
+        );
+        let codes = codebook.encode(&ds.base);
+        let gap = Some(GapGraph::encode(&graph.to_lists()));
+        let runtime = if use_xla {
+            RuntimeHandle::spawn_default(&codebook)
+        } else {
+            None
+        };
+        SearchService {
+            name: ds.name.clone(),
+            metric: ds.metric,
+            base: ds.base.clone(),
+            graph,
+            codebook,
+            codes,
+            gap,
+            params,
+            features: ProximaFeatures::default(),
+            runtime,
+            stats: ServiceStats::default(),
+        }
+    }
+
+    fn context(&self) -> SearchContext<'_> {
+        SearchContext {
+            base: &self.base,
+            metric: self.metric,
+            graph: &self.graph,
+            codes: Some(&self.codes),
+            gap: self.gap.as_ref(),
+        }
+    }
+
+    /// Build the query's ADT — through XLA when attached, else natively.
+    pub fn build_adt(&self, q: &[f32]) -> Adt {
+        if let Some(rt) = &self.runtime {
+            match rt.build_adt(q) {
+                Ok(adt) => return adt,
+                Err(e) => {
+                    // Fall back but surface the problem.
+                    eprintln!("[service] XLA ADT failed ({e:#}); using native path");
+                }
+            }
+        }
+        self.codebook.build_adt(q)
+    }
+
+    /// Answer one query (Algorithm 1).
+    pub fn search(&self, q: &[f32], k: usize) -> SearchOutput {
+        let t0 = std::time::Instant::now();
+        let mut params = self.params.clone();
+        params.k = k.min(params.l);
+        let adt = self.build_adt(q);
+        let out = proxima_search(&self.context(), &adt, q, &params, self.features, false);
+        self.record(&out.stats, t0.elapsed());
+        out
+    }
+
+    /// Answer one query with an externally provided ADT (the batcher's
+    /// path: ADTs built in a batch up front).
+    pub fn search_with_adt(&self, q: &[f32], adt: &Adt, k: usize) -> SearchOutput {
+        let t0 = std::time::Instant::now();
+        let mut params = self.params.clone();
+        params.k = k.min(params.l);
+        let out = proxima_search(&self.context(), adt, q, &params, self.features, false);
+        self.record(&out.stats, t0.elapsed());
+        out
+    }
+
+    fn record(&self, s: &SearchStats, elapsed: std::time::Duration) {
+        self.stats.queries.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .pq_dists
+            .fetch_add(s.pq_dists as u64, Ordering::Relaxed);
+        self.stats
+            .exact_dists
+            .fetch_add(s.exact_dists as u64, Ordering::Relaxed);
+        if s.early_terminated {
+            self.stats.early_terminated.fetch_add(1, Ordering::Relaxed);
+        }
+        self.stats
+            .total_latency_us
+            .fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Mean service latency in microseconds.
+    pub fn mean_latency_us(&self) -> f64 {
+        let q = self.stats.queries.load(Ordering::Relaxed);
+        if q == 0 {
+            0.0
+        } else {
+            self.stats.total_latency_us.load(Ordering::Relaxed) as f64 / q as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ground_truth::brute_force;
+    use crate::dataset::synth::tiny_uniform;
+
+    fn service() -> (Dataset, SearchService) {
+        let ds = tiny_uniform(600, 16, Metric::L2, 81);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 16,
+                build_l: 32,
+                alpha: 1.2,
+                seed: 81,
+            },
+            &PqParams {
+                m: 8,
+                c: 32,
+                train_sample: 600,
+                kmeans_iters: 8,
+            },
+            SearchParams {
+                l: 80,
+                k: 10,
+                ..Default::default()
+            },
+            false,
+        );
+        (ds, svc)
+    }
+
+    #[test]
+    fn service_end_to_end_recall() {
+        let (ds, svc) = service();
+        let gt = brute_force(&ds, 10);
+        let mut recall = 0.0;
+        for q in 0..ds.n_queries() {
+            let out = svc.search(ds.queries.row(q), 10);
+            recall += crate::dataset::recall_at_k(&out.ids, gt.row(q), 10);
+        }
+        recall /= ds.n_queries() as f64;
+        assert!(recall > 0.8, "recall {recall}");
+        assert_eq!(
+            svc.stats.queries.load(Ordering::Relaxed),
+            ds.n_queries() as u64
+        );
+        assert!(svc.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn search_respects_requested_k() {
+        let (ds, svc) = service();
+        let out = svc.search(ds.queries.row(0), 3);
+        assert_eq!(out.ids.len(), 3);
+    }
+
+    #[test]
+    fn native_adt_matches_service_adt_without_runtime() {
+        let (ds, svc) = service();
+        let q = ds.queries.row(0);
+        let a = svc.build_adt(q);
+        let b = svc.codebook.build_adt(q);
+        assert_eq!(a.table, b.table);
+    }
+}

@@ -1,0 +1,255 @@
+//! TCP front end: newline-delimited JSON requests/responses over a local
+//! socket, one handler thread per connection feeding the shared batcher.
+//!
+//! Protocol (one JSON object per line):
+//! ```text
+//! -> {"op":"search","query":[f32...],"k":10}
+//! <- {"ids":[...],"dists":[...],"latency_us":123}
+//! -> {"op":"stats"}
+//! <- {"queries":N,"early_terminated":E,"mean_latency_us":...}
+//! -> {"op":"shutdown"}
+//! ```
+
+use super::batcher::BatcherHandle;
+use super::SearchService;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve.
+    pub fn start(
+        service: Arc<SearchService>,
+        batcher: BatcherHandle,
+        port: u16,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let accept_thread = std::thread::spawn(move || {
+            let mut handlers = Vec::new();
+            while !flag.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        // Small JSON lines + closed-loop clients: Nagle +
+                        // delayed-ACK would add ~40 ms per hop.
+                        stream.set_nodelay(true).ok();
+                        let svc = service.clone();
+                        let bh = batcher.clone();
+                        let f = flag.clone();
+                        handlers.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, svc, bh, f);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for h in handlers {
+                let _ = h.join();
+            }
+        });
+        Ok(Server {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: Arc<SearchService>,
+    batcher: BatcherHandle,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = json::parse(&line).map_err(|e| anyhow!("bad request: {e}"))?;
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("search");
+        let resp = match op {
+            "search" => {
+                let t0 = std::time::Instant::now();
+                let query: Vec<f32> = req
+                    .get("query")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing query"))?
+                    .iter()
+                    .filter_map(|x| x.as_f64())
+                    .map(|x| x as f32)
+                    .collect();
+                let k = req.get("k").and_then(Json::as_usize).unwrap_or(10);
+                match batcher.query(query, k) {
+                    Some(out) => Json::obj(vec![
+                        ("ids", Json::arr_num(out.ids.iter().map(|&i| i as f64))),
+                        ("dists", Json::arr_num(out.dists.iter().map(|&d| d as f64))),
+                        (
+                            "latency_us",
+                            Json::num(t0.elapsed().as_micros() as f64),
+                        ),
+                    ]),
+                    None => Json::obj(vec![("error", Json::str("batcher closed"))]),
+                }
+            }
+            "stats" => Json::obj(vec![
+                (
+                    "queries",
+                    Json::num(service.stats.queries.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "early_terminated",
+                    Json::num(service.stats.early_terminated.load(Ordering::Relaxed) as f64),
+                ),
+                ("mean_latency_us", Json::num(service.mean_latency_us())),
+                ("dataset", Json::str(service.name.clone())),
+            ]),
+            "shutdown" => {
+                shutdown.store(true, Ordering::Relaxed);
+                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string_compact())?;
+                break;
+            }
+            other => Json::obj(vec![("error", Json::str(format!("unknown op {other}")))]),
+        };
+        writeln!(writer, "{}", resp.to_string_compact())?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for examples/tests.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        writeln!(self.stream, "{}", req.to_string_compact())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// Search RPC; returns (ids, dists, server latency µs).
+    pub fn search(&mut self, query: &[f32], k: usize) -> Result<(Vec<u32>, Vec<f32>, f64)> {
+        let req = Json::obj(vec![
+            ("op", Json::str("search")),
+            ("query", Json::arr_num(query.iter().map(|&x| x as f64))),
+            ("k", Json::num(k as f64)),
+        ]);
+        let resp = self.roundtrip(req)?;
+        if let Some(err) = resp.get("error").and_then(Json::as_str) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        let ids = resp
+            .get("ids")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing ids"))?
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as u32)
+            .collect();
+        let dists = resp
+            .get("dists")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as f32)
+            .collect();
+        let lat = resp.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0);
+        Ok((ids, dists, lat))
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.roundtrip(Json::obj(vec![("op", Json::str("shutdown"))]))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, PqParams, SearchParams};
+    use crate::coordinator::batcher::{spawn, BatchPolicy};
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+
+    #[test]
+    fn server_roundtrip() {
+        let ds = tiny_uniform(200, 8, Metric::L2, 99);
+        let svc = Arc::new(SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 99,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 200,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 30,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        ));
+        let (handle, _join) = spawn(svc.clone(), BatchPolicy::default(), 1);
+        let server = Server::start(svc.clone(), handle, 0).unwrap();
+        let addr = server.addr;
+
+        let mut client = Client::connect(addr).unwrap();
+        let (ids, dists, lat) = client.search(ds.queries.row(0), 5).unwrap();
+        assert_eq!(ids.len(), 5);
+        assert_eq!(dists.len(), 5);
+        assert!(lat >= 0.0);
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("queries").and_then(Json::as_usize), Some(1));
+
+        client.shutdown().unwrap();
+        server.stop();
+    }
+}

@@ -1,0 +1,166 @@
+//! fvecs/ivecs interchange (the TEXMEX format SIFT/GIST/BIGANN ship in):
+//! each record is a little-endian `u32` dimension followed by `dim`
+//! f32 (fvecs) or i32 (ivecs) payload values. Lets the pipeline run on the
+//! real corpora when they are available instead of the synthetic registry.
+
+use super::VectorSet;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Read an .fvecs file (optionally capping at `max_rows`).
+pub fn read_fvecs(path: &Path, max_rows: Option<usize>) -> Result<VectorSet> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_fvecs(&buf, max_rows)
+}
+
+/// Parse fvecs bytes.
+pub fn parse_fvecs(buf: &[u8], max_rows: Option<usize>) -> Result<VectorSet> {
+    let mut pos = 0usize;
+    let mut dim = 0usize;
+    let mut data: Vec<f32> = Vec::new();
+    let mut rows = 0usize;
+    while pos + 4 <= buf.len() {
+        if let Some(cap) = max_rows {
+            if rows >= cap {
+                break;
+            }
+        }
+        let d = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        if d == 0 || d > 1_000_000 {
+            bail!("implausible dimension {d} at offset {pos}");
+        }
+        if dim == 0 {
+            dim = d;
+        } else if d != dim {
+            bail!("ragged fvecs: {d} != {dim} at row {rows}");
+        }
+        if pos + 4 * d > buf.len() {
+            bail!("truncated record at row {rows}");
+        }
+        for i in 0..d {
+            data.push(f32::from_le_bytes(
+                buf[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        pos += 4 * d;
+        rows += 1;
+    }
+    if rows == 0 {
+        bail!("empty fvecs file");
+    }
+    Ok(VectorSet::new(dim, data))
+}
+
+/// Write an .fvecs file.
+pub fn write_fvecs(vs: &VectorSet, path: &Path) -> Result<()> {
+    let mut buf = Vec::with_capacity(vs.len() * (4 + 4 * vs.dim));
+    for row in vs.iter_rows() {
+        buf.extend_from_slice(&(vs.dim as u32).to_le_bytes());
+        for x in row {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+/// Read an .ivecs ground-truth file: rows of i32 neighbor ids.
+pub fn read_ivecs(path: &Path, max_rows: Option<usize>) -> Result<(usize, Vec<u32>)> {
+    let buf = std::fs::read(path)?;
+    let mut pos = 0usize;
+    let mut k = 0usize;
+    let mut ids: Vec<u32> = Vec::new();
+    let mut rows = 0usize;
+    while pos + 4 <= buf.len() {
+        if let Some(cap) = max_rows {
+            if rows >= cap {
+                break;
+            }
+        }
+        let d = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        if k == 0 {
+            k = d;
+        } else if d != k {
+            bail!("ragged ivecs");
+        }
+        if pos + 4 * d > buf.len() {
+            bail!("truncated ivecs at row {rows}");
+        }
+        for i in 0..d {
+            ids.push(u32::from_le_bytes(
+                buf[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+            ));
+        }
+        pos += 4 * d;
+        rows += 1;
+    }
+    if rows == 0 {
+        bail!("empty ivecs file");
+    }
+    Ok((k, ids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("proxima-fvecs-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let ds = tiny_uniform(40, 7, Metric::L2, 51);
+        let p = tmp("a.fvecs");
+        write_fvecs(&ds.base, &p).unwrap();
+        let back = read_fvecs(&p, None).unwrap();
+        assert_eq!(back.dim, 7);
+        assert_eq!(back.data, ds.base.data);
+    }
+
+    #[test]
+    fn fvecs_row_cap() {
+        let ds = tiny_uniform(40, 5, Metric::L2, 52);
+        let p = tmp("b.fvecs");
+        write_fvecs(&ds.base, &p).unwrap();
+        let back = read_fvecs(&p, Some(10)).unwrap();
+        assert_eq!(back.len(), 10);
+        assert_eq!(&back.data[..], &ds.base.data[..50]);
+    }
+
+    #[test]
+    fn rejects_ragged_and_truncated() {
+        // Ragged: dim 2 then dim 3.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        buf.extend_from_slice(&2.0f32.to_le_bytes());
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(parse_fvecs(&buf, None).is_err());
+        assert!(parse_fvecs(&[], None).is_err());
+    }
+
+    #[test]
+    fn ivecs_roundtrip_by_hand() {
+        let p = tmp("c.ivecs");
+        let mut buf = Vec::new();
+        for row in [[1u32, 2, 3], [4, 5, 6]] {
+            buf.extend_from_slice(&3u32.to_le_bytes());
+            for id in row {
+                buf.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        std::fs::write(&p, buf).unwrap();
+        let (k, ids) = read_ivecs(&p, None).unwrap();
+        assert_eq!(k, 3);
+        assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
+    }
+}

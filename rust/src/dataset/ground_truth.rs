@@ -1,0 +1,139 @@
+//! Exact k-NN ground truth by brute force.
+//!
+//! Two paths: a blocked native implementation (used by unit tests and when
+//! artifacts are absent) and an XLA-artifact path in `runtime::` that runs
+//! the AOT-lowered batch-distance kernel (preferred for large sets — XLA's
+//! CPU backend uses an optimized GEMM).
+
+use super::{Dataset, GroundTruth};
+use crate::distance::Metric;
+
+/// Max-heap entry so the BinaryHeap keeps the *worst* of the current top-k
+/// at the root.
+#[derive(PartialEq)]
+struct Entry(f32, u32);
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+/// Brute-force exact top-k for every query (native path).
+pub fn brute_force(ds: &Dataset, k: usize) -> GroundTruth {
+    brute_force_with(ds.metric, &ds.base.data, ds.base.dim, &ds.queries.data, k)
+}
+
+/// Brute-force over raw slices (used by tests and the error model, where the
+/// base data may have been perturbed).
+pub fn brute_force_with(
+    metric: Metric,
+    base: &[f32],
+    dim: usize,
+    queries: &[f32],
+    k: usize,
+) -> GroundTruth {
+    let n = base.len() / dim;
+    let nq = queries.len() / dim;
+    assert!(k <= n, "k={k} > n={n}");
+    let mut ids = Vec::with_capacity(nq * k);
+    for q in 0..nq {
+        let qv = &queries[q * dim..(q + 1) * dim];
+        let mut heap = std::collections::BinaryHeap::with_capacity(k + 1);
+        for i in 0..n {
+            let d = metric.distance(qv, &base[i * dim..(i + 1) * dim]);
+            if heap.len() < k {
+                heap.push(Entry(d, i as u32));
+            } else if d < heap.peek().unwrap().0 {
+                heap.pop();
+                heap.push(Entry(d, i as u32));
+            }
+        }
+        let mut top: Vec<Entry> = heap.into_vec();
+        top.sort_by(|a, b| a.cmp(b));
+        ids.extend(top.iter().map(|e| e.1));
+    }
+    GroundTruth { k, ids }
+}
+
+/// Exact top-k for a single query; returns (distance, id) ascending.
+pub fn top_k_single(metric: Metric, base: &[f32], dim: usize, q: &[f32], k: usize) -> Vec<(f32, u32)> {
+    let gt = brute_force_with(metric, base, dim, q, k);
+    gt.ids
+        .iter()
+        .map(|&id| {
+            (
+                metric.distance(q, &base[id as usize * dim..(id as usize + 1) * dim]),
+                id,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::tiny_uniform;
+
+    #[test]
+    fn nearest_is_self_for_base_queries() {
+        let ds = tiny_uniform(200, 8, Metric::L2, 3);
+        // Query with base vectors: nearest neighbor must be the vector itself.
+        let gt = brute_force_with(Metric::L2, &ds.base.data, 8, &ds.base.data[..8 * 10], 1);
+        for q in 0..10 {
+            assert_eq!(gt.row(q)[0] as usize, q);
+        }
+    }
+
+    #[test]
+    fn results_sorted_by_distance() {
+        let ds = tiny_uniform(300, 12, Metric::L2, 4);
+        let gt = brute_force(&ds, 10);
+        for q in 0..ds.n_queries() {
+            let qv = ds.queries.row(q);
+            let dists: Vec<f32> = gt
+                .row(q)
+                .iter()
+                .map(|&id| Metric::L2.distance(qv, ds.base.row(id as usize)))
+                .collect();
+            for w in dists.windows(2) {
+                assert!(w[0] <= w[1] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn works_for_all_metrics() {
+        for m in [Metric::L2, Metric::Ip, Metric::Angular] {
+            let ds = tiny_uniform(100, 6, m, 5);
+            let gt = brute_force(&ds, 5);
+            assert_eq!(gt.n_queries(), ds.n_queries());
+            // ids are distinct per row
+            for q in 0..gt.n_queries() {
+                let mut r = gt.row(q).to_vec();
+                r.sort_unstable();
+                r.dedup();
+                assert_eq!(r.len(), 5);
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_n() {
+        let ds = tiny_uniform(10, 4, Metric::L2, 6);
+        let gt = brute_force(&ds, 10);
+        for q in 0..gt.n_queries() {
+            let mut r = gt.row(q).to_vec();
+            r.sort_unstable();
+            assert_eq!(r, (0..10).collect::<Vec<u32>>());
+        }
+    }
+}

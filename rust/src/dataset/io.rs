@@ -1,0 +1,249 @@
+//! Binary container format for vectors, graphs, PQ codebooks and ground
+//! truth (no `serde`/`bincode` offline). Layout: magic, u32 version, then
+//! section-specific little-endian payloads. Deliberately simple and
+//! versioned so examples can cache expensive artifacts (graph builds).
+
+use super::{Dataset, GroundTruth, VectorSet};
+use crate::distance::Metric;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PROXIMA1";
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated file at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Save a dataset (base + queries + metric).
+pub fn save_dataset(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, 1); // version
+    put_str(&mut buf, &ds.name);
+    put_str(&mut buf, ds.metric.name());
+    put_u64(&mut buf, ds.base.len() as u64);
+    put_u64(&mut buf, ds.queries.len() as u64);
+    put_u32(&mut buf, ds.base.dim as u32);
+    for x in &ds.base.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in &ds.queries.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    write_atomic(path, &buf)
+}
+
+/// Load a dataset saved by [`save_dataset`].
+pub fn load_dataset(path: &Path) -> Result<Dataset> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut r = Reader::new(&buf);
+    if r.take(8)? != MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let ver = r.u32()?;
+    if ver != 1 {
+        bail!("unsupported version {ver}");
+    }
+    let name = r.str()?;
+    let metric = Metric::parse(&r.str()?).context("bad metric")?;
+    let n_base = r.u64()? as usize;
+    let n_q = r.u64()? as usize;
+    let dim = r.u32()? as usize;
+    let base = VectorSet::new(dim, r.f32_vec(n_base * dim)?);
+    let queries = VectorSet::new(dim, r.f32_vec(n_q * dim)?);
+    Ok(Dataset {
+        name,
+        metric,
+        base,
+        queries,
+    })
+}
+
+/// Save ground truth.
+pub fn save_ground_truth(gt: &GroundTruth, path: &Path) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, 1);
+    put_u32(&mut buf, gt.k as u32);
+    put_u64(&mut buf, gt.ids.len() as u64);
+    for id in &gt.ids {
+        buf.extend_from_slice(&id.to_le_bytes());
+    }
+    write_atomic(path, &buf)
+}
+
+/// Load ground truth.
+pub fn load_ground_truth(path: &Path) -> Result<GroundTruth> {
+    let buf = std::fs::read(path)?;
+    let mut r = Reader::new(&buf);
+    if r.take(8)? != MAGIC {
+        bail!("bad magic");
+    }
+    let _ver = r.u32()?;
+    let k = r.u32()? as usize;
+    let n = r.u64()? as usize;
+    Ok(GroundTruth {
+        k,
+        ids: r.u32_vec(n)?,
+    })
+}
+
+/// Save a flat u32 adjacency structure (graph CSR): offsets then targets.
+pub fn save_csr(offsets: &[u32], targets: &[u32], path: &Path) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, 1);
+    put_u64(&mut buf, offsets.len() as u64);
+    put_u64(&mut buf, targets.len() as u64);
+    for x in offsets {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    for x in targets {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    write_atomic(path, &buf)
+}
+
+/// Load CSR saved by [`save_csr`].
+pub fn load_csr(path: &Path) -> Result<(Vec<u32>, Vec<u32>)> {
+    let buf = std::fs::read(path)?;
+    let mut r = Reader::new(&buf);
+    if r.take(8)? != MAGIC {
+        bail!("bad magic");
+    }
+    let _ver = r.u32()?;
+    let n_off = r.u64()? as usize;
+    let n_tgt = r.u64()? as usize;
+    Ok((r.u32_vec(n_off)?, r.u32_vec(n_tgt)?))
+}
+
+/// Write via a temp file + rename so partially-written caches are never
+/// observed by a concurrent reader.
+fn write_atomic(path: &Path, buf: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(buf)?;
+        f.sync_all().ok();
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read a whole file as a string with context.
+pub fn read_string(path: &Path) -> Result<String> {
+    let mut s = String::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_string(&mut s)?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::tiny_uniform;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("proxima-io-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = tiny_uniform(50, 7, Metric::Angular, 9);
+        let p = tmpdir().join("ds.bin");
+        save_dataset(&ds, &p).unwrap();
+        let back = load_dataset(&p).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.metric, ds.metric);
+        assert_eq!(back.base.data, ds.base.data);
+        assert_eq!(back.queries.data, ds.queries.data);
+    }
+
+    #[test]
+    fn ground_truth_roundtrip() {
+        let gt = GroundTruth {
+            k: 3,
+            ids: vec![1, 2, 3, 4, 5, 6],
+        };
+        let p = tmpdir().join("gt.bin");
+        save_ground_truth(&gt, &p).unwrap();
+        let back = load_ground_truth(&p).unwrap();
+        assert_eq!(back.k, 3);
+        assert_eq!(back.ids, gt.ids);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let p = tmpdir().join("csr.bin");
+        save_csr(&[0, 2, 5], &[1, 2, 0, 1, 2], &p).unwrap();
+        let (off, tgt) = load_csr(&p).unwrap();
+        assert_eq!(off, vec![0, 2, 5]);
+        assert_eq!(tgt, vec![1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_corrupt_magic() {
+        let p = tmpdir().join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC????????").unwrap();
+        assert!(load_dataset(&p).is_err());
+        assert!(load_ground_truth(&p).is_err());
+    }
+}

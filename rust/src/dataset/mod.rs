@@ -1,0 +1,155 @@
+//! Datasets: a flat row-major f32 matrix plus metric metadata, a registry
+//! of synthetic workloads mirroring the paper's Table I, exact ground
+//! truth, and a simple binary container format for persistence.
+
+pub mod fvecs;
+pub mod ground_truth;
+pub mod io;
+pub mod synth;
+
+use crate::distance::Metric;
+
+/// A dense row-major `n x dim` f32 matrix of base or query vectors.
+#[derive(Clone, Debug)]
+pub struct VectorSet {
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl VectorSet {
+    pub fn new(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0, "data not a multiple of dim");
+        Self { dim, data }
+    }
+
+    pub fn zeros(n: usize, dim: usize) -> Self {
+        Self {
+            dim,
+            data: vec![0.0; n * dim],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim)
+    }
+}
+
+/// A complete benchmark dataset: base set, query set, metric, and name.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub metric: Metric,
+    pub base: VectorSet,
+    pub queries: VectorSet,
+}
+
+impl Dataset {
+    pub fn dim(&self) -> usize {
+        self.base.dim
+    }
+    pub fn n_base(&self) -> usize {
+        self.base.len()
+    }
+    pub fn n_queries(&self) -> usize {
+        self.queries.len()
+    }
+}
+
+/// Ground truth: for each query, the ids of its exact k nearest neighbors
+/// (ascending by distance).
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    pub k: usize,
+    pub ids: Vec<u32>, // n_queries * k
+}
+
+impl GroundTruth {
+    #[inline]
+    pub fn row(&self, q: usize) -> &[u32] {
+        &self.ids[q * self.k..(q + 1) * self.k]
+    }
+    pub fn n_queries(&self) -> usize {
+        self.ids.len() / self.k
+    }
+}
+
+/// Recall@k between returned ids and ground truth (paper Eq. 2).
+pub fn recall_at_k(returned: &[u32], truth: &[u32], k: usize) -> f64 {
+    let truth_k = &truth[..k.min(truth.len())];
+    let hit = returned
+        .iter()
+        .take(k)
+        .filter(|id| truth_k.contains(id))
+        .count();
+    hit as f64 / k as f64
+}
+
+/// Mean recall over all queries; `results` is row-major n_queries x k.
+pub fn mean_recall(results: &[Vec<u32>], gt: &GroundTruth, k: usize) -> f64 {
+    assert_eq!(results.len(), gt.n_queries());
+    let s: f64 = results
+        .iter()
+        .enumerate()
+        .map(|(q, r)| recall_at_k(r, gt.row(q), k))
+        .sum();
+    s / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vectorset_indexing() {
+        let vs = VectorSet::new(2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs.row(1), &[3.0, 4.0]);
+        assert_eq!(vs.iter_rows().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of dim")]
+    fn vectorset_rejects_ragged() {
+        VectorSet::new(3, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn recall_computation() {
+        let truth = [1, 2, 3, 4, 5];
+        assert_eq!(recall_at_k(&[1, 2, 3, 4, 5], &truth, 5), 1.0);
+        assert_eq!(recall_at_k(&[1, 2, 9, 8, 7], &truth, 5), 0.4);
+        assert_eq!(recall_at_k(&[9, 8, 7, 6, 0], &truth, 5), 0.0);
+        // k smaller than returned list
+        assert_eq!(recall_at_k(&[1, 9], &truth, 2), 0.5);
+    }
+
+    #[test]
+    fn ground_truth_rows() {
+        let gt = GroundTruth {
+            k: 2,
+            ids: vec![0, 1, 2, 3],
+        };
+        assert_eq!(gt.n_queries(), 2);
+        assert_eq!(gt.row(1), &[2, 3]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Synthetic dataset generators mirroring the paper's Table I workloads.
+//!
+//! The authors evaluate on SIFT (1M, D=128, Euclidean), GLOVE (1M, D=100,
+//! Angular), DEEP (10M/100M, D=96, Inner Product) and BIGANN (10M/100M,
+//! D=128, Euclidean). Those corpora are not available offline, so we
+//! synthesize clustered data with the same dimension, metric and
+//! distributional character (see DESIGN.md §1): a Gaussian-mixture base set
+//! whose cluster count/spread is tuned so graph search difficulty (hops to
+//! converge, distance-computation counts) lands in the same regime. Queries
+//! are drawn from the same mixture (in-distribution, as in all four
+//! benchmarks).
+
+use super::{Dataset, VectorSet};
+use crate::distance::{normalize, Metric};
+use crate::util::rng::Xoshiro256pp;
+
+/// Parameters for the Gaussian-mixture generator.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub metric: Metric,
+    pub dim: usize,
+    pub n_base: usize,
+    pub n_queries: usize,
+    /// Number of mixture components.
+    pub clusters: usize,
+    /// Cluster center scale relative to intra-cluster stddev (1.0).
+    pub center_scale: f32,
+    /// SIFT-like datasets are non-negative byte-ish magnitudes.
+    pub nonneg: bool,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// The registry of Table I lookalikes. `scale` multiplies the default
+    /// base-set size (defaults are laptop-scale stand-ins; see DESIGN.md).
+    pub fn registry(scale: f64) -> Vec<SynthSpec> {
+        let s = |n: usize| ((n as f64 * scale) as usize).max(1000);
+        vec![
+            SynthSpec {
+                name: "sift-s".into(),
+                metric: Metric::L2,
+                dim: 128,
+                n_base: s(100_000),
+                n_queries: 500,
+                clusters: 64,
+                center_scale: 4.0,
+                nonneg: true,
+                seed: 0x5EED_0001,
+            },
+            SynthSpec {
+                name: "glove-s".into(),
+                metric: Metric::Angular,
+                dim: 100,
+                n_base: s(100_000),
+                n_queries: 500,
+                // GLOVE is notoriously "hard" (low recall at big T): weak
+                // cluster structure -> more distance computations (paper
+                // §V-C observes 6-8x more work on GLOVE).
+                clusters: 16,
+                center_scale: 1.2,
+                nonneg: false,
+                seed: 0x5EED_0002,
+            },
+            SynthSpec {
+                name: "deep-10m-s".into(),
+                metric: Metric::Ip,
+                dim: 96,
+                n_base: s(200_000),
+                n_queries: 500,
+                clusters: 128,
+                center_scale: 3.0,
+                nonneg: false,
+                seed: 0x5EED_0003,
+            },
+            SynthSpec {
+                name: "bigann-10m-s".into(),
+                metric: Metric::L2,
+                dim: 128,
+                n_base: s(200_000),
+                n_queries: 500,
+                clusters: 128,
+                center_scale: 4.0,
+                nonneg: true,
+                seed: 0x5EED_0004,
+            },
+            SynthSpec {
+                name: "deep-100m-s".into(),
+                metric: Metric::Ip,
+                dim: 96,
+                n_base: s(400_000),
+                n_queries: 500,
+                clusters: 256,
+                center_scale: 3.0,
+                nonneg: false,
+                seed: 0x5EED_0005,
+            },
+            SynthSpec {
+                name: "bigann-100m-s".into(),
+                metric: Metric::L2,
+                dim: 128,
+                n_base: s(400_000),
+                n_queries: 500,
+                clusters: 256,
+                center_scale: 4.0,
+                nonneg: true,
+                seed: 0x5EED_0006,
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str, scale: f64) -> Option<SynthSpec> {
+        Self::registry(scale).into_iter().find(|s| s.name == name)
+    }
+
+    /// Generate the dataset.
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed);
+        // Cluster centers.
+        let mut centers = vec![0.0f32; self.clusters * self.dim];
+        for c in centers.iter_mut() {
+            *c = rng.next_gaussian() as f32 * self.center_scale;
+        }
+        // Per-cluster weights (Zipf-ish so some clusters are hot, matching
+        // real corpora where density is uneven).
+        let weights: Vec<f64> = (0..self.clusters)
+            .map(|i| 1.0 / ((i + 1) as f64).sqrt())
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        let cdf: Vec<f64> = weights
+            .iter()
+            .scan(0.0, |acc, w| {
+                *acc += w / wsum;
+                Some(*acc)
+            })
+            .collect();
+
+        let gen_set = |n: usize, rng: &mut Xoshiro256pp| -> VectorSet {
+            let mut data = vec![0.0f32; n * self.dim];
+            for i in 0..n {
+                let u = rng.next_f64();
+                let c = cdf.partition_point(|&x| x < u).min(self.clusters - 1);
+                let center = &centers[c * self.dim..(c + 1) * self.dim];
+                let row = &mut data[i * self.dim..(i + 1) * self.dim];
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r = center[j] + rng.next_gaussian() as f32;
+                }
+                if self.nonneg {
+                    // SIFT-like: shift+clip to non-negative "gradient
+                    // histogram" style magnitudes.
+                    for r in row.iter_mut() {
+                        *r = (*r + self.center_scale).max(0.0);
+                    }
+                }
+                if self.metric == Metric::Angular {
+                    normalize(row);
+                }
+            }
+            VectorSet::new(self.dim, data)
+        };
+
+        let base = gen_set(self.n_base, &mut rng);
+        let queries = gen_set(self.n_queries, &mut rng);
+        Dataset {
+            name: self.name.clone(),
+            metric: self.metric,
+            base,
+            queries,
+        }
+    }
+}
+
+/// Small uniform dataset for unit tests (no cluster structure).
+pub fn tiny_uniform(n: usize, dim: usize, metric: Metric, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut mk = |n: usize| {
+        let mut data = vec![0.0f32; n * dim];
+        for x in data.iter_mut() {
+            *x = rng.next_f32() * 2.0 - 1.0;
+        }
+        if metric == Metric::Angular {
+            for i in 0..n {
+                normalize(&mut data[i * dim..(i + 1) * dim]);
+            }
+        }
+        VectorSet::new(dim, data)
+    };
+    let base = mk(n);
+    let queries = mk((n / 10).clamp(4, 64));
+    Dataset {
+        name: format!("tiny-{n}x{dim}"),
+        metric,
+        base,
+        queries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::norm;
+
+    #[test]
+    fn registry_mirrors_table1() {
+        let reg = SynthSpec::registry(0.01);
+        assert_eq!(reg.len(), 6);
+        let sift = &reg[0];
+        assert_eq!(sift.dim, 128);
+        assert_eq!(sift.metric, Metric::L2);
+        let glove = &reg[1];
+        assert_eq!(glove.dim, 100);
+        assert_eq!(glove.metric, Metric::Angular);
+        let deep = &reg[2];
+        assert_eq!(deep.dim, 96);
+        assert_eq!(deep.metric, Metric::Ip);
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let spec = SynthSpec::by_name("sift-s", 0.002).unwrap();
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.base.data, b.base.data);
+        assert_eq!(a.n_base(), spec.n_base);
+        assert_eq!(a.dim(), 128);
+    }
+
+    #[test]
+    fn angular_sets_are_normalized() {
+        let spec = SynthSpec::by_name("glove-s", 0.002).unwrap();
+        let d = spec.generate();
+        for i in 0..d.n_base().min(100) {
+            assert!((norm(d.base.row(i)) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nonneg_datasets_are_nonneg() {
+        let spec = SynthSpec::by_name("bigann-10m-s", 0.002).unwrap();
+        let d = spec.generate();
+        assert!(d.base.data.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn clusters_create_structure() {
+        // Mean pairwise distance within the dataset should be markedly
+        // larger than nearest-neighbor distance when clusters exist.
+        let spec = SynthSpec {
+            name: "t".into(),
+            metric: Metric::L2,
+            dim: 16,
+            n_base: 400,
+            n_queries: 4,
+            clusters: 8,
+            center_scale: 6.0,
+            nonneg: false,
+            seed: 7,
+        };
+        let d = spec.generate();
+        let a = d.base.row(0);
+        let mut dists: Vec<f32> = (1..d.n_base())
+            .map(|i| crate::distance::l2_sq(a, d.base.row(i)))
+            .collect();
+        dists.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let nn = dists[0];
+        let med = dists[dists.len() / 2];
+        assert!(med > 4.0 * nn, "no cluster structure: nn={nn} med={med}");
+    }
+}

@@ -1,0 +1,239 @@
+//! Distance metrics for ANNS (paper Table I: Euclidean, Angular, Inner
+//! Product). All are expressed as *distances* (smaller = closer) so the
+//! search code is metric-agnostic:
+//!
+//! * `L2`      — squared Euclidean (monotone in Euclidean; sqrt avoided on
+//!               the hot path exactly as DiskANN/HNSW do).
+//! * `Ip`      — negative inner product.
+//! * `Angular` — cosine distance `1 - cos(a,b)`; vectors are expected to be
+//!               pre-normalized by the dataset loader, reducing it to
+//!               `1 + Ip` on unit vectors.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    L2,
+    Ip,
+    Angular,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "l2" | "euclidean" => Some(Metric::L2),
+            "ip" | "inner" | "inner_product" => Some(Metric::Ip),
+            "angular" | "cosine" => Some(Metric::Angular),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::L2 => "l2",
+            Metric::Ip => "ip",
+            Metric::Angular => "angular",
+        }
+    }
+
+    /// Full-precision distance between two D-dim vectors.
+    #[inline]
+    pub fn distance(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Metric::L2 => l2_sq(a, b),
+            Metric::Ip => -dot(a, b),
+            Metric::Angular => 1.0 - dot(a, b), // unit-norm inputs
+        }
+    }
+
+    /// Per-subvector partial distance used to build PQ asymmetric distance
+    /// tables; summing partials over subspaces must reconstruct
+    /// `distance()` exactly for the decomposable metrics we support.
+    #[inline]
+    pub fn partial(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            Metric::L2 => l2_sq(a, b),
+            // For IP and Angular the decomposable part is the dot product;
+            // the angular "1 +" constant is folded in at ADT build time
+            // (added to subspace 0) so sums still reconstruct distance().
+            Metric::Ip | Metric::Angular => -dot(a, b),
+        }
+    }
+
+    /// Constant folded into the ADT so that partial sums equal distances.
+    #[inline]
+    pub fn adt_bias(&self) -> f32 {
+        match self {
+            Metric::L2 | Metric::Ip => 0.0,
+            Metric::Angular => 1.0,
+        }
+    }
+}
+
+/// Squared L2 distance, 4-way unrolled accumulators: the compiler
+/// auto-vectorizes this shape well, and separate accumulators break the
+/// add-latency chain on the 1-wide test box.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Dot product with the same unrolling scheme.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// L2 norm.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Normalize in place to unit L2 norm (no-op on zero vectors).
+pub fn normalize(a: &mut [f32]) {
+    let n = norm(a);
+    if n > 0.0 {
+        for x in a.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn l2_reference() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [0.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(l2_sq(&a, &b), 55.0);
+        assert_eq!(Metric::L2.distance(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn dot_reference() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(Metric::Ip.distance(&a, &b), -32.0);
+    }
+
+    #[test]
+    fn angular_on_unit_vectors() {
+        let mut a = vec![3.0, 4.0];
+        let mut b = vec![4.0, 3.0];
+        normalize(&mut a);
+        normalize(&mut b);
+        let d = Metric::Angular.distance(&a, &b);
+        assert!((d - (1.0 - 24.0 / 25.0)).abs() < 1e-6);
+        assert!(Metric::Angular.distance(&a, &a).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Metric::parse("L2"), Some(Metric::L2));
+        assert_eq!(Metric::parse("cosine"), Some(Metric::Angular));
+        assert_eq!(Metric::parse("inner_product"), Some(Metric::Ip));
+        assert_eq!(Metric::parse("hamming"), None);
+    }
+
+    #[test]
+    fn prop_l2_matches_naive_all_lengths() {
+        prop::check_default(
+            "l2-unrolled-vs-naive",
+            101,
+            |r| {
+                let n = prop::gen::len(r, 200);
+                (
+                    prop::gen::vec_f32(r, n, -5.0, 5.0),
+                    prop::gen::vec_f32(r, n, -5.0, 5.0),
+                )
+            },
+            |(a, b)| {
+                let naive: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                let fast = l2_sq(a, b);
+                if (naive - fast).abs() <= 1e-3 * naive.abs().max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!("naive={naive} fast={fast}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_triangle_inequality_l2() {
+        prop::check_default(
+            "l2-triangle",
+            103,
+            |r| {
+                let n = 16;
+                (
+                    prop::gen::vec_f32(r, n, -1.0, 1.0),
+                    prop::gen::vec_f32(r, n, -1.0, 1.0),
+                    prop::gen::vec_f32(r, n, -1.0, 1.0),
+                )
+            },
+            |(a, b, c)| {
+                let ab = l2_sq(a, b).sqrt();
+                let bc = l2_sq(b, c).sqrt();
+                let ac = l2_sq(a, c).sqrt();
+                if ac <= ab + bc + 1e-5 {
+                    Ok(())
+                } else {
+                    Err(format!("ac={ac} > ab+bc={}", ab + bc))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn normalize_gives_unit_norm() {
+        let mut v = vec![1.0, -2.0, 3.5, 0.25];
+        normalize(&mut v);
+        assert!((norm(&v) - 1.0).abs() < 1e-6);
+        let mut z = vec![0.0; 4];
+        normalize(&mut z);
+        assert_eq!(z, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,233 @@
+//! Data allocation and address translation (paper §IV-E, Fig 10b).
+//!
+//! Three stored data types: (1) PQ codes + graph indices, coupled per
+//! vertex into fixed-width frames; (2) raw vectors, in dedicated cores;
+//! (3) hot-node frames (index row + all neighbors' PQ codes fused, §IV-E).
+//! Cores are split between index and raw storage proportionally to the
+//! datasets' byte footprints; within each region the mapping is core-level
+//! round-robin so consecutive vertex ids land on consecutive cores —
+//! maximizing the parallelism the arbiter can extract.
+
+use crate::nand::NandConfig;
+
+/// Physical address of one frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhysAddr {
+    pub core: u32,
+    pub page: u32,
+    pub frame: u32,
+}
+
+/// Address translation tables of the arbiter.
+#[derive(Clone, Debug)]
+pub struct DataMapping {
+    pub n_nodes: u32,
+    /// Cores assigned to coupled index+PQ frames.
+    pub idx_cores: u32,
+    /// Cores assigned to raw vectors.
+    pub raw_cores: u32,
+    /// First core id of the raw region.
+    pub raw_base: u32,
+    /// Index frames per page: floor(N_BL / (R*b_index + b_pq)).
+    pub idx_frames_per_page: u32,
+    /// Raw frames per page: floor(N_BL / (b_raw * D)).
+    pub raw_frames_per_page: u32,
+    /// Hot-node frames per page (bigger frames: R*(b_index+b_pq)+b_pq).
+    pub hot_frames_per_page: u32,
+    /// Vertices 0..n_hot are hot (after §IV-E reordering).
+    pub n_hot: u32,
+    /// Bits per (non-hot) index frame.
+    pub idx_frame_bits: u32,
+    pub hot_frame_bits: u32,
+    pub raw_frame_bits: u32,
+}
+
+impl DataMapping {
+    /// Lay out a dataset on the accelerator.
+    ///
+    /// * `r` — max degree (frames are padded to R, §IV-E);
+    /// * `b_index` — bits per stored neighbor id (gap-encoded width);
+    /// * `b_pq` — bits per PQ code (M*8);
+    /// * `dim`, `b_raw` — raw vector shape (b_raw=32 for f32).
+    pub fn new(
+        cfg: &NandConfig,
+        n_nodes: u32,
+        r: u32,
+        b_index: u32,
+        b_pq: u32,
+        dim: u32,
+        b_raw: u32,
+        hot_frac: f64,
+    ) -> DataMapping {
+        let page_bits = cfg.page_bits() as u32;
+        let idx_frame_bits = r * b_index + b_pq;
+        let hot_frame_bits = r * (b_index + b_pq) + b_pq;
+        let raw_frame_bits = b_raw * dim;
+        let idx_frames_per_page = (page_bits / idx_frame_bits).max(1);
+        let raw_frames_per_page = (page_bits / raw_frame_bits).max(1);
+        let hot_frames_per_page = (page_bits / hot_frame_bits).max(1);
+
+        // Core split proportional to footprints.
+        let idx_bytes = n_nodes as u64 * idx_frame_bits as u64 / 8;
+        let raw_bytes = n_nodes as u64 * raw_frame_bits as u64 / 8;
+        let n_cores = cfg.n_cores();
+        let raw_cores = ((raw_bytes as f64 / (idx_bytes + raw_bytes) as f64)
+            * n_cores as f64)
+            .round()
+            .clamp(1.0, (n_cores - 1) as f64) as u32;
+        let idx_cores = n_cores - raw_cores;
+
+        DataMapping {
+            n_nodes,
+            idx_cores,
+            raw_cores,
+            raw_base: idx_cores,
+            idx_frames_per_page,
+            raw_frames_per_page,
+            hot_frames_per_page,
+            n_hot: (n_nodes as f64 * hot_frac).round() as u32,
+            idx_frame_bits,
+            hot_frame_bits,
+            raw_frame_bits,
+        }
+    }
+
+    #[inline]
+    pub fn is_hot(&self, node: u32) -> bool {
+        node < self.n_hot
+    }
+
+    /// Address of the coupled index+PQ frame (or hot frame) of `node`.
+    /// Round-robin: core = node mod idx_cores, then frames fill pages.
+    #[inline]
+    pub fn index_addr(&self, node: u32) -> PhysAddr {
+        let (fpp, node_eff) = if self.is_hot(node) {
+            (self.hot_frames_per_page, node)
+        } else {
+            (self.idx_frames_per_page, node)
+        };
+        let core = node_eff % self.idx_cores;
+        let slot = node_eff / self.idx_cores;
+        PhysAddr {
+            core,
+            page: slot / fpp,
+            frame: slot % fpp,
+        }
+    }
+
+    /// Address of the raw vector of `node` (raw region cores).
+    #[inline]
+    pub fn raw_addr(&self, node: u32) -> PhysAddr {
+        let core = self.raw_base + node % self.raw_cores;
+        let slot = node / self.raw_cores;
+        PhysAddr {
+            core,
+            page: slot / self.raw_frames_per_page,
+            frame: slot % self.raw_frames_per_page,
+        }
+    }
+
+    /// The PQ code of a *non-hot* node lives inside its coupled frame, so
+    /// a PQ fetch resolves to the same address as the index fetch.
+    #[inline]
+    pub fn pq_addr(&self, node: u32) -> PhysAddr {
+        self.index_addr(node)
+    }
+
+    /// Storage capacity check: does everything fit the accelerator?
+    pub fn fits(&self, cfg: &NandConfig) -> bool {
+        let idx_pages_needed =
+            (self.n_nodes / self.idx_cores + 1) / self.idx_frames_per_page + 1;
+        let raw_pages_needed =
+            (self.n_nodes / self.raw_cores + 1) / self.raw_frames_per_page + 1;
+        let pages = cfg.pages_per_core() as u32;
+        idx_pages_needed <= pages && raw_pages_needed <= pages
+    }
+
+    /// Total stored bits including hot-node repetition overhead.
+    pub fn stored_bits(&self) -> u64 {
+        let base = self.n_nodes as u64
+            * (self.idx_frame_bits as u64 + self.raw_frame_bits as u64);
+        let hot_extra = self.n_hot as u64 * (self.hot_frame_bits - self.idx_frame_bits) as u64;
+        base + hot_extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn mapping(n: u32, hot: f64) -> DataMapping {
+        DataMapping::new(&NandConfig::proxima(), n, 32, 26, 256, 128, 32, hot)
+    }
+
+    #[test]
+    fn frames_per_page_formula() {
+        let m = mapping(100_000, 0.0);
+        // N_BL=36864; idx frame = 32*26+256 = 1088 b -> 33 frames/page.
+        assert_eq!(m.idx_frame_bits, 1088);
+        assert_eq!(m.idx_frames_per_page, 36864 / 1088);
+        // raw frame = 32*128 = 4096 b -> 9 frames/page.
+        assert_eq!(m.raw_frames_per_page, 9);
+    }
+
+    #[test]
+    fn consecutive_nodes_hit_consecutive_cores() {
+        let m = mapping(10_000, 0.0);
+        let a = m.index_addr(100);
+        let b = m.index_addr(101);
+        assert_eq!((a.core + 1) % m.idx_cores, b.core % m.idx_cores);
+    }
+
+    #[test]
+    fn raw_and_index_regions_disjoint() {
+        let m = mapping(10_000, 0.0);
+        for node in [0u32, 1, 999, 9999] {
+            let i = m.index_addr(node);
+            let r = m.raw_addr(node);
+            assert!(i.core < m.idx_cores);
+            assert!(r.core >= m.raw_base);
+        }
+    }
+
+    #[test]
+    fn prop_translation_injective_per_type() {
+        prop::check_default(
+            "mapping-injective",
+            601,
+            |r| {
+                let n = 1000 + r.gen_range(50_000) as u32;
+                (n, r.next_f64() * 0.05)
+            },
+            |&(n, hot)| {
+                let m = mapping(n, hot);
+                let mut seen = std::collections::HashSet::new();
+                // Sample nodes; hot/cold share a region but different
+                // frame geometry, so check within each class.
+                for node in (0..n).step_by((n as usize / 500).max(1)) {
+                    let a = m.index_addr(node);
+                    let key = (m.is_hot(node), a.core, a.page, a.frame);
+                    if !seen.insert(key) {
+                        return Err(format!("collision at node {node}: {a:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fits_capacity_at_scale() {
+        let m = mapping(10_000_000, 0.03);
+        assert!(m.fits(&NandConfig::proxima()));
+    }
+
+    #[test]
+    fn hot_overhead_matches_formula() {
+        let m = mapping(1000, 0.03);
+        assert_eq!(m.n_hot, 30);
+        let expected = 1000u64 * (1088 + 4096) + 30 * (m.hot_frame_bits as u64 - 1088);
+        assert_eq!(m.stored_bits(), expected);
+    }
+}

@@ -1,0 +1,112 @@
+//! The near-storage search engine simulator (paper §IV, Figs 8, 15, 16).
+//!
+//! Trace-driven discrete-event simulation of the CMOS search engine bonded
+//! onto the 3D NAND tiles: N_q independent search queues issue storage
+//! requests through the arbiter to 512 cores, share the bitonic sorter and
+//! the PQ (ADT) module, and burn MAC cycles in their distance-computation
+//! units. Timing/energy/area come from the `nand::` models.
+
+pub mod mapping;
+pub mod sim;
+
+use crate::nand::energy::EnergyModel;
+use crate::nand::timing::{HtreeModel, TimingModel};
+use crate::nand::NandConfig;
+use crate::search::bitonic::BitonicModel;
+
+/// Full hardware configuration of the accelerator.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Parallel search queues (paper default 256, swept 32..256 in Fig 16).
+    pub n_queues: usize,
+    /// Engine clock (paper: 1 GHz at 22 nm).
+    pub clock_ghz: f64,
+    pub nand: NandConfig,
+    pub timing: TimingModel,
+    pub htree: HtreeModel,
+    pub energy: EnergyModel,
+    pub sorter: BitonicModel,
+    /// ADT build cost in cycles per dimension (paper §IV-D: 8D for angular
+    /// partials up to 24D for Euclidean).
+    pub adt_cycles_per_dim: u64,
+    /// Vector dimension D.
+    pub dim: usize,
+    /// PQ subspaces M.
+    pub m: usize,
+}
+
+impl EngineConfig {
+    /// Paper configuration for a given dataset shape.
+    pub fn paper(dim: usize, m: usize) -> EngineConfig {
+        EngineConfig {
+            n_queues: 256,
+            clock_ghz: 1.0,
+            nand: NandConfig::proxima(),
+            timing: TimingModel::default(),
+            htree: HtreeModel::default(),
+            energy: EnergyModel::default(),
+            sorter: BitonicModel::paper_config(),
+            adt_cycles_per_dim: 24,
+            dim,
+            m,
+        }
+    }
+
+    /// Cycle time in ns.
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+}
+
+/// Latency breakdown of a run (Fig 15 categories). Attribution is
+/// per-category **resource occupancy**: a hop's 30 concurrent PQ fetches
+/// each contribute their full read time even though they overlap in
+/// wall-clock, so `total()` can exceed the mean latency — shares (each
+/// category / total) are the comparable quantity, as in the paper's
+/// stacked bars.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    /// Time spent in 3D NAND array accesses (incl. conflict stalls).
+    pub nand_ns: f64,
+    /// H-tree transfer time.
+    pub bus_ns: f64,
+    /// Distance-computation (MAC) time.
+    pub compute_ns: f64,
+    /// Bitonic sorter time (incl. waiting for the shared unit).
+    pub sort_ns: f64,
+    /// ADT-module time.
+    pub adt_ns: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.nand_ns + self.bus_ns + self.compute_ns + self.sort_ns + self.adt_ns
+    }
+}
+
+/// Aggregate results of one simulated batch.
+#[derive(Clone, Debug, Default)]
+pub struct EngineResult {
+    pub n_queries: usize,
+    pub makespan_ns: f64,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: f64,
+    /// Queries per second.
+    pub qps: f64,
+    /// Total energy (J).
+    pub energy_j: f64,
+    /// Energy efficiency (QPS/W).
+    pub qps_per_watt: f64,
+    /// Mean 3D NAND core utilization (busy fraction).
+    pub core_utilization: f64,
+    /// Mean queue busy fraction.
+    pub queue_utilization: f64,
+    /// Per-query mean latency breakdown.
+    pub breakdown: Breakdown,
+    /// Full-page reads issued.
+    pub reads: u64,
+    /// Same-page (hot node) follow-up reads.
+    pub same_page_reads: u64,
+    /// Requests that found their target core busy.
+    pub conflicts: u64,
+}

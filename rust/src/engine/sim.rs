@@ -1,0 +1,515 @@
+//! Discrete-event simulation of the search engine (paper Fig 8 dataflow).
+//!
+//! Each of the `N_q` queues executes one query's trace (the queue *is* the
+//! query's state machine); queues contend for:
+//!
+//! * the 3D NAND **cores** (the arbiter stalls a request whose destination
+//!   core is busy — §IV-D); a frame larger than the 128 B MUX granule
+//!   costs one full page read plus same-page follow-up granules;
+//! * the per-tile **H-tree buses**;
+//! * the shared **bitonic sorter** and **PQ/ADT module**. The ADT module
+//!   gates query admission (Step 1 of §IV-B): a queue adopts its next
+//!   query when the module frees up, so input-queueing time is not charged
+//!   to service latency (standard closed-loop accounting).
+//!
+//! Each queue keeps **one outstanding request** (§IV-D: the queue sends
+//! the vertex to the arbiter and waits), so a hop's neighbor fetches
+//! serialize within a queue — cross-queue parallelism over the 512 cores
+//! is what the N_q sweep (Fig 16) buys, and skipping those per-neighbor
+//! round-trips entirely is what hot-node repetition (Fig 15) buys.
+//!
+//! Hot nodes (§IV-E): an index fetch of a hot vertex opens its page; the
+//! neighbor PQ fetches that follow are served as same-page reads ("one WL
+//! setup"). Times are integer picoseconds.
+
+use super::mapping::DataMapping;
+use super::{Breakdown, EngineConfig, EngineResult};
+use crate::search::{Trace, TraceOp};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+const PS_PER_NS: u64 = 1000;
+
+struct Resources {
+    core_free: Vec<u64>,
+    core_busy_ps: Vec<u64>,
+    tile_free: Vec<u64>,
+    sorter_free: u64,
+    adt_free: u64,
+}
+
+struct QueueState {
+    query: usize,
+    op: usize,
+    open_hot_page: Option<u32>,
+    start_ps: u64,
+    bd: Breakdown,
+}
+
+struct Counters {
+    reads: u64,
+    same_page_reads: u64,
+    conflicts: u64,
+    mac_ops: u64,
+}
+
+/// Simulate a batch of query traces on the engine.
+pub fn simulate(cfg: &EngineConfig, mapping: &DataMapping, traces: &[Trace]) -> EngineResult {
+    let n_cores = cfg.nand.n_cores() as usize;
+    let cores_per_tile = cfg.nand.cores_per_tile as usize;
+    let n_tiles = cfg.nand.n_tiles as usize;
+    let mut res = Resources {
+        core_free: vec![0; n_cores],
+        core_busy_ps: vec![0; n_cores],
+        tile_free: vec![0; n_tiles],
+        sorter_free: 0,
+        adt_free: 0,
+    };
+    let mut ctr = Counters {
+        reads: 0,
+        same_page_reads: 0,
+        conflicts: 0,
+        mac_ops: 0,
+    };
+
+    let read_ps = (cfg.timing.read_latency_ns(&cfg.nand) * PS_PER_NS as f64) as u64;
+    let same_page_ps = (cfg.timing.same_page_read_ns(&cfg.nand) * PS_PER_NS as f64) as u64;
+    let cycle_ps = (cfg.cycle_ns() * PS_PER_NS as f64) as u64;
+    let granule_bits = (cfg.nand.page_bits() / cfg.nand.mux as u64).max(1) as u32;
+    let adt_service = cfg.adt_cycles_per_dim * cfg.dim as u64 * cycle_ps;
+
+    let mut latencies_ns: Vec<f64> = Vec::with_capacity(traces.len());
+    let mut total_bd = Breakdown::default();
+    let mut next_query = 0usize;
+    let n_queues = cfg.n_queues.max(1);
+
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut queues: Vec<Option<QueueState>> = Vec::with_capacity(n_queues);
+    for qi in 0..n_queues {
+        if next_query < traces.len() {
+            queues.push(Some(QueueState {
+                query: next_query,
+                op: 0,
+                open_hot_page: None,
+                start_ps: 0,
+                bd: Breakdown::default(),
+            }));
+            heap.push(Reverse((0, qi)));
+            next_query += 1;
+        } else {
+            queues.push(None);
+        }
+    }
+
+    let mut makespan_ps = 0u64;
+    let mut queue_busy_ps = 0u64;
+
+    while let Some(Reverse((now, qi))) = heap.pop() {
+        let Some(state) = queues[qi].as_mut() else {
+            continue;
+        };
+        let trace = &traces[state.query];
+        if state.op >= trace.ops.len() {
+            let lat_ps = now.saturating_sub(state.start_ps);
+            latencies_ns.push(lat_ps as f64 / PS_PER_NS as f64);
+            queue_busy_ps += lat_ps;
+            total_bd.nand_ns += state.bd.nand_ns;
+            total_bd.bus_ns += state.bd.bus_ns;
+            total_bd.compute_ns += state.bd.compute_ns;
+            total_bd.sort_ns += state.bd.sort_ns;
+            total_bd.adt_ns += state.bd.adt_ns;
+            makespan_ps = makespan_ps.max(now);
+            if next_query < traces.len() {
+                *state = QueueState {
+                    query: next_query,
+                    op: 0,
+                    open_hot_page: None,
+                    start_ps: now,
+                    bd: Breakdown::default(),
+                };
+                next_query += 1;
+                heap.push(Reverse((now, qi)));
+            } else {
+                queues[qi] = None;
+            }
+            continue;
+        }
+
+        let op = trace.ops[state.op];
+        let done = match op {
+            TraceOp::FetchIndex { node, .. } | TraceOp::FetchHot { node, .. } => {
+                state.op += 1;
+                state.open_hot_page = mapping.is_hot(node).then_some(node);
+                let addr = mapping.index_addr(node);
+                let bits = if mapping.is_hot(node) {
+                    mapping.hot_frame_bits
+                } else {
+                    mapping.idx_frame_bits
+                };
+                serve_read(
+                    cfg, &mut res, &mut ctr, now, addr.core as usize, cores_per_tile,
+                    read_ps, same_page_ps, granule_bits, bits, state,
+                )
+            }
+            TraceOp::FetchPq { node, .. } => {
+                state.op += 1;
+                if state.open_hot_page.is_some() {
+                    // Served from the open hot page: same WL, one MUX step
+                    // (§IV-E "one WL setup" — the whole point of hot-node
+                    // repetition: no core round-trip per neighbor).
+                    ctr.same_page_reads += 1;
+                    state.bd.nand_ns += same_page_ps as f64 / PS_PER_NS as f64;
+                    now + same_page_ps
+                } else {
+                    // One outstanding request per queue (§IV-D: the queue
+                    // sends a request to the arbiter and waits; stalled if
+                    // the destination core is busy). Only the code's
+                    // granule moves from the coupled frame.
+                    let addr = mapping.pq_addr(node);
+                    serve_read(
+                        cfg, &mut res, &mut ctr, now, addr.core as usize, cores_per_tile,
+                        read_ps, same_page_ps, granule_bits,
+                        mapping.idx_frame_bits.min(granule_bits), state,
+                    )
+                }
+            }
+            TraceOp::FetchRaw { node, .. } => {
+                state.op += 1;
+                state.open_hot_page = None;
+                let addr = mapping.raw_addr(node);
+                serve_read(
+                    cfg, &mut res, &mut ctr, now, addr.core as usize, cores_per_tile,
+                    read_ps, same_page_ps, granule_bits, mapping.raw_frame_bits, state,
+                )
+            }
+            TraceOp::ComputePq { count } => {
+                state.op += 1;
+                state.open_hot_page = None;
+                let cycles = count as u64 * cfg.m as u64;
+                ctr.mac_ops += cycles;
+                let dt = cycles * cycle_ps;
+                state.bd.compute_ns += dt as f64 / PS_PER_NS as f64;
+                now + dt
+            }
+            TraceOp::ComputeExact { count } => {
+                state.op += 1;
+                state.open_hot_page = None;
+                let cycles = count as u64 * cfg.dim as u64;
+                ctr.mac_ops += cycles;
+                let dt = cycles * cycle_ps;
+                state.bd.compute_ns += dt as f64 / PS_PER_NS as f64;
+                now + dt
+            }
+            TraceOp::Sort { len } => {
+                state.op += 1;
+                state.open_hot_page = None;
+                let service = cfg.sorter.cycles(len as usize) * cycle_ps;
+                let start = now.max(res.sorter_free);
+                res.sorter_free = start + service;
+                state.bd.sort_ns += (start + service - now) as f64 / PS_PER_NS as f64;
+                start + service
+            }
+            TraceOp::BuildAdt => {
+                state.op += 1;
+                state.open_hot_page = None;
+                let start = now.max(res.adt_free);
+                res.adt_free = start + adt_service;
+                ctr.mac_ops += 256 * cfg.dim as u64;
+                // ADT gates admission: the query's service clock starts
+                // when the PQ module picks it up (§IV-B Step 1); the input
+                // queueing before that is arrival wait, not service.
+                if state.op == 1 {
+                    state.start_ps = start;
+                }
+                state.bd.adt_ns += adt_service as f64 / PS_PER_NS as f64;
+                start + adt_service
+            }
+        };
+        heap.push(Reverse((done, qi)));
+    }
+
+    let makespan_ns = makespan_ps as f64 / PS_PER_NS as f64;
+    let n_queries = traces.len();
+    let qps = if makespan_ns > 0.0 {
+        n_queries as f64 / (makespan_ns * 1e-9)
+    } else {
+        0.0
+    };
+    let core_busy: u64 = res.core_busy_ps.iter().sum();
+    let core_utilization = if makespan_ps > 0 {
+        core_busy as f64 / (makespan_ps as f64 * n_cores as f64)
+    } else {
+        0.0
+    };
+    let queue_utilization = if makespan_ps > 0 {
+        queue_busy_ps as f64 / (makespan_ps as f64 * n_queues as f64)
+    } else {
+        0.0
+    };
+    let queue_busy_ns = queue_busy_ps as f64 / PS_PER_NS as f64;
+    let energy_j = cfg.energy.total_j(
+        ctr.reads,
+        ctr.same_page_reads,
+        ctr.mac_ops,
+        queue_busy_ns,
+        makespan_ns,
+        cfg.n_queues,
+    );
+    let watts = energy_j / (makespan_ns * 1e-9).max(1e-12);
+    let mean_latency_ns = crate::util::mean(&latencies_ns);
+    let p99_latency_ns = crate::util::percentile(&latencies_ns, 99.0);
+    let nq = n_queries.max(1) as f64;
+    let breakdown = Breakdown {
+        nand_ns: total_bd.nand_ns / nq,
+        bus_ns: total_bd.bus_ns / nq,
+        compute_ns: total_bd.compute_ns / nq,
+        sort_ns: total_bd.sort_ns / nq,
+        adt_ns: total_bd.adt_ns / nq,
+    };
+
+    EngineResult {
+        n_queries,
+        makespan_ns,
+        mean_latency_ns,
+        p99_latency_ns,
+        qps,
+        energy_j,
+        qps_per_watt: qps / watts.max(1e-12),
+        core_utilization,
+        queue_utilization,
+        breakdown,
+        reads: ctr.reads,
+        same_page_reads: ctr.same_page_reads,
+        conflicts: ctr.conflicts,
+    }
+}
+
+/// Reserve the core + tile bus for one frame read of `frame_bits`
+/// (ceil(frame/granule) granules: first costs a full page read, the rest
+/// same-page MUX steps). Returns completion time.
+#[allow(clippy::too_many_arguments)]
+fn serve_read(
+    cfg: &EngineConfig,
+    res: &mut Resources,
+    ctr: &mut Counters,
+    now: u64,
+    core: usize,
+    cores_per_tile: usize,
+    read_ps: u64,
+    same_page_ps: u64,
+    granule_bits: u32,
+    frame_bits: u32,
+    state: &mut QueueState,
+) -> u64 {
+    let granules = frame_bits.div_ceil(granule_bits).max(1) as u64;
+    ctr.reads += 1;
+    ctr.same_page_reads += granules - 1;
+    let occupancy = read_ps + (granules - 1) * same_page_ps;
+    let start = now.max(res.core_free[core]);
+    if start > now {
+        ctr.conflicts += 1;
+    }
+    let read_done = start + occupancy;
+    res.core_free[core] = read_done;
+    res.core_busy_ps[core] += occupancy;
+    state.bd.nand_ns += (read_done - now) as f64 / PS_PER_NS as f64;
+    // H-tree transfer of the frame through the tile bus.
+    let tile = core / cores_per_tile;
+    let bytes = (frame_bits as f64 / 8.0).max(1.0);
+    let xfer_ps = (cfg.htree.transfer_ns(bytes) * PS_PER_NS as f64) as u64;
+    let bus_start = read_done.max(res.tile_free[tile]);
+    let done = bus_start + xfer_ps;
+    res.tile_free[tile] = done;
+    state.bd.bus_ns += (done - read_done) as f64 / PS_PER_NS as f64;
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::mapping::DataMapping;
+    use crate::nand::NandConfig;
+    use crate::search::{Trace, TraceOp};
+    use crate::util::rng::Xoshiro256pp;
+
+    fn cfg(n_queues: usize) -> EngineConfig {
+        let mut c = EngineConfig::paper(128, 32);
+        c.n_queues = n_queues;
+        c
+    }
+
+    fn mapping(n: u32, hot: f64) -> DataMapping {
+        DataMapping::new(&NandConfig::proxima(), n, 32, 26, 256, 128, 32, hot)
+    }
+
+    /// A synthetic trace resembling one Proxima query.
+    fn synth_trace(rng: &mut Xoshiro256pp, n_nodes: u32, hops: usize, r: usize) -> Trace {
+        let mut t = Trace::default();
+        t.push(TraceOp::BuildAdt);
+        for _ in 0..hops {
+            let v = rng.gen_range(n_nodes as usize) as u32;
+            t.push(TraceOp::FetchIndex { node: v, bits: 832 });
+            for _ in 0..r {
+                let nb = rng.gen_range(n_nodes as usize) as u32;
+                t.push(TraceOp::FetchPq { node: nb, bits: 256 });
+            }
+            t.push(TraceOp::ComputePq { count: r as u32 });
+            t.push(TraceOp::Sort { len: 100 });
+        }
+        for _ in 0..10 {
+            let v = rng.gen_range(n_nodes as usize) as u32;
+            t.push(TraceOp::FetchRaw { node: v, bits: 4096 });
+        }
+        t.push(TraceOp::ComputeExact { count: 10 });
+        t.push(TraceOp::Sort { len: 10 });
+        t
+    }
+
+    fn traces(n: usize, n_nodes: u32, seed: u64) -> Vec<Trace> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| synth_trace(&mut rng, n_nodes, 20, 16)).collect()
+    }
+
+    #[test]
+    fn conserves_queries_and_orders_time() {
+        let c = cfg(8);
+        let m = mapping(100_000, 0.0);
+        let r = simulate(&c, &m, &traces(40, 100_000, 1));
+        assert_eq!(r.n_queries, 40);
+        assert!(r.makespan_ns > 0.0);
+        assert!(r.mean_latency_ns <= r.makespan_ns);
+        assert!(r.p99_latency_ns >= r.mean_latency_ns * 0.5);
+        assert!(r.qps > 0.0);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn more_queues_more_throughput() {
+        let m = mapping(100_000, 0.0);
+        let ts = traces(400, 100_000, 2);
+        let q4 = simulate(&cfg(4), &m, &ts);
+        let q64 = simulate(&cfg(64), &m, &ts);
+        assert!(q64.qps > 2.0 * q4.qps, "q4={} q64={}", q4.qps, q64.qps);
+        assert!(q64.core_utilization > q4.core_utilization);
+    }
+
+    #[test]
+    fn hot_nodes_cut_latency_under_contention() {
+        // The hot-node benefit is strongest under load: a cold hop makes
+        // R core round-trips that contend with every other queue, a hot
+        // hop makes one. Use many queues over few nodes to load the cores.
+        let m_cold = mapping(2048, 0.0);
+        let m_hot = mapping(2048, 1.0); // everything hot
+        let ts = traces(256, 2048, 3);
+        let cold = simulate(&cfg(128), &m_cold, &ts);
+        let hot = simulate(&cfg(128), &m_hot, &ts);
+        assert!(
+            hot.mean_latency_ns < cold.mean_latency_ns,
+            "hot {} vs cold {}",
+            hot.mean_latency_ns,
+            cold.mean_latency_ns
+        );
+        assert!(hot.same_page_reads > cold.same_page_reads);
+        // Far fewer full page reads (energy win).
+        assert!(hot.reads < cold.reads / 2);
+    }
+
+    #[test]
+    fn single_queue_serializes() {
+        let m = mapping(10_000, 0.0);
+        let ts = traces(10, 10_000, 4);
+        let r = simulate(&cfg(1), &m, &ts);
+        let sum: f64 = r.mean_latency_ns * r.n_queries as f64;
+        assert!((r.makespan_ns - sum).abs() / sum < 0.05);
+    }
+
+    #[test]
+    fn raw_frames_cost_multiple_granules() {
+        // One query of pure raw fetches vs pure pq fetches: raw (4096 b
+        // frames = 4 granules) must take longer and count same-page reads.
+        let m = mapping(10_000, 0.0);
+        let mut t_raw = Trace::default();
+        let mut t_pq = Trace::default();
+        for i in 0..50u32 {
+            t_raw.push(TraceOp::FetchRaw { node: i * 7, bits: 4096 });
+            t_raw.push(TraceOp::ComputeExact { count: 1 });
+            t_pq.push(TraceOp::FetchPq { node: i * 7, bits: 256 });
+            t_pq.push(TraceOp::ComputePq { count: 1 });
+        }
+        let raw = simulate(&cfg(1), &m, &[t_raw]);
+        let pq = simulate(&cfg(1), &m, &[t_pq]);
+        assert!(raw.same_page_reads > 0);
+        assert!(raw.makespan_ns > pq.makespan_ns);
+    }
+
+    #[test]
+    fn fetches_serialize_per_queue() {
+        // One outstanding request per queue (§IV-D): 32 pq fetches take
+        // at least 32 page-read times for a single queue.
+        let m = mapping(100_000, 0.0);
+        let mut t = Trace::default();
+        for i in 0..32u32 {
+            t.push(TraceOp::FetchPq { node: i, bits: 256 });
+        }
+        let r = simulate(&cfg(1), &m, &[t]);
+        let read_ns = EngineConfig::paper(128, 32)
+            .timing
+            .read_latency_ns(&NandConfig::proxima());
+        assert!(
+            r.makespan_ns >= 32.0 * read_ns,
+            "took {} ns vs floor {}",
+            r.makespan_ns,
+            32.0 * read_ns
+        );
+        // ...while two queues overlap their requests on distinct cores.
+        let t2: Vec<Trace> = (0..2)
+            .map(|k| {
+                let mut t = Trace::default();
+                for i in 0..32u32 {
+                    t.push(TraceOp::FetchPq { node: i * 2 + k, bits: 256 });
+                }
+                t
+            })
+            .collect();
+        let r2 = simulate(&cfg(2), &m, &t2);
+        assert!(r2.makespan_ns < 1.5 * r.makespan_ns);
+    }
+
+    #[test]
+    fn adt_module_caps_admission() {
+        // Many trivial queries: throughput approaches the ADT service
+        // bound (1 / (24*D cycles)).
+        let m = mapping(1000, 0.0);
+        let ts: Vec<Trace> = (0..400)
+            .map(|i| {
+                let mut t = Trace::default();
+                t.push(TraceOp::BuildAdt);
+                t.push(TraceOp::FetchIndex { node: i % 1000, bits: 832 });
+                t
+            })
+            .collect();
+        let r = simulate(&cfg(256), &m, &ts);
+        let adt_ns = 24.0 * 128.0; // service at 1 GHz
+        let cap_qps = 1e9 / adt_ns;
+        assert!(r.qps <= cap_qps * 1.05, "qps {} vs cap {cap_qps}", r.qps);
+        assert!(r.qps > cap_qps * 0.5, "qps {} vs cap {cap_qps}", r.qps);
+    }
+
+    #[test]
+    fn conflicts_rise_with_contention() {
+        let m = mapping(64, 0.0);
+        let ts = traces(100, 64, 6);
+        let many = simulate(&cfg(128), &m, &ts);
+        let few = simulate(&cfg(2), &m, &ts);
+        assert!(many.conflicts > few.conflicts);
+    }
+
+    #[test]
+    fn empty_and_zero_traces() {
+        let m = mapping(100, 0.0);
+        let r = simulate(&cfg(4), &m, &[]);
+        assert_eq!(r.n_queries, 0);
+        let r = simulate(&cfg(4), &m, &[Trace::default()]);
+        assert_eq!(r.n_queries, 1);
+    }
+}

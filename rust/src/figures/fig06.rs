@@ -1,0 +1,152 @@
+//! Fig 6: (a) search-convergence trend — fraction of queries whose true
+//! top-k is already found at working-list size T; (b) memory-traffic
+//! breakdown vs graph degree R.
+
+use super::Workbench;
+use crate::config::GraphParams;
+use crate::dataset::recall_at_k;
+use crate::graph::vamana;
+use crate::search::beam::pq_beam_search;
+use crate::util::bench::Table;
+
+/// Convergence ratio at each T (fraction of queries with recall == 1).
+pub fn convergence(w: &Workbench, k: usize, t_sweep: &[usize]) -> Vec<(usize, f64)> {
+    let ctx = w.context();
+    t_sweep
+        .iter()
+        .map(|&t| {
+            let mut converged = 0usize;
+            for q in 0..w.ds.n_queries() {
+                let adt = w.codebook.build_adt(w.ds.queries.row(q));
+                let out = pq_beam_search(&ctx, &adt, w.ds.queries.row(q), k, t, t, false);
+                if recall_at_k(&out.ids, w.gt.row(q), k) >= 1.0 {
+                    converged += 1;
+                }
+            }
+            (t, converged as f64 / w.ds.n_queries() as f64)
+        })
+        .collect()
+}
+
+/// Traffic split (index vs PQ vs raw bytes per query) as R varies.
+pub fn traffic_vs_degree(name: &str, scale: f64, r_sweep: &[usize]) -> Vec<(usize, f64, f64, f64)> {
+    let mut rows = Vec::new();
+    for &r in r_sweep {
+        let spec = crate::dataset::synth::SynthSpec::by_name(name, scale).unwrap();
+        let ds = spec.generate();
+        let gp = GraphParams {
+            r,
+            ..Default::default()
+        };
+        let graph = vamana::build(&ds.base, ds.metric, &gp);
+        let pqp = crate::config::PqParams::for_dim(ds.dim());
+        let cb = crate::pq::PqCodebook::train(
+            &ds.base, ds.metric, pqp.m, pqp.c, pqp.train_sample, 8, 1,
+        );
+        let codes = cb.encode(&ds.base);
+        let ctx = crate::search::beam::SearchContext {
+            base: &ds.base,
+            metric: ds.metric,
+            graph: &graph,
+            codes: Some(&codes),
+            gap: None,
+        };
+        // Traversal traffic (the quantity Fig 6b varies with R): a
+        // PQ-guided beam search with a fixed top-2k rerank, so the rerank
+        // tail does not swamp the degree effect on small test corpora.
+        let mut idx = 0u64;
+        let mut pqb = 0u64;
+        let mut raw = 0u64;
+        for q in 0..ds.n_queries().min(100) {
+            let adt = cb.build_adt(ds.queries.row(q));
+            let out = crate::search::beam::pq_beam_search(
+                &ctx,
+                &adt,
+                ds.queries.row(q),
+                10,
+                100,
+                20,
+                false,
+            );
+            idx += out.stats.bytes_index;
+            pqb += out.stats.bytes_pq;
+            raw += out.stats.bytes_raw;
+        }
+        let total = (idx + pqb + raw) as f64;
+        rows.push((
+            r,
+            idx as f64 / total,
+            pqb as f64 / total,
+            raw as f64 / total,
+        ));
+    }
+    rows
+}
+
+pub fn run(datasets: &[&str], scale: f64) -> Vec<Table> {
+    let mut t_conv = Table::new(
+        "Fig 6a: convergence ratio vs working list size T",
+        &["dataset", "T", "converged"],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, 10);
+        for (t, c) in convergence(&w, 10, &[10, 20, 40, 80, 150]) {
+            t_conv.row(vec![
+                w.ds.name.clone(),
+                t.to_string(),
+                format!("{c:.3}"),
+            ]);
+        }
+    }
+    let mut t_traffic = Table::new(
+        "Fig 6b: memory traffic share vs degree R (Proxima, no gap enc.)",
+        &["R", "index", "pq", "raw"],
+    );
+    for (r, i, p, w) in traffic_vs_degree(datasets[0], scale, &[16, 32, 64]) {
+        t_traffic.row(vec![
+            r.to_string(),
+            format!("{i:.2}"),
+            format!("{p:.2}"),
+            format!("{w:.2}"),
+        ]);
+    }
+    vec![t_conv, t_traffic]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn convergence_monotone_nondecreasing() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let c = convergence(&w, 10, &[10, 40, 150]);
+        assert!(c[1].1 >= c[0].1 - 0.05, "{c:?}");
+        assert!(c[2].1 >= c[1].1 - 0.05, "{c:?}");
+        // Rapid rise at small T (paper Fig 6a): most queries converge
+        // well before T = L.
+        assert!(c[2].1 > 0.5, "{c:?}");
+    }
+
+    #[test]
+    fn index_traffic_dominates_at_high_degree() {
+        // Paper Fig 6b: fetching "NN indices" accounts for 80-90% of
+        // traffic. In the §IV-E layout the neighbor PQ codes are stored
+        // coupled with the index rows ("PQ codes and graph indices are
+        // stored together"), so the index-side share is idx+pq vs raw.
+        let rows = traffic_vs_degree("sift-s", 0.012, &[16, 64]);
+        let (_, idx16, pq16, _) = rows[0];
+        let (_, idx64, pq64, _) = rows[1];
+        assert!(
+            idx64 + pq64 > idx16 + pq16 - 0.05,
+            "share should grow with R: {rows:?}"
+        );
+        assert!(
+            idx64 + pq64 > 0.6,
+            "index-side share at R=64: {}",
+            idx64 + pq64
+        );
+        // And the raw-index split itself grows with R.
+        assert!(idx64 > idx16, "{rows:?}");
+    }
+}

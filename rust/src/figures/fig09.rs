@@ -1,0 +1,102 @@
+//! Fig 9: density / area / read-latency trade-offs for 96-layer 3D NAND
+//! as the array geometry (page size, blocks) varies — the design-space
+//! sweep that motivates the custom Proxima core (§IV-C).
+
+use crate::nand::area::AreaModel;
+use crate::nand::timing::TimingModel;
+use crate::nand::NandConfig;
+use crate::util::bench::Table;
+
+/// One design point.
+pub struct DesignPoint {
+    pub n_bl: u32,
+    pub n_block: u32,
+    pub mux: u32,
+    pub read_ns: f64,
+    pub density_gb_mm2: f64,
+    pub core_mm2: f64,
+    pub granularity_b: u64,
+}
+
+/// Sweep page width and block count around the Proxima design point.
+pub fn sweep() -> Vec<DesignPoint> {
+    let timing = TimingModel::default();
+    let area = AreaModel::default();
+    let mut out = Vec::new();
+    for &n_bl in &[9216u32, 18432, 36864, 73728, 147456] {
+        for &n_block in &[32u32, 64, 256, 1024] {
+            let mut cfg = NandConfig::proxima();
+            cfg.n_bl = n_bl;
+            cfg.n_block = n_block;
+            out.push(DesignPoint {
+                n_bl,
+                n_block,
+                mux: cfg.mux,
+                read_ns: timing.read_latency_ns(&cfg),
+                density_gb_mm2: area.density_gb_per_mm2(&cfg),
+                core_mm2: area.core_mm2(&cfg),
+                granularity_b: cfg.granularity_bytes(),
+            });
+        }
+    }
+    out
+}
+
+pub fn run() -> Table {
+    let mut table = Table::new(
+        "Fig 9: 96-layer 3D NAND density/area/latency trade-off",
+        &[
+            "N_BL",
+            "N_block",
+            "read (ns)",
+            "density (Gb/mm2)",
+            "core (mm2)",
+            "granule (B)",
+        ],
+    );
+    for p in sweep() {
+        table.row(vec![
+            p.n_bl.to_string(),
+            p.n_block.to_string(),
+            Table::fmt(p.read_ns),
+            format!("{:.2}", p.density_gb_mm2),
+            format!("{:.3}", p.core_mm2),
+            p.granularity_b.to_string(),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_arrays_are_denser_but_slower() {
+        let pts = sweep();
+        let small = pts
+            .iter()
+            .find(|p| p.n_bl == 9216 && p.n_block == 32)
+            .unwrap();
+        let large = pts
+            .iter()
+            .find(|p| p.n_bl == 147456 && p.n_block == 1024)
+            .unwrap();
+        assert!(large.read_ns > 10.0 * small.read_ns);
+        assert!(large.density_gb_mm2 > small.density_gb_mm2);
+    }
+
+    #[test]
+    fn proxima_point_balances() {
+        // The chosen config: sub-300ns and density within 2x of the
+        // densest corner (Fig 9's "working as design guidance").
+        let pts = sweep();
+        let chosen = pts
+            .iter()
+            .find(|p| p.n_bl == 36864 && p.n_block == 64)
+            .unwrap();
+        let max_density = pts.iter().map(|p| p.density_gb_mm2).fold(0.0, f64::max);
+        assert!(chosen.read_ns < 300.0);
+        assert!(chosen.density_gb_mm2 > max_density / 2.0);
+    }
+}

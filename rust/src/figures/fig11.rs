@@ -1,0 +1,189 @@
+//! Fig 11: throughput (QPS) vs recall for Proxima vs HNSW vs DiskANN-PQ
+//! vs FAISS-IVF on the six Table I datasets.
+//!
+//! Expected shape: graph methods dominate IVF at high recall; Proxima
+//! tracks or beats DiskANN-PQ recall at matched throughput (up to ~10%
+//! better at the low-recall end on 1M-scale sets).
+
+use super::Workbench;
+use crate::config::SearchParams;
+use crate::dataset::mean_recall;
+use crate::search::beam::{accurate_beam_search, pq_beam_search};
+use crate::search::ivf::IvfPq;
+use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::search::SearchStats;
+use crate::util::bench::Table;
+use std::time::Instant;
+
+/// One measured operating point.
+#[derive(Clone, Debug)]
+pub struct OpPoint {
+    pub algo: &'static str,
+    pub dataset: String,
+    pub knob: usize,
+    pub recall: f64,
+    pub qps: f64,
+    pub stats: SearchStats,
+}
+
+/// Run every query through `f`, measuring recall@k and native QPS.
+pub fn measure<F>(w: &Workbench, k: usize, mut f: F) -> (f64, f64, SearchStats)
+where
+    F: FnMut(&[f32]) -> crate::search::SearchOutput,
+{
+    let t0 = Instant::now();
+    let mut results = Vec::with_capacity(w.ds.n_queries());
+    let mut stats = SearchStats::default();
+    for q in 0..w.ds.n_queries() {
+        let out = f(w.ds.queries.row(q));
+        stats.add(&out.stats);
+        results.push(out.ids);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let recall = mean_recall(&results, &w.gt, k);
+    (recall, w.ds.n_queries() as f64 / secs, stats)
+}
+
+/// Sweep the three graph algorithms + IVF over their accuracy knobs.
+pub fn sweep(w: &Workbench, k: usize, l_sweep: &[usize]) -> Vec<OpPoint> {
+    let mut points = Vec::new();
+    let ctx = w.context();
+
+    for &l in l_sweep {
+        // HNSW-like: accurate distances on the flat graph.
+        let (recall, qps, stats) = measure(w, k, |q| accurate_beam_search(&ctx, q, k, l, false));
+        points.push(OpPoint {
+            algo: "HNSW",
+            dataset: w.ds.name.clone(),
+            knob: l,
+            recall,
+            qps,
+            stats,
+        });
+
+        // DiskANN-PQ: PQ traversal + top-L/3 rerank.
+        let (recall, qps, stats) = measure(w, k, |q| {
+            let adt = w.codebook.build_adt(q);
+            pq_beam_search(&ctx, &adt, q, k, l, (l / 3).max(k), false)
+        });
+        points.push(OpPoint {
+            algo: "DiskANN-PQ",
+            dataset: w.ds.name.clone(),
+            knob: l,
+            recall,
+            qps,
+            stats,
+        });
+
+        // Proxima (Algorithm 1).
+        let params = SearchParams {
+            l,
+            k,
+            ..Default::default()
+        };
+        let (recall, qps, stats) = measure(w, k, |q| {
+            let adt = w.codebook.build_adt(q);
+            proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false)
+        });
+        points.push(OpPoint {
+            algo: "Proxima",
+            dataset: w.ds.name.clone(),
+            knob: l,
+            recall,
+            qps,
+            stats,
+        });
+    }
+
+    // FAISS-IVF baseline: nprobe sweep.
+    let nlist = (w.ds.n_base() as f64).sqrt() as usize;
+    let ivf = IvfPq::build(
+        &w.ds.base,
+        w.ds.metric,
+        nlist.clamp(8, 4096),
+        w.codebook.m,
+        w.codebook.c,
+        7,
+    );
+    for nprobe in [1usize, 2, 4, 8, 16, 32] {
+        if nprobe > ivf.nlist {
+            break;
+        }
+        let (recall, qps, stats) = measure(w, k, |q| {
+            ivf.search(&w.ds.base, q, k, nprobe, 4 * k)
+        });
+        points.push(OpPoint {
+            algo: "FAISS-IVF",
+            dataset: w.ds.name.clone(),
+            knob: nprobe,
+            recall,
+            qps,
+            stats,
+        });
+    }
+    points
+}
+
+/// Generate the figure across datasets; returns the table.
+pub fn run(datasets: &[&str], scale: f64) -> Table {
+    let k = 10;
+    let mut table = Table::new(
+        "Fig 11: QPS vs recall (native software, this machine)",
+        &["dataset", "algo", "knob", "recall@10", "QPS"],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, k);
+        for p in sweep(&w, k, &[20, 50, 100, 150]) {
+            table.row(vec![
+                p.dataset.clone(),
+                p.algo.to_string(),
+                p.knob.to_string(),
+                format!("{:.4}", p.recall),
+                Table::fmt(p.qps),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_shape_holds_on_tiny_scale() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let points = sweep(&w, 10, &[50, 100]);
+        // Graph methods reach high recall.
+        let best_graph = points
+            .iter()
+            .filter(|p| p.algo == "Proxima")
+            .map(|p| p.recall)
+            .fold(0.0, f64::max);
+        assert!(best_graph > 0.85, "proxima best recall {best_graph}");
+        // Proxima >= DiskANN-PQ recall at matched L (the β-rerank gain).
+        for l in [50usize, 100] {
+            let prox = points
+                .iter()
+                .find(|p| p.algo == "Proxima" && p.knob == l)
+                .unwrap();
+            let dpq = points
+                .iter()
+                .find(|p| p.algo == "DiskANN-PQ" && p.knob == l)
+                .unwrap();
+            assert!(
+                prox.recall >= dpq.recall - 0.03,
+                "L={l}: proxima {} vs diskann {}",
+                prox.recall,
+                dpq.recall
+            );
+        }
+        // IVF exists and saturates below the graph methods' best.
+        let best_ivf = points
+            .iter()
+            .filter(|p| p.algo == "FAISS-IVF")
+            .map(|p| p.recall)
+            .fold(0.0, f64::max);
+        assert!(best_ivf < 1.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Fig 12: throughput and energy efficiency — CPU (HNSW) vs GPU (GGNN) vs
+//! ANNA (IVF-PQ ASIC) vs Proxima (this accelerator, DES-simulated).
+//!
+//! Expected shape: Proxima highest QPS, GGNN second; Proxima 6.6–13× over
+//! ANNA; energy efficiency ≈3 orders over CPU, ≥17× over ANNA.
+
+use super::{collect_traces, default_mapping, per_query, Algo, Workbench};
+use crate::accel::models::{AnnaModel, CpuModel, GpuModel};
+use crate::engine::{sim, EngineConfig};
+use crate::search::ivf::IvfPq;
+use crate::util::bench::Table;
+
+pub struct PlatformRow {
+    pub platform: &'static str,
+    pub qps: f64,
+    pub qps_per_watt: f64,
+}
+
+/// Evaluate all four platforms on one dataset.
+pub fn compare(w: &Workbench, l: usize) -> Vec<PlatformRow> {
+    let k = 10;
+    // Software stats feed the analytic baselines.
+    let (_tr_hnsw, s_hnsw) = collect_traces(w, Algo::Hnsw, l, k);
+    let hnsw_pq = per_query(&s_hnsw, w.ds.n_queries());
+    let cpu = CpuModel::default().perf(&hnsw_pq, w.ds.dim());
+    let gpu = GpuModel::default().perf(&hnsw_pq);
+
+    // ANNA runs IVF-PQ.
+    let ivf = IvfPq::build(
+        &w.ds.base,
+        w.ds.metric,
+        (w.ds.n_base() as f64).sqrt() as usize,
+        w.codebook.m,
+        w.codebook.c,
+        3,
+    );
+    let mut ivf_stats = crate::search::SearchStats::default();
+    for qi in 0..w.ds.n_queries() {
+        let out = ivf.search(&w.ds.base, w.ds.queries.row(qi), k, 8, 4 * k);
+        ivf_stats.add(&out.stats);
+    }
+    let anna = AnnaModel::default().perf(&per_query(&ivf_stats, w.ds.n_queries()));
+
+    // Proxima on the DES.
+    let (traces, _s) = collect_traces(w, Algo::Proxima, l, k);
+    let mapping = default_mapping(w, 0.03);
+    let cfg = EngineConfig::paper(w.ds.dim(), w.codebook.m);
+    let r = sim::simulate(&cfg, &mapping, &traces);
+
+    vec![
+        PlatformRow {
+            platform: "CPU(HNSW)",
+            qps: cpu.qps,
+            qps_per_watt: cpu.qps_per_watt(),
+        },
+        PlatformRow {
+            platform: "GPU(GGNN)",
+            qps: gpu.qps,
+            qps_per_watt: gpu.qps_per_watt(),
+        },
+        PlatformRow {
+            platform: "ANNA",
+            qps: anna.qps,
+            qps_per_watt: anna.qps_per_watt(),
+        },
+        PlatformRow {
+            platform: "Proxima",
+            qps: r.qps,
+            qps_per_watt: r.qps_per_watt,
+        },
+    ]
+}
+
+pub fn run(datasets: &[&str], scale: f64) -> Table {
+    let mut table = Table::new(
+        "Fig 12: throughput + energy efficiency across platforms",
+        &["dataset", "platform", "QPS", "QPS/W"],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, 10);
+        for row in compare(&w, 100) {
+            table.row(vec![
+                w.ds.name.clone(),
+                row.platform.to_string(),
+                Table::fmt(row.qps),
+                Table::fmt(row.qps_per_watt),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_ordering_holds() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = compare(&w, 100);
+        let get = |p: &str| rows.iter().find(|r| r.platform == p).unwrap();
+        let (cpu, gpu, anna, prox) = (
+            get("CPU(HNSW)"),
+            get("GPU(GGNN)"),
+            get("ANNA"),
+            get("Proxima"),
+        );
+        // Paper ordering: Proxima > GGNN > CPU in QPS. (The 6.6-13x gap
+        // over ANNA needs paper-scale IVF scan traffic — ANNA's scan over
+        // a few thousand points is unrealistically cheap at quick scale,
+        // so that ratio is asserted in the full-scale bench record, not
+        // here.)
+        assert!(prox.qps > gpu.qps, "prox {} vs gpu {}", prox.qps, gpu.qps);
+        assert!(gpu.qps > cpu.qps, "gpu {} vs cpu {}", gpu.qps, cpu.qps);
+        // Energy efficiency: orders of magnitude over CPU, above GPU too.
+        assert!(
+            prox.qps_per_watt > 50.0 * cpu.qps_per_watt,
+            "prox {} vs cpu {} QPS/W",
+            prox.qps_per_watt,
+            cpu.qps_per_watt
+        );
+        assert!(prox.qps_per_watt > gpu.qps_per_watt);
+        let _ = anna;
+    }
+}

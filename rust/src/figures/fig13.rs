@@ -1,0 +1,152 @@
+//! Fig 13: different graph-ANNS algorithms running **on the Proxima
+//! accelerator** — HNSW, DiskANN-PQ, Proxima(G,E) and Proxima(G,E,H) —
+//! showing the contribution of each software optimization on the same
+//! hardware (plus ~2× QPS / ~3× latency from hot-node repetition).
+
+use super::{collect_traces, default_mapping, Algo, Workbench};
+use crate::config::SearchParams;
+use crate::engine::{sim, EngineConfig};
+use crate::reorder::{ReorderedIndex, VisitProfile};
+use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::util::bench::Table;
+
+pub struct AlgoRow {
+    pub algo: &'static str,
+    pub qps: f64,
+    pub qps_per_watt: f64,
+    pub latency_us: f64,
+}
+
+/// Collect Proxima traces on a frequency-reordered index with `hot_frac`
+/// hot nodes (node ids in the traces are in the reordered space, which is
+/// what the mapping's `is_hot` checks).
+pub fn proxima_hot_traces(
+    w: &Workbench,
+    l: usize,
+    k: usize,
+    hot_frac: f64,
+) -> Vec<crate::search::Trace> {
+    let params = SearchParams {
+        l,
+        k,
+        ..Default::default()
+    };
+    let profile = VisitProfile::measure(
+        &w.ds.base,
+        &w.graph,
+        &w.codebook,
+        &w.codes,
+        &params,
+        (w.ds.n_base() / 20).clamp(16, 200),
+        0xF15,
+    );
+    let re = ReorderedIndex::build(&w.graph, &w.codes, &profile, hot_frac);
+    // Permuted base for searching in the new id space.
+    let mut base2 = crate::dataset::VectorSet::zeros(w.ds.n_base(), w.ds.dim());
+    for old in 0..w.ds.n_base() {
+        base2
+            .row_mut(re.perm[old] as usize)
+            .copy_from_slice(w.ds.base.row(old));
+    }
+    let gap = crate::gap::GapGraph::encode(&re.graph.to_lists());
+    let ctx = crate::search::beam::SearchContext {
+        base: &base2,
+        metric: w.ds.metric,
+        graph: &re.graph,
+        codes: Some(&re.codes),
+        gap: Some(&gap),
+    };
+    let mut traces = Vec::with_capacity(w.ds.n_queries());
+    for qi in 0..w.ds.n_queries() {
+        let q = w.ds.queries.row(qi);
+        let adt = w.codebook.build_adt(q);
+        let out = proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), true);
+        traces.push(out.trace.unwrap());
+    }
+    traces
+}
+
+/// Run the four algorithm variants through the DES.
+pub fn compare(w: &Workbench, l: usize) -> Vec<AlgoRow> {
+    let k = 10;
+    let cfg = EngineConfig::paper(w.ds.dim(), w.codebook.m);
+    let mapping_cold = default_mapping(w, 0.0);
+    let mut rows = Vec::new();
+    for (name, algo) in [
+        ("HNSW", Algo::Hnsw),
+        ("DiskANN-PQ", Algo::DiskannPq),
+        ("Proxima(G,E)", Algo::Proxima),
+    ] {
+        let (traces, _) = collect_traces(w, algo, l, k);
+        let r = sim::simulate(&cfg, &mapping_cold, &traces);
+        rows.push(AlgoRow {
+            algo: name,
+            qps: r.qps,
+            qps_per_watt: r.qps_per_watt,
+            latency_us: r.mean_latency_ns / 1000.0,
+        });
+    }
+    // Proxima with hot nodes on the reordered mapping.
+    let traces = proxima_hot_traces(w, l, k, 0.03);
+    let mapping_hot = default_mapping(w, 0.03);
+    let r = sim::simulate(&cfg, &mapping_hot, &traces);
+    rows.push(AlgoRow {
+        algo: "Proxima(G,E,H)",
+        qps: r.qps,
+        qps_per_watt: r.qps_per_watt,
+        latency_us: r.mean_latency_ns / 1000.0,
+    });
+    rows
+}
+
+pub fn run(datasets: &[&str], scale: f64) -> Table {
+    let mut table = Table::new(
+        "Fig 13: graph algorithms on the Proxima NSP accelerator",
+        &["dataset", "algo", "QPS", "QPS/W", "latency (us)"],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, 10);
+        for row in compare(&w, 100) {
+            table.row(vec![
+                w.ds.name.clone(),
+                row.algo.to_string(),
+                Table::fmt(row.qps),
+                Table::fmt(row.qps_per_watt),
+                Table::fmt(row.latency_us),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_ordering_holds() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = compare(&w, 100);
+        let get = |a: &str| rows.iter().find(|r| r.algo == a).unwrap();
+        // HNSW (accurate distances -> multi-granule raw fetches + D-cycle
+        // MACs everywhere) has the worst per-query service latency.
+        let hnsw = get("HNSW");
+        let prox = get("Proxima(G,E)");
+        assert!(
+            prox.latency_us < hnsw.latency_us,
+            "proxima {} vs hnsw {} us",
+            prox.latency_us,
+            hnsw.latency_us
+        );
+        // Hot nodes speed Proxima up further (paper: ~2x QPS, ~3x latency;
+        // the QPS gap over HNSW needs paper-scale workloads where the ADT
+        // module is amortized — recorded by the full-scale bench).
+        let hot = get("Proxima(G,E,H)");
+        assert!(
+            hot.latency_us < prox.latency_us,
+            "hot {} vs cold {} us",
+            hot.latency_us,
+            prox.latency_us
+        );
+    }
+}

@@ -1,0 +1,85 @@
+//! Fig 15: runtime breakdown vs hot-node percentage (0–7%). Expected:
+//! data access dominates (~80%) without hot nodes; ~2.2× latency cut at
+//! 1%, ~3× at 3%, plateau beyond.
+
+use super::{default_mapping, fig13::proxima_hot_traces, Workbench};
+use crate::engine::{sim, EngineConfig, EngineResult};
+use crate::util::bench::Table;
+
+pub fn sweep(w: &Workbench, l: usize, hots: &[f64]) -> Vec<(f64, EngineResult)> {
+    let cfg = EngineConfig::paper(w.ds.dim(), w.codebook.m);
+    hots.iter()
+        .map(|&h| {
+            let traces = proxima_hot_traces(w, l, 10, h);
+            let mapping = default_mapping(w, h);
+            (h, sim::simulate(&cfg, &mapping, &traces))
+        })
+        .collect()
+}
+
+pub fn run(datasets: &[&str], scale: f64) -> Table {
+    let mut table = Table::new(
+        "Fig 15: runtime breakdown vs hot-node percentage",
+        &[
+            "dataset",
+            "hot%",
+            "latency(us)",
+            "nand",
+            "bus",
+            "compute",
+            "sort",
+            "adt",
+            "speedup",
+        ],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, 10);
+        let rows = sweep(&w, 100, &[0.0, 0.01, 0.03, 0.05, 0.07]);
+        let base_lat = rows[0].1.mean_latency_ns;
+        for (h, r) in &rows {
+            let b = &r.breakdown;
+            let total = b.total().max(1e-9);
+            table.row(vec![
+                w.ds.name.clone(),
+                format!("{:.0}%", h * 100.0),
+                Table::fmt(r.mean_latency_ns / 1000.0),
+                format!("{:.2}", b.nand_ns / total),
+                format!("{:.2}", b.bus_ns / total),
+                format!("{:.2}", b.compute_ns / total),
+                format!("{:.2}", b.sort_ns / total),
+                format!("{:.2}", b.adt_ns / total),
+                format!("{:.2}x", base_lat / r.mean_latency_ns),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_nodes_reduce_latency_then_plateau() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = sweep(&w, 60, &[0.0, 0.03, 0.07]);
+        let l0 = rows[0].1.mean_latency_ns;
+        let l3 = rows[1].1.mean_latency_ns;
+        let l7 = rows[2].1.mean_latency_ns;
+        assert!(l3 < l0, "3% hot: {l3} vs 0%: {l0}");
+        // Plateau: going 3% -> 7% gains much less than 0% -> 3%.
+        let gain_03 = l0 / l3;
+        let gain_37 = l3 / l7.max(1.0);
+        assert!(gain_03 > gain_37 * 0.8, "gains {gain_03} then {gain_37}");
+    }
+
+    #[test]
+    fn data_access_dominates_without_hot_nodes() {
+        // Paper: NAND + H-tree ≈ 80% of latency at 0% hot nodes.
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let rows = sweep(&w, 60, &[0.0]);
+        let b = &rows[0].1.breakdown;
+        let share = (b.nand_ns + b.bus_ns) / b.total();
+        assert!(share > 0.5, "data-access share {share}");
+    }
+}

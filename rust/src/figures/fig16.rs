@@ -1,0 +1,91 @@
+//! Fig 16: queue-size sensitivity on 100M-class datasets (no hot nodes):
+//! N_q 32→256 should buy ~3.8× QPS, raise core utilization from ~18% to
+//! ~68%, and cost ~20% energy efficiency.
+
+use super::{collect_traces, default_mapping, Algo, Workbench};
+use crate::engine::{sim, EngineConfig, EngineResult};
+use crate::util::bench::Table;
+
+pub fn sweep(w: &Workbench, l: usize, queue_sizes: &[usize]) -> Vec<(usize, EngineResult)> {
+    let (traces, _) = collect_traces(w, Algo::Proxima, l, 10);
+    let mapping = default_mapping(w, 0.0);
+    queue_sizes
+        .iter()
+        .map(|&nq| {
+            let mut cfg = EngineConfig::paper(w.ds.dim(), w.codebook.m);
+            cfg.n_queues = nq;
+            (nq, sim::simulate(&cfg, &mapping, &traces))
+        })
+        .collect()
+}
+
+pub fn run(datasets: &[&str], scale: f64) -> Table {
+    let mut table = Table::new(
+        "Fig 16: queue-size sweep (normalized to N_q=32)",
+        &[
+            "dataset",
+            "N_q",
+            "QPS",
+            "norm QPS",
+            "QPS/W",
+            "norm QPS/W",
+            "core util",
+        ],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, 10);
+        let rows = sweep(&w, 100, &[32, 64, 128, 256]);
+        let (q0, e0) = (rows[0].1.qps, rows[0].1.qps_per_watt);
+        for (nq, r) in &rows {
+            table.row(vec![
+                w.ds.name.clone(),
+                nq.to_string(),
+                Table::fmt(r.qps),
+                format!("{:.2}", r.qps / q0),
+                Table::fmt(r.qps_per_watt),
+                format!("{:.2}", r.qps_per_watt / e0),
+                format!("{:.1}%", r.core_utilization * 100.0),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_scaling_shape() {
+        // Quick-scale traces are light (tens of µs/query), so 32 queues
+        // already push against the shared ADT module — exactly the
+        // saturation the paper reports *at* 256 queues on ms-scale 100M
+        // workloads. The scaling law is therefore asserted on the
+        // latency-bound region (4 -> 32 queues); the bench records the
+        // paper's 32 -> 256 sweep at full scale.
+        let w = Workbench::get("deep-10m-s", 0.01, 10);
+        let rows = sweep(&w, 250, &[4, 32, 256]);
+        let q_lo = &rows[0].1;
+        let q_mid = &rows[1].1;
+        let q_hi = &rows[2].1;
+        // Clear throughput scaling in the latency-bound region (paper:
+        // 3.8x over its 8x queue range).
+        assert!(
+            q_mid.qps > 2.0 * q_lo.qps,
+            "qps {} -> {}",
+            q_lo.qps,
+            q_mid.qps
+        );
+        // Utilization rises.
+        assert!(q_mid.core_utilization > q_lo.core_utilization);
+        // In the saturated region more queues burn static power without
+        // buying throughput: efficiency stops improving (paper: ~20% drop
+        // at full scale; at quick scale we assert it is flat-to-down).
+        assert!(
+            q_hi.qps_per_watt < q_mid.qps_per_watt * 1.05,
+            "eff {} -> {}",
+            q_mid.qps_per_watt,
+            q_hi.qps_per_watt
+        );
+    }
+}

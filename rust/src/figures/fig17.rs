@@ -1,0 +1,86 @@
+//! Fig 17: recall vs raw bit-error rate — the ECC-free SLC justification.
+//! Expected: <3% recall loss up to 1e-4 (SLC/MLC band); collapse at 1e-3+.
+
+use super::Workbench;
+use crate::config::SearchParams;
+use crate::dataset::recall_at_k;
+use crate::error_model::{self, ber};
+use crate::search::beam::SearchContext;
+use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::util::bench::Table;
+
+/// Mean recall with all stored representations corrupted at `rate`.
+pub fn recall_at_ber(w: &Workbench, rate: f64, seed: u64) -> f64 {
+    let params = SearchParams {
+        l: 100,
+        k: 10,
+        ..Default::default()
+    };
+    let (base, graph, codes);
+    let ctx = if rate > 0.0 {
+        let cor = error_model::corrupt(&w.ds.base, &w.graph, &w.codes, w.codebook.c, rate, seed);
+        let mut b = cor.base;
+        error_model::scrub_nonfinite(&mut b);
+        base = b;
+        graph = error_model::graph_from_corrupted_gap(
+            &cor.gap,
+            w.graph.n(),
+            w.graph.max_degree,
+            w.graph.entry_point,
+        );
+        codes = cor.codes;
+        SearchContext {
+            base: &base,
+            metric: w.ds.metric,
+            graph: &graph,
+            codes: Some(&codes),
+            gap: None,
+        }
+    } else {
+        w.context_no_gap()
+    };
+    let mut recall = 0.0;
+    for qi in 0..w.ds.n_queries() {
+        let q = w.ds.queries.row(qi);
+        let adt = w.codebook.build_adt(q);
+        let out = proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false);
+        recall += recall_at_k(&out.ids, w.gt.row(qi), 10);
+    }
+    recall / w.ds.n_queries() as f64
+}
+
+pub fn run(datasets: &[&str], scale: f64) -> Table {
+    let mut table = Table::new(
+        "Fig 17: search recall vs 3D NAND raw bit-error rate",
+        &["dataset", "BER", "recall@10", "delta vs clean"],
+    );
+    for name in datasets {
+        let w = Workbench::get(name, scale, 10);
+        let clean = recall_at_ber(&w, 0.0, 0);
+        for rate in [0.0, 1e-6, ber::SLC, ber::MLC, ber::TLC, 1e-3, 1e-2] {
+            let r = recall_at_ber(&w, rate, 17);
+            table.row(vec![
+                w.ds.name.clone(),
+                format!("{rate:.0e}"),
+                format!("{r:.4}"),
+                format!("{:+.4}", r - clean),
+            ]);
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slc_safe_extreme_fatal() {
+        let w = Workbench::get("sift-s", 0.012, 10);
+        let clean = recall_at_ber(&w, 0.0, 0);
+        let slc = recall_at_ber(&w, ber::SLC, 5);
+        let fatal = recall_at_ber(&w, 1e-2, 5);
+        assert!(clean - slc < 0.03, "SLC loss {}", clean - slc);
+        assert!(fatal < clean - 0.05, "fatal {fatal} vs clean {clean}");
+    }
+}

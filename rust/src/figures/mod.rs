@@ -1,0 +1,258 @@
+//! Figure/table regeneration harnesses — one submodule per paper exhibit
+//! (DESIGN.md §4 maps each to its bench target). All harnesses run at a
+//! configurable `scale` (fraction of the default synthetic dataset sizes)
+//! so `cargo bench` finishes on a laptop while `PROXIMA_SCALE=full` runs
+//! the record sizes.
+
+pub mod ablations;
+pub mod fig03;
+pub mod fig06;
+pub mod fig09;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod fig17;
+pub mod tables;
+
+use crate::config::{GraphParams, PqParams, SearchParams};
+use crate::dataset::synth::SynthSpec;
+use crate::dataset::{ground_truth, Dataset, GroundTruth};
+use crate::gap::GapGraph;
+use crate::graph::{vamana, Graph};
+use crate::pq::{PqCodebook, PqCodes};
+use crate::search::beam::SearchContext;
+
+/// Default scale for quick (CI/bench) runs; `full` uses 1.0.
+pub fn default_scale() -> f64 {
+    if crate::util::bench::full_scale() {
+        0.5
+    } else {
+        std::env::var("PROXIMA_FIG_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.04)
+    }
+}
+
+/// A fully built index stack over one synthetic dataset — the common
+/// fixture every figure shares. Built artifacts are cached under
+/// `results/cache/` because Vamana builds dominate harness time.
+pub struct Workbench {
+    pub ds: Dataset,
+    pub graph: Graph,
+    pub codebook: PqCodebook,
+    pub codes: PqCodes,
+    pub gap: GapGraph,
+    pub gt: GroundTruth,
+    pub graph_params: GraphParams,
+}
+
+impl Workbench {
+    /// Build (or load from cache) the stack for a registry dataset.
+    pub fn get(name: &str, scale: f64, k: usize) -> Workbench {
+        let spec = SynthSpec::by_name(name, scale)
+            .unwrap_or_else(|| panic!("unknown dataset {name}"));
+        let gp = GraphParams::default();
+        let cache = std::path::PathBuf::from("results/cache");
+        let tag = format!("{name}-s{scale}-r{}-k{k}", gp.r);
+        let graph_path = cache.join(format!("{tag}.graph"));
+        let gt_path = cache.join(format!("{tag}.gt"));
+
+        let ds = spec.generate();
+        let graph = match crate::dataset::io::load_csr(&graph_path) {
+            Ok((offsets, targets)) if offsets.len() == ds.n_base() + 1 => Graph {
+                offsets,
+                targets,
+                entry_point: vamana::medoid(&ds.base, ds.metric),
+                max_degree: gp.r,
+            },
+            _ => {
+                let g = vamana::build(&ds.base, ds.metric, &gp);
+                let _ = crate::dataset::io::save_csr(&g.offsets, &g.targets, &graph_path);
+                g
+            }
+        };
+        let pq = PqParams::for_dim(ds.dim());
+        let codebook = PqCodebook::train(
+            &ds.base,
+            ds.metric,
+            pq.m,
+            pq.c,
+            pq.train_sample,
+            pq.kmeans_iters,
+            gp.seed ^ 0xC0DE,
+        );
+        let codes = codebook.encode(&ds.base);
+        let gap = GapGraph::encode(&graph.to_lists());
+        let gt = match crate::dataset::io::load_ground_truth(&gt_path) {
+            Ok(g) if g.k == k && g.n_queries() == ds.n_queries() => g,
+            _ => {
+                let g = ground_truth::brute_force(&ds, k);
+                let _ = crate::dataset::io::save_ground_truth(&g, &gt_path);
+                g
+            }
+        };
+        Workbench {
+            ds,
+            graph,
+            codebook,
+            codes,
+            gap,
+            gt,
+            graph_params: gp,
+        }
+    }
+
+    pub fn context(&self) -> SearchContext<'_> {
+        SearchContext {
+            base: &self.ds.base,
+            metric: self.ds.metric,
+            graph: &self.graph,
+            codes: Some(&self.codes),
+            gap: Some(&self.gap),
+        }
+    }
+
+    /// Context without gap encoding (uniform 32-b indices) for ablations.
+    pub fn context_no_gap(&self) -> SearchContext<'_> {
+        SearchContext {
+            base: &self.ds.base,
+            metric: self.ds.metric,
+            graph: &self.graph,
+            codes: Some(&self.codes),
+            gap: None,
+        }
+    }
+
+    pub fn default_params(&self, l: usize, k: usize) -> SearchParams {
+        SearchParams {
+            l,
+            k,
+            ..Default::default()
+        }
+    }
+}
+
+/// Which algorithm to trace for the hardware simulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Accurate-distance best-first (HNSW-like) on the flat graph.
+    Hnsw,
+    /// DiskANN-PQ: PQ traversal + plain rerank.
+    DiskannPq,
+    /// Proxima with gap encoding + early termination (no hot nodes).
+    Proxima,
+    /// Proxima without early termination (ablation).
+    ProximaNoEt,
+}
+
+/// Run `algo` over all queries collecting hardware traces + mean stats.
+pub fn collect_traces(
+    w: &Workbench,
+    algo: Algo,
+    l: usize,
+    k: usize,
+) -> (Vec<crate::search::Trace>, crate::search::SearchStats) {
+    use crate::search::beam::{accurate_beam_search, pq_beam_search};
+    use crate::search::proxima::{proxima_search, ProximaFeatures};
+    let ctx = w.context();
+    let mut traces = Vec::with_capacity(w.ds.n_queries());
+    let mut stats = crate::search::SearchStats::default();
+    for qi in 0..w.ds.n_queries() {
+        let q = w.ds.queries.row(qi);
+        let out = match algo {
+            Algo::Hnsw => accurate_beam_search(&ctx, q, k, l, true),
+            Algo::DiskannPq => {
+                let adt = w.codebook.build_adt(q);
+                pq_beam_search(&ctx, &adt, q, k, l, (l / 3).max(k), true)
+            }
+            Algo::Proxima | Algo::ProximaNoEt => {
+                let adt = w.codebook.build_adt(q);
+                let feats = ProximaFeatures {
+                    early_termination: algo == Algo::Proxima,
+                    beta_rerank: true,
+                };
+                let params = SearchParams {
+                    l,
+                    k,
+                    ..Default::default()
+                };
+                proxima_search(&ctx, &adt, q, &params, feats, true)
+            }
+        };
+        stats.add(&out.stats);
+        traces.push(out.trace.unwrap());
+    }
+    (traces, stats)
+}
+
+/// Mean per-query stats from an aggregate.
+pub fn per_query(stats: &crate::search::SearchStats, n: usize) -> crate::search::SearchStats {
+    let n = n.max(1);
+    crate::search::SearchStats {
+        pq_dists: stats.pq_dists / n,
+        exact_dists: stats.exact_dists / n,
+        hops: stats.hops / n,
+        sorts: stats.sorts / n,
+        bytes_index: stats.bytes_index / n as u64,
+        bytes_pq: stats.bytes_pq / n as u64,
+        bytes_raw: stats.bytes_raw / n as u64,
+        et_iterations: stats.et_iterations / n,
+        early_terminated: stats.early_terminated,
+    }
+}
+
+/// Default hardware mapping for a workbench (gap-encoded index width).
+pub fn default_mapping(w: &Workbench, hot_frac: f64) -> crate::engine::mapping::DataMapping {
+    let b_index = (w.gap.mean_bits_per_edge(w.graph.n_edges()).ceil() as u32).clamp(8, 32);
+    crate::engine::mapping::DataMapping::new(
+        &crate::nand::NandConfig::proxima(),
+        w.ds.n_base() as u32,
+        w.graph_params.r as u32,
+        b_index,
+        (w.codebook.m * 8) as u32,
+        w.ds.dim() as u32,
+        32,
+        hot_frac,
+    )
+}
+
+/// The dataset subsets each figure uses (small pair for quick runs, the
+/// paper's large pair when scale permits).
+pub fn small_datasets() -> Vec<&'static str> {
+    vec!["sift-s", "glove-s"]
+}
+
+pub fn large_datasets() -> Vec<&'static str> {
+    vec!["bigann-100m-s", "deep-100m-s"]
+}
+
+pub fn all_datasets() -> Vec<&'static str> {
+    vec![
+        "sift-s",
+        "glove-s",
+        "deep-10m-s",
+        "bigann-10m-s",
+        "deep-100m-s",
+        "bigann-100m-s",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workbench_builds_and_caches() {
+        let w = Workbench::get("sift-s", 0.01, 5);
+        assert!(w.graph.validate().is_ok());
+        assert_eq!(w.gt.k, 5);
+        assert_eq!(w.codes.len(), w.ds.n_base());
+        // Second call hits the cache (same shapes).
+        let w2 = Workbench::get("sift-s", 0.01, 5);
+        assert_eq!(w2.graph.targets, w.graph.targets);
+    }
+}

@@ -1,0 +1,375 @@
+//! HNSW (Malkov & Yashunin) — the paper's primary CPU baseline.
+//!
+//! Multi-layer navigable small-world graph: layer assignment is geometric
+//! with factor `1/ln(M)`, inserts search from the top layer down, and each
+//! layer keeps ≤ M (2M at layer 0) neighbors chosen by the heuristic
+//! neighbor-selection rule. For the hardware simulator and the flattened
+//! baselines we also export layer 0 as a [`Graph`] whose entry point is the
+//! hierarchy's top entry — preserving HNSW's long-range hop behaviour well
+//! enough for traffic/latency modeling (DESIGN.md notes this flattening).
+
+use super::Graph;
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+use crate::util::rng::Xoshiro256pp;
+
+/// HNSW build parameters.
+#[derive(Clone, Debug)]
+pub struct HnswParams {
+    /// Max neighbors per layer (layer 0 gets 2M).
+    pub m: usize,
+    /// Build-time beam width.
+    pub ef_construction: usize,
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams {
+            m: 16,
+            ef_construction: 100,
+            seed: 7,
+        }
+    }
+}
+
+/// The index: per-layer adjacency.
+pub struct Hnsw {
+    pub params: HnswParams,
+    /// layers[l][v] = neighbors of v at layer l (empty if v absent).
+    pub layers: Vec<Vec<Vec<u32>>>,
+    /// Top layer of each vertex.
+    pub node_level: Vec<u8>,
+    pub entry: u32,
+}
+
+impl Hnsw {
+    pub fn n(&self) -> usize {
+        self.node_level.len()
+    }
+
+    /// Build over the base set.
+    pub fn build(base: &VectorSet, metric: Metric, params: &HnswParams) -> Hnsw {
+        let n = base.len();
+        assert!(n > 0);
+        let m = params.m;
+        let mult = 1.0 / (m as f64).ln();
+        let mut rng = Xoshiro256pp::seed_from_u64(params.seed);
+
+        let mut node_level = vec![0u8; n];
+        let mut max_level = 0usize;
+        for lvl in node_level.iter_mut() {
+            let u = rng.next_f64().max(1e-12);
+            let l = ((-u.ln() * mult) as usize).min(31);
+            *lvl = l as u8;
+            max_level = max_level.max(l);
+        }
+        let mut layers: Vec<Vec<Vec<u32>>> = (0..=max_level)
+            .map(|_| vec![Vec::new(); n])
+            .collect();
+        let mut entry = 0u32;
+        let mut entry_level = node_level[0] as usize;
+
+        for v in 1..n {
+            let v_level = node_level[v] as usize;
+            let q = base.row(v);
+            let mut ep = entry;
+            // Descend through layers above v's level greedily.
+            for l in (v_level + 1..=entry_level).rev() {
+                ep = greedy_closest(base, metric, &layers[l], ep, q);
+            }
+            // Insert at layers min(v_level, entry_level)..0.
+            for l in (0..=v_level.min(entry_level)).rev() {
+                let eps = search_layer(base, metric, &layers[l], ep, q, params.ef_construction);
+                let max_m = if l == 0 { 2 * m } else { m };
+                let selected = select_neighbors_heuristic(base, metric, &eps, max_m);
+                layers[l][v] = selected.clone();
+                for &nb in &selected {
+                    let lst = &mut layers[l][nb as usize];
+                    if !lst.contains(&(v as u32)) {
+                        lst.push(v as u32);
+                        if lst.len() > max_m {
+                            let cand: Vec<(f32, u32)> = lst
+                                .iter()
+                                .map(|&t| {
+                                    (metric.distance(base.row(nb as usize), base.row(t as usize)), t)
+                                })
+                                .collect();
+                            layers[l][nb as usize] =
+                                select_neighbors_heuristic(base, metric, &cand, max_m);
+                        }
+                    }
+                }
+                ep = *eps.first().map(|(_, v)| v).unwrap_or(&ep);
+            }
+            if v_level > entry_level {
+                entry = v as u32;
+                entry_level = v_level;
+            }
+        }
+
+        Hnsw {
+            params: params.clone(),
+            layers,
+            node_level,
+            entry,
+        }
+    }
+
+    /// Query search: descend greedily to layer 0, then beam of width `ef`.
+    /// Returns (distance, id) ascending and the number of distance
+    /// computations performed (the baseline cost metric for Fig 14).
+    pub fn search(
+        &self,
+        base: &VectorSet,
+        metric: Metric,
+        q: &[f32],
+        k: usize,
+        ef: usize,
+    ) -> (Vec<(f32, u32)>, usize) {
+        let mut dist_count = 0usize;
+        let mut ep = self.entry;
+        for l in (1..self.layers.len()).rev() {
+            ep = greedy_closest_counted(base, metric, &self.layers[l], ep, q, &mut dist_count);
+        }
+        let mut res = search_layer_counted(
+            base,
+            metric,
+            &self.layers[0],
+            ep,
+            q,
+            ef.max(k),
+            &mut dist_count,
+        );
+        res.truncate(k);
+        (res, dist_count)
+    }
+
+    /// Flatten layer 0 into a [`Graph`] (entry = hierarchy entry).
+    pub fn to_flat_graph(&self) -> Graph {
+        Graph::from_lists(&self.layers[0], self.entry, 2 * self.params.m)
+    }
+}
+
+fn greedy_closest(
+    base: &VectorSet,
+    metric: Metric,
+    layer: &[Vec<u32>],
+    ep: u32,
+    q: &[f32],
+) -> u32 {
+    let mut c = 0usize;
+    greedy_closest_counted(base, metric, layer, ep, q, &mut c)
+}
+
+fn greedy_closest_counted(
+    base: &VectorSet,
+    metric: Metric,
+    layer: &[Vec<u32>],
+    mut ep: u32,
+    q: &[f32],
+    dist_count: &mut usize,
+) -> u32 {
+    let mut best = metric.distance(q, base.row(ep as usize));
+    *dist_count += 1;
+    loop {
+        let mut improved = false;
+        for &nb in &layer[ep as usize] {
+            let d = metric.distance(q, base.row(nb as usize));
+            *dist_count += 1;
+            if d < best {
+                best = d;
+                ep = nb;
+                improved = true;
+            }
+        }
+        if !improved {
+            return ep;
+        }
+    }
+}
+
+fn search_layer(
+    base: &VectorSet,
+    metric: Metric,
+    layer: &[Vec<u32>],
+    ep: u32,
+    q: &[f32],
+    ef: usize,
+) -> Vec<(f32, u32)> {
+    let mut c = 0usize;
+    search_layer_counted(base, metric, layer, ep, q, ef, &mut c)
+}
+
+/// Beam search within one layer; returns candidates ascending by distance.
+fn search_layer_counted(
+    base: &VectorSet,
+    metric: Metric,
+    layer: &[Vec<u32>],
+    ep: u32,
+    q: &[f32],
+    ef: usize,
+    dist_count: &mut usize,
+) -> Vec<(f32, u32)> {
+    use std::cmp::Reverse;
+    use std::collections::{BinaryHeap, HashSet};
+
+    #[derive(PartialEq)]
+    struct D(f32, u32);
+    impl Eq for D {}
+    impl PartialOrd for D {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for D {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal).then(self.1.cmp(&o.1))
+        }
+    }
+
+    let d0 = metric.distance(q, base.row(ep as usize));
+    *dist_count += 1;
+    let mut visited: HashSet<u32> = HashSet::from([ep]);
+    let mut frontier: BinaryHeap<Reverse<D>> = BinaryHeap::from([Reverse(D(d0, ep))]);
+    let mut results: BinaryHeap<D> = BinaryHeap::from([D(d0, ep)]);
+
+    while let Some(Reverse(D(d, v))) = frontier.pop() {
+        if results.len() >= ef && d > results.peek().unwrap().0 {
+            break;
+        }
+        for &nb in &layer[v as usize] {
+            if !visited.insert(nb) {
+                continue;
+            }
+            let dn = metric.distance(q, base.row(nb as usize));
+            *dist_count += 1;
+            if results.len() < ef || dn < results.peek().unwrap().0 {
+                frontier.push(Reverse(D(dn, nb)));
+                results.push(D(dn, nb));
+                if results.len() > ef {
+                    results.pop();
+                }
+            }
+        }
+    }
+    let mut out: Vec<(f32, u32)> = results.into_iter().map(|D(d, v)| (d, v)).collect();
+    out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    out
+}
+
+/// HNSW heuristic neighbor selection (keeps diverse neighbors: a candidate
+/// is taken only if it is closer to the query point than to any already
+/// selected neighbor).
+fn select_neighbors_heuristic(
+    base: &VectorSet,
+    metric: Metric,
+    cand: &[(f32, u32)],
+    m: usize,
+) -> Vec<u32> {
+    let mut sorted = cand.to_vec();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    sorted.dedup_by_key(|c| c.1);
+    let mut out: Vec<(f32, u32)> = Vec::with_capacity(m);
+    for &(d, v) in &sorted {
+        if out.len() >= m {
+            break;
+        }
+        let ok = out.iter().all(|&(_, s)| {
+            metric.distance(base.row(v as usize), base.row(s as usize)) > d
+        });
+        if ok {
+            out.push((d, v));
+        }
+    }
+    // Fill up with skipped candidates if under-full (standard fallback).
+    if out.len() < m {
+        for &(d, v) in &sorted {
+            if out.len() >= m {
+                break;
+            }
+            if !out.iter().any(|&(_, s)| s == v) {
+                out.push((d, v));
+            }
+        }
+    }
+    out.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ground_truth::brute_force;
+    use crate::dataset::synth::tiny_uniform;
+
+    #[test]
+    fn builds_and_searches_with_high_recall() {
+        let ds = tiny_uniform(1000, 16, Metric::L2, 20);
+        let idx = Hnsw::build(&ds.base, ds.metric, &HnswParams::default());
+        let gt = brute_force(&ds, 10);
+        let mut recall = 0.0;
+        let mut dists = 0usize;
+        for q in 0..ds.n_queries() {
+            let (res, dc) = idx.search(&ds.base, ds.metric, ds.queries.row(q), 10, 64);
+            let ids: Vec<u32> = res.iter().map(|&(_, v)| v).collect();
+            recall += crate::dataset::recall_at_k(&ids, gt.row(q), 10);
+            dists += dc;
+        }
+        recall /= ds.n_queries() as f64;
+        assert!(recall > 0.85, "recall {recall}");
+        // Sub-linear: fewer distance computations than brute force (tiny
+        // uniform 16-d data is near the worst case for graph pruning, so
+        // the margin is modest at n=1000; it widens with scale).
+        assert!(dists / ds.n_queries() < (ds.n_base() as f64 * 0.8) as usize);
+    }
+
+    #[test]
+    fn level_distribution_geometric() {
+        let ds = tiny_uniform(2000, 8, Metric::L2, 21);
+        let idx = Hnsw::build(&ds.base, ds.metric, &HnswParams::default());
+        let l0 = idx.node_level.iter().filter(|&&l| l == 0).count();
+        let l1 = idx.node_level.iter().filter(|&&l| l >= 1).count();
+        // With M=16, P(level>=1) = 1/16-ish.
+        assert!(l0 > l1 * 5, "l0={l0} l1={l1}");
+        assert!(idx.layers.len() >= 2);
+    }
+
+    #[test]
+    fn flat_graph_is_valid_and_searchable() {
+        let ds = tiny_uniform(600, 12, Metric::L2, 22);
+        let idx = Hnsw::build(&ds.base, ds.metric, &HnswParams::default());
+        let g = idx.to_flat_graph();
+        g.validate().unwrap();
+        assert!(g.connectivity() > 0.95);
+    }
+
+    #[test]
+    fn recall_increases_with_ef() {
+        let ds = tiny_uniform(800, 16, Metric::L2, 23);
+        let idx = Hnsw::build(&ds.base, ds.metric, &HnswParams::default());
+        let gt = brute_force(&ds, 10);
+        let recall_at = |ef: usize| {
+            let mut r = 0.0;
+            for q in 0..ds.n_queries() {
+                let (res, _) = idx.search(&ds.base, ds.metric, ds.queries.row(q), 10, ef);
+                let ids: Vec<u32> = res.iter().map(|&(_, v)| v).collect();
+                r += crate::dataset::recall_at_k(&ids, gt.row(q), 10);
+            }
+            r / ds.n_queries() as f64
+        };
+        let lo = recall_at(10);
+        let hi = recall_at(128);
+        assert!(hi >= lo, "ef=10 -> {lo}, ef=128 -> {hi}");
+        assert!(hi > 0.9);
+    }
+
+    #[test]
+    fn angular_metric_supported() {
+        let ds = tiny_uniform(400, 10, Metric::Angular, 24);
+        let idx = Hnsw::build(&ds.base, ds.metric, &HnswParams::default());
+        let gt = brute_force(&ds, 5);
+        let (res, _) = idx.search(&ds.base, ds.metric, ds.queries.row(0), 5, 50);
+        let ids: Vec<u32> = res.iter().map(|&(_, v)| v).collect();
+        assert!(crate::dataset::recall_at_k(&ids, gt.row(0), 5) >= 0.6);
+    }
+}

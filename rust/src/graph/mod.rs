@@ -1,0 +1,225 @@
+//! Proximity-graph indexes: a compact CSR container shared by all builders
+//! plus the three builders the paper evaluates/profiles (Vamana/DiskANN,
+//! HNSW, and NSG).
+
+pub mod hnsw;
+pub mod nsg;
+pub mod vamana;
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Fixed-degree-bounded proximity graph in CSR form.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// offsets[v]..offsets[v+1] index into `targets`.
+    pub offsets: Vec<u32>,
+    pub targets: Vec<u32>,
+    /// Entry point for best-first search (medoid for Vamana, top-layer
+    /// entry for flattened HNSW).
+    pub entry_point: u32,
+    /// Maximum out-degree the builder enforced.
+    pub max_degree: usize,
+}
+
+impl Graph {
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let a = self.offsets[v as usize] as usize;
+        let b = self.offsets[v as usize + 1] as usize;
+        &self.targets[a..b]
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn mean_degree(&self) -> f64 {
+        self.n_edges() as f64 / self.n() as f64
+    }
+
+    /// Build from per-vertex adjacency lists.
+    pub fn from_lists(lists: &[Vec<u32>], entry_point: u32, max_degree: usize) -> Graph {
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        let mut targets = Vec::new();
+        offsets.push(0u32);
+        for l in lists {
+            targets.extend_from_slice(l);
+            offsets.push(targets.len() as u32);
+        }
+        Graph {
+            offsets,
+            targets,
+            entry_point,
+            max_degree,
+        }
+    }
+
+    /// Back to per-vertex lists (used by gap encoding and re-mapping).
+    pub fn to_lists(&self) -> Vec<Vec<u32>> {
+        (0..self.n())
+            .map(|v| self.neighbors(v as u32).to_vec())
+            .collect()
+    }
+
+    /// Sanity invariants: targets in range, no self loops, degree bound.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n() as u32;
+        for v in 0..self.n() {
+            let nbrs = self.neighbors(v as u32);
+            if nbrs.len() > self.max_degree {
+                return Err(format!("v{v}: degree {} > R={}", nbrs.len(), self.max_degree));
+            }
+            for &t in nbrs {
+                if t >= n {
+                    return Err(format!("v{v}: target {t} out of range"));
+                }
+                if t == v as u32 {
+                    return Err(format!("v{v}: self loop"));
+                }
+            }
+        }
+        if self.entry_point >= n {
+            return Err("entry point out of range".into());
+        }
+        Ok(())
+    }
+
+    /// Is every vertex reachable from the entry point? (BFS)
+    pub fn connectivity(&self) -> f64 {
+        let n = self.n();
+        let mut seen = vec![false; n];
+        let mut stack = vec![self.entry_point];
+        seen[self.entry_point as usize] = true;
+        let mut count = 1usize;
+        while let Some(v) = stack.pop() {
+            for &t in self.neighbors(v) {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    count += 1;
+                    stack.push(t);
+                }
+            }
+        }
+        count as f64 / n as f64
+    }
+
+    /// Random R-regular graph (used by unit tests and simulator fuzzing
+    /// where build quality is irrelevant).
+    pub fn random(n: usize, r: usize, seed: u64) -> Graph {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let lists: Vec<Vec<u32>> = (0..n)
+            .map(|v| {
+                let mut nbrs = Vec::with_capacity(r);
+                while nbrs.len() < r.min(n - 1) {
+                    let t = rng.gen_range(n) as u32;
+                    if t != v as u32 && !nbrs.contains(&t) {
+                        nbrs.push(t);
+                    }
+                }
+                nbrs
+            })
+            .collect();
+        Graph::from_lists(&lists, 0, r)
+    }
+
+    /// Remap vertex ids with `perm` (new_id = perm[old_id]): relabels both
+    /// the adjacency structure and the entry point. Used by the §IV-E
+    /// frequency reordering.
+    pub fn remap(&self, perm: &[u32]) -> Graph {
+        let n = self.n();
+        assert_eq!(perm.len(), n);
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for v in 0..n {
+            let new_v = perm[v] as usize;
+            lists[new_v] = self
+                .neighbors(v as u32)
+                .iter()
+                .map(|&t| perm[t as usize])
+                .collect();
+        }
+        Graph::from_lists(&lists, perm[self.entry_point as usize], self.max_degree)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn from_lists_roundtrip() {
+        let lists = vec![vec![1, 2], vec![0], vec![0, 1]];
+        let g = Graph::from_lists(&lists, 0, 4);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.to_lists(), lists);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let g = Graph::from_lists(&[vec![5]], 0, 4);
+        assert!(g.validate().is_err()); // out of range
+        let g = Graph::from_lists(&[vec![0]], 0, 4);
+        assert!(g.validate().is_err()); // self loop
+        let g = Graph::from_lists(&[vec![1, 1, 1], vec![]], 0, 2);
+        assert!(g.validate().is_err()); // degree over bound
+    }
+
+    #[test]
+    fn random_graph_valid_and_connected_enough() {
+        let g = Graph::random(500, 8, 1);
+        g.validate().unwrap();
+        assert!(g.connectivity() > 0.99, "conn={}", g.connectivity());
+    }
+
+    #[test]
+    fn prop_remap_preserves_structure() {
+        prop::check_default(
+            "graph-remap-iso",
+            301,
+            |r| {
+                let n = 2 + prop::gen::len(r, 40);
+                let g = Graph::random(n, 4.min(n - 1), r.next_u64());
+                // random permutation
+                let mut perm: Vec<u32> = (0..n as u32).collect();
+                r.shuffle(&mut perm);
+                (g, perm)
+            },
+            |(g, perm)| {
+                let h = g.remap(perm);
+                h.validate().map_err(|e| e)?;
+                if h.n_edges() != g.n_edges() {
+                    return Err("edge count changed".into());
+                }
+                // Degree multiset preserved.
+                let mut dg: Vec<usize> = (0..g.n()).map(|v| g.neighbors(v as u32).len()).collect();
+                let mut dh: Vec<usize> = (0..h.n()).map(|v| h.neighbors(v as u32).len()).collect();
+                dg.sort_unstable();
+                dh.sort_unstable();
+                if dg != dh {
+                    return Err("degree multiset changed".into());
+                }
+                // Spot-check adjacency isomorphism.
+                for v in 0..g.n() {
+                    let mut mapped: Vec<u32> = g
+                        .neighbors(v as u32)
+                        .iter()
+                        .map(|&t| perm[t as usize])
+                        .collect();
+                    mapped.sort_unstable();
+                    let mut actual = h.neighbors(perm[v]).to_vec();
+                    actual.sort_unstable();
+                    if mapped != actual {
+                        return Err(format!("v{v} adjacency mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! NSG — Navigating Spreading-out Graph (Fu et al., VLDB'19), the third
+//! graph baseline the paper profiles (Fig 3) alongside HNSW and DiskANN.
+//!
+//! Build: start from an approximate k-NN graph (here: Vamana's output, as
+//! NSG implementations start from EFANNA/kgraph), then for every vertex
+//! run a search from the navigating node (medoid), pool the visited set
+//! with the current neighbors, and apply NSG's **MRNG edge selection**
+//! (keep candidate u only if no kept neighbor t has
+//! `dist(t,u) < dist(p,u)`), finally grow a spanning tree from the
+//! navigating node to guarantee connectivity.
+
+use super::{vamana, Graph};
+use crate::config::GraphParams;
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+
+/// Build an NSG over `base`.
+pub fn build(base: &VectorSet, metric: Metric, params: &GraphParams) -> Graph {
+    let n = base.len();
+    assert!(n > 1);
+    let r = params.r.min(n - 1);
+
+    // Stage 1: approximate neighbor pool from a Vamana pass.
+    let init = vamana::build(base, metric, params);
+    let init_adj = init.to_lists();
+    let navigating = vamana::medoid(base, metric);
+
+    // Stage 2: MRNG selection per vertex over (search pool ∪ current nbrs).
+    let mut adj: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for p in 0..n as u32 {
+        let (visited, _) = vamana::greedy_search_build(
+            base,
+            metric,
+            &init_adj,
+            navigating,
+            base.row(p as usize),
+            params.build_l,
+        );
+        let mut pool: Vec<(f32, u32)> = visited;
+        for &nb in &init_adj[p as usize] {
+            pool.push((metric.distance(base.row(p as usize), base.row(nb as usize)), nb));
+        }
+        pool.retain(|&(_, v)| v != p);
+        pool.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pool.dedup_by_key(|c| c.1);
+        adj.push(mrng_select(base, metric, &pool, r));
+    }
+
+    // Stage 3: spanning-tree connectivity fix from the navigating node.
+    let mut g = Graph::from_lists(&adj, navigating, r);
+    let mut seen = vec![false; n];
+    let mut stack = vec![navigating];
+    seen[navigating as usize] = true;
+    while let Some(v) = stack.pop() {
+        for &t in g.neighbors(v) {
+            if !seen[t as usize] {
+                seen[t as usize] = true;
+                stack.push(t);
+            }
+        }
+    }
+    let mut lists = g.to_lists();
+    for v in 0..n {
+        if seen[v] {
+            continue;
+        }
+        // Attach unreachable vertex to its nearest reachable neighbor.
+        let mut best = navigating;
+        let mut best_d = f32::INFINITY;
+        for cand in 0..n {
+            if seen[cand] && cand != v {
+                let d = metric.distance(base.row(v), base.row(cand));
+                if d < best_d {
+                    best_d = d;
+                    best = cand as u32;
+                }
+            }
+        }
+        let lst = &mut lists[best as usize];
+        if !lst.contains(&(v as u32)) {
+            if lst.len() >= r {
+                lst.pop();
+            }
+            lst.push(v as u32);
+        }
+        seen[v] = true;
+    }
+    g = Graph::from_lists(&lists, navigating, r);
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// MRNG edge selection: keep u unless an already-kept t is closer to u
+/// than p is (the "spreading-out" criterion).
+fn mrng_select(base: &VectorSet, metric: Metric, pool: &[(f32, u32)], r: usize) -> Vec<u32> {
+    let mut kept: Vec<(f32, u32)> = Vec::with_capacity(r);
+    for &(d_pu, u) in pool {
+        if kept.len() >= r {
+            break;
+        }
+        let occluded = kept.iter().any(|&(_, t)| {
+            metric.distance(base.row(t as usize), base.row(u as usize)) < d_pu
+        });
+        if !occluded {
+            kept.push((d_pu, u));
+        }
+    }
+    // NSG fills remaining slots with nearest skipped candidates.
+    if kept.len() < r {
+        for &(d, u) in pool {
+            if kept.len() >= r {
+                break;
+            }
+            if !kept.iter().any(|&(_, t)| t == u) {
+                kept.push((d, u));
+            }
+        }
+    }
+    kept.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ground_truth::brute_force;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::search::beam::{accurate_beam_search, SearchContext};
+
+    fn params() -> GraphParams {
+        GraphParams {
+            r: 12,
+            build_l: 32,
+            alpha: 1.2,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn builds_valid_fully_connected_graph() {
+        let ds = tiny_uniform(400, 12, Metric::L2, 22);
+        let g = build(&ds.base, ds.metric, &params());
+        g.validate().unwrap();
+        assert!(
+            (g.connectivity() - 1.0).abs() < 1e-9,
+            "NSG must be fully reachable, got {}",
+            g.connectivity()
+        );
+    }
+
+    #[test]
+    fn search_recall_competitive() {
+        let ds = tiny_uniform(700, 16, Metric::L2, 23);
+        let g = build(&ds.base, ds.metric, &params());
+        let gt = brute_force(&ds, 10);
+        let ctx = SearchContext {
+            base: &ds.base,
+            metric: ds.metric,
+            graph: &g,
+            codes: None,
+            gap: None,
+        };
+        let mut recall = 0.0;
+        for qi in 0..ds.n_queries() {
+            let out = accurate_beam_search(&ctx, ds.queries.row(qi), 10, 50, false);
+            recall += crate::dataset::recall_at_k(&out.ids, gt.row(qi), 10);
+        }
+        recall /= ds.n_queries() as f64;
+        assert!(recall > 0.85, "NSG recall {recall}");
+    }
+
+    #[test]
+    fn mrng_keeps_nearest_first() {
+        let ds = tiny_uniform(100, 8, Metric::L2, 24);
+        let pool: Vec<(f32, u32)> = (1..40u32)
+            .map(|v| (Metric::L2.distance(ds.base.row(0), ds.base.row(v as usize)), v))
+            .collect();
+        let mut sorted = pool.clone();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let kept = mrng_select(&ds.base, Metric::L2, &sorted, 8);
+        assert!(kept.len() <= 8);
+        assert_eq!(kept[0], sorted[0].1);
+    }
+}

@@ -1,0 +1,277 @@
+//! Vamana graph construction (the DiskANN index; Jayaram Subramanya et al.,
+//! NeurIPS'19). The paper builds its graphs "using existing algorithms with
+//! full-precision coordinates" (§III-B) — this is that substrate.
+//!
+//! Algorithm: start from a random R-regular graph; for each point p (in a
+//! random order, two passes), greedy-search the current graph for p's
+//! approximate neighbors, then apply **robust pruning** with slack α ≥ 1 to
+//! select a diverse out-neighborhood of ≤ R; add reverse edges, re-pruning
+//! any vertex that overflows R.
+
+use super::Graph;
+use crate::config::GraphParams;
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+use crate::util::rng::Xoshiro256pp;
+
+/// Build a Vamana graph over `base`.
+pub fn build(base: &VectorSet, metric: Metric, params: &GraphParams) -> Graph {
+    let n = base.len();
+    assert!(n > 1);
+    let r = params.r.min(n - 1);
+    let mut rng = Xoshiro256pp::seed_from_u64(params.seed);
+
+    // Medoid as entry point (approximate: point nearest the mean).
+    let entry = medoid(base, metric);
+
+    // Random initial graph.
+    let mut adj: Vec<Vec<u32>> = (0..n)
+        .map(|v| {
+            let mut nbrs = Vec::with_capacity(r);
+            while nbrs.len() < r {
+                let t = rng.gen_range(n) as u32;
+                if t != v as u32 && !nbrs.contains(&t) {
+                    nbrs.push(t);
+                }
+            }
+            nbrs
+        })
+        .collect();
+
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    // Two passes as in the DiskANN paper: pass 1 with alpha=1, pass 2 with
+    // the configured alpha.
+    for (pass, alpha) in [(0usize, 1.0f32), (1, params.alpha)] {
+        rng.shuffle(&mut order);
+        for &p in &order {
+            let (visited, _) = greedy_search_build(base, metric, &adj, entry, base.row(p as usize), params.build_l);
+            let pruned = robust_prune(base, metric, p, &visited, alpha, r);
+            adj[p as usize] = pruned.clone();
+            // Reverse edges.
+            for &nb in &pruned {
+                let lst = &mut adj[nb as usize];
+                if !lst.contains(&p) {
+                    lst.push(p);
+                    if lst.len() > r {
+                        let cand: Vec<(f32, u32)> = lst
+                            .iter()
+                            .map(|&t| (metric.distance(base.row(nb as usize), base.row(t as usize)), t))
+                            .collect();
+                        adj[nb as usize] = robust_prune_from(base, metric, nb, cand, alpha, r);
+                    }
+                }
+            }
+        }
+        let _ = pass;
+    }
+
+    let g = Graph::from_lists(&adj, entry, r);
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+/// Point closest to the dataset mean under the metric.
+pub fn medoid(base: &VectorSet, metric: Metric) -> u32 {
+    let n = base.len();
+    let dim = base.dim;
+    let mut mean = vec![0.0f32; dim];
+    for row in base.iter_rows() {
+        for (m, &x) in mean.iter_mut().zip(row) {
+            *m += x;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f32;
+    }
+    if metric == Metric::Angular {
+        crate::distance::normalize(&mut mean);
+    }
+    let mut best = 0u32;
+    let mut best_d = f32::INFINITY;
+    for i in 0..n {
+        let d = metric.distance(&mean, base.row(i));
+        if d < best_d {
+            best_d = d;
+            best = i as u32;
+        }
+    }
+    best
+}
+
+/// Greedy (best-first) search over an adjacency-list graph with accurate
+/// distances, returning all *visited* (evaluated) vertices with their
+/// distances — the candidate pool for robust pruning — and the final list.
+pub fn greedy_search_build(
+    base: &VectorSet,
+    metric: Metric,
+    adj: &[Vec<u32>],
+    entry: u32,
+    q: &[f32],
+    l: usize,
+) -> (Vec<(f32, u32)>, Vec<(f32, u32)>) {
+    let mut visited: Vec<(f32, u32)> = Vec::new();
+    let mut in_list: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    // (dist, id, evaluated)
+    let mut list: Vec<(f32, u32, bool)> = Vec::with_capacity(l + 1);
+    let d0 = metric.distance(q, base.row(entry as usize));
+    list.push((d0, entry, false));
+    in_list.insert(entry);
+
+    loop {
+        // First unevaluated candidate.
+        let Some(idx) = list.iter().position(|&(_, _, e)| !e) else {
+            break;
+        };
+        let (dv, v, _) = list[idx];
+        list[idx].2 = true;
+        visited.push((dv, v));
+        for &nb in &adj[v as usize] {
+            if in_list.contains(&nb) {
+                continue;
+            }
+            in_list.insert(nb);
+            let d = metric.distance(q, base.row(nb as usize));
+            list.push((d, nb, false));
+        }
+        list.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if list.len() > l {
+            list.truncate(l);
+        }
+    }
+    let final_list: Vec<(f32, u32)> = list.iter().map(|&(d, v, _)| (d, v)).collect();
+    (visited, final_list)
+}
+
+/// DiskANN robust pruning: pick nearest candidate v, discard any candidate
+/// u with `alpha * dist(v, u) <= dist(p, u)` (v "covers" u), repeat until R
+/// neighbors chosen.
+pub fn robust_prune(
+    base: &VectorSet,
+    metric: Metric,
+    p: u32,
+    visited: &[(f32, u32)],
+    alpha: f32,
+    r: usize,
+) -> Vec<u32> {
+    robust_prune_from(base, metric, p, visited.to_vec(), alpha, r)
+}
+
+fn robust_prune_from(
+    base: &VectorSet,
+    metric: Metric,
+    p: u32,
+    mut cand: Vec<(f32, u32)>,
+    alpha: f32,
+    r: usize,
+) -> Vec<u32> {
+    cand.retain(|&(_, v)| v != p);
+    cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    cand.dedup_by_key(|c| c.1);
+    let mut out: Vec<u32> = Vec::with_capacity(r);
+    let mut alive: Vec<bool> = vec![true; cand.len()];
+    for i in 0..cand.len() {
+        if !alive[i] {
+            continue;
+        }
+        let (d_pv, v) = cand[i];
+        out.push(v);
+        if out.len() == r {
+            break;
+        }
+        for j in (i + 1)..cand.len() {
+            if !alive[j] {
+                continue;
+            }
+            let (d_pu, u) = cand[j];
+            let d_vu = metric.distance(base.row(v as usize), base.row(u as usize));
+            if alpha * d_vu <= d_pu && d_pv <= d_pu {
+                alive[j] = false;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ground_truth::brute_force;
+    use crate::dataset::synth::tiny_uniform;
+
+    fn small_params(r: usize) -> GraphParams {
+        GraphParams {
+            r,
+            build_l: 32,
+            alpha: 1.2,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn builds_valid_connected_graph() {
+        let ds = tiny_uniform(500, 16, Metric::L2, 8);
+        let g = build(&ds.base, ds.metric, &small_params(12));
+        g.validate().unwrap();
+        assert!(g.connectivity() > 0.98, "connectivity {}", g.connectivity());
+        assert!(g.mean_degree() > 2.0);
+    }
+
+    #[test]
+    fn greedy_search_on_built_graph_finds_neighbors() {
+        let ds = tiny_uniform(800, 12, Metric::L2, 9);
+        let g = build(&ds.base, ds.metric, &small_params(16));
+        let adj = g.to_lists();
+        let gt = brute_force(&ds, 10);
+        let mut recall_sum = 0.0;
+        for q in 0..ds.n_queries() {
+            let (_, list) = greedy_search_build(&ds.base, ds.metric, &adj, g.entry_point, ds.queries.row(q), 40);
+            let ids: Vec<u32> = list.iter().take(10).map(|&(_, v)| v).collect();
+            recall_sum += crate::dataset::recall_at_k(&ids, gt.row(q), 10);
+        }
+        let recall = recall_sum / ds.n_queries() as f64;
+        assert!(recall > 0.8, "recall {recall}");
+    }
+
+    #[test]
+    fn works_for_all_metrics() {
+        for metric in [Metric::L2, Metric::Ip, Metric::Angular] {
+            let ds = tiny_uniform(300, 8, metric, 10);
+            let g = build(&ds.base, metric, &small_params(8));
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn robust_prune_respects_bound_and_orders() {
+        let ds = tiny_uniform(100, 8, Metric::L2, 12);
+        let visited: Vec<(f32, u32)> = (1..60u32)
+            .map(|v| (Metric::L2.distance(ds.base.row(0), ds.base.row(v as usize)), v))
+            .collect();
+        let pruned = robust_prune(&ds.base, Metric::L2, 0, &visited, 1.2, 8);
+        assert!(pruned.len() <= 8);
+        assert!(!pruned.contains(&0));
+        // First pruned element must be the globally nearest candidate.
+        let nearest = visited
+            .iter()
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap()
+            .1;
+        assert_eq!(pruned[0], nearest);
+    }
+
+    #[test]
+    fn medoid_is_central() {
+        let ds = tiny_uniform(300, 6, Metric::L2, 13);
+        let m = medoid(&ds.base, Metric::L2) as usize;
+        // The medoid's mean distance to everyone should be below average.
+        let mean_d = |i: usize| -> f32 {
+            (0..ds.n_base())
+                .map(|j| Metric::L2.distance(ds.base.row(i), ds.base.row(j)))
+                .sum::<f32>()
+                / ds.n_base() as f32
+        };
+        let dm = mean_d(m);
+        let avg: f32 = (0..30).map(mean_d).sum::<f32>() / 30.0;
+        assert!(dm <= avg, "medoid {dm} vs avg {avg}");
+    }
+}

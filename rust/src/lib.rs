@@ -1,0 +1,38 @@
+//! # Proxima — near-storage acceleration for graph-based ANNS in 3D NAND
+//!
+//! Full-system reproduction of the Proxima paper (UCSD/GaTech). The crate
+//! contains, per DESIGN.md:
+//!
+//! * the **Proxima graph-search algorithm** (PQ-distance traversal,
+//!   β-reranking, dynamic list + early termination, gap-encoded indices);
+//! * every **substrate** it depends on: datasets, ground truth, PQ/k-means,
+//!   Vamana + HNSW graph builders, IVF baseline, Bloom filter, bitonic
+//!   sorter;
+//! * the **3D NAND near-storage hardware simulator** (timing/energy/area
+//!   models, discrete-event search-engine with queues/arbiter/scheduler,
+//!   data-mapping schemes);
+//! * the **PJRT runtime** that executes AOT-compiled JAX/Pallas kernels
+//!   from `artifacts/` on the request path (Python is build-time only);
+//! * a thread-based **coordinator** (router, batcher, TCP server);
+//! * the figure/table harnesses regenerating the paper's evaluation.
+
+pub mod config;
+pub mod dataset;
+pub mod distance;
+pub mod gap;
+pub mod pq;
+pub mod util;
+
+pub mod graph;
+pub mod search;
+
+pub mod error_model;
+pub mod reorder;
+
+pub mod accel;
+pub mod engine;
+pub mod nand;
+
+pub mod coordinator;
+pub mod figures;
+pub mod runtime;

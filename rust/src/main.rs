@@ -1,0 +1,267 @@
+//! `proxima` — the launcher. Subcommands:
+//!
+//! ```text
+//! proxima datasets                         list the synthetic registry
+//! proxima gen-data  --dataset sift-s --scale 0.1 --out data/sift-s.bin
+//! proxima build     --dataset sift-s --scale 0.05   build index, report stats
+//! proxima search    --dataset sift-s --scale 0.05 --l 100 --k 10
+//! proxima serve     --dataset sift-s --scale 0.02 --port 7878
+//! proxima sim       --dataset sift-s --scale 0.02 --queues 256 --hot 0.03
+//! proxima figures   --fig all|3|6|9|11|12|13|14|15|16|17|t1|t2|t3
+//! ```
+//!
+//! Config file via `--config path` plus `--set key=value` overrides
+//! (see `config::Config`).
+
+use anyhow::Result;
+use proxima::config::{Config, GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::Server;
+use proxima::coordinator::SearchService;
+use proxima::dataset::synth::SynthSpec;
+use proxima::figures;
+use proxima::util::bench::Table;
+use proxima::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(true);
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("config: {e}"))?,
+        None => Config::new(),
+    };
+    cfg.overlay_args(&args);
+
+    match args.subcommand.as_deref() {
+        Some("datasets") => {
+            figures::tables::table1(cfg.get_f64("scale", 1.0)).print();
+        }
+        Some("gen-data") => cmd_gen_data(&cfg)?,
+        Some("build") => cmd_build(&cfg)?,
+        Some("search") => cmd_search(&cfg)?,
+        Some("serve") => cmd_serve(&cfg)?,
+        Some("sim") => cmd_sim(&cfg)?,
+        Some("figures") => cmd_figures(&cfg)?,
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand: {o}");
+            }
+            eprintln!(
+                "usage: proxima <datasets|gen-data|build|search|serve|sim|figures> [--options]"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn dataset_from_cfg(cfg: &Config) -> Result<proxima::dataset::Dataset> {
+    let name = cfg.get_str("dataset").unwrap_or("sift-s");
+    let scale = cfg.get_f64("scale", 0.05);
+    let spec = SynthSpec::by_name(name, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name} (try `proxima datasets`)"))?;
+    eprintln!(
+        "[proxima] dataset {name}: {} base x {}d ({}), {} queries",
+        spec.n_base,
+        spec.dim,
+        spec.metric.name(),
+        spec.n_queries
+    );
+    Ok(spec.generate())
+}
+
+fn service_from_cfg(cfg: &Config) -> Result<(proxima::dataset::Dataset, SearchService)> {
+    let ds = dataset_from_cfg(cfg)?;
+    let gp = GraphParams::from_config(cfg);
+    let pq = PqParams::from_config(cfg, ds.dim());
+    let params = SearchParams::from_config(cfg);
+    let use_xla = !cfg.get_bool("no_xla", false);
+    eprintln!("[proxima] building index (R={}, L_build={})...", gp.r, gp.build_l);
+    let t0 = std::time::Instant::now();
+    let svc = SearchService::build(&ds, &gp, &pq, params, use_xla);
+    if svc.runtime.is_some() {
+        eprintln!("[proxima] XLA artifacts loaded (AOT request path active)");
+    } else {
+        eprintln!("[proxima] no artifacts / --no_xla; native fallback (run `make artifacts`)");
+    }
+    eprintln!(
+        "[proxima] index built in {:.1}s: {} edges, gap-encoded {:.0} KB",
+        t0.elapsed().as_secs_f64(),
+        svc.graph.n_edges(),
+        svc.gap.as_ref().map(|g| g.size_bits() / 8192).unwrap_or(0)
+    );
+    Ok((ds, svc))
+}
+
+fn cmd_gen_data(cfg: &Config) -> Result<()> {
+    let ds = dataset_from_cfg(cfg)?;
+    let out = cfg.get_str("out").unwrap_or("data/dataset.bin");
+    proxima::dataset::io::save_dataset(&ds, std::path::Path::new(out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_build(cfg: &Config) -> Result<()> {
+    let (_ds, svc) = service_from_cfg(cfg)?;
+    println!(
+        "graph: {} vertices, {} edges, mean degree {:.1}, connectivity {:.3}",
+        svc.graph.n(),
+        svc.graph.n_edges(),
+        svc.graph.mean_degree(),
+        svc.graph.connectivity()
+    );
+    if let Some(gap) = &svc.gap {
+        println!(
+            "gap encoding: {:.1} b/edge vs 32 uncompressed ({:.0}% saved)",
+            gap.mean_bits_per_edge(svc.graph.n_edges()),
+            (1.0 - gap.compression_ratio(svc.graph.n_edges())) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_search(cfg: &Config) -> Result<()> {
+    let (ds, svc) = service_from_cfg(cfg)?;
+    let k = cfg.get_usize("k", 10);
+    let gt = proxima::dataset::ground_truth::brute_force(&ds, k);
+    let t0 = std::time::Instant::now();
+    let mut results = Vec::new();
+    for qi in 0..ds.n_queries() {
+        results.push(svc.search(ds.queries.row(qi), k).ids);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let recall = proxima::dataset::mean_recall(&results, &gt, k);
+    println!(
+        "recall@{k} = {recall:.4}   QPS = {:.0}   mean latency = {:.0} us   ET rate = {:.2}",
+        ds.n_queries() as f64 / secs,
+        svc.mean_latency_us(),
+        svc.stats.early_terminated.load(std::sync::atomic::Ordering::Relaxed) as f64
+            / ds.n_queries() as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let (_ds, svc) = service_from_cfg(cfg)?;
+    let svc = Arc::new(svc);
+    let policy = BatchPolicy {
+        max_batch: cfg.get_usize("batch", 16),
+        max_wait: std::time::Duration::from_millis(cfg.get_u64("batch_wait_ms", 2)),
+    };
+    let workers = cfg.get_usize("workers", 2);
+    let (handle, _join) = spawn(svc.clone(), policy, workers);
+    let port = cfg.get_usize("port", 7878) as u16;
+    let server = Server::start(svc, handle, port)?;
+    println!("proxima serving on {}", server.addr);
+    println!("protocol: one JSON per line; see coordinator::server docs");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_sim(cfg: &Config) -> Result<()> {
+    let name = cfg.get_str("dataset").unwrap_or("sift-s");
+    let scale = cfg.get_f64("scale", 0.02);
+    let w = figures::Workbench::get(name, scale, 10);
+    let hot = cfg.get_f64("hot", 0.03);
+    let l = cfg.get_usize("l", 100);
+    let traces = if hot > 0.0 {
+        figures::fig13::proxima_hot_traces(&w, l, 10, hot)
+    } else {
+        figures::collect_traces(&w, figures::Algo::Proxima, l, 10).0
+    };
+    let mapping = figures::default_mapping(&w, hot);
+    let mut ecfg = proxima::engine::EngineConfig::paper(w.ds.dim(), w.codebook.m);
+    ecfg.n_queues = cfg.get_usize("queues", 256);
+    let r = proxima::engine::sim::simulate(&ecfg, &mapping, &traces);
+    println!(
+        "simulated {} queries: QPS={:.0}  mean latency={:.1} us  p99={:.1} us",
+        r.n_queries,
+        r.qps,
+        r.mean_latency_ns / 1000.0,
+        r.p99_latency_ns / 1000.0
+    );
+    println!(
+        "energy: {:.3} mJ total, {:.1} QPS/W; core util {:.1}%, queue util {:.1}%, {} conflicts",
+        r.energy_j * 1e3,
+        r.qps_per_watt,
+        r.core_utilization * 100.0,
+        r.queue_utilization * 100.0,
+        r.conflicts
+    );
+    let b = &r.breakdown;
+    println!(
+        "per-query: nand {:.1}us bus {:.1}us compute {:.1}us sort {:.1}us adt {:.1}us",
+        b.nand_ns / 1000.0,
+        b.bus_ns / 1000.0,
+        b.compute_ns / 1000.0,
+        b.sort_ns / 1000.0,
+        b.adt_ns / 1000.0
+    );
+    Ok(())
+}
+
+fn cmd_figures(cfg: &Config) -> Result<()> {
+    let which = cfg.get_str("fig").unwrap_or("all");
+    let scale = cfg.get_f64("scale", figures::default_scale());
+    let small = figures::small_datasets();
+    let mut emitted: Vec<Table> = Vec::new();
+    let want = |f: &str| which == "all" || which == f;
+    if want("t1") {
+        emitted.push(figures::tables::table1(scale));
+    }
+    if want("3") {
+        emitted.push(figures::fig03::run(&small, scale));
+    }
+    if want("6") {
+        emitted.extend(figures::fig06::run(&small, scale));
+    }
+    if want("9") {
+        emitted.push(figures::fig09::run());
+    }
+    if want("11") {
+        emitted.push(figures::fig11::run(&figures::all_datasets(), scale));
+    }
+    if want("12") {
+        emitted.push(figures::fig12::run(&small, scale));
+    }
+    if want("13") {
+        emitted.push(figures::fig13::run(&small, scale));
+    }
+    if want("14") {
+        emitted.push(figures::fig14::run(&small, scale));
+    }
+    if want("15") {
+        emitted.push(figures::fig15::run(&[small[0]], scale));
+    }
+    if want("16") {
+        emitted.push(figures::fig16::run(&[small[0]], scale));
+    }
+    if want("17") {
+        emitted.push(figures::fig17::run(&small, scale));
+    }
+    if want("t2") {
+        emitted.push(figures::tables::table2());
+    }
+    if want("t3") {
+        emitted.push(figures::tables::table3());
+    }
+    if want("ablations") {
+        emitted.extend(figures::ablations::run(small[0], scale));
+    }
+    if emitted.is_empty() {
+        anyhow::bail!("unknown figure id {which}");
+    }
+    for t in &emitted {
+        t.print();
+    }
+    if let Some(out) = cfg.get_str("out") {
+        std::fs::create_dir_all(out)?;
+        for (i, t) in emitted.iter().enumerate() {
+            t.write_csv(&format!("figure_{which}_{i}"))?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Area and density model (Table II, Table III, Fig 9).
+//!
+//! The NAND tier area is set by the memory array footprint (CUA puts the
+//! peripherals underneath; Cu-Cu bonding puts the search engine on the
+//! CMOS wafer, so both are "factored out" of the NAND tier — §V-C). The
+//! page buffer is the one peripheral that scales with the visible page
+//! width; the BL MUX divides it (§IV-C: "reduces the area overhead of the
+//! peripheral circuits in the page buffer by a factor of 32").
+//!
+//! Calibration anchors: core 0.505 mm², tile (32 cores + bus) 16.16 mm²,
+//! total 258.56 mm² (Table II); bit density 1.7 Gb/mm² (Table III).
+
+use super::NandConfig;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// Effective area per (BL × SSL-block column) cell site, mm² — folds
+    /// BL/WL pitches at the 96-layer node.
+    pub cell_site_mm2: f64,
+    /// Page-buffer (sense amp + latch) area per sensed BL, mm².
+    pub page_buffer_per_bl_mm2: f64,
+    /// H-tree bus area per core within a tile, mm².
+    pub core_bus_mm2: f64,
+    /// Tile-level bus area per tile, mm².
+    pub tile_bus_mm2: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        // Solve cell_site from the 0.505 mm² core anchor:
+        // sites per core = n_bl * n_ssl * n_block = 36864*4*64 = 9.44M.
+        let sites = 36864.0 * 4.0 * 64.0;
+        AreaModel {
+            cell_site_mm2: 0.505 / sites * 0.97, // 3% left for the MUX'd buffer
+            page_buffer_per_bl_mm2: 0.505 * 0.03 / (36864.0 / 32.0),
+            core_bus_mm2: 0.163 / 32.0,
+            tile_bus_mm2: 1.309,
+        }
+    }
+}
+
+impl AreaModel {
+    /// One core's area (array + MUX'd page buffer), mm².
+    pub fn core_mm2(&self, cfg: &NandConfig) -> f64 {
+        let sites = cfg.n_bl as f64 * cfg.n_ssl as f64 * cfg.n_block as f64;
+        let array = sites * self.cell_site_mm2;
+        let buffer = (cfg.n_bl as f64 / cfg.mux as f64) * self.page_buffer_per_bl_mm2;
+        array + buffer
+    }
+
+    /// One tile (32 cores), mm². Table II: the H-tree bus areas are
+    /// "factored out by incorporating the heterogeneous integration" —
+    /// they live under the array (CUA) — so the tile footprint is the
+    /// cores alone; bus areas are reported as separate line items.
+    pub fn tile_mm2(&self, cfg: &NandConfig) -> f64 {
+        self.core_mm2(cfg) * cfg.cores_per_tile as f64
+    }
+
+    /// Whole NAND tier, mm² (Table II total: 258.56 = 16 x 16.16).
+    pub fn total_mm2(&self, cfg: &NandConfig) -> f64 {
+        self.tile_mm2(cfg) * cfg.n_tiles as f64
+    }
+
+    /// Bit density, Gb/mm² (Table III row: Proxima 1.7, HBM2 0.7, DRAM 0.2,
+    /// VStore's dense TLC SSD 4.2).
+    pub fn density_gb_per_mm2(&self, cfg: &NandConfig) -> f64 {
+        (cfg.total_bits() as f64 / (1u64 << 30) as f64) / self.total_mm2(cfg)
+    }
+}
+
+/// Search-engine area calculator (Table II bottom half): per-module area
+/// entries at 22 nm. SRAM area uses a CACTI-like mm²/KB constant; logic
+/// blocks use gate-count estimates.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineAreaModel {
+    /// mm² per KB of SRAM at 22nm.
+    pub sram_mm2_per_kb: f64,
+    /// mm² per FP16 MAC.
+    pub mac_mm2: f64,
+    /// mm² per bitonic comparator stage element.
+    pub comparator_mm2: f64,
+    /// Fixed control overhead per queue, mm².
+    pub queue_ctrl_mm2: f64,
+}
+
+impl Default for EngineAreaModel {
+    fn default() -> Self {
+        EngineAreaModel {
+            // Table II: codebook 64 KB = 0.058 mm² -> ~0.0009 mm²/KB.
+            sram_mm2_per_kb: 0.058 / 64.0,
+            // 32 MACs = 0.024 mm².
+            mac_mm2: 0.024 / 32.0,
+            // Sorter 0.237 mm² for a 256-lane network (2944 comparators).
+            comparator_mm2: 0.237 / 2944.0,
+            // Queues: 256 queues = 9.012 mm²; each queue holds a 16 KB ADT
+            // memory + buffers ≈ 0.0187 mm² SRAM; remainder is control.
+            queue_ctrl_mm2: 9.012 / 256.0 - (16.0 + 2.0) * (0.058 / 64.0),
+        }
+    }
+}
+
+/// Per-module area/power line items for the Table II regeneration.
+#[derive(Clone, Debug)]
+pub struct EngineBreakdown {
+    pub rows: Vec<(String, f64)>, // (module, mm²)
+    pub total_mm2: f64,
+}
+
+impl EngineAreaModel {
+    /// Compute the Table II search-engine area breakdown for a config.
+    pub fn breakdown(&self, n_queues: usize, sorter_lanes: usize, n_macs: usize) -> EngineBreakdown {
+        let queue_mm2 =
+            n_queues as f64 * (self.queue_ctrl_mm2 + (16.0 + 2.0) * self.sram_mm2_per_kb);
+        let cl_mm2 = 2.0 * self.sram_mm2_per_kb;
+        let bloom_mm2 = 12.0 * self.sram_mm2_per_kb;
+        let adt_mm2 = 16.0 * self.sram_mm2_per_kb;
+        let codebook_mm2 = 64.0 * self.sram_mm2_per_kb;
+        let macs_mm2 = n_macs as f64 * self.mac_mm2;
+        let pq_mm2 = codebook_mm2 + macs_mm2;
+        let lanes = sorter_lanes as f64;
+        let lg = (sorter_lanes as f64).log2().ceil();
+        let comparators = lanes / 2.0 * lg * (lg + 1.0) / 2.0;
+        let sorter_mm2 = comparators * self.comparator_mm2;
+        let rows = vec![
+            ("Search Queues".to_string(), queue_mm2),
+            ("Candidate List".to_string(), cl_mm2),
+            ("Bloom Filter".to_string(), bloom_mm2),
+            ("ADT Module".to_string(), adt_mm2),
+            ("PQ Module".to_string(), pq_mm2),
+            ("Codebook Mem.".to_string(), codebook_mm2),
+            ("FP16-MACs".to_string(), macs_mm2),
+            ("Bitonic Sorter".to_string(), sorter_mm2),
+        ];
+        // PQ module subsumes codebook+MACs; total counts it once.
+        let total_mm2 = queue_mm2 + cl_mm2 + bloom_mm2 + adt_mm2 + pq_mm2 + sorter_mm2;
+        EngineBreakdown { rows, total_mm2 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_area_anchor() {
+        let a = AreaModel::default();
+        let core = a.core_mm2(&NandConfig::proxima());
+        assert!((core - 0.505).abs() < 0.01, "core {core} mm²");
+    }
+
+    #[test]
+    fn total_area_anchor() {
+        let a = AreaModel::default();
+        let total = a.total_mm2(&NandConfig::proxima());
+        assert!(
+            (total - 258.56).abs() < 8.0,
+            "total {total} mm² vs Table II 258.56"
+        );
+    }
+
+    #[test]
+    fn density_anchor() {
+        let a = AreaModel::default();
+        let d = a.density_gb_per_mm2(&NandConfig::proxima());
+        assert!((d - 1.7).abs() < 0.2, "density {d} Gb/mm²");
+    }
+
+    #[test]
+    fn mux_shrinks_page_buffer() {
+        let a = AreaModel::default();
+        let mut cfg = NandConfig::proxima();
+        let with_mux = a.core_mm2(&cfg);
+        cfg.mux = 1;
+        let without = a.core_mm2(&cfg);
+        assert!(without > with_mux);
+    }
+
+    #[test]
+    fn engine_breakdown_near_table2() {
+        let m = EngineAreaModel::default();
+        let b = m.breakdown(256, 256, 32);
+        assert!(
+            (b.total_mm2 - 9.331).abs() < 0.5,
+            "engine total {} mm² vs 9.331",
+            b.total_mm2
+        );
+        let queues = b.rows.iter().find(|(n, _)| n == "Search Queues").unwrap().1;
+        assert!((queues - 9.012).abs() < 0.2, "queues {queues}");
+    }
+}

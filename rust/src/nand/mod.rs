@@ -1,0 +1,135 @@
+//! 3D NAND flash device model (paper §IV-A/§IV-C, Fig 9, Table II).
+//!
+//! Stands in for the authors' 3D-FPIM-based back-end simulator: an analytic
+//! RC timing model, an energy model, and an area/density model, all
+//! parameterized by the array geometry and calibrated against the anchor
+//! points the paper itself reports:
+//!
+//! * custom Proxima core (`N_BL`=36864, 4 SSL, 64 blocks, 32:1 BL MUX,
+//!   96 layers): read latency **< 300 ns**, 128 B data granularity,
+//!   0.505 mm², 4442 pJ dynamic read energy (Table II);
+//! * commodity SSD arrays (16 KB pages, ~1k blocks): **15–90 µs** page
+//!   reads (§IV-C cites [26], [37], [40]);
+//! * 16 tiles × 32 cores = 512 cores = **432 Gb** total (Table II).
+
+pub mod area;
+pub mod energy;
+pub mod timing;
+
+/// Geometry + integration parameters of one 3D NAND core and the
+/// tile/core hierarchy above it.
+#[derive(Clone, Debug)]
+pub struct NandConfig {
+    /// Word-line layers (paper: Samsung 96-layer).
+    pub layers: u32,
+    /// Bit lines per core (== physical page width in bits for SLC).
+    pub n_bl: u32,
+    /// String-select lines per block.
+    pub n_ssl: u32,
+    /// Blocks per core.
+    pub n_block: u32,
+    /// BL multiplexer ratio between page buffer and array (32:1 → 128 B
+    /// granularity at 36864 BLs).
+    pub mux: u32,
+    /// Bits per cell (1 = SLC; the paper rejects MLC for its error rate).
+    pub bits_per_cell: u32,
+    /// Cores per tile.
+    pub cores_per_tile: u32,
+    /// Tiles.
+    pub n_tiles: u32,
+}
+
+impl NandConfig {
+    /// The Proxima accelerator configuration (§IV-C, Table II).
+    pub fn proxima() -> NandConfig {
+        NandConfig {
+            layers: 96,
+            n_bl: 36864,
+            n_ssl: 4,
+            n_block: 64,
+            mux: 32,
+            bits_per_cell: 1,
+            cores_per_tile: 32,
+            n_tiles: 16,
+        }
+    }
+
+    /// A commodity-SSD-like array (density-optimized: big page, many
+    /// blocks, no MUX) used as the Fig 9 contrast point.
+    pub fn commodity_ssd() -> NandConfig {
+        NandConfig {
+            layers: 96,
+            n_bl: 131072, // 16 KB page
+            n_ssl: 4,
+            n_block: 1024,
+            mux: 1,
+            bits_per_cell: 3, // TLC
+            cores_per_tile: 4,
+            n_tiles: 4,
+        }
+    }
+
+    pub fn n_cores(&self) -> u32 {
+        self.cores_per_tile * self.n_tiles
+    }
+
+    /// Physical page size in bits (one WL of one SSL across all BLs).
+    pub fn page_bits(&self) -> u64 {
+        self.n_bl as u64 * self.bits_per_cell as u64
+    }
+
+    /// Data granularity per access through the BL MUX, in bytes
+    /// (paper: 36864/32 = 1152 b ≈ 128 B usable with ~11% spare columns;
+    /// we report the exact value).
+    pub fn granularity_bytes(&self) -> u64 {
+        self.page_bits() / self.mux as u64 / 8
+    }
+
+    /// Capacity of one core in bits.
+    pub fn core_bits(&self) -> u64 {
+        self.n_bl as u64
+            * self.n_ssl as u64
+            * self.n_block as u64
+            * self.layers as u64
+            * self.bits_per_cell as u64
+    }
+
+    /// Total accelerator capacity in bits (paper: 432 Gb).
+    pub fn total_bits(&self) -> u64 {
+        self.core_bits() * self.n_cores() as u64
+    }
+
+    /// Pages per core (addressable WL/SSL combinations).
+    pub fn pages_per_core(&self) -> u64 {
+        self.n_ssl as u64 * self.n_block as u64 * self.layers as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proxima_capacity_matches_table2() {
+        let cfg = NandConfig::proxima();
+        assert_eq!(cfg.n_cores(), 512);
+        // 36864 * 4 * 64 * 96 = 905,969,664 bits/core.
+        assert_eq!(cfg.core_bits(), 905_969_664);
+        // Total 432 Gb (Gb = 2^30 bits).
+        let gb = cfg.total_bits() as f64 / (1u64 << 30) as f64;
+        assert!((gb - 432.0).abs() < 1.0, "total {gb} Gb");
+    }
+
+    #[test]
+    fn granularity_is_128b_class() {
+        let cfg = NandConfig::proxima();
+        let g = cfg.granularity_bytes();
+        assert!((128..=160).contains(&(g as i64)), "granularity {g} B");
+    }
+
+    #[test]
+    fn commodity_page_is_16kb() {
+        let cfg = NandConfig::commodity_ssd();
+        assert_eq!(cfg.page_bits() / 8, 49152); // 16K cells * 3 b/cell
+    }
+}

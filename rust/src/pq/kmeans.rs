@@ -1,0 +1,192 @@
+//! Lloyd's k-means with k-means++ seeding — the offline training step for
+//! PQ codebooks (paper §III-B: "C centroids of each subdimension from
+//! k-means"). Operates on flat row-major data; L2 objective.
+
+use crate::distance::l2_sq;
+use crate::util::rng::Xoshiro256pp;
+
+/// Run k-means and return `k * dim` centroid storage.
+///
+/// * k-means++ initialization for spread-out seeds;
+/// * empty clusters are re-seeded from the point farthest from its center
+///   (standard fixup);
+/// * stops early when assignments stabilize.
+pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Vec<f32> {
+    let n = data.len() / dim;
+    assert!(n > 0 && k > 0);
+    let k = k.min(n);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let row = |i: usize| &data[i * dim..(i + 1) * dim];
+
+    // --- k-means++ seeding ---
+    let mut centers = vec![0.0f32; k * dim];
+    let first = rng.gen_range(n);
+    centers[..dim].copy_from_slice(row(first));
+    let mut min_d: Vec<f32> = (0..n).map(|i| l2_sq(row(i), &centers[..dim])).collect();
+    for c in 1..k {
+        let total: f64 = min_d.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.gen_range(n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut chosen = n - 1;
+            for (i, &d) in min_d.iter().enumerate() {
+                target -= d as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centers[c * dim..(c + 1) * dim].copy_from_slice(row(pick));
+        for i in 0..n {
+            let d = l2_sq(row(i), &centers[c * dim..(c + 1) * dim]);
+            if d < min_d[i] {
+                min_d[i] = d;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let mut assign = vec![0u32; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        // Assignment step.
+        for i in 0..n {
+            let v = row(i);
+            let mut best = assign[i] as usize;
+            let mut best_d = l2_sq(v, &centers[best * dim..(best + 1) * dim]);
+            for c in 0..k {
+                if c == best {
+                    continue;
+                }
+                let d = l2_sq(v, &centers[c * dim..(c + 1) * dim]);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assign[i] != best as u32 {
+                assign[i] = best as u32;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+        // Update step.
+        let mut counts = vec![0u32; k];
+        let mut sums = vec![0.0f64; k * dim];
+        for i in 0..n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            for (j, &x) in row(i).iter().enumerate() {
+                sums[c * dim + j] += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed from the point farthest from its current center.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = l2_sq(row(a), &centers[assign[a] as usize * dim..][..dim]);
+                        let db = l2_sq(row(b), &centers[assign[b] as usize * dim..][..dim]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centers[c * dim..(c + 1) * dim].copy_from_slice(row(far));
+            } else {
+                for j in 0..dim {
+                    centers[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    centers
+}
+
+/// Sum of squared distances of every point to its nearest center (the
+/// k-means objective) — used by tests to verify improvement.
+pub fn inertia(data: &[f32], dim: usize, centers: &[f32]) -> f64 {
+    let n = data.len() / dim;
+    let k = centers.len() / dim;
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let v = &data[i * dim..(i + 1) * dim];
+        let mut best = f32::INFINITY;
+        for c in 0..k {
+            let d = l2_sq(v, &centers[c * dim..(c + 1) * dim]);
+            if d < best {
+                best = d;
+            }
+        }
+        total += best as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn blob_data(k: usize, per: usize, dim: usize, sep: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(k * per * dim);
+        for c in 0..k {
+            for _ in 0..per {
+                for j in 0..dim {
+                    let center = if j % k == c { sep } else { 0.0 };
+                    data.push(center + rng.next_gaussian() as f32 * 0.1);
+                }
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let data = blob_data(4, 50, 8, 10.0, 1);
+        let centers = kmeans(&data, 8, 4, 20, 2);
+        // Inertia with recovered centers must be tiny relative to variance.
+        let obj = inertia(&data, 8, &centers);
+        assert!(obj / 200.0 < 0.5, "inertia per point {}", obj / 200.0);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let data = blob_data(4, 40, 6, 5.0, 3);
+        let i1 = inertia(&data, 6, &kmeans(&data, 6, 1, 10, 4));
+        let i4 = inertia(&data, 6, &kmeans(&data, 6, 4, 10, 4));
+        let i16 = inertia(&data, 6, &kmeans(&data, 6, 16, 10, 4));
+        assert!(i4 < i1);
+        assert!(i16 < i4);
+    }
+
+    #[test]
+    fn k_capped_at_n() {
+        let data = vec![0.0f32; 3 * 4]; // 3 points, dim 4
+        let centers = kmeans(&data, 4, 10, 5, 5);
+        assert_eq!(centers.len(), 3 * 4);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let data = blob_data(3, 30, 5, 4.0, 6);
+        let a = kmeans(&data, 5, 3, 15, 7);
+        let b = kmeans(&data, 5, 3, 15, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn centers_within_data_hull() {
+        // Every centroid coordinate must lie within [min, max] of the data.
+        let data = blob_data(2, 30, 4, 3.0, 8);
+        let centers = kmeans(&data, 4, 2, 10, 9);
+        let (lo, hi) = data.iter().fold((f32::MAX, f32::MIN), |(l, h), &x| {
+            (l.min(x), h.max(x))
+        });
+        assert!(centers.iter().all(|&c| c >= lo - 1e-5 && c <= hi + 1e-5));
+    }
+}

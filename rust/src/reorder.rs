@@ -1,0 +1,280 @@
+//! Graph index reordering and hot-node selection (paper §IV-E, Fig 10a).
+//!
+//! Vertices are relabeled by descending visit frequency measured on a graph
+//! search trace over randomly sampled base vectors, so the hottest vertex
+//! gets index 0 (and the entry point "starts from 0"). The hottest `h%` of
+//! vertices become **hot nodes**: their pages store each neighbor's PQ code
+//! fused next to the index row, so one WL/page access serves the entire
+//! line 6-9 loop of Algorithm 1.
+
+use crate::config::SearchParams;
+use crate::dataset::VectorSet;
+use crate::pq::PqCodebook;
+use crate::pq::PqCodes;
+use crate::search::beam::SearchContext;
+use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::graph::Graph;
+use crate::util::rng::Xoshiro256pp;
+
+/// Visit-frequency profile of a graph.
+#[derive(Clone, Debug)]
+pub struct VisitProfile {
+    /// counts[v] = number of times v was expanded or fetched.
+    pub counts: Vec<u64>,
+}
+
+impl VisitProfile {
+    /// Profile by running Proxima searches for `samples` random base
+    /// vectors used as queries (the paper's methodology).
+    pub fn measure(
+        base: &VectorSet,
+        graph: &Graph,
+        codebook: &PqCodebook,
+        codes: &PqCodes,
+        params: &SearchParams,
+        samples: usize,
+        seed: u64,
+    ) -> VisitProfile {
+        let mut counts = vec![0u64; graph.n()];
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let ctx = SearchContext {
+            base,
+            metric: codebook.metric,
+            graph,
+            codes: Some(codes),
+            gap: None,
+        };
+        for _ in 0..samples {
+            let qid = rng.gen_range(base.len());
+            let q = base.row(qid);
+            let adt = codebook.build_adt(q);
+            let out = proxima_search(&ctx, &adt, q, params, ProximaFeatures::default(), true);
+            if let Some(trace) = out.trace {
+                for op in trace.ops {
+                    use crate::search::TraceOp::*;
+                    match op {
+                        FetchIndex { node, .. }
+                        | FetchPq { node, .. }
+                        | FetchRaw { node, .. }
+                        | FetchHot { node, .. } => counts[node as usize] += 1,
+                        _ => {}
+                    }
+                }
+            }
+        }
+        VisitProfile { counts }
+    }
+
+    /// Permutation `perm[old] = new` sorting by descending frequency (ties
+    /// by old id for determinism).
+    pub fn reorder_permutation(&self) -> Vec<u32> {
+        let n = self.counts.len();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by(|&a, &b| {
+            self.counts[b as usize]
+                .cmp(&self.counts[a as usize])
+                .then(a.cmp(&b))
+        });
+        // order[rank] = old id; invert.
+        let mut perm = vec![0u32; n];
+        for (rank, &old) in order.iter().enumerate() {
+            perm[old as usize] = rank as u32;
+        }
+        perm
+    }
+
+    /// Fraction of total visits covered by the top `frac` of vertices —
+    /// quantifies the skew that makes hot-node repetition pay off.
+    pub fn coverage(&self, frac: f64) -> f64 {
+        let mut sorted = self.counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top = ((self.counts.len() as f64 * frac).ceil() as usize).max(1);
+        let covered: u64 = sorted.iter().take(top).sum();
+        let total: u64 = sorted.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            covered as f64 / total as f64
+        }
+    }
+}
+
+/// A reordered index bundle: graph + codes permuted together, with the
+/// hot-node set being ids `0..n_hot` by construction.
+pub struct ReorderedIndex {
+    pub graph: Graph,
+    pub codes: PqCodes,
+    /// perm[old] = new (needed to relabel ground truth / map back results).
+    pub perm: Vec<u32>,
+    /// inverse: inv[new] = old.
+    pub inv: Vec<u32>,
+    pub n_hot: usize,
+}
+
+impl ReorderedIndex {
+    /// Apply a frequency reordering and designate `hot_frac` of vertices
+    /// (by new index) as hot nodes.
+    pub fn build(
+        graph: &Graph,
+        codes: &PqCodes,
+        profile: &VisitProfile,
+        hot_frac: f64,
+    ) -> ReorderedIndex {
+        let perm = profile.reorder_permutation();
+        let g2 = graph.remap(&perm);
+        let n = graph.n();
+        let mut inv = vec![0u32; n];
+        for (old, &new) in perm.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        // Permute PQ codes rows: new row r holds codes of old vertex inv[r].
+        let m = codes.m;
+        let mut new_codes = vec![0u8; codes.codes.len()];
+        for new in 0..n {
+            let old = inv[new] as usize;
+            new_codes[new * m..(new + 1) * m].copy_from_slice(codes.row(old));
+        }
+        let n_hot = ((n as f64) * hot_frac).round() as usize;
+        ReorderedIndex {
+            graph: g2,
+            codes: PqCodes {
+                m,
+                codes: new_codes,
+            },
+            perm,
+            inv,
+            n_hot,
+        }
+    }
+
+    /// Map result ids (new space) back to original ids.
+    pub fn ids_to_original(&self, ids: &[u32]) -> Vec<u32> {
+        ids.iter().map(|&id| self.inv[id as usize]).collect()
+    }
+
+    /// Extra storage bits required by hot-node repetition (paper §IV-E):
+    /// each hot node stores R x (b_index + b_pq) + b_pq.
+    pub fn hot_storage_bits(&self, b_index: u32) -> u64 {
+        let b_pq = (self.codes.m * 8) as u64;
+        (0..self.n_hot)
+            .map(|v| {
+                let r = self.graph.neighbors(v as u32).len() as u64;
+                r * (b_index as u64 + b_pq) + b_pq
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GraphParams;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+    use crate::graph::vamana;
+
+    fn fixture() -> (crate::dataset::Dataset, Graph, PqCodebook, PqCodes) {
+        let ds = tiny_uniform(400, 12, Metric::L2, 61);
+        let g = vamana::build(
+            &ds.base,
+            ds.metric,
+            &GraphParams {
+                r: 12,
+                build_l: 32,
+                alpha: 1.2,
+                seed: 61,
+            },
+        );
+        let cb = PqCodebook::train(&ds.base, ds.metric, 6, 32, 400, 8, 61);
+        let codes = cb.encode(&ds.base);
+        (ds, g, cb, codes)
+    }
+
+    #[test]
+    fn profile_counts_are_skewed_toward_entry() {
+        let (ds, g, cb, codes) = fixture();
+        let prof = VisitProfile::measure(&ds.base, &g, &cb, &codes, &SearchParams::default(), 30, 1);
+        // The entry point region must be visited by every query.
+        assert!(prof.counts[g.entry_point as usize] > 0);
+        // Visit distribution is skewed: top 10% of vertices cover clearly
+        // more than 10% of visits (uniform tiny data gives mild skew; the
+        // clustered synth datasets in the benches give the paper's strong
+        // skew — asserted in the fig15 bench).
+        assert!(prof.coverage(0.1) > 0.15, "coverage {}", prof.coverage(0.1));
+    }
+
+    #[test]
+    fn permutation_is_bijective_and_frequency_sorted() {
+        let prof = VisitProfile {
+            counts: vec![5, 100, 0, 7],
+        };
+        let perm = prof.reorder_permutation();
+        // old 1 (count 100) -> new 0; old 3 (7) -> 1; old 0 (5) -> 2; old 2 -> 3.
+        assert_eq!(perm, vec![2, 0, 3, 1]);
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reordered_search_results_map_back_identically() {
+        let (ds, g, cb, codes) = fixture();
+        let prof = VisitProfile::measure(&ds.base, &g, &cb, &codes, &SearchParams::default(), 20, 2);
+        let re = ReorderedIndex::build(&g, &codes, &prof, 0.03);
+        re.graph.validate().unwrap();
+
+        // Search in the *original* space.
+        let ctx = SearchContext {
+            base: &ds.base,
+            metric: ds.metric,
+            graph: &g,
+            codes: Some(&codes),
+            gap: None,
+        };
+        let params = SearchParams {
+            l: 60,
+            k: 5,
+            ..Default::default()
+        };
+        let q = ds.queries.row(0);
+        let adt = cb.build_adt(q);
+        let orig = proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false);
+
+        // Search in the reordered space requires a permuted base. Build it.
+        let mut base2 = crate::dataset::VectorSet::zeros(ds.n_base(), ds.dim());
+        for old in 0..ds.n_base() {
+            let new = re.perm[old] as usize;
+            base2.row_mut(new).copy_from_slice(ds.base.row(old));
+        }
+        let ctx2 = SearchContext {
+            base: &base2,
+            metric: ds.metric,
+            graph: &re.graph,
+            codes: Some(&re.codes),
+            gap: None,
+        };
+        let out2 = proxima_search(&ctx2, &adt, q, &params, ProximaFeatures::default(), false);
+        let mapped = re.ids_to_original(&out2.ids);
+        // Same candidates (order may tie-break differently on equal dists).
+        let mut a = orig.ids.clone();
+        let mut b = mapped.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hot_storage_cost_formula() {
+        let (_ds, g, _cb, codes) = fixture();
+        let prof = VisitProfile {
+            counts: vec![1; g.n()],
+        };
+        let re = ReorderedIndex::build(&g, &codes, &prof, 0.05);
+        let bits = re.hot_storage_bits(32);
+        // 5% of 400 = 20 hot nodes; each costs R*(32+48)+48 bits at m=6.
+        let expect: u64 = (0..20)
+            .map(|v| re.graph.neighbors(v as u32).len() as u64 * (32 + 48) + 48)
+            .sum();
+        assert_eq!(bits, expect);
+    }
+}

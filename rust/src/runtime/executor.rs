@@ -1,0 +1,233 @@
+//! Typed executors over the AOT artifacts: the L3 ↔ L2 seam.
+//!
+//! [`XlaDistance`] binds a [`Runtime`] to one dataset configuration
+//! (metric, D, M, C) and serves the three dense per-query batches on the
+//! request path — ADT build, rerank, PQ scan — plus tiled brute-force
+//! ground truth. The angular metric runs on the `ip` artifacts with the
+//! `+1` bias folded in afterwards (ranking-neutral, value-exact), exactly
+//! mirroring `distance::Metric::adt_bias`.
+
+use super::{InputBuf, Runtime};
+use crate::dataset::{GroundTruth, VectorSet};
+use crate::distance::Metric;
+use crate::pq::{Adt, PqCodebook, PqCodes};
+use anyhow::{anyhow, Result};
+
+/// Distance engine backed by compiled XLA executables.
+pub struct XlaDistance<'rt> {
+    rt: &'rt Runtime,
+    pub metric: Metric,
+    pub dim: usize,
+    pub m: usize,
+    pub c: usize,
+    adt_name: String,
+    rerank_name: String,
+    scan_name: String,
+    gt_name: String,
+}
+
+impl<'rt> XlaDistance<'rt> {
+    /// Bind to a dataset shape; errors if no artifact covers it.
+    pub fn new(rt: &'rt Runtime, metric: Metric, dim: usize, m: usize, c: usize) -> Result<Self> {
+        // Angular runs on the ip partials (bias folded here).
+        let metric_tag = match metric {
+            Metric::L2 => "l2",
+            Metric::Ip | Metric::Angular => "ip",
+        };
+        let find = |kind: &str, key: Option<usize>| -> Result<String> {
+            rt.manifest
+                .find(kind, Some(metric_tag), key)
+                .map(|a| a.name.clone())
+                .ok_or_else(|| anyhow!("no {kind} artifact for {metric_tag}/d{dim}"))
+        };
+        let scan_name = rt
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == "scan" && a.m == Some(m))
+            .map(|a| a.name.clone())
+            .ok_or_else(|| anyhow!("no scan artifact for m={m}"))?;
+        Ok(XlaDistance {
+            rt,
+            metric,
+            dim,
+            m,
+            c,
+            adt_name: find("adt", Some(dim))?,
+            rerank_name: find("rerank", Some(dim))?,
+            gt_name: find("gt", Some(dim))?,
+            scan_name,
+        })
+    }
+
+    /// Build the ADT for a query through the `adt_*` artifact.
+    pub fn build_adt(&self, codebook: &PqCodebook, q: &[f32]) -> Result<Adt> {
+        assert_eq!(q.len(), self.dim);
+        assert_eq!(codebook.m, self.m);
+        let dsub = self.dim / self.m;
+        let mut table = self.rt.run_f32(
+            &self.adt_name,
+            &[
+                InputBuf::F32 {
+                    data: q,
+                    dims: vec![self.dim as i64],
+                },
+                InputBuf::F32 {
+                    data: &codebook.centroids,
+                    dims: vec![self.m as i64, self.c as i64, dsub as i64],
+                },
+            ],
+        )?;
+        let bias = self.metric.adt_bias();
+        if bias != 0.0 {
+            for t in table.iter_mut().take(self.c) {
+                *t += bias;
+            }
+        }
+        Ok(Adt {
+            m: self.m,
+            c: self.c,
+            table,
+        })
+    }
+
+    /// Rerank: accurate distances between `q` and `ids` rows of `base`,
+    /// batched through the fixed-size `rerank_*` artifact with padding.
+    pub fn rerank(&self, base: &VectorSet, q: &[f32], ids: &[u32]) -> Result<Vec<f32>> {
+        let b = self.rt.manifest.rerank_b;
+        let mut out = Vec::with_capacity(ids.len());
+        let mut batch = vec![0.0f32; b * self.dim];
+        for chunk in ids.chunks(b) {
+            for (i, &id) in chunk.iter().enumerate() {
+                batch[i * self.dim..(i + 1) * self.dim].copy_from_slice(base.row(id as usize));
+            }
+            // Padding lanes repeat row 0 (results discarded).
+            for i in chunk.len()..b {
+                batch.copy_within(0..self.dim, i * self.dim);
+            }
+            let d = self.rt.run_f32(
+                &self.rerank_name,
+                &[
+                    InputBuf::F32 {
+                        data: q,
+                        dims: vec![self.dim as i64],
+                    },
+                    InputBuf::F32 {
+                        data: &batch,
+                        dims: vec![b as i64, self.dim as i64],
+                    },
+                ],
+            )?;
+            let bias = self.metric.adt_bias();
+            out.extend(d[..chunk.len()].iter().map(|&x| x + bias));
+        }
+        Ok(out)
+    }
+
+    /// Batched PQ scan through the `scan_*` artifact (used by the batch
+    /// benches; the traversal's per-hop scans stay native).
+    pub fn pq_scan(&self, adt: &Adt, codes: &PqCodes, ids: &[u32]) -> Result<Vec<f32>> {
+        let b = self.rt.manifest.scan_b;
+        let mut out = Vec::with_capacity(ids.len());
+        let mut batch = vec![0i32; b * self.m];
+        for chunk in ids.chunks(b) {
+            for (i, &id) in chunk.iter().enumerate() {
+                for (j, &code) in codes.row(id as usize).iter().enumerate() {
+                    batch[i * self.m + j] = code as i32;
+                }
+            }
+            for i in chunk.len()..b {
+                for j in 0..self.m {
+                    batch[i * self.m + j] = 0;
+                }
+            }
+            let d = self.rt.run_f32(
+                &self.scan_name,
+                &[
+                    InputBuf::F32 {
+                        data: &adt.table,
+                        dims: vec![self.m as i64, self.c as i64],
+                    },
+                    InputBuf::I32 {
+                        data: &batch,
+                        dims: vec![b as i64, self.m as i64],
+                    },
+                ],
+            )?;
+            out.extend_from_slice(&d[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// Exact k-NN ground truth via the tiled `gt_*` artifact (XLA GEMM).
+    pub fn ground_truth(&self, base: &VectorSet, queries: &VectorSet, k: usize) -> Result<GroundTruth> {
+        let gq = self.rt.manifest.gt_q;
+        let gn = self.rt.manifest.gt_n;
+        let nq = queries.len();
+        let n = base.len();
+        assert!(k <= n);
+
+        // Per-query bounded max-heaps over (dist, id).
+        let mut heaps: Vec<Vec<(f32, u32)>> = vec![Vec::with_capacity(k + 1); nq];
+        let mut qbuf = vec![0.0f32; gq * self.dim];
+        let mut bbuf = vec![0.0f32; gn * self.dim];
+
+        for q0 in (0..nq).step_by(gq) {
+            let qlen = (nq - q0).min(gq);
+            for i in 0..qlen {
+                qbuf[i * self.dim..(i + 1) * self.dim].copy_from_slice(queries.row(q0 + i));
+            }
+            for i in qlen..gq {
+                qbuf[i * self.dim..(i + 1) * self.dim].copy_from_slice(queries.row(q0));
+            }
+            for b0 in (0..n).step_by(gn) {
+                let blen = (n - b0).min(gn);
+                for i in 0..blen {
+                    bbuf[i * self.dim..(i + 1) * self.dim].copy_from_slice(base.row(b0 + i));
+                }
+                for i in blen..gn {
+                    bbuf[i * self.dim..(i + 1) * self.dim].copy_from_slice(base.row(b0));
+                }
+                let d = self.rt.run_f32(
+                    &self.gt_name,
+                    &[
+                        InputBuf::F32 {
+                            data: &qbuf,
+                            dims: vec![gq as i64, self.dim as i64],
+                        },
+                        InputBuf::F32 {
+                            data: &bbuf,
+                            dims: vec![gn as i64, self.dim as i64],
+                        },
+                    ],
+                )?;
+                for qi in 0..qlen {
+                    let heap = &mut heaps[q0 + qi];
+                    for bi in 0..blen {
+                        let dist = d[qi * gn + bi];
+                        let id = (b0 + bi) as u32;
+                        if heap.len() < k {
+                            heap.push((dist, id));
+                            if heap.len() == k {
+                                heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                            }
+                        } else if dist < heap[0].0 {
+                            heap[0] = (dist, id);
+                            // Re-bubble the new max to front (small k).
+                            heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                        }
+                    }
+                }
+            }
+        }
+        let mut ids = Vec::with_capacity(nq * k);
+        for heap in heaps.iter_mut() {
+            heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            ids.extend(heap.iter().map(|&(_, id)| id));
+        }
+        Ok(GroundTruth { k, ids })
+    }
+}
+
+// Integration tests for these executors (requiring built artifacts) live
+// in rust/tests/runtime_integration.rs.

@@ -1,0 +1,262 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced by `python/compile/aot.py`, compile them once
+//! on the CPU PJRT client, and expose typed executors to the request path.
+//! Python never runs here — the HLO text is the entire interchange.
+//!
+//! Padding convention: artifact batch shapes are fixed (manifest
+//! `scan_b`/`rerank_b`/`gt_*`); the executors pad the final partial batch
+//! and discard the padded lanes.
+
+pub mod executor;
+pub mod service;
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub metric: Option<String>,
+    pub dim: Option<usize>,
+    pub m: Option<usize>,
+    pub c: Option<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub scan_b: usize,
+    pub rerank_b: usize,
+    pub gt_q: usize,
+    pub gt_n: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let need = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            artifacts.push(ArtifactMeta {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                metric: a.get("metric").and_then(Json::as_str).map(str::to_string),
+                dim: a.get("dim").and_then(Json::as_usize),
+                m: a.get("m").and_then(Json::as_usize),
+                c: a.get("c").and_then(Json::as_usize),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            scan_b: need("scan_b")?,
+            rerank_b: need("rerank_b")?,
+            gt_q: need("gt_q")?,
+            gt_n: need("gt_n")?,
+            artifacts,
+        })
+    }
+
+    pub fn find(&self, kind: &str, metric: Option<&str>, key: Option<usize>) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind
+                && metric.map_or(true, |m| a.metric.as_deref() == Some(m))
+                && key.map_or(true, |d| a.dim == Some(d) || a.m == Some(d))
+        })
+    }
+}
+
+/// A compiled-executable cache over one PJRT client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    compiled: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (default `artifacts/`).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            compiled: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact location relative to the repo / cwd, overridable
+    /// via `PROXIMA_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PROXIMA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Open the default runtime if artifacts exist (None otherwise) —
+    /// lets binaries fall back to the pure-rust path gracefully.
+    pub fn open_default() -> Option<Runtime> {
+        let dir = Self::default_dir();
+        if dir.join("manifest.json").exists() {
+            match Runtime::new(&dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("[runtime] failed to load artifacts: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.compiled.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+        let path = self.manifest.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled artifact on f32/i32 buffers; returns the f32
+    /// payload of the 1-tuple result.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[InputBuf<'_>],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|b| b.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("reading result of {name}: {e:?}"))
+    }
+}
+
+/// Typed input buffer descriptor (f32 or i32, with shape).
+pub enum InputBuf<'a> {
+    F32 { data: &'a [f32], dims: Vec<i64> },
+    I32 { data: &'a [i32], dims: Vec<i64> },
+}
+
+impl<'a> InputBuf<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            InputBuf::F32 { data, dims } => {
+                let expect: i64 = dims.iter().product();
+                if expect as usize != data.len() {
+                    bail!("f32 input shape {:?} != len {}", dims, data.len());
+                }
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))
+            }
+            InputBuf::I32 { data, dims } => {
+                let expect: i64 = dims.iter().product();
+                if expect as usize != data.len() {
+                    bail!("i32 input shape {:?} != len {}", dims, data.len());
+                }
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("proxima-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"scan_b":512,"rerank_b":256,"gt_q":16,"gt_n":2048,
+                "artifacts":[{"name":"adt_l2_d128","file":"adt_l2_d128.hlo.txt",
+                              "kind":"adt","metric":"l2","dim":128,"m":32,"c":256}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.scan_b, 512);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("adt", Some("l2"), Some(128)).unwrap();
+        assert_eq!(a.name, "adt_l2_d128");
+        assert!(m.find("adt", Some("ip"), Some(128)).is_none());
+    }
+
+    #[test]
+    fn manifest_missing_fields_error() {
+        let dir = std::env::temp_dir().join(format!("proxima-man2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version":1}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // skip when artifacts are absent.
+}

@@ -1,0 +1,176 @@
+//! Runtime service thread: the `xla` crate's PJRT handles are `Rc`-based
+//! (not `Send`/`Sync`), so the multi-threaded coordinator cannot share a
+//! [`Runtime`] directly. Instead one dedicated thread owns the runtime and
+//! serves requests over a channel — the same pattern a production server
+//! uses to pin an accelerator context to a submission thread.
+
+use super::executor::XlaDistance;
+use super::Runtime;
+use crate::pq::{Adt, PqCodebook};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+enum Req {
+    BuildAdt {
+        q: Vec<f32>,
+        reply: mpsc::Sender<Result<Adt>>,
+    },
+    Rerank {
+        q: Vec<f32>,
+        rows: Vec<f32>, // flattened candidate vectors
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Req>,
+    pub dim: usize,
+}
+
+impl RuntimeHandle {
+    /// Spawn the service thread. The codebook is moved in once; the thread
+    /// compiles the needed executables lazily on first use.
+    pub fn spawn(dir: PathBuf, codebook: PqCodebook) -> Result<RuntimeHandle> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dim = codebook.dim;
+        std::thread::Builder::new()
+            .name("proxima-xla".into())
+            .spawn(move || runtime_loop(dir, codebook, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during init"))??;
+        Ok(RuntimeHandle { tx, dim })
+    }
+
+    /// Spawn against the default artifact dir if it exists.
+    pub fn spawn_default(codebook: &PqCodebook) -> Option<RuntimeHandle> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        match Self::spawn(dir, codebook.clone()) {
+            Ok(h) => Some(h),
+            Err(e) => {
+                eprintln!("[runtime] service thread failed: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Build the ADT for a query through the AOT artifact.
+    pub fn build_adt(&self, q: &[f32]) -> Result<Adt> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::BuildAdt {
+                q: q.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    /// Rerank a flattened row batch (`rows.len() == n * dim`).
+    pub fn rerank_rows(&self, q: &[f32], rows: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Rerank {
+                q: q.to_vec(),
+                rows,
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+fn runtime_loop(
+    dir: PathBuf,
+    codebook: PqCodebook,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let dist = match XlaDistance::new(&rt, codebook.metric, codebook.dim, codebook.m, codebook.c) {
+        Ok(d) => d,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    let dim = codebook.dim;
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::BuildAdt { q, reply } => {
+                let _ = reply.send(dist.build_adt(&codebook, &q));
+            }
+            Req::Rerank { q, rows, reply } => {
+                let n = rows.len() / dim;
+                let vs = crate::dataset::VectorSet::new(dim, rows);
+                let ids: Vec<u32> = (0..n as u32).collect();
+                let _ = reply.send(dist.rerank(&vs, &q, &ids));
+            }
+            Req::Shutdown => break,
+        }
+    }
+}
+
+/// Angular-aware native fallback mirror (used by tests to compare).
+pub fn native_adt(codebook: &PqCodebook, q: &[f32]) -> Adt {
+    codebook.build_adt(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+
+    fn artifacts_present() -> bool {
+        Runtime::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn handle_matches_native_adt() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let ds = tiny_uniform(300, 128, Metric::L2, 7);
+        let cb = PqCodebook::train(&ds.base, Metric::L2, 32, 256, 300, 6, 7);
+        let Some(h) = RuntimeHandle::spawn_default(&cb) else {
+            eprintln!("skipping: runtime spawn failed");
+            return;
+        };
+        let q = ds.queries.row(0);
+        let adt_xla = h.build_adt(q).unwrap();
+        let adt_nat = native_adt(&cb, q);
+        assert_eq!(adt_xla.m, adt_nat.m);
+        for (a, b) in adt_xla.table.iter().zip(&adt_nat.table) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn handle_is_send_and_clone() {
+        fn assert_send<T: Send + Clone>() {}
+        assert_send::<RuntimeHandle>();
+    }
+}

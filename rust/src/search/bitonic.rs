@@ -1,0 +1,145 @@
+//! Bitonic sorter — functional model of the search engine's shared
+//! 256-point sorter (paper §IV-D). The hardware version is stage-pipelined
+//! with constant `2·log2(N)²/2`-stage latency; we expose both the sorting
+//! network itself (used to verify candidate-list maintenance matches the
+//! hardware) and its latency/compare-count model consumed by the DES.
+
+/// Sort `(dist, id)` pairs ascending with the bitonic network. Length is
+/// padded to the next power of two with +∞ sentinels, exactly as the
+/// hardware feeds unused lanes.
+pub fn bitonic_sort(items: &mut Vec<(f32, u32)>) {
+    let n = items.len();
+    if n <= 1 {
+        return;
+    }
+    let padded = n.next_power_of_two();
+    items.resize(padded, (f32::INFINITY, u32::MAX));
+    // Iterative bitonic network.
+    let mut k = 2;
+    while k <= padded {
+        let mut j = k / 2;
+        while j > 0 {
+            for i in 0..padded {
+                let l = i ^ j;
+                if l > i {
+                    let ascending = i & k == 0;
+                    let a = items[i];
+                    let b = items[l];
+                    let swap = if ascending { a.0 > b.0 } else { a.0 < b.0 };
+                    if swap {
+                        items.swap(i, l);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    items.truncate(n);
+}
+
+/// Hardware latency model: the paper's pipelined sorter accepts N_sorter
+/// inputs per cycle and has constant sorting latency `2 * log2(N)` cycles
+/// for N inputs (§IV-D).
+#[derive(Clone, Copy, Debug)]
+pub struct BitonicModel {
+    /// Lanes (paper: 256).
+    pub n_sorter: usize,
+}
+
+impl BitonicModel {
+    pub fn paper_config() -> Self {
+        BitonicModel { n_sorter: 256 }
+    }
+
+    /// Cycles to sort `len` entries: ceil(len / lanes) pipelined batches,
+    /// each with 2*log2(lanes) latency; batches pipeline so total is
+    /// latency + (batches - 1).
+    pub fn cycles(&self, len: usize) -> u64 {
+        if len <= 1 {
+            return 1;
+        }
+        let lanes = self.n_sorter;
+        let batches = len.div_ceil(lanes) as u64;
+        let latency = 2 * (lanes as f64).log2().ceil() as u64;
+        latency + batches.saturating_sub(1)
+    }
+
+    /// Comparator count for an N-lane network (area model input):
+    /// N/2 * log2(N) * (log2(N)+1) / 2 comparators.
+    pub fn comparators(&self) -> u64 {
+        let n = self.n_sorter as u64;
+        let lg = (self.n_sorter as f64).log2().ceil() as u64;
+        n / 2 * lg * (lg + 1) / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn sorts_known_input() {
+        let mut v = vec![(3.0, 3), (1.0, 1), (2.0, 2), (0.5, 0), (9.0, 9)];
+        bitonic_sort(&mut v);
+        let ids: Vec<u32> = v.iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 9]);
+        assert_eq!(v.len(), 5); // padding removed
+    }
+
+    #[test]
+    fn prop_matches_std_sort() {
+        prop::check_default(
+            "bitonic-vs-std",
+            401,
+            |r| {
+                let n = prop::gen::len(r, 300);
+                (0..n)
+                    .map(|i| (r.next_f32() * 100.0, i as u32))
+                    .collect::<Vec<(f32, u32)>>()
+            },
+            |input| {
+                let mut a = input.clone();
+                bitonic_sort(&mut a);
+                let mut b = input.clone();
+                b.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+                let da: Vec<f32> = a.iter().map(|&(d, _)| d).collect();
+                let db: Vec<f32> = b.iter().map(|&(d, _)| d).collect();
+                if da == db {
+                    Ok(())
+                } else {
+                    Err("distance order differs from std sort".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut v: Vec<(f32, u32)> = vec![];
+        bitonic_sort(&mut v);
+        assert!(v.is_empty());
+        let mut v = vec![(1.0, 7)];
+        bitonic_sort(&mut v);
+        assert_eq!(v, vec![(1.0, 7)]);
+    }
+
+    #[test]
+    fn latency_model_paper_shape() {
+        let m = BitonicModel::paper_config();
+        // 256 lanes: 2*log2(256) = 16 cycles for <= 256 entries.
+        assert_eq!(m.cycles(200), 16);
+        assert_eq!(m.cycles(256), 16);
+        // 512 entries: one extra pipelined batch.
+        assert_eq!(m.cycles(512), 17);
+        assert!(m.cycles(1) == 1);
+    }
+
+    #[test]
+    fn comparator_count() {
+        let m = BitonicModel { n_sorter: 16 };
+        // 16/2 * 4 * 5 / 2 = 80
+        assert_eq!(m.comparators(), 80);
+    }
+}

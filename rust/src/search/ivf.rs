@@ -1,0 +1,177 @@
+//! IVF-PQ — the non-graph baseline (FAISS-IVF in Fig 11).
+//!
+//! Inverted-file index: k-means over the base set produces `nlist` coarse
+//! cells; each vector is assigned to its nearest cell and PQ-encoded. A
+//! query probes the `nprobe` nearest cells and scans their PQ codes with
+//! the ADT, reranking the top candidates. The paper's observation we must
+//! reproduce (Fig 11): recall saturates (~85-90%) because lossy PQ + cell
+//! boundaries miss true neighbors no matter how large nprobe gets.
+
+use super::{SearchOutput, SearchStats};
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+use crate::pq::{kmeans::kmeans, PqCodebook, PqCodes};
+
+/// IVF-PQ index.
+pub struct IvfPq {
+    pub metric: Metric,
+    pub nlist: usize,
+    /// Coarse centroids, nlist x dim.
+    pub centroids: Vec<f32>,
+    pub dim: usize,
+    /// Per-cell vector ids.
+    pub cells: Vec<Vec<u32>>,
+    pub codebook: PqCodebook,
+    pub codes: PqCodes,
+}
+
+impl IvfPq {
+    /// Build over a base set. `sample` limits the k-means training size.
+    pub fn build(
+        base: &VectorSet,
+        metric: Metric,
+        nlist: usize,
+        m: usize,
+        c: usize,
+        seed: u64,
+    ) -> IvfPq {
+        let dim = base.dim;
+        let n = base.len();
+        let centroids = kmeans(&base.data, dim, nlist.min(n), 15, seed);
+        let nlist = centroids.len() / dim;
+        let mut cells: Vec<Vec<u32>> = vec![Vec::new(); nlist];
+        for i in 0..n {
+            let cell = nearest_centroid(&centroids, dim, base.row(i));
+            cells[cell].push(i as u32);
+        }
+        let codebook = PqCodebook::train(base, metric, m, c, 20_000.min(n), 10, seed ^ 1);
+        let codes = codebook.encode(base);
+        IvfPq {
+            metric,
+            nlist,
+            centroids,
+            dim,
+            cells,
+            codebook,
+            codes,
+        }
+    }
+
+    /// Search: probe `nprobe` cells, scan codes, rerank top `rerank`.
+    pub fn search(
+        &self,
+        base: &VectorSet,
+        q: &[f32],
+        k: usize,
+        nprobe: usize,
+        rerank: usize,
+    ) -> SearchOutput {
+        let mut stats = SearchStats::default();
+        // Rank cells by centroid distance.
+        let mut cell_d: Vec<(f32, usize)> = (0..self.nlist)
+            .map(|c| {
+                (
+                    self.metric
+                        .distance(q, &self.centroids[c * self.dim..(c + 1) * self.dim]),
+                    c,
+                )
+            })
+            .collect();
+        stats.exact_dists += self.nlist;
+        cell_d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let adt = self.codebook.build_adt(q);
+        let mut cands: Vec<(f32, u32)> = Vec::new();
+        for &(_, c) in cell_d.iter().take(nprobe.min(self.nlist)) {
+            for &id in &self.cells[c] {
+                let d = adt.pq_distance(self.codes.row(id as usize));
+                stats.pq_dists += 1;
+                stats.bytes_pq += self.codes.m as u64;
+                cands.push((d, id));
+            }
+        }
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        cands.truncate(rerank.max(k));
+        // Rerank with accurate distances.
+        let mut reranked: Vec<(f32, u32)> = cands
+            .iter()
+            .map(|&(_, id)| {
+                stats.exact_dists += 1;
+                stats.bytes_raw += (self.dim as u64) * 4;
+                (self.metric.distance(q, base.row(id as usize)), id)
+            })
+            .collect();
+        reranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        reranked.truncate(k);
+        SearchOutput {
+            ids: reranked.iter().map(|&(_, v)| v).collect(),
+            dists: reranked.iter().map(|&(d, _)| d).collect(),
+            stats,
+            trace: None,
+        }
+    }
+}
+
+fn nearest_centroid(centroids: &[f32], dim: usize, v: &[f32]) -> usize {
+    let k = centroids.len() / dim;
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let d = crate::distance::l2_sq(v, &centroids[c * dim..(c + 1) * dim]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ground_truth::brute_force;
+    use crate::dataset::synth::tiny_uniform;
+
+    #[test]
+    fn cells_partition_the_base_set() {
+        let ds = tiny_uniform(500, 12, Metric::L2, 51);
+        let ivf = IvfPq::build(&ds.base, ds.metric, 16, 6, 32, 1);
+        let total: usize = ivf.cells.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 500);
+        let mut seen = vec![false; 500];
+        for cell in &ivf.cells {
+            for &id in cell {
+                assert!(!seen[id as usize], "duplicate assignment");
+                seen[id as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn recall_grows_with_nprobe() {
+        let ds = tiny_uniform(1000, 16, Metric::L2, 52);
+        let ivf = IvfPq::build(&ds.base, ds.metric, 32, 8, 64, 2);
+        let gt = brute_force(&ds, 10);
+        let recall_at = |nprobe: usize| {
+            let mut r = 0.0;
+            for q in 0..ds.n_queries() {
+                let out = ivf.search(&ds.base, ds.queries.row(q), 10, nprobe, 100);
+                r += crate::dataset::recall_at_k(&out.ids, gt.row(q), 10);
+            }
+            r / ds.n_queries() as f64
+        };
+        let lo = recall_at(1);
+        let hi = recall_at(16);
+        assert!(hi > lo, "nprobe=1 {lo} vs nprobe=16 {hi}");
+        assert!(hi > 0.7, "recall {hi}");
+    }
+
+    #[test]
+    fn scans_fraction_of_dataset() {
+        let ds = tiny_uniform(1000, 12, Metric::L2, 53);
+        let ivf = IvfPq::build(&ds.base, ds.metric, 32, 6, 32, 3);
+        let out = ivf.search(&ds.base, ds.queries.row(0), 10, 4, 50);
+        // ~4/32 of the dataset scanned with PQ.
+        assert!(out.stats.pq_dists < 500, "scanned {}", out.stats.pq_dists);
+    }
+}

@@ -1,0 +1,156 @@
+//! Query search algorithms and their shared instrumentation.
+//!
+//! All searches emit [`SearchStats`] (distance-computation and byte-traffic
+//! counters behind Fig 6b/14) and optionally a [`Trace`] of abstract storage
+//! and compute operations that the hardware simulator (`engine::`) replays
+//! against the 3D NAND timing model — mirroring the paper's methodology
+//! where "the front-end accepts the trace generated from the software".
+
+pub mod beam;
+pub mod bitonic;
+pub mod bloom;
+pub mod ivf;
+pub mod proxima;
+
+/// Counters accumulated during one query (or summed over a batch).
+#[derive(Clone, Debug, Default)]
+pub struct SearchStats {
+    /// PQ (approximate) distance computations.
+    pub pq_dists: usize,
+    /// Accurate (full-precision) distance computations.
+    pub exact_dists: usize,
+    /// Vertices whose neighborhoods were expanded ("hops").
+    pub hops: usize,
+    /// Sort invocations (candidate-list maintenance).
+    pub sorts: usize,
+    /// Bytes fetched: neighbor indices (adjacency rows).
+    pub bytes_index: u64,
+    /// Bytes fetched: PQ codes.
+    pub bytes_pq: u64,
+    /// Bytes fetched: raw full-precision vectors.
+    pub bytes_raw: u64,
+    /// Early-termination iterations executed (0 = feature unused).
+    pub et_iterations: usize,
+    /// Whether the query terminated early (before T reached L).
+    pub early_terminated: bool,
+}
+
+impl SearchStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_index + self.bytes_pq + self.bytes_raw
+    }
+
+    pub fn add(&mut self, o: &SearchStats) {
+        self.pq_dists += o.pq_dists;
+        self.exact_dists += o.exact_dists;
+        self.hops += o.hops;
+        self.sorts += o.sorts;
+        self.bytes_index += o.bytes_index;
+        self.bytes_pq += o.bytes_pq;
+        self.bytes_raw += o.bytes_raw;
+        self.et_iterations += o.et_iterations;
+        self.early_terminated |= o.early_terminated;
+    }
+}
+
+/// One abstract operation in a query's execution, replayed by the DES.
+/// `node` identifies the vertex (pre-mapping logical id).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceOp {
+    /// Fetch a vertex's neighbor-index row (`bits` after gap encoding).
+    FetchIndex { node: u32, bits: u32 },
+    /// Fetch a vertex's PQ code.
+    FetchPq { node: u32, bits: u32 },
+    /// Fetch a vertex's raw vector (rerank path).
+    FetchRaw { node: u32, bits: u32 },
+    /// Fetch a hot node's fused index+PQ frame in one page access (§IV-E).
+    FetchHot { node: u32, bits: u32 },
+    /// PQ distance LUT-accumulate for `count` codes (M adds each).
+    ComputePq { count: u32 },
+    /// Accurate distance for `count` vectors (D MACs each).
+    ComputeExact { count: u32 },
+    /// Candidate-list sort of `len` entries (bitonic on hw).
+    Sort { len: u32 },
+    /// ADT build for a new query (C*D MACs on the PQ module).
+    BuildAdt,
+}
+
+/// Trace of one query.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn push(&mut self, op: TraceOp) {
+        self.ops.push(op);
+    }
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+    /// Distinct nodes touched (for mapping/locality analysis).
+    pub fn touched_nodes(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                TraceOp::FetchIndex { node, .. }
+                | TraceOp::FetchPq { node, .. }
+                | TraceOp::FetchRaw { node, .. }
+                | TraceOp::FetchHot { node, .. } => Some(*node),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Search result: ids ascending by (reported) distance, plus stats/trace.
+#[derive(Clone, Debug, Default)]
+pub struct SearchOutput {
+    pub ids: Vec<u32>,
+    pub dists: Vec<f32>,
+    pub stats: SearchStats,
+    pub trace: Option<Trace>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut a = SearchStats::default();
+        let b = SearchStats {
+            pq_dists: 5,
+            exact_dists: 2,
+            hops: 1,
+            sorts: 1,
+            bytes_index: 100,
+            bytes_pq: 50,
+            bytes_raw: 25,
+            et_iterations: 1,
+            early_terminated: true,
+        };
+        a.add(&b);
+        a.add(&b);
+        assert_eq!(a.pq_dists, 10);
+        assert_eq!(a.total_bytes(), 350);
+        assert!(a.early_terminated);
+    }
+
+    #[test]
+    fn trace_touched_nodes_dedup() {
+        let mut t = Trace::default();
+        t.push(TraceOp::FetchIndex { node: 3, bits: 10 });
+        t.push(TraceOp::FetchPq { node: 3, bits: 10 });
+        t.push(TraceOp::FetchRaw { node: 1, bits: 10 });
+        t.push(TraceOp::ComputePq { count: 4 });
+        assert_eq!(t.touched_nodes(), vec![1, 3]);
+    }
+}

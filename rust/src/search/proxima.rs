@@ -1,0 +1,498 @@
+//! The Proxima graph-search algorithm (paper §III, Algorithm 1).
+//!
+//! Three techniques over a DiskANN-PQ baseline:
+//!
+//! 1. **PQ-distance traversal** (§III-B) — the graph walk uses ADT lookups
+//!    instead of D-dim accurate distances.
+//! 2. **β-reranking** (§III-C) — after the walk, every candidate in the
+//!    *large* list `L` whose PQ distance is within `β ×` the working-list
+//!    boundary is reranked with its accurate distance, recovering vertices
+//!    that PQ error pushed past the boundary (up to ~10% recall at low
+//!    recall vs DiskANN).
+//! 3. **Dynamic list + early termination** (§III-D) — the working prefix
+//!    `T` grows by `T_step`; whenever the top-T prefix is fully evaluated
+//!    the top-k is reranked and compared against the previous iteration's
+//!    top-k; `r` consecutive identical top-k sets end the search early.
+//!
+//! Accurate distances computed during iteration reranks are cached so the
+//! final reranking pass never recomputes them (the paper: "we store the
+//! computed distances to amortize the overhead").
+
+use super::beam::{CandidateList, SearchContext};
+use super::bloom::BloomFilter;
+use super::{SearchOutput, SearchStats, Trace, TraceOp};
+use crate::config::SearchParams;
+use crate::pq::Adt;
+use std::collections::HashMap;
+
+/// Feature toggles for the ablations in Fig 13/14 (G = gap encoding is a
+/// property of the [`SearchContext`]; E = early termination; β-rerank).
+#[derive(Clone, Copy, Debug)]
+pub struct ProximaFeatures {
+    pub early_termination: bool,
+    pub beta_rerank: bool,
+}
+
+impl Default for ProximaFeatures {
+    fn default() -> Self {
+        ProximaFeatures {
+            early_termination: true,
+            beta_rerank: true,
+        }
+    }
+}
+
+/// Run Algorithm 1 for one query.
+///
+/// `adt` must have been built for `q` (natively via `PqCodebook::build_adt`
+/// or through the AOT/XLA artifact — both produce the same table).
+pub fn proxima_search(
+    ctx: &SearchContext,
+    adt: &Adt,
+    q: &[f32],
+    params: &SearchParams,
+    features: ProximaFeatures,
+    want_trace: bool,
+) -> SearchOutput {
+    let codes = ctx.codes.expect("proxima_search requires PQ codes");
+    let mut stats = SearchStats::default();
+    let mut trace = want_trace.then(Trace::default);
+    if let Some(t) = trace.as_mut() {
+        t.push(TraceOp::BuildAdt);
+    }
+
+    let l_cap = params.l;
+    let k = params.k;
+    let mut t_limit = params.t_init.clamp(k, l_cap);
+
+    let mut visited = BloomFilter::paper_config();
+    let mut list = CandidateList::new(l_cap);
+    // Cache of accurate distances (amortizes iteration reranks).
+    let mut exact_cache: HashMap<u32, f32> = HashMap::new();
+
+    // Line 1: initialize with the entry point.
+    let entry = ctx.graph.entry_point;
+    let d0 = adt.pq_distance(codes.row(entry as usize));
+    stats.pq_dists += 1;
+    stats.bytes_pq += ctx.pq_bits() as u64 / 8;
+    list.insert(d0, entry);
+    visited.insert(entry);
+
+    let mut prev_topk: Vec<u32> = Vec::new();
+    let mut stable_iters = 0usize;
+
+    // Line 3: while T <= L.
+    'outer: while t_limit <= l_cap {
+        // Expand candidates until the top-T prefix is fully evaluated.
+        while let Some(pos) = list.first_unevaluated(t_limit) {
+            let v = list.items[pos].id;
+            list.items[pos].evaluated = true;
+            stats.hops += 1;
+            stats.bytes_index += ctx.index_bits(v) as u64 / 8;
+            if let Some(t) = trace.as_mut() {
+                t.push(TraceOp::FetchIndex {
+                    node: v,
+                    bits: ctx.index_bits(v),
+                });
+            }
+            // Lines 6-9: visit neighborhood with PQ distances; Bloom filter
+            // screens previously-seen vertices (§IV-B step 2).
+            let mut fresh = 0u32;
+            for &nb in ctx.graph.neighbors(v) {
+                if visited.insert(nb) {
+                    continue;
+                }
+                fresh += 1;
+                let d = adt.pq_distance(codes.row(nb as usize));
+                stats.pq_dists += 1;
+                stats.bytes_pq += ctx.pq_bits() as u64 / 8;
+                if let Some(t) = trace.as_mut() {
+                    t.push(TraceOp::FetchPq {
+                        node: nb,
+                        bits: ctx.pq_bits(),
+                    });
+                }
+                list.insert(d, nb);
+            }
+            // Line 10: sort L, keep top L (CandidateList maintains this
+            // incrementally; the hardware does it with the bitonic sorter,
+            // which the trace records).
+            if let Some(t) = trace.as_mut() {
+                if fresh > 0 {
+                    t.push(TraceOp::ComputePq { count: fresh });
+                }
+                t.push(TraceOp::Sort {
+                    len: list.len() as u32,
+                });
+            }
+            stats.sorts += 1;
+        }
+
+        // Line 11: all top-T evaluated -> rerank top T (line 12).
+        stats.et_iterations += 1;
+        let t_eff = t_limit.min(list.len());
+        let mut reranked: Vec<(f32, u32)> = Vec::with_capacity(t_eff);
+        for c in &list.items[..t_eff] {
+            let d = *exact_cache.entry(c.id).or_insert_with(|| {
+                stats.exact_dists += 1;
+                stats.bytes_raw += ctx.raw_bits() as u64 / 8;
+                if let Some(t) = trace.as_mut() {
+                    t.push(TraceOp::FetchRaw {
+                        node: c.id,
+                        bits: ctx.raw_bits(),
+                    });
+                }
+                ctx.metric.distance(q, ctx.base.row(c.id as usize))
+            });
+            reranked.push((d, c.id));
+        }
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceOp::ComputeExact {
+                count: t_eff as u32,
+            });
+            t.push(TraceOp::Sort { len: t_eff as u32 });
+        }
+        reranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let topk: Vec<u32> = reranked.iter().take(k).map(|&(_, v)| v).collect();
+
+        // Lines 13-15: early termination after r stable iterations.
+        if features.early_termination {
+            if topk == prev_topk {
+                stable_iters += 1;
+                if stable_iters >= params.repetition {
+                    stats.early_terminated = true;
+                    break 'outer;
+                }
+            } else {
+                stable_iters = 0;
+            }
+            prev_topk = topk;
+        }
+
+        // All of L evaluated and T at cap: nothing more to do.
+        if t_limit >= l_cap || list.first_unevaluated(l_cap).is_none() && t_limit >= list.len() {
+            break;
+        }
+        // Line 16: dynamic list growth.
+        t_limit = (t_limit + params.t_step).min(l_cap);
+    }
+
+    // Lines 19-21: β-reranking over the big list. The boundary is the PQ
+    // distance of the working list's most distant candidate, scaled by β.
+    // For IP/Angular-derived negative distances the scale direction flips
+    // (β loosens the bound, so divide when negative).
+    let t_eff = t_limit.min(list.len());
+    if t_eff == 0 {
+        return SearchOutput {
+            ids: vec![],
+            dists: vec![],
+            stats,
+            trace,
+        };
+    }
+    let boundary = list.items[t_eff - 1].dist;
+    let threshold = if features.beta_rerank {
+        if boundary >= 0.0 {
+            boundary * params.beta
+        } else {
+            boundary / params.beta
+        }
+    } else {
+        boundary
+    };
+
+    let mut final_cands: Vec<(f32, u32)> = Vec::new();
+    for c in &list.items {
+        let in_working = final_cands.len() < t_eff;
+        if !(c.dist <= threshold || in_working) {
+            continue;
+        }
+        let d = *exact_cache.entry(c.id).or_insert_with(|| {
+            stats.exact_dists += 1;
+            stats.bytes_raw += ctx.raw_bits() as u64 / 8;
+            if let Some(t) = trace.as_mut() {
+                t.push(TraceOp::FetchRaw {
+                    node: c.id,
+                    bits: ctx.raw_bits(),
+                });
+            }
+            ctx.metric.distance(q, ctx.base.row(c.id as usize))
+        });
+        final_cands.push((d, c.id));
+    }
+    if let Some(t) = trace.as_mut() {
+        t.push(TraceOp::Sort {
+            len: final_cands.len() as u32,
+        });
+    }
+    final_cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    final_cands.truncate(k);
+
+    SearchOutput {
+        ids: final_cands.iter().map(|&(_, v)| v).collect(),
+        dists: final_cands.iter().map(|&(d, _)| d).collect(),
+        stats,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GraphParams;
+    use crate::dataset::ground_truth::brute_force;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+    use crate::graph::vamana;
+    use crate::pq::{PqCodebook, PqCodes};
+
+    struct Fixture {
+        ds: crate::dataset::Dataset,
+        g: crate::graph::Graph,
+        cb: PqCodebook,
+        codes: PqCodes,
+    }
+
+    fn fixture(n: usize, seed: u64) -> Fixture {
+        let ds = tiny_uniform(n, 16, Metric::L2, seed);
+        let g = vamana::build(
+            &ds.base,
+            ds.metric,
+            &GraphParams {
+                r: 16,
+                build_l: 40,
+                alpha: 1.2,
+                seed,
+            },
+        );
+        let cb = PqCodebook::train(&ds.base, ds.metric, 8, 64, n, 10, seed);
+        let codes = cb.encode(&ds.base);
+        Fixture { ds, g, cb, codes }
+    }
+
+    fn ctx<'a>(f: &'a Fixture) -> SearchContext<'a> {
+        SearchContext {
+            base: &f.ds.base,
+            metric: f.ds.metric,
+            graph: &f.g,
+            codes: Some(&f.codes),
+            gap: None,
+        }
+    }
+
+    fn mean_recall_with(
+        f: &Fixture,
+        params: &SearchParams,
+        feats: ProximaFeatures,
+    ) -> (f64, SearchStats) {
+        let gt = brute_force(&f.ds, params.k);
+        let c = ctx(f);
+        let mut recall = 0.0;
+        let mut stats = SearchStats::default();
+        for q in 0..f.ds.n_queries() {
+            let adt = f.cb.build_adt(f.ds.queries.row(q));
+            let out = proxima_search(&c, &adt, f.ds.queries.row(q), params, feats, false);
+            recall += crate::dataset::recall_at_k(&out.ids, gt.row(q), params.k);
+            stats.add(&out.stats);
+        }
+        (recall / f.ds.n_queries() as f64, stats)
+    }
+
+    #[test]
+    fn achieves_high_recall() {
+        let f = fixture(800, 41);
+        let params = SearchParams {
+            l: 80,
+            k: 10,
+            ..Default::default()
+        };
+        let (recall, stats) = mean_recall_with(&f, &params, ProximaFeatures::default());
+        assert!(recall > 0.85, "recall {recall}");
+        assert!(stats.pq_dists > stats.exact_dists);
+    }
+
+    #[test]
+    fn early_termination_reduces_work_same_recall_band() {
+        let f = fixture(800, 42);
+        let params = SearchParams {
+            l: 100,
+            k: 10,
+            repetition: 2,
+            ..Default::default()
+        };
+        let with_et = ProximaFeatures {
+            early_termination: true,
+            beta_rerank: true,
+        };
+        let without_et = ProximaFeatures {
+            early_termination: false,
+            beta_rerank: true,
+        };
+        let (r_et, s_et) = mean_recall_with(&f, &params, with_et);
+        let (r_no, s_no) = mean_recall_with(&f, &params, without_et);
+        assert!(
+            s_et.pq_dists <= s_no.pq_dists,
+            "ET should not do more PQ work: {} vs {}",
+            s_et.pq_dists,
+            s_no.pq_dists
+        );
+        assert!(r_et > r_no - 0.05, "ET recall {r_et} vs {r_no}");
+        assert!(s_et.early_terminated);
+    }
+
+    #[test]
+    fn beta_rerank_recovers_recall() {
+        // With a deliberately coarse codebook, β-reranking should recover
+        // vertices whose PQ distance was overestimated.
+        let ds = tiny_uniform(600, 16, Metric::L2, 43);
+        let g = vamana::build(
+            &ds.base,
+            ds.metric,
+            &GraphParams {
+                r: 16,
+                build_l: 40,
+                alpha: 1.2,
+                seed: 43,
+            },
+        );
+        let cb = PqCodebook::train(&ds.base, ds.metric, 4, 8, 600, 6, 43); // coarse!
+        let codes = cb.encode(&ds.base);
+        let f = Fixture { ds, g, cb, codes };
+        let params = SearchParams {
+            l: 100,
+            k: 10,
+            beta: 1.3,
+            ..Default::default()
+        };
+        let on = ProximaFeatures {
+            early_termination: false,
+            beta_rerank: true,
+        };
+        let off = ProximaFeatures {
+            early_termination: false,
+            beta_rerank: false,
+        };
+        let (r_on, _) = mean_recall_with(&f, &params, on);
+        let (r_off, _) = mean_recall_with(&f, &params, off);
+        assert!(
+            r_on >= r_off,
+            "beta rerank should not hurt: on={r_on} off={r_off}"
+        );
+    }
+
+    #[test]
+    fn respects_k_and_orders_output() {
+        let f = fixture(400, 44);
+        let c = ctx(&f);
+        let params = SearchParams {
+            l: 60,
+            k: 7,
+            ..Default::default()
+        };
+        let adt = f.cb.build_adt(f.ds.queries.row(0));
+        let out = proxima_search(
+            &c,
+            &adt,
+            f.ds.queries.row(0),
+            &params,
+            ProximaFeatures::default(),
+            false,
+        );
+        assert_eq!(out.ids.len(), 7);
+        for w in out.dists.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // Output distances are accurate distances.
+        for (i, &id) in out.ids.iter().enumerate() {
+            let d = f.ds.metric.distance(f.ds.queries.row(0), f.ds.base.row(id as usize));
+            assert!((d - out.dists[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn trace_contains_adt_and_fetches() {
+        let f = fixture(300, 45);
+        let c = ctx(&f);
+        let adt = f.cb.build_adt(f.ds.queries.row(1));
+        let out = proxima_search(
+            &c,
+            &adt,
+            f.ds.queries.row(1),
+            &SearchParams::default(),
+            ProximaFeatures::default(),
+            true,
+        );
+        let t = out.trace.unwrap();
+        assert_eq!(t.ops[0], TraceOp::BuildAdt);
+        let idx_fetches = t
+            .ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::FetchIndex { .. }))
+            .count();
+        assert_eq!(idx_fetches, out.stats.hops);
+        let raw_fetches = t
+            .ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::FetchRaw { .. }))
+            .count();
+        assert_eq!(raw_fetches, out.stats.exact_dists);
+    }
+
+    #[test]
+    fn works_on_ip_and_angular() {
+        for metric in [Metric::Ip, Metric::Angular] {
+            let ds = tiny_uniform(500, 12, metric, 46);
+            let g = vamana::build(
+                &ds.base,
+                metric,
+                &GraphParams {
+                    r: 12,
+                    build_l: 32,
+                    alpha: 1.2,
+                    seed: 46,
+                },
+            );
+            let cb = PqCodebook::train(&ds.base, metric, 6, 32, 500, 8, 46);
+            let codes = cb.encode(&ds.base);
+            let f = Fixture { ds, g, cb, codes };
+            let params = SearchParams {
+                l: 80,
+                k: 5,
+                ..Default::default()
+            };
+            let (recall, _) = mean_recall_with(&f, &params, ProximaFeatures::default());
+            assert!(recall > 0.6, "{metric:?} recall {recall}");
+        }
+    }
+
+    #[test]
+    fn exact_cache_prevents_recompute() {
+        // exact_dists must be <= number of distinct reranked vertices,
+        // not iterations * T.
+        let f = fixture(600, 47);
+        let c = ctx(&f);
+        let params = SearchParams {
+            l: 100,
+            k: 10,
+            t_step: 2,
+            repetition: 50, // never early-terminate
+            ..Default::default()
+        };
+        let adt = f.cb.build_adt(f.ds.queries.row(0));
+        let out = proxima_search(
+            &c,
+            &adt,
+            f.ds.queries.row(0),
+            &params,
+            ProximaFeatures {
+                early_termination: true,
+                beta_rerank: true,
+            },
+            false,
+        );
+        // Many iterations ran, but exact distance computations stay bounded
+        // by the list capacity (plus β extras), far below iters * T.
+        assert!(out.stats.et_iterations > 5);
+        assert!(out.stats.exact_dists <= params.l + 20);
+    }
+}

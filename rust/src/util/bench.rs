@@ -1,0 +1,210 @@
+//! Micro/figure benchmark harness (criterion substitute for the offline
+//! environment). `cargo bench` targets use `harness = false` and call into
+//! this module: it warms up, runs timed iterations until a time budget or
+//! iteration cap is reached, and reports mean / p50 / p95 wall-clock plus
+//! a stable machine-readable line for EXPERIMENTS.md extraction.
+//!
+//! Figure benches additionally use [`Table`] to print the paper-shaped rows
+//! and write a CSV under `results/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<6} mean={:>12?} p50={:>12?} p95={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95
+        );
+    }
+    /// Throughput helper: items per second given items-per-iteration.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Time budget per bench (seconds), override with `PROXIMA_BENCH_SECS`.
+fn budget() -> Duration {
+    let secs = std::env::var("PROXIMA_BENCH_SECS")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0);
+    Duration::from_secs_f64(secs)
+}
+
+/// Run `f` repeatedly; returns timing stats. `f` should perform one logical
+/// iteration and return a value which is black-boxed to prevent DCE.
+pub fn bench<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup: at least 3 runs or 10% of budget.
+    let warm_budget = budget().mul_f64(0.1);
+    let t0 = Instant::now();
+    let mut warm = 0;
+    while warm < 3 || (t0.elapsed() < warm_budget && warm < 1000) {
+        black_box(f());
+        warm += 1;
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let t0 = Instant::now();
+    while t0.elapsed() < budget() && samples.len() < 10_000 {
+        let s = Instant::now();
+        black_box(f());
+        samples.push(s.elapsed());
+    }
+    samples.sort_unstable();
+    let iters = samples.len();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    let p50 = samples[iters / 2];
+    let p95 = samples[(iters * 95 / 100).min(iters - 1)];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean,
+        p50,
+        p95,
+    };
+    r.report();
+    r
+}
+
+/// Opaque value barrier (std::hint::black_box exists on this toolchain).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Paper-style table printer + CSV writer.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Cell accessor for assertions: (row, col).
+    pub fn cell(&self, row: usize, col: usize) -> &str {
+        &self.rows[row][col]
+    }
+
+    /// Find the first row whose first cell matches.
+    pub fn find_row(&self, first_cell: &str) -> Option<&[String]> {
+        self.rows
+            .iter()
+            .find(|r| r[0] == first_cell)
+            .map(|r| r.as_slice())
+    }
+
+    /// Format helper for numeric cells.
+    pub fn fmt(x: f64) -> String {
+        if x == 0.0 {
+            "0".into()
+        } else if x.abs() >= 1000.0 {
+            format!("{x:.0}")
+        } else if x.abs() >= 10.0 {
+            format!("{x:.1}")
+        } else if x.abs() >= 0.01 {
+            format!("{x:.3}")
+        } else {
+            format!("{x:.3e}")
+        }
+    }
+
+    /// Print aligned to stdout.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Write CSV under `results/` (created if needed). Returns path.
+    pub fn write_csv(&self, stem: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{stem}.csv"));
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s)?;
+        println!("[csv] wrote {}", path.display());
+        Ok(path)
+    }
+}
+
+/// Scale knob for figure benches: "quick" (default under cargo bench) or
+/// "full" via `PROXIMA_SCALE=full` for larger datasets / more queries.
+pub fn full_scale() -> bool {
+    std::env::var("PROXIMA_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        std::env::set_var("PROXIMA_BENCH_SECS", "0.05");
+        let r = bench("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 3);
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(Table::fmt(12345.6), "12346");
+        assert_eq!(Table::fmt(0.5), "0.500");
+    }
+}

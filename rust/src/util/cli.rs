@@ -1,0 +1,153 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports the subset we use everywhere:
+//! `prog SUBCOMMAND [--flag] [--key value] [--key=value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args().skip(1)`-style iterator. The first token not
+    /// starting with `-` becomes the subcommand (when `with_subcommand`).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if with_subcommand {
+            if let Some(tok) = it.peek() {
+                if !tok.starts_with('-') {
+                    out.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options
+                        .insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = it.next().unwrap();
+                    out.options.insert(rest.to_string(), val);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// From the process environment.
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Self::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| {
+                s.parse::<usize>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| {
+                s.parse::<u64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| {
+                s.parse::<f64>()
+                    .unwrap_or_else(|_| panic!("--{key} expects a number, got '{s}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list of usize, e.g. `--sweep 32,64,128`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .unwrap_or_else(|_| panic!("--{key} expects ints, got '{t}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // Note the documented greedy-value rule: `--name tok` consumes tok
+        // as the value, so boolean flags go last or use `--name=`.
+        let a = Args::parse(argv("search --dataset sift-s --k=10 data.bin --verbose"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.get("dataset"), Some("sift-s"));
+        assert_eq!(a.get_usize("k", 0), 10);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv("--fast --check"), false);
+        assert!(a.has_flag("fast") && a.has_flag("check"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(argv("--sweep 32,64,256"), false);
+        assert_eq!(a.get_usize_list("sweep", &[]), vec![32, 64, 256]);
+        assert_eq!(a.get_usize_list("absent", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), true);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("beta", 1.06), 1.06);
+    }
+}

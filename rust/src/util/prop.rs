@@ -1,0 +1,120 @@
+//! Miniature property-based testing harness (no `proptest` offline).
+//!
+//! Usage pattern mirrors the subset of proptest we need: generate random
+//! cases from a seeded [`Xoshiro256pp`], run an assertion-style predicate,
+//! and on failure report the case index and seed so it replays exactly.
+//! There is no shrinking; generators are asked to keep cases readable.
+
+use super::rng::Xoshiro256pp;
+
+/// Default number of cases per property (override with `PROXIMA_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROXIMA_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `cases` random checks. `gen` builds a case from the RNG; `check`
+/// returns `Err(description)` on violation. Panics with a reproducible
+/// report on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Xoshiro256pp) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    for i in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases} (seed {seed}):\n  {msg}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but with the default case count.
+pub fn check_default<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    gen: impl FnMut(&mut Xoshiro256pp) -> T,
+    check_fn: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, seed, default_cases(), gen, check_fn)
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Xoshiro256pp;
+
+    /// Vector of `len` f32 in [lo, hi).
+    pub fn vec_f32(rng: &mut Xoshiro256pp, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + rng.next_f32() * (hi - lo)).collect()
+    }
+
+    /// Vector of `len` u32 below bound.
+    pub fn vec_u32(rng: &mut Xoshiro256pp, len: usize, bound: u32) -> Vec<u32> {
+        (0..len).map(|_| rng.gen_range(bound as usize) as u32).collect()
+    }
+
+    /// Sorted vector of distinct u32s.
+    pub fn sorted_distinct_u32(rng: &mut Xoshiro256pp, len: usize, bound: usize) -> Vec<u32> {
+        rng.sample_distinct(bound.max(len), len)
+            .into_iter()
+            .map(|x| x as u32)
+            .collect()
+    }
+
+    /// Length in [1, max].
+    pub fn len(rng: &mut Xoshiro256pp, max: usize) -> usize {
+        1 + rng.gen_range(max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            "sum-commutative",
+            1,
+            32,
+            |r| (r.next_f32(), r.next_f32()),
+            |(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-9 {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always-fails",
+            2,
+            4,
+            |r| r.next_u64(),
+            |_| Err("boom".into()),
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let v = gen::vec_f32(&mut r, 100, -2.0, 3.0);
+        assert!(v.iter().all(|&x| (-2.0..3.0).contains(&x)));
+        let u = gen::vec_u32(&mut r, 100, 17);
+        assert!(u.iter().all(|&x| x < 17));
+        let s = gen::sorted_distinct_u32(&mut r, 10, 100);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,230 @@
+//! Cross-module integration tests: the full pipeline from synthetic data
+//! through index build, Algorithm 1, serving, hardware simulation, and the
+//! ablation switches — everything short of the XLA runtime (covered in
+//! runtime_integration.rs).
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::{Client, Server};
+use proxima::coordinator::SearchService;
+use proxima::dataset::ground_truth::brute_force;
+use proxima::dataset::synth::SynthSpec;
+use proxima::dataset::{mean_recall, recall_at_k};
+use proxima::figures::{self, Workbench};
+use proxima::search::proxima::ProximaFeatures;
+use std::sync::Arc;
+
+/// The headline pipeline: registry dataset -> index -> Algorithm 1 ->
+/// recall above the high-recall bar, with PQ doing the traversal work.
+#[test]
+fn pipeline_sift_like_high_recall() {
+    let w = Workbench::get("sift-s", 0.02, 10);
+    let ctx = w.context();
+    let params = SearchParams {
+        l: 120,
+        k: 10,
+        ..Default::default()
+    };
+    let mut results = Vec::new();
+    let mut stats = proxima::search::SearchStats::default();
+    for qi in 0..w.ds.n_queries() {
+        let q = w.ds.queries.row(qi);
+        let adt = w.codebook.build_adt(q);
+        let out = proxima::search::proxima::proxima_search(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+        );
+        stats.add(&out.stats);
+        results.push(out.ids);
+    }
+    let recall = mean_recall(&results, &w.gt, 10);
+    assert!(recall > 0.9, "recall {recall}");
+    // PQ distances dominate; accurate distances stay a bounded tail
+    // (the paper's core complexity claim: thousands of PQ lookups vs
+    // ~a hundred reranks — the ratio widens with dataset scale since
+    // hops grow while the rerank tail stays ~L).
+    assert!(
+        stats.exact_dists * 2 < stats.pq_dists,
+        "exact {} vs pq {}",
+        stats.exact_dists,
+        stats.pq_dists
+    );
+}
+
+/// Every registry dataset builds and reaches reasonable recall.
+#[test]
+fn all_registry_datasets_work() {
+    for spec in SynthSpec::registry(0.008) {
+        let ds = spec.generate();
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 24,
+                build_l: 48,
+                alpha: 1.2,
+                seed: 9,
+            },
+            &PqParams::for_dim(ds.dim()),
+            SearchParams {
+                l: 100,
+                k: 10,
+                ..Default::default()
+            },
+            false,
+        );
+        let gt = brute_force(&ds, 10);
+        let mut recall = 0.0;
+        let n_eval = ds.n_queries().min(60);
+        for qi in 0..n_eval {
+            let out = svc.search(ds.queries.row(qi), 10);
+            recall += recall_at_k(&out.ids, gt.row(qi), 10);
+        }
+        recall /= n_eval as f64;
+        assert!(recall > 0.6, "{}: recall {recall}", ds.name);
+    }
+}
+
+/// Ablations move the metrics in the documented direction.
+#[test]
+fn ablation_switches_behave() {
+    let w = Workbench::get("sift-s", 0.015, 10);
+    let (t_full, s_full) = figures::collect_traces(&w, figures::Algo::Proxima, 100, 10);
+    let (_t_noet, s_noet) = figures::collect_traces(&w, figures::Algo::ProximaNoEt, 100, 10);
+    // Early termination saves PQ work.
+    assert!(s_full.pq_dists <= s_noet.pq_dists);
+    // Gap encoding saves index bytes vs uniform 32-b.
+    let edges = w.graph.n_edges();
+    assert!(w.gap.compression_ratio(edges) < 0.85);
+    assert!(!t_full.is_empty());
+}
+
+/// TCP serving end-to-end with concurrent clients (no XLA dependency).
+#[test]
+fn serve_concurrent_clients_end_to_end() {
+    let spec = SynthSpec::by_name("sift-s", 0.006).unwrap();
+    let ds = spec.generate();
+    let svc = Arc::new(SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 16,
+            build_l: 32,
+            alpha: 1.2,
+            seed: 10,
+        },
+        &PqParams::for_dim(ds.dim()),
+        SearchParams {
+            l: 80,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    ));
+    let gt = brute_force(&ds, 10);
+    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default(), 2);
+    let server = Server::start(svc.clone(), handle, 0).unwrap();
+    let addr = server.addr;
+
+    let recalls: Vec<f64> = std::thread::scope(|scope| {
+        (0..3usize)
+            .map(|c| {
+                let ds = &ds;
+                let gt = &gt;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut r = 0.0;
+                    for i in 0..20 {
+                        let qi = (c * 20 + i) % ds.n_queries();
+                        let (ids, dists, _) = client.search(ds.queries.row(qi), 10).unwrap();
+                        assert_eq!(ids.len(), 10);
+                        assert!(dists.windows(2).all(|w| w[0] <= w[1] + 1e-6));
+                        r += recall_at_k(&ids, gt.row(qi), 10);
+                    }
+                    r / 20.0
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for r in &recalls {
+        assert!(*r > 0.6, "client recall {r}");
+    }
+    server.stop();
+}
+
+/// Software search -> trace -> DES -> sane hardware numbers, at two hot
+/// fractions (the full co-design loop).
+#[test]
+fn software_to_hardware_loop() {
+    let w = Workbench::get("sift-s", 0.015, 10);
+    let cfg = proxima::engine::EngineConfig::paper(w.ds.dim(), w.codebook.m);
+    let (traces, _) = figures::collect_traces(&w, figures::Algo::Proxima, 80, 10);
+    let cold = proxima::engine::sim::simulate(&cfg, &figures::default_mapping(&w, 0.0), &traces);
+    assert!(cold.qps > 0.0 && cold.energy_j > 0.0);
+    assert!(cold.core_utilization > 0.0 && cold.core_utilization <= 1.0);
+    // Latency must exceed the physical floor: hops * one page read.
+    let hops = traces[0]
+        .ops
+        .iter()
+        .filter(|o| matches!(o, proxima::search::TraceOp::FetchIndex { .. }))
+        .count();
+    let floor_ns = hops as f64 * 200.0;
+    assert!(
+        cold.mean_latency_ns > floor_ns,
+        "latency {} below physical floor {floor_ns}",
+        cold.mean_latency_ns
+    );
+
+    let hot_traces = figures::fig13::proxima_hot_traces(&w, 80, 10, 0.03);
+    let hot =
+        proxima::engine::sim::simulate(&cfg, &figures::default_mapping(&w, 0.03), &hot_traces);
+    assert!(hot.same_page_reads > cold.same_page_reads);
+}
+
+/// Reordering + hot nodes preserve search results exactly (id-mapped).
+#[test]
+fn reordering_preserves_results() {
+    let w = Workbench::get("glove-s", 0.008, 10);
+    let params = SearchParams {
+        l: 60,
+        k: 5,
+        ..Default::default()
+    };
+    let profile = proxima::reorder::VisitProfile::measure(
+        &w.ds.base,
+        &w.graph,
+        &w.codebook,
+        &w.codes,
+        &params,
+        30,
+        11,
+    );
+    let re = proxima::reorder::ReorderedIndex::build(&w.graph, &w.codes, &profile, 0.03);
+    re.graph.validate().unwrap();
+    // Hot nodes are the most frequently visited ones by construction:
+    // check rank-0 is the entry point region (visited every query).
+    assert!(re.n_hot > 0);
+    let entry_new = re.perm[w.graph.entry_point as usize];
+    assert!(
+        (entry_new as usize) < w.graph.n() / 10,
+        "entry point should be hot-ranked, got {entry_new}"
+    );
+}
+
+/// Config-file driven parameterization reaches the search layer.
+#[test]
+fn config_file_roundtrip_to_params() {
+    let text = "[search]\nl = 42\nbeta = 1.5\nt_step = 2\n[graph]\nr = 24\n";
+    let cfg = proxima::config::Config::parse(text).unwrap();
+    let sp = SearchParams::from_config(&cfg);
+    assert_eq!(sp.l, 42);
+    assert!((sp.beta - 1.5).abs() < 1e-6);
+    assert_eq!(sp.t_step, 2);
+    let gp = GraphParams::from_config(&cfg);
+    assert_eq!(gp.r, 24);
+}

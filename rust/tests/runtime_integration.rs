@@ -1,0 +1,186 @@
+//! Integration tests for the PJRT runtime against the built AOT artifacts
+//! (the L3 ↔ L2 ↔ L1 seam). All tests skip gracefully when `artifacts/`
+//! has not been built (`make artifacts`).
+
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::{ground_truth, VectorSet};
+use proxima::distance::Metric;
+use proxima::pq::PqCodebook;
+use proxima::runtime::executor::XlaDistance;
+use proxima::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let rt = Runtime::open_default();
+    if rt.is_none() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    rt
+}
+
+#[test]
+fn adt_xla_matches_native_l2() {
+    let Some(rt) = runtime() else { return };
+    let ds = tiny_uniform(400, 128, Metric::L2, 1);
+    let cb = PqCodebook::train(&ds.base, Metric::L2, 32, 256, 400, 6, 1);
+    let dist = XlaDistance::new(&rt, Metric::L2, 128, 32, 256).unwrap();
+    for qi in 0..5 {
+        let q = ds.queries.row(qi);
+        let a = dist.build_adt(&cb, q).unwrap();
+        let b = cb.build_adt(q);
+        assert_eq!(a.table.len(), b.table.len());
+        for (x, y) in a.table.iter().zip(&b.table) {
+            assert!((x - y).abs() < 1e-3 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn adt_xla_matches_native_all_dims_metrics() {
+    let Some(rt) = runtime() else { return };
+    for (dim, m) in [(128usize, 32usize), (96, 24), (100, 25)] {
+        for metric in [Metric::L2, Metric::Ip, Metric::Angular] {
+            let ds = tiny_uniform(300, dim, metric, 2);
+            let cb = PqCodebook::train(&ds.base, metric, m, 256, 300, 4, 2);
+            let dist = XlaDistance::new(&rt, metric, dim, m, 256)
+                .unwrap_or_else(|e| panic!("bind {metric:?} d{dim}: {e:#}"));
+            let q = ds.queries.row(0);
+            let a = dist.build_adt(&cb, q).unwrap();
+            let b = cb.build_adt(q);
+            for (i, (x, y)) in a.table.iter().zip(&b.table).enumerate() {
+                assert!(
+                    (x - y).abs() < 2e-3 * y.abs().max(1.0),
+                    "{metric:?} d{dim} entry {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rerank_xla_matches_native() {
+    let Some(rt) = runtime() else { return };
+    for metric in [Metric::L2, Metric::Angular] {
+        let ds = tiny_uniform(600, 128, metric, 3);
+        let dist = XlaDistance::new(&rt, metric, 128, 32, 256).unwrap();
+        let q = ds.queries.row(0);
+        // More ids than one batch (256) to exercise padding + chunking.
+        let ids: Vec<u32> = (0..300u32).collect();
+        let got = dist.rerank(&ds.base, q, &ids).unwrap();
+        assert_eq!(got.len(), 300);
+        for (i, &id) in ids.iter().enumerate() {
+            let want = metric.distance(q, ds.base.row(id as usize));
+            assert!(
+                (got[i] - want).abs() < 1e-2 * want.abs().max(1.0),
+                "{metric:?} id {id}: {} vs {want}",
+                got[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pq_scan_xla_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let ds = tiny_uniform(700, 96, Metric::L2, 4);
+    let cb = PqCodebook::train(&ds.base, Metric::L2, 24, 256, 700, 5, 4);
+    let codes = cb.encode(&ds.base);
+    let dist = XlaDistance::new(&rt, Metric::L2, 96, 24, 256).unwrap();
+    let q = ds.queries.row(1);
+    let adt = cb.build_adt(q);
+    let ids: Vec<u32> = (0..600u32).collect(); // > scan batch of 512
+    let got = dist.pq_scan(&adt, &codes, &ids).unwrap();
+    for (i, &id) in ids.iter().enumerate() {
+        let want = adt.pq_distance(codes.row(id as usize));
+        assert!(
+            (got[i] - want).abs() < 1e-3 * want.abs().max(1.0),
+            "id {id}: {} vs {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn ground_truth_xla_matches_bruteforce() {
+    let Some(rt) = runtime() else { return };
+    let ds = tiny_uniform(3000, 128, Metric::L2, 5);
+    let dist = XlaDistance::new(&rt, Metric::L2, 128, 32, 256).unwrap();
+    let gt_xla = dist.ground_truth(&ds.base, &ds.queries, 10).unwrap();
+    let gt_ref = ground_truth::brute_force(&ds, 10);
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for qi in 0..ds.n_queries() {
+        let a: std::collections::HashSet<u32> = gt_xla.row(qi).iter().copied().collect();
+        for id in gt_ref.row(qi) {
+            total += 1;
+            if a.contains(id) {
+                agree += 1;
+            }
+        }
+    }
+    // f32 GEMM vs native may tie-break on equal distances; demand 99%.
+    let frac = agree as f64 / total as f64;
+    assert!(frac > 0.99, "agreement {frac}");
+}
+
+#[test]
+fn service_with_xla_adt_end_to_end() {
+    if Runtime::default_dir().join("manifest.json").exists() {
+        use proxima::config::{GraphParams, PqParams, SearchParams};
+        use proxima::coordinator::SearchService;
+        // D=128/M=32 matches the artifact set.
+        let ds = tiny_uniform(500, 128, Metric::L2, 6);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 16,
+                build_l: 32,
+                alpha: 1.2,
+                seed: 6,
+            },
+            &PqParams {
+                m: 32,
+                c: 256,
+                train_sample: 500,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 60,
+                k: 10,
+                ..Default::default()
+            },
+            true,
+        );
+        assert!(svc.runtime.is_some(), "runtime thread should attach");
+        let gt = ground_truth::brute_force(&ds, 10);
+        let mut recall = 0.0;
+        for qi in 0..ds.n_queries() {
+            let out = svc.search(ds.queries.row(qi), 10);
+            recall += proxima::dataset::recall_at_k(&out.ids, gt.row(qi), 10);
+        }
+        recall /= ds.n_queries() as f64;
+        assert!(recall > 0.75, "recall through XLA ADT path: {recall}");
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+    }
+}
+
+#[test]
+fn xla_distance_rejects_unknown_shapes() {
+    let Some(rt) = runtime() else { return };
+    assert!(XlaDistance::new(&rt, Metric::L2, 77, 11, 256).is_err());
+}
+
+#[test]
+fn vectorset_roundtrip_through_rerank_padding() {
+    let Some(rt) = runtime() else { return };
+    // Single id (heavy padding) must still be exact.
+    let ds = tiny_uniform(50, 128, Metric::L2, 7);
+    let dist = XlaDistance::new(&rt, Metric::L2, 128, 32, 256).unwrap();
+    let q = ds.queries.row(0);
+    let got = dist.rerank(&ds.base, q, &[17]).unwrap();
+    let want = Metric::L2.distance(q, ds.base.row(17));
+    assert!((got[0] - want).abs() < 1e-3 * want.max(1.0));
+    let empty: Vec<f32> = dist.rerank(&ds.base, q, &[]).unwrap();
+    assert!(empty.is_empty());
+    let _ = VectorSet::new(2, vec![0.0, 0.0]);
+}
