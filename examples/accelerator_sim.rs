@@ -13,7 +13,7 @@ use proxima::nand::timing::TimingModel;
 use proxima::nand::NandConfig;
 use proxima::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> proxima::util::error::Result<()> {
     let args = Args::from_env(false);
     let name = args.get_or("dataset", "sift-s");
     let scale = args.get_f64("scale", 0.03);

@@ -10,7 +10,7 @@ use proxima::error_model::ber;
 use proxima::figures::{fig17, Workbench};
 use proxima::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> proxima::util::error::Result<()> {
     let args = Args::from_env(false);
     let name = args.get_or("dataset", "sift-s");
     let scale = args.get_f64("scale", 0.03);

@@ -12,7 +12,7 @@ use proxima::dataset::ground_truth::brute_force;
 use proxima::dataset::synth::SynthSpec;
 use proxima::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> proxima::util::error::Result<()> {
     let args = Args::from_env(false);
     let name = args.get_or("dataset", "sift-s");
     let scale = args.get_f64("scale", 0.05);
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
 
     // 1. Synthesize a Table I-style dataset.
     let spec = SynthSpec::by_name(name, scale)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+        .ok_or_else(|| proxima::anyhow!("unknown dataset {name}"))?;
     let ds = spec.generate();
     println!(
         "dataset {}: {} base vectors, dim {}, metric {}",
@@ -68,6 +68,28 @@ fn main() -> anyhow::Result<()> {
             / ds.n_queries() as f64
     );
     assert!(recall > 0.7, "quickstart recall sanity failed: {recall}");
+
+    // 5. The batch API: the same queries fanned across the fixed worker
+    //    pool, one pooled scratch per worker (the serving hot path).
+    let qrefs: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
+    let t0 = std::time::Instant::now();
+    let outs = svc.search_batch(&qrefs, k);
+    let batch_secs = t0.elapsed().as_secs_f64();
+    let batch_recall: f64 = outs
+        .iter()
+        .enumerate()
+        .map(|(qi, o)| proxima::dataset::recall_at_k(&o.ids, gt.row(qi), k))
+        .sum::<f64>()
+        / outs.len() as f64;
+    println!(
+        "search_batch: {} queries on {} workers  |  {:.0} QPS ({:.1}x serial)  |  recall {batch_recall:.4}",
+        outs.len(),
+        svc.workers,
+        outs.len() as f64 / batch_secs,
+        secs / batch_secs,
+    );
+    assert_eq!(outs.len(), ds.n_queries());
+
     println!("quickstart OK");
     Ok(())
 }

@@ -17,7 +17,7 @@ use proxima::dataset::synth::SynthSpec;
 use proxima::util::cli::Args;
 use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> proxima::util::error::Result<()> {
     let args = Args::from_env(false);
     let name = args.get_or("dataset", "sift-s");
     let scale = args.get_f64("scale", 0.05);
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let k = args.get_usize("k", 10);
 
     let spec = SynthSpec::by_name(name, scale)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+        .ok_or_else(|| proxima::anyhow!("unknown dataset {name}"))?;
     let ds = spec.generate();
     println!(
         "[serve] building index over {} x {}d ({})...",

@@ -17,7 +17,7 @@ use proxima::util::cli::Args;
 use std::sync::Arc;
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> proxima::util::error::Result<()> {
     let args = Args::from_env(false);
     let name = args.get_or("dataset", "sift-s");
     let scale = args.get_f64("scale", 0.03);
@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let k = 10;
 
     let spec = SynthSpec::by_name(name, scale)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+        .ok_or_else(|| proxima::anyhow!("unknown dataset {name}"))?;
     let ds = spec.generate();
     let gp = GraphParams::default();
     let pq = PqParams::for_dim(ds.dim());
@@ -36,8 +36,8 @@ fn main() -> anyhow::Result<()> {
         ds.n_base(),
         ds.dim()
     );
-    let single = ShardedService::build(&ds, 1, &gp, &pq, params.clone());
-    let sharded = ShardedService::build(&ds, n_shards, &gp, &pq, params.clone());
+    let single = ShardedService::build(&ds, 1, &gp, &pq, params);
+    let sharded = ShardedService::build(&ds, n_shards, &gp, &pq, params);
     let gt = brute_force(&ds, k);
 
     // Recall parity check.

@@ -6,14 +6,48 @@
 //! * ADT build: native vs AOT/XLA artifact
 //! * candidate-list insert, bitonic sort, gap row decode
 //! * DES event throughput
+//! * unified kernel: per-query allocation vs pooled scratch (+ a heap
+//!   allocation count for the steady state)
+//! * `search_batch` over the fixed worker pool vs serial (QPS baseline —
+//!   look for the machine-readable `qps_baseline` line)
 
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::SearchService;
 use proxima::dataset::synth::tiny_uniform;
 use proxima::distance::Metric;
-use proxima::pq::PqCodebook;
+use proxima::pq::{Adt, PqCodebook};
 use proxima::search::beam::CandidateList;
 use proxima::search::bitonic::bitonic_sort;
+use proxima::search::kernel::QueryScratch;
+use proxima::search::proxima::{proxima_search, proxima_search_into, ProximaFeatures};
+use proxima::search::SearchOutput;
 use proxima::util::bench::{bench, black_box};
 use proxima::util::rng::Xoshiro256pp;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts heap allocations so the scratch-pooling claim ("zero per-query
+/// allocations in steady state") is measured, not asserted.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
 
 fn main() {
     let mut rng = Xoshiro256pp::seed_from_u64(1);
@@ -117,4 +151,114 @@ fn main() {
         black_box(proxima::engine::sim::simulate(&cfg, &mapping, &traces))
     });
     println!("  -> {:.2} M trace-ops/s", r.per_sec(n_ops as f64) / 1e6);
+
+    // --- Unified kernel: per-query allocation vs pooled scratch. ---
+    let ctx = w.context();
+    let params = SearchParams {
+        l: 100,
+        k: 10,
+        ..Default::default()
+    };
+    let nq = w.ds.n_queries().min(64);
+
+    let r_fresh = bench("proxima fresh-scratch  x64q L=100", || {
+        let mut acc = 0u32;
+        for qi in 0..nq {
+            let q = w.ds.queries.row(qi);
+            let adt = w.codebook.build_adt(q);
+            let out = proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false);
+            acc = acc.wrapping_add(out.ids[0]);
+        }
+        acc
+    });
+
+    let mut scratch = QueryScratch::new();
+    let mut adt = Adt::default();
+    let mut out = SearchOutput::default();
+    let r_pooled = bench("proxima pooled-scratch x64q L=100", || {
+        let mut acc = 0u32;
+        for qi in 0..nq {
+            let q = w.ds.queries.row(qi);
+            w.codebook.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+            acc = acc.wrapping_add(out.ids[0]);
+        }
+        acc
+    });
+    println!(
+        "  -> pooled scratch: {:.2}x the fresh-allocation QPS",
+        r_fresh.mean.as_secs_f64() / r_pooled.mean.as_secs_f64()
+    );
+
+    // Steady-state allocation counts over one full pass (both paths are
+    // warm from the benches above).
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for qi in 0..nq {
+        let q = w.ds.queries.row(qi);
+        w.codebook.build_adt_into(q, &mut adt);
+        proxima_search_into(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+            &mut scratch,
+            &mut out,
+        );
+    }
+    let pooled_allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for qi in 0..nq {
+        let q = w.ds.queries.row(qi);
+        let adt = w.codebook.build_adt(q);
+        black_box(proxima_search(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+        ));
+    }
+    let fresh_allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    println!(
+        "  -> heap allocations over {nq} steady-state queries: pooled={pooled_allocs} fresh={fresh_allocs}"
+    );
+
+    // --- search_batch over the fixed worker pool vs serial. ---
+    let svc = SearchService::build(
+        &w.ds,
+        &GraphParams::default(),
+        &PqParams::for_dim(w.ds.dim()),
+        params,
+        false,
+    );
+    let qrefs: Vec<&[f32]> = (0..w.ds.n_queries()).map(|i| w.ds.queries.row(i)).collect();
+    let svc = svc.with_workers(1);
+    let r_serial = bench("search_batch workers=1", || {
+        svc.search_batch(&qrefs, 10).len()
+    });
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let svc = svc.with_workers(cores);
+    let r_batch = bench("search_batch pooled-workers", || {
+        svc.search_batch(&qrefs, 10).len()
+    });
+    let qps_serial = r_serial.per_sec(qrefs.len() as f64);
+    let qps_batch = r_batch.per_sec(qrefs.len() as f64);
+    // Machine-readable QPS baseline (EXPERIMENTS extraction + the ≥2x on
+    // ≥4 cores acceptance check).
+    println!(
+        "qps_baseline serial={qps_serial:.0} batch={qps_batch:.0} speedup={:.2} workers={cores} pooled_allocs={pooled_allocs} fresh_allocs={fresh_allocs}",
+        qps_batch / qps_serial
+    );
 }

@@ -122,7 +122,9 @@ impl Config {
 }
 
 /// Search algorithm parameters (paper §III + §V-A defaults).
-#[derive(Clone, Debug)]
+/// Plain scalars, so `Copy` — the per-query hot path duplicates it with
+/// no allocation.
+#[derive(Clone, Copy, Debug)]
 pub struct SearchParams {
     /// Candidate list capacity L.
     pub l: usize,

@@ -114,8 +114,9 @@ fn run_loop(
         stats.batches += 1;
         stats.queries += pending.len() as u64;
 
-        // Dispatch: ADTs first (the batchable stage), then searches across
-        // a small worker pool.
+        // Dispatch across the worker pool. Each worker checks one scratch
+        // out of the service pool for its whole slice, so the per-query
+        // path inside the batch allocates nothing.
         let batch: Vec<Request> = std::mem::take(&mut pending);
         let svc = service.clone();
         std::thread::scope(|scope| {
@@ -123,8 +124,9 @@ fn run_loop(
             for part in batch.chunks(chunk) {
                 let svc = svc.clone();
                 scope.spawn(move || {
+                    let mut scratch = svc.checkout_scratch();
                     for req in part {
-                        let out = svc.search(&req.query, req.k);
+                        let out = svc.search_with_scratch(&req.query, req.k, &mut scratch);
                         let _ = req.respond.send(out);
                     }
                 });

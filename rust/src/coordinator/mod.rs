@@ -3,8 +3,14 @@
 //! * [`SearchService`] — owns one loaded index (base vectors, graph, PQ,
 //!   gap encoding) and answers queries; the per-query ADT is built through
 //!   the AOT/XLA artifact when a [`Runtime`](crate::runtime::Runtime) is
-//!   attached (Python never runs here), with a native fallback.
-//! * [`batcher`] — dynamic batching (size- or deadline-triggered).
+//!   attached (Python never runs here), with a native fallback. Per-query
+//!   scratch (visited set, candidate list, exact cache, ADT table) comes
+//!   from an internal [`ScratchPool`], so the steady-state request path is
+//!   allocation-free; [`SearchService::search_batch`] fans a batch across
+//!   a fixed pool of worker threads, one scratch per worker.
+//! * [`batcher`] — dynamic batching (size- or deadline-triggered), workers
+//!   holding pooled scratch for their batch slice.
+//! * [`shard`] — partitioned scale-out with parallel fan-out.
 //! * [`server`] — a TCP line-protocol front end + client, on std threads
 //!   (the offline image has no tokio; see DESIGN.md §1).
 
@@ -21,7 +27,8 @@ use crate::graph::{vamana, Graph};
 use crate::pq::{Adt, PqCodebook, PqCodes};
 use crate::runtime::service::RuntimeHandle;
 use crate::search::beam::SearchContext;
-use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
+use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -33,6 +40,14 @@ pub struct ServiceStats {
     pub pq_dists: AtomicU64,
     pub exact_dists: AtomicU64,
     pub total_latency_us: AtomicU64,
+}
+
+/// Per-query scratch a service worker checks out: the walk state plus a
+/// reusable ADT table (the two per-query allocations the seed paid).
+#[derive(Default)]
+pub struct ServiceScratch {
+    pub adt: Adt,
+    pub walk: QueryScratch,
 }
 
 /// One loaded, queryable index.
@@ -51,6 +66,9 @@ pub struct SearchService {
     /// handles are pinned to that thread (they are not `Send`).
     pub runtime: Option<RuntimeHandle>,
     pub stats: ServiceStats,
+    /// Fixed worker-pool width for [`Self::search_batch`].
+    pub workers: usize,
+    scratch: ScratchPool<ServiceScratch>,
 }
 
 impl SearchService {
@@ -92,7 +110,20 @@ impl SearchService {
             features: ProximaFeatures::default(),
             runtime,
             stats: ServiceStats::default(),
+            workers: default_workers(),
+            scratch: ScratchPool::new(),
         }
+    }
+
+    /// Override the fixed worker-pool width used by [`Self::search_batch`].
+    pub fn with_workers(mut self, workers: usize) -> SearchService {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Check out per-query scratch (workers hold one for their lifetime).
+    pub fn checkout_scratch(&self) -> Pooled<'_, ServiceScratch> {
+        self.scratch.checkout()
     }
 
     fn context(&self) -> SearchContext<'_> {
@@ -107,25 +138,64 @@ impl SearchService {
 
     /// Build the query's ADT — through XLA when attached, else natively.
     pub fn build_adt(&self, q: &[f32]) -> Adt {
+        let mut adt = Adt::default();
+        self.build_adt_into(q, &mut adt);
+        adt
+    }
+
+    /// [`Self::build_adt`] into a reusable table (the scratch path).
+    pub fn build_adt_into(&self, q: &[f32], adt: &mut Adt) {
         if let Some(rt) = &self.runtime {
             match rt.build_adt(q) {
-                Ok(adt) => return adt,
+                Ok(a) => {
+                    // Copy into the pooled table rather than replacing it,
+                    // so the scratch allocation survives the XLA path too.
+                    adt.m = a.m;
+                    adt.c = a.c;
+                    adt.table.clear();
+                    adt.table.extend_from_slice(&a.table);
+                    return;
+                }
                 Err(e) => {
                     // Fall back but surface the problem.
                     eprintln!("[service] XLA ADT failed ({e:#}); using native path");
                 }
             }
         }
-        self.codebook.build_adt(q)
+        self.codebook.build_adt_into(q, adt);
     }
 
     /// Answer one query (Algorithm 1).
     pub fn search(&self, q: &[f32], k: usize) -> SearchOutput {
+        let mut scratch = self.scratch.checkout();
+        self.search_with_scratch(q, k, &mut scratch)
+    }
+
+    /// Answer one query using caller-held scratch (the worker hot path:
+    /// zero heap allocations in steady state apart from the output
+    /// buffers).
+    pub fn search_with_scratch(
+        &self,
+        q: &[f32],
+        k: usize,
+        scratch: &mut ServiceScratch,
+    ) -> SearchOutput {
         let t0 = std::time::Instant::now();
-        let mut params = self.params.clone();
+        let mut params = self.params;
         params.k = k.min(params.l);
-        let adt = self.build_adt(q);
-        let out = proxima_search(&self.context(), &adt, q, &params, self.features, false);
+        let ServiceScratch { adt, walk } = scratch;
+        self.build_adt_into(q, adt);
+        let mut out = SearchOutput::default();
+        proxima_search_into(
+            &self.context(),
+            adt,
+            q,
+            &params,
+            self.features,
+            false,
+            walk,
+            &mut out,
+        );
         self.record(&out.stats, t0.elapsed());
         out
     }
@@ -134,11 +204,59 @@ impl SearchService {
     /// path: ADTs built in a batch up front).
     pub fn search_with_adt(&self, q: &[f32], adt: &Adt, k: usize) -> SearchOutput {
         let t0 = std::time::Instant::now();
-        let mut params = self.params.clone();
+        let mut params = self.params;
         params.k = k.min(params.l);
-        let out = proxima_search(&self.context(), adt, q, &params, self.features, false);
+        let mut scratch = self.scratch.checkout();
+        let mut out = SearchOutput::default();
+        proxima_search_into(
+            &self.context(),
+            adt,
+            q,
+            &params,
+            self.features,
+            false,
+            &mut scratch.walk,
+            &mut out,
+        );
         self.record(&out.stats, t0.elapsed());
         out
+    }
+
+    /// Answer a whole batch by fanning the queries across a fixed pool of
+    /// [`Self::workers`] threads, each holding its own pooled scratch for
+    /// the duration (per-worker scratch, per-query zero-alloc). Results
+    /// come back in input order.
+    pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<SearchOutput> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.workers.max(1).min(queries.len());
+        if workers == 1 {
+            let mut scratch = self.scratch.checkout();
+            return queries
+                .iter()
+                .map(|q| self.search_with_scratch(q, k, &mut scratch))
+                .collect();
+        }
+        let chunk = queries.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = queries
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(move || {
+                        let mut scratch = self.scratch.checkout();
+                        part.iter()
+                            .map(|q| self.search_with_scratch(q, k, &mut scratch))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(queries.len());
+            for h in handles {
+                out.extend(h.join().expect("search worker panicked"));
+            }
+            out
+        })
     }
 
     fn record(&self, s: &SearchStats, elapsed: std::time::Duration) {
@@ -166,6 +284,13 @@ impl SearchService {
             self.stats.total_latency_us.load(Ordering::Relaxed) as f64 / q as f64
         }
     }
+}
+
+/// Default `search_batch` width: one worker per available core.
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
 }
 
 #[cfg(test)]
@@ -232,5 +357,36 @@ mod tests {
         let a = svc.build_adt(q);
         let b = svc.codebook.build_adt(q);
         assert_eq!(a.table, b.table);
+    }
+
+    #[test]
+    fn search_batch_matches_serial_in_order() {
+        let (ds, svc) = service();
+        let svc = svc.with_workers(4);
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
+        let serial: Vec<_> = queries.iter().map(|q| svc.search(q, 10)).collect();
+        let batch = svc.search_batch(&queries, 10);
+        assert_eq!(batch.len(), serial.len());
+        for (b, s) in batch.iter().zip(&serial) {
+            assert_eq!(b.ids, s.ids, "batch results must match serial, in order");
+        }
+        assert_eq!(
+            svc.stats.queries.load(Ordering::Relaxed),
+            2 * ds.n_queries() as u64
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let (ds, svc) = service();
+        let mut scratch = svc.checkout_scratch();
+        let fresh: Vec<_> = (0..ds.n_queries())
+            .map(|i| svc.search(ds.queries.row(i), 10))
+            .collect();
+        for (i, f) in fresh.iter().enumerate() {
+            let r = svc.search_with_scratch(ds.queries.row(i), 10, &mut scratch);
+            assert_eq!(r.ids, f.ids, "query {i}: reused scratch changed results");
+            assert_eq!(r.dists, f.dists);
+        }
     }
 }

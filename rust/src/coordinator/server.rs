@@ -12,8 +12,9 @@
 
 use super::batcher::BatcherHandle;
 use super::SearchService;
+use crate::anyhow;
+use crate::util::error::Result;
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};

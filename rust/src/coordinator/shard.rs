@@ -47,7 +47,7 @@ impl ShardedService {
                 queries: VectorSet::zeros(0, ds.dim()),
             };
             shard_base.push(lo as u32);
-            shards.push(SearchService::build(&sub, gp, pq, params.clone(), false));
+            shards.push(SearchService::build(&sub, gp, pq, params, false));
         }
         ShardedService { shards, shard_base }
     }
@@ -56,12 +56,32 @@ impl ShardedService {
         self.shards.len()
     }
 
-    /// Fan out to all shards, merge by reported (accurate) distance.
+    /// Fan out to all shards in parallel (one scoped thread per shard,
+    /// each shard drawing from its own scratch pool), then merge by
+    /// reported (accurate) distance. Thread spawn costs ~tens of µs per
+    /// shard — negligible against production per-shard search times, but
+    /// a persistent pool is the planned next step (see ROADMAP) for
+    /// many-shard, short-query workloads.
     pub fn search(&self, q: &[f32], k: usize) -> SearchOutput {
+        let per_shard: Vec<SearchOutput> = if self.shards.len() == 1 {
+            vec![self.shards[0].search(q, k)]
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|svc| scope.spawn(move || svc.search(q, k)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard search panicked"))
+                    .collect()
+            })
+        };
+
         let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
         let mut stats = crate::search::SearchStats::default();
-        for (s, svc) in self.shards.iter().enumerate() {
-            let out = svc.search(q, k);
+        for (s, out) in per_shard.iter().enumerate() {
             stats.add(&out.stats);
             for (d, id) in out.dists.iter().zip(&out.ids) {
                 merged.push((*d, self.shard_base[s] + id));

@@ -4,13 +4,81 @@
 //! real corpora when they are available instead of the synthetic registry.
 
 use super::VectorSet;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Read an .fvecs file (optionally capping at `max_rows`).
 pub fn read_fvecs(path: &Path, max_rows: Option<usize>) -> Result<VectorSet> {
     let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     parse_fvecs(&buf, max_rows)
+}
+
+/// Read an .fvecs file and prepare it for `metric` — the loading path real
+/// corpora must use (bare [`read_fvecs`] returns raw vectors and is only
+/// appropriate when the metric needs no preparation). Angular datasets
+/// (e.g. raw GLOVE embeddings) are normalized to unit L2 norm here,
+/// because `Metric::Angular`'s `1 - dot` is only the cosine distance on
+/// unit vectors (debug builds assert it).
+pub fn read_fvecs_for_metric(
+    path: &Path,
+    metric: crate::distance::Metric,
+    max_rows: Option<usize>,
+) -> Result<VectorSet> {
+    let mut vs = read_fvecs(path, max_rows)?;
+    prepare_for_metric(&mut vs, metric)?;
+    Ok(vs)
+}
+
+/// Assemble a full [`Dataset`] from fvecs base + query files, prepared
+/// for `metric` — the supported end-to-end path for running the pipeline
+/// on real corpora (it cannot skip Angular normalization).
+pub fn load_fvecs_dataset(
+    name: &str,
+    metric: crate::distance::Metric,
+    base_path: &Path,
+    query_path: &Path,
+    max_base_rows: Option<usize>,
+) -> Result<super::Dataset> {
+    let base = read_fvecs_for_metric(base_path, metric, max_base_rows)?;
+    let queries = read_fvecs_for_metric(query_path, metric, None)?;
+    if queries.dim != base.dim {
+        bail!(
+            "query dim {} != base dim {} ({} vs {})",
+            queries.dim,
+            base.dim,
+            query_path.display(),
+            base_path.display()
+        );
+    }
+    Ok(super::Dataset {
+        name: name.to_string(),
+        metric,
+        base,
+        queries,
+    })
+}
+
+/// Normalize a loaded vector set for `metric` (no-op except Angular).
+/// Rows already at unit norm are left bit-exact so save/load roundtrips
+/// of properly normalized sets are lossless. Zero-norm rows under Angular
+/// are an error here — they cannot be normalized, and letting them
+/// through would only defer the failure to a misleading assertion (or a
+/// silently constant distance) deep inside graph build.
+pub fn prepare_for_metric(vs: &mut VectorSet, metric: crate::distance::Metric) -> Result<()> {
+    if metric == crate::distance::Metric::Angular {
+        for i in 0..vs.len() {
+            let row = vs.row_mut(i);
+            let n2 = crate::distance::dot(row, row);
+            if n2 == 0.0 {
+                bail!("angular dataset row {i} has zero norm and cannot be normalized");
+            }
+            if (n2 - 1.0).abs() > 1e-6 {
+                crate::distance::normalize(row);
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Parse fvecs bytes.
@@ -133,6 +201,50 @@ mod tests {
         let back = read_fvecs(&p, Some(10)).unwrap();
         assert_eq!(back.len(), 10);
         assert_eq!(&back.data[..], &ds.base.data[..50]);
+    }
+
+    #[test]
+    fn angular_loads_are_normalized() {
+        use crate::distance::{norm, Metric};
+        // Deliberately unnormalized rows on disk.
+        let vs = VectorSet::new(3, vec![3.0, 4.0, 0.0, 0.0, 5.0, 12.0]);
+        let p = tmp("ang.fvecs");
+        write_fvecs(&vs, &p).unwrap();
+        let l2 = read_fvecs_for_metric(&p, Metric::L2, None).unwrap();
+        assert_eq!(l2.data, vs.data, "L2 loads must stay untouched");
+        let ang = read_fvecs_for_metric(&p, Metric::Angular, None).unwrap();
+        for i in 0..ang.len() {
+            assert!((norm(ang.row(i)) - 1.0).abs() < 1e-5, "row {i} not unit");
+        }
+        // And the distance is now the true cosine distance of the originals.
+        // cos((3,4,0), (0,5,12)) = 20 / (5 * 13).
+        let d = Metric::Angular.distance(ang.row(0), ang.row(1));
+        assert!((d - (1.0 - 20.0 / 65.0)).abs() < 1e-5, "cosine distance wrong: {d}");
+    }
+
+    #[test]
+    fn angular_zero_row_is_rejected() {
+        use crate::distance::Metric;
+        let vs = VectorSet::new(2, vec![1.0, 2.0, 0.0, 0.0]);
+        let p = tmp("zero.fvecs");
+        write_fvecs(&vs, &p).unwrap();
+        assert!(read_fvecs_for_metric(&p, Metric::Angular, None).is_err());
+        assert!(read_fvecs_for_metric(&p, Metric::L2, None).is_ok());
+    }
+
+    #[test]
+    fn fvecs_dataset_assembly_normalizes() {
+        use crate::distance::{norm, Metric};
+        let base = VectorSet::new(2, vec![3.0, 4.0, 5.0, 12.0]);
+        let queries = VectorSet::new(2, vec![8.0, 6.0]);
+        let bp = tmp("dsb.fvecs");
+        let qp = tmp("dsq.fvecs");
+        write_fvecs(&base, &bp).unwrap();
+        write_fvecs(&queries, &qp).unwrap();
+        let ds = load_fvecs_dataset("glove-raw", Metric::Angular, &bp, &qp, None).unwrap();
+        assert_eq!(ds.metric, Metric::Angular);
+        assert!((norm(ds.base.row(0)) - 1.0).abs() < 1e-5);
+        assert!((norm(ds.queries.row(0)) - 1.0).abs() < 1e-5);
     }
 
     #[test]

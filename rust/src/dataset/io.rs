@@ -4,8 +4,9 @@
 //! versioned so examples can cache expensive artifacts (graph builds).
 
 use super::{Dataset, GroundTruth, VectorSet};
+use crate::bail;
 use crate::distance::Metric;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -103,6 +104,27 @@ pub fn load_dataset(path: &Path) -> Result<Dataset> {
     let dim = r.u32()? as usize;
     let base = VectorSet::new(dim, r.f32_vec(n_base * dim)?);
     let queries = VectorSet::new(dim, r.f32_vec(n_q * dim)?);
+    // Guard the Angular unit-norm invariant loudly. Silently normalizing
+    // here would desynchronize the vectors from any ground-truth file
+    // computed on the raw data (wrong recall, no error) — so a foreign
+    // container with unnormalized Angular vectors is rejected instead;
+    // normalize at generation time (`fvecs::prepare_for_metric`) and
+    // recompute its ground truth.
+    if metric == Metric::Angular {
+        for (set, what) in [(&base, "base"), (&queries, "query")] {
+            for i in 0..set.len() {
+                let n2 = crate::distance::dot(set.row(i), set.row(i));
+                if (n2 - 1.0).abs() > 1e-3 {
+                    bail!(
+                        "{}: angular container holds unnormalized {what} vector {i} \
+                         (|v|^2 = {n2}); regenerate it (and any ground truth) from \
+                         normalized data",
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
     Ok(Dataset {
         name,
         metric,
@@ -215,6 +237,23 @@ mod tests {
         assert_eq!(back.metric, ds.metric);
         assert_eq!(back.base.data, ds.base.data);
         assert_eq!(back.queries.data, ds.queries.data);
+    }
+
+    #[test]
+    fn rejects_unnormalized_angular_container() {
+        // A foreign container with raw Angular vectors must fail loudly —
+        // silently normalizing would desync it from stored ground truth.
+        let mut ds = tiny_uniform(10, 4, Metric::Angular, 3);
+        for x in ds.base.data.iter_mut() {
+            *x *= 3.0;
+        }
+        let p = tmpdir().join("bad-angular.bin");
+        save_dataset(&ds, &p).unwrap();
+        let err = load_dataset(&p).unwrap_err();
+        assert!(
+            err.to_string().contains("unnormalized"),
+            "unexpected error: {err}"
+        );
     }
 
     #[test]

@@ -35,13 +35,31 @@ impl Metric {
     }
 
     /// Full-precision distance between two D-dim vectors.
+    ///
+    /// For `Angular`, `1 - dot` equals the cosine distance only on
+    /// unit-norm inputs — the dataset loaders normalize on load (see
+    /// `dataset::fvecs::prepare_for_metric` / the synthetic generators).
+    /// Debug builds assert that the first operand is unit-norm: every
+    /// caller passes the query / a stored base row / the normalized medoid
+    /// there, so raw unnormalized data trips this immediately (during
+    /// graph build, not as silently-wrong recall). The second operand is
+    /// deliberately unchecked because PQ-decoded reconstructions flow
+    /// through it, and quantization does not preserve the norm.
     #[inline]
     pub fn distance(&self, a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         match self {
             Metric::L2 => l2_sq(a, b),
             Metric::Ip => -dot(a, b),
-            Metric::Angular => 1.0 - dot(a, b), // unit-norm inputs
+            Metric::Angular => {
+                debug_assert!(
+                    (dot(a, a) - 1.0).abs() < 1e-2,
+                    "Angular metric on non-unit-norm input (|a|^2 = {}): \
+                     normalize vectors in the dataset loader",
+                    dot(a, a)
+                );
+                1.0 - dot(a, b)
+            }
         }
     }
 
@@ -225,6 +243,17 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "normalize vectors in the dataset loader")]
+    fn angular_rejects_unnormalized_inputs_in_debug() {
+        // Raw (unnormalized) embeddings must not silently produce wrong
+        // distances: norms > 1 trip the debug assertion.
+        let a = [3.0f32, 4.0];
+        let b = [4.0f32, 3.0];
+        Metric::Angular.distance(&a, &b);
     }
 
     #[test]

@@ -8,9 +8,10 @@
 use super::Workbench;
 use crate::config::SearchParams;
 use crate::dataset::mean_recall;
-use crate::search::beam::{accurate_beam_search, pq_beam_search};
+use crate::search::beam::{accurate_beam_search_with, pq_beam_search_with};
 use crate::search::ivf::IvfPq;
-use crate::search::proxima::{proxima_search, ProximaFeatures};
+use crate::search::kernel::QueryScratch;
+use crate::search::proxima::{proxima_search_with, ProximaFeatures};
 use crate::search::SearchStats;
 use crate::util::bench::Table;
 use std::time::Instant;
@@ -45,13 +46,23 @@ where
 }
 
 /// Sweep the three graph algorithms + IVF over their accuracy knobs.
+/// QPS is measured over pooled scratch + reused ADT tables — the same
+/// steady-state path the serving layer runs. Note: untraced sweeps use
+/// the exact epoch visited set, not the paper's Bloom filter, so recall
+/// can only match-or-beat the seed's numbers (no false-positive drops);
+/// the DES-bound figures (13/14 via `collect_traces`) keep the Bloom
+/// filter for §IV-B fidelity.
 pub fn sweep(w: &Workbench, k: usize, l_sweep: &[usize]) -> Vec<OpPoint> {
     let mut points = Vec::new();
     let ctx = w.context();
+    let mut scratch = QueryScratch::new();
+    let mut adt = crate::pq::Adt::default();
 
     for &l in l_sweep {
         // HNSW-like: accurate distances on the flat graph.
-        let (recall, qps, stats) = measure(w, k, |q| accurate_beam_search(&ctx, q, k, l, false));
+        let (recall, qps, stats) = measure(w, k, |q| {
+            accurate_beam_search_with(&ctx, q, k, l, false, &mut scratch)
+        });
         points.push(OpPoint {
             algo: "HNSW",
             dataset: w.ds.name.clone(),
@@ -63,8 +74,8 @@ pub fn sweep(w: &Workbench, k: usize, l_sweep: &[usize]) -> Vec<OpPoint> {
 
         // DiskANN-PQ: PQ traversal + top-L/3 rerank.
         let (recall, qps, stats) = measure(w, k, |q| {
-            let adt = w.codebook.build_adt(q);
-            pq_beam_search(&ctx, &adt, q, k, l, (l / 3).max(k), false)
+            w.codebook.build_adt_into(q, &mut adt);
+            pq_beam_search_with(&ctx, &adt, q, k, l, (l / 3).max(k), false, &mut scratch)
         });
         points.push(OpPoint {
             algo: "DiskANN-PQ",
@@ -82,8 +93,9 @@ pub fn sweep(w: &Workbench, k: usize, l_sweep: &[usize]) -> Vec<OpPoint> {
             ..Default::default()
         };
         let (recall, qps, stats) = measure(w, k, |q| {
-            let adt = w.codebook.build_adt(q);
-            proxima_search(&ctx, &adt, q, &params, ProximaFeatures::default(), false)
+            w.codebook.build_adt_into(q, &mut adt);
+            let feats = ProximaFeatures::default();
+            proxima_search_with(&ctx, &adt, q, &params, feats, false, &mut scratch)
         });
         points.push(OpPoint {
             algo: "Proxima",

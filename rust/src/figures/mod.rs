@@ -150,27 +150,32 @@ pub enum Algo {
 }
 
 /// Run `algo` over all queries collecting hardware traces + mean stats.
+/// Traced runs use the paper's Bloom visited set (§IV-B fidelity for the
+/// DES); scratch and the ADT table are reused across the query loop.
 pub fn collect_traces(
     w: &Workbench,
     algo: Algo,
     l: usize,
     k: usize,
 ) -> (Vec<crate::search::Trace>, crate::search::SearchStats) {
-    use crate::search::beam::{accurate_beam_search, pq_beam_search};
-    use crate::search::proxima::{proxima_search, ProximaFeatures};
+    use crate::search::beam::{accurate_beam_search_with, pq_beam_search_with};
+    use crate::search::kernel::QueryScratch;
+    use crate::search::proxima::{proxima_search_with, ProximaFeatures};
     let ctx = w.context();
     let mut traces = Vec::with_capacity(w.ds.n_queries());
     let mut stats = crate::search::SearchStats::default();
+    let mut scratch = QueryScratch::new();
+    let mut adt = crate::pq::Adt::default();
     for qi in 0..w.ds.n_queries() {
         let q = w.ds.queries.row(qi);
         let out = match algo {
-            Algo::Hnsw => accurate_beam_search(&ctx, q, k, l, true),
+            Algo::Hnsw => accurate_beam_search_with(&ctx, q, k, l, true, &mut scratch),
             Algo::DiskannPq => {
-                let adt = w.codebook.build_adt(q);
-                pq_beam_search(&ctx, &adt, q, k, l, (l / 3).max(k), true)
+                w.codebook.build_adt_into(q, &mut adt);
+                pq_beam_search_with(&ctx, &adt, q, k, l, (l / 3).max(k), true, &mut scratch)
             }
             Algo::Proxima | Algo::ProximaNoEt => {
-                let adt = w.codebook.build_adt(q);
+                w.codebook.build_adt_into(q, &mut adt);
                 let feats = ProximaFeatures {
                     early_termination: algo == Algo::Proxima,
                     beta_rerank: true,
@@ -180,7 +185,7 @@ pub fn collect_traces(
                     k,
                     ..Default::default()
                 };
-                proxima_search(&ctx, &adt, q, &params, feats, true)
+                proxima_search_with(&ctx, &adt, q, &params, feats, true, &mut scratch)
             }
         };
         stats.add(&out.stats);

@@ -4,7 +4,12 @@
 //! contains, per DESIGN.md:
 //!
 //! * the **Proxima graph-search algorithm** (PQ-distance traversal,
-//!   β-reranking, dynamic list + early termination, gap-encoded indices);
+//!   β-reranking, dynamic list + early termination, gap-encoded indices),
+//!   implemented — together with the HNSW-like and DiskANN-PQ baselines —
+//!   as policies over ONE unified traversal kernel (`search::kernel`):
+//!   a single best-first expansion loop parameterized by a
+//!   `DistanceProvider` and a `VisitedSet`, with pooled per-query scratch
+//!   so the steady-state hot path performs zero heap allocations;
 //! * every **substrate** it depends on: datasets, ground truth, PQ/k-means,
 //!   Vamana + HNSW graph builders, IVF baseline, Bloom filter, bitonic
 //!   sorter;
@@ -12,8 +17,12 @@
 //!   models, discrete-event search-engine with queues/arbiter/scheduler,
 //!   data-mapping schemes);
 //! * the **PJRT runtime** that executes AOT-compiled JAX/Pallas kernels
-//!   from `artifacts/` on the request path (Python is build-time only);
-//! * a thread-based **coordinator** (router, batcher, TCP server);
+//!   from `artifacts/` on the request path (Python is build-time only;
+//!   gated behind the off-by-default `xla` cargo feature so the default
+//!   build needs no compiled artifacts);
+//! * a thread-based **coordinator** (router, batcher, TCP server, sharded
+//!   scale-out, and a `search_batch` API over a fixed worker pool with
+//!   per-worker scratch);
 //! * the figure/table harnesses regenerating the paper's evaluation.
 
 pub mod config;

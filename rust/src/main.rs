@@ -13,7 +13,6 @@
 //! Config file via `--config path` plus `--set key=value` overrides
 //! (see `config::Config`).
 
-use anyhow::Result;
 use proxima::config::{Config, GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
 use proxima::coordinator::server::Server;
@@ -22,13 +21,14 @@ use proxima::dataset::synth::SynthSpec;
 use proxima::figures;
 use proxima::util::bench::Table;
 use proxima::util::cli::Args;
+use proxima::util::error::Result;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
     let args = Args::from_env(true);
     let mut cfg = match args.get("config") {
         Some(path) => Config::load(std::path::Path::new(path))
-            .map_err(|e| anyhow::anyhow!("config: {e}"))?,
+            .map_err(|e| proxima::anyhow!("config: {e}"))?,
         None => Config::new(),
     };
     cfg.overlay_args(&args);
@@ -60,7 +60,7 @@ fn dataset_from_cfg(cfg: &Config) -> Result<proxima::dataset::Dataset> {
     let name = cfg.get_str("dataset").unwrap_or("sift-s");
     let scale = cfg.get_f64("scale", 0.05);
     let spec = SynthSpec::by_name(name, scale)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name} (try `proxima datasets`)"))?;
+        .ok_or_else(|| proxima::anyhow!("unknown dataset {name} (try `proxima datasets`)"))?;
     eprintln!(
         "[proxima] dataset {name}: {} base x {}d ({}), {} queries",
         spec.n_base,
@@ -252,7 +252,7 @@ fn cmd_figures(cfg: &Config) -> Result<()> {
         emitted.extend(figures::ablations::run(small[0], scale));
     }
     if emitted.is_empty() {
-        anyhow::bail!("unknown figure id {which}");
+        proxima::bail!("unknown figure id {which}");
     }
     for t in &emitted {
         t.print();

@@ -52,7 +52,10 @@ impl PqCodes {
 
 /// Asymmetric distance table for one query: `m x c` partial distances plus
 /// the metric bias folded into subspace 0 (see `Metric::adt_bias`).
-#[derive(Clone, Debug)]
+///
+/// `Default` yields an empty table for scratch pooling; fill it with
+/// [`PqCodebook::build_adt_into`] to reuse the allocation across queries.
+#[derive(Clone, Debug, Default)]
 pub struct Adt {
     pub m: usize,
     pub c: usize,
@@ -194,9 +197,22 @@ impl PqCodebook {
     /// Build the ADT for a query (native path; the AOT/XLA path lives in
     /// `runtime::` and must produce numerically close tables).
     pub fn build_adt(&self, q: &[f32]) -> Adt {
+        let mut adt = Adt::default();
+        self.build_adt_into(q, &mut adt);
+        adt
+    }
+
+    /// [`Self::build_adt`] into a caller-owned table, reusing its
+    /// allocation — the request path builds one ADT per query, so pooling
+    /// this `m * c`-float buffer removes the largest per-query allocation.
+    pub fn build_adt_into(&self, q: &[f32], adt: &mut Adt) {
         assert_eq!(q.len(), self.dim);
         let dsub = self.dsub();
-        let mut table = vec![0.0f32; self.m * self.c];
+        adt.m = self.m;
+        adt.c = self.c;
+        adt.table.clear();
+        adt.table.resize(self.m * self.c, 0.0);
+        let table = &mut adt.table;
         for sub in 0..self.m {
             let qv = &q[sub * dsub..(sub + 1) * dsub];
             for ci in 0..self.c {
@@ -207,14 +223,9 @@ impl PqCodebook {
         // full-precision distance formula.
         let bias = self.metric.adt_bias();
         if bias != 0.0 {
-            for ci in 0..self.c {
-                table[ci] += bias;
+            for t in table.iter_mut().take(self.c) {
+                *t += bias;
             }
-        }
-        Adt {
-            m: self.m,
-            c: self.c,
-            table,
         }
     }
 

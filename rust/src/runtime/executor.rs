@@ -8,10 +8,11 @@
 //! mirroring `distance::Metric::adt_bias`.
 
 use super::{InputBuf, Runtime};
+use crate::anyhow;
 use crate::dataset::{GroundTruth, VectorSet};
 use crate::distance::Metric;
 use crate::pq::{Adt, PqCodebook, PqCodes};
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 /// Distance engine backed by compiled XLA executables.
 pub struct XlaDistance<'rt> {

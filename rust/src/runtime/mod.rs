@@ -10,9 +10,9 @@
 pub mod executor;
 pub mod service;
 
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use crate::{anyhow, bail};
 use std::path::{Path, PathBuf};
 
 /// One manifest entry.
@@ -96,22 +96,43 @@ impl Manifest {
 }
 
 /// A compiled-executable cache over one PJRT client.
+///
+/// Gated behind the off-by-default `xla` cargo feature: without it the
+/// struct still exists (so every call site compiles) but [`Runtime::new`]
+/// always errors and callers take their documented native fallbacks.
 pub struct Runtime {
     pub manifest: Manifest,
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
-    compiled: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    #[cfg(feature = "xla")]
+    compiled: std::sync::Mutex<
+        std::collections::HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>,
+    >,
 }
 
 impl Runtime {
     /// Create from an artifact directory (default `artifacts/`).
+    #[cfg(feature = "xla")]
     pub fn new(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime {
             manifest,
             client,
-            compiled: std::sync::Mutex::new(HashMap::new()),
+            compiled: std::sync::Mutex::new(std::collections::HashMap::new()),
         })
+    }
+
+    /// Built without the `xla` feature: the manifest is still validated
+    /// (so configuration errors surface) but loading always fails and the
+    /// pure-rust request path takes over.
+    #[cfg(not(feature = "xla"))]
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let _manifest = Manifest::load(dir)?;
+        Err(anyhow!(
+            "built without the `xla` cargo feature; the AOT/PJRT request path is disabled \
+             (rebuild with `--features xla` and the vendored `xla` crate)"
+        ))
     }
 
     /// Default artifact location relative to the repo / cwd, overridable
@@ -140,6 +161,7 @@ impl Runtime {
     }
 
     /// Compile (or fetch cached) an artifact by name.
+    #[cfg(feature = "xla")]
     pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.compiled.lock().unwrap().get(name) {
             return Ok(exe.clone());
@@ -171,6 +193,14 @@ impl Runtime {
 
     /// Execute a compiled artifact on f32/i32 buffers; returns the f32
     /// payload of the 1-tuple result.
+    #[cfg(not(feature = "xla"))]
+    pub fn run_f32(&self, name: &str, _inputs: &[InputBuf<'_>]) -> Result<Vec<f32>> {
+        bail!("cannot execute artifact {name}: built without the `xla` feature")
+    }
+
+    /// Execute a compiled artifact on f32/i32 buffers; returns the f32
+    /// payload of the 1-tuple result.
+    #[cfg(feature = "xla")]
     pub fn run_f32(
         &self,
         name: &str,
@@ -201,6 +231,7 @@ pub enum InputBuf<'a> {
     I32 { data: &'a [i32], dims: Vec<i64> },
 }
 
+#[cfg(feature = "xla")]
 impl<'a> InputBuf<'a> {
     fn to_literal(&self) -> Result<xla::Literal> {
         match self {

@@ -6,8 +6,9 @@
 
 use super::executor::XlaDistance;
 use super::Runtime;
+use crate::anyhow;
 use crate::pq::{Adt, PqCodebook};
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 use std::path::PathBuf;
 use std::sync::mpsc;
 

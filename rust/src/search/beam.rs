@@ -6,8 +6,14 @@
 //! * [`pq_beam_search`] — DiskANN-PQ: traversal on PQ distances, final
 //!   rerank of the top candidates with accurate distances.
 //!
-//! Both record [`SearchStats`] and can emit a [`Trace`] for the DES.
+//! Both are thin policies over the unified traversal kernel in
+//! [`super::kernel`] (one shared expansion loop for all three search
+//! algorithms), record [`SearchStats`], and can emit a [`Trace`] for the
+//! DES. The `*_with` variants take a caller-owned [`QueryScratch`] so the
+//! hot path allocates nothing in steady state; the plain entry points
+//! allocate a scratch per call for API compatibility.
 
+use super::kernel::{self, QueryScratch};
 use super::{SearchOutput, SearchStats, Trace, TraceOp};
 use crate::dataset::VectorSet;
 use crate::distance::Metric;
@@ -72,6 +78,14 @@ impl CandidateList {
         }
     }
 
+    /// Clear for a fresh query at capacity `cap`, retaining the backing
+    /// allocation (grows only when `cap` exceeds every prior query's).
+    pub fn reset(&mut self, cap: usize) {
+        self.items.clear();
+        self.items.reserve(cap + 1);
+        self.cap = cap;
+    }
+
     /// Insert keeping sort order; returns false if rejected (full & worse
     /// than tail).
     ///
@@ -129,6 +143,7 @@ impl CandidateList {
 
 /// Accurate-distance best-first search (the HNSW-like baseline on a flat
 /// graph). Every neighbor expansion fetches index row + raw vectors.
+/// Allocates a fresh scratch; hot paths use [`accurate_beam_search_with`].
 pub fn accurate_beam_search(
     ctx: &SearchContext,
     q: &[f32],
@@ -136,70 +151,70 @@ pub fn accurate_beam_search(
     l: usize,
     want_trace: bool,
 ) -> SearchOutput {
+    let mut scratch = QueryScratch::new();
+    accurate_beam_search_with(ctx, q, k, l, want_trace, &mut scratch)
+}
+
+/// [`accurate_beam_search`] over pooled scratch (zero steady-state
+/// allocations apart from the returned output buffers).
+pub fn accurate_beam_search_with(
+    ctx: &SearchContext,
+    q: &[f32],
+    k: usize,
+    l: usize,
+    want_trace: bool,
+    scratch: &mut QueryScratch,
+) -> SearchOutput {
+    let mut out = SearchOutput::default();
+    accurate_beam_search_into(ctx, q, k, l, want_trace, scratch, &mut out);
+    out
+}
+
+/// Allocation-free core: results land in caller-owned `out` buffers.
+pub fn accurate_beam_search_into(
+    ctx: &SearchContext,
+    q: &[f32],
+    k: usize,
+    l: usize,
+    want_trace: bool,
+    scratch: &mut QueryScratch,
+    out: &mut SearchOutput,
+) {
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
-    let mut visited = super::bloom::BloomFilter::paper_config();
-    let mut list = CandidateList::new(l);
-
-    let entry = ctx.graph.entry_point;
-    let d0 = ctx.metric.distance(q, ctx.base.row(entry as usize));
-    stats.exact_dists += 1;
-    stats.bytes_raw += ctx.raw_bits() as u64 / 8;
-    list.insert(d0, entry);
-    visited.insert(entry);
-
-    while let Some(pos) = list.first_unevaluated(l) {
-        let v = list.items[pos].id;
-        list.items[pos].evaluated = true;
-        stats.hops += 1;
-        let nbrs = ctx.graph.neighbors(v);
-        stats.bytes_index += ctx.index_bits(v) as u64 / 8;
-        if let Some(t) = trace.as_mut() {
-            t.push(TraceOp::FetchIndex {
-                node: v,
-                bits: ctx.index_bits(v),
-            });
-        }
-        let mut fresh = 0u32;
-        for &nb in nbrs {
-            if visited.insert(nb) {
-                continue; // already present
-            }
-            fresh += 1;
-            let d = ctx.metric.distance(q, ctx.base.row(nb as usize));
-            stats.exact_dists += 1;
-            stats.bytes_raw += ctx.raw_bits() as u64 / 8;
-            if let Some(t) = trace.as_mut() {
-                t.push(TraceOp::FetchRaw {
-                    node: nb,
-                    bits: ctx.raw_bits(),
-                });
-            }
-            list.insert(d, nb);
-        }
-        if let Some(t) = trace.as_mut() {
-            if fresh > 0 {
-                t.push(TraceOp::ComputeExact { count: fresh });
-            }
-            t.push(TraceOp::Sort {
-                len: list.len() as u32,
-            });
-        }
-        stats.sorts += 1;
+    let mut provider = kernel::Accurate::new(ctx, q);
+    let QueryScratch {
+        visited,
+        bloom,
+        list,
+        ..
+    } = scratch;
+    list.reset(l);
+    // Traced runs keep the paper's Bloom filter so the DES models §IV-B;
+    // serving paths use the exact epoch bitset (no false-positive drops).
+    if want_trace {
+        bloom.clear();
+        kernel::seed_entry(ctx, &mut provider, bloom, list, &mut stats);
+        kernel::expand_prefix(ctx, &mut provider, bloom, list, l, &mut stats, &mut trace);
+    } else {
+        visited.begin(ctx.base.len());
+        kernel::seed_entry(ctx, &mut provider, visited, list, &mut stats);
+        kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
 
-    let ids: Vec<u32> = list.items.iter().take(k).map(|c| c.id).collect();
-    let dists: Vec<f32> = list.items.iter().take(k).map(|c| c.dist).collect();
-    SearchOutput {
-        ids,
-        dists,
-        stats,
-        trace,
+    out.ids.clear();
+    out.dists.clear();
+    for c in list.items.iter().take(k) {
+        out.ids.push(c.id);
+        out.dists.push(c.dist);
     }
+    out.stats = stats;
+    out.trace = trace;
 }
 
 /// DiskANN-PQ beam search: PQ distances guide traversal; at the end the top
-/// `rerank` candidates are reranked with accurate distances.
+/// `rerank` candidates are reranked with accurate distances. Allocates a
+/// fresh scratch; hot paths use [`pq_beam_search_with`].
 pub fn pq_beam_search(
     ctx: &SearchContext,
     adt: &Adt,
@@ -209,90 +224,89 @@ pub fn pq_beam_search(
     rerank: usize,
     want_trace: bool,
 ) -> SearchOutput {
-    let codes = ctx.codes.expect("pq_beam_search requires codes");
+    let mut scratch = QueryScratch::new();
+    pq_beam_search_with(ctx, adt, q, k, l, rerank, want_trace, &mut scratch)
+}
+
+/// [`pq_beam_search`] over pooled scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn pq_beam_search_with(
+    ctx: &SearchContext,
+    adt: &Adt,
+    q: &[f32],
+    k: usize,
+    l: usize,
+    rerank: usize,
+    want_trace: bool,
+    scratch: &mut QueryScratch,
+) -> SearchOutput {
+    let mut out = SearchOutput::default();
+    pq_beam_search_into(ctx, adt, q, k, l, rerank, want_trace, scratch, &mut out);
+    out
+}
+
+/// Allocation-free core: results land in caller-owned `out` buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn pq_beam_search_into(
+    ctx: &SearchContext,
+    adt: &Adt,
+    q: &[f32],
+    k: usize,
+    l: usize,
+    rerank: usize,
+    want_trace: bool,
+    scratch: &mut QueryScratch,
+    out: &mut SearchOutput,
+) {
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
     if let Some(t) = trace.as_mut() {
         t.push(TraceOp::BuildAdt);
     }
-    let mut visited = super::bloom::BloomFilter::paper_config();
-    let mut list = CandidateList::new(l);
-
-    let entry = ctx.graph.entry_point;
-    let d0 = adt.pq_distance(codes.row(entry as usize));
-    stats.pq_dists += 1;
-    stats.bytes_pq += ctx.pq_bits() as u64 / 8;
-    list.insert(d0, entry);
-    visited.insert(entry);
-
-    while let Some(pos) = list.first_unevaluated(l) {
-        let v = list.items[pos].id;
-        list.items[pos].evaluated = true;
-        stats.hops += 1;
-        stats.bytes_index += ctx.index_bits(v) as u64 / 8;
-        if let Some(t) = trace.as_mut() {
-            t.push(TraceOp::FetchIndex {
-                node: v,
-                bits: ctx.index_bits(v),
-            });
-        }
-        let mut fresh = 0u32;
-        for &nb in ctx.graph.neighbors(v) {
-            if visited.insert(nb) {
-                continue;
-            }
-            fresh += 1;
-            let d = adt.pq_distance(codes.row(nb as usize));
-            stats.pq_dists += 1;
-            stats.bytes_pq += ctx.pq_bits() as u64 / 8;
-            if let Some(t) = trace.as_mut() {
-                t.push(TraceOp::FetchPq {
-                    node: nb,
-                    bits: ctx.pq_bits(),
-                });
-            }
-            list.insert(d, nb);
-        }
-        if let Some(t) = trace.as_mut() {
-            if fresh > 0 {
-                t.push(TraceOp::ComputePq { count: fresh });
-            }
-            t.push(TraceOp::Sort {
-                len: list.len() as u32,
-            });
-        }
-        stats.sorts += 1;
+    let mut provider = kernel::PqAdt::new(ctx, adt, q);
+    let QueryScratch {
+        visited,
+        bloom,
+        list,
+        rerank: rr,
+        ..
+    } = scratch;
+    list.reset(l);
+    if want_trace {
+        bloom.clear();
+        kernel::seed_entry(ctx, &mut provider, bloom, list, &mut stats);
+        kernel::expand_prefix(ctx, &mut provider, bloom, list, l, &mut stats, &mut trace);
+    } else {
+        visited.begin(ctx.base.len());
+        kernel::seed_entry(ctx, &mut provider, visited, list, &mut stats);
+        kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
 
     // Rerank the top candidates with accurate distances.
+    use kernel::DistanceProvider;
     let take = rerank.max(k).min(list.len());
-    let mut reranked: Vec<(f32, u32)> = list.items[..take]
-        .iter()
-        .map(|c| {
-            stats.exact_dists += 1;
-            stats.bytes_raw += ctx.raw_bits() as u64 / 8;
-            if let Some(t) = trace.as_mut() {
-                t.push(TraceOp::FetchRaw {
-                    node: c.id,
-                    bits: ctx.raw_bits(),
-                });
-            }
-            (ctx.metric.distance(q, ctx.base.row(c.id as usize)), c.id)
-        })
-        .collect();
+    rr.clear();
+    for c in list.items.iter().take(take) {
+        let d = provider.exact(c.id, &mut stats, &mut trace);
+        rr.push((d, c.id));
+    }
     if let Some(t) = trace.as_mut() {
         t.push(TraceOp::ComputeExact { count: take as u32 });
         t.push(TraceOp::Sort { len: take as u32 });
     }
-    reranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    reranked.truncate(k);
+    rr.sort_unstable_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+    });
+    rr.truncate(k);
 
-    SearchOutput {
-        ids: reranked.iter().map(|&(_, v)| v).collect(),
-        dists: reranked.iter().map(|&(d, _)| d).collect(),
-        stats,
-        trace,
+    out.ids.clear();
+    out.dists.clear();
+    for &(d, id) in rr.iter() {
+        out.ids.push(id);
+        out.dists.push(d);
     }
+    out.stats = stats;
+    out.trace = trace;
 }
 
 #[cfg(test)]

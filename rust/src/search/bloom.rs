@@ -4,8 +4,9 @@
 //! SONG showed the false positives cause negligible recall loss.
 
 /// SeaHash's diffusion function — the "lightweight hash" the paper cites.
+/// Shared with the kernel's exact-distance cache (`search::kernel`).
 #[inline]
-fn seahash_diffuse(mut x: u64) -> u64 {
+pub(crate) fn seahash_diffuse(mut x: u64) -> u64 {
     x = x.wrapping_mul(0x6eed_0e9d_a4d9_4a4f);
     let a = x >> 32;
     let b = x >> 60;
@@ -40,21 +41,30 @@ impl BloomFilter {
         BloomFilter::new(12 * 1024, 8)
     }
 
+    /// Kirsch–Mitzenmacher double hashing from two SeaHash diffusions.
     #[inline]
-    fn positions(&self, id: u32) -> impl Iterator<Item = usize> + '_ {
-        // Kirsch–Mitzenmacher double hashing from two SeaHash diffusions.
+    fn hashes(id: u32) -> (u64, u64) {
         let h1 = seahash_diffuse(id as u64 ^ 0x16f1_1fe8_9b0d_677c);
         let h2 = seahash_diffuse(h1 ^ 0xb480_a793_d8e6_c86c) | 1;
+        (h1, h2)
+    }
+
+    #[inline]
+    fn positions(&self, id: u32) -> impl Iterator<Item = usize> + '_ {
+        let (h1, h2) = Self::hashes(id);
         let m = self.m_bits as u64;
         (0..self.k as u64).map(move |i| (h1.wrapping_add(i.wrapping_mul(h2)) % m) as usize)
     }
 
     /// Insert; returns true if the id was (possibly) already present
-    /// (i.e. all bits were already set — a membership hit).
+    /// (i.e. all bits were already set — a membership hit). Allocation-free:
+    /// this sits on the kernel's per-neighbor visit path for traced runs.
     pub fn insert(&mut self, id: u32) -> bool {
+        let (h1, h2) = Self::hashes(id);
+        let m = self.m_bits as u64;
         let mut all_set = true;
-        let pos: Vec<usize> = self.positions(id).collect();
-        for p in pos {
+        for i in 0..self.k as u64 {
+            let p = (h1.wrapping_add(i.wrapping_mul(h2)) % m) as usize;
             let (w, b) = (p / 64, p % 64);
             if self.bits[w] & (1 << b) == 0 {
                 all_set = false;

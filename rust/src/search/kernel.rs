@@ -1,0 +1,655 @@
+//! The unified best-first traversal kernel.
+//!
+//! Proxima's contribution (§III) is a *policy* layered on one common
+//! best-first graph walk. This module holds that walk exactly once —
+//! [`expand_prefix`] — parameterized by:
+//!
+//! * a [`DistanceProvider`] supplying the traversal-guiding distance and
+//!   the full-precision rerank distance ([`Accurate`] for the HNSW-style
+//!   baseline, [`PqAdt`] for DiskANN-PQ, [`Hybrid`] — PQ guide plus a
+//!   pooled exact-distance cache — for Proxima's rerank path);
+//! * a [`VisitedSet`] screening previously-seen vertices. Software
+//!   serving paths use the exact [`EpochVisited`] bitset (no false
+//!   positives, O(1) per-query reset); traced runs keep the paper's
+//!   12 kB/8-hash [`BloomFilter`] so the NAND DES in `engine::sim` still
+//!   models §IV-B faithfully.
+//!
+//! Per-query state — visited set, candidate list, exact-distance cache,
+//! rerank/top-k buffers — lives in a [`QueryScratch`] checked out from a
+//! [`ScratchPool`], so the steady-state query path performs **zero heap
+//! allocations** (verified by `tests/zero_alloc.rs`).
+
+use super::beam::{CandidateList, SearchContext};
+use super::bloom::{seahash_diffuse, BloomFilter};
+use super::{SearchStats, Trace, TraceOp};
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+use crate::pq::{Adt, PqCodes};
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------------
+// Visited sets
+// ---------------------------------------------------------------------------
+
+/// Screen for previously-seen vertices (§IV-B step 2).
+pub trait VisitedSet {
+    /// Mark `id` visited; returns true when it was (possibly, for the
+    /// Bloom filter) already present — the caller then skips it.
+    fn test_and_set(&mut self, id: u32) -> bool;
+}
+
+impl VisitedSet for BloomFilter {
+    #[inline]
+    fn test_and_set(&mut self, id: u32) -> bool {
+        self.insert(id)
+    }
+}
+
+/// Exact visited set: one epoch stamp per vertex. `begin` is O(1) per
+/// query (epoch bump) so a pooled instance resets for free; the backing
+/// array allocates once per pool entry.
+pub struct EpochVisited {
+    stamps: Vec<u32>,
+    epoch: u32,
+}
+
+impl EpochVisited {
+    pub fn new() -> EpochVisited {
+        EpochVisited {
+            stamps: Vec::new(),
+            epoch: 1,
+        }
+    }
+
+    /// Size for `n` vertices and start a fresh query epoch.
+    pub fn begin(&mut self, n: usize) {
+        if self.stamps.len() < n {
+            self.stamps.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Stamp wrap-around (once every 2^32 queries): hard reset.
+            self.stamps.fill(0);
+            self.epoch = 1;
+        }
+    }
+}
+
+impl Default for EpochVisited {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VisitedSet for EpochVisited {
+    #[inline]
+    fn test_and_set(&mut self, id: u32) -> bool {
+        let i = id as usize;
+        if i >= self.stamps.len() {
+            // Safety net for callers that skipped `begin` sizing.
+            self.stamps.resize(i + 1, 0);
+        }
+        if self.stamps[i] == self.epoch {
+            true
+        } else {
+            self.stamps[i] = self.epoch;
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact-distance cache
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity open-addressing map id → exact distance, epoch-cleared.
+/// Replaces the per-query `HashMap` the seed Proxima search allocated:
+/// lookups are one hash + short linear probe and `begin` is O(1) in
+/// steady state (the paper: "we store the computed distances to amortize
+/// the overhead").
+pub struct ExactCache {
+    keys: Vec<u32>,
+    vals: Vec<f32>,
+    stamps: Vec<u32>,
+    epoch: u32,
+    mask: usize,
+    live: usize,
+}
+
+impl ExactCache {
+    pub fn new() -> ExactCache {
+        ExactCache {
+            keys: Vec::new(),
+            vals: Vec::new(),
+            stamps: Vec::new(),
+            epoch: 1,
+            mask: 0,
+            live: 0,
+        }
+    }
+
+    /// Start a query expected to cache about `expected_entries` distinct
+    /// ids. Capacity starts at 4x that hint (load factor <= 0.25) so
+    /// probes stay short; unusually cache-heavy queries (many dynamic-list
+    /// iterations churning the candidate prefix) grow the table instead
+    /// of over-filling — steady state is still allocation-free because
+    /// the grown table is retained across `begin` calls.
+    pub fn begin(&mut self, expected_entries: usize) {
+        let want = (expected_entries.max(4) * 4).next_power_of_two();
+        if self.keys.len() < want {
+            self.keys = vec![0; want];
+            self.vals = vec![0.0; want];
+            self.stamps = vec![0; want];
+            self.mask = want - 1;
+            self.epoch = 1;
+        } else {
+            self.epoch = self.epoch.wrapping_add(1);
+            if self.epoch == 0 {
+                self.stamps.fill(0);
+                self.epoch = 1;
+            }
+        }
+        self.live = 0;
+    }
+
+    /// Cached distance for `id`, computing (and charging) via `f` on miss.
+    #[inline]
+    pub fn get_or_insert_with(&mut self, id: u32, f: impl FnOnce() -> f32) -> f32 {
+        if let Some(v) = self.get(id) {
+            return v;
+        }
+        let v = f();
+        self.insert(id, v);
+        v
+    }
+
+    #[inline]
+    fn get(&self, id: u32) -> Option<f32> {
+        if self.keys.is_empty() {
+            return None;
+        }
+        let mut slot = seahash_diffuse(id as u64) as usize & self.mask;
+        loop {
+            if self.stamps[slot] != self.epoch {
+                return None;
+            }
+            if self.keys[slot] == id {
+                return Some(self.vals[slot]);
+            }
+            slot = (slot + 1) & self.mask;
+        }
+    }
+
+    fn insert(&mut self, id: u32, v: f32) {
+        // Keep load factor <= 0.5 so the linear probes above terminate.
+        if (self.live + 1) * 2 > self.keys.len() {
+            self.grow();
+        }
+        let mut slot = seahash_diffuse(id as u64) as usize & self.mask;
+        while self.stamps[slot] == self.epoch {
+            slot = (slot + 1) & self.mask;
+        }
+        self.stamps[slot] = self.epoch;
+        self.keys[slot] = id;
+        self.vals[slot] = v;
+        self.live += 1;
+    }
+
+    /// Double capacity and rehash the live entries (rare: only queries
+    /// whose iteration reranks touch far more distinct ids than the
+    /// `begin` hint).
+    fn grow(&mut self) {
+        let new_cap = (self.keys.len() * 2).max(64);
+        let mask = new_cap - 1;
+        let mut keys = vec![0u32; new_cap];
+        let mut vals = vec![0.0f32; new_cap];
+        let mut stamps = vec![0u32; new_cap];
+        for i in 0..self.keys.len() {
+            if self.stamps[i] == self.epoch {
+                let mut slot = seahash_diffuse(self.keys[i] as u64) as usize & mask;
+                while stamps[slot] == 1 {
+                    slot = (slot + 1) & mask;
+                }
+                stamps[slot] = 1;
+                keys[slot] = self.keys[i];
+                vals[slot] = self.vals[i];
+            }
+        }
+        self.keys = keys;
+        self.vals = vals;
+        self.stamps = stamps;
+        self.mask = mask;
+        self.epoch = 1;
+    }
+}
+
+impl Default for ExactCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Distance providers
+// ---------------------------------------------------------------------------
+
+/// Supplies the two distances a graph search needs: the cheap one that
+/// guides traversal ordering, and the full-precision one reranks use.
+/// Implementations charge [`SearchStats`] and the optional [`Trace`]
+/// themselves, so the kernel stays agnostic of *what* a distance costs.
+pub trait DistanceProvider {
+    /// Traversal-guiding distance for vertex `id`.
+    fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32;
+
+    /// Full-precision distance for vertex `id` (rerank phases).
+    fn exact(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32;
+
+    /// Trace op describing `count` guide-distance computations.
+    fn guide_compute_op(&self, count: u32) -> TraceOp;
+}
+
+/// Full-precision distances throughout (the HNSW-like baseline): every
+/// guide distance fetches the raw vector.
+pub struct Accurate<'a> {
+    base: &'a VectorSet,
+    metric: Metric,
+    q: &'a [f32],
+    raw_bits: u32,
+}
+
+impl<'a> Accurate<'a> {
+    pub fn new(ctx: &SearchContext<'a>, q: &'a [f32]) -> Accurate<'a> {
+        Accurate {
+            base: ctx.base,
+            metric: ctx.metric,
+            q,
+            raw_bits: ctx.raw_bits(),
+        }
+    }
+}
+
+impl DistanceProvider for Accurate<'_> {
+    #[inline]
+    fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
+        self.exact(id, stats, trace)
+    }
+
+    #[inline]
+    fn exact(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
+        stats.exact_dists += 1;
+        stats.bytes_raw += self.raw_bits as u64 / 8;
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceOp::FetchRaw {
+                node: id,
+                bits: self.raw_bits,
+            });
+        }
+        self.metric.distance(self.q, self.base.row(id as usize))
+    }
+
+    fn guide_compute_op(&self, count: u32) -> TraceOp {
+        TraceOp::ComputeExact { count }
+    }
+}
+
+/// PQ distances guide the walk (ADT lookups, §III-B); exact distances
+/// fetch raw vectors without caching (DiskANN-PQ's one-shot final rerank
+/// touches each candidate once, so a cache would buy nothing).
+pub struct PqAdt<'a> {
+    adt: &'a Adt,
+    codes: &'a PqCodes,
+    base: &'a VectorSet,
+    metric: Metric,
+    q: &'a [f32],
+    pq_bits: u32,
+    raw_bits: u32,
+}
+
+impl<'a> PqAdt<'a> {
+    pub fn new(ctx: &SearchContext<'a>, adt: &'a Adt, q: &'a [f32]) -> PqAdt<'a> {
+        let codes = ctx.codes.expect("PQ-guided search requires ctx.codes");
+        PqAdt {
+            adt,
+            codes,
+            base: ctx.base,
+            metric: ctx.metric,
+            q,
+            pq_bits: ctx.pq_bits(),
+            raw_bits: ctx.raw_bits(),
+        }
+    }
+}
+
+impl DistanceProvider for PqAdt<'_> {
+    #[inline]
+    fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
+        stats.pq_dists += 1;
+        stats.bytes_pq += self.pq_bits as u64 / 8;
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceOp::FetchPq {
+                node: id,
+                bits: self.pq_bits,
+            });
+        }
+        self.adt.pq_distance(self.codes.row(id as usize))
+    }
+
+    #[inline]
+    fn exact(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
+        stats.exact_dists += 1;
+        stats.bytes_raw += self.raw_bits as u64 / 8;
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceOp::FetchRaw {
+                node: id,
+                bits: self.raw_bits,
+            });
+        }
+        self.metric.distance(self.q, self.base.row(id as usize))
+    }
+
+    fn guide_compute_op(&self, count: u32) -> TraceOp {
+        TraceOp::ComputePq { count }
+    }
+}
+
+/// Proxima's provider: PQ guide distances plus an exact-distance cache so
+/// iteration reranks and the final β-rerank never recompute a vertex.
+pub struct Hybrid<'a, 'c> {
+    pq: PqAdt<'a>,
+    cache: &'c mut ExactCache,
+}
+
+impl<'a, 'c> Hybrid<'a, 'c> {
+    pub fn new(pq: PqAdt<'a>, cache: &'c mut ExactCache) -> Hybrid<'a, 'c> {
+        Hybrid { pq, cache }
+    }
+}
+
+impl DistanceProvider for Hybrid<'_, '_> {
+    #[inline]
+    fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
+        self.pq.guide(id, stats, trace)
+    }
+
+    #[inline]
+    fn exact(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
+        let Hybrid { pq, cache } = self;
+        cache.get_or_insert_with(id, || pq.exact(id, stats, trace))
+    }
+
+    fn guide_compute_op(&self, count: u32) -> TraceOp {
+        TraceOp::ComputePq { count }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The kernel
+// ---------------------------------------------------------------------------
+
+/// Seed the walk at the graph entry point (Alg. 1 line 1).
+///
+/// Charges stats for the entry-point guide distance but records no
+/// trace op — the pre-kernel implementations did exactly that, and the
+/// DES replay must stay op-for-op compatible with their traces.
+pub fn seed_entry<P: DistanceProvider, V: VisitedSet>(
+    ctx: &SearchContext,
+    provider: &mut P,
+    visited: &mut V,
+    list: &mut CandidateList,
+    stats: &mut SearchStats,
+) {
+    let entry = ctx.graph.entry_point;
+    let mut no_trace: Option<Trace> = None;
+    let d0 = provider.guide(entry, stats, &mut no_trace);
+    list.insert(d0, entry);
+    visited.test_and_set(entry);
+}
+
+/// THE shared expansion loop (Alg. 1 lines 4–10 and the identical loops
+/// the two baselines used to duplicate): repeatedly take the best
+/// unevaluated candidate inside the top-`t_limit` prefix, fetch its
+/// adjacency row, screen neighbors through `visited`, compute guide
+/// distances for the survivors and insert them into the bounded list.
+/// Returns once the whole prefix is evaluated.
+pub fn expand_prefix<P: DistanceProvider, V: VisitedSet>(
+    ctx: &SearchContext,
+    provider: &mut P,
+    visited: &mut V,
+    list: &mut CandidateList,
+    t_limit: usize,
+    stats: &mut SearchStats,
+    trace: &mut Option<Trace>,
+) {
+    while let Some(pos) = list.first_unevaluated(t_limit) {
+        let v = list.items[pos].id;
+        list.items[pos].evaluated = true;
+        stats.hops += 1;
+        let index_bits = ctx.index_bits(v);
+        stats.bytes_index += index_bits as u64 / 8;
+        if let Some(t) = trace.as_mut() {
+            t.push(TraceOp::FetchIndex {
+                node: v,
+                bits: index_bits,
+            });
+        }
+        let mut fresh = 0u32;
+        for &nb in ctx.graph.neighbors(v) {
+            if visited.test_and_set(nb) {
+                continue;
+            }
+            fresh += 1;
+            let d = provider.guide(nb, stats, trace);
+            list.insert(d, nb);
+        }
+        if let Some(t) = trace.as_mut() {
+            if fresh > 0 {
+                t.push(provider.guide_compute_op(fresh));
+            }
+            t.push(TraceOp::Sort {
+                len: list.len() as u32,
+            });
+        }
+        stats.sorts += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Query scratch + pool
+// ---------------------------------------------------------------------------
+
+/// All per-query mutable state, reusable across queries: check one out of
+/// a [`ScratchPool`] (or hold one per worker) and the search hot path
+/// stops allocating entirely once warmed.
+pub struct QueryScratch {
+    /// Exact visited set (software serving paths).
+    pub visited: EpochVisited,
+    /// Paper-faithful Bloom visited set (traced / DES-modeling runs).
+    pub bloom: BloomFilter,
+    /// The bounded candidate list L.
+    pub list: CandidateList,
+    /// id → exact distance cache for Proxima's rerank path.
+    pub exact_cache: ExactCache,
+    /// Rerank working buffer (iteration reranks, β-rerank, final top-k).
+    pub rerank: Vec<(f32, u32)>,
+    /// Previous iteration's top-k (early-termination comparison).
+    pub prev_topk: Vec<u32>,
+    /// Current iteration's top-k.
+    pub topk: Vec<u32>,
+}
+
+impl QueryScratch {
+    pub fn new() -> QueryScratch {
+        QueryScratch {
+            visited: EpochVisited::new(),
+            bloom: BloomFilter::paper_config(),
+            list: CandidateList::new(0),
+            exact_cache: ExactCache::new(),
+            rerank: Vec::new(),
+            prev_topk: Vec::new(),
+            topk: Vec::new(),
+        }
+    }
+}
+
+impl Default for QueryScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Lock-protected free list of scratch objects. `checkout` pops an idle
+/// instance (or builds one for a previously-unseen concurrency level);
+/// dropping the guard returns it. Capacity converges to the worker count,
+/// after which checkouts are allocation-free. Idle retention is capped at
+/// roughly twice the core count so a transient connection burst cannot
+/// pin scratch memory (each entry holds a per-vertex stamp array plus the
+/// 12 kB Bloom filter) for the process lifetime — oversubscribed bursts
+/// just rebuild scratch, which they were already paying thread churn for.
+pub struct ScratchPool<T> {
+    pool: Mutex<Vec<T>>,
+    max_idle: usize,
+}
+
+impl<T: Default> ScratchPool<T> {
+    pub fn new() -> ScratchPool<T> {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_max_idle((cores * 2).max(8))
+    }
+
+    /// Pool retaining at most `max_idle` idle scratch objects.
+    pub fn with_max_idle(max_idle: usize) -> ScratchPool<T> {
+        ScratchPool {
+            pool: Mutex::new(Vec::new()),
+            max_idle: max_idle.max(1),
+        }
+    }
+
+    pub fn checkout(&self) -> Pooled<'_, T> {
+        let item = self.pool.lock().unwrap().pop().unwrap_or_default();
+        Pooled {
+            pool: self,
+            item: Some(item),
+        }
+    }
+}
+
+impl<T: Default> Default for ScratchPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII guard returning the scratch to its pool on drop.
+pub struct Pooled<'a, T: Default> {
+    pool: &'a ScratchPool<T>,
+    item: Option<T>,
+}
+
+impl<T: Default> std::ops::Deref for Pooled<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("pooled scratch taken")
+    }
+}
+
+impl<T: Default> std::ops::DerefMut for Pooled<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("pooled scratch taken")
+    }
+}
+
+impl<T: Default> Drop for Pooled<'_, T> {
+    fn drop(&mut self) {
+        if let (Some(item), Ok(mut pool)) = (self.item.take(), self.pool.pool.lock()) {
+            if pool.len() < self.pool.max_idle {
+                pool.push(item);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_visited_screens_and_resets() {
+        let mut v = EpochVisited::new();
+        v.begin(100);
+        assert!(!v.test_and_set(5));
+        assert!(v.test_and_set(5));
+        assert!(!v.test_and_set(6));
+        v.begin(100);
+        assert!(!v.test_and_set(5), "epoch bump must clear the set");
+    }
+
+    #[test]
+    fn epoch_visited_grows_on_demand() {
+        let mut v = EpochVisited::new();
+        v.begin(4);
+        assert!(!v.test_and_set(1000));
+        assert!(v.test_and_set(1000));
+    }
+
+    #[test]
+    fn exact_cache_hits_and_misses() {
+        let mut c = ExactCache::new();
+        c.begin(64);
+        let mut computed = 0;
+        for _ in 0..3 {
+            let d = c.get_or_insert_with(42, || {
+                computed += 1;
+                1.5
+            });
+            assert_eq!(d, 1.5);
+        }
+        assert_eq!(computed, 1, "only the first lookup computes");
+        // Colliding-ish ids stay distinct.
+        for id in 0..60u32 {
+            let want = id as f32 * 2.0;
+            assert_eq!(c.get_or_insert_with(id, || want), if id == 42 { 1.5 } else { want });
+        }
+        c.begin(64);
+        let d = c.get_or_insert_with(42, || 9.0);
+        assert_eq!(d, 9.0, "begin() must clear the cache");
+    }
+
+    #[test]
+    fn exact_cache_grows_past_the_begin_hint() {
+        // Queries whose iteration reranks churn through many more
+        // distinct ids than the hint must not wedge the probe loop.
+        let mut c = ExactCache::new();
+        c.begin(4);
+        for id in 0..500u32 {
+            c.get_or_insert_with(id, || id as f32);
+        }
+        let mut computed = 0;
+        for id in 0..500u32 {
+            let d = c.get_or_insert_with(id, || {
+                computed += 1;
+                -1.0
+            });
+            assert_eq!(d, id as f32, "id {id} lost during growth");
+        }
+        assert_eq!(computed, 0, "all entries must survive rehashing");
+    }
+
+    #[test]
+    fn scratch_pool_recycles() {
+        let pool: ScratchPool<Vec<u32>> = ScratchPool::new();
+        {
+            let mut a = pool.checkout();
+            a.push(7);
+        }
+        let b = pool.checkout();
+        // The recycled buffer comes back as-is; callers reset state.
+        assert_eq!(b.as_slice(), &[7]);
+        drop(b);
+        let (c, d) = (pool.checkout(), pool.checkout());
+        drop(c);
+        drop(d);
+        assert_eq!(pool.pool.lock().unwrap().len(), 2);
+    }
+}

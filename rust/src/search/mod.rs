@@ -1,5 +1,15 @@
 //! Query search algorithms and their shared instrumentation.
 //!
+//! The three graph searches — `beam::accurate_beam_search` (HNSW-like),
+//! `beam::pq_beam_search` (DiskANN-PQ) and `proxima::proxima_search`
+//! (Algorithm 1) — are policies over ONE traversal core in [`kernel`]:
+//! a single best-first expansion loop parameterized by a
+//! `DistanceProvider` (accurate / PQ-ADT / hybrid-with-exact-cache) and a
+//! `VisitedSet` (exact epoch bitset for software serving; the paper's
+//! Bloom filter on traced runs so the DES keeps modeling §IV-B). Per-query
+//! state is pooled in `kernel::QueryScratch` so the steady-state hot path
+//! performs zero heap allocations.
+//!
 //! All searches emit [`SearchStats`] (distance-computation and byte-traffic
 //! counters behind Fig 6b/14) and optionally a [`Trace`] of abstract storage
 //! and compute operations that the hardware simulator (`engine::`) replays
@@ -10,6 +20,7 @@ pub mod beam;
 pub mod bitonic;
 pub mod bloom;
 pub mod ivf;
+pub mod kernel;
 pub mod proxima;
 
 /// Counters accumulated during one query (or summed over a batch).

@@ -17,13 +17,18 @@
 //! Accurate distances computed during iteration reranks are cached so the
 //! final reranking pass never recomputes them (the paper: "we store the
 //! computed distances to amortize the overhead").
+//!
+//! The walk itself is the unified kernel in [`super::kernel`]
+//! (`expand_prefix` with the [`kernel::Hybrid`] distance provider); this
+//! module only implements the Proxima policy around it: dynamic-list
+//! growth, iteration reranks against the pooled exact-distance cache,
+//! early termination, and the final β-rerank.
 
 use super::beam::{CandidateList, SearchContext};
-use super::bloom::BloomFilter;
+use super::kernel::{self, DistanceProvider, QueryScratch, VisitedSet};
 use super::{SearchOutput, SearchStats, Trace, TraceOp};
 use crate::config::SearchParams;
 use crate::pq::Adt;
-use std::collections::HashMap;
 
 /// Feature toggles for the ablations in Fig 13/14 (G = gap encoding is a
 /// property of the [`SearchContext`]; E = early termination; β-rerank).
@@ -46,6 +51,7 @@ impl Default for ProximaFeatures {
 ///
 /// `adt` must have been built for `q` (natively via `PqCodebook::build_adt`
 /// or through the AOT/XLA artifact — both produce the same table).
+/// Allocates a fresh scratch; hot paths use [`proxima_search_with`].
 pub fn proxima_search(
     ctx: &SearchContext,
     adt: &Adt,
@@ -54,97 +60,146 @@ pub fn proxima_search(
     features: ProximaFeatures,
     want_trace: bool,
 ) -> SearchOutput {
-    let codes = ctx.codes.expect("proxima_search requires PQ codes");
+    let mut scratch = QueryScratch::new();
+    proxima_search_with(ctx, adt, q, params, features, want_trace, &mut scratch)
+}
+
+/// [`proxima_search`] over pooled scratch.
+pub fn proxima_search_with(
+    ctx: &SearchContext,
+    adt: &Adt,
+    q: &[f32],
+    params: &SearchParams,
+    features: ProximaFeatures,
+    want_trace: bool,
+    scratch: &mut QueryScratch,
+) -> SearchOutput {
+    let mut out = SearchOutput::default();
+    proxima_search_into(ctx, adt, q, params, features, want_trace, scratch, &mut out);
+    out
+}
+
+/// Allocation-free core: results land in caller-owned `out` buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn proxima_search_into(
+    ctx: &SearchContext,
+    adt: &Adt,
+    q: &[f32],
+    params: &SearchParams,
+    features: ProximaFeatures,
+    want_trace: bool,
+    scratch: &mut QueryScratch,
+    out: &mut SearchOutput,
+) {
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
     if let Some(t) = trace.as_mut() {
         t.push(TraceOp::BuildAdt);
     }
 
+    let QueryScratch {
+        visited,
+        bloom,
+        list,
+        exact_cache,
+        rerank,
+        prev_topk,
+        topk,
+    } = scratch;
+    list.reset(params.l);
+    exact_cache.begin(params.l);
+    rerank.clear();
+    prev_topk.clear();
+    topk.clear();
+
+    let pq = kernel::PqAdt::new(ctx, adt, q);
+    let mut provider = kernel::Hybrid::new(pq, exact_cache);
+
+    // Traced runs keep the paper's Bloom filter (§IV-B fidelity for the
+    // DES); serving paths use the exact epoch bitset.
+    if want_trace {
+        bloom.clear();
+        proxima_core(
+            ctx,
+            &mut provider,
+            bloom,
+            list,
+            rerank,
+            prev_topk,
+            topk,
+            params,
+            features,
+            &mut stats,
+            &mut trace,
+        );
+    } else {
+        visited.begin(ctx.base.len());
+        proxima_core(
+            ctx,
+            &mut provider,
+            visited,
+            list,
+            rerank,
+            prev_topk,
+            topk,
+            params,
+            features,
+            &mut stats,
+            &mut trace,
+        );
+    }
+
+    // `rerank` holds the final sorted, truncated candidates.
+    out.ids.clear();
+    out.dists.clear();
+    for &(d, id) in rerank.iter() {
+        out.ids.push(id);
+        out.dists.push(d);
+    }
+    out.stats = stats;
+    out.trace = trace;
+}
+
+/// The Proxima policy around the shared kernel, generic over the visited
+/// set. On return `rerank` contains the final top-k as (dist, id),
+/// ascending.
+#[allow(clippy::too_many_arguments)]
+fn proxima_core<P: DistanceProvider, V: VisitedSet>(
+    ctx: &SearchContext,
+    provider: &mut P,
+    visited: &mut V,
+    list: &mut CandidateList,
+    rerank: &mut Vec<(f32, u32)>,
+    prev_topk: &mut Vec<u32>,
+    topk: &mut Vec<u32>,
+    params: &SearchParams,
+    features: ProximaFeatures,
+    stats: &mut SearchStats,
+    trace: &mut Option<Trace>,
+) {
     let l_cap = params.l;
     let k = params.k;
     let mut t_limit = params.t_init.clamp(k, l_cap);
 
-    let mut visited = BloomFilter::paper_config();
-    let mut list = CandidateList::new(l_cap);
-    // Cache of accurate distances (amortizes iteration reranks).
-    let mut exact_cache: HashMap<u32, f32> = HashMap::new();
-
     // Line 1: initialize with the entry point.
-    let entry = ctx.graph.entry_point;
-    let d0 = adt.pq_distance(codes.row(entry as usize));
-    stats.pq_dists += 1;
-    stats.bytes_pq += ctx.pq_bits() as u64 / 8;
-    list.insert(d0, entry);
-    visited.insert(entry);
+    kernel::seed_entry(ctx, provider, visited, list, stats);
 
-    let mut prev_topk: Vec<u32> = Vec::new();
     let mut stable_iters = 0usize;
 
     // Line 3: while T <= L.
     'outer: while t_limit <= l_cap {
-        // Expand candidates until the top-T prefix is fully evaluated.
-        while let Some(pos) = list.first_unevaluated(t_limit) {
-            let v = list.items[pos].id;
-            list.items[pos].evaluated = true;
-            stats.hops += 1;
-            stats.bytes_index += ctx.index_bits(v) as u64 / 8;
-            if let Some(t) = trace.as_mut() {
-                t.push(TraceOp::FetchIndex {
-                    node: v,
-                    bits: ctx.index_bits(v),
-                });
-            }
-            // Lines 6-9: visit neighborhood with PQ distances; Bloom filter
-            // screens previously-seen vertices (§IV-B step 2).
-            let mut fresh = 0u32;
-            for &nb in ctx.graph.neighbors(v) {
-                if visited.insert(nb) {
-                    continue;
-                }
-                fresh += 1;
-                let d = adt.pq_distance(codes.row(nb as usize));
-                stats.pq_dists += 1;
-                stats.bytes_pq += ctx.pq_bits() as u64 / 8;
-                if let Some(t) = trace.as_mut() {
-                    t.push(TraceOp::FetchPq {
-                        node: nb,
-                        bits: ctx.pq_bits(),
-                    });
-                }
-                list.insert(d, nb);
-            }
-            // Line 10: sort L, keep top L (CandidateList maintains this
-            // incrementally; the hardware does it with the bitonic sorter,
-            // which the trace records).
-            if let Some(t) = trace.as_mut() {
-                if fresh > 0 {
-                    t.push(TraceOp::ComputePq { count: fresh });
-                }
-                t.push(TraceOp::Sort {
-                    len: list.len() as u32,
-                });
-            }
-            stats.sorts += 1;
-        }
+        // Lines 4-10: expand until the top-T prefix is fully evaluated
+        // (the unified kernel; PQ distances via the Hybrid provider).
+        kernel::expand_prefix(ctx, provider, visited, list, t_limit, stats, trace);
 
-        // Line 11: all top-T evaluated -> rerank top T (line 12).
+        // Line 11: all top-T evaluated -> rerank top T (line 12) through
+        // the exact-distance cache.
         stats.et_iterations += 1;
         let t_eff = t_limit.min(list.len());
-        let mut reranked: Vec<(f32, u32)> = Vec::with_capacity(t_eff);
-        for c in &list.items[..t_eff] {
-            let d = *exact_cache.entry(c.id).or_insert_with(|| {
-                stats.exact_dists += 1;
-                stats.bytes_raw += ctx.raw_bits() as u64 / 8;
-                if let Some(t) = trace.as_mut() {
-                    t.push(TraceOp::FetchRaw {
-                        node: c.id,
-                        bits: ctx.raw_bits(),
-                    });
-                }
-                ctx.metric.distance(q, ctx.base.row(c.id as usize))
-            });
-            reranked.push((d, c.id));
+        rerank.clear();
+        for c in list.items.iter().take(t_eff) {
+            let d = provider.exact(c.id, stats, trace);
+            rerank.push((d, c.id));
         }
         if let Some(t) = trace.as_mut() {
             t.push(TraceOp::ComputeExact {
@@ -152,8 +207,11 @@ pub fn proxima_search(
             });
             t.push(TraceOp::Sort { len: t_eff as u32 });
         }
-        reranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let topk: Vec<u32> = reranked.iter().take(k).map(|&(_, v)| v).collect();
+        rerank.sort_unstable_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+        });
+        topk.clear();
+        topk.extend(rerank.iter().take(k).map(|&(_, v)| v));
 
         // Lines 13-15: early termination after r stable iterations.
         if features.early_termination {
@@ -166,11 +224,12 @@ pub fn proxima_search(
             } else {
                 stable_iters = 0;
             }
-            prev_topk = topk;
+            std::mem::swap(prev_topk, topk);
         }
 
         // All of L evaluated and T at cap: nothing more to do.
-        if t_limit >= l_cap || list.first_unevaluated(l_cap).is_none() && t_limit >= list.len() {
+        if t_limit >= l_cap || (list.first_unevaluated(l_cap).is_none() && t_limit >= list.len())
+        {
             break;
         }
         // Line 16: dynamic list growth.
@@ -182,13 +241,9 @@ pub fn proxima_search(
     // For IP/Angular-derived negative distances the scale direction flips
     // (β loosens the bound, so divide when negative).
     let t_eff = t_limit.min(list.len());
+    rerank.clear();
     if t_eff == 0 {
-        return SearchOutput {
-            ids: vec![],
-            dists: vec![],
-            stats,
-            trace,
-        };
+        return;
     }
     let boundary = list.items[t_eff - 1].dist;
     let threshold = if features.beta_rerank {
@@ -201,39 +256,23 @@ pub fn proxima_search(
         boundary
     };
 
-    let mut final_cands: Vec<(f32, u32)> = Vec::new();
-    for c in &list.items {
-        let in_working = final_cands.len() < t_eff;
+    for c in list.items.iter() {
+        let in_working = rerank.len() < t_eff;
         if !(c.dist <= threshold || in_working) {
             continue;
         }
-        let d = *exact_cache.entry(c.id).or_insert_with(|| {
-            stats.exact_dists += 1;
-            stats.bytes_raw += ctx.raw_bits() as u64 / 8;
-            if let Some(t) = trace.as_mut() {
-                t.push(TraceOp::FetchRaw {
-                    node: c.id,
-                    bits: ctx.raw_bits(),
-                });
-            }
-            ctx.metric.distance(q, ctx.base.row(c.id as usize))
-        });
-        final_cands.push((d, c.id));
+        let d = provider.exact(c.id, stats, trace);
+        rerank.push((d, c.id));
     }
     if let Some(t) = trace.as_mut() {
         t.push(TraceOp::Sort {
-            len: final_cands.len() as u32,
+            len: rerank.len() as u32,
         });
     }
-    final_cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    final_cands.truncate(k);
-
-    SearchOutput {
-        ids: final_cands.iter().map(|&(_, v)| v).collect(),
-        dists: final_cands.iter().map(|&(d, _)| d).collect(),
-        stats,
-        trace,
-    }
+    rerank.sort_unstable_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+    });
+    rerank.truncate(k);
 }
 
 #[cfg(test)]

@@ -1,0 +1,120 @@
+//! Minimal `anyhow`-flavored error plumbing (`Error`, `Result`, `Context`,
+//! plus the crate-root `anyhow!` / `bail!` macros) so the crate builds
+//! offline with zero external dependencies. Only the surface this repo
+//! actually uses is implemented: string-backed errors, context chaining,
+//! and `?` conversion from any `std::error::Error`.
+
+use std::fmt;
+
+/// String-backed error with `anyhow`-style context prefixes.
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error(msg.to_string())
+    }
+
+    /// Prefix the error with additional context (`"{context}: {inner}"`).
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error(format!("{c}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// anyhow prints the chain for `{:?}`/`{:#}`; a flat string does the same.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion cannot collide with `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// `anyhow!`-compatible constructor: `anyhow!("x {y}")` → [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::util::error::Error::msg(format!($($arg)*)) };
+}
+
+/// `bail!`-compatible early return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e: Result<()> = Err(Error::msg("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+        let n: Option<u32> = None;
+        assert_eq!(
+            n.with_context(|| format!("missing {}", 3)).unwrap_err().to_string(),
+            "missing 3"
+        );
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = crate::anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        fn bailer() -> Result<u32> {
+            crate::bail!("nope {}", 1);
+        }
+        assert_eq!(bailer().unwrap_err().to_string(), "nope 1");
+    }
+}

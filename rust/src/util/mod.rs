@@ -1,8 +1,10 @@
 //! Foundational substrates built in-repo because the offline image only
-//! vendors the `xla` dependency tree (no rand/serde/clap/proptest/criterion).
+//! vendors the `xla` dependency tree (no rand/serde/clap/proptest/criterion,
+//! and no `anyhow` — see [`error`]).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

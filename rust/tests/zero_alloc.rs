@@ -1,0 +1,122 @@
+//! Steady-state allocation check for the unified kernel: once scratch,
+//! ADT table and output buffers are warm, answering a query must perform
+//! ZERO heap allocations (the acceptance bar for the `QueryScratch`
+//! pooling refactor).
+//!
+//! The counting allocator tracks a thread-local counter so allocations
+//! from other test-harness threads cannot pollute the measurement. This
+//! file intentionally holds a single test.
+
+use proxima::config::{GraphParams, SearchParams};
+use proxima::dataset::synth::tiny_uniform;
+use proxima::distance::Metric;
+use proxima::graph::vamana;
+use proxima::pq::{Adt, PqCodebook};
+use proxima::search::beam::SearchContext;
+use proxima::search::kernel::QueryScratch;
+use proxima::search::proxima::{proxima_search_into, ProximaFeatures};
+use proxima::search::SearchOutput;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_query_path_does_not_allocate() {
+    let ds = tiny_uniform(500, 16, Metric::L2, 77);
+    let g = vamana::build(
+        &ds.base,
+        ds.metric,
+        &GraphParams {
+            r: 16,
+            build_l: 32,
+            alpha: 1.2,
+            seed: 77,
+        },
+    );
+    let cb = PqCodebook::train(&ds.base, ds.metric, 8, 32, 500, 6, 77);
+    let codes = cb.encode(&ds.base);
+    let ctx = SearchContext {
+        base: &ds.base,
+        metric: ds.metric,
+        graph: &g,
+        codes: Some(&codes),
+        gap: None,
+    };
+    let params = SearchParams {
+        l: 60,
+        k: 10,
+        ..Default::default()
+    };
+
+    let mut scratch = QueryScratch::new();
+    let mut adt = Adt::default();
+    let mut out = SearchOutput::default();
+
+    // Warm every pooled buffer with two full passes over the query set
+    // (the second confirms sizes are stable before measuring).
+    for _ in 0..2 {
+        for qi in 0..ds.n_queries() {
+            let q = ds.queries.row(qi);
+            cb.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+        }
+    }
+
+    // Measured pass: ADT build + full Proxima search per query, zero
+    // heap traffic.
+    let before = THREAD_ALLOCS.with(|c| c.get());
+    let mut checksum = 0u32;
+    for qi in 0..ds.n_queries() {
+        let q = ds.queries.row(qi);
+        cb.build_adt_into(q, &mut adt);
+        proxima_search_into(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        checksum = checksum.wrapping_add(out.ids[0]);
+    }
+    let allocs = THREAD_ALLOCS.with(|c| c.get()) - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state query path allocated {allocs} times over {} queries (checksum {checksum})",
+        ds.n_queries()
+    );
+    assert_eq!(out.ids.len(), 10);
+}
