@@ -1,17 +1,39 @@
 //! End-to-end serving driver (the EXPERIMENTS.md §End-to-end run): builds
 //! the index, starts the TCP coordinator (router → dynamic batcher →
 //! worker pool, ADTs through the AOT/XLA runtime when present), then
-//! drives it with concurrent closed-loop clients and reports recall,
-//! throughput and the latency distribution.
+//! drives it two ways — one-query-per-round-trip v1 clients, and the v2
+//! batch RPC (N queries per round-trip) — and reports recall, throughput
+//! and the latency distribution for both, so the round-trip amortization
+//! is visible in one run.
 //!
 //! ```bash
-//! cargo run --release --example serve_queries -- --scale 0.05 --clients 4 --requests 400
+//! cargo run --release --example serve_queries -- --scale 0.05 --clients 4 --requests 400 --batch 8
 //! ```
+//!
+//! # The serving API
+//!
+//! Everything below goes through the typed, versioned query API
+//! (`proxima::api`): a [`proxima::api::QueryRequest`] carries N query
+//! vectors, `k`, and per-request [`proxima::api::QueryOptions`]
+//! (`mode` accurate/pq_adt/hybrid, `l_override`, `early_term_tau`,
+//! `rerank`, `want_stats`); the answer is a
+//! [`proxima::api::QueryResponse`] with one `NeighborList` per query, or
+//! a structured `ApiError` (`bad_request` / `dim_mismatch` / `closed` /
+//! `internal`). The SAME contract serves:
+//!
+//! * in-process calls — `SearchService::query(&req)`;
+//! * the dynamic batcher — each queued request keeps its own options;
+//! * the TCP wire — `Client::search` (v1 compat, single query) and
+//!   `Client::search_batch` (v2: N queries in ONE round-trip, handed to
+//!   `SearchService::search_batch`'s worker fan-out on the server side).
+//!
+//! Wire shapes are documented at the top of `coordinator::server`.
 
+use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
 use proxima::coordinator::server::{Client, Server};
-use proxima::coordinator::SearchService;
+use proxima::coordinator::{loadgen, SearchService};
 use proxima::dataset::ground_truth::brute_force;
 use proxima::dataset::synth::SynthSpec;
 use proxima::util::cli::Args;
@@ -24,6 +46,7 @@ fn main() -> proxima::util::error::Result<()> {
     let clients = args.get_usize("clients", 4);
     let total_requests = args.get_usize("requests", 400);
     let k = args.get_usize("k", 10);
+    let batch = args.get_usize("batch", 8).max(1);
 
     let spec = SynthSpec::by_name(name, scale)
         .ok_or_else(|| proxima::anyhow!("unknown dataset {name}"))?;
@@ -106,8 +129,67 @@ fn main() -> proxima::util::error::Result<()> {
             / served as f64
     );
 
-    // Shut down cleanly.
+    // --- The v2 batch RPC: the same query budget, but `batch` queries
+    // per round-trip, so closed-loop QPS reflects amortized round-trips.
+    let rpc_requests = (total_requests / (clients * batch)).max(1);
+    let rep = loadgen::run_rpc(
+        addr,
+        &ds.queries,
+        k,
+        QueryOptions::default(),
+        batch,
+        clients,
+        rpc_requests,
+    )?;
+    println!("\n=== v2 batch RPC ({batch} queries / round-trip) ===");
+    println!("round-trips         : {}", rep.round_trips);
+    println!("queries served      : {}", rep.queries);
+    println!("throughput          : {:.0} QPS", rep.qps);
+    println!(
+        "round-trip p50/p99  : {:.0} / {:.0} us  ({:.0} us/query at p50)",
+        rep.p50_us,
+        rep.p99_us,
+        rep.p50_us / batch as f64
+    );
+
+    // --- Per-request options through the same contract: a stats-bearing
+    // high-accuracy request vs the service default.
     let mut c = Client::connect(addr)?;
+    let probe: Vec<&[f32]> = (0..batch.min(ds.n_queries())).map(|i| ds.queries.row(i)).collect();
+    let deflt = c.search_batch(
+        &probe,
+        k,
+        &QueryOptions {
+            want_stats: true,
+            ..Default::default()
+        },
+    )?;
+    let wide = c.search_batch(
+        &probe,
+        k,
+        &QueryOptions {
+            l_override: Some(2 * SearchParams::default().l),
+            early_term_tau: Some(0),
+            want_stats: true,
+            ..Default::default()
+        },
+    )?;
+    let (sd, sw) = (deflt.stats.unwrap(), wide.stats.unwrap());
+    println!("\n=== per-request options (same wire, same contract) ===");
+    println!(
+        "default options     : {} PQ dists, {} exact, {} us server",
+        sd.pq_dists, sd.exact_dists, deflt.server_latency_us
+    );
+    println!(
+        "2L + no early-term  : {} PQ dists, {} exact, {} us server",
+        sw.pq_dists, sw.exact_dists, wide.server_latency_us
+    );
+    assert!(
+        sw.pq_dists > sd.pq_dists,
+        "a wider list must do more PQ work"
+    );
+
+    // Shut down cleanly.
     c.shutdown().ok();
     server.stop();
     assert!(recall > 0.7, "serving recall sanity failed: {recall}");

@@ -1,0 +1,352 @@
+//! The typed, versioned query API: ONE request/response contract shared
+//! by every entry point into the search stack — in-process calls
+//! ([`crate::coordinator::SearchService::query`]), the dynamic batcher,
+//! the sharded fan-out, and the TCP wire (v2 of the line protocol in
+//! [`crate::coordinator::server`]; codecs in [`wire`]).
+//!
+//! The contract exists so the serving layer can evolve (persistent worker
+//! pools, GEMM-shaped batch ADT builds, new transports) without signature
+//! churn: callers construct a [`QueryRequest`] carrying N query vectors,
+//! `k`, and per-request [`QueryOptions`], and get back a [`QueryResponse`]
+//! with one [`NeighborList`] per query — or a structured [`ApiError`].
+//!
+//! # `QueryOptions` defaults
+//!
+//! Every option defaults to "whatever the service was configured with",
+//! so `QueryOptions::default()` reproduces the pre-API behavior exactly:
+//!
+//! | field            | default  | meaning                                             |
+//! |------------------|----------|-----------------------------------------------------|
+//! | `mode`           | `Hybrid` | Proxima Alg. 1 (PQ guide + cached exact rerank);    |
+//! |                  |          | `PqAdt` = DiskANN-PQ, `Accurate` = HNSW-like        |
+//! | `l_override`     | `None`   | candidate-list capacity L (service `SearchParams.l`)|
+//! | `early_term_tau` | `None`   | early-termination stability threshold r (τ);        |
+//! |                  |          | `Some(0)` disables early termination                |
+//! | `rerank`         | `None`   | `PqAdt`: final rerank depth (default L);            |
+//! |                  |          | `Hybrid`: `Some(0)` disables the β-rerank           |
+//! | `want_stats`     | `false`  | aggregate [`SearchStats`] into the response         |
+
+pub mod wire;
+
+use crate::config::Config;
+use crate::search::{SearchOutput, SearchStats};
+
+/// Hard cap on queries per request: bounds what a single wire line (or
+/// in-process call) can demand from the decoder and the worker pool.
+/// Enforced both at wire decode (before vectors are materialized) and in
+/// `SearchService::validate`.
+pub const MAX_BATCH_QUERIES: usize = 4096;
+
+/// Which search algorithm answers the request (all three are policies
+/// over the unified kernel in [`crate::search::kernel`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Full-precision traversal (the HNSW-like baseline).
+    Accurate,
+    /// PQ-guided traversal with a one-shot final rerank (DiskANN-PQ).
+    PqAdt,
+    /// Proxima Algorithm 1: PQ guide, dynamic list, early termination,
+    /// β-rerank through the exact-distance cache.
+    #[default]
+    Hybrid,
+}
+
+impl SearchMode {
+    /// Stable wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchMode::Accurate => "accurate",
+            SearchMode::PqAdt => "pq_adt",
+            SearchMode::Hybrid => "hybrid",
+        }
+    }
+
+    /// Parse a wire/config name (accepts a few aliases).
+    pub fn parse(s: &str) -> Option<SearchMode> {
+        match s {
+            "accurate" | "exact" | "hnsw" => Some(SearchMode::Accurate),
+            "pq_adt" | "pq" | "pqadt" | "diskann" => Some(SearchMode::PqAdt),
+            "hybrid" | "proxima" => Some(SearchMode::Hybrid),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request knobs riding along with every query (see the module docs
+/// for the default/None semantics).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QueryOptions {
+    pub mode: SearchMode,
+    /// Candidate-list capacity L; `None` = service default.
+    pub l_override: Option<usize>,
+    /// Early-termination stability threshold r (τ); `Some(0)` disables
+    /// early termination, `None` = service default.
+    pub early_term_tau: Option<usize>,
+    /// `PqAdt`: final rerank depth (default L). `Hybrid`: `Some(0)`
+    /// disables the β-rerank. Ignored by `Accurate`.
+    pub rerank: Option<usize>,
+    /// Aggregate per-query [`SearchStats`] into the response.
+    pub want_stats: bool,
+}
+
+impl QueryOptions {
+    /// Read defaults from the `[api]` config section (`api.mode`,
+    /// `api.l_override`, `api.early_term_tau`, `api.rerank`,
+    /// `api.want_stats`); absent keys keep the `Default` semantics.
+    pub fn from_config(cfg: &Config) -> QueryOptions {
+        let mode = match cfg.get_str("api.mode") {
+            None => SearchMode::default(),
+            Some(s) => SearchMode::parse(s)
+                .unwrap_or_else(|| panic!("config api.mode: unknown mode '{s}'")),
+        };
+        QueryOptions {
+            mode,
+            l_override: cfg.get_opt_usize("api.l_override"),
+            early_term_tau: cfg.get_opt_usize("api.early_term_tau"),
+            rerank: cfg.get_opt_usize("api.rerank"),
+            want_stats: cfg.get_bool("api.want_stats", false),
+        }
+    }
+}
+
+/// A batch of queries answered in one call / one wire round-trip.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    /// Row-major query vectors; every row must match the index dimension.
+    pub vectors: Vec<Vec<f32>>,
+    /// Neighbors to return per query (clamped to the effective L).
+    pub k: usize,
+    pub options: QueryOptions,
+}
+
+impl QueryRequest {
+    /// One-query request with default options.
+    pub fn single(q: &[f32], k: usize) -> QueryRequest {
+        QueryRequest {
+            vectors: vec![q.to_vec()],
+            k,
+            options: QueryOptions::default(),
+        }
+    }
+
+    /// Multi-query request with default options.
+    pub fn batch(queries: &[&[f32]], k: usize) -> QueryRequest {
+        QueryRequest {
+            vectors: queries.iter().map(|q| q.to_vec()).collect(),
+            k,
+            options: QueryOptions::default(),
+        }
+    }
+
+    /// Builder-style options override.
+    pub fn with_options(mut self, options: QueryOptions) -> QueryRequest {
+        self.options = options;
+        self
+    }
+}
+
+/// Top-k result of one query: ids ascending by distance.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NeighborList {
+    pub ids: Vec<u32>,
+    pub dists: Vec<f32>,
+}
+
+/// Answer to a [`QueryRequest`]: `results[i]` answers `vectors[i]`.
+#[derive(Clone, Debug, Default)]
+pub struct QueryResponse {
+    pub results: Vec<NeighborList>,
+    /// Aggregated over the batch when the request set `want_stats`.
+    pub stats: Option<SearchStats>,
+    /// Service-side wall time for the whole batch.
+    pub server_latency_us: u64,
+}
+
+impl QueryResponse {
+    /// Assemble a response from per-query search outputs (moves the
+    /// output buffers; aggregates stats only when asked).
+    pub fn from_outputs(
+        outputs: Vec<SearchOutput>,
+        want_stats: bool,
+        server_latency_us: u64,
+    ) -> QueryResponse {
+        let stats = want_stats.then(|| {
+            let mut s = SearchStats::default();
+            for o in &outputs {
+                s.add(&o.stats);
+            }
+            s
+        });
+        QueryResponse {
+            results: outputs
+                .into_iter()
+                .map(|o| NeighborList {
+                    ids: o.ids,
+                    dists: o.dists,
+                })
+                .collect(),
+            stats,
+            server_latency_us,
+        }
+    }
+}
+
+/// Machine-readable error class (stable wire names in parentheses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApiErrorCode {
+    /// Malformed or semantically invalid request (`bad_request`).
+    BadRequest,
+    /// Query vector length differs from the index dim (`dim_mismatch`).
+    DimMismatch,
+    /// The service is shutting down / the batcher is gone (`closed`).
+    Closed,
+    /// Unexpected server-side failure (`internal`).
+    Internal,
+}
+
+impl ApiErrorCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ApiErrorCode::BadRequest => "bad_request",
+            ApiErrorCode::DimMismatch => "dim_mismatch",
+            ApiErrorCode::Closed => "closed",
+            ApiErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ApiErrorCode> {
+        match s {
+            "bad_request" => Some(ApiErrorCode::BadRequest),
+            "dim_mismatch" => Some(ApiErrorCode::DimMismatch),
+            "closed" => Some(ApiErrorCode::Closed),
+            "internal" => Some(ApiErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// Structured API failure: a stable code plus a human-readable message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub code: ApiErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ApiErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError {
+            code,
+            message: message.into(),
+        }
+    }
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        Self::new(ApiErrorCode::BadRequest, message)
+    }
+    pub fn dim_mismatch(message: impl Into<String>) -> ApiError {
+        Self::new(ApiErrorCode::DimMismatch, message)
+    }
+    pub fn closed(message: impl Into<String>) -> ApiError {
+        Self::new(ApiErrorCode::Closed, message)
+    }
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        Self::new(ApiErrorCode::Internal, message)
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_reproduce_service_defaults() {
+        let o = QueryOptions::default();
+        assert_eq!(o.mode, SearchMode::Hybrid);
+        assert_eq!(o.l_override, None);
+        assert_eq!(o.early_term_tau, None);
+        assert_eq!(o.rerank, None);
+        assert!(!o.want_stats);
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid] {
+            assert_eq!(SearchMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SearchMode::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for c in [
+            ApiErrorCode::BadRequest,
+            ApiErrorCode::DimMismatch,
+            ApiErrorCode::Closed,
+            ApiErrorCode::Internal,
+        ] {
+            assert_eq!(ApiErrorCode::parse(c.name()), Some(c));
+        }
+        assert_eq!(ApiErrorCode::parse("teapot"), None);
+    }
+
+    #[test]
+    fn request_builders() {
+        let q = vec![1.0f32, 2.0];
+        let req = QueryRequest::single(&q, 5);
+        assert_eq!(req.vectors.len(), 1);
+        assert_eq!(req.k, 5);
+        let req = QueryRequest::batch(&[&q, &q, &q], 7).with_options(QueryOptions {
+            l_override: Some(99),
+            ..Default::default()
+        });
+        assert_eq!(req.vectors.len(), 3);
+        assert_eq!(req.options.l_override, Some(99));
+    }
+
+    #[test]
+    fn response_from_outputs_aggregates_stats_on_demand() {
+        let mk = |pq: usize| SearchOutput {
+            ids: vec![1, 2],
+            dists: vec![0.1, 0.2],
+            stats: SearchStats {
+                pq_dists: pq,
+                ..Default::default()
+            },
+            trace: None,
+        };
+        let r = QueryResponse::from_outputs(vec![mk(3), mk(4)], true, 42);
+        assert_eq!(r.results.len(), 2);
+        assert_eq!(r.results[0].ids, vec![1, 2]);
+        assert_eq!(r.stats.as_ref().unwrap().pq_dists, 7);
+        assert_eq!(r.server_latency_us, 42);
+        let r = QueryResponse::from_outputs(vec![mk(3)], false, 1);
+        assert!(r.stats.is_none());
+    }
+
+    #[test]
+    fn options_from_config() {
+        let cfg = Config::parse(
+            "[api]\nmode = pq_adt\nl_override = 200\nearly_term_tau = 5\nwant_stats = true\n",
+        )
+        .unwrap();
+        let o = QueryOptions::from_config(&cfg);
+        assert_eq!(o.mode, SearchMode::PqAdt);
+        assert_eq!(o.l_override, Some(200));
+        assert_eq!(o.early_term_tau, Some(5));
+        assert_eq!(o.rerank, None);
+        assert!(o.want_stats);
+        let o = QueryOptions::from_config(&Config::new());
+        assert_eq!(o, QueryOptions::default());
+    }
+
+    #[test]
+    fn error_display_includes_code() {
+        let e = ApiError::dim_mismatch("query 0: expected dim 16, got 3");
+        assert_eq!(e.to_string(), "dim_mismatch: query 0: expected dim 16, got 3");
+    }
+}

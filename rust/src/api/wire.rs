@@ -1,0 +1,524 @@
+//! JSON wire codecs for the typed query API — the single
+//! encode/decode surface shared by the TCP server and [`Client`]
+//! (`crate::coordinator::server`), so the two sides can never drift.
+//!
+//! Versioning: requests carry `"v":2`; a missing `v` means a v1 request
+//! (`{"op":"search","query":[...],"k":..}`), which decodes to the same
+//! [`QueryRequest`] with one vector and default options — the server
+//! answers it in the v1 response shape. Errors are always the structured
+//! `{"error":{"code":...,"message":...}}` line; [`decode_error`] also
+//! accepts the legacy `{"error":"..."}` string shape.
+
+use super::{
+    ApiError, ApiErrorCode, NeighborList, QueryOptions, QueryRequest, QueryResponse, SearchMode,
+};
+use crate::search::SearchStats;
+use crate::util::json::Json;
+
+/// Highest protocol version this build speaks.
+pub const VERSION: u32 = 2;
+
+/// A decoded wire line: an operation the server dispatches on.
+#[derive(Clone, Debug)]
+pub enum WireRequest {
+    /// `op:"search"`; `version` picks the response shape (1 or 2).
+    Search { version: u32, request: QueryRequest },
+    Stats,
+    Shutdown,
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Encode a v2 (multi-query, optioned) search request.
+pub fn encode_request_v2(req: &QueryRequest) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(VERSION as f64)),
+        ("op", Json::str("search")),
+        (
+            "queries",
+            Json::Arr(
+                req.vectors
+                    .iter()
+                    .map(|q| Json::arr_num(q.iter().map(|&x| x as f64)))
+                    .collect(),
+            ),
+        ),
+        ("k", Json::num(req.k as f64)),
+        ("options", encode_options(&req.options)),
+    ])
+}
+
+/// Encode a legacy v1 single-query request (compat-path clients).
+pub fn encode_request_v1(query: &[f32], k: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::str("search")),
+        ("query", Json::arr_num(query.iter().map(|&x| x as f64))),
+        ("k", Json::num(k as f64)),
+    ])
+}
+
+/// Decode one request line (any version) into a [`WireRequest`].
+pub fn decode_request(j: &Json) -> Result<WireRequest, ApiError> {
+    let version = match j.get("v") {
+        None => 1,
+        Some(v) => as_index(v, "'v'")? as u32,
+    };
+    if version == 0 || version > VERSION {
+        return Err(ApiError::bad_request(format!(
+            "unsupported protocol version {version} (this server speaks up to v{VERSION})"
+        )));
+    }
+    let op = match j.get("op") {
+        None => "search",
+        Some(o) => o
+            .as_str()
+            .ok_or_else(|| ApiError::bad_request("'op' must be a string"))?,
+    };
+    match op {
+        "stats" => Ok(WireRequest::Stats),
+        "shutdown" => Ok(WireRequest::Shutdown),
+        "search" => {
+            let vectors = if let Some(qs) = j.get("queries") {
+                if version == 1 {
+                    // Versionless lines are the v1 compat path, whose
+                    // response is the flat single-query shape — a batch
+                    // would have to be answered in a shape the client
+                    // never asked for.
+                    return Err(ApiError::bad_request(
+                        "'queries' requires \"v\":2 (v1 takes a single 'query')",
+                    ));
+                }
+                let rows = qs
+                    .as_arr()
+                    .ok_or_else(|| ApiError::bad_request("'queries' must be an array of arrays"))?;
+                if rows.len() > super::MAX_BATCH_QUERIES {
+                    return Err(ApiError::bad_request(format!(
+                        "batch of {} exceeds the maximum {} queries per request",
+                        rows.len(),
+                        super::MAX_BATCH_QUERIES
+                    )));
+                }
+                rows.iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        decode_vector(r).map_err(|e| {
+                            ApiError::bad_request(format!("queries[{i}]: {}", e.message))
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?
+            } else if let Some(q) = j.get("query") {
+                vec![decode_vector(q)?]
+            } else {
+                return Err(ApiError::bad_request("missing 'query' or 'queries'"));
+            };
+            let k = match j.get("k") {
+                None => 10,
+                Some(k) => as_index(k, "'k'")?,
+            };
+            let options = match j.get("options") {
+                None => QueryOptions::default(),
+                Some(o) => decode_options(o)?,
+            };
+            Ok(WireRequest::Search {
+                version,
+                request: QueryRequest { vectors, k, options },
+            })
+        }
+        other => Err(ApiError::bad_request(format!("unknown op '{other}'"))),
+    }
+}
+
+fn decode_vector(j: &Json) -> Result<Vec<f32>, ApiError> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| ApiError::bad_request("query must be an array of numbers"))?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|v| v as f32)
+                .ok_or_else(|| ApiError::bad_request("query element must be a number"))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Options
+// ---------------------------------------------------------------------------
+
+/// Encode options; `None`/default fields are omitted from the wire.
+pub fn encode_options(o: &QueryOptions) -> Json {
+    let mut kvs: Vec<(&str, Json)> = vec![("mode", Json::str(o.mode.name()))];
+    if let Some(l) = o.l_override {
+        kvs.push(("l_override", Json::num(l as f64)));
+    }
+    if let Some(t) = o.early_term_tau {
+        kvs.push(("early_term_tau", Json::num(t as f64)));
+    }
+    if let Some(r) = o.rerank {
+        kvs.push(("rerank", Json::num(r as f64)));
+    }
+    if o.want_stats {
+        kvs.push(("want_stats", Json::Bool(true)));
+    }
+    Json::obj(kvs)
+}
+
+pub fn decode_options(j: &Json) -> Result<QueryOptions, ApiError> {
+    let mut o = QueryOptions::default();
+    if let Some(m) = j.get("mode") {
+        let s = m
+            .as_str()
+            .ok_or_else(|| ApiError::bad_request("options.mode must be a string"))?;
+        o.mode = SearchMode::parse(s)
+            .ok_or_else(|| ApiError::bad_request(format!("options.mode: unknown mode '{s}'")))?;
+    }
+    o.l_override = opt_usize(j, "l_override")?;
+    o.early_term_tau = opt_usize(j, "early_term_tau")?;
+    o.rerank = opt_usize(j, "rerank")?;
+    if let Some(w) = j.get("want_stats") {
+        o.want_stats = w
+            .as_bool()
+            .ok_or_else(|| ApiError::bad_request("options.want_stats must be a bool"))?;
+    }
+    Ok(o)
+}
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, ApiError> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => as_index(v, &format!("options.{key}")).map(Some),
+    }
+}
+
+/// Strict non-negative-integer decode: rejects negatives and fractions
+/// instead of letting `as usize` saturate/truncate them into different
+/// semantics (e.g. `early_term_tau:-5` would otherwise become 0 =
+/// "disable early termination").
+fn as_index(v: &Json, what: &str) -> Result<usize, ApiError> {
+    let x = v
+        .as_f64()
+        .ok_or_else(|| ApiError::bad_request(format!("{what} must be a number")))?;
+    if !(0.0..=u32::MAX as f64).contains(&x) || x.fract() != 0.0 {
+        return Err(ApiError::bad_request(format!(
+            "{what} must be a non-negative integer, got {x}"
+        )));
+    }
+    Ok(x as usize)
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+/// Encode a v2 response: one `{ids,dists}` object per query, plus the
+/// aggregated stats when the request asked for them.
+pub fn encode_response_v2(resp: &QueryResponse) -> Json {
+    let mut kvs: Vec<(&str, Json)> = vec![
+        ("v", Json::num(VERSION as f64)),
+        (
+            "results",
+            Json::Arr(resp.results.iter().map(encode_neighbor_list).collect()),
+        ),
+        ("server_latency_us", Json::num(resp.server_latency_us as f64)),
+    ];
+    if let Some(s) = &resp.stats {
+        kvs.push(("stats", encode_stats(s)));
+    }
+    Json::obj(kvs)
+}
+
+/// Encode the legacy v1 single-query response shape.
+pub fn encode_response_v1(nl: &NeighborList, latency_us: u64) -> Json {
+    Json::obj(vec![
+        ("ids", Json::arr_num(nl.ids.iter().map(|&i| i as f64))),
+        ("dists", Json::arr_num(nl.dists.iter().map(|&d| d as f64))),
+        ("latency_us", Json::num(latency_us as f64)),
+    ])
+}
+
+pub fn decode_response_v2(j: &Json) -> Result<QueryResponse, ApiError> {
+    let results = j
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::bad_request("response missing 'results'"))?
+        .iter()
+        .map(decode_neighbor_list)
+        .collect::<Result<Vec<_>, _>>()?;
+    let stats = match j.get("stats") {
+        None => None,
+        Some(s) => Some(decode_stats(s)),
+    };
+    let server_latency_us = j
+        .get("server_latency_us")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as u64;
+    Ok(QueryResponse {
+        results,
+        stats,
+        server_latency_us,
+    })
+}
+
+fn encode_neighbor_list(nl: &NeighborList) -> Json {
+    Json::obj(vec![
+        ("ids", Json::arr_num(nl.ids.iter().map(|&i| i as f64))),
+        ("dists", Json::arr_num(nl.dists.iter().map(|&d| d as f64))),
+    ])
+}
+
+fn decode_neighbor_list(j: &Json) -> Result<NeighborList, ApiError> {
+    let ids: Vec<u32> = j
+        .get("ids")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::bad_request("result missing 'ids'"))?
+        .iter()
+        .map(|x| as_index(x, "result id").map(|v| v as u32))
+        .collect::<Result<_, _>>()?;
+    let dists: Vec<f32> = j
+        .get("dists")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ApiError::bad_request("result missing 'dists'"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|v| v as f32)
+                .ok_or_else(|| ApiError::bad_request("result dist must be a number"))
+        })
+        .collect::<Result<_, _>>()?;
+    if dists.len() != ids.len() {
+        return Err(ApiError::bad_request(format!(
+            "result carries {} ids but {} dists",
+            ids.len(),
+            dists.len()
+        )));
+    }
+    Ok(NeighborList { ids, dists })
+}
+
+// ---------------------------------------------------------------------------
+// Stats + errors
+// ---------------------------------------------------------------------------
+
+pub fn encode_stats(s: &SearchStats) -> Json {
+    Json::obj(vec![
+        ("pq_dists", Json::num(s.pq_dists as f64)),
+        ("exact_dists", Json::num(s.exact_dists as f64)),
+        ("hops", Json::num(s.hops as f64)),
+        ("sorts", Json::num(s.sorts as f64)),
+        ("bytes_index", Json::num(s.bytes_index as f64)),
+        ("bytes_pq", Json::num(s.bytes_pq as f64)),
+        ("bytes_raw", Json::num(s.bytes_raw as f64)),
+        ("et_iterations", Json::num(s.et_iterations as f64)),
+        ("early_terminated", Json::Bool(s.early_terminated)),
+    ])
+}
+
+pub fn decode_stats(j: &Json) -> SearchStats {
+    let n = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    SearchStats {
+        pq_dists: n("pq_dists") as usize,
+        exact_dists: n("exact_dists") as usize,
+        hops: n("hops") as usize,
+        sorts: n("sorts") as usize,
+        bytes_index: n("bytes_index") as u64,
+        bytes_pq: n("bytes_pq") as u64,
+        bytes_raw: n("bytes_raw") as u64,
+        et_iterations: n("et_iterations") as usize,
+        early_terminated: j
+            .get("early_terminated")
+            .and_then(Json::as_bool)
+            .unwrap_or(false),
+    }
+}
+
+/// Encode the structured error line: `{"error":{"code":..,"message":..}}`.
+pub fn encode_error(e: &ApiError) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("code", Json::str(e.code.name())),
+            ("message", Json::str(e.message.clone())),
+        ]),
+    )])
+}
+
+/// Extract an error from a response line, accepting both the structured
+/// object shape and the legacy `{"error":"..."}` string shape. Returns
+/// `None` when the line carries no error.
+pub fn decode_error(j: &Json) -> Option<ApiError> {
+    let e = j.get("error")?;
+    if let Some(s) = e.as_str() {
+        return Some(ApiError::internal(s));
+    }
+    let code = e
+        .get("code")
+        .and_then(Json::as_str)
+        .and_then(ApiErrorCode::parse)
+        .unwrap_or(ApiErrorCode::Internal);
+    let message = e
+        .get("message")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    Some(ApiError::new(code, message))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn reparse(j: &Json) -> Json {
+        json::parse(&j.to_string_compact()).expect("wire line must reparse")
+    }
+
+    #[test]
+    fn v2_request_roundtrip() {
+        let req = QueryRequest {
+            vectors: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            k: 7,
+            options: QueryOptions {
+                mode: SearchMode::PqAdt,
+                l_override: Some(120),
+                early_term_tau: Some(0),
+                rerank: Some(30),
+                want_stats: true,
+            },
+        };
+        let line = reparse(&encode_request_v2(&req));
+        match decode_request(&line).unwrap() {
+            WireRequest::Search { version, request } => {
+                assert_eq!(version, 2);
+                assert_eq!(request.vectors, req.vectors);
+                assert_eq!(request.k, 7);
+                assert_eq!(request.options, req.options);
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v1_request_decodes_with_default_options() {
+        let line = reparse(&encode_request_v1(&[0.5, 0.25], 3));
+        match decode_request(&line).unwrap() {
+            WireRequest::Search { version, request } => {
+                assert_eq!(version, 1);
+                assert_eq!(request.vectors, vec![vec![0.5, 0.25]]);
+                assert_eq!(request.k, 3);
+                assert_eq!(request.options, QueryOptions::default());
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_with_codes() {
+        let cases = [
+            r#"{"v":3,"op":"search","query":[1]}"#,
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"search"}"#,
+            r#"{"op":"search","query":"oops"}"#,
+            r#"{"v":2,"op":"search","queries":[[1],"oops"]}"#,
+            r#"{"v":2,"op":"search","queries":[[1]],"options":{"mode":"bogus"}}"#,
+            r#"{"v":2,"op":"search","queries":[[1]],"options":{"early_term_tau":-5}}"#,
+            r#"{"v":2,"op":"search","queries":[[1]],"options":{"rerank":-1}}"#,
+            r#"{"v":2,"op":"search","queries":[[1]],"k":10.7}"#,
+            r#"{"op":"search","queries":[[1],[2]]}"#,
+        ];
+        for c in cases {
+            let j = json::parse(c).unwrap();
+            let e = decode_request(&j).expect_err(c);
+            assert_eq!(e.code, ApiErrorCode::BadRequest, "{c}");
+        }
+    }
+
+    #[test]
+    fn oversized_batches_are_rejected_at_decode() {
+        let req = QueryRequest {
+            vectors: vec![vec![0.0]; crate::api::MAX_BATCH_QUERIES + 1],
+            k: 1,
+            options: QueryOptions::default(),
+        };
+        let line = reparse(&encode_request_v2(&req));
+        let e = decode_request(&line).unwrap_err();
+        assert_eq!(e.code, ApiErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn ops_decode() {
+        let cases = [(r#"{"op":"stats"}"#, false), (r#"{"op":"shutdown"}"#, true)];
+        for (line, want_shutdown) in cases {
+            let j = json::parse(line).unwrap();
+            match decode_request(&j).unwrap() {
+                WireRequest::Stats => assert!(!want_shutdown),
+                WireRequest::Shutdown => assert!(want_shutdown),
+                other => panic!("wrong op: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_response_roundtrip_with_stats() {
+        let resp = QueryResponse {
+            results: vec![
+                NeighborList {
+                    ids: vec![5, 9],
+                    dists: vec![0.5, 1.25],
+                },
+                NeighborList {
+                    ids: vec![1],
+                    dists: vec![2.0],
+                },
+            ],
+            stats: Some(SearchStats {
+                pq_dists: 100,
+                exact_dists: 10,
+                hops: 7,
+                sorts: 7,
+                bytes_index: 1000,
+                bytes_pq: 800,
+                bytes_raw: 640,
+                et_iterations: 2,
+                early_terminated: true,
+            }),
+            server_latency_us: 321,
+        };
+        let line = reparse(&encode_response_v2(&resp));
+        let back = decode_response_v2(&line).unwrap();
+        assert_eq!(back.results, resp.results);
+        assert_eq!(back.server_latency_us, 321);
+        let s = back.stats.unwrap();
+        assert_eq!(s.pq_dists, 100);
+        assert_eq!(s.bytes_raw, 640);
+        assert!(s.early_terminated);
+    }
+
+    #[test]
+    fn corrupt_response_lines_are_rejected_not_mispaired() {
+        // Non-numeric id: must error, not silently drop (which would
+        // mispair ids with dists).
+        let j = json::parse(r#"{"results":[{"ids":[1,"x",3],"dists":[0.1,0.2,0.3]}]}"#).unwrap();
+        assert!(decode_response_v2(&j).is_err());
+        // Length mismatch between ids and dists.
+        let j = json::parse(r#"{"results":[{"ids":[1,2],"dists":[0.1]}]}"#).unwrap();
+        assert!(decode_response_v2(&j).is_err());
+        // Missing dists entirely.
+        let j = json::parse(r#"{"results":[{"ids":[1,2]}]}"#).unwrap();
+        assert!(decode_response_v2(&j).is_err());
+    }
+
+    #[test]
+    fn error_roundtrip_and_legacy_string() {
+        let e = ApiError::dim_mismatch("expected 16, got 3");
+        let line = reparse(&encode_error(&e));
+        assert_eq!(decode_error(&line), Some(e));
+        let legacy = json::parse(r#"{"error":"batcher closed"}"#).unwrap();
+        let got = decode_error(&legacy).unwrap();
+        assert_eq!(got.code, ApiErrorCode::Internal);
+        assert_eq!(got.message, "batcher closed");
+        let ok = json::parse(r#"{"ids":[1]}"#).unwrap();
+        assert_eq!(decode_error(&ok), None);
+    }
+}

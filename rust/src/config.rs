@@ -93,6 +93,16 @@ impl Config {
     pub fn get_f32(&self, key: &str, default: f32) -> f32 {
         self.typed(key, default)
     }
+    /// Optional integer: `None` when the key is absent (used for
+    /// tri-state settings like the `api.*` per-request option defaults,
+    /// where "unset" must stay distinguishable from any value).
+    pub fn get_opt_usize(&self, key: &str) -> Option<usize> {
+        self.get_str(key).map(|s| {
+            s.parse::<usize>()
+                .unwrap_or_else(|_| panic!("config {key}: cannot parse '{s}'"))
+        })
+    }
+
     pub fn get_bool(&self, key: &str, default: bool) -> bool {
         match self.get_str(key) {
             Some("true" | "1" | "yes" | "on") => true,
@@ -281,6 +291,13 @@ mod tests {
         assert_eq!(PqParams::for_dim(128).m, 32);
         assert_eq!(PqParams::for_dim(96).m, 24);
         assert_eq!(PqParams::for_dim(100).m, 25);
+    }
+
+    #[test]
+    fn opt_usize_distinguishes_absent_from_set() {
+        let cfg = Config::parse("api.l_override = 200\n").unwrap();
+        assert_eq!(cfg.get_opt_usize("api.l_override"), Some(200));
+        assert_eq!(cfg.get_opt_usize("api.rerank"), None);
     }
 
     #[test]

@@ -2,8 +2,14 @@
 //! full or when the oldest request exceeds its deadline — the standard
 //! serving trade-off (throughput vs tail latency) the paper's scheduler
 //! makes in hardware with its N_q queues.
+//!
+//! Each queued [`Request`] carries its own [`QueryOptions`], so requests
+//! with different modes / list sizes coalesce into one batch and still
+//! get answered under their own knobs (the typed-API contract reaches
+//! through the batching layer untouched).
 
 use super::SearchService;
+use crate::api::QueryOptions;
 use crate::search::SearchOutput;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -25,10 +31,12 @@ impl Default for BatchPolicy {
     }
 }
 
-/// One queued request.
+/// One queued request: a single query vector plus the per-request options
+/// it must be answered under, regardless of what it coalesces with.
 pub struct Request {
     pub query: Vec<f32>,
     pub k: usize,
+    pub options: QueryOptions,
     pub respond: mpsc::Sender<SearchOutput>,
     pub enqueued: Instant,
 }
@@ -40,13 +48,25 @@ pub struct BatcherHandle {
 }
 
 impl BatcherHandle {
-    /// Submit and wait for the result.
+    /// Submit with default options and wait for the result.
     pub fn query(&self, query: Vec<f32>, k: usize) -> Option<SearchOutput> {
+        self.query_with(query, k, QueryOptions::default())
+    }
+
+    /// Submit with per-request options and wait for the result. `None`
+    /// means the batching loop is gone (service shutting down).
+    pub fn query_with(
+        &self,
+        query: Vec<f32>,
+        k: usize,
+        options: QueryOptions,
+    ) -> Option<SearchOutput> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Request {
                 query,
                 k,
+                options,
                 respond: tx,
                 enqueued: Instant::now(),
             })
@@ -126,7 +146,8 @@ fn run_loop(
                 scope.spawn(move || {
                     let mut scratch = svc.checkout_scratch();
                     for req in part {
-                        let out = svc.search_with_scratch(&req.query, req.k, &mut scratch);
+                        let out =
+                            svc.search_with_options(&req.query, req.k, &req.options, &mut scratch);
                         let _ = req.respond.send(out);
                     }
                 });
@@ -200,6 +221,65 @@ mod tests {
         drop(handle);
         let stats = join.join().unwrap();
         assert!(stats.deadline_triggered >= 1);
+    }
+
+    #[test]
+    fn options_survive_coalescing() {
+        use crate::api::SearchMode;
+        let (ds, svc) = service();
+        // A wide deadline so the two concurrent submissions below land in
+        // ONE batch (max_batch = 2 forces a size-triggered flush as soon
+        // as both are queued).
+        let (handle, join) = spawn(
+            svc,
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_secs(2),
+            },
+            2,
+        );
+        let q = ds.queries.row(0).to_vec();
+        let (accurate, hybrid) = std::thread::scope(|scope| {
+            let h1 = handle.clone();
+            let q1 = q.clone();
+            let a = scope.spawn(move || {
+                h1.query_with(
+                    q1,
+                    5,
+                    QueryOptions {
+                        mode: SearchMode::Accurate,
+                        want_stats: true,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+            });
+            let h2 = handle.clone();
+            let q2 = q.clone();
+            let b = scope.spawn(move || {
+                h2.query_with(
+                    q2,
+                    5,
+                    QueryOptions {
+                        want_stats: true,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+            });
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        // Each coalesced request was answered under ITS options.
+        assert_eq!(accurate.stats.pq_dists, 0, "accurate mode must not touch PQ");
+        assert!(accurate.stats.exact_dists > 0);
+        assert!(hybrid.stats.pq_dists > 0, "hybrid mode traverses on PQ");
+        drop(handle);
+        let stats = join.join().unwrap();
+        assert_eq!(stats.queries, 2);
+        assert_eq!(
+            stats.batches, 1,
+            "the two optioned requests must coalesce into one batch"
+        );
     }
 
     #[test]

@@ -1,8 +1,16 @@
-//! Open-loop load generator: Poisson arrivals at a target QPS against a
-//! [`SearchService`], measuring the latency distribution under load — the
-//! serving-side complement to the closed-loop clients in the examples.
+//! Load generators:
+//!
+//! * [`run`] — open-loop: Poisson arrivals at a target QPS against an
+//!   in-process [`SearchService`], measuring the latency distribution
+//!   under load.
+//! * [`run_rpc`] — closed-loop over the WIRE: N client connections each
+//!   driving the v2 batch RPC ([`Client::search_batch`]), so throughput
+//!   numbers reflect amortized round-trips (B queries per line turn)
+//!   instead of one-query-per-round-trip chatter.
 
+use super::server::Client;
 use super::SearchService;
+use crate::api::QueryOptions;
 use crate::util::rng::Xoshiro256pp;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -90,6 +98,92 @@ pub fn run(
     }
 }
 
+/// Result of one closed-loop batch-RPC run ([`run_rpc`]).
+#[derive(Debug, Clone)]
+pub struct RpcLoadReport {
+    /// Wire round-trips completed (each carrying `batch` queries).
+    pub round_trips: usize,
+    /// Queries answered (`round_trips * batch`).
+    pub queries: usize,
+    /// Query throughput: queries / wall seconds.
+    pub qps: f64,
+    /// Per-ROUND-TRIP latency percentiles in µs (a round-trip amortizes
+    /// `batch` queries; divide by the batch size for per-query cost).
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+/// Drive a running server's v2 batch RPC closed-loop: `clients`
+/// connections each issue `requests_per_client` round-trips of `batch`
+/// queries (cycling through `queries`) under the given per-request
+/// `options`. Returns per-round-trip latencies and per-query QPS.
+pub fn run_rpc(
+    addr: std::net::SocketAddr,
+    queries: &crate::dataset::VectorSet,
+    k: usize,
+    options: QueryOptions,
+    batch: usize,
+    clients: usize,
+    requests_per_client: usize,
+) -> crate::util::error::Result<RpcLoadReport> {
+    let batch = batch.max(1);
+    let clients = clients.max(1);
+    if queries.is_empty() {
+        crate::bail!("run_rpc requires a non-empty query set");
+    }
+    // Connect every client BEFORE starting the clock, so the reported
+    // throughput covers only the measured round-trips (not TCP connect
+    // or thread-spawn time — significant for short runs).
+    let mut conns = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        conns.push(Client::connect(addr)?);
+    }
+    let start = Instant::now();
+    let lat_chunks: Vec<crate::util::error::Result<Vec<f64>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = conns
+            .into_iter()
+            .enumerate()
+            .map(|(c, mut client)| {
+                scope.spawn(move || {
+                    let mut lats = Vec::with_capacity(requests_per_client);
+                    for r in 0..requests_per_client {
+                        let base = (c * requests_per_client + r) * batch;
+                        let refs: Vec<&[f32]> = (0..batch)
+                            .map(|i| queries.row((base + i) % queries.len()))
+                            .collect();
+                        let t0 = Instant::now();
+                        let resp = client.search_batch(&refs, k, &options)?;
+                        if resp.results.len() != batch {
+                            crate::bail!(
+                                "batch RPC returned {} results for {batch} queries",
+                                resp.results.len()
+                            );
+                        }
+                        lats.push(t0.elapsed().as_secs_f64() * 1e6);
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let mut lats = Vec::new();
+    for chunk in lat_chunks {
+        lats.extend(chunk?);
+    }
+    let round_trips = lats.len();
+    Ok(RpcLoadReport {
+        round_trips,
+        queries: round_trips * batch,
+        qps: (round_trips * batch) as f64 / wall,
+        p50_us: crate::util::percentile(&lats, 50.0),
+        p95_us: crate::util::percentile(&lats, 95.0),
+        p99_us: crate::util::percentile(&lats, 99.0),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +234,49 @@ mod tests {
             report.achieved_qps,
             report.offered_qps
         );
+    }
+
+    #[test]
+    fn rpc_loadgen_amortizes_round_trips() {
+        let ds = tiny_uniform(200, 8, Metric::L2, 43);
+        let svc = Arc::new(SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 43,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 200,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 30,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        ));
+        let (handle, _join) =
+            crate::coordinator::batcher::spawn(svc.clone(), Default::default(), 1);
+        let server = crate::coordinator::server::Server::start(svc, handle, 0).unwrap();
+        let rep = run_rpc(
+            server.addr,
+            &ds.queries,
+            5,
+            QueryOptions::default(),
+            4,
+            2,
+            5,
+        )
+        .unwrap();
+        assert_eq!(rep.round_trips, 10, "2 clients x 5 requests");
+        assert_eq!(rep.queries, 40, "each round-trip carries 4 queries");
+        assert!(rep.qps > 0.0);
+        assert!(rep.p99_us >= rep.p50_us);
+        server.stop();
     }
 }

@@ -1,17 +1,23 @@
 //! L3 coordinator: the serving layer around the Proxima search algorithm.
 //!
 //! * [`SearchService`] — owns one loaded index (base vectors, graph, PQ,
-//!   gap encoding) and answers queries; the per-query ADT is built through
+//!   gap encoding) and answers queries through the typed query API
+//!   ([`SearchService::query`] takes a [`QueryRequest`] — N vectors, `k`,
+//!   per-request [`QueryOptions`] — and returns a [`QueryResponse`] or a
+//!   structured [`ApiError`]); the per-query ADT is built through
 //!   the AOT/XLA artifact when a [`Runtime`](crate::runtime::Runtime) is
 //!   attached (Python never runs here), with a native fallback. Per-query
 //!   scratch (visited set, candidate list, exact cache, ADT table) comes
 //!   from an internal [`ScratchPool`], so the steady-state request path is
-//!   allocation-free; [`SearchService::search_batch`] fans a batch across
-//!   a fixed pool of worker threads, one scratch per worker.
-//! * [`batcher`] — dynamic batching (size- or deadline-triggered), workers
-//!   holding pooled scratch for their batch slice.
-//! * [`shard`] — partitioned scale-out with parallel fan-out.
-//! * [`server`] — a TCP line-protocol front end + client, on std threads
+//!   allocation-free; multi-query requests fan across a fixed pool of
+//!   worker threads, one scratch per worker.
+//! * [`batcher`] — dynamic batching (size- or deadline-triggered), each
+//!   queued request carrying its own [`QueryOptions`], workers holding
+//!   pooled scratch for their batch slice.
+//! * [`shard`] — partitioned scale-out with parallel fan-out, speaking the
+//!   same [`QueryRequest`]/[`QueryResponse`] contract.
+//! * [`server`] — a TCP line-protocol front end + client (versioned wire
+//!   protocol, multi-query v2 batches + v1 compat), on std threads
 //!   (the offline image has no tokio; see DESIGN.md §1).
 
 pub mod batcher;
@@ -19,6 +25,7 @@ pub mod loadgen;
 pub mod shard;
 pub mod server;
 
+use crate::api::{ApiError, QueryOptions, QueryRequest, QueryResponse, SearchMode};
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
 use crate::distance::Metric;
@@ -26,7 +33,7 @@ use crate::gap::GapGraph;
 use crate::graph::{vamana, Graph};
 use crate::pq::{Adt, PqCodebook, PqCodes};
 use crate::runtime::service::RuntimeHandle;
-use crate::search::beam::SearchContext;
+use crate::search::beam::{accurate_beam_search_into, pq_beam_search_into, SearchContext};
 use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
 use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
@@ -165,7 +172,116 @@ impl SearchService {
         self.codebook.build_adt_into(q, adt);
     }
 
-    /// Answer one query (Algorithm 1).
+    /// Index dimensionality (the API boundary validates queries against
+    /// this).
+    pub fn dim(&self) -> usize {
+        self.base.dim
+    }
+
+    /// Validate a request against this index: non-empty batch, sane `k`
+    /// and `l_override`, and every vector's length equal to the index
+    /// dimension (a wrong-length vector would otherwise reach
+    /// `Metric::distance` and panic or return garbage).
+    pub fn validate(&self, req: &QueryRequest) -> Result<(), ApiError> {
+        if req.vectors.is_empty() {
+            return Err(ApiError::bad_request("empty query batch"));
+        }
+        if req.vectors.len() > crate::api::MAX_BATCH_QUERIES {
+            return Err(ApiError::bad_request(format!(
+                "batch of {} exceeds the maximum {} queries per request",
+                req.vectors.len(),
+                crate::api::MAX_BATCH_QUERIES
+            )));
+        }
+        if req.k == 0 {
+            return Err(ApiError::bad_request("k must be >= 1"));
+        }
+        if let Some(l) = req.options.l_override {
+            if l == 0 {
+                return Err(ApiError::bad_request("l_override must be >= 1"));
+            }
+            // The list buffer reserves L slots up front — an unbounded
+            // value would let one request demand a huge allocation. The
+            // cap is a request-size constant (not the index size) so
+            // every shard of a sharded service accepts or rejects a
+            // request identically; `effective()` additionally clamps L
+            // to the local index size.
+            if l > MAX_L_OVERRIDE {
+                return Err(ApiError::bad_request(format!(
+                    "l_override {l} exceeds the maximum {MAX_L_OVERRIDE}"
+                )));
+            }
+        }
+        let dim = self.base.dim;
+        for (i, v) in req.vectors.iter().enumerate() {
+            if v.len() != dim {
+                return Err(ApiError::dim_mismatch(format!(
+                    "query {i}: expected dim {dim}, got {}",
+                    v.len()
+                )));
+            }
+            // Non-finite values produce NaN distances, which panic the
+            // rerank sorts deep in a worker thread — reject them here so
+            // a bad request cannot tear down the serving path.
+            if let Some(x) = v.iter().find(|x| !x.is_finite()) {
+                return Err(ApiError::bad_request(format!(
+                    "query {i}: non-finite value {x}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve per-request options against the service defaults into the
+    /// effective search parameters + feature switches.
+    fn effective(&self, k: usize, o: &QueryOptions) -> (SearchParams, ProximaFeatures) {
+        let mut params = self.params;
+        if let Some(l) = o.l_override {
+            // Clamp to the local index size: a candidate list longer
+            // than the index (or this shard of it) buys nothing but a
+            // bigger up-front reserve.
+            params.l = l.min(self.base.len().max(1));
+        }
+        params.k = k.min(params.l);
+        let mut features = self.features;
+        match o.early_term_tau {
+            None => {}
+            Some(0) => features.early_termination = false,
+            Some(tau) => {
+                features.early_termination = true;
+                params.repetition = tau;
+            }
+        }
+        if o.mode == SearchMode::Hybrid && o.rerank == Some(0) {
+            features.beta_rerank = false;
+        }
+        (params, features)
+    }
+
+    /// THE typed entry point: validate, dispatch every query in the
+    /// request (fanning multi-query batches across the worker pool), and
+    /// assemble the response. All other search methods are conveniences
+    /// over the same machinery.
+    pub fn query(&self, req: &QueryRequest) -> Result<QueryResponse, ApiError> {
+        self.validate(req)?;
+        Ok(self.query_prevalidated(req))
+    }
+
+    /// [`Self::query`] minus the boundary checks — for internal callers
+    /// (the shard fan-out) that already validated the FULL request
+    /// exactly once and must not rescan every vector per shard.
+    pub(crate) fn query_prevalidated(&self, req: &QueryRequest) -> QueryResponse {
+        let t0 = std::time::Instant::now();
+        let refs: Vec<&[f32]> = req.vectors.iter().map(|v| v.as_slice()).collect();
+        let outs = self.search_batch_with_options(&refs, req.k, &req.options);
+        QueryResponse::from_outputs(
+            outs,
+            req.options.want_stats,
+            t0.elapsed().as_micros() as u64,
+        )
+    }
+
+    /// Answer one query (Algorithm 1 with service-default options).
     pub fn search(&self, q: &[f32], k: usize) -> SearchOutput {
         let mut scratch = self.scratch.checkout();
         self.search_with_scratch(q, k, &mut scratch)
@@ -180,22 +296,65 @@ impl SearchService {
         k: usize,
         scratch: &mut ServiceScratch,
     ) -> SearchOutput {
+        self.search_with_options(q, k, &QueryOptions::default(), scratch)
+    }
+
+    /// Answer one query under per-request [`QueryOptions`]: the mode
+    /// selects which policy runs over the unified kernel, the remaining
+    /// fields override the service's `SearchParams`/`ProximaFeatures`
+    /// for this request only. Defaults reproduce [`Self::search`] exactly.
+    pub fn search_with_options(
+        &self,
+        q: &[f32],
+        k: usize,
+        options: &QueryOptions,
+        scratch: &mut ServiceScratch,
+    ) -> SearchOutput {
         let t0 = std::time::Instant::now();
-        let mut params = self.params;
-        params.k = k.min(params.l);
+        let (params, features) = self.effective(k, options);
         let ServiceScratch { adt, walk } = scratch;
-        self.build_adt_into(q, adt);
         let mut out = SearchOutput::default();
-        proxima_search_into(
-            &self.context(),
-            adt,
-            q,
-            &params,
-            self.features,
-            false,
-            walk,
-            &mut out,
-        );
+        match options.mode {
+            SearchMode::Accurate => {
+                accurate_beam_search_into(
+                    &self.context(),
+                    q,
+                    params.k,
+                    params.l,
+                    false,
+                    walk,
+                    &mut out,
+                );
+            }
+            SearchMode::PqAdt => {
+                self.build_adt_into(q, adt);
+                let rerank = options.rerank.unwrap_or(params.l);
+                pq_beam_search_into(
+                    &self.context(),
+                    adt,
+                    q,
+                    params.k,
+                    params.l,
+                    rerank,
+                    false,
+                    walk,
+                    &mut out,
+                );
+            }
+            SearchMode::Hybrid => {
+                self.build_adt_into(q, adt);
+                proxima_search_into(
+                    &self.context(),
+                    adt,
+                    q,
+                    &params,
+                    features,
+                    false,
+                    walk,
+                    &mut out,
+                );
+            }
+        }
         self.record(&out.stats, t0.elapsed());
         out
     }
@@ -222,11 +381,23 @@ impl SearchService {
         out
     }
 
+    /// Answer a whole batch with service-default options (see
+    /// [`Self::search_batch_with_options`]).
+    pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<SearchOutput> {
+        self.search_batch_with_options(queries, k, &QueryOptions::default())
+    }
+
     /// Answer a whole batch by fanning the queries across a fixed pool of
     /// [`Self::workers`] threads, each holding its own pooled scratch for
-    /// the duration (per-worker scratch, per-query zero-alloc). Results
-    /// come back in input order.
-    pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<SearchOutput> {
+    /// the duration (per-worker scratch, per-query zero-alloc). All
+    /// queries share the request's [`QueryOptions`]; results come back in
+    /// input order.
+    pub fn search_batch_with_options(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        options: &QueryOptions,
+    ) -> Vec<SearchOutput> {
         if queries.is_empty() {
             return Vec::new();
         }
@@ -235,7 +406,7 @@ impl SearchService {
             let mut scratch = self.scratch.checkout();
             return queries
                 .iter()
-                .map(|q| self.search_with_scratch(q, k, &mut scratch))
+                .map(|q| self.search_with_options(q, k, options, &mut scratch))
                 .collect();
         }
         let chunk = queries.len().div_ceil(workers);
@@ -246,7 +417,7 @@ impl SearchService {
                     scope.spawn(move || {
                         let mut scratch = self.scratch.checkout();
                         part.iter()
-                            .map(|q| self.search_with_scratch(q, k, &mut scratch))
+                            .map(|q| self.search_with_options(q, k, options, &mut scratch))
                             .collect::<Vec<_>>()
                     })
                 })
@@ -285,6 +456,11 @@ impl SearchService {
         }
     }
 }
+
+/// Hard cap on per-request candidate-list capacity (`l_override`): the
+/// list reserves L slots up front, so this bounds the scratch allocation
+/// one request can demand. Beam widths beyond this are never useful.
+pub const MAX_L_OVERRIDE: usize = 1 << 20;
 
 /// Default `search_batch` width: one worker per available core.
 fn default_workers() -> usize {
@@ -373,6 +549,143 @@ mod tests {
         assert_eq!(
             svc.stats.queries.load(Ordering::Relaxed),
             2 * ds.n_queries() as u64
+        );
+    }
+
+    #[test]
+    fn query_contract_matches_search() {
+        let (ds, svc) = service();
+        let q = ds.queries.row(0);
+        let direct = svc.search(q, 10);
+        let resp = svc.query(&QueryRequest::single(q, 10)).unwrap();
+        assert_eq!(resp.results.len(), 1);
+        assert_eq!(resp.results[0].ids, direct.ids);
+        assert_eq!(resp.results[0].dists, direct.dists);
+        assert!(resp.stats.is_none(), "stats are opt-in");
+
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
+        let batch = svc.query(&QueryRequest::batch(&queries, 10)).unwrap();
+        let serial = svc.search_batch(&queries, 10);
+        assert_eq!(batch.results.len(), serial.len());
+        for (b, s) in batch.results.iter().zip(&serial) {
+            assert_eq!(b.ids, s.ids);
+        }
+    }
+
+    #[test]
+    fn query_validates_at_the_boundary() {
+        let (ds, svc) = service();
+        let q = ds.queries.row(0);
+
+        let wrong_dim = vec![1.0f32; ds.dim() + 3];
+        let e = svc
+            .query(&QueryRequest::batch(&[q, &wrong_dim], 10))
+            .unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::DimMismatch);
+        assert!(e.message.contains("query 1"), "{}", e.message);
+
+        let e = svc
+            .query(&QueryRequest {
+                vectors: vec![],
+                k: 10,
+                options: QueryOptions::default(),
+            })
+            .unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+
+        let e = svc.query(&QueryRequest::single(q, 0)).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+
+        // An oversized batch is rejected before any search work.
+        let big = QueryRequest {
+            vectors: vec![vec![0.0f32; ds.dim()]; crate::api::MAX_BATCH_QUERIES + 1],
+            k: 10,
+            options: QueryOptions::default(),
+        };
+        let e = svc.query(&big).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+
+        // An absurd l_override cannot reach the list allocator.
+        let e = svc
+            .query(&QueryRequest::single(q, 10).with_options(QueryOptions {
+                l_override: Some(4_000_000_000),
+                ..Default::default()
+            }))
+            .unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+
+        // Non-finite values cannot reach the distance kernels.
+        let mut nan_q = q.to_vec();
+        nan_q[0] = f32::NAN;
+        let e = svc.query(&QueryRequest::single(&nan_q, 10)).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+        let mut inf_q = q.to_vec();
+        inf_q[1] = f32::INFINITY;
+        let e = svc.query(&QueryRequest::single(&inf_q, 10)).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn options_change_search_behavior() {
+        let (ds, svc) = service();
+        let q = ds.queries.row(0);
+        let stats_for = |options: QueryOptions| {
+            let req = QueryRequest::single(q, 10).with_options(QueryOptions {
+                want_stats: true,
+                ..options
+            });
+            svc.query(&req).unwrap().stats.unwrap()
+        };
+
+        // Accurate mode never touches PQ; the default (Hybrid) lives on it.
+        let acc = stats_for(QueryOptions {
+            mode: SearchMode::Accurate,
+            ..Default::default()
+        });
+        assert_eq!(acc.pq_dists, 0);
+        assert!(acc.exact_dists > 0);
+        let hyb = stats_for(QueryOptions::default());
+        assert!(hyb.pq_dists > 0);
+
+        // A larger candidate list does strictly more PQ work.
+        let small = stats_for(QueryOptions {
+            l_override: Some(20),
+            ..Default::default()
+        });
+        let large = stats_for(QueryOptions {
+            l_override: Some(80),
+            ..Default::default()
+        });
+        assert!(
+            large.pq_dists > small.pq_dists,
+            "l=80 pq {} vs l=20 pq {}",
+            large.pq_dists,
+            small.pq_dists
+        );
+
+        // Disabling early termination via tau=0 never terminates early.
+        let noet = stats_for(QueryOptions {
+            early_term_tau: Some(0),
+            ..Default::default()
+        });
+        assert!(!noet.early_terminated);
+
+        // PqAdt honors the rerank depth knob.
+        let shallow = stats_for(QueryOptions {
+            mode: SearchMode::PqAdt,
+            rerank: Some(10),
+            ..Default::default()
+        });
+        let deep = stats_for(QueryOptions {
+            mode: SearchMode::PqAdt,
+            rerank: Some(60),
+            ..Default::default()
+        });
+        assert!(
+            deep.exact_dists > shallow.exact_dists,
+            "rerank=60 exact {} vs rerank=10 exact {}",
+            deep.exact_dists,
+            shallow.exact_dists
         );
     }
 

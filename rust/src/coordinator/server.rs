@@ -1,24 +1,51 @@
 //! TCP front end: newline-delimited JSON requests/responses over a local
-//! socket, one handler thread per connection feeding the shared batcher.
+//! socket, one handler thread per connection. Single-query requests feed
+//! the shared dynamic batcher (cross-connection coalescing); multi-query
+//! v2 batches go straight to [`SearchService::search_batch`]'s worker
+//! fan-out — one round-trip, N answers.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol v2 (one JSON object per line; codecs in [`crate::api::wire`]):
 //! ```text
-//! -> {"op":"search","query":[f32...],"k":10}
-//! <- {"ids":[...],"dists":[...],"latency_us":123}
+//! -> {"v":2,"op":"search","queries":[[f32...],[f32...],...],"k":10,
+//!     "options":{"mode":"hybrid","l_override":200,"early_term_tau":3,
+//!                "rerank":50,"want_stats":true}}
+//! <- {"v":2,"results":[{"ids":[...],"dists":[...]},...],
+//!     "server_latency_us":123,"stats":{...}}
 //! -> {"op":"stats"}
 //! <- {"queries":N,"early_terminated":E,"mean_latency_us":...}
 //! -> {"op":"shutdown"}
+//! <- {"ok":true}
 //! ```
+//! Every `options` field is optional (defaults in [`crate::api`] module
+//! docs). A request without `"v"` is a v1 request — the compatibility
+//! path, answered in the original single-query shape:
+//! ```text
+//! -> {"op":"search","query":[f32...],"k":10}
+//! <- {"ids":[...],"dists":[...],"latency_us":123}
+//! ```
+//! Any failure (malformed JSON, unknown op, dimension mismatch, ...)
+//! produces an error line and the connection KEEPS SERVING — a bad
+//! request never tears down its neighbors on the same socket:
+//! ```text
+//! <- {"error":{"code":"bad_request"|"dim_mismatch"|"closed"|"internal",
+//!              "message":"..."}}
+//! ```
+//! Failures on the v1 compat path (versionless lines) keep the legacy
+//! string shape (`{"error":"..."}`); lines whose version is unknowable
+//! (malformed JSON, non-numeric `v`) get the structured shape above.
 
 use super::batcher::BatcherHandle;
 use super::SearchService;
 use crate::anyhow;
+use crate::api::wire::{self, WireRequest};
+use crate::api::{ApiError, NeighborList, QueryOptions, QueryRequest, QueryResponse};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Running server handle.
 pub struct Server {
@@ -80,6 +107,10 @@ impl Server {
     }
 }
 
+/// Serve one connection. Only I/O failures end the loop; every
+/// request-level failure is answered with a structured error line so the
+/// connection survives bad input (a malformed line used to kill the whole
+/// connection silently).
 fn handle_conn(
     stream: TcpStream,
     service: Arc<SearchService>,
@@ -93,57 +124,123 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let req = json::parse(&line).map_err(|e| anyhow!("bad request: {e}"))?;
-        let op = req.get("op").and_then(Json::as_str).unwrap_or("search");
-        let resp = match op {
-            "search" => {
-                let t0 = std::time::Instant::now();
-                let query: Vec<f32> = req
-                    .get("query")
-                    .and_then(Json::as_arr)
-                    .ok_or_else(|| anyhow!("missing query"))?
-                    .iter()
-                    .filter_map(|x| x.as_f64())
-                    .map(|x| x as f32)
-                    .collect();
-                let k = req.get("k").and_then(Json::as_usize).unwrap_or(10);
-                match batcher.query(query, k) {
-                    Some(out) => Json::obj(vec![
-                        ("ids", Json::arr_num(out.ids.iter().map(|&i| i as f64))),
-                        ("dists", Json::arr_num(out.dists.iter().map(|&d| d as f64))),
-                        (
-                            "latency_us",
-                            Json::num(t0.elapsed().as_micros() as f64),
-                        ),
-                    ]),
-                    None => Json::obj(vec![("error", Json::str("batcher closed"))]),
+        let resp = match json::parse(&line) {
+            Err(e) => wire::encode_error(&ApiError::bad_request(format!("malformed JSON: {e}"))),
+            Ok(req) => match wire::decode_request(&req) {
+                // Shape decode failures for the request's version too: a
+                // versionless (or explicit `"v":1`) line with an unknown
+                // op used to get the legacy string error, and must
+                // still. Any other `v` — including malformed values like
+                // 1.5 — gets the structured shape (version 0 here).
+                Err(e) => {
+                    let version = match req.get("v") {
+                        None => 1,
+                        Some(v) if v.as_f64() == Some(1.0) => 1,
+                        Some(_) => 0,
+                    };
+                    error_line(version, &e)
                 }
-            }
-            "stats" => Json::obj(vec![
-                (
-                    "queries",
-                    Json::num(service.stats.queries.load(Ordering::Relaxed) as f64),
-                ),
-                (
-                    "early_terminated",
-                    Json::num(service.stats.early_terminated.load(Ordering::Relaxed) as f64),
-                ),
-                ("mean_latency_us", Json::num(service.mean_latency_us())),
-                ("dataset", Json::str(service.name.clone())),
-            ]),
-            "shutdown" => {
-                shutdown.store(true, Ordering::Relaxed);
-                writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string_compact())?;
-                break;
-            }
-            other => Json::obj(vec![("error", Json::str(format!("unknown op {other}")))]),
+                Ok(WireRequest::Stats) => stats_response(&service),
+                Ok(WireRequest::Shutdown) => {
+                    shutdown.store(true, Ordering::Relaxed);
+                    writeln!(
+                        writer,
+                        "{}",
+                        Json::obj(vec![("ok", Json::Bool(true))]).to_string_compact()
+                    )?;
+                    break;
+                }
+                Ok(WireRequest::Search { version, request }) => {
+                    answer_search(&service, &batcher, version, request)
+                }
+            },
         };
         writeln!(writer, "{}", resp.to_string_compact())?;
     }
     Ok(())
 }
 
-/// Minimal blocking client for examples/tests.
+/// Dispatch one search request: validate at the boundary, route
+/// single-query requests through the dynamic batcher (options ride
+/// along), hand multi-query batches to the service's worker fan-out, and
+/// shape the response for the request's protocol version.
+fn answer_search(
+    service: &SearchService,
+    batcher: &BatcherHandle,
+    version: u32,
+    request: QueryRequest,
+) -> Json {
+    let t0 = Instant::now();
+    if request.vectors.len() > 1 {
+        // Multi-query batch: one round-trip, answered by the worker pool
+        // (`service.query` validates internally).
+        return match service.query(&request) {
+            Ok(resp) => wire::encode_response_v2(&resp),
+            Err(e) => error_line(version, &e),
+        };
+    }
+    // Single query: validate here (the batcher has no error channel),
+    // then coalesce with other connections.
+    if let Err(e) = service.validate(&request) {
+        return error_line(version, &e);
+    }
+    let QueryRequest { vectors, k, options } = request;
+    let query = vectors.into_iter().next().expect("validated non-empty");
+    match batcher.query_with(query, k, options) {
+        None => error_line(version, &ApiError::closed("batcher closed")),
+        Some(out) => {
+            let latency_us = t0.elapsed().as_micros() as u64;
+            if version == 1 {
+                wire::encode_response_v1(
+                    &NeighborList {
+                        ids: out.ids,
+                        dists: out.dists,
+                    },
+                    latency_us,
+                )
+            } else {
+                wire::encode_response_v2(&QueryResponse::from_outputs(
+                    vec![out],
+                    options.want_stats,
+                    latency_us,
+                ))
+            }
+        }
+    }
+}
+
+/// Shape an error for the request's protocol version: v1 clients predate
+/// the structured object and expect the legacy `{"error":"..."}` string
+/// (the compat contract); v2 gets `{"error":{"code":..,"message":..}}`.
+/// Lines whose version is unknowable (malformed JSON, non-numeric `v`)
+/// are answered structured — the old server killed the connection on
+/// those, so no working v1 client depends on their shape.
+fn error_line(version: u32, e: &ApiError) -> Json {
+    if version == 1 {
+        Json::obj(vec![("error", Json::str(e.to_string()))])
+    } else {
+        wire::encode_error(e)
+    }
+}
+
+fn stats_response(service: &SearchService) -> Json {
+    Json::obj(vec![
+        (
+            "queries",
+            Json::num(service.stats.queries.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "early_terminated",
+            Json::num(service.stats.early_terminated.load(Ordering::Relaxed) as f64),
+        ),
+        ("mean_latency_us", Json::num(service.mean_latency_us())),
+        ("dataset", Json::str(service.name.clone())),
+    ])
+}
+
+/// Minimal blocking client for examples/tests. [`Client::search`] speaks
+/// the v1 compat path; [`Client::search_batch`] /
+/// [`Client::search_with_options`] speak v2.
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
@@ -158,21 +255,23 @@ impl Client {
     }
 
     fn roundtrip(&mut self, req: Json) -> Result<Json> {
-        writeln!(self.stream, "{}", req.to_string_compact())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        json::parse(&line).map_err(|e| anyhow!("bad response: {e}"))
+        self.send_raw(&req.to_string_compact())
     }
 
-    /// Search RPC; returns (ids, dists, server latency µs).
+    /// Send one raw line and read one response line (the escape hatch for
+    /// protocol tests — e.g. deliberately malformed input).
+    pub fn send_raw(&mut self, line: &str) -> Result<Json> {
+        writeln!(self.stream, "{line}")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        json::parse(&resp).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// v1 single-query search RPC (compat path); returns
+    /// (ids, dists, server latency µs).
     pub fn search(&mut self, query: &[f32], k: usize) -> Result<(Vec<u32>, Vec<f32>, f64)> {
-        let req = Json::obj(vec![
-            ("op", Json::str("search")),
-            ("query", Json::arr_num(query.iter().map(|&x| x as f64))),
-            ("k", Json::num(k as f64)),
-        ]);
-        let resp = self.roundtrip(req)?;
-        if let Some(err) = resp.get("error").and_then(Json::as_str) {
+        let resp = self.roundtrip(wire::encode_request_v1(query, k))?;
+        if let Some(err) = wire::decode_error(&resp) {
             return Err(anyhow!("server error: {err}"));
         }
         let ids = resp
@@ -193,6 +292,32 @@ impl Client {
             .collect();
         let lat = resp.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0);
         Ok((ids, dists, lat))
+    }
+
+    /// v2 multi-query search RPC: N queries in ONE round-trip, one
+    /// [`NeighborList`] per query, under shared per-request options.
+    pub fn search_batch(
+        &mut self,
+        queries: &[&[f32]],
+        k: usize,
+        options: &QueryOptions,
+    ) -> Result<QueryResponse> {
+        let req = QueryRequest::batch(queries, k).with_options(*options);
+        let resp = self.roundtrip(wire::encode_request_v2(&req))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        wire::decode_response_v2(&resp).map_err(|e| anyhow!("bad response: {e}"))
+    }
+
+    /// v2 single-query search with per-request options.
+    pub fn search_with_options(
+        &mut self,
+        query: &[f32],
+        k: usize,
+        options: &QueryOptions,
+    ) -> Result<QueryResponse> {
+        self.search_batch(&[query], k, options)
     }
 
     pub fn stats(&mut self) -> Result<Json> {
@@ -242,13 +367,30 @@ mod tests {
         let addr = server.addr;
 
         let mut client = Client::connect(addr).unwrap();
+        // v1 compat path.
         let (ids, dists, lat) = client.search(ds.queries.row(0), 5).unwrap();
         assert_eq!(ids.len(), 5);
         assert_eq!(dists.len(), 5);
         assert!(lat >= 0.0);
 
+        // v2 batch path: one round-trip, three answers.
+        let queries: Vec<&[f32]> = (0..3).map(|i| ds.queries.row(i)).collect();
+        let resp = client
+            .search_batch(
+                &queries,
+                5,
+                &QueryOptions {
+                    want_stats: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(resp.results.len(), 3);
+        assert_eq!(resp.results[0].ids, ids, "same query, same answer");
+        assert!(resp.stats.unwrap().pq_dists > 0);
+
         let stats = client.stats().unwrap();
-        assert_eq!(stats.get("queries").and_then(Json::as_usize), Some(1));
+        assert_eq!(stats.get("queries").and_then(Json::as_usize), Some(4));
 
         client.shutdown().unwrap();
         server.stop();

@@ -1,14 +1,20 @@
 //! Sharded multi-accelerator serving (§IV-E "scalable to support different
 //! ANNS dataset scales"): the base set is partitioned across `S` shards,
 //! each with its own graph/PQ index (one per simulated accelerator); a
-//! query fans out to every shard and the coordinator merges the top-k by
-//! accurate distance — the standard scale-out pattern for datasets beyond
-//! one device's 54 GB.
+//! request fans out to every shard and the coordinator merges each
+//! query's top-k by accurate distance — the standard scale-out pattern
+//! for datasets beyond one device's 54 GB.
+//!
+//! The fan-out speaks the typed query API: [`ShardedService::query`]
+//! forwards the whole [`QueryRequest`] (options included) to every shard
+//! and merges per query, so per-request knobs behave identically on one
+//! shard or fifty.
 
 use super::SearchService;
+use crate::api::{ApiError, NeighborList, QueryRequest, QueryResponse};
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
-use crate::search::SearchOutput;
+use crate::search::{SearchOutput, SearchStats};
 
 /// A sharded index: per-shard services plus the id mapping back to the
 /// global space.
@@ -31,6 +37,15 @@ impl ShardedService {
         assert!(n_shards >= 1);
         let n = ds.n_base();
         let per = n.div_ceil(n_shards);
+        // Split the machine's worker budget across the shards: the
+        // fan-out runs all shards concurrently, and each shard's batch
+        // path spawns up to `workers` threads — an undivided budget
+        // would put S x cores compute threads on cores CPUs.
+        let per_shard_workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .div_ceil(n_shards)
+            .max(1);
         let mut shards = Vec::with_capacity(n_shards);
         let mut shard_base = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
@@ -39,7 +54,8 @@ impl ShardedService {
             if lo >= hi {
                 break;
             }
-            let slice = VectorSet::new(ds.dim(), ds.base.data[lo * ds.dim()..hi * ds.dim()].to_vec());
+            let slice =
+                VectorSet::new(ds.dim(), ds.base.data[lo * ds.dim()..hi * ds.dim()].to_vec());
             let sub = Dataset {
                 name: format!("{}-shard{s}", ds.name),
                 metric: ds.metric,
@@ -47,7 +63,9 @@ impl ShardedService {
                 queries: VectorSet::zeros(0, ds.dim()),
             };
             shard_base.push(lo as u32);
-            shards.push(SearchService::build(&sub, gp, pq, params, false));
+            shards.push(
+                SearchService::build(&sub, gp, pq, params, false).with_workers(per_shard_workers),
+            );
         }
         ShardedService { shards, shard_base }
     }
@@ -56,21 +74,34 @@ impl ShardedService {
         self.shards.len()
     }
 
-    /// Fan out to all shards in parallel (one scoped thread per shard,
-    /// each shard drawing from its own scratch pool), then merge by
-    /// reported (accurate) distance. Thread spawn costs ~tens of µs per
-    /// shard — negligible against production per-shard search times, but
-    /// a persistent pool is the planned next step (see ROADMAP) for
-    /// many-shard, short-query workloads.
-    pub fn search(&self, q: &[f32], k: usize) -> SearchOutput {
-        let per_shard: Vec<SearchOutput> = if self.shards.len() == 1 {
-            vec![self.shards[0].search(q, k)]
+    /// Fan a whole [`QueryRequest`] out to all shards in parallel (one
+    /// scoped thread per shard, each shard drawing from its own scratch
+    /// pool and worker budget), then merge each query's top-k by reported
+    /// (accurate) distance, mapping local ids back to the global space.
+    /// Thread spawn costs ~tens of µs per shard — negligible against
+    /// production per-shard search times, but a persistent pool is the
+    /// planned next step (see ROADMAP) for many-shard, short-query
+    /// workloads.
+    pub fn query(&self, req: &QueryRequest) -> Result<QueryResponse, ApiError> {
+        let t0 = std::time::Instant::now();
+        let first = self
+            .shards
+            .first()
+            .ok_or_else(|| ApiError::internal("sharded service has no shards"))?;
+        // Validate ONCE at the fan-out (shards share dim, and the
+        // request-size caps are constants all shards agree on), then
+        // dispatch through the pre-validated entry point so the full
+        // per-vector scan is not repeated on every shard.
+        first.validate(req)?;
+
+        let responses: Vec<QueryResponse> = if self.shards.len() == 1 {
+            vec![first.query_prevalidated(req)]
         } else {
             std::thread::scope(|scope| {
                 let handles: Vec<_> = self
                     .shards
                     .iter()
-                    .map(|svc| scope.spawn(move || svc.search(q, k)))
+                    .map(|svc| scope.spawn(move || svc.query_prevalidated(req)))
                     .collect();
                 handles
                     .into_iter()
@@ -79,20 +110,56 @@ impl ShardedService {
             })
         };
 
-        let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
-        let mut stats = crate::search::SearchStats::default();
-        for (s, out) in per_shard.iter().enumerate() {
-            stats.add(&out.stats);
-            for (d, id) in out.dists.iter().zip(&out.ids) {
-                merged.push((*d, self.shard_base[s] + id));
+        let n_queries = req.vectors.len();
+        let mut results = Vec::with_capacity(n_queries);
+        let mut merged: Vec<(f32, u32)> = Vec::with_capacity(req.k * self.shards.len());
+        for qi in 0..n_queries {
+            merged.clear();
+            for (s, resp) in responses.iter().enumerate() {
+                let nl = &resp.results[qi];
+                for (d, id) in nl.dists.iter().zip(&nl.ids) {
+                    merged.push((*d, self.shard_base[s] + id));
+                }
             }
+            merged.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1)));
+            merged.truncate(req.k);
+            results.push(NeighborList {
+                ids: merged.iter().map(|&(_, v)| v).collect(),
+                dists: merged.iter().map(|&(d, _)| d).collect(),
+            });
         }
-        merged.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        merged.truncate(k);
-        SearchOutput {
-            ids: merged.iter().map(|&(_, v)| v).collect(),
-            dists: merged.iter().map(|&(d, _)| d).collect(),
+
+        let stats = req.options.want_stats.then(|| {
+            let mut s = SearchStats::default();
+            for resp in &responses {
+                if let Some(rs) = &resp.stats {
+                    s.add(rs);
+                }
+            }
+            s
+        });
+        Ok(QueryResponse {
+            results,
             stats,
+            server_latency_us: t0.elapsed().as_micros() as u64,
+        })
+    }
+
+    /// One query with default options (a convenience over
+    /// [`Self::query`], kept for the figure harnesses and examples).
+    pub fn search(&self, q: &[f32], k: usize) -> SearchOutput {
+        let mut req = QueryRequest::single(q, k);
+        req.options.want_stats = true;
+        let resp = self.query(&req).expect("sharded query failed");
+        let nl = resp
+            .results
+            .into_iter()
+            .next()
+            .expect("one query, one result");
+        SearchOutput {
+            ids: nl.ids,
+            dists: nl.dists,
+            stats: resp.stats.unwrap_or_default(),
             trace: None,
         }
     }
@@ -165,6 +232,39 @@ mod tests {
             let want = ds.metric.distance(ds.queries.row(0), ds.base.row(*id as usize));
             assert!((d - want).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn batched_query_contract_fans_out_with_options() {
+        use crate::api::{QueryOptions, QueryRequest, SearchMode};
+        let (ds, sh) = build_sharded(3);
+        let queries: Vec<&[f32]> = (0..4).map(|qi| ds.queries.row(qi)).collect();
+        let req = QueryRequest::batch(&queries, 10).with_options(QueryOptions {
+            want_stats: true,
+            ..Default::default()
+        });
+        let resp = sh.query(&req).unwrap();
+        assert_eq!(resp.results.len(), 4);
+        for (qi, nl) in resp.results.iter().enumerate() {
+            let single = sh.search(ds.queries.row(qi), 10);
+            assert_eq!(nl.ids, single.ids, "query {qi}: batch vs single fan-out");
+        }
+        assert!(resp.stats.unwrap().pq_dists > 0);
+
+        // Accurate mode reaches every shard: no PQ work anywhere.
+        let req = QueryRequest::batch(&queries, 10).with_options(QueryOptions {
+            mode: SearchMode::Accurate,
+            want_stats: true,
+            ..Default::default()
+        });
+        let stats = sh.query(&req).unwrap().stats.unwrap();
+        assert_eq!(stats.pq_dists, 0);
+        assert!(stats.exact_dists > 0);
+
+        // Dimension mismatch is caught at the fan-out boundary.
+        let short = vec![0.0f32; ds.dim() - 1];
+        let e = sh.query(&QueryRequest::single(&short, 5)).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::DimMismatch);
     }
 
     #[test]

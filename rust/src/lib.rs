@@ -20,11 +20,16 @@
 //!   from `artifacts/` on the request path (Python is build-time only;
 //!   gated behind the off-by-default `xla` cargo feature so the default
 //!   build needs no compiled artifacts);
+//! * the **typed, versioned query API** (`api::QueryRequest` /
+//!   `QueryResponse` / `QueryOptions` / `ApiError`) — the single contract
+//!   every entry point speaks, from in-process `SearchService::query`
+//!   through the batcher and shard fan-out to the v2 multi-query TCP wire;
 //! * a thread-based **coordinator** (router, batcher, TCP server, sharded
 //!   scale-out, and a `search_batch` API over a fixed worker pool with
 //!   per-worker scratch);
 //! * the figure/table harnesses regenerating the paper's evaluation.
 
+pub mod api;
 pub mod config;
 pub mod dataset;
 pub mod distance;

@@ -11,7 +11,11 @@
 //! ```
 //!
 //! Config file via `--config path` plus `--set key=value` overrides
-//! (see `config::Config`).
+//! (see `config::Config`). The `search` subcommand also honors the
+//! `[api]` section (`api.mode`, `api.l_override`, `api.early_term_tau`,
+//! `api.rerank` — see `api::QueryOptions::from_config`), so e.g.
+//! `--set api.mode=accurate` runs the HNSW-like baseline through the
+//! same typed request path the server uses.
 
 use proxima::config::{Config, GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
@@ -124,11 +128,25 @@ fn cmd_build(cfg: &Config) -> Result<()> {
 fn cmd_search(cfg: &Config) -> Result<()> {
     let (ds, svc) = service_from_cfg(cfg)?;
     let k = cfg.get_usize("k", 10);
+    let opts = proxima::api::QueryOptions::from_config(cfg);
+    // Run the config-derived options through the same boundary checks
+    // the server applies, so a bad `[api]` section fails loudly instead
+    // of silently returning empty/garbage results.
+    if ds.n_queries() > 0 {
+        svc.validate(
+            &proxima::api::QueryRequest::single(ds.queries.row(0), k).with_options(opts),
+        )
+        .map_err(|e| proxima::anyhow!("invalid [api] options: {e}"))?;
+    }
     let gt = proxima::dataset::ground_truth::brute_force(&ds, k);
     let t0 = std::time::Instant::now();
     let mut results = Vec::new();
+    let mut scratch = svc.checkout_scratch();
     for qi in 0..ds.n_queries() {
-        results.push(svc.search(ds.queries.row(qi), k).ids);
+        results.push(
+            svc.search_with_options(ds.queries.row(qi), k, &opts, &mut scratch)
+                .ids,
+        );
     }
     let secs = t0.elapsed().as_secs_f64();
     let recall = proxima::dataset::mean_recall(&results, &gt, k);

@@ -24,6 +24,11 @@ pub mod kernel;
 pub mod proxima;
 
 /// Counters accumulated during one query (or summed over a batch).
+///
+/// This is also the stats payload of the typed query API: a
+/// [`crate::api::QueryRequest`] with `want_stats` set gets the batch's
+/// aggregate back in [`crate::api::QueryResponse::stats`], and the same
+/// counters cross the TCP wire via [`crate::api::wire::encode_stats`].
 #[derive(Clone, Debug, Default)]
 pub struct SearchStats {
     /// PQ (approximate) distance computations.

@@ -1,0 +1,243 @@
+//! Integration tests for the typed, versioned query API: the ONE
+//! `QueryRequest`/`QueryResponse` contract from in-process calls to the
+//! batch RPC wire (ISSUE 2 acceptance criteria live here).
+
+use proxima::api::{QueryOptions, QueryRequest, SearchMode};
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::{Client, Server};
+use proxima::coordinator::SearchService;
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::Dataset;
+use proxima::distance::Metric;
+use std::sync::Arc;
+
+fn service() -> (Dataset, Arc<SearchService>) {
+    let ds = tiny_uniform(400, 12, Metric::L2, 7);
+    let svc = Arc::new(SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 7,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 6,
+        },
+        SearchParams {
+            l: 80,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    ));
+    (ds, svc)
+}
+
+fn serve(svc: Arc<SearchService>) -> Server {
+    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default(), 2);
+    Server::start(svc, handle, 0).unwrap()
+}
+
+/// Acceptance criterion: one TCP round-trip carrying N queries returns N
+/// `NeighborList`s, matching N serial v1 requests result-for-result.
+#[test]
+fn batch_of_8_over_the_wire_matches_8_serial_v1_requests() {
+    let (ds, svc) = service();
+    let server = serve(svc);
+    let mut client = Client::connect(server.addr).unwrap();
+
+    let queries: Vec<&[f32]> = (0..8).map(|qi| ds.queries.row(qi)).collect();
+    let serial: Vec<(Vec<u32>, Vec<f32>)> = queries
+        .iter()
+        .map(|q| {
+            let (ids, dists, _) = client.search(q, 10).unwrap();
+            (ids, dists)
+        })
+        .collect();
+
+    let resp = client
+        .search_batch(&queries, 10, &QueryOptions::default())
+        .unwrap();
+    assert_eq!(resp.results.len(), 8, "8 queries in, 8 NeighborLists out");
+    for (qi, (nl, (ids, dists))) in resp.results.iter().zip(&serial).enumerate() {
+        assert_eq!(&nl.ids, ids, "query {qi}: batch vs serial ids");
+        assert_eq!(&nl.dists, dists, "query {qi}: batch vs serial dists");
+    }
+
+    client.shutdown().unwrap();
+    server.stop();
+}
+
+/// Acceptance criterion: per-request `mode` / `l_override` demonstrably
+/// change search behavior (stats differ) through the same `QueryRequest`
+/// path in-process and over TCP.
+#[test]
+fn per_request_options_change_behavior_in_process_and_over_tcp() {
+    let (ds, svc) = service();
+    let queries: Vec<&[f32]> = (0..4).map(|qi| ds.queries.row(qi)).collect();
+    let small_l = QueryOptions {
+        l_override: Some(20),
+        want_stats: true,
+        ..Default::default()
+    };
+    let large_l = QueryOptions {
+        l_override: Some(80),
+        want_stats: true,
+        ..Default::default()
+    };
+    let accurate = QueryOptions {
+        mode: SearchMode::Accurate,
+        want_stats: true,
+        ..Default::default()
+    };
+
+    // In-process through the typed contract.
+    let q = |o: QueryOptions| {
+        svc.query(&QueryRequest::batch(&queries, 10).with_options(o))
+            .unwrap()
+    };
+    let (ip_small, ip_large, ip_acc) = (q(small_l), q(large_l), q(accurate));
+    assert!(
+        ip_large.stats.as_ref().unwrap().pq_dists > ip_small.stats.as_ref().unwrap().pq_dists,
+        "l_override must change PQ work in-process"
+    );
+    assert_eq!(ip_acc.stats.as_ref().unwrap().pq_dists, 0);
+    assert!(ip_acc.stats.as_ref().unwrap().exact_dists > 0);
+
+    // The same requests over TCP: same options, same behavior shift, and
+    // identical results to the in-process path.
+    let server = serve(svc);
+    let mut client = Client::connect(server.addr).unwrap();
+    let wire_small = client.search_batch(&queries, 10, &small_l).unwrap();
+    let wire_large = client.search_batch(&queries, 10, &large_l).unwrap();
+    let wire_acc = client.search_batch(&queries, 10, &accurate).unwrap();
+    assert!(
+        wire_large.stats.as_ref().unwrap().pq_dists > wire_small.stats.as_ref().unwrap().pq_dists,
+        "l_override must change PQ work over the wire"
+    );
+    assert_eq!(wire_acc.stats.as_ref().unwrap().pq_dists, 0);
+    for (a, b) in ip_small.results.iter().zip(&wire_small.results) {
+        assert_eq!(a.ids, b.ids, "in-process and wire must answer identically");
+    }
+    for (a, b) in ip_acc.results.iter().zip(&wire_acc.results) {
+        assert_eq!(a.ids, b.ids);
+    }
+
+    // Single-query v2 (batcher path) honors options too.
+    let one = client
+        .search_with_options(ds.queries.row(0), 10, &accurate)
+        .unwrap();
+    assert_eq!(one.results.len(), 1);
+    assert_eq!(one.stats.as_ref().unwrap().pq_dists, 0);
+
+    client.shutdown().unwrap();
+    server.stop();
+}
+
+/// Satellite: a v1 request (no "v" field) is still answered in the v1
+/// response shape.
+#[test]
+fn v1_compat_request_still_answered() {
+    let (ds, svc) = service();
+    let server = serve(svc.clone());
+    let mut client = Client::connect(server.addr).unwrap();
+
+    // Hand-rolled v1 line, independent of the Client encoder.
+    let q: Vec<String> = ds.queries.row(0).iter().map(|x| x.to_string()).collect();
+    let line = format!(r#"{{"op":"search","query":[{}],"k":5}}"#, q.join(","));
+    let resp = client.send_raw(&line).unwrap();
+    assert!(resp.get("error").is_none(), "v1 request must succeed");
+    let ids = resp.get("ids").unwrap();
+    assert_eq!(ids.as_arr().unwrap().len(), 5);
+    assert!(resp.get("latency_us").is_some());
+    assert!(
+        resp.get("results").is_none(),
+        "v1 response keeps the flat single-query shape"
+    );
+
+    // And the Client's v1 helper agrees with the in-process answer.
+    let (ids, _, _) = client.search(ds.queries.row(0), 5).unwrap();
+    let direct = svc.search(ds.queries.row(0), 5);
+    assert_eq!(ids, direct.ids);
+
+    client.shutdown().unwrap();
+    server.stop();
+}
+
+/// Satellite: bad JSON, dimension mismatches and unknown ops are answered
+/// with structured errors and the connection KEEPS SERVING.
+#[test]
+fn error_paths_are_structured_and_keep_the_connection_alive() {
+    let (ds, svc) = service();
+    let server = serve(svc);
+    let mut client = Client::connect(server.addr).unwrap();
+
+    let code_of = |resp: &proxima::util::json::Json| {
+        resp.get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(proxima::util::json::Json::as_str)
+            .map(str::to_string)
+            .expect("structured error line")
+    };
+
+    // Malformed JSON used to kill the whole connection; now it's a
+    // structured error line.
+    let resp = client.send_raw("{this is not json").unwrap();
+    assert_eq!(code_of(&resp), "bad_request");
+
+    // Unknown op on a versionless (= v1) line keeps the legacy string
+    // error shape, exactly like the old server.
+    let resp = client.send_raw(r#"{"op":"frobnicate"}"#).unwrap();
+    let legacy = resp
+        .get("error")
+        .and_then(proxima::util::json::Json::as_str)
+        .expect("v1 decode errors keep the legacy string shape");
+    assert!(legacy.starts_with("bad_request"), "{legacy}");
+
+    // The same unknown op on a v2 line gets the structured shape.
+    let resp = client.send_raw(r#"{"v":2,"op":"frobnicate"}"#).unwrap();
+    assert_eq!(code_of(&resp), "bad_request");
+
+    // Unsupported version.
+    let resp = client.send_raw(r#"{"v":9,"op":"search","query":[1.0]}"#).unwrap();
+    assert_eq!(code_of(&resp), "bad_request");
+
+    // Wrong-length vector is caught at the API boundary, not in
+    // Metric::distance. On the v1 compat path the error keeps the legacy
+    // string shape.
+    let short = vec![0.5f32; ds.dim() - 2];
+    let resp = client
+        .send_raw(
+            &proxima::api::wire::encode_request_v1(&short, 5).to_string_compact(),
+        )
+        .unwrap();
+    let legacy = resp
+        .get("error")
+        .and_then(proxima::util::json::Json::as_str)
+        .expect("v1 errors keep the legacy string shape");
+    assert!(legacy.starts_with("dim_mismatch"), "{legacy}");
+
+    // Mixed batch: one good, one bad vector — whole request rejected.
+    let good = ds.queries.row(0);
+    let req = QueryRequest::batch(&[good, &short], 5);
+    let resp = client
+        .send_raw(&proxima::api::wire::encode_request_v2(&req).to_string_compact())
+        .unwrap();
+    assert_eq!(code_of(&resp), "dim_mismatch");
+
+    // After all that abuse, the SAME connection still answers.
+    let (ids, _, _) = client.search(good, 5).unwrap();
+    assert_eq!(ids.len(), 5);
+    let resp = client
+        .search_batch(&[good, good], 5, &QueryOptions::default())
+        .unwrap();
+    assert_eq!(resp.results.len(), 2);
+
+    client.shutdown().unwrap();
+    server.stop();
+}
