@@ -69,8 +69,9 @@ fn main() -> proxima::util::error::Result<()> {
     );
     assert!(recall > 0.7, "quickstart recall sanity failed: {recall}");
 
-    // 5. The batch API: the same queries fanned across the fixed worker
-    //    pool, one pooled scratch per worker (the serving hot path).
+    // 5. The batch API: the same queries as per-query tasks on the
+    //    persistent work-stealing exec pool, after one staged
+    //    (deduplicated) ADT-build pass — the serving hot path.
     let qrefs: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
     let t0 = std::time::Instant::now();
     let outs = svc.search_batch(&qrefs, k);

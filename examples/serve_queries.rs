@@ -24,8 +24,23 @@
 //! * in-process calls — `SearchService::query(&req)`;
 //! * the dynamic batcher — each queued request keeps its own options;
 //! * the TCP wire — `Client::search` (v1 compat, single query) and
-//!   `Client::search_batch` (v2: N queries in ONE round-trip, handed to
-//!   `SearchService::search_batch`'s worker fan-out on the server side).
+//!   `Client::search_batch` (v2: N queries in ONE round-trip).
+//!
+//! # The execution model behind the wire
+//!
+//! Every batch — a v2 multi-query line, a batcher flush, a shard
+//! fan-out — executes on ONE persistent work-stealing pool
+//! (`proxima::exec::ExecPool`, shared process-wide; no per-request
+//! thread spawning) as a staged pipeline: first a batched,
+//! DEDUPLICATED ADT-build pass (repeated query vectors in a batch share
+//! one table — the `adt_builds` stat counts distinct builds), then one
+//! work-stealing task per query (a heavy `l_override` query no longer
+//! idles its batch-mates the way contiguous chunking did). With
+//! `want_stats`, the response stats also report `queue_wait_us` — the
+//! total time the batch's queries sat in the pool queue before a lane
+//! picked them up, the serving-side congestion signal. A query whose
+//! worker task panics comes back as an inline `{"error":...}` entry in
+//! its own result slot; batch-mates are answered normally.
 //!
 //! Wire shapes are documented at the top of `coordinator::server`.
 
@@ -73,7 +88,6 @@ fn main() -> proxima::util::error::Result<()> {
             max_batch: 16,
             max_wait: std::time::Duration::from_millis(2),
         },
-        2,
     );
     let server = Server::start(svc.clone(), handle, 0)?;
     println!("[serve] listening on {}", server.addr);
@@ -177,12 +191,12 @@ fn main() -> proxima::util::error::Result<()> {
     let (sd, sw) = (deflt.stats.unwrap(), wide.stats.unwrap());
     println!("\n=== per-request options (same wire, same contract) ===");
     println!(
-        "default options     : {} PQ dists, {} exact, {} us server",
-        sd.pq_dists, sd.exact_dists, deflt.server_latency_us
+        "default options     : {} PQ dists, {} exact, {} ADT builds, {} us queued, {} us server",
+        sd.pq_dists, sd.exact_dists, sd.adt_builds, sd.queue_wait_us, deflt.server_latency_us
     );
     println!(
-        "2L + no early-term  : {} PQ dists, {} exact, {} us server",
-        sw.pq_dists, sw.exact_dists, wide.server_latency_us
+        "2L + no early-term  : {} PQ dists, {} exact, {} ADT builds, {} us queued, {} us server",
+        sw.pq_dists, sw.exact_dists, sw.adt_builds, sw.queue_wait_us, wide.server_latency_us
     );
     assert!(
         sw.pq_dists > sd.pq_dists,

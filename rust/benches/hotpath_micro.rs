@@ -8,14 +8,19 @@
 //! * DES event throughput
 //! * unified kernel: per-query allocation vs pooled scratch (+ a heap
 //!   allocation count for the steady state)
-//! * `search_batch` over the fixed worker pool vs serial (QPS baseline —
-//!   look for the machine-readable `qps_baseline` line)
+//! * `search_batch` over the persistent work-stealing pool vs serial
+//!   (QPS baseline — look for the machine-readable `qps_baseline` line)
+//! * SKEWED batch: contiguous chunking (the pre-exec-pool dispatch,
+//!   reproduced inline) vs per-query work-stealing (`skewed_batch` line)
+//! * batched ADT build: per-query builds vs the deduplicated blocked
+//!   sweep on a duplicate-heavy batch (`adt_batch` line)
 
+use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
-use proxima::coordinator::SearchService;
+use proxima::coordinator::{BatchQuery, SearchService};
 use proxima::dataset::synth::tiny_uniform;
 use proxima::distance::Metric;
-use proxima::pq::{Adt, PqCodebook};
+use proxima::pq::{Adt, AdtBatch, PqCodebook};
 use proxima::search::beam::CandidateList;
 use proxima::search::bitonic::bitonic_sort;
 use proxima::search::kernel::QueryScratch;
@@ -260,5 +265,83 @@ fn main() {
     println!(
         "qps_baseline serial={qps_serial:.0} batch={qps_batch:.0} speedup={:.2} workers={cores} pooled_allocs={pooled_allocs} fresh_allocs={fresh_allocs}",
         qps_batch / qps_serial
+    );
+
+    // --- Skewed batch: contiguous chunking vs work-stealing. ---
+    // Every 8th query runs with a wide list and no early termination
+    // (the expensive tail); they are packed at the FRONT of the batch,
+    // the adversarial layout for contiguous chunking (one chunk eats
+    // every heavy query while the other workers idle).
+    let heavy = QueryOptions {
+        l_override: Some(400),
+        early_term_tau: Some(0),
+        ..Default::default()
+    };
+    let light = QueryOptions {
+        l_override: Some(20),
+        ..Default::default()
+    };
+    let n_skew = qrefs.len().min(64);
+    let n_heavy = n_skew / 8;
+    let items: Vec<BatchQuery> = (0..n_skew)
+        .map(|i| BatchQuery {
+            q: qrefs[i],
+            k: 10,
+            options: if i < n_heavy { heavy } else { light },
+        })
+        .collect();
+    // Chunked baseline: the pre-exec-pool dispatch, reproduced inline —
+    // scoped threads, one contiguous slice each, per-chunk scratch.
+    let r_chunked = bench("skewed_batch contiguous-chunking", || {
+        let chunk = items.len().div_ceil(cores);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = items
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(|| {
+                        let mut scratch = svc.checkout_scratch();
+                        for it in part {
+                            let out =
+                                svc.search_with_options(it.q, it.k, &it.options, &mut scratch);
+                            black_box(out);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    });
+    let r_steal = bench("skewed_batch work-stealing   ", || {
+        black_box(svc.search_batch_mixed(&items).len())
+    });
+    let skew_chunked_qps = r_chunked.per_sec(n_skew as f64);
+    let skew_steal_qps = r_steal.per_sec(n_skew as f64);
+    println!(
+        "skewed_batch n={n_skew} heavy={n_heavy} chunked_qps={skew_chunked_qps:.0} stealing_qps={skew_steal_qps:.0} speedup={:.2}",
+        skew_steal_qps / skew_chunked_qps
+    );
+
+    // --- Batched ADT build: dedup + blocked sweep vs per-query builds. ---
+    // Duplicate-heavy batch: 64 queries cycling 8 distinct vectors (the
+    // production shape: popular queries repeat inside a coalesced batch).
+    let dup_refs: Vec<&[f32]> = (0..64).map(|i| w.ds.queries.row(i % 8)).collect();
+    let mut adt_scratch = Adt::default();
+    let r_per_query = bench("adt_build per-query   x64", || {
+        for q in &dup_refs {
+            w.codebook.build_adt_into(q, &mut adt_scratch);
+        }
+    });
+    let mut adt_batch = AdtBatch::new();
+    let r_batched = bench("adt_build batched-dedup x64", || {
+        w.codebook.build_adt_batch(&dup_refs, &mut adt_batch);
+    });
+    println!(
+        "adt_batch queries=64 distinct_builds={} per_query_us={:.1} batched_us={:.1} speedup={:.2}",
+        adt_batch.distinct(),
+        r_per_query.mean.as_secs_f64() * 1e6,
+        r_batched.mean.as_secs_f64() * 1e6,
+        r_per_query.mean.as_secs_f64() / r_batched.mean.as_secs_f64()
     );
 }

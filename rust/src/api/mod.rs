@@ -4,11 +4,15 @@
 //! the sharded fan-out, and the TCP wire (v2 of the line protocol in
 //! [`crate::coordinator::server`]; codecs in [`wire`]).
 //!
-//! The contract exists so the serving layer can evolve (persistent worker
-//! pools, GEMM-shaped batch ADT builds, new transports) without signature
-//! churn: callers construct a [`QueryRequest`] carrying N query vectors,
+//! The contract exists so the serving layer can evolve without signature
+//! churn — and it has: every batch now executes on the persistent
+//! work-stealing pool ([`crate::exec::ExecPool`]) behind this same
+//! surface, with the staged GEMM-shaped batch ADT build in front of the
+//! walks. Callers construct a [`QueryRequest`] carrying N query vectors,
 //! `k`, and per-request [`QueryOptions`], and get back a [`QueryResponse`]
-//! with one [`NeighborList`] per query — or a structured [`ApiError`].
+//! with one [`NeighborList`] per query — or a structured [`ApiError`]
+//! (whole-request failures); per-query failures (e.g. a contained worker
+//! panic) ride in [`QueryResponse::errors`].
 //!
 //! # `QueryOptions` defaults
 //!
@@ -156,7 +160,16 @@ pub struct NeighborList {
 #[derive(Clone, Debug, Default)]
 pub struct QueryResponse {
     pub results: Vec<NeighborList>,
-    /// Aggregated over the batch when the request set `want_stats`.
+    /// Per-query failures. Empty when every query succeeded (the common
+    /// case, kept allocation-free); otherwise `errors[i]` is `Some` for
+    /// each query that failed — its `results[i]` entry is empty. A
+    /// worker panic surfaces here as [`ApiErrorCode::Internal`] for that
+    /// query only; its batch-mates are answered normally.
+    pub errors: Vec<Option<ApiError>>,
+    /// Aggregated over the batch when the request set `want_stats`
+    /// (includes `queue_wait_us` — time queries sat in the exec-pool
+    /// queue — and `adt_builds` — distinct ADT tables the staged batch
+    /// build produced).
     pub stats: Option<SearchStats>,
     /// Service-side wall time for the whole batch.
     pub server_latency_us: u64,
@@ -170,24 +183,57 @@ impl QueryResponse {
         want_stats: bool,
         server_latency_us: u64,
     ) -> QueryResponse {
-        let stats = want_stats.then(|| {
-            let mut s = SearchStats::default();
-            for o in &outputs {
-                s.add(&o.stats);
+        Self::from_results(outputs.into_iter().map(Ok).collect(), want_stats, server_latency_us)
+    }
+
+    /// Assemble a response from fallible per-query results: failed
+    /// queries contribute an empty [`NeighborList`] plus their error in
+    /// [`Self::errors`]; stats aggregate over the successful ones.
+    pub fn from_results(
+        outcomes: Vec<Result<SearchOutput, ApiError>>,
+        want_stats: bool,
+        server_latency_us: u64,
+    ) -> QueryResponse {
+        let any_err = outcomes.iter().any(|o| o.is_err());
+        let mut results = Vec::with_capacity(outcomes.len());
+        let mut errors = Vec::with_capacity(if any_err { outcomes.len() } else { 0 });
+        let mut stats = want_stats.then(SearchStats::default);
+        for o in outcomes {
+            match o {
+                Ok(out) => {
+                    if let Some(s) = stats.as_mut() {
+                        s.add(&out.stats);
+                    }
+                    results.push(NeighborList {
+                        ids: out.ids,
+                        dists: out.dists,
+                    });
+                    if any_err {
+                        errors.push(None);
+                    }
+                }
+                Err(e) => {
+                    results.push(NeighborList::default());
+                    errors.push(Some(e));
+                }
             }
-            s
-        });
+        }
         QueryResponse {
-            results: outputs
-                .into_iter()
-                .map(|o| NeighborList {
-                    ids: o.ids,
-                    dists: o.dists,
-                })
-                .collect(),
+            results,
+            errors,
             stats,
             server_latency_us,
         }
+    }
+
+    /// The failure of query `i`, if any.
+    pub fn error_for(&self, i: usize) -> Option<&ApiError> {
+        self.errors.get(i).and_then(|e| e.as_ref())
+    }
+
+    /// Whether any query in the batch failed.
+    pub fn has_errors(&self) -> bool {
+        self.errors.iter().any(|e| e.is_some())
     }
 }
 
@@ -326,6 +372,37 @@ mod tests {
         assert_eq!(r.server_latency_us, 42);
         let r = QueryResponse::from_outputs(vec![mk(3)], false, 1);
         assert!(r.stats.is_none());
+        assert!(r.errors.is_empty(), "all-ok responses carry no error vec");
+    }
+
+    #[test]
+    fn response_from_results_contains_per_query_failures() {
+        let ok = SearchOutput {
+            ids: vec![7],
+            dists: vec![0.5],
+            stats: SearchStats {
+                pq_dists: 2,
+                ..Default::default()
+            },
+            trace: None,
+        };
+        let r = QueryResponse::from_results(
+            vec![
+                Ok(ok.clone()),
+                Err(ApiError::internal("worker panicked")),
+                Ok(ok),
+            ],
+            true,
+            5,
+        );
+        assert_eq!(r.results.len(), 3);
+        assert!(r.has_errors());
+        assert!(r.error_for(0).is_none());
+        assert_eq!(r.error_for(1).unwrap().code, ApiErrorCode::Internal);
+        assert!(r.results[1].ids.is_empty());
+        assert_eq!(r.results[2].ids, vec![7]);
+        // Stats aggregate over the successes only.
+        assert_eq!(r.stats.unwrap().pq_dists, 4);
     }
 
     #[test]

@@ -8,6 +8,16 @@
 //! answers it in the v1 response shape. Errors are always the structured
 //! `{"error":{"code":...,"message":...}}` line; [`decode_error`] also
 //! accepts the legacy `{"error":"..."}` string shape.
+//!
+//! v2 protocol extension (per-query failures, no version bump): a v2
+//! response's `results[i]` slot is EITHER `{ids,dists}` or an inline
+//! `{"error":{code,message}}` object when query `i` alone failed (e.g. a
+//! contained worker panic). Decoders must dispatch on the `"error"` key
+//! per entry. This replaces pre-extension behavior where such a failure
+//! tore down the whole connection, so no working decoder ever received
+//! these bytes before; a version bump was deliberately avoided because
+//! it would make NEW clients unintelligible to OLD servers for an
+//! error-only path.
 
 use super::{
     ApiError, ApiErrorCode, NeighborList, QueryOptions, QueryRequest, QueryResponse, SearchMode,
@@ -212,15 +222,23 @@ fn as_index(v: &Json, what: &str) -> Result<usize, ApiError> {
 // Responses
 // ---------------------------------------------------------------------------
 
-/// Encode a v2 response: one `{ids,dists}` object per query, plus the
-/// aggregated stats when the request asked for them.
+/// Encode a v2 response: one `{ids,dists}` object per query — or, for a
+/// query that failed individually (contained worker panic), an inline
+/// `{"error":{code,message}}` entry in its slot — plus the aggregated
+/// stats when the request asked for them.
 pub fn encode_response_v2(resp: &QueryResponse) -> Json {
+    let results = resp
+        .results
+        .iter()
+        .enumerate()
+        .map(|(i, nl)| match resp.error_for(i) {
+            Some(e) => encode_error(e),
+            None => encode_neighbor_list(nl),
+        })
+        .collect();
     let mut kvs: Vec<(&str, Json)> = vec![
         ("v", Json::num(VERSION as f64)),
-        (
-            "results",
-            Json::Arr(resp.results.iter().map(encode_neighbor_list).collect()),
-        ),
+        ("results", Json::Arr(results)),
         ("server_latency_us", Json::num(resp.server_latency_us as f64)),
     ];
     if let Some(s) = &resp.stats {
@@ -239,13 +257,27 @@ pub fn encode_response_v1(nl: &NeighborList, latency_us: u64) -> Json {
 }
 
 pub fn decode_response_v2(j: &Json) -> Result<QueryResponse, ApiError> {
-    let results = j
+    let entries = j
         .get("results")
         .and_then(Json::as_arr)
-        .ok_or_else(|| ApiError::bad_request("response missing 'results'"))?
-        .iter()
-        .map(decode_neighbor_list)
-        .collect::<Result<Vec<_>, _>>()?;
+        .ok_or_else(|| ApiError::bad_request("response missing 'results'"))?;
+    let mut results = Vec::with_capacity(entries.len());
+    let mut errors = Vec::with_capacity(entries.len());
+    let mut any_err = false;
+    for entry in entries {
+        // A per-query error entry occupies the query's result slot.
+        if let Some(e) = decode_error(entry) {
+            any_err = true;
+            errors.push(Some(e));
+            results.push(NeighborList::default());
+        } else {
+            errors.push(None);
+            results.push(decode_neighbor_list(entry)?);
+        }
+    }
+    if !any_err {
+        errors.clear(); // all-good batches keep the compact shape
+    }
     let stats = match j.get("stats") {
         None => None,
         Some(s) => Some(decode_stats(s)),
@@ -256,6 +288,7 @@ pub fn decode_response_v2(j: &Json) -> Result<QueryResponse, ApiError> {
         .unwrap_or(0.0) as u64;
     Ok(QueryResponse {
         results,
+        errors,
         stats,
         server_latency_us,
     })
@@ -312,6 +345,8 @@ pub fn encode_stats(s: &SearchStats) -> Json {
         ("bytes_raw", Json::num(s.bytes_raw as f64)),
         ("et_iterations", Json::num(s.et_iterations as f64)),
         ("early_terminated", Json::Bool(s.early_terminated)),
+        ("adt_builds", Json::num(s.adt_builds as f64)),
+        ("queue_wait_us", Json::num(s.queue_wait_us as f64)),
     ])
 }
 
@@ -330,6 +365,8 @@ pub fn decode_stats(j: &Json) -> SearchStats {
             .get("early_terminated")
             .and_then(Json::as_bool)
             .unwrap_or(false),
+        adt_builds: n("adt_builds") as usize,
+        queue_wait_us: n("queue_wait_us") as u64,
     }
 }
 
@@ -482,17 +519,59 @@ mod tests {
                 bytes_raw: 640,
                 et_iterations: 2,
                 early_terminated: true,
+                adt_builds: 2,
+                queue_wait_us: 57,
             }),
+            errors: Vec::new(),
             server_latency_us: 321,
         };
         let line = reparse(&encode_response_v2(&resp));
         let back = decode_response_v2(&line).unwrap();
         assert_eq!(back.results, resp.results);
+        assert!(back.errors.is_empty(), "all-ok batches keep the compact shape");
         assert_eq!(back.server_latency_us, 321);
         let s = back.stats.unwrap();
         assert_eq!(s.pq_dists, 100);
         assert_eq!(s.bytes_raw, 640);
         assert!(s.early_terminated);
+        assert_eq!(s.adt_builds, 2, "staged-ADT build count must cross the wire");
+        assert_eq!(s.queue_wait_us, 57, "queue-wait must cross the wire");
+    }
+
+    #[test]
+    fn per_query_errors_ride_in_their_result_slot() {
+        let resp = QueryResponse {
+            results: vec![
+                NeighborList {
+                    ids: vec![4],
+                    dists: vec![0.25],
+                },
+                NeighborList::default(),
+                NeighborList {
+                    ids: vec![9],
+                    dists: vec![1.5],
+                },
+            ],
+            errors: vec![
+                None,
+                Some(ApiError::internal("search worker panicked on query 1")),
+                None,
+            ],
+            stats: None,
+            server_latency_us: 11,
+        };
+        let line = reparse(&encode_response_v2(&resp));
+        // The response line as a whole is NOT an error line.
+        assert!(decode_error(&line).is_none());
+        let back = decode_response_v2(&line).unwrap();
+        assert_eq!(back.results.len(), 3);
+        assert!(back.has_errors());
+        assert_eq!(back.error_for(0), None);
+        let e = back.error_for(1).expect("query 1 failed");
+        assert_eq!(e.code, ApiErrorCode::Internal);
+        assert!(e.message.contains("panicked"));
+        assert!(back.results[1].ids.is_empty());
+        assert_eq!(back.results[2].ids, vec![9], "batch-mates are unaffected");
     }
 
     #[test]

@@ -6,10 +6,15 @@
 //! Each queued [`Request`] carries its own [`QueryOptions`], so requests
 //! with different modes / list sizes coalesce into one batch and still
 //! get answered under their own knobs (the typed-API contract reaches
-//! through the batching layer untouched).
+//! through the batching layer untouched). A flushed batch executes as
+//! ONE staged pipeline on the shared exec pool
+//! ([`SearchService::search_batch_mixed`]): coalesced duplicate queries
+//! share a single ADT build, per-query tasks rebalance by work-stealing,
+//! and a panicking request is answered `Err(Internal)` for that request
+//! only — the loop, the pool, and the batch-mates all survive.
 
-use super::SearchService;
-use crate::api::QueryOptions;
+use super::{BatchQuery, SearchService};
+use crate::api::{ApiError, QueryOptions};
 use crate::search::SearchOutput;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -37,7 +42,7 @@ pub struct Request {
     pub query: Vec<f32>,
     pub k: usize,
     pub options: QueryOptions,
-    pub respond: mpsc::Sender<SearchOutput>,
+    pub respond: mpsc::Sender<Result<SearchOutput, ApiError>>,
     pub enqueued: Instant,
 }
 
@@ -49,18 +54,20 @@ pub struct BatcherHandle {
 
 impl BatcherHandle {
     /// Submit with default options and wait for the result.
-    pub fn query(&self, query: Vec<f32>, k: usize) -> Option<SearchOutput> {
+    pub fn query(&self, query: Vec<f32>, k: usize) -> Result<SearchOutput, ApiError> {
         self.query_with(query, k, QueryOptions::default())
     }
 
-    /// Submit with per-request options and wait for the result. `None`
-    /// means the batching loop is gone (service shutting down).
+    /// Submit with per-request options and wait for the result.
+    /// `Err(Closed)` means the batching loop is gone (service shutting
+    /// down); `Err(Internal)` means THIS request's worker task panicked
+    /// (its batch-mates were answered normally).
     pub fn query_with(
         &self,
         query: Vec<f32>,
         k: usize,
         options: QueryOptions,
-    ) -> Option<SearchOutput> {
+    ) -> Result<SearchOutput, ApiError> {
         let (tx, rx) = mpsc::channel();
         self.tx
             .send(Request {
@@ -70,21 +77,21 @@ impl BatcherHandle {
                 respond: tx,
                 enqueued: Instant::now(),
             })
-            .ok()?;
-        rx.recv().ok()
+            .map_err(|_| ApiError::closed("batcher closed"))?;
+        rx.recv().map_err(|_| ApiError::closed("batcher closed"))?
     }
 }
 
-/// Spawn the batching loop + `workers` search threads. Returns the submit
-/// handle; dropping every handle shuts the loop down.
+/// Spawn the batching loop. Flushed batches execute on the service's
+/// exec pool (the loop thread helps as one more lane). Returns the
+/// submit handle; dropping every handle shuts the loop down.
 pub fn spawn(
     service: Arc<SearchService>,
     policy: BatchPolicy,
-    workers: usize,
 ) -> (BatcherHandle, std::thread::JoinHandle<BatchStats>) {
     let (tx, rx) = mpsc::channel::<Request>();
     let handle = BatcherHandle { tx };
-    let join = std::thread::spawn(move || run_loop(service, policy, workers, rx));
+    let join = std::thread::spawn(move || run_loop(service, policy, rx));
     (handle, join)
 }
 
@@ -100,7 +107,6 @@ pub struct BatchStats {
 fn run_loop(
     service: Arc<SearchService>,
     policy: BatchPolicy,
-    workers: usize,
     rx: mpsc::Receiver<Request>,
 ) -> BatchStats {
     let mut stats = BatchStats::default();
@@ -134,25 +140,23 @@ fn run_loop(
         stats.batches += 1;
         stats.queries += pending.len() as u64;
 
-        // Dispatch across the worker pool. Each worker checks one scratch
-        // out of the service pool for its whole slice, so the per-query
-        // path inside the batch allocates nothing.
+        // Dispatch the coalesced batch as ONE staged pipeline on the
+        // exec pool: duplicate queries share an ADT build, per-query
+        // tasks rebalance by stealing, and a panicking request comes
+        // back as Err(Internal) for that request alone.
         let batch: Vec<Request> = std::mem::take(&mut pending);
-        let svc = service.clone();
-        std::thread::scope(|scope| {
-            let chunk = batch.len().div_ceil(workers.max(1));
-            for part in batch.chunks(chunk) {
-                let svc = svc.clone();
-                scope.spawn(move || {
-                    let mut scratch = svc.checkout_scratch();
-                    for req in part {
-                        let out =
-                            svc.search_with_options(&req.query, req.k, &req.options, &mut scratch);
-                        let _ = req.respond.send(out);
-                    }
-                });
-            }
-        });
+        let items: Vec<BatchQuery> = batch
+            .iter()
+            .map(|r| BatchQuery {
+                q: &r.query,
+                k: r.k,
+                options: r.options,
+            })
+            .collect();
+        let outcomes = service.search_batch_mixed(&items);
+        for (req, outcome) in batch.iter().zip(outcomes) {
+            let _ = req.respond.send(outcome);
+        }
     }
     stats
 }
@@ -193,7 +197,7 @@ mod tests {
     #[test]
     fn batcher_answers_all_queries() {
         let (ds, svc) = service();
-        let (handle, join) = spawn(svc, BatchPolicy::default(), 2);
+        let (handle, join) = spawn(svc, BatchPolicy::default());
         let mut outs = Vec::new();
         for q in 0..ds.n_queries() {
             outs.push(handle.query(ds.queries.row(q).to_vec(), 5).unwrap());
@@ -214,7 +218,6 @@ mod tests {
                 max_batch: 1000,
                 max_wait: Duration::from_millis(1),
             },
-            1,
         );
         let out = handle.query(ds.queries.row(0).to_vec(), 5).unwrap();
         assert_eq!(out.ids.len(), 5);
@@ -236,7 +239,6 @@ mod tests {
                 max_batch: 2,
                 max_wait: Duration::from_secs(2),
             },
-            2,
         );
         let q = ds.queries.row(0).to_vec();
         let (accurate, hybrid) = std::thread::scope(|scope| {
@@ -283,9 +285,30 @@ mod tests {
     }
 
     #[test]
+    fn panicking_request_fails_alone_and_the_loop_survives() {
+        use crate::api::ApiErrorCode;
+        let (ds, svc) = service();
+        let (handle, join) = spawn(svc, BatchPolicy::default());
+        // The batcher sits BEHIND the API boundary, so a NaN query can
+        // reach a worker and panic its rerank sort. It must come back as
+        // Err(Internal) for that request only.
+        let mut nan_q = ds.queries.row(0).to_vec();
+        nan_q[0] = f32::NAN;
+        let err = handle.query(nan_q, 5).unwrap_err();
+        assert_eq!(err.code, ApiErrorCode::Internal, "{err}");
+        assert!(err.message.contains("panicked"), "{err}");
+        // The loop, the pool, and subsequent requests all survive.
+        let ok = handle.query(ds.queries.row(1).to_vec(), 5).unwrap();
+        assert_eq!(ok.ids.len(), 5);
+        drop(handle);
+        let stats = join.join().unwrap();
+        assert_eq!(stats.queries, 2);
+    }
+
+    #[test]
     fn concurrent_clients() {
         let (ds, svc) = service();
-        let (handle, join) = spawn(svc, BatchPolicy::default(), 2);
+        let (handle, join) = spawn(svc, BatchPolicy::default());
         std::thread::scope(|scope| {
             for t in 0..4 {
                 let h = handle.clone();

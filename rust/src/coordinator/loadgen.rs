@@ -261,7 +261,7 @@ mod tests {
             false,
         ));
         let (handle, _join) =
-            crate::coordinator::batcher::spawn(svc.clone(), Default::default(), 1);
+            crate::coordinator::batcher::spawn(svc.clone(), Default::default());
         let server = crate::coordinator::server::Server::start(svc, handle, 0).unwrap();
         let rep = run_rpc(
             server.addr,

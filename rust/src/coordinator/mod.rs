@@ -1,24 +1,62 @@
 //! L3 coordinator: the serving layer around the Proxima search algorithm.
 //!
+//! # Execution model
+//!
+//! Every parallel stage in this module rides ONE substrate: the
+//! persistent work-stealing [`ExecPool`](crate::exec::ExecPool) (shared
+//! process-wide by default; [`SearchService::with_workers`] swaps in a
+//! dedicated pool). There is no per-batch thread spawning anywhere in
+//! the serving stack. A multi-query request executes as a staged batch
+//! pipeline, mirroring the paper's dataflow that overlaps ADT
+//! preparation with graph traversal:
+//!
+//! 1. **Staged batch ADT build** — the batch's PQ-guided queries
+//!    (`PqAdt`/`Hybrid`) are deduplicated (bitwise vector equality) and
+//!    ONE blocked, GEMM-shaped sweep
+//!    ([`PqCodebook::build_adt_batch`]) fills a pooled table per
+//!    DISTINCT query — on the exec pool for large batches — so no walk
+//!    ever pays per-query ADT latency mid-batch, and duplicate-heavy
+//!    batches build fewer tables than they have queries (visible as
+//!    `SearchStats::adt_builds`).
+//! 2. **Per-query walk tasks** — each query is ONE task in the pool's
+//!    injector; idle workers steal at per-query granularity, so a slow
+//!    query (huge `l_override`, hybrid rerank) no longer idles a chunk
+//!    of batch-mates the way contiguous chunking did. Results return in
+//!    input order.
+//!
+//! Each pool worker pins its own [`ServiceScratch`] in a thread-local,
+//! persisting across batches — the steady-state walk performs zero heap
+//! allocations (`tests/zero_alloc.rs`). Every task's submission→start
+//! time is metered and surfaced as `SearchStats::queue_wait_us`. A
+//! panicking query task is contained by the pool and answered as
+//! [`ApiErrorCode::Internal`](crate::api::ApiErrorCode) for that query
+//! only; batch-mates are unaffected.
+//!
+//! # Components
+//!
 //! * [`SearchService`] — owns one loaded index (base vectors, graph, PQ,
 //!   gap encoding) and answers queries through the typed query API
 //!   ([`SearchService::query`] takes a [`QueryRequest`] — N vectors, `k`,
 //!   per-request [`QueryOptions`] — and returns a [`QueryResponse`] or a
 //!   structured [`ApiError`]); the per-query ADT is built through
 //!   the AOT/XLA artifact when a [`Runtime`](crate::runtime::Runtime) is
-//!   attached (Python never runs here), with a native fallback. Per-query
-//!   scratch (visited set, candidate list, exact cache, ADT table) comes
-//!   from an internal [`ScratchPool`], so the steady-state request path is
-//!   allocation-free; multi-query requests fan across a fixed pool of
-//!   worker threads, one scratch per worker.
+//!   attached (Python never runs here), with a native fallback.
+//!   Heterogeneous batches (per-query options) go through
+//!   [`SearchService::search_batch_mixed`].
 //! * [`batcher`] — dynamic batching (size- or deadline-triggered), each
-//!   queued request carrying its own [`QueryOptions`], workers holding
-//!   pooled scratch for their batch slice.
-//! * [`shard`] — partitioned scale-out with parallel fan-out, speaking the
-//!   same [`QueryRequest`]/[`QueryResponse`] contract.
+//!   queued request carrying its own [`QueryOptions`]; a flushed batch
+//!   executes as one staged pipeline on the shared pool, so coalesced
+//!   duplicate queries share ADT builds.
+//! * [`shard`] — partitioned scale-out, fanning shard queries out as
+//!   pool tasks (which themselves submit per-query walks — nested
+//!   submission is deadlock-free because waiting submitters help
+//!   execute), speaking the same [`QueryRequest`]/[`QueryResponse`]
+//!   contract.
 //! * [`server`] — a TCP line-protocol front end + client (versioned wire
 //!   protocol, multi-query v2 batches + v1 compat), on std threads
-//!   (the offline image has no tokio; see DESIGN.md §1).
+//!   (the offline image has no tokio; see DESIGN.md §1). The v2
+//!   multi-query path rides the same pool, so `queue_wait_us` is
+//!   measurable per response via `want_stats`.
 
 pub mod batcher;
 pub mod loadgen;
@@ -29,15 +67,18 @@ use crate::api::{ApiError, QueryOptions, QueryRequest, QueryResponse, SearchMode
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
 use crate::distance::Metric;
+use crate::exec::ExecPool;
 use crate::gap::GapGraph;
 use crate::graph::{vamana, Graph};
-use crate::pq::{Adt, PqCodebook, PqCodes};
+use crate::pq::{Adt, AdtBatch, PqCodebook, PqCodes};
 use crate::runtime::service::RuntimeHandle;
 use crate::search::beam::{accurate_beam_search_into, pq_beam_search_into, SearchContext};
 use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
 use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Aggregated service counters (exported by the `stats` RPC).
 #[derive(Debug, Default)]
@@ -47,6 +88,8 @@ pub struct ServiceStats {
     pub pq_dists: AtomicU64,
     pub exact_dists: AtomicU64,
     pub total_latency_us: AtomicU64,
+    /// Total time queries sat in the exec-pool queue (µs).
+    pub queue_wait_us: AtomicU64,
 }
 
 /// Per-query scratch a service worker checks out: the walk state plus a
@@ -55,6 +98,50 @@ pub struct ServiceStats {
 pub struct ServiceScratch {
     pub adt: Adt,
     pub walk: QueryScratch,
+}
+
+thread_local! {
+    /// Per-worker pinned scratch for batch tasks on the exec pool: every
+    /// pool worker (and every helping submitter) owns one for its thread
+    /// lifetime, so it persists across batches — no checkout traffic, no
+    /// contention, zero steady-state allocations on the walk path.
+    ///
+    /// Retention trade-off: the shared pool outlives any one service, so
+    /// this scratch (visited stamps sized to the largest index served,
+    /// the exact cache, the Bloom filter) stays resident per worker for
+    /// the process lifetime — that is the price of a warm hot path.
+    /// What must NOT stay resident is a one-off spike: see
+    /// [`trim_worker_scratch`], which releases outsized candidate-list /
+    /// rerank buffers (a single `l_override` near [`MAX_L_OVERRIDE`]
+    /// would otherwise pin megabytes per worker forever).
+    static WORKER_SCRATCH: RefCell<ServiceScratch> = RefCell::new(ServiceScratch::default());
+}
+
+/// Largest candidate-list / rerank capacity (entries) a pinned worker
+/// scratch keeps between batches. Normal serving lists (L up to a few
+/// thousand) sit far below this; one outlier request above it pays its
+/// re-allocation again instead of pinning the memory on an immortal
+/// worker.
+const SCRATCH_RETAIN_CAP: usize = 1 << 16;
+
+/// Bound the pinned scratch after a pool task (see [`WORKER_SCRATCH`]).
+fn trim_worker_scratch(scratch: &mut ServiceScratch) {
+    let list = &mut scratch.walk.list;
+    if list.items.capacity() > SCRATCH_RETAIN_CAP {
+        list.items = Vec::new();
+    }
+    if scratch.walk.rerank.capacity() > SCRATCH_RETAIN_CAP {
+        scratch.walk.rerank = Vec::new();
+    }
+}
+
+/// One query of a heterogeneous batch: its vector, `k`, and the options
+/// it must be answered under ([`SearchService::search_batch_mixed`]).
+#[derive(Clone, Copy)]
+pub struct BatchQuery<'a> {
+    pub q: &'a [f32],
+    pub k: usize,
+    pub options: QueryOptions,
 }
 
 /// One loaded, queryable index.
@@ -73,9 +160,18 @@ pub struct SearchService {
     /// handles are pinned to that thread (they are not `Send`).
     pub runtime: Option<RuntimeHandle>,
     pub stats: ServiceStats,
-    /// Fixed worker-pool width for [`Self::search_batch`].
+    /// Parallelism width for batch execution: the exec pool's worker
+    /// threads plus the submitting thread, which helps execute while it
+    /// waits. `1` = serial inline execution.
     pub workers: usize,
+    /// The execution substrate every batch stage submits to — the
+    /// process-wide shared pool unless [`Self::with_workers`] swapped in
+    /// a dedicated one.
+    exec: Arc<ExecPool>,
     scratch: ScratchPool<ServiceScratch>,
+    /// Pooled staged-ADT-build state (tables + dedup plan), reused
+    /// across batches.
+    adt_batches: ScratchPool<AdtBatch>,
 }
 
 impl SearchService {
@@ -118,13 +214,19 @@ impl SearchService {
             runtime,
             stats: ServiceStats::default(),
             workers: default_workers(),
+            exec: ExecPool::shared().clone(),
             scratch: ScratchPool::new(),
+            adt_batches: ScratchPool::new(),
         }
     }
 
-    /// Override the fixed worker-pool width used by [`Self::search_batch`].
+    /// Override the batch-execution width: swaps in a DEDICATED exec
+    /// pool of `workers - 1` threads (the submitting thread is the extra
+    /// lane). `workers == 1` executes batches serially inline. The
+    /// previous pool (if dedicated) shuts down gracefully on drop.
     pub fn with_workers(mut self, workers: usize) -> SearchService {
         self.workers = workers.max(1);
+        self.exec = Arc::new(ExecPool::new(self.workers - 1));
         self
     }
 
@@ -269,13 +371,23 @@ impl SearchService {
 
     /// [`Self::query`] minus the boundary checks — for internal callers
     /// (the shard fan-out) that already validated the FULL request
-    /// exactly once and must not rescan every vector per shard.
+    /// exactly once and must not rescan every vector per shard. A query
+    /// whose worker task panics is answered as `Internal` in
+    /// [`QueryResponse::errors`]; its batch-mates are unaffected.
     pub(crate) fn query_prevalidated(&self, req: &QueryRequest) -> QueryResponse {
         let t0 = std::time::Instant::now();
-        let refs: Vec<&[f32]> = req.vectors.iter().map(|v| v.as_slice()).collect();
-        let outs = self.search_batch_with_options(&refs, req.k, &req.options);
-        QueryResponse::from_outputs(
-            outs,
+        let items: Vec<BatchQuery> = req
+            .vectors
+            .iter()
+            .map(|v| BatchQuery {
+                q: v.as_slice(),
+                k: req.k,
+                options: req.options,
+            })
+            .collect();
+        let outcomes = self.search_batch_mixed(&items);
+        QueryResponse::from_results(
+            outcomes,
             req.options.want_stats,
             t0.elapsed().as_micros() as u64,
         )
@@ -310,9 +422,30 @@ impl SearchService {
         options: &QueryOptions,
         scratch: &mut ServiceScratch,
     ) -> SearchOutput {
+        let ServiceScratch { adt, walk } = scratch;
+        let needs_adt = options.mode != SearchMode::Accurate;
+        if needs_adt {
+            self.build_adt_into(q, adt);
+        }
+        self.run_query(q, k, options, needs_adt.then_some(&*adt), needs_adt, walk)
+    }
+
+    /// The per-query engine: run one walk over the unified kernel with an
+    /// already-staged ADT (`None` for `Accurate` mode). `fresh_adt`
+    /// charges `stats.adt_builds` to the query that triggered its
+    /// table's build — batch dedup makes the batch aggregate equal the
+    /// number of DISTINCT tables built, not the number of queries.
+    fn run_query(
+        &self,
+        q: &[f32],
+        k: usize,
+        options: &QueryOptions,
+        adt: Option<&Adt>,
+        fresh_adt: bool,
+        walk: &mut QueryScratch,
+    ) -> SearchOutput {
         let t0 = std::time::Instant::now();
         let (params, features) = self.effective(k, options);
-        let ServiceScratch { adt, walk } = scratch;
         let mut out = SearchOutput::default();
         match options.mode {
             SearchMode::Accurate => {
@@ -327,7 +460,7 @@ impl SearchService {
                 );
             }
             SearchMode::PqAdt => {
-                self.build_adt_into(q, adt);
+                let adt = adt.expect("PqAdt query requires a staged ADT");
                 let rerank = options.rerank.unwrap_or(params.l);
                 pq_beam_search_into(
                     &self.context(),
@@ -342,7 +475,7 @@ impl SearchService {
                 );
             }
             SearchMode::Hybrid => {
-                self.build_adt_into(q, adt);
+                let adt = adt.expect("Hybrid query requires a staged ADT");
                 proxima_search_into(
                     &self.context(),
                     adt,
@@ -355,6 +488,7 @@ impl SearchService {
                 );
             }
         }
+        out.stats.adt_builds = fresh_adt as usize;
         self.record(&out.stats, t0.elapsed());
         out
     }
@@ -387,47 +521,193 @@ impl SearchService {
         self.search_batch_with_options(queries, k, &QueryOptions::default())
     }
 
-    /// Answer a whole batch by fanning the queries across a fixed pool of
-    /// [`Self::workers`] threads, each holding its own pooled scratch for
-    /// the duration (per-worker scratch, per-query zero-alloc). All
-    /// queries share the request's [`QueryOptions`]; results come back in
-    /// input order.
+    /// Answer a whole batch through the staged pipeline (see the module
+    /// docs): one batched, deduplicated ADT-build pass, then per-query
+    /// walk tasks submitted individually to the exec pool so
+    /// work-stealing absorbs skewed per-query cost. All queries share
+    /// the request's [`QueryOptions`]; results come back in input order.
+    ///
+    /// This infallible convenience panics if a query task panics; the
+    /// typed path ([`Self::query`]) and [`Self::search_batch_mixed`]
+    /// contain such failures per query instead.
     pub fn search_batch_with_options(
         &self,
         queries: &[&[f32]],
         k: usize,
         options: &QueryOptions,
     ) -> Vec<SearchOutput> {
-        if queries.is_empty() {
+        let items: Vec<BatchQuery> = queries
+            .iter()
+            .map(|q| BatchQuery {
+                q,
+                k,
+                options: *options,
+            })
+            .collect();
+        self.search_batch_mixed(&items)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.unwrap_or_else(|e| panic!("batch query {i} failed: {e}")))
+            .collect()
+    }
+
+    /// Answer a heterogeneous batch — every [`BatchQuery`] carries its
+    /// own `k` and [`QueryOptions`] (the dynamic batcher's coalesced
+    /// requests take this path) — through the staged pipeline:
+    ///
+    /// 1. PQ-guided queries are deduplicated and their ADTs built in one
+    ///    blocked pass over pooled tables (stage 1);
+    /// 2. every query becomes one work-stealing pool task running the
+    ///    walk against its staged table (stage 2).
+    ///
+    /// Results return in input order. A panicking query task yields
+    /// `Err(Internal)` for THAT query only — batch-mates complete
+    /// normally and the pool survives.
+    pub fn search_batch_mixed(
+        &self,
+        items: &[BatchQuery<'_>],
+    ) -> Vec<Result<SearchOutput, ApiError>> {
+        if items.is_empty() {
             return Vec::new();
         }
-        let workers = self.workers.max(1).min(queries.len());
-        if workers == 1 {
-            let mut scratch = self.scratch.checkout();
-            return queries
-                .iter()
-                .map(|q| self.search_with_options(q, k, options, &mut scratch))
-                .collect();
+
+        // ---- Stage 1: staged batch ADT build over distinct queries.
+        // Runs for BOTH the serial and the pooled stage-2 below, so the
+        // dedup contract (`adt_builds` = distinct tables, not queries)
+        // does not depend on the machine's width.
+        let mut pq_items: Vec<usize> = Vec::new();
+        let mut pq_queries: Vec<&[f32]> = Vec::new();
+        for (i, it) in items.iter().enumerate() {
+            if it.options.mode != SearchMode::Accurate {
+                pq_items.push(i);
+                pq_queries.push(it.q);
+            }
         }
-        let chunk = queries.len().div_ceil(workers);
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = queries
-                .chunks(chunk)
-                .map(|part| {
-                    scope.spawn(move || {
-                        let mut scratch = self.scratch.checkout();
-                        part.iter()
-                            .map(|q| self.search_with_options(q, k, options, &mut scratch))
-                            .collect::<Vec<_>>()
+        let mut batch_guard = (!pq_queries.is_empty()).then(|| self.adt_batches.checkout());
+        // (table index, is-the-build-charged-here) per item.
+        let mut adt_slot: Vec<Option<(usize, bool)>> = vec![None; items.len()];
+        if let Some(batch) = batch_guard.as_mut() {
+            // Contain stage-1 panics (e.g. a wrong-dimension vector
+            // through this validation-skipping internal path): leave
+            // every slot unstaged so stage 2 falls back to per-query
+            // builds INSIDE its per-query catch — the malformed query
+            // then fails alone instead of killing the caller (the
+            // batcher-loop survival contract).
+            let staged_ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.stage_adt_batch(&pq_queries, batch)
+            }))
+            .is_ok();
+            if staged_ok {
+                for (f, &i) in pq_items.iter().enumerate() {
+                    adt_slot[i] = Some((batch.table_index(f), batch.is_fresh(f)));
+                }
+            }
+        }
+        let staged: Option<&AdtBatch> = batch_guard.as_deref();
+
+        // Per-item execution, shared by the serial and pooled stage 2:
+        // staged table when stage 1 produced one, else a per-query build
+        // into the worker's own scratch (stage-1 fallback).
+        let run_item = |i: usize, scratch: &mut ServiceScratch| -> SearchOutput {
+            let it = &items[i];
+            let ServiceScratch { adt, walk } = scratch;
+            let (adt_ref, fresh) = match adt_slot[i] {
+                Some((d, fresh)) => (Some(staged.expect("staged batch").table(d)), fresh),
+                None if it.options.mode != SearchMode::Accurate => {
+                    self.build_adt_into(it.q, adt);
+                    (Some(&*adt), true)
+                }
+                None => (None, false),
+            };
+            self.run_query(it.q, it.k, &it.options, adt_ref, fresh, walk)
+        };
+
+        if items.len() == 1 || self.workers <= 1 {
+            // Serial stage 2: same staged tables, same per-query panic
+            // containment (so the batcher loop gets one contract either
+            // way), no pool traffic, queue-wait 0 by definition.
+            let mut scratch = self.scratch.checkout();
+            return items
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_item(i, &mut scratch)
+                    }))
+                    .map_err(|_| {
+                        ApiError::internal(format!("search worker panicked on query {i}"))
                     })
                 })
                 .collect();
-            let mut out = Vec::with_capacity(queries.len());
-            for h in handles {
-                out.extend(h.join().expect("search worker panicked"));
+        }
+
+        // ---- Stage 2: one pool task per query, per-worker pinned
+        // scratch, queue-wait metered.
+        let results = self.exec.run_collect(items.len(), |i| {
+            WORKER_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                let out = run_item(i, &mut scratch);
+                trim_worker_scratch(&mut scratch);
+                out
+            })
+        });
+
+        let mut queue_wait_total = 0u64;
+        let outcomes = results
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                queue_wait_total += r.queue_wait_us;
+                match r.value {
+                    Some(mut out) => {
+                        out.stats.queue_wait_us = r.queue_wait_us;
+                        Ok(out)
+                    }
+                    None => Err(ApiError::internal(format!(
+                        "search worker panicked on query {i}"
+                    ))),
+                }
+            })
+            .collect();
+        self.stats
+            .queue_wait_us
+            .fetch_add(queue_wait_total, Ordering::Relaxed);
+        outcomes
+    }
+
+    /// Stage 1 of the batch pipeline: plan the dedup, then fill one
+    /// pooled table per distinct query — through the AOT/XLA runtime
+    /// when attached (serialized on its submission thread; dedup is
+    /// still the win), natively in parallel groups on the exec pool for
+    /// large plans, or in one blocked sweep on the submitting thread.
+    fn stage_adt_batch(&self, queries: &[&[f32]], batch: &mut AdtBatch) {
+        batch.plan(queries);
+        let (rep, tables) = batch.split();
+        if self.runtime.is_some() {
+            for (di, table) in tables.iter_mut().enumerate() {
+                self.build_adt_into(queries[rep[di] as usize], table);
             }
-            out
-        })
+            return;
+        }
+        const PAR_GROUP: usize = 8;
+        if tables.len() >= 2 * PAR_GROUP {
+            let mut groups: Vec<&mut [Adt]> = tables.chunks_mut(PAR_GROUP).collect();
+            let metas = self.exec.run_on_slice(&mut groups, |g, chunk| {
+                let start = g * PAR_GROUP;
+                let reps = &rep[start..start + chunk.len()];
+                self.codebook.build_adt_for(queries, reps, chunk);
+            });
+            drop(groups);
+            if metas.iter().any(|m| m.panicked) {
+                // The sweep has no data-dependent panics, so this can
+                // only be a logic bug; rebuild serially rather than let
+                // walks run against a partially-built table, so the
+                // failure reproduces deterministically on this thread.
+                self.codebook.build_adt_for(queries, rep, tables);
+            }
+        } else {
+            self.codebook.build_adt_for(queries, rep, tables);
+        }
     }
 
     fn record(&self, s: &SearchStats, elapsed: std::time::Duration) {
@@ -687,6 +967,144 @@ mod tests {
             deep.exact_dists,
             shallow.exact_dists
         );
+    }
+
+    #[test]
+    fn skewed_mixed_batch_matches_serial_in_order() {
+        use crate::api::SearchMode;
+        // A batch mixing tiny-L and huge-l_override queries (plus mode
+        // skew) must return results identical to serial execution,
+        // order-stable by input index, under the work-stealing pool.
+        let (ds, svc) = service();
+        let svc = svc.with_workers(4);
+        let items: Vec<BatchQuery> = (0..ds.n_queries())
+            .map(|i| BatchQuery {
+                q: ds.queries.row(i),
+                k: 10,
+                options: match i % 4 {
+                    // Adversarial placement: the heavy queries cluster at
+                    // the front, where contiguous chunking would pile
+                    // them onto one worker.
+                    0 => QueryOptions {
+                        l_override: Some(400),
+                        early_term_tau: Some(0),
+                        ..Default::default()
+                    },
+                    1 => QueryOptions {
+                        l_override: Some(12),
+                        ..Default::default()
+                    },
+                    2 => QueryOptions {
+                        mode: SearchMode::Accurate,
+                        ..Default::default()
+                    },
+                    _ => QueryOptions::default(),
+                },
+            })
+            .collect();
+        let serial: Vec<SearchOutput> = {
+            let mut scratch = svc.checkout_scratch();
+            items
+                .iter()
+                .map(|it| svc.search_with_options(it.q, it.k, &it.options, &mut scratch))
+                .collect()
+        };
+        let batch = svc.search_batch_mixed(&items);
+        assert_eq!(batch.len(), serial.len());
+        for (i, (b, s)) in batch.iter().zip(&serial).enumerate() {
+            let b = b.as_ref().expect("no query may fail");
+            assert_eq!(b.ids, s.ids, "query {i}: pooled batch vs serial ids");
+            assert_eq!(b.dists, s.dists, "query {i}: pooled batch vs serial dists");
+        }
+    }
+
+    #[test]
+    fn batch_stats_report_queue_wait_and_deduped_adt_builds() {
+        let (ds, svc) = service();
+        let svc = svc.with_workers(2);
+        // Duplicate-heavy batch: 4 copies of each of 8 distinct queries.
+        let vectors: Vec<Vec<f32>> = (0..32).map(|i| ds.queries.row(i % 8).to_vec()).collect();
+        let req = QueryRequest {
+            vectors,
+            k: 10,
+            options: QueryOptions {
+                want_stats: true,
+                ..Default::default()
+            },
+        };
+        let resp = svc.query(&req).unwrap();
+        assert!(!resp.has_errors());
+        let stats = resp.stats.unwrap();
+        assert_eq!(
+            stats.adt_builds, 8,
+            "32 duplicate-heavy queries must build only 8 ADT tables"
+        );
+        // 32 queries over ~2 lanes: the later tasks demonstrably queued.
+        assert!(
+            stats.queue_wait_us > 0,
+            "aggregate queue wait must be measurable, got {}",
+            stats.queue_wait_us
+        );
+        assert!(svc.stats.queue_wait_us.load(Ordering::Relaxed) >= stats.queue_wait_us);
+        // Duplicates share a table but still get their own answers.
+        for (i, nl) in resp.results.iter().enumerate() {
+            assert_eq!(nl.ids, resp.results[i % 8].ids);
+        }
+    }
+
+    #[test]
+    fn panicking_query_fails_alone_in_a_batch() {
+        use crate::api::ApiErrorCode;
+        let (ds, svc) = service();
+        let svc = svc.with_workers(4);
+        let mut nan_q = ds.queries.row(0).to_vec();
+        // No boundary to bypass: search_batch_mixed is the raw internal
+        // path, so the NaN reaches a worker and panics its rerank sort.
+        nan_q[3] = f32::NAN;
+        let items: Vec<BatchQuery> = vec![
+            BatchQuery {
+                q: ds.queries.row(1),
+                k: 5,
+                options: QueryOptions::default(),
+            },
+            BatchQuery {
+                q: &nan_q,
+                k: 5,
+                options: QueryOptions::default(),
+            },
+            BatchQuery {
+                q: ds.queries.row(2),
+                k: 5,
+                options: QueryOptions::default(),
+            },
+        ];
+        let outcomes = svc.search_batch_mixed(&items);
+        assert_eq!(outcomes[0].as_ref().unwrap().ids.len(), 5);
+        let e = outcomes[1].as_ref().unwrap_err();
+        assert_eq!(e.code, ApiErrorCode::Internal);
+        assert!(e.message.contains("query 1"), "{}", e.message);
+        assert_eq!(outcomes[2].as_ref().unwrap().ids.len(), 5);
+        // The pool survives for the next batch.
+        let ok = svc.search_batch(&[ds.queries.row(3)], 5);
+        assert_eq!(ok[0].ids.len(), 5);
+    }
+
+    #[test]
+    fn worker_pool_lifecycle_shutdown_and_resubmit() {
+        let (ds, svc) = service();
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
+        let svc = svc.with_workers(4);
+        let first = svc.search_batch(&queries, 10);
+        // Swapping widths drops the old dedicated pool (graceful join)
+        // and re-submits onto a fresh one; results must be unchanged.
+        let svc = svc.with_workers(2);
+        let second = svc.search_batch(&queries, 10);
+        let svc = svc.with_workers(1); // serial inline
+        let third = svc.search_batch(&queries, 10);
+        for ((a, b), c) in first.iter().zip(&second).zip(&third) {
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.ids, c.ids);
+        }
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! TCP front end: newline-delimited JSON requests/responses over a local
 //! socket, one handler thread per connection. Single-query requests feed
 //! the shared dynamic batcher (cross-connection coalescing); multi-query
-//! v2 batches go straight to [`SearchService::search_batch`]'s worker
-//! fan-out — one round-trip, N answers.
+//! v2 batches go straight to the service's staged batch pipeline on the
+//! persistent work-stealing exec pool — one round-trip, N answers, and
+//! with `want_stats` the response's stats report `queue_wait_us` (time
+//! the queries sat in the pool queue) and `adt_builds` (distinct ADT
+//! tables the deduplicated batch build produced). A query whose worker
+//! task panics is answered as an inline `{"error":...}` entry in ITS
+//! result slot; batch-mates are unaffected.
 //!
 //! Protocol v2 (one JSON object per line; codecs in [`crate::api::wire`]):
 //! ```text
@@ -187,8 +192,10 @@ fn answer_search(
     let QueryRequest { vectors, k, options } = request;
     let query = vectors.into_iter().next().expect("validated non-empty");
     match batcher.query_with(query, k, options) {
-        None => error_line(version, &ApiError::closed("batcher closed")),
-        Some(out) => {
+        // Closed (service shutting down) or Internal (this request's
+        // worker task panicked — its coalesced batch-mates were fine).
+        Err(e) => error_line(version, &e),
+        Ok(out) => {
             let latency_us = t0.elapsed().as_micros() as u64;
             if version == 1 {
                 wire::encode_response_v1(
@@ -234,6 +241,10 @@ fn stats_response(service: &SearchService) -> Json {
             Json::num(service.stats.early_terminated.load(Ordering::Relaxed) as f64),
         ),
         ("mean_latency_us", Json::num(service.mean_latency_us())),
+        (
+            "queue_wait_us_total",
+            Json::num(service.stats.queue_wait_us.load(Ordering::Relaxed) as f64),
+        ),
         ("dataset", Json::str(service.name.clone())),
     ])
 }
@@ -362,7 +373,7 @@ mod tests {
             },
             false,
         ));
-        let (handle, _join) = spawn(svc.clone(), BatchPolicy::default(), 1);
+        let (handle, _join) = spawn(svc.clone(), BatchPolicy::default());
         let server = Server::start(svc.clone(), handle, 0).unwrap();
         let addr = server.addr;
 

@@ -9,11 +9,19 @@
 //! forwards the whole [`QueryRequest`] (options included) to every shard
 //! and merges per query, so per-request knobs behave identically on one
 //! shard or fifty.
+//!
+//! Execution: each shard's sub-query is ONE task on the shared
+//! work-stealing pool ([`ExecPool::shared`]); inside its task a shard
+//! submits its per-query walks to the SAME pool (nested submission is
+//! deadlock-free — waiting submitters help execute). One pool bounds the
+//! machine's total compute threads, so there is no per-shard worker
+//! budget to split and no thread spawn per request.
 
 use super::SearchService;
 use crate::api::{ApiError, NeighborList, QueryRequest, QueryResponse};
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
+use crate::exec::ExecPool;
 use crate::search::{SearchOutput, SearchStats};
 
 /// A sharded index: per-shard services plus the id mapping back to the
@@ -37,15 +45,9 @@ impl ShardedService {
         assert!(n_shards >= 1);
         let n = ds.n_base();
         let per = n.div_ceil(n_shards);
-        // Split the machine's worker budget across the shards: the
-        // fan-out runs all shards concurrently, and each shard's batch
-        // path spawns up to `workers` threads — an undivided budget
-        // would put S x cores compute threads on cores CPUs.
-        let per_shard_workers = std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .div_ceil(n_shards)
-            .max(1);
+        // All shards share the process-wide exec pool (the default for
+        // built services), so total compute concurrency is bounded by
+        // the pool regardless of shard count — no budget splitting.
         let mut shards = Vec::with_capacity(n_shards);
         let mut shard_base = Vec::with_capacity(n_shards);
         for s in 0..n_shards {
@@ -63,9 +65,7 @@ impl ShardedService {
                 queries: VectorSet::zeros(0, ds.dim()),
             };
             shard_base.push(lo as u32);
-            shards.push(
-                SearchService::build(&sub, gp, pq, params, false).with_workers(per_shard_workers),
-            );
+            shards.push(SearchService::build(&sub, gp, pq, params, false));
         }
         ShardedService { shards, shard_base }
     }
@@ -74,14 +74,14 @@ impl ShardedService {
         self.shards.len()
     }
 
-    /// Fan a whole [`QueryRequest`] out to all shards in parallel (one
-    /// scoped thread per shard, each shard drawing from its own scratch
-    /// pool and worker budget), then merge each query's top-k by reported
-    /// (accurate) distance, mapping local ids back to the global space.
-    /// Thread spawn costs ~tens of µs per shard — negligible against
-    /// production per-shard search times, but a persistent pool is the
-    /// planned next step (see ROADMAP) for many-shard, short-query
-    /// workloads.
+    /// Fan a whole [`QueryRequest`] out to all shards — one task per
+    /// shard on the shared exec pool, the caller helping while it waits —
+    /// then merge each query's top-k by reported (accurate) distance,
+    /// mapping local ids back to the global space. A shard task that
+    /// panics outside the per-query walks fails the whole request as
+    /// `Internal` (a missing shard would silently degrade recall);
+    /// per-query walk panics INSIDE a shard are contained per query and
+    /// propagate through the merged response's `errors`.
     pub fn query(&self, req: &QueryRequest) -> Result<QueryResponse, ApiError> {
         let t0 = std::time::Instant::now();
         let first = self
@@ -97,23 +97,33 @@ impl ShardedService {
         let responses: Vec<QueryResponse> = if self.shards.len() == 1 {
             vec![first.query_prevalidated(req)]
         } else {
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = self
-                    .shards
-                    .iter()
-                    .map(|svc| scope.spawn(move || svc.query_prevalidated(req)))
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard search panicked"))
-                    .collect()
-            })
+            let fanned = ExecPool::shared()
+                .run_collect(self.shards.len(), |s| self.shards[s].query_prevalidated(req));
+            let mut responses = Vec::with_capacity(fanned.len());
+            for (s, r) in fanned.into_iter().enumerate() {
+                match r.value {
+                    Some(resp) => responses.push(resp),
+                    None => {
+                        return Err(ApiError::internal(format!("shard {s} fan-out task panicked")))
+                    }
+                }
+            }
+            responses
         };
 
         let n_queries = req.vectors.len();
         let mut results = Vec::with_capacity(n_queries);
+        let mut errors: Vec<Option<ApiError>> = Vec::new();
         let mut merged: Vec<(f32, u32)> = Vec::with_capacity(req.k * self.shards.len());
         for qi in 0..n_queries {
+            // A query that failed on ANY shard is reported failed: a
+            // partial merge would silently return degraded neighbors.
+            if let Some(e) = responses.iter().find_map(|r| r.error_for(qi)) {
+                errors.resize(n_queries, None);
+                errors[qi] = Some(e.clone());
+                results.push(NeighborList::default());
+                continue;
+            }
             merged.clear();
             for (s, resp) in responses.iter().enumerate() {
                 let nl = &resp.results[qi];
@@ -140,6 +150,7 @@ impl ShardedService {
         });
         Ok(QueryResponse {
             results,
+            errors,
             stats,
             server_latency_us: t0.elapsed().as_micros() as u64,
         })

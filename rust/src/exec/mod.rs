@@ -1,0 +1,563 @@
+//! The persistent work-stealing execution engine: ONE substrate for every
+//! parallel stage in the serving stack.
+//!
+//! Proxima's throughput argument (§IV) is a scheduling argument: the
+//! customized dataflow keeps every compute lane busy by overlapping ADT
+//! preparation with graph traversal, and NDSEARCH / SmartANNS make the
+//! same point for near-data ANNS generally — *scheduling*, not raw FLOPs,
+//! decides throughput. The software analogue used to stop one layer
+//! short: every batch spun up scoped threads and chunked queries
+//! contiguously, so one slow query (huge `l_override`, hybrid rerank)
+//! idled a whole worker while its chunk-mates waited. [`ExecPool`]
+//! replaces that with:
+//!
+//! * **long-lived workers** (`proxima-exec-N`) spawned once and joined on
+//!   drop — no per-batch thread churn;
+//! * a **hand-rolled injector + per-worker steal deques** (no crossbeam):
+//!   submissions land in the global injector; a worker pops its own deque
+//!   newest-first (cache locality), refills from the injector in small
+//!   grabs, and steals oldest-first from a sibling when both are empty,
+//!   so a skewed batch rebalances at per-task granularity;
+//! * **helping submitters**: the thread that calls [`ExecPool::run`]
+//!   executes pending tasks itself while it waits, so a pool with `T`
+//!   threads serves `T + submitters` lanes, nested submissions (the shard
+//!   fan-out submitting per-query walks from inside a shard task) cannot
+//!   deadlock, and a pool with zero threads degrades to inline serial
+//!   execution;
+//! * **per-task panic containment**: a panicking task is caught, reported
+//!   in its [`TaskMeta`], and never poisons the pool or its batch-mates
+//!   (the old scoped-join path aborted the whole batch);
+//! * **queue-wait metering**: every task records submission→start time,
+//!   which the coordinator surfaces as the `queue_wait_us` field of
+//!   [`crate::search::SearchStats`] / the v2 wire stats.
+//!
+//! Callers share one process-wide pool ([`ExecPool::shared`], sized to
+//! the machine) unless they need a dedicated width
+//! ([`ExecPool::new`]). Per-worker state (the search stack's pinned
+//! `QueryScratch`) lives in thread-locals on the worker threads, so it
+//! persists across batches without checkout traffic.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+/// How a task fared: did it panic, and how long it sat queued before a
+/// lane picked it up.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskMeta {
+    /// Submission → execution-start wait in microseconds.
+    pub queue_wait_us: u64,
+    /// The task panicked (it was caught; batch-mates were unaffected).
+    pub panicked: bool,
+}
+
+/// A collected task result: `value` is `None` iff the task panicked.
+#[derive(Debug)]
+pub struct TaskResult<T> {
+    pub value: Option<T>,
+    pub queue_wait_us: u64,
+}
+
+impl<T> TaskResult<T> {
+    pub fn panicked(&self) -> bool {
+        self.value.is_none()
+    }
+}
+
+/// Jobs a worker moves from the injector into its own deque per grab
+/// (amortizes injector lock traffic without hoarding work it cannot
+/// start — stealing reclaims any excess).
+const INJECTOR_GRAB: usize = 4;
+
+/// The persistent worker pool. Dropping it shuts the workers down
+/// gracefully: the queue is drained, threads are joined.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Shared {
+    /// Global submission queue (FIFO).
+    injector: Mutex<VecDeque<Job>>,
+    /// Per-worker deques: owner pops back (newest), thieves pop front
+    /// (oldest).
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Jobs queued (in the injector or a deque) but not yet started.
+    pending: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Idle-worker parking (paired with `wake`).
+    sleep: Mutex<()>,
+    wake: Condvar,
+    /// Rotates steal victims so thieves don't convoy on worker 0.
+    steal_seed: AtomicUsize,
+}
+
+/// One queued task: an index into a [`BatchShared`] that lives on the
+/// submitting thread's stack. Soundness: `run_dyn` does not return until
+/// every job of its batch has executed, so the raw pointer never
+/// outlives the batch (the same discipline as `std::thread::scope`).
+struct Job {
+    batch: *const BatchShared,
+    index: usize,
+    enqueued: Instant,
+}
+
+// SAFETY: the pointee is kept alive by the submitting frame until all of
+// the batch's jobs (each holding this pointer) have completed, and
+// `BatchShared`'s interior is Sync.
+unsafe impl Send for Job {}
+
+/// Per-batch coordination block, stack-allocated in [`ExecPool::run_dyn`].
+struct BatchShared {
+    /// The borrowed task closure, lifetime-erased. Valid until the batch
+    /// completes (see [`Job`] safety note).
+    task: &'static (dyn Fn(usize) + Sync),
+    metas: Vec<SyncCell<TaskMeta>>,
+    remaining: AtomicUsize,
+    /// Completion handshake. The finishing worker flips the flag UNDER
+    /// the lock, so a submitter that observes `true` under the same lock
+    /// knows the finisher is out of the batch's memory.
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+/// `UnsafeCell` whose disjoint-index access discipline makes it Sync:
+/// slot `i` is written only by the single task that owns index `i`.
+struct SyncCell<T>(UnsafeCell<T>);
+unsafe impl<T: Send> Sync for SyncCell<T> {}
+
+/// Mutex lock that shrugs off poisoning: tasks run *outside* every pool
+/// lock (panics are caught around the task body), so a poisoned pool
+/// lock can only mean an OOM-class abort was already in flight.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl ExecPool {
+    /// Pool with `threads` long-lived worker threads. `threads == 0` is a
+    /// valid degenerate pool: [`Self::run`] executes everything inline on
+    /// the submitting thread (the serial baseline).
+    pub fn new(threads: usize) -> ExecPool {
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            steal_seed: AtomicUsize::new(0),
+        });
+        let threads = (0..threads)
+            .map(|w| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("proxima-exec-{w}"))
+                    .spawn(move || worker_loop(&sh, w))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        ExecPool { shared, threads }
+    }
+
+    /// The process-wide shared pool, sized so that `threads + 1 helping
+    /// submitter = available cores`. Every serving-stack component —
+    /// batch search, batched ADT builds, the coordinator fan-out, the
+    /// TCP v2 path — submits here unless given a dedicated pool.
+    pub fn shared() -> &'static Arc<ExecPool> {
+        static POOL: OnceLock<Arc<ExecPool>> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            Arc::new(ExecPool::new(cores.saturating_sub(1)))
+        })
+    }
+
+    /// Worker threads owned by this pool (the submitting thread adds one
+    /// more lane while it waits).
+    pub fn threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Execute `f(0..n)` across the pool, blocking until every task has
+    /// run. Task panics are contained per index. The calling thread
+    /// executes pending tasks while it waits.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: F) -> Vec<TaskMeta> {
+        self.run_dyn(n, &f)
+    }
+
+    /// [`Self::run`] collecting each task's return value (slot `i` stays
+    /// `None` iff task `i` panicked).
+    pub fn run_collect<T, F>(&self, n: usize, f: F) -> Vec<TaskResult<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<SyncCell<Option<T>>> =
+            (0..n).map(|_| SyncCell(UnsafeCell::new(None))).collect();
+        let metas = self.run_dyn(n, &|i| {
+            let v = f(i);
+            // SAFETY: task `i` is the only writer of slot `i`, and the
+            // batch barrier orders these writes before the reads below.
+            unsafe { *slots[i].0.get() = Some(v) };
+        });
+        slots
+            .into_iter()
+            .zip(metas)
+            .map(|(s, m)| TaskResult {
+                value: s.0.into_inner(),
+                queue_wait_us: m.queue_wait_us,
+            })
+            .collect()
+    }
+
+    /// [`Self::run`] with exclusive access to one slice element per task
+    /// (disjoint `&mut` across workers) — the batched ADT build writes
+    /// its pooled tables through this.
+    pub fn run_on_slice<T, F>(&self, items: &mut [T], f: F) -> Vec<TaskMeta>
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        struct SendPtr<T>(*mut T);
+        unsafe impl<T> Sync for SendPtr<T> {}
+        let ptr = SendPtr(items.as_mut_ptr());
+        let n = items.len();
+        self.run_dyn(n, &move |i| {
+            // SAFETY: each index is executed exactly once, so the &mut
+            // borrows are disjoint; `items` outlives the batch barrier.
+            let item = unsafe { &mut *ptr.0.add(i) };
+            f(i, item);
+        })
+    }
+
+    /// The engine: lifetime-erase the borrowed closure, queue one job per
+    /// index through the injector, then help execute until the batch
+    /// completes. See [`Job`] for the soundness argument.
+    fn run_dyn(&self, n: usize, task: &(dyn Fn(usize) + Sync)) -> Vec<TaskMeta> {
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 || self.threads.is_empty() {
+            // Inline fast path: a single task, or a thread-less pool
+            // (the serial baseline) — no lane to overlap with, so skip
+            // the queues and execute in submission order.
+            return (0..n)
+                .map(|i| TaskMeta {
+                    queue_wait_us: 0,
+                    panicked: catch_unwind(AssertUnwindSafe(|| task(i))).is_err(),
+                })
+                .collect();
+        }
+        // SAFETY: `BatchShared` (and thus this reference) is kept alive
+        // by this frame until `remaining == 0` and the finishing worker
+        // has left the completion critical section.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        let batch = BatchShared {
+            task,
+            metas: (0..n).map(|_| SyncCell(UnsafeCell::new(TaskMeta::default()))).collect(),
+            remaining: AtomicUsize::new(n),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        };
+        let sh = &self.shared;
+        let enqueued = Instant::now();
+        // Publish BEFORE queueing so `pending` never underflows: a job
+        // can only be popped after its increment.
+        sh.pending.fetch_add(n, Ordering::Release);
+        {
+            let mut inj = lock(&sh.injector);
+            for index in 0..n {
+                inj.push_back(Job {
+                    batch: &batch,
+                    index,
+                    enqueued,
+                });
+            }
+        }
+        {
+            let _g = lock(&sh.sleep);
+            sh.wake.notify_all();
+        }
+
+        // Help until the batch completes: execute anything runnable (our
+        // tasks, or other batches' — progress either way), then park on
+        // the completion condvar.
+        loop {
+            while batch.remaining.load(Ordering::Acquire) > 0 {
+                match sh.find_job(None) {
+                    Some(job) => sh.execute_job(job),
+                    None => break,
+                }
+            }
+            let g = lock(&batch.done);
+            if *g {
+                break;
+            }
+            // Tasks are all taken but still running elsewhere. The timed
+            // wait is a belt-and-braces re-poll; the finishing worker's
+            // notify is the real wake-up.
+            let (g, _) = batch
+                .done_cv
+                .wait_timeout(g, Duration::from_millis(1))
+                .unwrap_or_else(|p| p.into_inner());
+            if *g {
+                break;
+            }
+        }
+        batch.metas.into_iter().map(|c| c.0.into_inner()).collect()
+    }
+}
+
+impl Drop for ExecPool {
+    /// Graceful shutdown: flag, wake everyone, join. Workers drain any
+    /// queued jobs before exiting (there can be none in a well-formed
+    /// program — every `run` blocks until its batch completes — but the
+    /// drain keeps the invariant local).
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = lock(&self.shared.sleep);
+            self.shared.wake.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, me: usize) {
+    loop {
+        if let Some(job) = sh.find_job(Some(me)) {
+            sh.execute_job(job);
+            continue;
+        }
+        let g = lock(&sh.sleep);
+        if sh.shutdown.load(Ordering::Acquire) {
+            // Queue already drained (find_job just returned None).
+            break;
+        }
+        if sh.pending.load(Ordering::Acquire) > 0 {
+            // A push slipped in between our failed scan and the lock.
+            drop(g);
+            std::thread::yield_now();
+            continue;
+        }
+        // The timeout only bounds a lost-wakeup window that the
+        // pending-check above should already close.
+        let _ = sh.wake.wait_timeout(g, Duration::from_millis(50));
+    }
+}
+
+impl Shared {
+    /// One scheduling decision: own deque (newest first), then the
+    /// injector (grabbing a small chunk into the own deque), then steal
+    /// the oldest job from a sibling. `me == None` for helping
+    /// submitters, which have no deque of their own but may steal from
+    /// anyone — including, in nested submissions, the deque of the very
+    /// worker they are running on.
+    fn find_job(&self, me: Option<usize>) -> Option<Job> {
+        if let Some(w) = me {
+            if let Some(job) = lock(&self.deques[w]).pop_back() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(job);
+            }
+        }
+        {
+            let mut inj = lock(&self.injector);
+            if let Some(job) = inj.pop_front() {
+                if let Some(w) = me {
+                    let mut own = lock(&self.deques[w]);
+                    for _ in 0..INJECTOR_GRAB {
+                        match inj.pop_front() {
+                            Some(extra) => own.push_back(extra),
+                            None => break,
+                        }
+                    }
+                }
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(job);
+            }
+        }
+        let n = self.deques.len();
+        if n > 0 {
+            let start = self.steal_seed.fetch_add(1, Ordering::Relaxed);
+            for off in 0..n {
+                let victim = (start + off) % n;
+                if Some(victim) == me {
+                    continue;
+                }
+                if let Some(job) = lock(&self.deques[victim]).pop_front() {
+                    self.pending.fetch_sub(1, Ordering::AcqRel);
+                    return Some(job);
+                }
+            }
+        }
+        None
+    }
+
+    /// Run one job: meter queue wait, contain panics, publish the meta,
+    /// and perform the completion handshake when this was the batch's
+    /// last task.
+    fn execute_job(&self, job: Job) {
+        // SAFETY: holding a Job proves its batch is still alive (see Job).
+        let batch = unsafe { &*job.batch };
+        let queue_wait_us = job.enqueued.elapsed().as_micros() as u64;
+        let panicked = catch_unwind(AssertUnwindSafe(|| (batch.task)(job.index))).is_err();
+        // SAFETY: task `index` is this batch's only writer of this slot.
+        unsafe {
+            *batch.metas[job.index].0.get() = TaskMeta {
+                queue_wait_us,
+                panicked,
+            };
+        }
+        if batch.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = lock(&batch.done);
+            *done = true;
+            batch.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let pool = ExecPool::new(3);
+        let out = pool.run_collect(64, |i| i * i);
+        assert_eq!(out.len(), 64);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.value, Some(i * i), "slot {i}");
+            assert!(!r.panicked());
+        }
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_inline() {
+        let pool = ExecPool::new(0);
+        assert_eq!(pool.threads(), 0);
+        let out = pool.run_collect(16, |i| i + 1);
+        assert!(out.iter().enumerate().all(|(i, r)| r.value == Some(i + 1)));
+        assert!(out.iter().all(|r| r.queue_wait_us == 0));
+    }
+
+    #[test]
+    fn skewed_tasks_rebalance_across_workers() {
+        // One heavy task pinned at index 0 must not serialize the rest:
+        // with stealing, total wall time ~ max(heavy, sum(light)/lanes),
+        // not heavy + light-chunk.
+        let pool = ExecPool::new(2);
+        let t0 = Instant::now();
+        let heavy = Duration::from_millis(60);
+        pool.run(16, |i| {
+            if i == 0 {
+                std::thread::sleep(heavy);
+            } else {
+                std::thread::sleep(Duration::from_millis(4));
+            }
+        });
+        let wall = t0.elapsed();
+        // Contiguous 3-way chunking would put ~5 light tasks behind the
+        // heavy one: >= 80 ms. Stealing keeps it near the heavy task.
+        assert!(
+            wall < heavy + Duration::from_millis(40),
+            "skewed batch took {wall:?}"
+        );
+    }
+
+    #[test]
+    fn panics_are_contained_per_task() {
+        let pool = ExecPool::new(2);
+        let out = pool.run_collect(8, |i| {
+            if i == 3 {
+                panic!("task 3 blows up");
+            }
+            i
+        });
+        for (i, r) in out.iter().enumerate() {
+            if i == 3 {
+                assert!(r.panicked(), "task 3 must be marked panicked");
+                assert_eq!(r.value, None);
+            } else {
+                assert_eq!(r.value, Some(i), "task {i} must be unaffected");
+            }
+        }
+        // The pool survives and serves the next batch.
+        let again = pool.run_collect(4, |i| i);
+        assert!(again.iter().all(|r| !r.panicked()));
+    }
+
+    #[test]
+    fn queue_wait_is_metered() {
+        // One lane (one worker thread; the submitter helps = 2 lanes, but
+        // 8 sleeping tasks over 2 lanes still queue behind each other).
+        let pool = ExecPool::new(1);
+        let out = pool.run_collect(8, |_| std::thread::sleep(Duration::from_millis(5)));
+        let max_wait = out.iter().map(|r| r.queue_wait_us).max().unwrap();
+        assert!(
+            max_wait >= 5_000,
+            "last task must have waited >= one task's service time, got {max_wait} us"
+        );
+    }
+
+    #[test]
+    fn shutdown_and_resubmit_lifecycle() {
+        let counter = AtomicU64::new(0);
+        let pool = ExecPool::new(3);
+        pool.run(32, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+        drop(pool); // joins all workers
+        let pool = ExecPool::new(2);
+        pool.run(16, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 48);
+        // Dropping with an empty queue is also clean.
+        drop(pool);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        // Outer tasks submit inner batches to the SAME pool (the shard
+        // fan-out shape). Helping submitters keep every lane productive.
+        let pool = ExecPool::new(2);
+        let total = AtomicU64::new(0);
+        let outer = pool.run_collect(4, |_| {
+            let inner = pool.run_collect(8, |j| j as u64);
+            inner.iter().map(|r| r.value.unwrap()).sum::<u64>()
+        });
+        for r in &outer {
+            total.fetch_add(r.value.unwrap(), Ordering::Relaxed);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 28);
+    }
+
+    #[test]
+    fn run_on_slice_gives_disjoint_mut_access() {
+        let pool = ExecPool::new(2);
+        let mut items: Vec<u64> = (0..40).collect();
+        let metas = pool.run_on_slice(&mut items, |i, v| *v = *v * 2 + i as u64);
+        assert_eq!(metas.len(), 40);
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn shared_pool_is_a_singleton() {
+        let a = Arc::as_ptr(ExecPool::shared());
+        let b = Arc::as_ptr(ExecPool::shared());
+        assert_eq!(a, b);
+        // And it executes.
+        let out = ExecPool::shared().run_collect(4, |i| i);
+        assert!(out.iter().enumerate().all(|(i, r)| r.value == Some(i)));
+    }
+}

@@ -207,6 +207,10 @@ pub fn per_query(stats: &crate::search::SearchStats, n: usize) -> crate::search:
         bytes_raw: stats.bytes_raw / n as u64,
         et_iterations: stats.et_iterations / n,
         early_terminated: stats.early_terminated,
+        // Kept as the aggregate DISTINCT-table count: dividing by n would
+        // truncate to 0 exactly when dedup worked (adt_builds < n).
+        adt_builds: stats.adt_builds,
+        queue_wait_us: stats.queue_wait_us / n as u64,
     }
 }
 

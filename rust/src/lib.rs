@@ -24,13 +24,20 @@
 //!   `QueryResponse` / `QueryOptions` / `ApiError`) — the single contract
 //!   every entry point speaks, from in-process `SearchService::query`
 //!   through the batcher and shard fan-out to the v2 multi-query TCP wire;
+//! * the **persistent work-stealing execution engine** (`exec::ExecPool`:
+//!   long-lived workers, hand-rolled injector + steal deques, per-task
+//!   panic containment and queue-wait metering) — the single execution
+//!   substrate for batch search, batched ADT builds, and the coordinator
+//!   fan-out;
 //! * a thread-based **coordinator** (router, batcher, TCP server, sharded
-//!   scale-out, and a `search_batch` API over a fixed worker pool with
-//!   per-worker scratch);
+//!   scale-out, and a `search_batch` API riding the shared exec pool with
+//!   per-worker pinned scratch and a staged batch pipeline: one batched,
+//!   deduplicated ADT-build pass before the per-query walks);
 //! * the figure/table harnesses regenerating the paper's evaluation.
 
 pub mod api;
 pub mod config;
+pub mod exec;
 pub mod dataset;
 pub mod distance;
 pub mod gap;

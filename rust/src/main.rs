@@ -162,13 +162,19 @@ fn cmd_search(cfg: &Config) -> Result<()> {
 
 fn cmd_serve(cfg: &Config) -> Result<()> {
     let (_ds, svc) = service_from_cfg(cfg)?;
+    // `workers` picks the batch-execution width (0 = the shared pool's
+    // machine-sized default); batches execute as staged pipelines on the
+    // persistent work-stealing exec pool either way.
+    let svc = match cfg.get_usize("workers", 0) {
+        0 => svc,
+        w => svc.with_workers(w),
+    };
     let svc = Arc::new(svc);
     let policy = BatchPolicy {
         max_batch: cfg.get_usize("batch", 16),
         max_wait: std::time::Duration::from_millis(cfg.get_u64("batch_wait_ms", 2)),
     };
-    let workers = cfg.get_usize("workers", 2);
-    let (handle, _join) = spawn(svc.clone(), policy, workers);
+    let (handle, _join) = spawn(svc.clone(), policy);
     let port = cfg.get_usize("port", 7878) as u16;
     let server = Server::start(svc, handle, port)?;
     println!("proxima serving on {}", server.addr);

@@ -98,6 +98,107 @@ impl Adt {
     }
 }
 
+/// Pooled state for a batched ADT build ([`PqCodebook::build_adt_batch`]):
+/// one table per DISTINCT query vector in the batch, plus the query →
+/// table mapping. Reused across batches — tables, mapping, and dedup
+/// buffers all retain their allocations, so the staged ADT pass of the
+/// batch pipeline is allocation-free in steady state.
+#[derive(Debug, Default)]
+pub struct AdtBatch {
+    /// One table per distinct query; entries beyond [`Self::distinct`]
+    /// are idle pool capacity from earlier, larger batches.
+    tables: Vec<Adt>,
+    /// `map[i]` = table index answering batch query `i`.
+    map: Vec<u32>,
+    /// `rep[d]` = index of the batch query whose vector table `d` was
+    /// built from (its first occurrence).
+    rep: Vec<u32>,
+    /// Bit-hash per distinct vector (dedup prefilter).
+    hashes: Vec<u64>,
+}
+
+impl AdtBatch {
+    pub fn new() -> AdtBatch {
+        AdtBatch::default()
+    }
+
+    /// Dedup `queries` by bitwise vector equality, (re)using the pooled
+    /// buffers. After `plan`, `distinct() <= queries.len()` tables are
+    /// ready to be filled via [`PqCodebook::build_adt_for`].
+    pub fn plan(&mut self, queries: &[&[f32]]) {
+        self.map.clear();
+        self.rep.clear();
+        self.hashes.clear();
+        for (i, q) in queries.iter().enumerate() {
+            let h = bits_hash(q);
+            let mut found = None;
+            for d in 0..self.rep.len() {
+                if self.hashes[d] == h && bits_eq(queries[self.rep[d] as usize], q) {
+                    found = Some(d);
+                    break;
+                }
+            }
+            let d = match found {
+                Some(d) => d,
+                None => {
+                    self.rep.push(i as u32);
+                    self.hashes.push(h);
+                    self.rep.len() - 1
+                }
+            };
+            self.map.push(d as u32);
+        }
+        while self.tables.len() < self.rep.len() {
+            self.tables.push(Adt::default());
+        }
+    }
+
+    /// Number of distinct tables the current plan needs (the "table
+    /// builds" a duplicate-heavy batch saves show up as
+    /// `distinct() < queries.len()`).
+    pub fn distinct(&self) -> usize {
+        self.rep.len()
+    }
+
+    /// Table index answering batch query `i`.
+    pub fn table_index(&self, i: usize) -> usize {
+        self.map[i] as usize
+    }
+
+    /// Whether batch query `i` is the occurrence that triggered its
+    /// table's build (duplicates report false).
+    pub fn is_fresh(&self, i: usize) -> bool {
+        self.rep[self.map[i] as usize] as usize == i
+    }
+
+    /// The built table for table index `d` (see [`Self::table_index`]).
+    pub fn table(&self, d: usize) -> &Adt {
+        &self.tables[d]
+    }
+
+    /// The planned (representative-query, tables) pair for the build
+    /// stage; chunk both in lockstep for parallel group builds.
+    pub fn split(&mut self) -> (&[u32], &mut [Adt]) {
+        let d = self.rep.len();
+        (&self.rep, &mut self.tables[..d])
+    }
+}
+
+/// FNV-1a over the raw f32 bit patterns (dedup prefilter; NaN-stable).
+fn bits_hash(v: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in v {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Bitwise vector equality (so NaN payloads dedup consistently too).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 impl PqCodebook {
     pub fn dsub(&self) -> usize {
         self.dim / self.m
@@ -225,6 +326,75 @@ impl PqCodebook {
         if bias != 0.0 {
             for t in table.iter_mut().take(self.c) {
                 *t += bias;
+            }
+        }
+    }
+
+    /// Build ADTs for a whole batch in one staged pass: dedup `queries`
+    /// (bitwise equality — repeated vectors in a batch share one table),
+    /// then a blocked, GEMM-shaped sweep fills one pooled table per
+    /// DISTINCT query. `batch` retains its allocations, so steady-state
+    /// repeated builds of same-shaped batches are allocation-free.
+    ///
+    /// Numerical contract: every table entry is computed by exactly the
+    /// same `metric.partial` call as [`Self::build_adt_into`], so the
+    /// batched build is bitwise identical to N independent builds.
+    pub fn build_adt_batch(&self, queries: &[&[f32]], batch: &mut AdtBatch) {
+        batch.plan(queries);
+        let (rep, tables) = batch.split();
+        self.build_adt_for(queries, rep, tables);
+    }
+
+    /// The blocked sweep behind [`Self::build_adt_batch`]: fill
+    /// `tables[i]` for `queries[rep[i]]`. The loop nest is
+    /// subspace → centroid-block → query, so each centroid block is
+    /// loaded once and swept across every query in the group (the
+    /// GEMM-shaped dataflow of the paper's ADT stage) instead of being
+    /// re-streamed per query. Callers may split `rep`/`tables` into
+    /// chunks and run the groups on parallel workers — the entries are
+    /// disjoint per table.
+    pub fn build_adt_for(&self, queries: &[&[f32]], rep: &[u32], tables: &mut [Adt]) {
+        assert_eq!(rep.len(), tables.len());
+        for &r in rep {
+            // Same contract as `build_adt_into`: a wrong-length vector
+            // must fail loudly, not silently build a table from a
+            // prefix (an over-long vector would otherwise pass the
+            // slicing below and return well-formed wrong distances).
+            assert_eq!(
+                queries[r as usize].len(),
+                self.dim,
+                "ADT batch build: query/codebook dimension mismatch"
+            );
+        }
+        let dsub = self.dsub();
+        const CI_BLOCK: usize = 32;
+        for t in tables.iter_mut() {
+            t.m = self.m;
+            t.c = self.c;
+            t.table.clear();
+            t.table.resize(self.m * self.c, 0.0);
+        }
+        for sub in 0..self.m {
+            let mut ci0 = 0;
+            while ci0 < self.c {
+                let ci1 = (ci0 + CI_BLOCK).min(self.c);
+                for (ti, t) in tables.iter_mut().enumerate() {
+                    let q = queries[rep[ti] as usize];
+                    let qv = &q[sub * dsub..(sub + 1) * dsub];
+                    let row = &mut t.table[sub * self.c..(sub + 1) * self.c];
+                    for ci in ci0..ci1 {
+                        row[ci] = self.metric.partial(qv, self.centroid(sub, ci));
+                    }
+                }
+                ci0 = ci1;
+            }
+        }
+        let bias = self.metric.adt_bias();
+        if bias != 0.0 {
+            for t in tables.iter_mut() {
+                for v in t.table.iter_mut().take(self.c) {
+                    *v += bias;
+                }
             }
         }
     }
@@ -382,6 +552,51 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn batched_adt_build_matches_n_single_builds() {
+        // The staged batch build must be bitwise identical to N
+        // independent builds, for every metric's partial/bias shape.
+        for metric in [Metric::L2, Metric::Ip, Metric::Angular] {
+            let ds = tiny_uniform(200, 16, metric, 91);
+            let cb = PqCodebook::train(&ds.base, metric, 4, 16, 200, 6, 9);
+            let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
+            let mut batch = AdtBatch::new();
+            cb.build_adt_batch(&queries, &mut batch);
+            assert_eq!(batch.distinct(), queries.len(), "uniform queries are distinct");
+            for (i, q) in queries.iter().enumerate() {
+                let single = cb.build_adt(q);
+                let t = batch.table(batch.table_index(i));
+                assert_eq!(t.m, single.m);
+                assert_eq!(t.c, single.c);
+                assert_eq!(
+                    t.table, single.table,
+                    "{metric:?} query {i}: batched table must be bitwise identical"
+                );
+                assert!(batch.is_fresh(i));
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_heavy_batches_build_fewer_tables() {
+        let (ds, cb, _codes) = trained(200, 16, 4, 16);
+        // 24 queries cycling over 6 distinct vectors.
+        let queries: Vec<&[f32]> = (0..24).map(|i| ds.queries.row(i % 6)).collect();
+        let mut batch = AdtBatch::new();
+        cb.build_adt_batch(&queries, &mut batch);
+        assert_eq!(batch.distinct(), 6, "24 queries, 6 tables");
+        for (i, _) in queries.iter().enumerate() {
+            assert_eq!(batch.table_index(i), i % 6, "dedup maps to first occurrence");
+            assert_eq!(batch.is_fresh(i), i < 6, "only first occurrences are fresh");
+            let want = cb.build_adt(ds.queries.row(i % 6));
+            assert_eq!(batch.table(batch.table_index(i)).table, want.table);
+        }
+        // Replanning a smaller batch reuses the pooled tables.
+        let small: Vec<&[f32]> = (0..3).map(|i| ds.queries.row(i)).collect();
+        cb.build_adt_batch(&small, &mut batch);
+        assert_eq!(batch.distinct(), 3);
     }
 
     #[test]

@@ -49,6 +49,14 @@ pub struct SearchStats {
     pub et_iterations: usize,
     /// Whether the query terminated early (before T reached L).
     pub early_terminated: bool,
+    /// ADT tables built for this query (batch pipelines dedup identical
+    /// query vectors, so a duplicate-heavy batch aggregates FEWER builds
+    /// than queries; `Accurate` mode builds none).
+    pub adt_builds: usize,
+    /// Time this query sat in the exec-pool queue before a worker lane
+    /// picked it up, in microseconds (0 when answered inline). Summed
+    /// over the batch in aggregated stats.
+    pub queue_wait_us: u64,
 }
 
 impl SearchStats {
@@ -66,6 +74,8 @@ impl SearchStats {
         self.bytes_raw += o.bytes_raw;
         self.et_iterations += o.et_iterations;
         self.early_terminated |= o.early_terminated;
+        self.adt_builds += o.adt_builds;
+        self.queue_wait_us += o.queue_wait_us;
     }
 }
 
@@ -152,12 +162,16 @@ mod tests {
             bytes_raw: 25,
             et_iterations: 1,
             early_terminated: true,
+            adt_builds: 1,
+            queue_wait_us: 40,
         };
         a.add(&b);
         a.add(&b);
         assert_eq!(a.pq_dists, 10);
         assert_eq!(a.total_bytes(), 350);
         assert!(a.early_terminated);
+        assert_eq!(a.adt_builds, 2);
+        assert_eq!(a.queue_wait_us, 80);
     }
 
     #[test]

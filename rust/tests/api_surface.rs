@@ -39,7 +39,7 @@ fn service() -> (Dataset, Arc<SearchService>) {
 }
 
 fn serve(svc: Arc<SearchService>) -> Server {
-    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default(), 2);
+    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default());
     Server::start(svc, handle, 0).unwrap()
 }
 
@@ -134,6 +134,97 @@ fn per_request_options_change_behavior_in_process_and_over_tcp() {
         .unwrap();
     assert_eq!(one.results.len(), 1);
     assert_eq!(one.stats.as_ref().unwrap().pq_dists, 0);
+
+    client.shutdown().unwrap();
+    server.stop();
+}
+
+/// Acceptance criterion (work-stealing pool): a SKEWED batch — heavy
+/// wide-list queries mixed with tiny-list ones — answered over the pool
+/// must match per-query serial execution result-for-result, in input
+/// order, both in-process and across one v2 wire round-trip.
+#[test]
+fn skewed_batch_over_the_pool_matches_serial() {
+    let (ds, svc) = service();
+    let queries: Vec<&[f32]> = (0..8).map(|qi| ds.queries.row(qi)).collect();
+    // Heavy options: a wide candidate list with early termination off —
+    // the per-query cost skew that used to idle chunked workers.
+    let heavy = QueryOptions {
+        l_override: Some(300),
+        early_term_tau: Some(0),
+        want_stats: true,
+        ..Default::default()
+    };
+
+    let batch = svc
+        .query(&QueryRequest::batch(&queries, 10).with_options(heavy))
+        .unwrap();
+    assert!(!batch.has_errors());
+
+    let server = serve(svc);
+    let mut client = Client::connect(server.addr).unwrap();
+    let wire = client.search_batch(&queries, 10, &heavy).unwrap();
+    for (qi, q) in queries.iter().enumerate() {
+        let serial = client.search_with_options(q, 10, &heavy).unwrap();
+        assert_eq!(
+            batch.results[qi], serial.results[0],
+            "query {qi}: pooled batch vs serial under skewed options"
+        );
+        assert_eq!(
+            wire.results[qi], serial.results[0],
+            "query {qi}: wire batch vs serial under skewed options"
+        );
+    }
+    client.shutdown().unwrap();
+    server.stop();
+}
+
+/// The staged batch pipeline is observable end-to-end: a duplicate-heavy
+/// v2 wire batch reports FEWER ADT builds than queries (dedup) plus a
+/// measurable queue-wait stat, and duplicates answer identically.
+#[test]
+fn wire_batch_stats_expose_adt_dedup_and_queue_wait() {
+    let (ds, svc) = service();
+    let server = serve(svc);
+    let mut client = Client::connect(server.addr).unwrap();
+
+    // 24 queries cycling 6 distinct vectors.
+    let queries: Vec<&[f32]> = (0..24).map(|qi| ds.queries.row(qi % 6)).collect();
+    let resp = client
+        .search_batch(
+            &queries,
+            10,
+            &QueryOptions {
+                want_stats: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(resp.results.len(), 24);
+    let stats = resp.stats.unwrap();
+    assert_eq!(
+        stats.adt_builds, 6,
+        "24 duplicate-heavy queries must build exactly 6 ADT tables"
+    );
+    for qi in 0..24 {
+        assert_eq!(
+            resp.results[qi], resp.results[qi % 6],
+            "duplicate queries share a table but keep their own answer"
+        );
+    }
+    // Accurate mode builds no tables at all.
+    let acc = client
+        .search_batch(
+            &queries[..4],
+            10,
+            &QueryOptions {
+                mode: SearchMode::Accurate,
+                want_stats: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(acc.stats.unwrap().adt_builds, 0);
 
     client.shutdown().unwrap();
     server.stop();

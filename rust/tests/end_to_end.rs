@@ -124,7 +124,7 @@ fn serve_concurrent_clients_end_to_end() {
         false,
     ));
     let gt = brute_force(&ds, 10);
-    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default(), 2);
+    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default());
     let server = Server::start(svc.clone(), handle, 0).unwrap();
     let addr = server.addr;
 

@@ -1,17 +1,19 @@
-//! Steady-state allocation check for the unified kernel: once scratch,
-//! ADT table and output buffers are warm, answering a query must perform
-//! ZERO heap allocations (the acceptance bar for the `QueryScratch`
-//! pooling refactor).
+//! Steady-state allocation checks for the query hot path: once scratch,
+//! ADT tables and output buffers are warm, (1) answering a query must
+//! perform ZERO heap allocations (the acceptance bar for the
+//! `QueryScratch` pooling refactor — per-worker scratch persists across
+//! batches), and (2) the staged batched ADT build must reuse its pooled
+//! tables and dedup state across batches without allocating.
 //!
 //! The counting allocator tracks a thread-local counter so allocations
-//! from other test-harness threads cannot pollute the measurement. This
-//! file intentionally holds a single test.
+//! from other test-harness threads cannot pollute the measurement; each
+//! test here runs its whole measured path on its own thread.
 
 use proxima::config::{GraphParams, SearchParams};
 use proxima::dataset::synth::tiny_uniform;
 use proxima::distance::Metric;
 use proxima::graph::vamana;
-use proxima::pq::{Adt, PqCodebook};
+use proxima::pq::{Adt, AdtBatch, PqCodebook};
 use proxima::search::beam::SearchContext;
 use proxima::search::kernel::QueryScratch;
 use proxima::search::proxima::{proxima_search_into, ProximaFeatures};
@@ -119,4 +121,33 @@ fn steady_state_query_path_does_not_allocate() {
         ds.n_queries()
     );
     assert_eq!(out.ids.len(), 10);
+}
+
+#[test]
+fn steady_state_batched_adt_build_does_not_allocate() {
+    let ds = tiny_uniform(300, 16, Metric::L2, 78);
+    let cb = PqCodebook::train(&ds.base, ds.metric, 8, 32, 300, 6, 78);
+    // Duplicate-heavy batch (24 queries, 8 distinct) — the dedup plan
+    // and the distinct tables are both pooled in `AdtBatch`.
+    let queries: Vec<&[f32]> = (0..24).map(|i| ds.queries.row(i % 8)).collect();
+    let mut batch = AdtBatch::new();
+
+    // Warm: first pass sizes the plan buffers and the 8 pooled tables;
+    // second pass confirms the sizes are stable.
+    for _ in 0..2 {
+        cb.build_adt_batch(&queries, &mut batch);
+    }
+    assert_eq!(batch.distinct(), 8);
+
+    let before = THREAD_ALLOCS.with(|c| c.get());
+    cb.build_adt_batch(&queries, &mut batch);
+    let allocs = THREAD_ALLOCS.with(|c| c.get()) - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state batched ADT build allocated {allocs} times (pooled tables must be reused)"
+    );
+
+    // The pooled tables still hold correct results after reuse.
+    let want = cb.build_adt(ds.queries.row(3));
+    assert_eq!(batch.table(batch.table_index(3)).table, want.table);
 }
