@@ -26,6 +26,23 @@
 //! * the TCP wire — `Client::search` (v1 compat, single query) and
 //!   `Client::search_batch` (v2: N queries in ONE round-trip).
 //!
+//! # The index lifecycle
+//!
+//! The built index is not trapped in this process: the final phase
+//! below saves it as a versioned, checksummed artifact
+//! (`SearchService::save`), inspects the running server with the v2
+//! admin plane (`Client::status` → spec + provenance + counters), and
+//! hot-swaps the served index from the artifact (`Client::reload`)
+//! without dropping the connection — the epoch-cell swap lets in-flight
+//! queries finish on the old index while new requests hit the reloaded
+//! one. In production the phases split across processes:
+//!
+//! ```text
+//! proxima build --dataset sift-s --index data/sift-s.pxa    # once
+//! proxima serve --index data/sift-s.pxa --port 7878         # per replica
+//! {"v":2,"op":"status"}  /  {"v":2,"op":"reload","path":...}  # operate
+//! ```
+//!
 //! # The execution model behind the wire
 //!
 //! Every batch — a v2 multi-query line, a batcher flush, a shard
@@ -48,10 +65,11 @@ use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
 use proxima::coordinator::server::{Client, Server};
-use proxima::coordinator::{loadgen, SearchService};
+use proxima::coordinator::{loadgen, SearchService, ServiceCell};
 use proxima::dataset::ground_truth::brute_force;
 use proxima::dataset::synth::SynthSpec;
 use proxima::util::cli::Args;
+use proxima::util::json::Json;
 use std::sync::Arc;
 
 fn main() -> proxima::util::error::Result<()> {
@@ -82,14 +100,15 @@ fn main() -> proxima::util::error::Result<()> {
     println!("[serve] XLA runtime attached: {}", svc.runtime.is_some());
     let gt = brute_force(&ds, k);
 
+    let cell = Arc::new(ServiceCell::new(svc.clone()));
     let (handle, _join) = spawn(
-        svc.clone(),
+        cell.clone(),
         BatchPolicy {
             max_batch: 16,
             max_wait: std::time::Duration::from_millis(2),
         },
     );
-    let server = Server::start(svc.clone(), handle, 0)?;
+    let server = Server::start(cell, handle, 0)?;
     println!("[serve] listening on {}", server.addr);
 
     // Closed-loop clients.
@@ -202,6 +221,49 @@ fn main() -> proxima::util::error::Result<()> {
         sw.pq_dists > sd.pq_dists,
         "a wider list must do more PQ work"
     );
+
+    // --- Index lifecycle over the same wire: save the built index as an
+    // artifact, inspect the server, hot-swap to the artifact.
+    let art_path = std::env::temp_dir().join(format!("serve-queries-{}.pxa", std::process::id()));
+    svc.save(&art_path)?;
+    let bytes = std::fs::metadata(&art_path).map(|m| m.len()).unwrap_or(0);
+    println!("\n=== index lifecycle (save -> status -> reload) ===");
+    println!("artifact            : {} ({bytes} bytes)", art_path.display());
+
+    let status = c.status()?;
+    let source = |s: &Json| {
+        s.get("provenance")
+            .and_then(|p| p.get("source"))
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string()
+    };
+    println!(
+        "status before reload: dataset={} provenance={}",
+        status
+            .get("spec")
+            .and_then(|s| s.get("dataset"))
+            .and_then(Json::as_str)
+            .unwrap_or("?"),
+        source(&status)
+    );
+    assert_eq!(source(&status), "built");
+
+    // Hot-swap: the server opens the artifact (checksum-verified) and
+    // swaps its epoch cell; the connection stays up throughout.
+    c.reload(&art_path.display().to_string())?;
+    let status = c.status()?;
+    println!("status after reload : provenance={}", source(&status));
+    assert_eq!(source(&status), "artifact");
+    let probe_q = ds.queries.row(0);
+    let before = svc.search(probe_q, k);
+    let after = c.search_with_options(probe_q, k, &QueryOptions::default())?;
+    assert_eq!(
+        after.results[0].ids, before.ids,
+        "the reopened artifact must answer exactly like the built index"
+    );
+    println!("reload parity       : artifact answers match the built index");
+    std::fs::remove_file(&art_path).ok();
 
     // Shut down cleanly.
     c.shutdown().ok();

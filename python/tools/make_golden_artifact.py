@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Generate the golden index-artifact fixture for the format-stability gate.
+
+Produces ``rust/tests/fixtures/golden-v1.pxa``, a tiny but complete
+format-version-1 index artifact (64 vectors x 8 dims, ring+chord graph,
+M=4/C=8 PQ, reorder permutation, DataMapping). ``cargo test --test
+artifact_golden`` asserts that today's reader still opens it — every
+future PR runs against this file, so a format change without a
+version bump (or without migration) fails CI instead of silently
+orphaning deployed artifacts.
+
+The byte layout mirrors ``rust/src/artifact/mod.rs`` (header) and
+``rust/src/artifact/sections.rs`` (payloads) exactly; checksums are
+CRC-32 (IEEE), i.e. ``zlib.crc32``. Deterministic: re-running this
+script reproduces the committed fixture byte-for-byte.
+"""
+
+import random
+import struct
+import zlib
+from pathlib import Path
+
+MAGIC = b"PXARTIF1"
+FORMAT_VERSION = 1
+SEC_BASE, SEC_GRAPH, SEC_GAP, SEC_CODEBOOK, SEC_CODES, SEC_REORDER, SEC_MAPPING = range(1, 8)
+
+N, DIM, M, C, R = 64, 8, 4, 8, 4
+DSUB = DIM // M
+
+
+def p_u32(x):
+    return struct.pack("<I", x)
+
+
+def p_u64(x):
+    return struct.pack("<Q", x)
+
+
+def p_f32(x):
+    return struct.pack("<f", x)
+
+
+def p_f64(x):
+    return struct.pack("<d", x)
+
+
+def p_str(s):
+    b = s.encode()
+    return p_u32(len(b)) + b
+
+
+def f32(x):
+    """Round a python float through f32 (what the file stores)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def make_payloads():
+    rng = random.Random(1234)
+    base = [f32(rng.uniform(0.0, 1.0)) for _ in range(N * DIM)]
+    centroids = [f32(rng.uniform(0.0, 1.0)) for _ in range(M * C * DSUB)]
+
+    # BASE: dim u32, n u64, f32 data.
+    sec_base = p_u32(DIM) + p_u64(N) + b"".join(p_f32(x) for x in base)
+
+    # GRAPH: ring + second-neighbor chords -> degree 4, connected, no
+    # self loops, ids in range.
+    targets = []
+    offsets = [0]
+    for v in range(N):
+        nbrs = sorted({(v + 1) % N, (v - 1) % N, (v + 2) % N, (v - 2) % N})
+        targets.extend(nbrs)
+        offsets.append(len(targets))
+    sec_graph = (
+        p_u32(0)  # entry_point
+        + p_u32(R)  # max_degree
+        + p_u64(len(offsets))
+        + p_u64(len(targets))
+        + b"".join(p_u32(x) for x in offsets)
+        + b"".join(p_u32(x) for x in targets)
+    )
+
+    # CODEBOOK: metric str, dim u32, m u32, c u32, centroids f32.
+    sec_codebook = (
+        p_str("l2")
+        + p_u32(DIM)
+        + p_u32(M)
+        + p_u32(C)
+        + b"".join(p_f32(x) for x in centroids)
+    )
+
+    # CODES: nearest centroid per subspace (plain L2 in the subspace).
+    def centroid(sub, ci):
+        off = sub * C * DSUB + ci * DSUB
+        return centroids[off : off + DSUB]
+
+    codes = bytearray()
+    for v in range(N):
+        row = base[v * DIM : (v + 1) * DIM]
+        for sub in range(M):
+            sv = row[sub * DSUB : (sub + 1) * DSUB]
+            best = min(
+                range(C),
+                key=lambda ci: sum((a - b) ** 2 for a, b in zip(sv, centroid(sub, ci))),
+            )
+            codes.append(best)
+    sec_codes = p_u32(M) + p_u64(N) + bytes(codes)
+
+    # REORDER: a real (non-identity) permutation.
+    sec_reorder = p_u64(N) + b"".join(p_u32(N - 1 - i) for i in range(N))
+
+    # MAPPING: the 11 DataMapping u32 fields in declaration order.
+    mapping = [64, 2, 2, 2, 33, 9, 3, 2, 1088, 2000, 256]
+    sec_mapping = b"".join(p_u32(x) for x in mapping)
+
+    return [
+        (SEC_BASE, sec_base),
+        (SEC_GRAPH, sec_graph),
+        (SEC_CODEBOOK, sec_codebook),
+        (SEC_CODES, sec_codes),
+        (SEC_REORDER, sec_reorder),
+        (SEC_MAPPING, sec_mapping),
+    ]
+
+
+def make_artifact():
+    spec = (
+        p_str("golden-synth")
+        + p_str("l2")
+        + p_u32(DIM)
+        + p_u64(N)
+        + p_u32(R)  # graph_r
+        + p_u32(16)  # graph_build_l
+        + p_f32(1.2)  # graph_alpha
+        + p_u32(M)
+        + p_u32(C)
+        + p_f64(0.03125)  # hot_frac = 2/64
+        + p_u64(1234)  # build_seed
+    )
+    payloads = make_payloads()
+    header = spec + p_u32(len(payloads))
+    for tag, payload in payloads:
+        header += p_u32(tag) + p_u64(len(payload)) + p_u32(zlib.crc32(payload))
+    out = MAGIC + p_u32(FORMAT_VERSION) + header + p_u32(zlib.crc32(header))
+    for _, payload in payloads:
+        out += payload
+    return out
+
+
+def main():
+    repo = Path(__file__).resolve().parents[2]
+    dst = repo / "rust" / "tests" / "fixtures" / "golden-v1.pxa"
+    dst.parent.mkdir(parents=True, exist_ok=True)
+    data = make_artifact()
+    dst.write_bytes(data)
+    print(f"wrote {dst} ({len(data)} bytes, crc32 {zlib.crc32(data):08x})")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,12 @@
 //! (whole-request failures); per-query failures (e.g. a contained worker
 //! panic) ride in [`QueryResponse::errors`].
 //!
+//! Alongside the query plane, the v2 wire carries an **admin plane** for
+//! the index lifecycle (`status`, `reload` — codecs in [`wire`], spec
+//! types in [`crate::artifact`]); artifact failures convert into
+//! [`ApiError`]s so bad bytes surface as structured error lines, never
+//! as torn connections.
+//!
 //! # `QueryOptions` defaults
 //!
 //! Every option defaults to "whatever the service was configured with",

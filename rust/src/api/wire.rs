@@ -22,6 +22,8 @@
 use super::{
     ApiError, ApiErrorCode, NeighborList, QueryOptions, QueryRequest, QueryResponse, SearchMode,
 };
+use crate::artifact::IndexSpec;
+use crate::distance::Metric;
 use crate::search::SearchStats;
 use crate::util::json::Json;
 
@@ -34,6 +36,11 @@ pub enum WireRequest {
     /// `op:"search"`; `version` picks the response shape (1 or 2).
     Search { version: u32, request: QueryRequest },
     Stats,
+    /// v2 admin plane: spec + provenance + counters of the served index.
+    Status,
+    /// v2 admin plane: hot-swap the served index to the artifact at
+    /// `path`.
+    Reload { path: String },
     Shutdown,
 }
 
@@ -88,6 +95,19 @@ pub fn decode_request(j: &Json) -> Result<WireRequest, ApiError> {
     };
     match op {
         "stats" => Ok(WireRequest::Stats),
+        // Admin-plane ops (v2): no v1 client ever sent these names, so
+        // accepting them regardless of the line's `v` cannot collide
+        // with compat behavior; responses are always structured.
+        "status" => Ok(WireRequest::Status),
+        "reload" => {
+            let path = j
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ApiError::bad_request("reload requires a 'path' string"))?;
+            Ok(WireRequest::Reload {
+                path: path.to_string(),
+            })
+        }
         "shutdown" => Ok(WireRequest::Shutdown),
         "search" => {
             let vectors = if let Some(qs) = j.get("queries") {
@@ -331,6 +351,84 @@ fn decode_neighbor_list(j: &Json) -> Result<NeighborList, ApiError> {
 }
 
 // ---------------------------------------------------------------------------
+// IndexSpec (the `status` admin op)
+// ---------------------------------------------------------------------------
+
+/// Encode an [`IndexSpec`] for the `status` response.
+///
+/// `build_seed` crosses the wire as a JSON number: seeds above 2^53
+/// would lose precision, but every seed this repo uses (and any a
+/// human picks) is far below that.
+pub fn encode_spec(s: &IndexSpec) -> Json {
+    Json::obj(vec![
+        ("dataset", Json::str(s.dataset.clone())),
+        ("metric", Json::str(s.metric.name())),
+        ("dim", Json::num(s.dim as f64)),
+        ("n_base", Json::num(s.n_base as f64)),
+        ("graph_r", Json::num(s.graph_r as f64)),
+        ("graph_build_l", Json::num(s.graph_build_l as f64)),
+        ("graph_alpha", Json::num(s.graph_alpha as f64)),
+        ("pq_m", Json::num(s.pq_m as f64)),
+        ("pq_c", Json::num(s.pq_c as f64)),
+        ("hot_frac", Json::num(s.hot_frac)),
+        ("build_seed", Json::num(s.build_seed as f64)),
+    ])
+}
+
+/// Decode a `status` response's spec object. Integer fields get the
+/// same strict non-negative-integer treatment as every other integer on
+/// this wire (see [`as_index`]) — saturating `as` casts would turn a
+/// malformed line into a silently-garbage spec.
+pub fn decode_spec(j: &Json) -> Result<IndexSpec, ApiError> {
+    let metric_name = j
+        .get("metric")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::bad_request("spec missing 'metric'"))?;
+    let metric = Metric::parse(metric_name)
+        .ok_or_else(|| ApiError::bad_request(format!("spec: unknown metric '{metric_name}'")))?;
+    let dataset = j
+        .get("dataset")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::bad_request("spec missing 'dataset'"))?
+        .to_string();
+    let num = |key: &str| {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ApiError::bad_request(format!("spec missing '{key}'")))
+    };
+    let idx = |key: &str| -> Result<usize, ApiError> {
+        let v = j
+            .get(key)
+            .ok_or_else(|| ApiError::bad_request(format!("spec missing '{key}'")))?;
+        as_index(v, &format!("spec.{key}"))
+    };
+    // Wide counters (n_base, build_seed) exceed u32 legitimately but
+    // must still be non-negative integers within f64's exact range.
+    let wide = |key: &str| -> Result<u64, ApiError> {
+        let x = num(key)?;
+        if !(0.0..=9.007_199_254_740_992e15).contains(&x) || x.fract() != 0.0 {
+            return Err(ApiError::bad_request(format!(
+                "spec.{key} must be a non-negative integer, got {x}"
+            )));
+        }
+        Ok(x as u64)
+    };
+    Ok(IndexSpec {
+        dataset,
+        metric,
+        dim: idx("dim")? as u32,
+        n_base: wide("n_base")?,
+        graph_r: idx("graph_r")? as u32,
+        graph_build_l: idx("graph_build_l")? as u32,
+        graph_alpha: num("graph_alpha")? as f32,
+        pq_m: idx("pq_m")? as u32,
+        pq_c: idx("pq_c")? as u32,
+        hot_frac: num("hot_frac")?,
+        build_seed: wide("build_seed")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Stats + errors
 // ---------------------------------------------------------------------------
 
@@ -493,6 +591,55 @@ mod tests {
                 WireRequest::Shutdown => assert!(want_shutdown),
                 other => panic!("wrong op: {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn admin_ops_decode() {
+        let j = json::parse(r#"{"v":2,"op":"status"}"#).unwrap();
+        assert!(matches!(decode_request(&j).unwrap(), WireRequest::Status));
+        let j = json::parse(r#"{"v":2,"op":"reload","path":"/tmp/x.pxa"}"#).unwrap();
+        match decode_request(&j).unwrap() {
+            WireRequest::Reload { path } => assert_eq!(path, "/tmp/x.pxa"),
+            other => panic!("wrong op: {other:?}"),
+        }
+        // reload without a path is a bad request, not a panic.
+        let j = json::parse(r#"{"v":2,"op":"reload"}"#).unwrap();
+        let e = decode_request(&j).unwrap_err();
+        assert_eq!(e.code, ApiErrorCode::BadRequest);
+        assert!(e.message.contains("path"), "{}", e.message);
+    }
+
+    #[test]
+    fn spec_roundtrips_over_the_wire() {
+        let spec = IndexSpec {
+            dataset: "sift-s".into(),
+            metric: Metric::Angular,
+            dim: 100,
+            n_base: 123_456,
+            graph_r: 32,
+            graph_build_l: 64,
+            graph_alpha: 1.2,
+            pq_m: 25,
+            pq_c: 256,
+            hot_frac: 0.03,
+            build_seed: 0x5EED_0002,
+        };
+        let line = reparse(&encode_spec(&spec));
+        let back = decode_spec(&line).unwrap();
+        assert_eq!(back, spec);
+        // A spec with a bogus metric is rejected with a typed error.
+        let j = json::parse(r#"{"dataset":"x","metric":"manhattan","dim":4}"#).unwrap();
+        assert_eq!(decode_spec(&j).unwrap_err().code, ApiErrorCode::BadRequest);
+        // Integer fields get the wire's strict decode: negatives and
+        // fractions are BadRequest, not saturating casts.
+        for bad in [
+            r#"{"dataset":"x","metric":"l2","dim":-3}"#,
+            r#"{"dataset":"x","metric":"l2","dim":4,"n_base":2.5}"#,
+            r#"{"dataset":"x","metric":"l2","dim":4,"n_base":1e300}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert_eq!(decode_spec(&j).unwrap_err().code, ApiErrorCode::BadRequest, "{bad}");
         }
     }
 

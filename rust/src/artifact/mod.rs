@@ -1,0 +1,936 @@
+//! The versioned, checksummed on-disk index artifact — the first-class
+//! deployment unit of the serving stack ("build once, open anywhere").
+//!
+//! A built index (graph + PQ + raw vectors + layout metadata) is saved
+//! as ONE self-describing binary file; opening it reconstructs a
+//! serveable index without touching the raw dataset or re-running any
+//! build step. The same file feeds the NAND engine/simulator: the
+//! `MAPPING` section carries the §IV-E [`DataMapping`] verbatim, and the
+//! optional `REORDER` section the hot-node permutation, so software
+//! serving and hardware simulation open one artifact.
+//!
+//! # File layout (format version 1, all integers little-endian)
+//!
+//! ```text
+//! magic           8 B   b"PXARTIF1"
+//! format_version  u32   1 (checked before anything else — a future
+//!                        version fails with a clean VersionMismatch
+//!                        even if the rest of the layout changed)
+//! spec                  IndexSpec (see below)
+//! n_sections      u32
+//! TOC entries           per section: tag u32, len u64, crc32 u32
+//! header_crc      u32   CRC-32 (IEEE) over [spec .. end of TOC]
+//! payloads              section payloads, concatenated in TOC order
+//! ```
+//!
+//! `IndexSpec` serializes as: dataset (str), metric (str), dim u32,
+//! n_base u64, graph_r u32, graph_build_l u32, graph_alpha f32, pq_m
+//! u32, pq_c u32, hot_frac f64, build_seed u64 — where `str` is u32
+//! length + UTF-8 bytes. Section payload layouts are documented in
+//! [`sections`].
+//!
+//! # Integrity contract
+//!
+//! Decoding NEVER panics on bad bytes. Every failure is a typed
+//! [`ArtifactError`] (convertible to [`ApiError`] for the wire):
+//! truncation → [`Truncated`](ArtifactErrorKind::Truncated), a flipped
+//! byte → [`Corrupt`](ArtifactErrorKind::Corrupt) (every payload byte is
+//! covered by a section CRC and the spec/TOC by the header CRC), a
+//! future format → [`VersionMismatch`](ArtifactErrorKind::VersionMismatch),
+//! wrong-index-for-this-dataset → [`SpecMismatch`](ArtifactErrorKind::SpecMismatch).
+//! Beyond checksums (which only catch accidental corruption), structural
+//! invariants are re-validated on open — CSR offset monotonicity, PQ
+//! codes within the codebook's centroid range, graph targets in range —
+//! so even a crafted file with valid CRCs cannot drive the search
+//! kernels' unchecked indexing out of bounds.
+
+pub mod sections;
+
+use crate::api::ApiError;
+use crate::dataset::io as bio;
+use crate::dataset::{Dataset, VectorSet};
+use crate::distance::Metric;
+use crate::engine::mapping::DataMapping;
+use crate::gap::GapGraph;
+use crate::graph::Graph;
+use crate::pq::{PqCodebook, PqCodes};
+use std::fmt;
+use std::ops::Range;
+use std::path::Path;
+
+/// The artifact file magic.
+pub const MAGIC: &[u8; 8] = b"PXARTIF1";
+
+/// Highest artifact format version this build reads and the version it
+/// writes. Bump ONLY with a migration story: the golden-fixture test
+/// (`tests/artifact_golden.rs`) pins the readability of v1 files.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Section tags (TOC `tag` field).
+pub const SEC_BASE: u32 = 1;
+pub const SEC_GRAPH: u32 = 2;
+pub const SEC_GAP: u32 = 3;
+pub const SEC_CODEBOOK: u32 = 4;
+pub const SEC_CODES: u32 = 5;
+pub const SEC_REORDER: u32 = 6;
+pub const SEC_MAPPING: u32 = 7;
+
+/// Upper bound on TOC entries: a corrupt count field must not drive a
+/// huge allocation before the header CRC gets a chance to reject it.
+const MAX_SECTIONS: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Machine-readable artifact failure class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactErrorKind {
+    /// Filesystem failure (open/read/write).
+    Io,
+    /// The file ends before the structure it promises.
+    Truncated,
+    /// Not an artifact file at all.
+    BadMagic,
+    /// A format version this build does not speak.
+    VersionMismatch,
+    /// Checksum mismatch or a structural invariant violated.
+    Corrupt,
+    /// The artifact is valid but does not fit the dataset/deployment it
+    /// was asked to serve (e.g. dimension mismatch).
+    SpecMismatch,
+}
+
+impl ArtifactErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactErrorKind::Io => "io",
+            ArtifactErrorKind::Truncated => "truncated",
+            ArtifactErrorKind::BadMagic => "bad_magic",
+            ArtifactErrorKind::VersionMismatch => "version_mismatch",
+            ArtifactErrorKind::Corrupt => "corrupt",
+            ArtifactErrorKind::SpecMismatch => "spec_mismatch",
+        }
+    }
+}
+
+/// Typed artifact failure: a stable kind plus a human-readable message.
+#[derive(Clone, Debug)]
+pub struct ArtifactError {
+    pub kind: ArtifactErrorKind,
+    pub message: String,
+}
+
+impl ArtifactError {
+    pub fn new(kind: ArtifactErrorKind, message: impl Into<String>) -> ArtifactError {
+        ArtifactError {
+            kind,
+            message: message.into(),
+        }
+    }
+    pub fn io(message: impl Into<String>) -> ArtifactError {
+        Self::new(ArtifactErrorKind::Io, message)
+    }
+    pub fn truncated(message: impl Into<String>) -> ArtifactError {
+        Self::new(ArtifactErrorKind::Truncated, message)
+    }
+    pub fn corrupt(message: impl Into<String>) -> ArtifactError {
+        Self::new(ArtifactErrorKind::Corrupt, message)
+    }
+    pub fn spec_mismatch(message: impl Into<String>) -> ArtifactError {
+        Self::new(ArtifactErrorKind::SpecMismatch, message)
+    }
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "artifact {}: {}", self.kind.name(), self.message)
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// Surface artifact failures on the wire/API boundary: an operator
+/// handing the server a bad path or bad bytes is a request problem
+/// (`bad_request`); a filesystem failure is the server's (`internal`).
+impl From<ArtifactError> for ApiError {
+    fn from(e: ArtifactError) -> ApiError {
+        match e.kind {
+            ArtifactErrorKind::Io => ApiError::internal(e.to_string()),
+            _ => ApiError::bad_request(e.to_string()),
+        }
+    }
+}
+
+/// Map the shared byte-reader's string errors into typed artifact
+/// errors. Out-of-bounds reads carry the reader's single-sourced
+/// [`bio::TRUNCATED_MSG`] sentinel; anything else it produces (bad
+/// UTF-8, length overflow) means the bytes are garbage, not short.
+pub(crate) fn rd<T>(r: Result<T, crate::util::error::Error>) -> Result<T, ArtifactError> {
+    r.map_err(|e| {
+        let msg = e.to_string();
+        if msg.contains(bio::TRUNCATED_MSG) {
+            ArtifactError::truncated(msg)
+        } else {
+            ArtifactError::corrupt(msg)
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, zlib-compatible)
+// ---------------------------------------------------------------------------
+
+/// Byte-at-a-time CRC table, computed at compile time. Artifacts are
+/// checksummed in full on BOTH save and open — at deployment scale the
+/// base-vector section alone is hundreds of MB, so the open ("fast
+/// restart") path cannot afford the bitwise 8-iterations-per-byte
+/// formulation.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 over `bytes` (poly 0xEDB88320, init/xorout 0xFFFFFFFF) —
+/// matches `zlib.crc32`, so fixtures can be produced by the Python
+/// tooling (`python/tools/make_golden_artifact.py`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ---------------------------------------------------------------------------
+// IndexSpec
+// ---------------------------------------------------------------------------
+
+/// What was built and how: the identity card of a serialized index.
+/// Stored in the artifact header and reported by the wire `status` op.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IndexSpec {
+    /// Dataset id the index was built from.
+    pub dataset: String,
+    pub metric: Metric,
+    pub dim: u32,
+    pub n_base: u64,
+    /// Vamana max degree R.
+    pub graph_r: u32,
+    /// Build-time candidate list L_build.
+    pub graph_build_l: u32,
+    /// Vamana pruning α.
+    pub graph_alpha: f32,
+    /// PQ subspace count M.
+    pub pq_m: u32,
+    /// PQ centroids per subspace K (≤ 256).
+    pub pq_c: u32,
+    /// Hot-node fraction of the §IV-E layout (0 when no reordering was
+    /// applied).
+    pub hot_frac: f64,
+    /// Graph-build seed (PQ training derives its seed from it, exactly
+    /// as `SearchService::build` does).
+    pub build_seed: u64,
+}
+
+impl IndexSpec {
+    /// Can this index answer queries drawn from `ds`? Checked when the
+    /// CLI pairs `--index` with a query dataset: a dimension or metric
+    /// mismatch would otherwise produce garbage distances (or a panic
+    /// deep in a kernel) instead of an actionable error.
+    pub fn check_compatible(&self, ds: &Dataset) -> Result<(), ArtifactError> {
+        if ds.dim() != self.dim as usize {
+            return Err(ArtifactError::spec_mismatch(format!(
+                "spec/dataset dim mismatch: artifact dim {}, dataset '{}' dim {}",
+                self.dim,
+                ds.name,
+                ds.dim()
+            )));
+        }
+        if ds.metric != self.metric {
+            return Err(ArtifactError::spec_mismatch(format!(
+                "spec/dataset metric mismatch: artifact {}, dataset '{}' {}",
+                self.metric.name(),
+                ds.name,
+                ds.metric.name()
+            )));
+        }
+        // Same base-set size, or ground truth computed from `ds` refers
+        // to different vectors than the artifact's ids and every recall
+        // number is garbage (the classic wrong-`--scale` mistake).
+        if ds.n_base() as u64 != self.n_base {
+            return Err(ArtifactError::spec_mismatch(format!(
+                "spec/dataset base-set mismatch: artifact indexes {} vectors, dataset '{}' \
+                 holds {} (was the dataset regenerated at a different --scale?)",
+                self.n_base,
+                ds.name,
+                ds.n_base()
+            )));
+        }
+        // Last line of defense: the dataset id itself. Two datasets can
+        // coincide on shape yet hold different vectors (the shape checks
+        // above give the more actionable message when they differ).
+        if ds.name != self.dataset {
+            return Err(ArtifactError::spec_mismatch(format!(
+                "spec/dataset id mismatch: artifact was built from '{}', queries come \
+                 from '{}'",
+                self.dataset, ds.name
+            )));
+        }
+        Ok(())
+    }
+
+    fn encode(&self, buf: &mut Vec<u8>) {
+        bio::put_str(buf, &self.dataset);
+        bio::put_str(buf, self.metric.name());
+        bio::put_u32(buf, self.dim);
+        bio::put_u64(buf, self.n_base);
+        bio::put_u32(buf, self.graph_r);
+        bio::put_u32(buf, self.graph_build_l);
+        bio::put_f32(buf, self.graph_alpha);
+        bio::put_u32(buf, self.pq_m);
+        bio::put_u32(buf, self.pq_c);
+        bio::put_f64(buf, self.hot_frac);
+        bio::put_u64(buf, self.build_seed);
+    }
+
+    fn decode(r: &mut bio::Reader<'_>) -> Result<IndexSpec, ArtifactError> {
+        let dataset = rd(r.str())?;
+        let metric_name = rd(r.str())?;
+        let metric = Metric::parse(&metric_name).ok_or_else(|| {
+            ArtifactError::corrupt(format!("spec: unknown metric '{metric_name}'"))
+        })?;
+        Ok(IndexSpec {
+            dataset,
+            metric,
+            dim: rd(r.u32())?,
+            n_base: rd(r.u64())?,
+            graph_r: rd(r.u32())?,
+            graph_build_l: rd(r.u32())?,
+            graph_alpha: rd(r.f32())?,
+            pq_m: rd(r.u32())?,
+            pq_c: rd(r.u32())?,
+            hot_frac: rd(r.f64())?,
+            build_seed: rd(r.u64())?,
+        })
+    }
+}
+
+/// Where a served index came from — reported by the wire `status` op so
+/// an operator can tell a warm-restarted replica from a fresh build.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexProvenance {
+    /// Built in-process from a dataset this run.
+    Built,
+    /// Opened from a serialized artifact.
+    Artifact { path: String },
+}
+
+// ---------------------------------------------------------------------------
+// Section-level writer / reader
+// ---------------------------------------------------------------------------
+
+/// Assembles an artifact: a spec plus tagged, individually-checksummed
+/// sections. The typed layer ([`ArtifactParts::write`]) is built on it;
+/// it stays public so tools can carry extra sections (unknown tags are
+/// preserved and ignored by this build's readers).
+pub struct ArtifactWriter {
+    spec: IndexSpec,
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl ArtifactWriter {
+    pub fn new(spec: IndexSpec) -> ArtifactWriter {
+        ArtifactWriter {
+            spec,
+            sections: Vec::new(),
+        }
+    }
+
+    /// Append one section (tags need not be unique for forward-compat
+    /// tooling, but this build's readers use the first match). Panics
+    /// beyond the reader-side section cap — the writer must never emit
+    /// a file its own reader rejects.
+    pub fn section(&mut self, tag: u32, payload: Vec<u8>) -> &mut ArtifactWriter {
+        assert!(
+            self.sections.len() < MAX_SECTIONS,
+            "artifact section count is capped at {MAX_SECTIONS} (the reader rejects more)"
+        );
+        self.sections.push((tag, payload));
+        self
+    }
+
+    /// The file prefix up to (and including) the header CRC — everything
+    /// before the concatenated section payloads.
+    fn header_bytes(&self) -> Vec<u8> {
+        let mut header = Vec::new();
+        self.spec.encode(&mut header);
+        bio::put_u32(&mut header, self.sections.len() as u32);
+        for (tag, payload) in &self.sections {
+            bio::put_u32(&mut header, *tag);
+            bio::put_u64(&mut header, payload.len() as u64);
+            bio::put_u32(&mut header, crc32(payload));
+        }
+        let mut buf = Vec::with_capacity(16 + header.len());
+        buf.extend_from_slice(MAGIC);
+        bio::put_u32(&mut buf, FORMAT_VERSION);
+        let header_crc = crc32(&header);
+        buf.extend_from_slice(&header);
+        bio::put_u32(&mut buf, header_crc);
+        buf
+    }
+
+    /// Serialize to the on-disk byte layout (see the module docs) —
+    /// concatenates a full in-memory image; [`Self::write`] streams to
+    /// disk instead and is the right call for large artifacts.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = self.header_bytes();
+        buf.reserve(self.sections.iter().map(|(_, p)| p.len()).sum::<usize>());
+        for (_, payload) in &self.sections {
+            buf.extend_from_slice(payload);
+        }
+        buf
+    }
+
+    /// Write atomically (temp file + rename): a crashed save never
+    /// leaves a torn artifact at the target path. Payloads stream to the
+    /// file directly, so peak memory stays at ONE copy of the encoded
+    /// sections (not header-image + concatenated image).
+    pub fn write(&self, path: &Path) -> Result<(), ArtifactError> {
+        let header = self.header_bytes();
+        bio::write_atomic_with(path, |f| {
+            use std::io::Write;
+            f.write_all(&header)?;
+            for (_, payload) in &self.sections {
+                f.write_all(payload)?;
+            }
+            Ok(())
+        })
+        .map_err(|e| ArtifactError::io(format!("writing {}: {e}", path.display())))
+    }
+}
+
+/// Validated view of an artifact's bytes: spec parsed, header and every
+/// section checksum verified. Section payloads are borrowed from the
+/// owned buffer via [`ArtifactReader::section`].
+pub struct ArtifactReader {
+    spec: IndexSpec,
+    buf: Vec<u8>,
+    toc: Vec<(u32, Range<usize>)>,
+}
+
+impl ArtifactReader {
+    /// Read and validate the file at `path`.
+    pub fn open(path: &Path) -> Result<ArtifactReader, ArtifactError> {
+        let buf = std::fs::read(path)
+            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", path.display())))?;
+        Self::from_bytes(buf)
+    }
+
+    /// Validate an in-memory artifact image.
+    pub fn from_bytes(buf: Vec<u8>) -> Result<ArtifactReader, ArtifactError> {
+        let mut r = bio::Reader::new(&buf);
+        let magic = rd(r.take(8))?;
+        if magic != MAGIC {
+            return Err(ArtifactError::new(
+                ArtifactErrorKind::BadMagic,
+                "not a Proxima index artifact (bad magic)",
+            ));
+        }
+        let version = rd(r.u32())?;
+        if version != FORMAT_VERSION {
+            return Err(ArtifactError::new(
+                ArtifactErrorKind::VersionMismatch,
+                format!(
+                    "unsupported artifact format version {version} \
+                     (this build reads version {FORMAT_VERSION})"
+                ),
+            ));
+        }
+        // Header region = [spec .. end of TOC]; its CRC follows the TOC.
+        let header_start = 12;
+        let spec = IndexSpec::decode(&mut r)?;
+        let n_sections = rd(r.u32())? as usize;
+        if n_sections > MAX_SECTIONS {
+            return Err(ArtifactError::corrupt(format!(
+                "implausible section count {n_sections}"
+            )));
+        }
+        let mut entries = Vec::with_capacity(n_sections);
+        for _ in 0..n_sections {
+            let tag = rd(r.u32())?;
+            let len = rd(r.u64())? as usize;
+            let crc = rd(r.u32())?;
+            entries.push((tag, len, crc));
+        }
+        // The cursor now sits at the end of the TOC = end of the
+        // checksummed header region.
+        let toc_end = r.pos();
+        let stored_header_crc = rd(r.u32())?;
+        if crc32(&buf[header_start..toc_end]) != stored_header_crc {
+            return Err(ArtifactError::corrupt(
+                "header checksum mismatch (spec or section table corrupted)",
+            ));
+        }
+        let mut toc = Vec::with_capacity(entries.len());
+        let mut pos = toc_end + 4; // payloads start after the header CRC
+        for (tag, len, crc) in entries {
+            let end = pos.checked_add(len).filter(|&e| e <= buf.len()).ok_or_else(|| {
+                ArtifactError::truncated(format!(
+                    "section {tag}: payload of {len} bytes runs past end of file"
+                ))
+            })?;
+            if crc32(&buf[pos..end]) != crc {
+                return Err(ArtifactError::corrupt(format!(
+                    "section {tag}: checksum mismatch"
+                )));
+            }
+            toc.push((tag, pos..end));
+            pos = end;
+        }
+        // Every byte must be accounted for: an uncovered tail (torn
+        // overwrite of a longer file, concatenation) is a corruption
+        // event, not something to silently ignore.
+        if pos != buf.len() {
+            return Err(ArtifactError::corrupt(format!(
+                "{} trailing bytes after the last section",
+                buf.len() - pos
+            )));
+        }
+        Ok(ArtifactReader { spec, buf, toc })
+    }
+
+    pub fn spec(&self) -> &IndexSpec {
+        &self.spec
+    }
+
+    /// The checksum-verified payload of the first section tagged `tag`.
+    pub fn section(&self, tag: u32) -> Option<&[u8]> {
+        self.toc
+            .iter()
+            .find(|(t, _)| *t == tag)
+            .map(|(_, range)| &self.buf[range.clone()])
+    }
+
+    /// Tags present, in file order (unknown tags included).
+    pub fn tags(&self) -> impl Iterator<Item = u32> + '_ {
+        self.toc.iter().map(|(t, _)| *t)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed artifact: the full index bundle
+// ---------------------------------------------------------------------------
+
+/// Borrowed view of everything an index artifact stores — what
+/// `SearchService::save` assembles.
+pub struct ArtifactParts<'a> {
+    pub spec: &'a IndexSpec,
+    pub base: &'a VectorSet,
+    pub graph: &'a Graph,
+    pub gap: Option<&'a GapGraph>,
+    pub codebook: &'a PqCodebook,
+    pub codes: &'a PqCodes,
+    /// §IV-E frequency-reorder permutation (`perm[old] = new`), when the
+    /// index was reordered.
+    pub reorder: Option<&'a [u32]>,
+    /// §IV-E data-allocation layout, so the NAND engine/sim can open the
+    /// same artifact.
+    pub mapping: Option<&'a DataMapping>,
+}
+
+impl ArtifactParts<'_> {
+    fn writer(&self) -> ArtifactWriter {
+        let mut w = ArtifactWriter::new(self.spec.clone());
+        w.section(SEC_BASE, sections::encode_base(self.base));
+        w.section(SEC_GRAPH, sections::encode_graph(self.graph));
+        if let Some(gap) = self.gap {
+            w.section(SEC_GAP, sections::encode_gap(gap));
+        }
+        w.section(SEC_CODEBOOK, sections::encode_codebook(self.codebook));
+        w.section(SEC_CODES, sections::encode_codes(self.codes));
+        if let Some(perm) = self.reorder {
+            w.section(SEC_REORDER, sections::encode_reorder(perm));
+        }
+        if let Some(m) = self.mapping {
+            w.section(SEC_MAPPING, sections::encode_mapping(m));
+        }
+        w
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.writer().to_bytes()
+    }
+
+    /// Write the artifact atomically (delegates to
+    /// [`ArtifactWriter::write`] — one copy of the save semantics).
+    pub fn write(&self, path: &Path) -> Result<(), ArtifactError> {
+        self.writer().write(path)
+    }
+}
+
+/// A fully decoded, cross-validated index artifact.
+pub struct IndexArtifact {
+    pub spec: IndexSpec,
+    pub base: VectorSet,
+    pub graph: Graph,
+    /// Stored gap encoding when present (absent in minimal artifacts;
+    /// `SearchService::open` re-encodes from the graph in that case).
+    pub gap: Option<GapGraph>,
+    pub codebook: PqCodebook,
+    pub codes: PqCodes,
+    pub reorder: Option<Vec<u32>>,
+    pub mapping: Option<DataMapping>,
+}
+
+impl IndexArtifact {
+    /// Open, decode and cross-validate the artifact at `path`.
+    pub fn open(path: &Path) -> Result<IndexArtifact, ArtifactError> {
+        Self::from_reader(&ArtifactReader::open(path)?)
+    }
+
+    /// Decode and cross-validate an already checksum-verified reader.
+    pub fn from_reader(r: &ArtifactReader) -> Result<IndexArtifact, ArtifactError> {
+        let spec = r.spec().clone();
+        let need = |tag: u32, name: &str| {
+            r.section(tag)
+                .ok_or_else(|| ArtifactError::corrupt(format!("missing required section {name}")))
+        };
+        let base = sections::decode_base(need(SEC_BASE, "BASE")?)?;
+        let graph = sections::decode_graph(need(SEC_GRAPH, "GRAPH")?)?;
+        let codebook = sections::decode_codebook(need(SEC_CODEBOOK, "CODEBOOK")?)?;
+        let codes = sections::decode_codes(need(SEC_CODES, "CODES")?)?;
+        let gap = r.section(SEC_GAP).map(sections::decode_gap).transpose()?;
+        let reorder = r
+            .section(SEC_REORDER)
+            .map(sections::decode_reorder)
+            .transpose()?;
+        let mapping = r
+            .section(SEC_MAPPING)
+            .map(sections::decode_mapping)
+            .transpose()?;
+
+        // Cross-section consistency: everything the search kernels (and
+        // their unchecked indexing) assume must hold, re-proven here so
+        // a crafted file with valid checksums still cannot misbehave.
+        let n = base.len();
+        if n as u64 != spec.n_base {
+            return Err(ArtifactError::corrupt(format!(
+                "spec says {} base vectors, BASE section holds {n}",
+                spec.n_base
+            )));
+        }
+        if base.dim != spec.dim as usize {
+            return Err(ArtifactError::corrupt(format!(
+                "spec says dim {}, BASE section holds dim {}",
+                spec.dim, base.dim
+            )));
+        }
+        if n > u32::MAX as usize {
+            return Err(ArtifactError::corrupt(format!(
+                "{n} base vectors exceed the u32 vertex-id space"
+            )));
+        }
+        if graph.n() != n {
+            return Err(ArtifactError::corrupt(format!(
+                "graph has {} vertices for {n} base vectors",
+                graph.n()
+            )));
+        }
+        graph
+            .validate()
+            .map_err(|e| ArtifactError::corrupt(format!("graph: {e}")))?;
+        if codebook.metric != spec.metric {
+            return Err(ArtifactError::corrupt(format!(
+                "spec metric {} but codebook metric {}",
+                spec.metric.name(),
+                codebook.metric.name()
+            )));
+        }
+        // Angular math (`1 - dot`) is cosine distance only on unit-norm
+        // vectors — the dataset loaders normalize on load, but an
+        // artifact is a new entry point that bypasses them. Reject
+        // unnormalized angular bases here (mirroring `io::load_dataset`)
+        // instead of letting every query return silently-wrong
+        // rankings (or trip the kernels' debug asserts).
+        if spec.metric == Metric::Angular {
+            for i in 0..base.len() {
+                let row = base.row(i);
+                let n2 = crate::distance::dot(row, row);
+                if (n2 - 1.0).abs() > 1e-3 {
+                    return Err(ArtifactError::corrupt(format!(
+                        "angular artifact holds unnormalized base vector {i} (|v|^2 = {n2}); \
+                         rebuild the artifact from normalized data"
+                    )));
+                }
+            }
+        }
+        if codebook.dim != spec.dim as usize
+            || codebook.m != spec.pq_m as usize
+            || codebook.c != spec.pq_c as usize
+        {
+            return Err(ArtifactError::corrupt(format!(
+                "codebook shape (dim {}, m {}, c {}) disagrees with spec \
+                 (dim {}, m {}, c {})",
+                codebook.dim, codebook.m, codebook.c, spec.dim, spec.pq_m, spec.pq_c
+            )));
+        }
+        if codes.m != codebook.m {
+            return Err(ArtifactError::corrupt(format!(
+                "codes have m {} but codebook has m {}",
+                codes.m, codebook.m
+            )));
+        }
+        if codes.len() != n {
+            return Err(ArtifactError::corrupt(format!(
+                "{} code rows for {n} base vectors",
+                codes.len()
+            )));
+        }
+        // `Adt::pq_distance` indexes `table[j*c + code]` unchecked: every
+        // stored code MUST be < c.
+        if let Some(bad) = codes.codes.iter().position(|&cd| cd as usize >= codebook.c) {
+            return Err(ArtifactError::corrupt(format!(
+                "PQ code {} at position {bad} out of range (c = {})",
+                codes.codes[bad], codebook.c
+            )));
+        }
+        if let Some(g) = &gap {
+            if g.len() != n {
+                return Err(ArtifactError::corrupt(format!(
+                    "gap encoding covers {} rows for {n} vertices",
+                    g.len()
+                )));
+            }
+        }
+        if let Some(perm) = &reorder {
+            if perm.len() != n {
+                return Err(ArtifactError::corrupt(format!(
+                    "reorder permutation of length {} for {n} vertices",
+                    perm.len()
+                )));
+            }
+        }
+        if let Some(m) = &mapping {
+            if m.n_nodes as usize != n {
+                return Err(ArtifactError::corrupt(format!(
+                    "mapping laid out for {} nodes, index holds {n}",
+                    m.n_nodes
+                )));
+            }
+        }
+        Ok(IndexArtifact {
+            spec,
+            base,
+            graph,
+            gap,
+            codebook,
+            codes,
+            reorder,
+            mapping,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> IndexSpec {
+        IndexSpec {
+            dataset: "unit".into(),
+            metric: Metric::L2,
+            dim: 4,
+            n_base: 3,
+            graph_r: 2,
+            graph_build_l: 8,
+            graph_alpha: 1.2,
+            pq_m: 2,
+            pq_c: 4,
+            hot_frac: 0.0,
+            build_seed: 7,
+        }
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The standard CRC-32 check value — also what zlib.crc32
+        // produces, which the Python fixture generator relies on.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip_at_the_byte_level() {
+        let mut w = ArtifactWriter::new(spec());
+        w.section(SEC_CODES, vec![1, 2, 3]);
+        w.section(99, vec![0xAB; 17]); // unknown tag: preserved
+        let r = ArtifactReader::from_bytes(w.to_bytes()).unwrap();
+        assert_eq!(r.spec(), &spec());
+        assert_eq!(r.section(SEC_CODES), Some(&[1u8, 2, 3][..]));
+        assert_eq!(r.section(99).map(|p| p.len()), Some(17));
+        assert_eq!(r.section(SEC_GRAPH), None);
+        assert_eq!(r.tags().collect::<Vec<_>>(), vec![SEC_CODES, 99]);
+    }
+
+    #[test]
+    fn bad_magic_version_and_flips_are_typed() {
+        let mut w = ArtifactWriter::new(spec());
+        w.section(SEC_CODES, vec![7; 32]);
+        let good = w.to_bytes();
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(
+            ArtifactReader::from_bytes(bad).unwrap_err().kind,
+            ArtifactErrorKind::BadMagic
+        );
+
+        // Future format version fails cleanly BEFORE any layout parsing.
+        let mut future = good.clone();
+        future[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let e = ArtifactReader::from_bytes(future).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::VersionMismatch);
+        assert!(e.message.contains("version"), "{e}");
+
+        // A flipped spec byte is caught by the header CRC.
+        let mut spec_flip = good.clone();
+        spec_flip[20] ^= 0x01;
+        assert_eq!(
+            ArtifactReader::from_bytes(spec_flip).unwrap_err().kind,
+            ArtifactErrorKind::Corrupt
+        );
+
+        // A flipped payload byte is caught by its section CRC.
+        let mut payload_flip = good.clone();
+        let last = payload_flip.len() - 1;
+        payload_flip[last] ^= 0x80;
+        assert_eq!(
+            ArtifactReader::from_bytes(payload_flip).unwrap_err().kind,
+            ArtifactErrorKind::Corrupt
+        );
+
+        // Trailing garbage after the last payload (torn overwrite,
+        // concatenation) is rejected, not silently ignored.
+        let mut padded = good.clone();
+        padded.extend_from_slice(b"JUNK");
+        let e = ArtifactReader::from_bytes(padded).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::Corrupt);
+        assert!(e.message.contains("trailing"), "{e}");
+
+        // Truncation anywhere is a typed error, never a panic.
+        for cut in [5, 11, good.len() / 2, good.len() - 1] {
+            let e = ArtifactReader::from_bytes(good[..cut].to_vec()).unwrap_err();
+            assert!(
+                matches!(
+                    e.kind,
+                    ArtifactErrorKind::Truncated
+                        | ArtifactErrorKind::Corrupt
+                        | ArtifactErrorKind::BadMagic
+                ),
+                "cut {cut}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_compat_reports_dim_metric_and_scale_mismatches() {
+        use crate::dataset::synth::tiny_uniform;
+        let mut s = spec();
+        s.n_base = 10;
+        let ds4 = tiny_uniform(10, 4, Metric::L2, 1);
+        s.dataset = ds4.name.clone();
+        s.check_compatible(&ds4).unwrap();
+        let ds6 = tiny_uniform(10, 6, Metric::L2, 1);
+        let e = s.check_compatible(&ds6).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::SpecMismatch);
+        assert!(e.message.contains("dim"), "{e}");
+        let ip = tiny_uniform(10, 4, Metric::Ip, 1);
+        let e = s.check_compatible(&ip).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::SpecMismatch);
+        assert!(e.message.contains("metric"), "{e}");
+        // Same dim/metric but a different base-set size (the classic
+        // wrong-`--scale` regeneration): recall against it would be
+        // garbage, so it must be a typed mismatch.
+        let bigger = tiny_uniform(20, 4, Metric::L2, 1);
+        let e = s.check_compatible(&bigger).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::SpecMismatch);
+        assert!(e.message.contains("scale"), "{e}");
+        // Identical shape but a different dataset id: still a mismatch
+        // (the vectors are not the ones the artifact indexed).
+        s.dataset = "something-else".into();
+        let e = s.check_compatible(&ds4).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::SpecMismatch);
+        assert!(e.message.contains("id mismatch"), "{e}");
+    }
+
+    #[test]
+    fn unnormalized_angular_artifacts_are_rejected_at_open() {
+        use crate::config::{GraphParams, PqParams, SearchParams};
+        use crate::coordinator::SearchService;
+        use crate::dataset::synth::tiny_uniform;
+        let ds = tiny_uniform(60, 6, Metric::Angular, 3);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 6,
+                build_l: 12,
+                alpha: 1.2,
+                seed: 3,
+            },
+            &PqParams {
+                m: 3,
+                c: 8,
+                train_sample: 60,
+                kmeans_iters: 4,
+            },
+            SearchParams::default(),
+            false,
+        );
+        // Re-encode the artifact with SCALED base vectors: checksums
+        // are valid (the writer computes them over the tampered bytes),
+        // but the angular unit-norm precondition is broken.
+        let mut bad_base = svc.base.clone();
+        for x in bad_base.data.iter_mut() {
+            *x *= 2.0;
+        }
+        let parts = ArtifactParts {
+            spec: &svc.spec,
+            base: &bad_base,
+            graph: &svc.graph,
+            gap: None,
+            codebook: &svc.codebook,
+            codes: &svc.codes,
+            reorder: None,
+            mapping: None,
+        };
+        let r = ArtifactReader::from_bytes(parts.to_bytes()).unwrap();
+        let e = IndexArtifact::from_reader(&r).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::Corrupt);
+        assert!(e.message.contains("unnormalized"), "{e}");
+        // The untampered service round-trips fine.
+        let good = ArtifactParts {
+            spec: &svc.spec,
+            base: &svc.base,
+            graph: &svc.graph,
+            gap: None,
+            codebook: &svc.codebook,
+            codes: &svc.codes,
+            reorder: None,
+            mapping: None,
+        };
+        let r = ArtifactReader::from_bytes(good.to_bytes()).unwrap();
+        IndexArtifact::from_reader(&r).unwrap();
+    }
+}

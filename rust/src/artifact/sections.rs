@@ -1,0 +1,354 @@
+//! Section payload codecs for the index artifact (all integers
+//! little-endian; see the tag constants in the parent module).
+//!
+//! Payload layouts:
+//!
+//! ```text
+//! BASE     (1): dim u32, n u64, data f32 × n·dim
+//! GRAPH    (2): entry_point u32, max_degree u32, n_offsets u64,
+//!               n_targets u64, offsets u32 × n_offsets,
+//!               targets u32 × n_targets
+//! GAP      (3): n u64, n_offsets u64, n_words u64,
+//!               row_offsets u64 × n_offsets, bits u64 × n_words
+//! CODEBOOK (4): metric str, dim u32, m u32, c u32,
+//!               centroids f32 × m·c·(dim/m)
+//! CODES    (5): m u32, n u64, codes u8 × n·m
+//! REORDER  (6): n u64, perm u32 × n   (perm[old] = new)
+//! MAPPING  (7): the 11 `DataMapping` fields as u32, in declaration
+//!               order: n_nodes, idx_cores, raw_cores, raw_base,
+//!               idx_frames_per_page, raw_frames_per_page,
+//!               hot_frames_per_page, n_hot, idx_frame_bits,
+//!               hot_frame_bits, raw_frame_bits
+//! ```
+//!
+//! Decoders validate per-section structural invariants (dimensions,
+//! lengths, zero-divisor guards); cross-section consistency lives in
+//! [`IndexArtifact::from_reader`](super::IndexArtifact::from_reader).
+
+use super::{rd, ArtifactError};
+use crate::dataset::io as bio;
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+use crate::engine::mapping::DataMapping;
+use crate::gap::GapGraph;
+use crate::graph::Graph;
+use crate::pq::{PqCodebook, PqCodes};
+
+/// Every decoder consumes its payload EXACTLY: trailing bytes inside a
+/// section are rejected just like trailing bytes after the last section
+/// (same corruption posture; sections are exact-length by format v1
+/// definition — format growth bumps the version).
+fn finish(r: &bio::Reader<'_>, what: &str, payload: &[u8]) -> Result<(), ArtifactError> {
+    if r.pos() != payload.len() {
+        return Err(ArtifactError::corrupt(format!(
+            "{what}: {} trailing bytes in section payload",
+            payload.len() - r.pos()
+        )));
+    }
+    Ok(())
+}
+
+pub fn encode_base(base: &VectorSet) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12 + base.data.len() * 4);
+    bio::put_u32(&mut buf, base.dim as u32);
+    bio::put_u64(&mut buf, base.len() as u64);
+    bio::put_f32_slice(&mut buf, &base.data);
+    buf
+}
+
+pub fn decode_base(payload: &[u8]) -> Result<VectorSet, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let dim = rd(r.u32())? as usize;
+    let n = rd(r.u64())? as usize;
+    if dim == 0 {
+        return Err(ArtifactError::corrupt("BASE: dim must be >= 1"));
+    }
+    let count = n
+        .checked_mul(dim)
+        .ok_or_else(|| ArtifactError::corrupt("BASE: n * dim overflows"))?;
+    let data = rd(r.f32_vec(count))?;
+    finish(&r, "BASE", payload)?;
+    Ok(VectorSet { dim, data })
+}
+
+pub fn encode_graph(g: &Graph) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(24 + (g.offsets.len() + g.targets.len()) * 4);
+    bio::put_u32(&mut buf, g.entry_point);
+    bio::put_u32(&mut buf, g.max_degree as u32);
+    bio::put_u64(&mut buf, g.offsets.len() as u64);
+    bio::put_u64(&mut buf, g.targets.len() as u64);
+    bio::put_u32_slice(&mut buf, &g.offsets);
+    bio::put_u32_slice(&mut buf, &g.targets);
+    buf
+}
+
+pub fn decode_graph(payload: &[u8]) -> Result<Graph, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let entry_point = rd(r.u32())?;
+    let max_degree = rd(r.u32())? as usize;
+    let n_offsets = rd(r.u64())? as usize;
+    let n_targets = rd(r.u64())? as usize;
+    if n_offsets == 0 {
+        return Err(ArtifactError::corrupt("GRAPH: empty offsets table"));
+    }
+    let offsets = rd(r.u32_vec(n_offsets))?;
+    let targets = rd(r.u32_vec(n_targets))?;
+    // CSR invariants `Graph::neighbors` slices on — must hold before any
+    // caller touches adjacency, or a corrupt row panics the process.
+    if offsets[0] != 0 {
+        return Err(ArtifactError::corrupt("GRAPH: offsets must start at 0"));
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(ArtifactError::corrupt(
+            "GRAPH: offsets must be non-decreasing",
+        ));
+    }
+    if *offsets.last().unwrap() as usize != targets.len() {
+        return Err(ArtifactError::corrupt(format!(
+            "GRAPH: offsets end at {} but {} targets stored",
+            offsets.last().unwrap(),
+            targets.len()
+        )));
+    }
+    finish(&r, "GRAPH", payload)?;
+    Ok(Graph {
+        offsets,
+        targets,
+        entry_point,
+        max_degree,
+    })
+}
+
+pub fn encode_gap(gap: &GapGraph) -> Vec<u8> {
+    let (row_offsets, bits, n) = gap.to_parts();
+    let mut buf = Vec::with_capacity(24 + (row_offsets.len() + bits.len()) * 8);
+    bio::put_u64(&mut buf, n as u64);
+    bio::put_u64(&mut buf, row_offsets.len() as u64);
+    bio::put_u64(&mut buf, bits.len() as u64);
+    bio::put_u64_slice(&mut buf, row_offsets);
+    bio::put_u64_slice(&mut buf, bits);
+    buf
+}
+
+pub fn decode_gap(payload: &[u8]) -> Result<GapGraph, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let n = rd(r.u64())? as usize;
+    let n_offsets = rd(r.u64())? as usize;
+    let n_words = rd(r.u64())? as usize;
+    let row_offsets = rd(r.u64_vec(n_offsets))?;
+    let bits = rd(r.u64_vec(n_words))?;
+    finish(&r, "GAP", payload)?;
+    GapGraph::from_parts(row_offsets, bits, n)
+        .map_err(|e| ArtifactError::corrupt(format!("GAP: {e}")))
+}
+
+pub fn encode_codebook(cb: &PqCodebook) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + cb.centroids.len() * 4);
+    bio::put_str(&mut buf, cb.metric.name());
+    bio::put_u32(&mut buf, cb.dim as u32);
+    bio::put_u32(&mut buf, cb.m as u32);
+    bio::put_u32(&mut buf, cb.c as u32);
+    bio::put_f32_slice(&mut buf, &cb.centroids);
+    buf
+}
+
+pub fn decode_codebook(payload: &[u8]) -> Result<PqCodebook, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let metric_name = rd(r.str())?;
+    let metric = Metric::parse(&metric_name).ok_or_else(|| {
+        ArtifactError::corrupt(format!("CODEBOOK: unknown metric '{metric_name}'"))
+    })?;
+    let dim = rd(r.u32())? as usize;
+    let m = rd(r.u32())? as usize;
+    let c = rd(r.u32())? as usize;
+    if m == 0 || dim == 0 || dim % m != 0 {
+        return Err(ArtifactError::corrupt(format!(
+            "CODEBOOK: dim {dim} not divisible into {m} subspaces"
+        )));
+    }
+    if c == 0 || c > 256 {
+        return Err(ArtifactError::corrupt(format!(
+            "CODEBOOK: c = {c} outside 1..=256 (codes are one byte)"
+        )));
+    }
+    let centroids = rd(r.f32_vec(m * c * (dim / m)))?;
+    finish(&r, "CODEBOOK", payload)?;
+    Ok(PqCodebook {
+        metric,
+        dim,
+        m,
+        c,
+        centroids,
+    })
+}
+
+pub fn encode_codes(codes: &PqCodes) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(12 + codes.codes.len());
+    bio::put_u32(&mut buf, codes.m as u32);
+    bio::put_u64(&mut buf, codes.len() as u64);
+    buf.extend_from_slice(&codes.codes);
+    buf
+}
+
+pub fn decode_codes(payload: &[u8]) -> Result<PqCodes, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let m = rd(r.u32())? as usize;
+    let n = rd(r.u64())? as usize;
+    if m == 0 {
+        return Err(ArtifactError::corrupt("CODES: m must be >= 1"));
+    }
+    let count = n
+        .checked_mul(m)
+        .ok_or_else(|| ArtifactError::corrupt("CODES: n * m overflows"))?;
+    let codes = rd(r.take(count))?.to_vec();
+    finish(&r, "CODES", payload)?;
+    Ok(PqCodes { m, codes })
+}
+
+pub fn encode_reorder(perm: &[u32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + perm.len() * 4);
+    bio::put_u64(&mut buf, perm.len() as u64);
+    bio::put_u32_slice(&mut buf, perm);
+    buf
+}
+
+pub fn decode_reorder(payload: &[u8]) -> Result<Vec<u32>, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let n = rd(r.u64())? as usize;
+    let perm = rd(r.u32_vec(n))?;
+    finish(&r, "REORDER", payload)?;
+    // Must be a bijection on 0..n, or id remapping silently corrupts
+    // results.
+    let mut seen = vec![false; n];
+    for &p in &perm {
+        let idx = p as usize;
+        if idx >= n || seen[idx] {
+            return Err(ArtifactError::corrupt(format!(
+                "REORDER: not a permutation of 0..{n} (value {p})"
+            )));
+        }
+        seen[idx] = true;
+    }
+    Ok(perm)
+}
+
+pub fn encode_mapping(m: &DataMapping) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(44);
+    for x in [
+        m.n_nodes,
+        m.idx_cores,
+        m.raw_cores,
+        m.raw_base,
+        m.idx_frames_per_page,
+        m.raw_frames_per_page,
+        m.hot_frames_per_page,
+        m.n_hot,
+        m.idx_frame_bits,
+        m.hot_frame_bits,
+        m.raw_frame_bits,
+    ] {
+        bio::put_u32(&mut buf, x);
+    }
+    buf
+}
+
+pub fn decode_mapping(payload: &[u8]) -> Result<DataMapping, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let m = DataMapping {
+        n_nodes: rd(r.u32())?,
+        idx_cores: rd(r.u32())?,
+        raw_cores: rd(r.u32())?,
+        raw_base: rd(r.u32())?,
+        idx_frames_per_page: rd(r.u32())?,
+        raw_frames_per_page: rd(r.u32())?,
+        hot_frames_per_page: rd(r.u32())?,
+        n_hot: rd(r.u32())?,
+        idx_frame_bits: rd(r.u32())?,
+        hot_frame_bits: rd(r.u32())?,
+        raw_frame_bits: rd(r.u32())?,
+    };
+    finish(&r, "MAPPING", payload)?;
+    // Address translation divides/mods by these — zero would panic.
+    if m.idx_cores == 0
+        || m.raw_cores == 0
+        || m.idx_frames_per_page == 0
+        || m.raw_frames_per_page == 0
+        || m.hot_frames_per_page == 0
+    {
+        return Err(ArtifactError::corrupt(
+            "MAPPING: cores and frames-per-page must be >= 1",
+        ));
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_codec_rejects_broken_csr() {
+        let good = Graph::from_lists(&[vec![1], vec![0]], 0, 4);
+        let buf = encode_graph(&good);
+        let back = decode_graph(&buf).unwrap();
+        assert_eq!(back.offsets, good.offsets);
+        assert_eq!(back.targets, good.targets);
+        assert_eq!(back.entry_point, 0);
+
+        // Non-monotonic offsets must be rejected, not slice-panic later.
+        let mut bad = good.clone();
+        bad.offsets = vec![0, 2, 1];
+        let e = decode_graph(&encode_graph(&bad)).unwrap_err();
+        assert_eq!(e.kind, super::super::ArtifactErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn intra_section_trailing_bytes_are_rejected() {
+        let good = Graph::from_lists(&[vec![1], vec![0]], 0, 4);
+        let mut p = encode_graph(&good);
+        p.push(0xAB);
+        let e = decode_graph(&p).unwrap_err();
+        assert_eq!(e.kind, super::super::ArtifactErrorKind::Corrupt);
+        assert!(e.message.contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn gap_codec_rejects_absurd_row_counts_without_panicking() {
+        // n = u64::MAX with empty tables: the row-count check must use
+        // checked arithmetic (a plain `n + 1` overflows in debug).
+        let mut p = Vec::new();
+        p.extend_from_slice(&u64::MAX.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        p.extend_from_slice(&0u64.to_le_bytes());
+        let e = decode_gap(&p).unwrap_err();
+        assert_eq!(e.kind, super::super::ArtifactErrorKind::Corrupt);
+    }
+
+    #[test]
+    fn reorder_codec_rejects_non_permutations() {
+        assert_eq!(decode_reorder(&encode_reorder(&[2, 0, 1])).unwrap(), vec![2, 0, 1]);
+        assert!(decode_reorder(&encode_reorder(&[0, 0, 1])).is_err());
+        assert!(decode_reorder(&encode_reorder(&[0, 1, 3])).is_err());
+    }
+
+    #[test]
+    fn mapping_codec_roundtrips_and_guards_zero_divisors() {
+        let m = DataMapping {
+            n_nodes: 64,
+            idx_cores: 2,
+            raw_cores: 2,
+            raw_base: 2,
+            idx_frames_per_page: 33,
+            raw_frames_per_page: 9,
+            hot_frames_per_page: 3,
+            n_hot: 2,
+            idx_frame_bits: 1088,
+            hot_frame_bits: 2000,
+            raw_frame_bits: 256,
+        };
+        assert_eq!(decode_mapping(&encode_mapping(&m)).unwrap(), m);
+        let mut z = m.clone();
+        z.idx_frames_per_page = 0;
+        assert!(decode_mapping(&encode_mapping(&z)).is_err());
+    }
+}

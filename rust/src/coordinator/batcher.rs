@@ -13,7 +13,7 @@
 //! and a panicking request is answered `Err(Internal)` for that request
 //! only — the loop, the pool, and the batch-mates all survive.
 
-use super::{BatchQuery, SearchService};
+use super::{BatchQuery, ServiceCell};
 use crate::api::{ApiError, QueryOptions};
 use crate::search::SearchOutput;
 use std::sync::mpsc;
@@ -82,16 +82,19 @@ impl BatcherHandle {
     }
 }
 
-/// Spawn the batching loop. Flushed batches execute on the service's
-/// exec pool (the loop thread helps as one more lane). Returns the
-/// submit handle; dropping every handle shuts the loop down.
+/// Spawn the batching loop against a swappable [`ServiceCell`]: each
+/// flush loads the cell's CURRENT epoch, so a wire `reload` takes
+/// effect on the next batch while the in-flight one finishes on the
+/// index it started with. Flushed batches execute on the loaded
+/// service's exec pool (the loop thread helps as one more lane).
+/// Returns the submit handle; dropping every handle shuts the loop down.
 pub fn spawn(
-    service: Arc<SearchService>,
+    cell: Arc<ServiceCell>,
     policy: BatchPolicy,
 ) -> (BatcherHandle, std::thread::JoinHandle<BatchStats>) {
     let (tx, rx) = mpsc::channel::<Request>();
     let handle = BatcherHandle { tx };
-    let join = std::thread::spawn(move || run_loop(service, policy, rx));
+    let join = std::thread::spawn(move || run_loop(cell, policy, rx));
     (handle, join)
 }
 
@@ -105,7 +108,7 @@ pub struct BatchStats {
 }
 
 fn run_loop(
-    service: Arc<SearchService>,
+    cell: Arc<ServiceCell>,
     policy: BatchPolicy,
     rx: mpsc::Receiver<Request>,
 ) -> BatchStats {
@@ -143,18 +146,40 @@ fn run_loop(
         // Dispatch the coalesced batch as ONE staged pipeline on the
         // exec pool: duplicate queries share an ADT build, per-query
         // tasks rebalance by stealing, and a panicking request comes
-        // back as Err(Internal) for that request alone.
+        // back as Err(Internal) for that request alone. The epoch is
+        // loaded per flush: after a hot reload, the NEXT batch runs on
+        // the new index.
+        let service = cell.load();
         let batch: Vec<Request> = std::mem::take(&mut pending);
+        // Each request was validated at enqueue against THAT moment's
+        // epoch; a hot reload may have swapped in a differently-shaped
+        // index since. Re-check the one epoch-dependent precondition
+        // (vector length) against the FLUSH epoch, so a racing swap
+        // yields a typed error — never a silently truncated distance
+        // against mismatched base rows.
+        let dim = service.dim();
         let items: Vec<BatchQuery> = batch
             .iter()
+            .filter(|r| r.query.len() == dim)
             .map(|r| BatchQuery {
                 q: &r.query,
                 k: r.k,
                 options: r.options,
             })
             .collect();
-        let outcomes = service.search_batch_mixed(&items);
-        for (req, outcome) in batch.iter().zip(outcomes) {
+        let mut outcomes = service.search_batch_mixed(&items).into_iter();
+        for req in &batch {
+            let outcome = if req.query.len() == dim {
+                outcomes.next().expect("one outcome per dispatched item")
+            } else {
+                // Neutral phrasing: this arm is reached both by a hot
+                // swap racing a validated request AND by direct
+                // (unvalidated) BatcherHandle submissions.
+                Err(ApiError::dim_mismatch(format!(
+                    "query dim {} does not match the currently served index dim {dim}",
+                    req.query.len()
+                )))
+            };
             let _ = req.respond.send(outcome);
         }
     }
@@ -168,9 +193,9 @@ mod tests {
     use crate::dataset::synth::tiny_uniform;
     use crate::distance::Metric;
 
-    fn service() -> (crate::dataset::Dataset, Arc<SearchService>) {
+    fn service() -> (crate::dataset::Dataset, Arc<ServiceCell>) {
         let ds = tiny_uniform(300, 12, Metric::L2, 91);
-        let svc = SearchService::build(
+        let svc = crate::coordinator::SearchService::build(
             &ds,
             &GraphParams {
                 r: 12,
@@ -191,7 +216,7 @@ mod tests {
             },
             false,
         );
-        (ds, Arc::new(svc))
+        (ds, Arc::new(ServiceCell::new(Arc::new(svc))))
     }
 
     #[test]

@@ -260,9 +260,10 @@ mod tests {
             },
             false,
         ));
+        let cell = Arc::new(crate::coordinator::ServiceCell::new(svc));
         let (handle, _join) =
-            crate::coordinator::batcher::spawn(svc.clone(), Default::default());
-        let server = crate::coordinator::server::Server::start(svc, handle, 0).unwrap();
+            crate::coordinator::batcher::spawn(cell.clone(), Default::default());
+        let server = crate::coordinator::server::Server::start(cell, handle, 0).unwrap();
         let rep = run_rpc(
             server.addr,
             &ds.queries,

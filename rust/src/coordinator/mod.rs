@@ -64,12 +64,15 @@ pub mod shard;
 pub mod server;
 
 use crate::api::{ApiError, QueryOptions, QueryRequest, QueryResponse, SearchMode};
+use crate::artifact::{ArtifactError, ArtifactParts, IndexArtifact, IndexProvenance, IndexSpec};
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
 use crate::distance::Metric;
+use crate::engine::mapping::DataMapping;
 use crate::exec::ExecPool;
 use crate::gap::GapGraph;
 use crate::graph::{vamana, Graph};
+use crate::nand::NandConfig;
 use crate::pq::{Adt, AdtBatch, PqCodebook, PqCodes};
 use crate::runtime::service::RuntimeHandle;
 use crate::search::beam::{accurate_beam_search_into, pq_beam_search_into, SearchContext};
@@ -77,8 +80,9 @@ use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
 use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
 use std::cell::RefCell;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Aggregated service counters (exported by the `stats` RPC).
 #[derive(Debug, Default)]
@@ -147,18 +151,40 @@ pub struct BatchQuery<'a> {
 /// One loaded, queryable index.
 pub struct SearchService {
     pub name: String,
+    /// Identity card of the index: what was built and how. Persisted in
+    /// the artifact header and reported by the wire `status` op.
+    pub spec: IndexSpec,
+    /// Whether this index was built in-process or opened from an
+    /// artifact (and from which path).
+    pub provenance: IndexProvenance,
     pub metric: Metric,
     pub base: VectorSet,
     pub graph: Graph,
     pub codebook: PqCodebook,
     pub codes: PqCodes,
     pub gap: Option<GapGraph>,
+    /// §IV-E reorder permutation (`perm[old] = new`) when this index was
+    /// opened from a reordered artifact; persisted back by [`Self::save`].
+    pub reorder: Option<Vec<u32>>,
+    /// Inverse of `reorder` (`id_map[stored] = original`): applied to
+    /// every result list, so clients see ORIGINAL ids no matter how the
+    /// stored layout was permuted for NAND locality.
+    id_map: Option<Vec<u32>>,
+    /// The §IV-E layout this index was opened with. [`Self::save`]
+    /// persists it VERBATIM (the contract with the NAND engine/sim);
+    /// only when absent (a freshly built index) does `save` compute
+    /// [`Self::default_mapping`].
+    pub mapping: Option<DataMapping>,
     pub params: SearchParams,
     pub features: ProximaFeatures,
     /// AOT runtime service thread; when present the per-query ADT (and
     /// batch APIs) run through the compiled XLA artifacts. The PJRT
     /// handles are pinned to that thread (they are not `Send`).
     pub runtime: Option<RuntimeHandle>,
+    /// The XLA *preference* this service was created with — distinct
+    /// from `runtime.is_some()` (the attach *outcome*): a reload must
+    /// retry the preference, not inherit a transient attach failure.
+    xla_preferred: bool,
     pub stats: ServiceStats,
     /// Parallelism width for batch execution: the exec pool's worker
     /// threads plus the submitting thread, which helps execute while it
@@ -201,23 +227,154 @@ impl SearchService {
         } else {
             None
         };
+        let spec = IndexSpec {
+            dataset: ds.name.clone(),
+            metric: ds.metric,
+            dim: ds.dim() as u32,
+            n_base: ds.n_base() as u64,
+            graph_r: gp.r as u32,
+            graph_build_l: gp.build_l as u32,
+            graph_alpha: gp.alpha,
+            pq_m: pq.m as u32,
+            pq_c: pq.c as u32,
+            hot_frac: 0.0,
+            build_seed: gp.seed,
+        };
         SearchService {
             name: ds.name.clone(),
+            spec,
+            provenance: IndexProvenance::Built,
             metric: ds.metric,
             base: ds.base.clone(),
             graph,
             codebook,
             codes,
             gap,
+            reorder: None,
+            id_map: None,
+            mapping: None,
             params,
             features: ProximaFeatures::default(),
             runtime,
+            xla_preferred: use_xla,
             stats: ServiceStats::default(),
             workers: default_workers(),
             exec: ExecPool::shared().clone(),
             scratch: ScratchPool::new(),
             adt_batches: ScratchPool::new(),
         }
+    }
+
+    /// Persist this index as a versioned, checksummed artifact — the
+    /// deployment unit [`Self::open`] (and `serve --index`) restarts
+    /// from without touching the raw dataset. Alongside the search
+    /// structures it stores the §IV-E [`DataMapping`] layout computed
+    /// for the paper's accelerator geometry, so the NAND engine/sim can
+    /// open the same file.
+    pub fn save(&self, path: &Path) -> Result<(), ArtifactError> {
+        // An index opened from an artifact carries that artifact's
+        // layout and must persist it VERBATIM — recomputing would
+        // silently rewrite the physical addresses the engine/sim
+        // resolves. Only a freshly built index derives the default.
+        let mapping = self
+            .mapping
+            .clone()
+            .unwrap_or_else(|| self.default_mapping());
+        ArtifactParts {
+            spec: &self.spec,
+            base: &self.base,
+            graph: &self.graph,
+            gap: self.gap.as_ref(),
+            codebook: &self.codebook,
+            codes: &self.codes,
+            reorder: self.reorder.as_deref(),
+            mapping: Some(&mapping),
+        }
+        .write(path)
+    }
+
+    /// The §IV-E layout for this index on the paper's accelerator
+    /// geometry: gap-encoded index width, coupled PQ frames, raw-vector
+    /// region (persisted by [`Self::save`]).
+    pub fn default_mapping(&self) -> DataMapping {
+        let b_index = self
+            .gap
+            .as_ref()
+            .map(|g| g.mean_bits_per_edge(self.graph.n_edges().max(1)).ceil() as u32)
+            .unwrap_or(32)
+            .clamp(1, 32);
+        DataMapping::new(
+            &NandConfig::proxima(),
+            self.base.len() as u32,
+            self.graph.max_degree.max(1) as u32,
+            b_index,
+            (self.codebook.m * 8) as u32,
+            self.base.dim as u32,
+            32,
+            self.spec.hot_frac,
+        )
+    }
+
+    /// Open a serialized index artifact — the fast restart path: no
+    /// dataset, no graph build, no PQ training. The artifact is
+    /// checksum-verified and structurally validated ([`IndexArtifact`]);
+    /// every failure is a typed [`ArtifactError`], never a panic.
+    pub fn open(
+        path: &Path,
+        params: SearchParams,
+        use_xla: bool,
+    ) -> Result<SearchService, ArtifactError> {
+        let art = IndexArtifact::open(path)?;
+        let gap = match art.gap {
+            Some(g) => g,
+            // Minimal artifacts may omit the packed stream; re-encode
+            // (cheap relative to a graph build).
+            None => GapGraph::encode(&art.graph.to_lists()),
+        };
+        let runtime = if use_xla {
+            RuntimeHandle::spawn_default(&art.codebook)
+        } else {
+            None
+        };
+        // A reordered artifact stores everything in the permuted (NAND
+        // layout) space; results must still name ORIGINAL ids. Invert
+        // the stored `perm[old] = new` once, map every output through it
+        // (decode already proved it a bijection).
+        let id_map = art
+            .reorder
+            .as_ref()
+            .map(|perm| crate::reorder::invert_permutation(perm));
+        Ok(SearchService {
+            name: art.spec.dataset.clone(),
+            provenance: IndexProvenance::Artifact {
+                path: path.display().to_string(),
+            },
+            metric: art.spec.metric,
+            base: art.base,
+            graph: art.graph,
+            codebook: art.codebook,
+            codes: art.codes,
+            gap: Some(gap),
+            reorder: art.reorder,
+            id_map,
+            mapping: art.mapping,
+            params,
+            features: ProximaFeatures::default(),
+            runtime,
+            xla_preferred: use_xla,
+            stats: ServiceStats::default(),
+            workers: default_workers(),
+            exec: ExecPool::shared().clone(),
+            scratch: ScratchPool::new(),
+            adt_batches: ScratchPool::new(),
+            spec: art.spec,
+        })
+    }
+
+    /// The XLA preference this service was created with (what a hot
+    /// reload should retry — not the attach outcome).
+    pub fn xla_preferred(&self) -> bool {
+        self.xla_preferred
     }
 
     /// Override the batch-execution width: swaps in a DEDICATED exec
@@ -228,6 +385,14 @@ impl SearchService {
         self.workers = workers.max(1);
         self.exec = Arc::new(ExecPool::new(self.workers - 1));
         self
+    }
+
+    /// Whether batches run on the process-wide shared pool (vs a
+    /// dedicated pool installed by [`Self::with_workers`]). The wire
+    /// `reload` op uses this to carry a serve-time `--workers` override
+    /// across hot swaps.
+    pub fn uses_shared_pool(&self) -> bool {
+        Arc::ptr_eq(&self.exec, ExecPool::shared())
     }
 
     /// Check out per-query scratch (workers hold one for their lifetime).
@@ -266,8 +431,9 @@ impl SearchService {
                     return;
                 }
                 Err(e) => {
-                    // Fall back but surface the problem.
-                    eprintln!("[service] XLA ADT failed ({e:#}); using native path");
+                    // Fall back but surface the problem (suppressed in
+                    // quiet mode like all progress/diagnostic chatter).
+                    crate::logln!("[service] XLA ADT failed ({e:#}); using native path");
                 }
             }
         }
@@ -489,8 +655,20 @@ impl SearchService {
             }
         }
         out.stats.adt_builds = fresh_adt as usize;
+        self.map_ids(&mut out);
         self.record(&out.stats, t0.elapsed());
         out
+    }
+
+    /// Translate stored-space result ids back to original ids when this
+    /// index was opened from a reordered artifact (k lookups per query —
+    /// off the traversal hot loop).
+    fn map_ids(&self, out: &mut SearchOutput) {
+        if let Some(map) = &self.id_map {
+            for id in out.ids.iter_mut() {
+                *id = map[*id as usize];
+            }
+        }
     }
 
     /// Answer one query with an externally provided ADT (the batcher's
@@ -511,6 +689,7 @@ impl SearchService {
             &mut scratch.walk,
             &mut out,
         );
+        self.map_ids(&mut out);
         self.record(&out.stats, t0.elapsed());
         out
     }
@@ -741,6 +920,48 @@ impl SearchService {
 /// list reserves L slots up front, so this bounds the scratch allocation
 /// one request can demand. Beam widths beyond this are never useful.
 pub const MAX_L_OVERRIDE: usize = 1 << 20;
+
+/// The swappable serving handle: an `ArcSwap`-style epoch cell holding
+/// the currently served [`SearchService`].
+///
+/// Every dispatch site ([`server`] per wire line, [`batcher`] per flush)
+/// calls [`ServiceCell::load`], which clones the inner `Arc` under a
+/// briefly-held read lock and runs the query OUTSIDE the lock. A
+/// [`ServiceCell::swap`] (the wire `reload` op) publishes a new index
+/// for all FUTURE loads; in-flight queries keep their epoch's `Arc`, so
+/// they finish on the old index and the old service (graph, vectors,
+/// runtime thread) is dropped only when its last in-flight query
+/// completes. The write lock is only ever contended for the duration of
+/// an `Arc` clone, so reloads never stall the serving path behind a
+/// long-running query.
+pub struct ServiceCell {
+    inner: RwLock<Arc<SearchService>>,
+}
+
+impl ServiceCell {
+    pub fn new(service: Arc<SearchService>) -> ServiceCell {
+        ServiceCell {
+            inner: RwLock::new(service),
+        }
+    }
+
+    /// The current epoch's service. Hold the returned `Arc` for the
+    /// duration of ONE request — re-loading per request is what makes
+    /// hot swaps take effect.
+    pub fn load(&self) -> Arc<SearchService> {
+        self.inner
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Publish `next` as the served index; returns the replaced one
+    /// (which in-flight queries may still be using).
+    pub fn swap(&self, next: Arc<SearchService>) -> Arc<SearchService> {
+        let mut guard = self.inner.write().unwrap_or_else(|e| e.into_inner());
+        std::mem::replace(&mut *guard, next)
+    }
+}
 
 /// Default `search_batch` width: one worker per available core.
 fn default_workers() -> usize {

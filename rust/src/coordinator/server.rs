@@ -21,6 +21,26 @@
 //! -> {"op":"shutdown"}
 //! <- {"ok":true}
 //! ```
+//!
+//! # v2 admin plane (index lifecycle)
+//!
+//! The server serves whatever index its [`ServiceCell`] currently
+//! holds, and two admin ops manage that cell over the same socket:
+//! ```text
+//! -> {"v":2,"op":"status"}
+//! <- {"v":2,"spec":{...IndexSpec...},
+//!     "provenance":{"source":"built"|"artifact","path":...},
+//!     "stats":{"queries":...,"early_terminated":...,
+//!              "mean_latency_us":...,"queue_wait_us_total":...}}
+//! -> {"v":2,"op":"reload","path":"/path/to/index.pxa"}
+//! <- {"ok":true,"dataset":...,"n_base":...,"path":...}   (or an error line)
+//! ```
+//! `reload` opens the artifact (checksum-verified; every failure is a
+//! structured error line and the OLD index keeps serving) and swaps it
+//! into the cell. Requests dispatched before the swap hold the old
+//! epoch's `Arc` and complete on the old index; requests dispatched
+//! after it run on the new one. Service counters (`stats`) belong to an
+//! index instance and start fresh after a reload.
 //! Every `options` field is optional (defaults in [`crate::api`] module
 //! docs). A request without `"v"` is a v1 request — the compatibility
 //! path, answered in the original single-query shape:
@@ -40,14 +60,16 @@
 //! (malformed JSON, non-numeric `v`) get the structured shape above.
 
 use super::batcher::BatcherHandle;
-use super::SearchService;
+use super::{SearchService, ServiceCell};
 use crate::anyhow;
 use crate::api::wire::{self, WireRequest};
 use crate::api::{ApiError, NeighborList, QueryOptions, QueryRequest, QueryResponse};
+use crate::artifact::IndexProvenance;
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -60,9 +82,10 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve.
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve whatever index
+    /// `cell` holds — which the wire `reload` op can hot-swap.
     pub fn start(
-        service: Arc<SearchService>,
+        cell: Arc<ServiceCell>,
         batcher: BatcherHandle,
         port: u16,
     ) -> Result<Server> {
@@ -80,11 +103,11 @@ impl Server {
                         // Small JSON lines + closed-loop clients: Nagle +
                         // delayed-ACK would add ~40 ms per hop.
                         stream.set_nodelay(true).ok();
-                        let svc = service.clone();
+                        let cell = cell.clone();
                         let bh = batcher.clone();
                         let f = flag.clone();
                         handlers.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, svc, bh, f);
+                            let _ = handle_conn(stream, cell, bh, f);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -115,10 +138,12 @@ impl Server {
 /// Serve one connection. Only I/O failures end the loop; every
 /// request-level failure is answered with a structured error line so the
 /// connection survives bad input (a malformed line used to kill the whole
-/// connection silently).
+/// connection silently). The served index is loaded from the epoch cell
+/// per line, so a concurrent `reload` applies from the next request on —
+/// never mid-request.
 fn handle_conn(
     stream: TcpStream,
-    service: Arc<SearchService>,
+    cell: Arc<ServiceCell>,
     batcher: BatcherHandle,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
@@ -145,7 +170,9 @@ fn handle_conn(
                     };
                     error_line(version, &e)
                 }
-                Ok(WireRequest::Stats) => stats_response(&service),
+                Ok(WireRequest::Stats) => stats_response(&cell.load()),
+                Ok(WireRequest::Status) => status_response(&cell.load()),
+                Ok(WireRequest::Reload { path }) => reload_response(&cell, &path),
                 Ok(WireRequest::Shutdown) => {
                     shutdown.store(true, Ordering::Relaxed);
                     writeln!(
@@ -156,7 +183,7 @@ fn handle_conn(
                     break;
                 }
                 Ok(WireRequest::Search { version, request }) => {
-                    answer_search(&service, &batcher, version, request)
+                    answer_search(&cell.load(), &batcher, version, request)
                 }
             },
         };
@@ -249,6 +276,61 @@ fn stats_response(service: &SearchService) -> Json {
     ])
 }
 
+/// The admin `status` op: the served index's [`IndexSpec`]
+/// (what was built and how), its provenance (fresh build vs opened
+/// artifact + path), and the service counters — everything an operator
+/// needs to tell replicas apart.
+///
+/// [`IndexSpec`]: crate::artifact::IndexSpec
+fn status_response(service: &SearchService) -> Json {
+    let provenance = match &service.provenance {
+        IndexProvenance::Built => Json::obj(vec![("source", Json::str("built"))]),
+        IndexProvenance::Artifact { path } => Json::obj(vec![
+            ("source", Json::str("artifact")),
+            ("path", Json::str(path.clone())),
+        ]),
+    };
+    Json::obj(vec![
+        ("v", Json::num(wire::VERSION as f64)),
+        ("spec", wire::encode_spec(&service.spec)),
+        ("provenance", provenance),
+        ("stats", stats_response(service)),
+    ])
+}
+
+/// The admin `reload` op: open the artifact at `path` (keeping the old
+/// index's search params and XLA preference) and swap it into the epoch
+/// cell. On ANY failure — missing file, truncation, corruption, version
+/// mismatch — the old index keeps serving and the client gets a
+/// structured error line.
+fn reload_response(cell: &ServiceCell, path: &str) -> Json {
+    let old = cell.load();
+    // Retry the XLA *preference*, not the old attach *outcome* — a
+    // transient attach failure at boot must not disable XLA for every
+    // subsequent reload (artifacts may exist by now).
+    match SearchService::open(Path::new(path), old.params, old.xla_preferred()) {
+        Err(e) => wire::encode_error(&ApiError::from(e)),
+        Ok(svc) => {
+            // Carry the serve-time execution width across the swap: a
+            // dedicated pool installed by `--workers` must not silently
+            // revert to the machine-sized shared pool on reload.
+            let svc = if old.uses_shared_pool() {
+                svc
+            } else {
+                svc.with_workers(old.workers)
+            };
+            let info = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("dataset", Json::str(svc.name.clone())),
+                ("n_base", Json::num(svc.base.len() as f64)),
+                ("path", Json::str(path)),
+            ]);
+            drop(cell.swap(Arc::new(svc)));
+            info
+        }
+    }
+}
+
 /// Minimal blocking client for examples/tests. [`Client::search`] speaks
 /// the v1 compat path; [`Client::search_batch`] /
 /// [`Client::search_with_options`] speak v2.
@@ -335,6 +417,33 @@ impl Client {
         self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
     }
 
+    /// v2 admin: spec + provenance + counters of the served index.
+    pub fn status(&mut self) -> Result<Json> {
+        let resp = self.roundtrip(Json::obj(vec![
+            ("v", Json::num(wire::VERSION as f64)),
+            ("op", Json::str("status")),
+        ]))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(resp)
+    }
+
+    /// v2 admin: hot-swap the served index to the artifact at `path`.
+    /// Returns the server's confirmation line; a typed error (bad path,
+    /// corrupt artifact, version mismatch) leaves the old index serving.
+    pub fn reload(&mut self, path: &str) -> Result<Json> {
+        let resp = self.roundtrip(Json::obj(vec![
+            ("v", Json::num(wire::VERSION as f64)),
+            ("op", Json::str("reload")),
+            ("path", Json::str(path)),
+        ]))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(resp)
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.roundtrip(Json::obj(vec![("op", Json::str("shutdown"))]))?;
         Ok(())
@@ -373,8 +482,9 @@ mod tests {
             },
             false,
         ));
-        let (handle, _join) = spawn(svc.clone(), BatchPolicy::default());
-        let server = Server::start(svc.clone(), handle, 0).unwrap();
+        let cell = Arc::new(ServiceCell::new(svc));
+        let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+        let server = Server::start(cell, handle, 0).unwrap();
         let addr = server.addr;
 
         let mut client = Client::connect(addr).unwrap();
@@ -402,6 +512,36 @@ mod tests {
 
         let stats = client.stats().unwrap();
         assert_eq!(stats.get("queries").and_then(Json::as_usize), Some(4));
+
+        // Admin plane: status reports the spec and build provenance.
+        let status = client.status().unwrap();
+        assert_eq!(
+            status
+                .get("provenance")
+                .and_then(|p| p.get("source"))
+                .and_then(Json::as_str),
+            Some("built")
+        );
+        assert_eq!(
+            status
+                .get("spec")
+                .and_then(|s| s.get("dim"))
+                .and_then(Json::as_usize),
+            Some(8)
+        );
+        assert_eq!(
+            status
+                .get("stats")
+                .and_then(|s| s.get("queries"))
+                .and_then(Json::as_usize),
+            Some(4)
+        );
+
+        // Reload with a bad path is a structured error; the connection
+        // and the old index keep serving.
+        assert!(client.reload("/definitely/not/an/artifact.pxa").is_err());
+        let (ids2, _, _) = client.search(ds.queries.row(0), 5).unwrap();
+        assert_eq!(ids2, ids, "old index must keep serving after a failed reload");
 
         client.shutdown().unwrap();
         server.stop();

@@ -19,10 +19,12 @@
 
 use super::SearchService;
 use crate::api::{ApiError, NeighborList, QueryRequest, QueryResponse};
+use crate::artifact::ArtifactError;
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
 use crate::exec::ExecPool;
 use crate::search::{SearchOutput, SearchStats};
+use std::path::{Path, PathBuf};
 
 /// A sharded index: per-shard services plus the id mapping back to the
 /// global space.
@@ -72,6 +74,124 @@ impl ShardedService {
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Persist every shard as its own index artifact under `dir`
+    /// (`shard-000.pxa`, `shard-001.pxa`, ...). Returns the written
+    /// paths in shard order — the order [`Self::open_shards`] must see
+    /// them in, since shard position determines the global-id base.
+    pub fn save_shards(&self, dir: &Path) -> Result<Vec<PathBuf>, ArtifactError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| ArtifactError::io(format!("creating {}: {e}", dir.display())))?;
+        let paths: Vec<PathBuf> = (0..self.shards.len())
+            .map(|s| dir.join(format!("shard-{s:03}.pxa")))
+            .collect();
+        // Per-shard encode + CRC sweep + atomic write is independent:
+        // run the saves in parallel on the shared pool (mirroring
+        // [`Self::open_shards`]), then surface the first failure.
+        let results = ExecPool::shared()
+            .run_collect(self.shards.len(), |s| self.shards[s].save(&paths[s]));
+        for (s, r) in results.into_iter().enumerate() {
+            r.value.ok_or_else(|| {
+                ArtifactError::io(format!("saving shard {s}: worker task panicked"))
+            })??;
+        }
+        Ok(paths)
+    }
+
+    /// Open per-shard artifacts as one sharded service — the scale-out
+    /// restart path: no dataset, no rebuilds, shards mapped back into
+    /// the global id space by their position in `paths` (shard `s`
+    /// serves global ids `[sum of earlier shard sizes, +its size)`,
+    /// matching how [`Self::build`] partitioned contiguously).
+    ///
+    /// Every artifact must agree on dimension and metric; a foreign
+    /// shard file fails with a typed spec mismatch instead of silently
+    /// merging distances from incompatible spaces.
+    pub fn open_shards(
+        paths: &[PathBuf],
+        params: SearchParams,
+    ) -> Result<ShardedService, ArtifactError> {
+        if paths.is_empty() {
+            return Err(ArtifactError::spec_mismatch(
+                "open_shards requires at least one artifact path",
+            ));
+        }
+        // Open (file read + CRC sweep + structural validation) every
+        // shard in parallel on the shared pool — the dominant restart
+        // cost is per-file and independent. Ordering/consistency checks
+        // run afterwards, in shard order.
+        let results = ExecPool::shared()
+            .run_collect(paths.len(), |s| SearchService::open(&paths[s], params, false));
+        let mut opened = Vec::with_capacity(paths.len());
+        for (s, r) in results.into_iter().enumerate() {
+            let svc = r.value.ok_or_else(|| {
+                ArtifactError::io(format!("opening shard {s}: worker task panicked"))
+            })??;
+            opened.push(svc);
+        }
+        let mut shards: Vec<SearchService> = Vec::with_capacity(paths.len());
+        let mut shard_base = Vec::with_capacity(paths.len());
+        let mut next_base = 0u64;
+        let mut stem0: Option<String> = None;
+        for (s, (path, svc)) in paths.iter().zip(opened).enumerate() {
+            // Shard artifacts are named `<dataset>-shard<N>` by
+            // [`Self::build`]; global ids are `shard_base[s] + local`,
+            // so a path list in the wrong order (e.g. reconstructed
+            // from an unsorted readdir) would silently shift every
+            // merged id into the wrong shard's range. Enforce that
+            // position `s` really holds shard `s` of one dataset.
+            let (stem, idx) = svc
+                .spec
+                .dataset
+                .rsplit_once("-shard")
+                .and_then(|(stem, idx)| Some((stem.to_string(), idx.parse::<usize>().ok()?)))
+                .ok_or_else(|| {
+                    ArtifactError::spec_mismatch(format!(
+                        "{}: '{}' is not a shard artifact (expected '<dataset>-shard<N>')",
+                        path.display(),
+                        svc.spec.dataset
+                    ))
+                })?;
+            if idx != s {
+                return Err(ArtifactError::spec_mismatch(format!(
+                    "{} holds shard {idx} but was passed at position {s} — \
+                     pass the paths in shard order (save_shards returns them)",
+                    path.display()
+                )));
+            }
+            match &stem0 {
+                None => stem0 = Some(stem),
+                Some(expect) if *expect != stem => {
+                    return Err(ArtifactError::spec_mismatch(format!(
+                        "{} belongs to dataset '{stem}', not '{expect}'",
+                        path.display()
+                    )));
+                }
+                Some(_) => {}
+            }
+            if let Some(first) = shards.first() {
+                if svc.dim() != first.dim() || svc.metric != first.metric {
+                    return Err(ArtifactError::spec_mismatch(format!(
+                        "shard {} ({}d, {}) does not match shard 0 ({}d, {})",
+                        path.display(),
+                        svc.dim(),
+                        svc.metric.name(),
+                        first.dim(),
+                        first.metric.name()
+                    )));
+                }
+            }
+            if next_base + svc.base.len() as u64 > u32::MAX as u64 {
+                return Err(ArtifactError::spec_mismatch(
+                    "combined shards exceed the u32 global-id space",
+                ));
+            }
+            shard_base.push(next_base as u32);
+            next_base += svc.base.len() as u64;
+            shards.push(svc);
+        }
+        Ok(ShardedService { shards, shard_base })
     }
 
     /// Fan a whole [`QueryRequest`] out to all shards — one task per
@@ -283,5 +403,55 @@ mod tests {
         let (_, sh) = build_sharded(7); // 600 / 7 is uneven
         let total: usize = sh.shards.iter().map(|s| s.base.len()).sum();
         assert_eq!(total, 600);
+    }
+
+    #[test]
+    fn shards_roundtrip_through_artifacts() {
+        let (ds, sh) = build_sharded(3);
+        let dir = std::env::temp_dir().join(format!("proxima-shardrt-{}", std::process::id()));
+        let paths = sh.save_shards(&dir).unwrap();
+        assert_eq!(paths.len(), 3);
+        let reopened = ShardedService::open_shards(&paths, sh.shards[0].params).unwrap();
+        assert_eq!(reopened.n_shards(), 3);
+        assert_eq!(reopened.shard_base, sh.shard_base);
+        for qi in 0..4 {
+            let a = sh.search(ds.queries.row(qi), 10);
+            let b = reopened.search(ds.queries.row(qi), 10);
+            assert_eq!(a.ids, b.ids, "query {qi}: reopened shards must answer identically");
+            assert_eq!(a.dists, b.dists);
+        }
+        // A wrong-order path list is rejected (global ids would shift
+        // into the wrong shard's range).
+        let mut reversed = paths.clone();
+        reversed.reverse();
+        let e = ShardedService::open_shards(&reversed, sh.shards[0].params).unwrap_err();
+        assert_eq!(e.kind, crate::artifact::ArtifactErrorKind::SpecMismatch);
+        assert!(e.message.contains("position"), "{e}");
+        // A mixed-dimension shard set is rejected at open.
+        let foreign = tiny_uniform(100, 8, Metric::L2, 5);
+        let fsvc = SearchService::build(
+            &foreign,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 5,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 100,
+                kmeans_iters: 4,
+            },
+            SearchParams::default(),
+            false,
+        );
+        let fpath = dir.join("foreign.pxa");
+        fsvc.save(&fpath).unwrap();
+        let mut mixed = paths.clone();
+        mixed.push(fpath);
+        let e = ShardedService::open_shards(&mixed, sh.shards[0].params).unwrap_err();
+        assert_eq!(e.kind, crate::artifact::ArtifactErrorKind::SpecMismatch);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -12,57 +12,125 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PROXIMA1";
 
-fn put_u32(buf: &mut Vec<u8>, x: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, x: u32) {
     buf.extend_from_slice(&x.to_le_bytes());
 }
-fn put_u64(buf: &mut Vec<u8>, x: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+pub(crate) fn put_f32(buf: &mut Vec<u8>, x: f32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+pub(crate) fn put_f64(buf: &mut Vec<u8>, x: f64) {
     buf.extend_from_slice(&x.to_le_bytes());
 }
 
-struct Reader<'a> {
+/// Bulk little-endian append of numeric slices: one memcpy on LE
+/// targets (where native order IS the wire order), a per-element loop
+/// elsewhere. The artifact's BASE section alone is hundreds of MB at
+/// deployment scale, so per-element appends are a measurable save cost.
+macro_rules! put_slice_le {
+    ($name:ident, $t:ty) => {
+        pub(crate) fn $name(buf: &mut Vec<u8>, xs: &[$t]) {
+            #[cfg(target_endian = "little")]
+            {
+                // SAFETY: plain-old-data reinterpretation; u8 alignment
+                // is 1 and every element's bytes are initialized.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        xs.as_ptr().cast::<u8>(),
+                        std::mem::size_of_val(xs),
+                    )
+                };
+                buf.extend_from_slice(bytes);
+            }
+            #[cfg(not(target_endian = "little"))]
+            {
+                buf.reserve(std::mem::size_of_val(xs));
+                for &x in xs {
+                    buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    };
+}
+put_slice_le!(put_f32_slice, f32);
+put_slice_le!(put_u32_slice, u32);
+put_slice_le!(put_u64_slice, u64);
+
+/// Sentinel every out-of-bounds read's message starts with. The
+/// artifact codec's error classifier (`artifact::rd`) dispatches on
+/// this exact string to tell truncation apart from garbage bytes — it
+/// lives here, next to the one `bail!` that emits it, so the two sites
+/// cannot drift apart.
+pub(crate) const TRUNCATED_MSG: &str = "truncated";
+
+/// Little-endian cursor over an in-memory buffer, shared by the dataset
+/// container below and the index-artifact codec (`crate::artifact`).
+/// Every read is bounds-checked: running off the end is a typed
+/// "truncated" error, never a panic.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!("truncated file at offset {}", self.pos);
+    /// Current byte offset (used by the artifact codec to delimit its
+    /// checksummed header region).
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.pos {
+            bail!("{TRUNCATED_MSG} file at offset {}", self.pos);
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
-        let bytes = self.take(n * 4)?;
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub(crate) fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
         Ok(bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
-    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
-        let bytes = self.take(n * 4)?;
+    pub(crate) fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n.checked_mul(4).context("length overflow")?)?;
         Ok(bytes
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>> {
+        let bytes = self.take(n.checked_mul(8).context("length overflow")?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    pub(crate) fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         Ok(String::from_utf8(self.take(n)?.to_vec())?)
     }
 }
 
-fn put_str(buf: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
     put_u32(buf, s.len() as u32);
     buf.extend_from_slice(s.as_bytes());
 }
@@ -193,18 +261,45 @@ pub fn load_csr(path: &Path) -> Result<(Vec<u32>, Vec<u32>)> {
 
 /// Write via a temp file + rename so partially-written caches are never
 /// observed by a concurrent reader.
-fn write_atomic(path: &Path, buf: &[u8]) -> Result<()> {
+pub(crate) fn write_atomic(path: &Path, buf: &[u8]) -> Result<()> {
+    write_atomic_with(path, |f| f.write_all(buf))
+}
+
+/// [`write_atomic`] with a caller-supplied streaming writer — the
+/// index-artifact save path (`crate::artifact`) streams its section
+/// payloads straight to the temp file instead of concatenating a second
+/// full in-memory copy of a potentially huge artifact. Same contract: a
+/// crashed save never leaves a torn file at the target path.
+pub(crate) fn write_atomic_with<F>(path: &Path, write: F) -> Result<()>
+where
+    F: FnOnce(&mut std::fs::File) -> std::io::Result<()>,
+{
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let tmp = path.with_extension("tmp");
-    {
+    // Temp name derived from the FULL file name plus the pid:
+    // `with_extension("tmp")` would collide across file families
+    // sharing a stem (`x.bin` and `x.pxa` both → `x.tmp`), letting two
+    // concurrent writers publish each other's half-written bytes.
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    let tmp = path.with_file_name(format!("{file_name}.{}.tmp", std::process::id()));
+    let result: Result<()> = (|| {
         let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(buf)?;
+        write(&mut f)?;
         f.sync_all().ok();
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    })();
+    if result.is_err() {
+        // Unlike the old shared `x.tmp` name (overwritten by the next
+        // save), a pid-unique temp file nobody cleans up would leak a
+        // full-artifact-sized orphan per failed save.
+        let _ = std::fs::remove_file(&tmp);
     }
-    std::fs::rename(&tmp, path)?;
-    Ok(())
+    result
 }
 
 /// Read a whole file as a string with context.

@@ -19,7 +19,12 @@ pub struct PhysAddr {
 }
 
 /// Address translation tables of the arbiter.
-#[derive(Clone, Debug)]
+///
+/// The full field set is persisted verbatim in the index artifact's
+/// `MAPPING` section (`crate::artifact`), so the NAND engine/simulator
+/// can open the same serialized index the serving path opens and resolve
+/// identical physical addresses without recomputing the layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct DataMapping {
     pub n_nodes: u32,
     /// Cores assigned to coupled index+PQ frames.

@@ -167,6 +167,45 @@ impl GapGraph {
     pub fn bits_mut(&mut self) -> &mut [u64] {
         &mut self.bits
     }
+
+    /// The serializable parts: `(row_offsets, bits, n)`. Persisted by the
+    /// index-artifact format (`crate::artifact`) so an opened index reuses
+    /// the stored packed stream instead of re-encoding the graph.
+    pub fn to_parts(&self) -> (&[u64], &[u64], usize) {
+        (&self.row_offsets, &self.bits, self.n)
+    }
+
+    /// Rebuild from serialized parts, validating the structural
+    /// invariants a decoder relies on (offset monotonicity and extent)
+    /// so corrupted input yields an error, not a panic or a wild read.
+    pub fn from_parts(row_offsets: Vec<u64>, bits: Vec<u64>, n: usize) -> Result<GapGraph, String> {
+        // `n` comes straight from the file: checked arithmetic, or an
+        // absurd count (e.g. u64::MAX) panics debug builds on `n + 1`.
+        if n.checked_add(1) != Some(row_offsets.len()) {
+            return Err(format!(
+                "gap graph: {} row offsets for {n} rows (want n + 1)",
+                row_offsets.len()
+            ));
+        }
+        if row_offsets.first() != Some(&0) {
+            return Err("gap graph: first row offset must be 0".into());
+        }
+        if row_offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("gap graph: row offsets must be non-decreasing".into());
+        }
+        let extent = *row_offsets.last().unwrap();
+        if extent > bits.len() as u64 * 64 {
+            return Err(format!(
+                "gap graph: rows claim {extent} bits but only {} are stored",
+                bits.len() as u64 * 64
+            ));
+        }
+        Ok(GapGraph {
+            row_offsets,
+            bits,
+            n,
+        })
+    }
 }
 
 #[cfg(test)]

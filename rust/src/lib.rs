@@ -33,9 +33,33 @@
 //!   scale-out, and a `search_batch` API riding the shared exec pool with
 //!   per-worker pinned scratch and a staged batch pipeline: one batched,
 //!   deduplicated ADT-build pass before the per-query walks);
+//! * the **index lifecycle** (`artifact::` + `SearchService::save`/
+//!   `open`): a versioned, checksummed on-disk artifact (spec + CSR
+//!   graph + gap encoding + PQ codebook/codes + raw vectors + §IV-E
+//!   `DataMapping` layout) is the deployment unit — build once, open
+//!   anywhere, no dataset or rebuild on the restart path;
 //! * the figure/table harnesses regenerating the paper's evaluation.
+//!
+//! # Index lifecycle
+//!
+//! ```text
+//! proxima build --dataset sift-s --index data/sift-s.pxa   # build + persist
+//! proxima serve --index data/sift-s.pxa --port 7878        # open, no rebuild
+//! {"op":"status"}                          # spec + provenance + stats
+//! {"v":2,"op":"reload","path":"..."}       # hot-swap the served index;
+//!                                          # in-flight queries finish on
+//!                                          # the old epoch's index
+//! ```
+//!
+//! In-process the same contract is `SearchService::build` →
+//! [`SearchService::save`](coordinator::SearchService::save) →
+//! [`SearchService::open`](coordinator::SearchService::open), with
+//! [`coordinator::ServiceCell`] as the swappable serving handle;
+//! `ShardedService::{save_shards, open_shards}` persist and reopen one
+//! artifact per shard.
 
 pub mod api;
+pub mod artifact;
 pub mod config;
 pub mod exec;
 pub mod dataset;

@@ -3,29 +3,45 @@
 //! ```text
 //! proxima datasets                         list the synthetic registry
 //! proxima gen-data  --dataset sift-s --scale 0.1 --out data/sift-s.bin
-//! proxima build     --dataset sift-s --scale 0.05   build index, report stats
+//! proxima build     --dataset sift-s --scale 0.05 --index data/sift-s.pxa
+//!                                          build index, persist the artifact
 //! proxima search    --dataset sift-s --scale 0.05 --l 100 --k 10
+//! proxima search    --dataset sift-s --index data/sift-s.pxa   open, no build
 //! proxima serve     --dataset sift-s --scale 0.02 --port 7878
+//! proxima serve     --index data/sift-s.pxa --port 7878        open, no build
 //! proxima sim       --dataset sift-s --scale 0.02 --queues 256 --hot 0.03
 //! proxima figures   --fig all|3|6|9|11|12|13|14|15|16|17|t1|t2|t3
 //! ```
+//!
+//! # Index lifecycle
+//!
+//! `build` persists the index as a versioned artifact (`--index` picks
+//! the path, default `data/<dataset>.pxa`; `--no_persist true` skips
+//! writing). `search`/`serve` with `--index <path>` OPEN that artifact —
+//! the fast restart path: no graph build, no PQ training, and for
+//! `serve` no dataset at all. A running server hot-swaps its index via
+//! the wire admin plane (`{"v":2,"op":"reload","path":...}`; see
+//! `coordinator::server`).
 //!
 //! Config file via `--config path` plus `--set key=value` overrides
 //! (see `config::Config`). The `search` subcommand also honors the
 //! `[api]` section (`api.mode`, `api.l_override`, `api.early_term_tau`,
 //! `api.rerank` — see `api::QueryOptions::from_config`), so e.g.
 //! `--set api.mode=accurate` runs the HNSW-like baseline through the
-//! same typed request path the server uses.
+//! same typed request path the server uses. `--quiet true` (or the
+//! `PROXIMA_QUIET` env var) silences progress chatter on stderr.
 
 use proxima::config::{Config, GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
 use proxima::coordinator::server::Server;
-use proxima::coordinator::SearchService;
+use proxima::coordinator::{SearchService, ServiceCell};
 use proxima::dataset::synth::SynthSpec;
 use proxima::figures;
+use proxima::logln;
 use proxima::util::bench::Table;
 use proxima::util::cli::Args;
 use proxima::util::error::Result;
+use std::path::Path;
 use std::sync::Arc;
 
 fn main() -> Result<()> {
@@ -36,6 +52,9 @@ fn main() -> Result<()> {
         None => Config::new(),
     };
     cfg.overlay_args(&args);
+    if cfg.get_bool("quiet", false) {
+        proxima::util::log::set_quiet(true);
+    }
 
     match args.subcommand.as_deref() {
         Some("datasets") => {
@@ -65,7 +84,7 @@ fn dataset_from_cfg(cfg: &Config) -> Result<proxima::dataset::Dataset> {
     let scale = cfg.get_f64("scale", 0.05);
     let spec = SynthSpec::by_name(name, scale)
         .ok_or_else(|| proxima::anyhow!("unknown dataset {name} (try `proxima datasets`)"))?;
-    eprintln!(
+    logln!(
         "[proxima] dataset {name}: {} base x {}d ({}), {} queries",
         spec.n_base,
         spec.dim,
@@ -81,21 +100,40 @@ fn service_from_cfg(cfg: &Config) -> Result<(proxima::dataset::Dataset, SearchSe
     let pq = PqParams::from_config(cfg, ds.dim());
     let params = SearchParams::from_config(cfg);
     let use_xla = !cfg.get_bool("no_xla", false);
-    eprintln!("[proxima] building index (R={}, L_build={})...", gp.r, gp.build_l);
+    logln!("[proxima] building index (R={}, L_build={})...", gp.r, gp.build_l);
     let t0 = std::time::Instant::now();
     let svc = SearchService::build(&ds, &gp, &pq, params, use_xla);
     if svc.runtime.is_some() {
-        eprintln!("[proxima] XLA artifacts loaded (AOT request path active)");
+        logln!("[proxima] XLA artifacts loaded (AOT request path active)");
     } else {
-        eprintln!("[proxima] no artifacts / --no_xla; native fallback (run `make artifacts`)");
+        logln!("[proxima] no artifacts / --no_xla; native fallback (run `make artifacts`)");
     }
-    eprintln!(
+    logln!(
         "[proxima] index built in {:.1}s: {} edges, gap-encoded {:.0} KB",
         t0.elapsed().as_secs_f64(),
         svc.graph.n_edges(),
         svc.gap.as_ref().map(|g| g.size_bits() / 8192).unwrap_or(0)
     );
     Ok((ds, svc))
+}
+
+/// Open a serialized index artifact (the `--index` path): no dataset
+/// generation, no graph build, no PQ training.
+fn service_from_artifact(cfg: &Config, path: &str) -> Result<SearchService> {
+    let params = SearchParams::from_config(cfg);
+    let use_xla = !cfg.get_bool("no_xla", false);
+    let t0 = std::time::Instant::now();
+    let svc = SearchService::open(Path::new(path), params, use_xla)?;
+    logln!(
+        "[proxima] opened artifact {path} in {:.2}s: '{}' {} x {}d ({}), {} edges",
+        t0.elapsed().as_secs_f64(),
+        svc.name,
+        svc.base.len(),
+        svc.dim(),
+        svc.metric.name(),
+        svc.graph.n_edges()
+    );
+    Ok(svc)
 }
 
 fn cmd_gen_data(cfg: &Config) -> Result<()> {
@@ -122,11 +160,35 @@ fn cmd_build(cfg: &Config) -> Result<()> {
             (1.0 - gap.compression_ratio(svc.graph.n_edges())) * 100.0
         );
     }
+    // build = build + persist: the artifact is the deployment unit
+    // `serve --index` / `search --index` restart from.
+    if !cfg.get_bool("no_persist", false) {
+        let default_path = format!("data/{}.pxa", svc.name);
+        let path = cfg.get_str("index").unwrap_or(&default_path).to_string();
+        svc.save(Path::new(&path))?;
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "artifact: wrote {path} ({bytes} bytes); serve it with \
+             `proxima serve --index {path}`"
+        );
+    }
     Ok(())
 }
 
 fn cmd_search(cfg: &Config) -> Result<()> {
-    let (ds, svc) = service_from_cfg(cfg)?;
+    let (ds, svc) = match cfg.get_str("index") {
+        // Open the artifact for serving; the dataset is still generated
+        // as the QUERY source (and ground truth), with spec-vs-dataset
+        // compatibility checked before any search runs.
+        Some(path) => {
+            let path = path.to_string();
+            let ds = dataset_from_cfg(cfg)?;
+            let svc = service_from_artifact(cfg, &path)?;
+            svc.spec.check_compatible(&ds)?;
+            (ds, svc)
+        }
+        None => service_from_cfg(cfg)?,
+    };
     let k = cfg.get_usize("k", 10);
     let opts = proxima::api::QueryOptions::from_config(cfg);
     // Run the config-derived options through the same boundary checks
@@ -161,7 +223,15 @@ fn cmd_search(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &Config) -> Result<()> {
-    let (_ds, svc) = service_from_cfg(cfg)?;
+    // `--index` is the restart path: open the artifact, never touching
+    // the raw dataset; otherwise build from the configured dataset.
+    let svc = match cfg.get_str("index") {
+        Some(path) => {
+            let path = path.to_string();
+            service_from_artifact(cfg, &path)?
+        }
+        None => service_from_cfg(cfg)?.1,
+    };
     // `workers` picks the batch-execution width (0 = the shared pool's
     // machine-sized default); batches execute as staged pipelines on the
     // persistent work-stealing exec pool either way.
@@ -169,14 +239,16 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         0 => svc,
         w => svc.with_workers(w),
     };
-    let svc = Arc::new(svc);
+    // The epoch cell is what the wire admin plane hot-swaps on
+    // `{"v":2,"op":"reload","path":...}`.
+    let cell = Arc::new(ServiceCell::new(Arc::new(svc)));
     let policy = BatchPolicy {
         max_batch: cfg.get_usize("batch", 16),
         max_wait: std::time::Duration::from_millis(cfg.get_u64("batch_wait_ms", 2)),
     };
-    let (handle, _join) = spawn(svc.clone(), policy);
+    let (handle, _join) = spawn(cell.clone(), policy);
     let port = cfg.get_usize("port", 7878) as u16;
-    let server = Server::start(svc, handle, port)?;
+    let server = Server::start(cell, handle, port)?;
     println!("proxima serving on {}", server.addr);
     println!("protocol: one JSON per line; see coordinator::server docs");
     // Serve until killed.

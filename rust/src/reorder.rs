@@ -99,6 +99,19 @@ impl VisitProfile {
     }
 }
 
+/// Invert a permutation `perm[old] = new` into `inv[new] = old` — the
+/// id-mapping direction search results need (used here and by
+/// `SearchService::open` when honoring an artifact's REORDER section).
+/// `perm` must be a bijection on `0..len` (the artifact decoder proves
+/// this for stored permutations).
+pub fn invert_permutation(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        inv[new as usize] = old as u32;
+    }
+    inv
+}
+
 /// A reordered index bundle: graph + codes permuted together, with the
 /// hot-node set being ids `0..n_hot` by construction.
 pub struct ReorderedIndex {
@@ -123,10 +136,7 @@ impl ReorderedIndex {
         let perm = profile.reorder_permutation();
         let g2 = graph.remap(&perm);
         let n = graph.n();
-        let mut inv = vec![0u32; n];
-        for (old, &new) in perm.iter().enumerate() {
-            inv[new as usize] = old as u32;
-        }
+        let inv = invert_permutation(&perm);
         // Permute PQ codes rows: new row r holds codes of old vertex inv[r].
         let m = codes.m;
         let mut new_codes = vec![0u8; codes.codes.len()];

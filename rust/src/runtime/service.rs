@@ -57,7 +57,7 @@ impl RuntimeHandle {
         match Self::spawn(dir, codebook.clone()) {
             Ok(h) => Some(h),
             Err(e) => {
-                eprintln!("[runtime] service thread failed: {e:#}");
+                crate::logln!("[runtime] service thread failed: {e:#}");
                 None
             }
         }

@@ -1,0 +1,61 @@
+//! One stderr log helper for build/open/serve progress, with a quiet
+//! mode — so loadgen runs and tests can silence the serving stack's
+//! progress chatter instead of interleaving it with their own output.
+//!
+//! Progress messages go through the crate-root [`logln!`](crate::logln)
+//! macro, which drops the line when quiet mode is on. Quiet mode is
+//! enabled by [`set_quiet`] (the CLI's `--quiet` flag) or by setting the
+//! `PROXIMA_QUIET` environment variable to anything but `0`/empty.
+//! Errors that callers must see (panics, typed API errors) do NOT go
+//! through this: it is for progress noise only.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+static QUIET: OnceLock<AtomicBool> = OnceLock::new();
+
+fn cell() -> &'static AtomicBool {
+    QUIET.get_or_init(|| {
+        let env_quiet = std::env::var("PROXIMA_QUIET")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        AtomicBool::new(env_quiet)
+    })
+}
+
+/// Enable/disable quiet mode process-wide (overrides `PROXIMA_QUIET`).
+pub fn set_quiet(quiet: bool) {
+    cell().store(quiet, Ordering::Relaxed);
+}
+
+/// Is progress logging currently suppressed?
+pub fn is_quiet() -> bool {
+    cell().load(Ordering::Relaxed)
+}
+
+/// Progress log line to stderr, suppressed in quiet mode. `eprintln!`
+/// semantics otherwise.
+#[macro_export]
+macro_rules! logln {
+    ($($arg:tt)*) => {
+        if !$crate::util::log::is_quiet() {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_mode_toggles() {
+        let before = is_quiet();
+        set_quiet(true);
+        assert!(is_quiet());
+        crate::logln!("this line must be suppressed");
+        set_quiet(false);
+        assert!(!is_quiet());
+        set_quiet(before);
+    }
+}

@@ -6,7 +6,7 @@ use proxima::api::{QueryOptions, QueryRequest, SearchMode};
 use proxima::config::{GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
 use proxima::coordinator::server::{Client, Server};
-use proxima::coordinator::SearchService;
+use proxima::coordinator::{SearchService, ServiceCell};
 use proxima::dataset::synth::tiny_uniform;
 use proxima::dataset::Dataset;
 use proxima::distance::Metric;
@@ -39,8 +39,9 @@ fn service() -> (Dataset, Arc<SearchService>) {
 }
 
 fn serve(svc: Arc<SearchService>) -> Server {
-    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default());
-    Server::start(svc, handle, 0).unwrap()
+    let cell = Arc::new(ServiceCell::new(svc));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+    Server::start(cell, handle, 0).unwrap()
 }
 
 /// Acceptance criterion: one TCP round-trip carrying N queries returns N

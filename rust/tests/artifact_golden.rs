@@ -1,0 +1,122 @@
+//! Format-stability gate: `tests/fixtures/golden-v1.pxa` is a COMMITTED
+//! format-version-1 artifact (generated once by
+//! `python/tools/make_golden_artifact.py`). Every future PR's reader
+//! must keep opening it — a layout change without a version bump (or a
+//! version bump without a migration) fails here instead of silently
+//! orphaning artifacts already deployed in the field.
+//!
+//! If this test fails because the format legitimately evolved: bump
+//! `artifact::FORMAT_VERSION`, keep a reader for v1, and add a new
+//! golden fixture alongside this one — do NOT regenerate the v1 file.
+
+use proxima::api::{QueryOptions, QueryRequest, SearchMode};
+use proxima::artifact::IndexArtifact;
+use proxima::config::SearchParams;
+use proxima::coordinator::SearchService;
+use proxima::distance::Metric;
+use std::path::PathBuf;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden-v1.pxa")
+}
+
+#[test]
+fn golden_v1_artifact_still_opens() {
+    let art = IndexArtifact::open(&golden_path()).expect(
+        "the committed v1 golden artifact no longer opens — the format \
+         changed incompatibly (see this file's module docs)",
+    );
+    // The identity card, exactly as the generator wrote it.
+    assert_eq!(art.spec.dataset, "golden-synth");
+    assert_eq!(art.spec.metric, Metric::L2);
+    assert_eq!(art.spec.dim, 8);
+    assert_eq!(art.spec.n_base, 64);
+    assert_eq!(art.spec.graph_r, 4);
+    assert_eq!(art.spec.graph_build_l, 16);
+    assert!((art.spec.graph_alpha - 1.2).abs() < 1e-6);
+    assert_eq!(art.spec.pq_m, 4);
+    assert_eq!(art.spec.pq_c, 8);
+    assert_eq!(art.spec.hot_frac, 0.03125);
+    assert_eq!(art.spec.build_seed, 1234);
+
+    // Structures decoded and structurally valid.
+    assert_eq!(art.base.len(), 64);
+    assert_eq!(art.base.dim, 8);
+    art.graph.validate().expect("golden graph must validate");
+    assert_eq!(art.graph.n(), 64);
+    assert_eq!(art.graph.entry_point, 0);
+    assert_eq!(art.codebook.centroids.len(), 4 * 8 * 2);
+    assert_eq!(art.codes.len(), 64);
+    assert!(art.gap.is_none(), "the v1 golden fixture omits the GAP section");
+    let perm = art.reorder.expect("golden fixture carries a reorder permutation");
+    assert_eq!(perm[0], 63, "reversed permutation as generated");
+    let mapping = art.mapping.expect("golden fixture carries a DataMapping");
+    assert_eq!(mapping.n_nodes, 64);
+    assert_eq!(mapping.idx_frames_per_page, 33);
+    assert_eq!(mapping.n_hot, 2);
+}
+
+/// Open → save must persist the artifact's hand-crafted layout metadata
+/// VERBATIM (the contract with the NAND engine/sim) — not a recomputed
+/// default — and carry the reorder permutation through.
+#[test]
+fn open_then_save_preserves_stored_mapping_and_reorder_verbatim() {
+    let svc = SearchService::open(&golden_path(), SearchParams::default(), false).unwrap();
+    let stored = svc
+        .mapping
+        .clone()
+        .expect("opened service carries the artifact's mapping");
+    assert_eq!(stored.idx_frames_per_page, 33, "the fixture's hand-crafted value");
+    let out = std::env::temp_dir().join(format!("golden-resave-{}.pxa", std::process::id()));
+    svc.save(&out).unwrap();
+    let back = IndexArtifact::open(&out).unwrap();
+    assert_eq!(back.mapping.unwrap(), stored);
+    assert_eq!(back.reorder.unwrap(), svc.reorder.clone().unwrap());
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn golden_v1_artifact_still_serves() {
+    let svc = SearchService::open(
+        &golden_path(),
+        SearchParams {
+            l: 16,
+            k: 4,
+            ..Default::default()
+        },
+        false,
+    )
+    .expect("the golden artifact must open as a serveable index");
+    assert_eq!(svc.name, "golden-synth");
+    // Every mode answers real queries off the fixture's own vectors.
+    let q = svc.base.row(0).to_vec();
+    for mode in [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid] {
+        let req = QueryRequest::single(&q, 4).with_options(QueryOptions {
+            mode,
+            ..Default::default()
+        });
+        let resp = svc.query(&req).unwrap();
+        assert_eq!(resp.results[0].ids.len(), 4, "{mode:?}");
+        assert!(
+            resp.results[0].dists.windows(2).all(|w| w[0] <= w[1]),
+            "{mode:?}: dists must be ascending"
+        );
+    }
+    // The query vector IS stored base row 0; the fixture's REORDER
+    // permutation is the reversal (perm[old] = 63 - old), so the
+    // service must report that hit under its ORIGINAL id 63 — the
+    // reorder-mapping contract, pinned against the golden bytes.
+    let resp = svc
+        .query(&QueryRequest::single(&q, 4).with_options(QueryOptions {
+            mode: SearchMode::Accurate,
+            ..Default::default()
+        }))
+        .unwrap();
+    assert_eq!(resp.results[0].ids[0], 63);
+    assert_eq!(resp.results[0].dists[0], 0.0);
+    assert_eq!(
+        svc.reorder.as_ref().map(|p| p.len()),
+        Some(64),
+        "the opened service must carry the artifact's permutation"
+    );
+}

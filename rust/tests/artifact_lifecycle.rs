@@ -1,0 +1,477 @@
+//! Integration tests for the index lifecycle (ISSUE 4 acceptance
+//! criteria): build → save → open parity across every search mode,
+//! adversarial decodes (truncation, bit flips, future versions, spec
+//! mismatches) surfacing as typed errors on a surviving server
+//! connection, and the wire admin plane (`status` / `reload`) hot-swapping
+//! the served index while in-flight queries finish on the old epoch.
+
+use proxima::api::{ApiErrorCode, QueryOptions, QueryRequest, SearchMode};
+use proxima::artifact::{ArtifactErrorKind, ArtifactReader, IndexArtifact, IndexProvenance};
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::{Client, Server};
+use proxima::coordinator::{SearchService, ServiceCell};
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::Dataset;
+use proxima::distance::Metric;
+use proxima::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("proxima-artifact-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn service(seed: u64) -> (Dataset, SearchService) {
+    let ds = tiny_uniform(400, 12, Metric::L2, seed);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 6,
+        },
+        SearchParams {
+            l: 80,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    );
+    (ds, svc)
+}
+
+const MODES: [SearchMode; 3] = [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid];
+
+/// Acceptance: save → open reproduces the index exactly — bitwise-equal
+/// PQ structures and identical `SearchOutput`s across all three modes.
+#[test]
+fn saved_and_opened_index_answers_identically_in_every_mode() {
+    let (ds, built) = service(7);
+    let path = tmpdir().join("roundtrip.pxa");
+    built.save(&path).unwrap();
+    let opened = SearchService::open(&path, built.params, false).unwrap();
+
+    // Identity card and provenance.
+    assert_eq!(opened.spec, built.spec);
+    assert_eq!(built.provenance, IndexProvenance::Built);
+    match &opened.provenance {
+        IndexProvenance::Artifact { path: p } => assert!(p.ends_with("roundtrip.pxa")),
+        other => panic!("opened service has provenance {other:?}"),
+    }
+
+    // Bitwise-equal stored structures.
+    assert_eq!(opened.base.dim, built.base.dim);
+    assert!(
+        opened
+            .base
+            .data
+            .iter()
+            .zip(&built.base.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "base vectors must round-trip bitwise"
+    );
+    assert!(
+        opened
+            .codebook
+            .centroids
+            .iter()
+            .zip(&built.codebook.centroids)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "PQ centroids must round-trip bitwise"
+    );
+    assert_eq!(opened.codes.codes, built.codes.codes);
+    assert_eq!(opened.graph.offsets, built.graph.offsets);
+    assert_eq!(opened.graph.targets, built.graph.targets);
+    assert_eq!(opened.graph.entry_point, built.graph.entry_point);
+
+    // Bitwise-equal ADTs (the per-query PQ table).
+    let q = ds.queries.row(0);
+    let t_built = built.build_adt(q);
+    let t_opened = opened.build_adt(q);
+    assert!(
+        t_built
+            .table
+            .iter()
+            .zip(&t_opened.table)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "ADT tables must be bitwise identical"
+    );
+
+    // Identical answers, every mode, every query.
+    for mode in MODES {
+        let opts = QueryOptions {
+            mode,
+            want_stats: true,
+            ..Default::default()
+        };
+        for qi in 0..ds.n_queries() {
+            let req = QueryRequest::single(ds.queries.row(qi), 10).with_options(opts);
+            let a = built.query(&req).unwrap();
+            let b = opened.query(&req).unwrap();
+            assert_eq!(
+                a.results[0].ids, b.results[0].ids,
+                "{mode:?} query {qi}: ids diverge after reopen"
+            );
+            assert_eq!(
+                a.results[0].dists, b.results[0].dists,
+                "{mode:?} query {qi}: dists diverge after reopen"
+            );
+        }
+    }
+
+    // The stored artifact also carries the §IV-E layout for the
+    // engine/simulator: same file, same mapping.
+    let art = IndexArtifact::open(&path).unwrap();
+    let mapping = art.mapping.expect("service artifacts carry a DataMapping");
+    assert_eq!(mapping, built.default_mapping());
+    assert_eq!(mapping.n_nodes as usize, ds.n_base());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Adversarial decode: flipping ANY byte of the artifact yields a typed
+/// error — never a panic, never a silently-wrong open.
+#[test]
+fn every_byte_flip_is_rejected_with_a_typed_error() {
+    let (_ds, svc) = service(11);
+    let path = tmpdir().join("flips.pxa");
+    svc.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert!(ArtifactReader::from_bytes(good.clone()).is_ok());
+
+    // Sampled sweep (every byte would be minutes in debug builds):
+    // dense over the header, strided over the payloads, always the
+    // first/last payload bytes.
+    let mut offsets: Vec<usize> = (0..256.min(good.len())).collect();
+    offsets.extend((256..good.len()).step_by(97));
+    offsets.push(good.len() - 1);
+    for off in offsets {
+        let mut bad = good.clone();
+        bad[off] ^= 0x10;
+        assert!(
+            ArtifactReader::from_bytes(bad).is_err(),
+            "byte flip at offset {off} went undetected"
+        );
+    }
+
+    // Targeted kinds at known offsets.
+    let mut magic = good.clone();
+    magic[0] ^= 0xFF;
+    assert_eq!(
+        ArtifactReader::from_bytes(magic).unwrap_err().kind,
+        ArtifactErrorKind::BadMagic
+    );
+    let mut payload = good.clone();
+    let last = payload.len() - 1;
+    payload[last] ^= 0x01;
+    assert_eq!(
+        ArtifactReader::from_bytes(payload).unwrap_err().kind,
+        ArtifactErrorKind::Corrupt
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Adversarial decode: truncation at any length is a typed error.
+#[test]
+fn truncated_artifacts_are_rejected_with_typed_errors() {
+    let (_ds, svc) = service(13);
+    let path = tmpdir().join("trunc.pxa");
+    svc.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    for frac in [0.0, 0.1, 0.5, 0.9, 0.999] {
+        let cut = ((good.len() as f64) * frac) as usize;
+        let e = ArtifactReader::from_bytes(good[..cut].to_vec()).unwrap_err();
+        assert!(
+            matches!(
+                e.kind,
+                ArtifactErrorKind::Truncated
+                    | ArtifactErrorKind::Corrupt
+                    | ArtifactErrorKind::BadMagic
+            ),
+            "cut at {cut}: {e}"
+        );
+    }
+    // Cutting the final byte leaves header + TOC intact: the specific
+    // kind must be Truncated (payload shorter than its TOC entry).
+    let e = ArtifactReader::from_bytes(good[..good.len() - 1].to_vec()).unwrap_err();
+    assert_eq!(e.kind, ArtifactErrorKind::Truncated, "{e}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Adversarial decode: a future format version fails with a clean
+/// version-mismatch before any layout parsing, and a valid artifact for
+/// the wrong dataset fails spec compatibility.
+#[test]
+fn future_versions_and_wrong_datasets_are_typed_failures() {
+    let (_ds, svc) = service(17);
+    let path = tmpdir().join("versions.pxa");
+    svc.save(&path).unwrap();
+    let mut future = std::fs::read(&path).unwrap();
+    future[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let e = ArtifactReader::from_bytes(future).unwrap_err();
+    assert_eq!(e.kind, ArtifactErrorKind::VersionMismatch);
+    assert!(e.message.contains("99"), "{e}");
+
+    // Spec-vs-dataset compatibility: right artifact, wrong dataset.
+    let other_dim = tiny_uniform(50, 16, Metric::L2, 1);
+    let e = svc.spec.check_compatible(&other_dim).unwrap_err();
+    assert_eq!(e.kind, ArtifactErrorKind::SpecMismatch);
+    assert!(e.message.contains("dim"), "{e}");
+    let other_metric = tiny_uniform(50, 12, Metric::Ip, 1);
+    let e = svc.spec.check_compatible(&other_metric).unwrap_err();
+    assert_eq!(e.kind, ArtifactErrorKind::SpecMismatch);
+    std::fs::remove_file(&path).ok();
+}
+
+/// The epoch-cell contract in-process: a handle loaded before a swap
+/// keeps answering on the OLD index, loads after the swap see the new
+/// one, and nothing is torn down while the old epoch is in use.
+#[test]
+fn epoch_cell_swap_preserves_inflight_handles() {
+    let (ds, a) = service(19);
+    let (_, b) = service(23);
+    let expected_a: Vec<Vec<u32>> = (0..8)
+        .map(|qi| a.search(ds.queries.row(qi), 10).ids)
+        .collect();
+    let expected_b: Vec<Vec<u32>> = (0..8)
+        .map(|qi| b.search(ds.queries.row(qi), 10).ids)
+        .collect();
+    assert_ne!(
+        expected_a, expected_b,
+        "the two builds must answer differently for the swap to be observable"
+    );
+
+    let cell = ServiceCell::new(Arc::new(a));
+    let old_epoch = cell.load();
+    cell.swap(Arc::new(b));
+    // The pre-swap handle still serves index A, queries answered mid-swap
+    // complete on it.
+    for qi in 0..8 {
+        let out = old_epoch.search(ds.queries.row(qi), 10);
+        assert_eq!(out.ids, expected_a[qi], "query {qi} on the old epoch");
+    }
+    // Fresh loads see index B.
+    for qi in 0..8 {
+        let out = cell.load().search(ds.queries.row(qi), 10);
+        assert_eq!(out.ids, expected_b[qi], "query {qi} on the new epoch");
+    }
+}
+
+/// Acceptance: over the wire, `reload` swaps the served index while the
+/// connection (and any concurrently submitted batch) survives; bad
+/// reloads leave the old index serving.
+#[test]
+fn wire_reload_hot_swaps_the_served_index() {
+    let dir = tmpdir();
+    let (ds, a) = service(29);
+    // A serve-time execution-width override (dedicated pool) — the
+    // reload path must carry it to the swapped-in index.
+    let a = a.with_workers(2);
+    let (_, b) = service(31);
+    let queries: Vec<&[f32]> = (0..8).map(|qi| ds.queries.row(qi)).collect();
+    let expected_a: Vec<Vec<u32>> = queries.iter().map(|q| a.search(q, 10).ids).collect();
+    let expected_b: Vec<Vec<u32>> = queries.iter().map(|q| b.search(q, 10).ids).collect();
+    assert_ne!(expected_a, expected_b);
+    let b_path = dir.join("index-b.pxa");
+    b.save(&b_path).unwrap();
+    drop(b); // only the artifact survives — reload must reconstruct it
+
+    let cell = Arc::new(ServiceCell::new(Arc::new(a)));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+    let server = Server::start(cell.clone(), handle, 0).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let mut admin = Client::connect(server.addr).unwrap();
+
+    // Before any reload: index A answers.
+    let resp = client.search_batch(&queries, 10, &QueryOptions::default()).unwrap();
+    for (qi, nl) in resp.results.iter().enumerate() {
+        assert_eq!(nl.ids, expected_a[qi], "pre-reload query {qi}");
+    }
+
+    // Failed reloads (missing file, corrupt artifact) are typed error
+    // lines; the connection AND the old index keep serving.
+    let e = admin
+        .send_raw(r#"{"v":2,"op":"reload","path":"/no/such/file.pxa"}"#)
+        .unwrap();
+    let code = e
+        .get("error")
+        .and_then(|x| x.get("code"))
+        .and_then(Json::as_str)
+        .expect("structured error line");
+    assert_eq!(code, "internal", "missing file is an io failure");
+    let corrupt_path = dir.join("corrupt.pxa");
+    let mut bytes = std::fs::read(&b_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&corrupt_path, &bytes).unwrap();
+    let e = admin
+        .send_raw(&format!(
+            r#"{{"v":2,"op":"reload","path":"{}"}}"#,
+            corrupt_path.display()
+        ))
+        .unwrap();
+    let code = e
+        .get("error")
+        .and_then(|x| x.get("code"))
+        .and_then(Json::as_str)
+        .expect("structured error line");
+    assert_eq!(code, "bad_request", "corrupt artifact is a typed decode error");
+    let resp = client.search_batch(&queries, 10, &QueryOptions::default()).unwrap();
+    for (qi, nl) in resp.results.iter().enumerate() {
+        assert_eq!(nl.ids, expected_a[qi], "query {qi} after failed reloads");
+    }
+
+    // Concurrent in-flight batch + reload: whichever epoch dispatches
+    // the batch, it must answer ENTIRELY from one index — never a torn
+    // mix — and the post-reload state must serve index B.
+    let inflight = std::thread::spawn({
+        let addr = server.addr;
+        let queries: Vec<Vec<f32>> = queries.iter().map(|q| q.to_vec()).collect();
+        move || {
+            let mut c = Client::connect(addr).unwrap();
+            let refs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            c.search_batch(&refs, 10, &QueryOptions::default()).unwrap()
+        }
+    });
+    let ok = admin
+        .send_raw(&format!(
+            r#"{{"v":2,"op":"reload","path":"{}"}}"#,
+            b_path.display()
+        ))
+        .unwrap();
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true), "{ok:?}");
+    let inflight = inflight.join().unwrap();
+    let got: Vec<Vec<u32>> = inflight.results.iter().map(|nl| nl.ids.clone()).collect();
+    assert!(
+        got == expected_a || got == expected_b,
+        "in-flight batch must be answered wholly by one epoch"
+    );
+
+    // After the swap: same connection, index B's answers and provenance.
+    let resp = client.search_batch(&queries, 10, &QueryOptions::default()).unwrap();
+    for (qi, nl) in resp.results.iter().enumerate() {
+        assert_eq!(nl.ids, expected_b[qi], "post-reload query {qi}");
+    }
+    let status = admin.status().unwrap();
+    assert_eq!(
+        status
+            .get("provenance")
+            .and_then(|p| p.get("source"))
+            .and_then(Json::as_str),
+        Some("artifact")
+    );
+    let spec = proxima::api::wire::decode_spec(status.get("spec").unwrap()).unwrap();
+    assert_eq!(spec.n_base, 400);
+    assert_eq!(spec.dim, 12);
+    assert_eq!(spec.build_seed, 31, "status must report the RELOADED index's spec");
+    let swapped = cell.load();
+    assert_eq!(
+        swapped.workers, 2,
+        "reload must carry the serve-time --workers override to the new index"
+    );
+    assert!(
+        !swapped.uses_shared_pool(),
+        "the dedicated pool must survive the hot swap"
+    );
+
+    // The single-query (batcher) path follows the swap too.
+    let (ids, _, _) = client.search(queries[0], 10).unwrap();
+    assert_eq!(ids, expected_b[0], "v1/batcher path must serve the new epoch");
+
+    client.shutdown().ok();
+    server.stop();
+    std::fs::remove_file(&b_path).ok();
+    std::fs::remove_file(&corrupt_path).ok();
+}
+
+/// A REORDERED artifact (graph/codes/base permuted into the §IV-E NAND
+/// layout, REORDER section carrying `perm[old] = new`) must answer in
+/// the ORIGINAL id space — the permutation is a storage-layout detail,
+/// invisible to clients.
+#[test]
+fn reordered_artifacts_answer_in_original_id_space() {
+    use proxima::artifact::ArtifactParts;
+    use proxima::dataset::VectorSet;
+    use proxima::reorder::{ReorderedIndex, VisitProfile};
+    let dir = tmpdir();
+    let (ds, svc) = service(41);
+    let profile = VisitProfile::measure(
+        &svc.base,
+        &svc.graph,
+        &svc.codebook,
+        &svc.codes,
+        &svc.params,
+        20,
+        41,
+    );
+    let re = ReorderedIndex::build(&svc.graph, &svc.codes, &profile, 0.05);
+    // Permute the base rows into the stored (new) space, as the layout
+    // stage would.
+    let mut base2 = VectorSet::zeros(ds.n_base(), ds.dim());
+    for old in 0..ds.n_base() {
+        base2
+            .row_mut(re.perm[old] as usize)
+            .copy_from_slice(svc.base.row(old));
+    }
+    let mut spec = svc.spec.clone();
+    spec.hot_frac = re.n_hot as f64 / ds.n_base() as f64;
+    let path = dir.join("reordered.pxa");
+    ArtifactParts {
+        spec: &spec,
+        base: &base2,
+        graph: &re.graph,
+        gap: None,
+        codebook: &svc.codebook,
+        codes: &re.codes,
+        reorder: Some(re.perm.as_slice()),
+        mapping: None,
+    }
+    .write(&path)
+    .unwrap();
+
+    let opened = SearchService::open(&path, svc.params, false).unwrap();
+    assert_eq!(opened.reorder.as_ref().map(|p| p.len()), Some(ds.n_base()));
+    for qi in 0..8 {
+        let q = ds.queries.row(qi);
+        let orig = svc.search(q, 10);
+        let got = opened.search(q, 10);
+        // Same candidates, original ids (order may tie-break differently
+        // on equal distances, as in the reorder module's own tests).
+        let mut a = orig.ids.clone();
+        let mut b = got.ids.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "query {qi}: reordered artifact must answer in ORIGINAL ids");
+        assert_eq!(orig.dists[0], got.dists[0], "query {qi}: best distance must agree");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// A dim-mismatched QUERY against an opened artifact is an API-level
+/// typed error on a surviving connection (the validation boundary holds
+/// for opened indices exactly as for built ones).
+#[test]
+fn opened_index_still_validates_queries_at_the_boundary() {
+    let dir = tmpdir();
+    let (ds, svc) = service(37);
+    let path = dir.join("boundary.pxa");
+    svc.save(&path).unwrap();
+    let opened = SearchService::open(&path, svc.params, false).unwrap();
+    let wrong = vec![0.5f32; ds.dim() + 1];
+    let e = opened.query(&QueryRequest::single(&wrong, 5)).unwrap_err();
+    assert_eq!(e.code, ApiErrorCode::DimMismatch);
+    let ok = opened
+        .query(&QueryRequest::single(ds.queries.row(0), 5))
+        .unwrap();
+    assert_eq!(ok.results[0].ids.len(), 5);
+    std::fs::remove_file(&path).ok();
+}

@@ -6,7 +6,7 @@
 use proxima::config::{GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
 use proxima::coordinator::server::{Client, Server};
-use proxima::coordinator::SearchService;
+use proxima::coordinator::{SearchService, ServiceCell};
 use proxima::dataset::ground_truth::brute_force;
 use proxima::dataset::synth::SynthSpec;
 use proxima::dataset::{mean_recall, recall_at_k};
@@ -124,8 +124,9 @@ fn serve_concurrent_clients_end_to_end() {
         false,
     ));
     let gt = brute_force(&ds, 10);
-    let (handle, _join) = spawn(svc.clone(), BatchPolicy::default());
-    let server = Server::start(svc.clone(), handle, 0).unwrap();
+    let cell = Arc::new(ServiceCell::new(svc.clone()));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+    let server = Server::start(cell, handle, 0).unwrap();
     let addr = server.addr;
 
     let recalls: Vec<f64> = std::thread::scope(|scope| {
