@@ -14,6 +14,8 @@
 //!   reproduced inline) vs per-query work-stealing (`skewed_batch` line)
 //! * batched ADT build: per-query builds vs the deduplicated blocked
 //!   sweep on a duplicate-heavy batch (`adt_batch` line)
+//! * artifact scale: resident vs cold open — vector DRAM footprint and
+//!   open wall-time per residency (`artifact_scale` line)
 
 use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
@@ -344,4 +346,51 @@ fn main() {
         r_batched.mean.as_secs_f64() * 1e6,
         r_per_query.mean.as_secs_f64() / r_batched.mean.as_secs_f64()
     );
+
+    // --- Artifact scale: resident vs cold open (the paper's Table I
+    // storage columns, serving-side). Resident open materializes every
+    // section; cold open streams the BASE payload once for validation
+    // and then serves it in place — the `artifact_scale` line records
+    // the DRAM pinned by vectors and the open wall-time for both.
+    {
+        use proxima::storage::{OpenOptions, Residency};
+        let path =
+            std::env::temp_dir().join(format!("hotpath-artifact-{}.pxa", std::process::id()));
+        svc.save(&path).expect("bench artifact save");
+        let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let params = svc.params;
+        let r_open_res = bench("artifact_open resident   ", || {
+            black_box(SearchService::open(&path, params, false).unwrap().n_base())
+        });
+        let r_open_cold = bench("artifact_open cold       ", || {
+            black_box(
+                SearchService::open_with(
+                    &path,
+                    params,
+                    false,
+                    &OpenOptions::with_residency(Residency::Cold),
+                )
+                .unwrap()
+                .n_base(),
+            )
+        });
+        let resident = SearchService::open(&path, params, false).unwrap();
+        let cold = SearchService::open_with(
+            &path,
+            params,
+            false,
+            &OpenOptions::with_residency(Residency::Cold),
+        )
+        .unwrap();
+        println!(
+            "artifact_scale n_base={} file_bytes={file_bytes} resident_vector_bytes={} \
+             cold_vector_bytes={} open_resident_ms={:.2} open_cold_ms={:.2}",
+            resident.n_base(),
+            resident.storage.resident_bytes(),
+            cold.storage.resident_bytes(),
+            r_open_res.mean.as_secs_f64() * 1e3,
+            r_open_cold.mean.as_secs_f64() * 1e3,
+        );
+        std::fs::remove_file(&path).ok();
+    }
 }

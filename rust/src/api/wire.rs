@@ -25,6 +25,7 @@ use super::{
 use crate::artifact::IndexSpec;
 use crate::distance::Metric;
 use crate::search::SearchStats;
+use crate::storage::Residency;
 use crate::util::json::Json;
 
 /// Highest protocol version this build speaks.
@@ -39,8 +40,12 @@ pub enum WireRequest {
     /// v2 admin plane: spec + provenance + counters of the served index.
     Status,
     /// v2 admin plane: hot-swap the served index to the artifact at
-    /// `path`.
-    Reload { path: String },
+    /// `path`, optionally switching the vector [`Residency`] (`None`
+    /// keeps the currently-served epoch's residency).
+    Reload {
+        path: String,
+        residency: Option<Residency>,
+    },
     Shutdown,
 }
 
@@ -104,8 +109,22 @@ pub fn decode_request(j: &Json) -> Result<WireRequest, ApiError> {
                 .get("path")
                 .and_then(Json::as_str)
                 .ok_or_else(|| ApiError::bad_request("reload requires a 'path' string"))?;
+            let residency = match j.get("residency") {
+                None => None,
+                Some(r) => {
+                    let s = r.as_str().ok_or_else(|| {
+                        ApiError::bad_request("reload 'residency' must be a string")
+                    })?;
+                    Some(Residency::parse(s).ok_or_else(|| {
+                        ApiError::bad_request(format!(
+                            "unknown residency '{s}' (resident|cold|tiered)"
+                        ))
+                    })?)
+                }
+            };
             Ok(WireRequest::Reload {
                 path: path.to_string(),
+                residency,
             })
         }
         "shutdown" => Ok(WireRequest::Shutdown),
@@ -413,6 +432,16 @@ pub fn decode_spec(j: &Json) -> Result<IndexSpec, ApiError> {
         }
         Ok(x as u64)
     };
+    // hot_frac is the one f64 FRACTION on this wire: it crosses as a
+    // raw JSON number (shortest-round-trip printing preserves every
+    // bit), but a NaN/negative/super-unit value must be rejected here —
+    // the tiered open sizes its DRAM hot set from it.
+    let hot_frac = num("hot_frac")?;
+    if !hot_frac.is_finite() || !(0.0..=1.0).contains(&hot_frac) {
+        return Err(ApiError::bad_request(format!(
+            "spec.hot_frac must be a fraction in [0, 1], got {hot_frac}"
+        )));
+    }
     Ok(IndexSpec {
         dataset,
         metric,
@@ -423,7 +452,7 @@ pub fn decode_spec(j: &Json) -> Result<IndexSpec, ApiError> {
         graph_alpha: num("graph_alpha")? as f32,
         pq_m: idx("pq_m")? as u32,
         pq_c: idx("pq_c")? as u32,
-        hot_frac: num("hot_frac")?,
+        hot_frac,
         build_seed: wide("build_seed")?,
     })
 }
@@ -445,6 +474,8 @@ pub fn encode_stats(s: &SearchStats) -> Json {
         ("early_terminated", Json::Bool(s.early_terminated)),
         ("adt_builds", Json::num(s.adt_builds as f64)),
         ("queue_wait_us", Json::num(s.queue_wait_us as f64)),
+        ("cold_reads", Json::num(s.cold_reads as f64)),
+        ("cold_bytes", Json::num(s.cold_bytes as f64)),
     ])
 }
 
@@ -465,6 +496,8 @@ pub fn decode_stats(j: &Json) -> SearchStats {
             .unwrap_or(false),
         adt_builds: n("adt_builds") as usize,
         queue_wait_us: n("queue_wait_us") as u64,
+        cold_reads: n("cold_reads") as usize,
+        cold_bytes: n("cold_bytes") as u64,
     }
 }
 
@@ -600,7 +633,10 @@ mod tests {
         assert!(matches!(decode_request(&j).unwrap(), WireRequest::Status));
         let j = json::parse(r#"{"v":2,"op":"reload","path":"/tmp/x.pxa"}"#).unwrap();
         match decode_request(&j).unwrap() {
-            WireRequest::Reload { path } => assert_eq!(path, "/tmp/x.pxa"),
+            WireRequest::Reload { path, residency } => {
+                assert_eq!(path, "/tmp/x.pxa");
+                assert_eq!(residency, None, "absent residency keeps the epoch's");
+            }
             other => panic!("wrong op: {other:?}"),
         }
         // reload without a path is a bad request, not a panic.
@@ -608,6 +644,21 @@ mod tests {
         let e = decode_request(&j).unwrap_err();
         assert_eq!(e.code, ApiErrorCode::BadRequest);
         assert!(e.message.contains("path"), "{}", e.message);
+        // reload can switch the vector residency of the new epoch.
+        let j =
+            json::parse(r#"{"v":2,"op":"reload","path":"/tmp/x.pxa","residency":"tiered"}"#)
+                .unwrap();
+        match decode_request(&j).unwrap() {
+            WireRequest::Reload { residency, .. } => {
+                assert_eq!(residency, Some(Residency::Tiered));
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+        // ...but only to a known tier.
+        let j = json::parse(r#"{"v":2,"op":"reload","path":"/x","residency":"mmap"}"#).unwrap();
+        let e = decode_request(&j).unwrap_err();
+        assert_eq!(e.code, ApiErrorCode::BadRequest);
+        assert!(e.message.contains("residency"), "{}", e.message);
     }
 
     #[test]
@@ -644,6 +695,53 @@ mod tests {
     }
 
     #[test]
+    fn spec_hot_frac_roundtrips_at_full_f64_precision_and_rejects_garbage() {
+        // Awkward fractions (not exactly representable, shortest-print
+        // dependent) must survive encode → print → parse → decode with
+        // their exact bit pattern: the tiered open sizes its DRAM hot
+        // set from this value.
+        let mut spec = IndexSpec {
+            dataset: "hf".into(),
+            metric: Metric::L2,
+            dim: 4,
+            n_base: 100,
+            graph_r: 4,
+            graph_build_l: 8,
+            graph_alpha: 1.2,
+            pq_m: 2,
+            pq_c: 4,
+            hot_frac: 0.0,
+            build_seed: 1,
+        };
+        for hf in [0.1 + 0.2, 0.03, 1.0 / 3.0, 5e-324_f64, 1.0, 0.0] {
+            spec.hot_frac = hf;
+            let line = reparse(&encode_spec(&spec));
+            let back = decode_spec(&line).unwrap();
+            assert_eq!(
+                back.hot_frac.to_bits(),
+                hf.to_bits(),
+                "hot_frac {hf} lost precision over the wire"
+            );
+        }
+        // NaN / negative / super-unit hot_frac is a typed rejection —
+        // construct the Json directly (NaN can't round-trip RFC 8259).
+        for bad in [f64::NAN, -0.25, 1.5, f64::INFINITY] {
+            spec.hot_frac = 0.0;
+            let mut j = encode_spec(&spec);
+            if let Json::Obj(kvs) = &mut j {
+                for (k, v) in kvs.iter_mut() {
+                    if k == "hot_frac" {
+                        *v = Json::Num(bad);
+                    }
+                }
+            }
+            let e = decode_spec(&j).unwrap_err();
+            assert_eq!(e.code, ApiErrorCode::BadRequest, "hot_frac {bad}");
+            assert!(e.message.contains("hot_frac"), "{}", e.message);
+        }
+    }
+
+    #[test]
     fn v2_response_roundtrip_with_stats() {
         let resp = QueryResponse {
             results: vec![
@@ -668,6 +766,8 @@ mod tests {
                 early_terminated: true,
                 adt_builds: 2,
                 queue_wait_us: 57,
+                cold_reads: 4,
+                cold_bytes: 2048,
             }),
             errors: Vec::new(),
             server_latency_us: 321,
@@ -683,6 +783,8 @@ mod tests {
         assert!(s.early_terminated);
         assert_eq!(s.adt_builds, 2, "staged-ADT build count must cross the wire");
         assert_eq!(s.queue_wait_us, 57, "queue-wait must cross the wire");
+        assert_eq!(s.cold_reads, 4, "cold-tier reads must cross the wire");
+        assert_eq!(s.cold_bytes, 2048, "cold-tier bytes must cross the wire");
     }
 
     #[test]

@@ -206,11 +206,18 @@ const CRC_TABLE: [u32; 256] = {
 /// matches `zlib.crc32`, so fixtures can be produced by the Python
 /// tooling (`python/tools/make_golden_artifact.py`).
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut crc = 0xFFFF_FFFFu32;
+    !crc32_raw(0xFFFF_FFFF, bytes)
+}
+
+/// Incremental form for streaming verification (the cold open CRCs the
+/// BASE payload chunk by chunk without materializing it): start from
+/// `0xFFFF_FFFF`, fold chunks in file order, finish with `!state`.
+pub(crate) fn crc32_raw(state: u32, bytes: &[u8]) -> u32 {
+    let mut crc = state;
     for &b in bytes {
         crc = CRC_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
     }
-    !crc
+    crc
 }
 
 // ---------------------------------------------------------------------------
@@ -311,7 +318,7 @@ impl IndexSpec {
         let metric = Metric::parse(&metric_name).ok_or_else(|| {
             ArtifactError::corrupt(format!("spec: unknown metric '{metric_name}'"))
         })?;
-        Ok(IndexSpec {
+        let spec = IndexSpec {
             dataset,
             metric,
             dim: rd(r.u32())?,
@@ -323,7 +330,18 @@ impl IndexSpec {
             pq_c: rd(r.u32())?,
             hot_frac: rd(r.f64())?,
             build_seed: rd(r.u64())?,
-        })
+        };
+        // hot_frac is a fraction by contract: the tiered open sizes its
+        // DRAM hot set as `n_base * hot_frac`, so a NaN/negative/huge
+        // value (checksum-valid but crafted) must die here, not surface
+        // as a nonsense allocation or an empty-by-NaN hot tier.
+        if !spec.hot_frac.is_finite() || !(0.0..=1.0).contains(&spec.hot_frac) {
+            return Err(ArtifactError::corrupt(format!(
+                "spec: hot_frac {} outside [0, 1]",
+                spec.hot_frac
+            )));
+        }
+        Ok(spec)
     }
 }
 
@@ -421,26 +439,36 @@ impl ArtifactWriter {
     }
 }
 
-/// Validated view of an artifact's bytes: spec parsed, header and every
-/// section checksum verified. Section payloads are borrowed from the
-/// owned buffer via [`ArtifactReader::section`].
-pub struct ArtifactReader {
+/// Parsed artifact header: the spec plus each section's
+/// (tag, absolute payload offset, payload len, stored crc). Payload
+/// BYTES are not verified here — the two readers do that their own way
+/// (whole-buffer CRC vs on-demand/streaming CRC).
+struct ParsedHeader {
     spec: IndexSpec,
-    buf: Vec<u8>,
-    toc: Vec<(u32, Range<usize>)>,
+    toc: Vec<(u32, u64, u64, u32)>,
 }
 
-impl ArtifactReader {
-    /// Read and validate the file at `path`.
-    pub fn open(path: &Path) -> Result<ArtifactReader, ArtifactError> {
-        let buf = std::fs::read(path)
-            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", path.display())))?;
-        Self::from_bytes(buf)
-    }
-
-    /// Validate an in-memory artifact image.
-    pub fn from_bytes(buf: Vec<u8>) -> Result<ArtifactReader, ArtifactError> {
-        let mut r = bio::Reader::new(&buf);
+/// The ONE copy of the on-disk header grammar, shared by the in-memory
+/// reader ([`ArtifactReader::from_bytes`]) and the file-backed view
+/// ([`ArtifactFile::open`]) so the two can never drift: magic, format
+/// version, spec, section-count cap, TOC entries, header CRC, and
+/// exact-length payload accounting against `total_len` (every byte of
+/// the file is owned by exactly one section; an uncovered tail — torn
+/// overwrite of a longer file, concatenation — is corruption, not
+/// something to silently ignore).
+///
+/// `head` starts at file offset 0. When it holds less than the whole
+/// file (`head_is_whole == false`: the bounded head read of the file
+/// view), a parse running off its end means a header larger than any
+/// legitimate artifact writes — reported as corruption, not as file
+/// truncation.
+fn parse_header(
+    head: &[u8],
+    total_len: u64,
+    head_is_whole: bool,
+) -> Result<ParsedHeader, ArtifactError> {
+    let mut r = bio::Reader::new(head);
+    let parse = (|| -> Result<(IndexSpec, Vec<(u32, u64, u32)>, usize, u32), ArtifactError> {
         let magic = rd(r.take(8))?;
         if magic != MAGIC {
             return Err(ArtifactError::new(
@@ -458,8 +486,6 @@ impl ArtifactReader {
                 ),
             ));
         }
-        // Header region = [spec .. end of TOC]; its CRC follows the TOC.
-        let header_start = 12;
         let spec = IndexSpec::decode(&mut r)?;
         let n_sections = rd(r.u32())? as usize;
         if n_sections > MAX_SECTIONS {
@@ -470,7 +496,7 @@ impl ArtifactReader {
         let mut entries = Vec::with_capacity(n_sections);
         for _ in 0..n_sections {
             let tag = rd(r.u32())?;
-            let len = rd(r.u64())? as usize;
+            let len = rd(r.u64())?;
             let crc = rd(r.u32())?;
             entries.push((tag, len, crc));
         }
@@ -478,37 +504,84 @@ impl ArtifactReader {
         // checksummed header region.
         let toc_end = r.pos();
         let stored_header_crc = rd(r.u32())?;
-        if crc32(&buf[header_start..toc_end]) != stored_header_crc {
-            return Err(ArtifactError::corrupt(
-                "header checksum mismatch (spec or section table corrupted)",
-            ));
+        Ok((spec, entries, toc_end, stored_header_crc))
+    })();
+    let (spec, entries, toc_end, stored_header_crc) = match parse {
+        Ok(v) => v,
+        Err(e)
+            if e.kind == ArtifactErrorKind::Truncated
+                && !head_is_whole
+                && (head.len() as u64) < total_len =>
+        {
+            return Err(ArtifactError::corrupt(format!(
+                "header exceeds {HEADER_MAX_BYTES} bytes ({e})"
+            )))
         }
-        let mut toc = Vec::with_capacity(entries.len());
-        let mut pos = toc_end + 4; // payloads start after the header CRC
-        for (tag, len, crc) in entries {
-            let end = pos.checked_add(len).filter(|&e| e <= buf.len()).ok_or_else(|| {
-                ArtifactError::truncated(format!(
-                    "section {tag}: payload of {len} bytes runs past end of file"
-                ))
-            })?;
-            if crc32(&buf[pos..end]) != crc {
+        Err(e) => return Err(e),
+    };
+    // Header region = [spec .. end of TOC]; its CRC follows the TOC.
+    let header_start = 12;
+    if crc32(&head[header_start..toc_end]) != stored_header_crc {
+        return Err(ArtifactError::corrupt(
+            "header checksum mismatch (spec or section table corrupted)",
+        ));
+    }
+    let mut toc = Vec::with_capacity(entries.len());
+    let mut pos = toc_end as u64 + 4; // payloads start after the header CRC
+    for (tag, len, crc) in entries {
+        let end = pos.checked_add(len).filter(|&e| e <= total_len).ok_or_else(|| {
+            ArtifactError::truncated(format!(
+                "section {tag}: payload of {len} bytes runs past end of file"
+            ))
+        })?;
+        toc.push((tag, pos, len, crc));
+        pos = end;
+    }
+    if pos != total_len {
+        return Err(ArtifactError::corrupt(format!(
+            "{} trailing bytes after the last section",
+            total_len - pos
+        )));
+    }
+    Ok(ParsedHeader { spec, toc })
+}
+
+/// Validated view of an artifact's bytes: spec parsed, header and every
+/// section checksum verified. Section payloads are borrowed from the
+/// owned buffer via [`ArtifactReader::section`].
+pub struct ArtifactReader {
+    spec: IndexSpec,
+    buf: Vec<u8>,
+    toc: Vec<(u32, Range<usize>)>,
+}
+
+impl ArtifactReader {
+    /// Read and validate the file at `path`.
+    pub fn open(path: &Path) -> Result<ArtifactReader, ArtifactError> {
+        let buf = std::fs::read(path)
+            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", path.display())))?;
+        Self::from_bytes(buf)
+    }
+
+    /// Validate an in-memory artifact image: the shared header parse
+    /// ([`parse_header`]) plus a CRC check of every section payload.
+    pub fn from_bytes(buf: Vec<u8>) -> Result<ArtifactReader, ArtifactError> {
+        let parsed = parse_header(&buf, buf.len() as u64, true)?;
+        let mut toc = Vec::with_capacity(parsed.toc.len());
+        for (tag, off, len, crc) in parsed.toc {
+            let range = off as usize..(off + len) as usize;
+            if crc32(&buf[range.clone()]) != crc {
                 return Err(ArtifactError::corrupt(format!(
                     "section {tag}: checksum mismatch"
                 )));
             }
-            toc.push((tag, pos..end));
-            pos = end;
+            toc.push((tag, range));
         }
-        // Every byte must be accounted for: an uncovered tail (torn
-        // overwrite of a longer file, concatenation) is a corruption
-        // event, not something to silently ignore.
-        if pos != buf.len() {
-            return Err(ArtifactError::corrupt(format!(
-                "{} trailing bytes after the last section",
-                buf.len() - pos
-            )));
-        }
-        Ok(ArtifactReader { spec, buf, toc })
+        Ok(ArtifactReader {
+            spec: parsed.spec,
+            buf,
+            toc,
+        })
     }
 
     pub fn spec(&self) -> &IndexSpec {
@@ -621,113 +694,29 @@ impl IndexArtifact {
             .map(sections::decode_mapping)
             .transpose()?;
 
-        // Cross-section consistency: everything the search kernels (and
-        // their unchecked indexing) assume must hold, re-proven here so
-        // a crafted file with valid checksums still cannot misbehave.
-        let n = base.len();
-        if n as u64 != spec.n_base {
-            return Err(ArtifactError::corrupt(format!(
-                "spec says {} base vectors, BASE section holds {n}",
-                spec.n_base
-            )));
-        }
-        if base.dim != spec.dim as usize {
-            return Err(ArtifactError::corrupt(format!(
-                "spec says dim {}, BASE section holds dim {}",
-                spec.dim, base.dim
-            )));
-        }
-        if n > u32::MAX as usize {
-            return Err(ArtifactError::corrupt(format!(
-                "{n} base vectors exceed the u32 vertex-id space"
-            )));
-        }
-        if graph.n() != n {
-            return Err(ArtifactError::corrupt(format!(
-                "graph has {} vertices for {n} base vectors",
-                graph.n()
-            )));
-        }
-        graph
-            .validate()
-            .map_err(|e| ArtifactError::corrupt(format!("graph: {e}")))?;
-        if codebook.metric != spec.metric {
-            return Err(ArtifactError::corrupt(format!(
-                "spec metric {} but codebook metric {}",
-                spec.metric.name(),
-                codebook.metric.name()
-            )));
-        }
+        // Cross-section consistency (shared with the cold open, which
+        // validates the same invariants without materializing BASE).
+        cross_validate(
+            &spec,
+            base.len(),
+            base.dim,
+            &graph,
+            &codebook,
+            &codes,
+            gap.as_ref(),
+            reorder.as_deref(),
+            mapping.as_ref(),
+        )?;
         // Angular math (`1 - dot`) is cosine distance only on unit-norm
         // vectors — the dataset loaders normalize on load, but an
         // artifact is a new entry point that bypasses them. Reject
         // unnormalized angular bases here (mirroring `io::load_dataset`)
         // instead of letting every query return silently-wrong
-        // rankings (or trip the kernels' debug asserts).
+        // rankings (or trip the kernels' debug asserts). The cold open
+        // performs the same scan during its streaming CRC pass.
         if spec.metric == Metric::Angular {
             for i in 0..base.len() {
-                let row = base.row(i);
-                let n2 = crate::distance::dot(row, row);
-                if (n2 - 1.0).abs() > 1e-3 {
-                    return Err(ArtifactError::corrupt(format!(
-                        "angular artifact holds unnormalized base vector {i} (|v|^2 = {n2}); \
-                         rebuild the artifact from normalized data"
-                    )));
-                }
-            }
-        }
-        if codebook.dim != spec.dim as usize
-            || codebook.m != spec.pq_m as usize
-            || codebook.c != spec.pq_c as usize
-        {
-            return Err(ArtifactError::corrupt(format!(
-                "codebook shape (dim {}, m {}, c {}) disagrees with spec \
-                 (dim {}, m {}, c {})",
-                codebook.dim, codebook.m, codebook.c, spec.dim, spec.pq_m, spec.pq_c
-            )));
-        }
-        if codes.m != codebook.m {
-            return Err(ArtifactError::corrupt(format!(
-                "codes have m {} but codebook has m {}",
-                codes.m, codebook.m
-            )));
-        }
-        if codes.len() != n {
-            return Err(ArtifactError::corrupt(format!(
-                "{} code rows for {n} base vectors",
-                codes.len()
-            )));
-        }
-        // `Adt::pq_distance` indexes `table[j*c + code]` unchecked: every
-        // stored code MUST be < c.
-        if let Some(bad) = codes.codes.iter().position(|&cd| cd as usize >= codebook.c) {
-            return Err(ArtifactError::corrupt(format!(
-                "PQ code {} at position {bad} out of range (c = {})",
-                codes.codes[bad], codebook.c
-            )));
-        }
-        if let Some(g) = &gap {
-            if g.len() != n {
-                return Err(ArtifactError::corrupt(format!(
-                    "gap encoding covers {} rows for {n} vertices",
-                    g.len()
-                )));
-            }
-        }
-        if let Some(perm) = &reorder {
-            if perm.len() != n {
-                return Err(ArtifactError::corrupt(format!(
-                    "reorder permutation of length {} for {n} vertices",
-                    perm.len()
-                )));
-            }
-        }
-        if let Some(m) = &mapping {
-            if m.n_nodes as usize != n {
-                return Err(ArtifactError::corrupt(format!(
-                    "mapping laid out for {} nodes, index holds {n}",
-                    m.n_nodes
-                )));
+                check_angular_row(base.row(i), i)?;
             }
         }
         Ok(IndexArtifact {
@@ -739,6 +728,480 @@ impl IndexArtifact {
             codes,
             reorder,
             mapping,
+        })
+    }
+}
+
+/// Cross-section consistency: everything the search kernels (and their
+/// unchecked indexing) assume must hold, re-proven on EVERY open —
+/// resident or cold — so a crafted file with valid checksums still
+/// cannot misbehave. `base_n`/`base_dim` come from the BASE section
+/// header (the payload itself may still be on disk).
+#[allow(clippy::too_many_arguments)]
+fn cross_validate(
+    spec: &IndexSpec,
+    base_n: usize,
+    base_dim: usize,
+    graph: &Graph,
+    codebook: &PqCodebook,
+    codes: &PqCodes,
+    gap: Option<&GapGraph>,
+    reorder: Option<&[u32]>,
+    mapping: Option<&DataMapping>,
+) -> Result<(), ArtifactError> {
+    let n = base_n;
+    if n as u64 != spec.n_base {
+        return Err(ArtifactError::corrupt(format!(
+            "spec says {} base vectors, BASE section holds {n}",
+            spec.n_base
+        )));
+    }
+    if base_dim != spec.dim as usize {
+        return Err(ArtifactError::corrupt(format!(
+            "spec says dim {}, BASE section holds dim {}",
+            spec.dim, base_dim
+        )));
+    }
+    if n > u32::MAX as usize {
+        return Err(ArtifactError::corrupt(format!(
+            "{n} base vectors exceed the u32 vertex-id space"
+        )));
+    }
+    if graph.n() != n {
+        return Err(ArtifactError::corrupt(format!(
+            "graph has {} vertices for {n} base vectors",
+            graph.n()
+        )));
+    }
+    graph
+        .validate()
+        .map_err(|e| ArtifactError::corrupt(format!("graph: {e}")))?;
+    if codebook.metric != spec.metric {
+        return Err(ArtifactError::corrupt(format!(
+            "spec metric {} but codebook metric {}",
+            spec.metric.name(),
+            codebook.metric.name()
+        )));
+    }
+    if codebook.dim != spec.dim as usize
+        || codebook.m != spec.pq_m as usize
+        || codebook.c != spec.pq_c as usize
+    {
+        return Err(ArtifactError::corrupt(format!(
+            "codebook shape (dim {}, m {}, c {}) disagrees with spec \
+             (dim {}, m {}, c {})",
+            codebook.dim, codebook.m, codebook.c, spec.dim, spec.pq_m, spec.pq_c
+        )));
+    }
+    if codes.m != codebook.m {
+        return Err(ArtifactError::corrupt(format!(
+            "codes have m {} but codebook has m {}",
+            codes.m, codebook.m
+        )));
+    }
+    if codes.len() != n {
+        return Err(ArtifactError::corrupt(format!(
+            "{} code rows for {n} base vectors",
+            codes.len()
+        )));
+    }
+    // `Adt::pq_distance` indexes `table[j*c + code]` unchecked: every
+    // stored code MUST be < c.
+    if let Some(bad) = codes.codes.iter().position(|&cd| cd as usize >= codebook.c) {
+        return Err(ArtifactError::corrupt(format!(
+            "PQ code {} at position {bad} out of range (c = {})",
+            codes.codes[bad], codebook.c
+        )));
+    }
+    if let Some(g) = gap {
+        if g.len() != n {
+            return Err(ArtifactError::corrupt(format!(
+                "gap encoding covers {} rows for {n} vertices",
+                g.len()
+            )));
+        }
+    }
+    if let Some(perm) = reorder {
+        if perm.len() != n {
+            return Err(ArtifactError::corrupt(format!(
+                "reorder permutation of length {} for {n} vertices",
+                perm.len()
+            )));
+        }
+    }
+    if let Some(m) = mapping {
+        if m.n_nodes as usize != n {
+            return Err(ArtifactError::corrupt(format!(
+                "mapping laid out for {} nodes, index holds {n}",
+                m.n_nodes
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The angular unit-norm invariant for one base row (see the resident
+/// open for why this is an open-time rejection).
+fn check_angular_row(row: &[f32], i: usize) -> Result<(), ArtifactError> {
+    let n2 = crate::distance::dot(row, row);
+    if (n2 - 1.0).abs() > 1e-3 {
+        return Err(ArtifactError::corrupt(format!(
+            "angular artifact holds unnormalized base vector {i} (|v|^2 = {n2}); \
+             rebuild the artifact from normalized data"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Header-only file view + cold open
+// ---------------------------------------------------------------------------
+
+/// Header-only view of an artifact on disk: spec and TOC parsed and
+/// CRC-verified from a bounded head read, section payloads left in the
+/// file. This is the substrate of the cold open (`storage::Residency`):
+/// it knows every section's absolute file offset, so payloads can be
+/// fetched — or served in place — without ever materializing the whole
+/// artifact image in memory the way [`ArtifactReader::open`] does.
+pub struct ArtifactFile {
+    file: std::fs::File,
+    path: std::path::PathBuf,
+    spec: IndexSpec,
+    /// (tag, absolute payload offset, payload len, stored crc).
+    toc: Vec<(u32, u64, u64, u32)>,
+}
+
+/// Largest legitimate header (spec + TOC): MAX_SECTIONS entries plus a
+/// spec whose strings are human-scale names. Far below this in practice;
+/// a "header" running past it is corruption, not a big index.
+const HEADER_MAX_BYTES: u64 = 1 << 20;
+
+impl ArtifactFile {
+    /// Open the file and validate its header via the shared
+    /// [`parse_header`] (magic, version, spec, TOC, header CRC,
+    /// exact-length payload accounting). Section payloads are NOT read
+    /// or checksummed here — fetch them with [`Self::read_section`] /
+    /// [`Self::stream_section`], or verify without materializing via
+    /// [`Self::verify_section_at`].
+    pub fn open(path: &Path) -> Result<ArtifactFile, ArtifactError> {
+        let file = std::fs::File::open(path)
+            .map_err(|e| ArtifactError::io(format!("opening {}: {e}", path.display())))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| ArtifactError::io(format!("stat {}: {e}", path.display())))?
+            .len();
+        let head_len = file_len.min(HEADER_MAX_BYTES) as usize;
+        let mut head = vec![0u8; head_len];
+        crate::storage::read_exact_at(&file, &mut head, 0)
+            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", path.display())))?;
+        let parsed = parse_header(&head, file_len, head_len as u64 == file_len)?;
+        Ok(ArtifactFile {
+            file,
+            path: path.to_path_buf(),
+            spec: parsed.spec,
+            toc: parsed.toc,
+        })
+    }
+
+    pub fn spec(&self) -> &IndexSpec {
+        &self.spec
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// (absolute payload offset, len, stored crc) of the first section
+    /// tagged `tag`.
+    pub fn section_meta(&self, tag: u32) -> Option<(u64, u64, u32)> {
+        self.toc
+            .iter()
+            .find(|(t, ..)| *t == tag)
+            .map(|&(_, off, len, crc)| (off, len, crc))
+    }
+
+    /// Number of TOC entries (sections) in file order.
+    pub fn n_sections(&self) -> usize {
+        self.toc.len()
+    }
+
+    /// TOC position of the FIRST section tagged `tag` (the occurrence
+    /// this build's readers use).
+    pub fn first_index_of(&self, tag: u32) -> Option<usize> {
+        self.toc.iter().position(|(t, ..)| *t == tag)
+    }
+
+    /// CRC-verify the section at TOC position `idx` by streaming it in
+    /// bounded chunks — no materialization. The cold open uses this to
+    /// cover sections it does not decode (unknown tags, duplicate
+    /// occurrences of known tags), so residency can never change the
+    /// open-time validation outcome: every payload byte the resident
+    /// reader checks is checked here too.
+    pub fn verify_section_at(&self, idx: usize) -> Result<(), ArtifactError> {
+        let (tag, off, len, crc) = self.toc[idx];
+        let chunk = (1usize << 20).min(len as usize).max(1);
+        let mut buf = vec![0u8; chunk];
+        let mut state = 0xFFFF_FFFFu32;
+        let mut done = 0u64;
+        while done < len {
+            let take = ((len - done) as usize).min(chunk);
+            crate::storage::read_exact_at(&self.file, &mut buf[..take], off + done)
+                .map_err(|e| ArtifactError::io(format!("reading {}: {e}", self.path.display())))?;
+            state = crc32_raw(state, &buf[..take]);
+            done += take as u64;
+        }
+        if !state != crc {
+            return Err(ArtifactError::corrupt(format!(
+                "section {tag}: checksum mismatch"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Read and CRC-verify one section payload into memory.
+    pub fn read_section(&self, tag: u32) -> Result<Option<Vec<u8>>, ArtifactError> {
+        let Some((off, len, crc)) = self.section_meta(tag) else {
+            return Ok(None);
+        };
+        let mut buf = vec![0u8; len as usize];
+        crate::storage::read_exact_at(&self.file, &mut buf, off)
+            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", self.path.display())))?;
+        if crc32(&buf) != crc {
+            return Err(ArtifactError::corrupt(format!(
+                "section {tag}: checksum mismatch"
+            )));
+        }
+        Ok(Some(buf))
+    }
+
+    /// Stream one section through `visit` in `chunk_bytes` pieces (the
+    /// final piece may be shorter), CRC-verifying the whole payload.
+    /// `visit` receives each chunk plus its offset within the payload.
+    /// Returns `false` when the section is absent.
+    pub fn stream_section(
+        &self,
+        tag: u32,
+        chunk_bytes: usize,
+        mut visit: impl FnMut(&[u8], u64) -> Result<(), ArtifactError>,
+    ) -> Result<bool, ArtifactError> {
+        let Some((off, len, crc)) = self.section_meta(tag) else {
+            return Ok(false);
+        };
+        let chunk_bytes = chunk_bytes.max(1);
+        let mut buf = vec![0u8; chunk_bytes.min(len as usize).max(1)];
+        let mut state = 0xFFFF_FFFFu32;
+        let mut done = 0u64;
+        while done < len {
+            let take = ((len - done) as usize).min(chunk_bytes);
+            crate::storage::read_exact_at(&self.file, &mut buf[..take], off + done)
+                .map_err(|e| ArtifactError::io(format!("reading {}: {e}", self.path.display())))?;
+            state = crc32_raw(state, &buf[..take]);
+            visit(&buf[..take], done)?;
+            done += take as u64;
+        }
+        if !state != crc {
+            return Err(ArtifactError::corrupt(format!(
+                "section {tag}: checksum mismatch"
+            )));
+        }
+        Ok(true)
+    }
+
+    /// Hand the file off (to a cold vector store).
+    pub fn into_file(self) -> std::fs::File {
+        self.file
+    }
+}
+
+/// A decoded artifact whose BASE payload stays on disk — what the
+/// `Cold`/`Tiered` residencies open. Every non-BASE section is read,
+/// checksum-verified and decoded exactly as the resident open does; the
+/// BASE section is validated by ONE streaming pass (CRC over the whole
+/// payload, the angular unit-norm scan, and — for `Tiered` — capture of
+/// the first `n_hot = round(n * hot_frac)` rows into DRAM), leaving the
+/// raw vectors to be served in place via `storage::ColdVectors`.
+pub struct ColdArtifact {
+    pub spec: IndexSpec,
+    pub graph: Graph,
+    pub gap: Option<GapGraph>,
+    pub codebook: PqCodebook,
+    pub codes: PqCodes,
+    pub reorder: Option<Vec<u32>>,
+    pub mapping: Option<DataMapping>,
+    /// BASE shape, from the section header (cross-validated vs spec).
+    pub n_base: usize,
+    pub dim: usize,
+    /// Absolute file offset of BASE row 0's first f32.
+    pub base_data_offset: u64,
+    /// First `n_hot` rows, captured during the validation pass when
+    /// `capture_hot` was set (empty otherwise).
+    pub hot: VectorSet,
+    /// The validated artifact file, ready to serve cold reads.
+    pub file: std::fs::File,
+}
+
+impl ColdArtifact {
+    /// Open `path` without materializing the BASE payload. With
+    /// `capture_hot`, the hot prefix (`spec.hot_frac` of rows — the
+    /// §IV-E reorder puts the hottest vertices first) is pinned into
+    /// [`Self::hot`] during the same validation pass.
+    pub fn open(path: &Path, capture_hot: bool) -> Result<ColdArtifact, ArtifactError> {
+        let af = ArtifactFile::open(path)?;
+        let spec = af.spec().clone();
+        // Residency must not change what open-time validation covers:
+        // the resident reader CRCs EVERY section, so before decoding,
+        // stream-verify the ones this path will NOT otherwise touch —
+        // unknown/forward-compat tags and duplicate occurrences of
+        // known tags. (The first occurrence of each known tag is
+        // verified below: `read_section` for the decoded sections, the
+        // streaming validation pass for BASE.)
+        let mut covered = vec![false; af.n_sections()];
+        for tag in [
+            SEC_BASE,
+            SEC_GRAPH,
+            SEC_GAP,
+            SEC_CODEBOOK,
+            SEC_CODES,
+            SEC_REORDER,
+            SEC_MAPPING,
+        ] {
+            if let Some(i) = af.first_index_of(tag) {
+                covered[i] = true;
+            }
+        }
+        for (i, seen) in covered.iter().enumerate() {
+            if !seen {
+                af.verify_section_at(i)?;
+            }
+        }
+        let need = |tag: u32, name: &str| -> Result<Vec<u8>, ArtifactError> {
+            af.read_section(tag)?
+                .ok_or_else(|| ArtifactError::corrupt(format!("missing required section {name}")))
+        };
+        let graph = sections::decode_graph(&need(SEC_GRAPH, "GRAPH")?)?;
+        let codebook = sections::decode_codebook(&need(SEC_CODEBOOK, "CODEBOOK")?)?;
+        let codes = sections::decode_codes(&need(SEC_CODES, "CODES")?)?;
+        let gap = af
+            .read_section(SEC_GAP)?
+            .map(|p| sections::decode_gap(&p))
+            .transpose()?;
+        let reorder = af
+            .read_section(SEC_REORDER)?
+            .map(|p| sections::decode_reorder(&p))
+            .transpose()?;
+        let mapping = af
+            .read_section(SEC_MAPPING)?
+            .map(|p| sections::decode_mapping(&p))
+            .transpose()?;
+
+        // BASE header: dim u32, n u64 (see `sections::encode_base`).
+        let (base_off, base_len, base_crc) = af
+            .section_meta(SEC_BASE)
+            .ok_or_else(|| ArtifactError::corrupt("missing required section BASE"))?;
+        if base_len < 12 {
+            return Err(ArtifactError::truncated(
+                "BASE section shorter than its 12-byte header",
+            ));
+        }
+        let mut hdr = [0u8; 12];
+        crate::storage::read_exact_at(&af.file, &mut hdr, base_off)
+            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", path.display())))?;
+        let dim = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let n = u64::from_le_bytes(hdr[4..12].try_into().unwrap()) as usize;
+        if dim == 0 {
+            return Err(ArtifactError::corrupt("BASE: dim must be >= 1"));
+        }
+        let expect = n
+            .checked_mul(dim)
+            .and_then(|c| c.checked_mul(4))
+            .and_then(|c| c.checked_add(12))
+            .ok_or_else(|| ArtifactError::corrupt("BASE: n * dim overflows"))?;
+        if expect as u64 != base_len {
+            return Err(ArtifactError::corrupt(format!(
+                "BASE: payload holds {base_len} bytes for {n} x {dim} vectors \
+                 (expected {expect})"
+            )));
+        }
+
+        cross_validate(
+            &spec,
+            n,
+            dim,
+            &graph,
+            &codebook,
+            &codes,
+            gap.as_ref(),
+            reorder.as_deref(),
+            mapping.as_ref(),
+        )?;
+
+        // ONE streaming pass over the BASE payload: CRC every byte
+        // (section header + rows), prove the angular norm invariant,
+        // and capture the hot prefix — in bounded, row-aligned chunks,
+        // never materializing the payload.
+        let n_hot = if capture_hot {
+            ((n as f64 * spec.hot_frac).round() as usize).min(n)
+        } else {
+            0
+        };
+        let row_bytes = dim * 4;
+        let rows_per_chunk = ((1usize << 20) / row_bytes).max(1);
+        let mut hot_data: Vec<f32> = Vec::with_capacity(n_hot * dim);
+        let angular = spec.metric == Metric::Angular;
+        let mut row_vals: Vec<f32> = vec![0.0; dim];
+        let mut buf = vec![0u8; rows_per_chunk.min(n.max(1)) * row_bytes];
+        let data_off = base_off + 12;
+        let mut state = crc32_raw(0xFFFF_FFFF, &hdr);
+        let mut done = 0usize;
+        while done < n {
+            let take_rows = (n - done).min(rows_per_chunk);
+            let take = take_rows * row_bytes;
+            crate::storage::read_exact_at(
+                &af.file,
+                &mut buf[..take],
+                data_off + (done * row_bytes) as u64,
+            )
+            .map_err(|e| ArtifactError::io(format!("reading {}: {e}", path.display())))?;
+            state = crc32_raw(state, &buf[..take]);
+            if angular || done < n_hot {
+                for (r, raw) in buf[..take].chunks_exact(row_bytes).enumerate() {
+                    let row = done + r;
+                    let capture = row < n_hot;
+                    if !(angular || capture) {
+                        break;
+                    }
+                    for (v, ch) in row_vals.iter_mut().zip(raw.chunks_exact(4)) {
+                        *v = f32::from_le_bytes(ch.try_into().unwrap());
+                    }
+                    if angular {
+                        check_angular_row(&row_vals, row)?;
+                    }
+                    if capture {
+                        hot_data.extend_from_slice(&row_vals);
+                    }
+                }
+            }
+            done += take_rows;
+        }
+        if !state != base_crc {
+            return Err(ArtifactError::corrupt(format!(
+                "section {SEC_BASE}: checksum mismatch"
+            )));
+        }
+
+        Ok(ColdArtifact {
+            spec,
+            graph,
+            gap,
+            codebook,
+            codes,
+            reorder,
+            mapping,
+            n_base: n,
+            dim,
+            base_data_offset: base_off + 12,
+            hot: VectorSet { dim, data: hot_data },
+            file: af.into_file(),
         })
     }
 }
@@ -901,7 +1364,7 @@ mod tests {
         // Re-encode the artifact with SCALED base vectors: checksums
         // are valid (the writer computes them over the tampered bytes),
         // but the angular unit-norm precondition is broken.
-        let mut bad_base = svc.base.clone();
+        let mut bad_base = svc.resident_base().unwrap().clone();
         for x in bad_base.data.iter_mut() {
             *x *= 2.0;
         }
@@ -922,7 +1385,7 @@ mod tests {
         // The untampered service round-trips fine.
         let good = ArtifactParts {
             spec: &svc.spec,
-            base: &svc.base,
+            base: svc.resident_base().unwrap(),
             graph: &svc.graph,
             gap: None,
             codebook: &svc.codebook,
@@ -932,5 +1395,181 @@ mod tests {
         };
         let r = ArtifactReader::from_bytes(good.to_bytes()).unwrap();
         IndexArtifact::from_reader(&r).unwrap();
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("proxima-artifact-unit-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn artifact_file_header_view_agrees_with_the_full_reader() {
+        let mut w = ArtifactWriter::new(spec());
+        w.section(SEC_CODES, vec![1, 2, 3]);
+        w.section(99, vec![0xAB; 17]);
+        let bytes = w.to_bytes();
+        let path = tmp("header-view.pxa");
+        std::fs::write(&path, &bytes).unwrap();
+
+        let af = ArtifactFile::open(&path).unwrap();
+        assert_eq!(af.spec(), &spec());
+        // Sections read through the file view match the in-memory view.
+        let full = ArtifactReader::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(
+            af.read_section(SEC_CODES).unwrap().as_deref(),
+            full.section(SEC_CODES)
+        );
+        assert_eq!(af.read_section(SEC_GRAPH).unwrap(), None);
+        // Streamed == whole, chunk size notwithstanding.
+        let mut streamed = Vec::new();
+        let found = af
+            .stream_section(99, 5, |chunk, off| {
+                assert_eq!(off as usize, streamed.len());
+                streamed.extend_from_slice(chunk);
+                Ok(())
+            })
+            .unwrap();
+        assert!(found);
+        assert_eq!(Some(streamed.as_slice()), full.section(99));
+
+        // The same corruption posture as the full reader: flipped
+        // payload bytes are caught when the section is READ (or
+        // streamed), truncation at the file level at open.
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        let af = ArtifactFile::open(&path).unwrap(); // header still valid
+        assert_eq!(
+            af.read_section(99).unwrap_err().kind,
+            ArtifactErrorKind::Corrupt
+        );
+        assert_eq!(
+            af.stream_section(99, 4, |_, _| Ok(())).unwrap_err().kind,
+            ArtifactErrorKind::Corrupt
+        );
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let e = ArtifactFile::open(&path).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::Truncated);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cold_open_decodes_identically_and_captures_the_hot_prefix() {
+        use crate::config::{GraphParams, PqParams, SearchParams};
+        use crate::coordinator::SearchService;
+        use crate::dataset::synth::tiny_uniform;
+        let ds = tiny_uniform(60, 8, Metric::L2, 5);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 6,
+                build_l: 12,
+                alpha: 1.2,
+                seed: 5,
+            },
+            &PqParams {
+                m: 4,
+                c: 8,
+                train_sample: 60,
+                kmeans_iters: 4,
+            },
+            SearchParams::default(),
+            false,
+        );
+        let mut spec2 = svc.spec.clone();
+        spec2.hot_frac = 0.1; // 6 of 60 rows hot
+        let parts = ArtifactParts {
+            spec: &spec2,
+            base: svc.resident_base().unwrap(),
+            graph: &svc.graph,
+            gap: svc.gap.as_ref(),
+            codebook: &svc.codebook,
+            codes: &svc.codes,
+            reorder: None,
+            mapping: None,
+        };
+        let path = tmp("cold-open.pxa");
+        parts.write(&path).unwrap();
+
+        let full = IndexArtifact::open(&path).unwrap();
+        let cold = ColdArtifact::open(&path, true).unwrap();
+        assert_eq!(cold.spec, full.spec);
+        assert_eq!(cold.n_base, full.base.len());
+        assert_eq!(cold.dim, full.base.dim);
+        assert_eq!(cold.graph.offsets, full.graph.offsets);
+        assert_eq!(cold.graph.targets, full.graph.targets);
+        assert_eq!(cold.codes.codes, full.codes.codes);
+        assert_eq!(cold.hot.len(), 6, "hot prefix = round(60 * 0.1)");
+        for i in 0..6 {
+            assert_eq!(cold.hot.row(i), full.base.row(i), "hot row {i}");
+        }
+        // Without capture, nothing is pinned.
+        let cold = ColdArtifact::open(&path, false).unwrap();
+        assert_eq!(cold.hot.len(), 0);
+        // The recorded data offset points at row 0's bytes.
+        let raw = std::fs::read(&path).unwrap();
+        let off = cold.base_data_offset as usize;
+        let first = f32::from_le_bytes(raw[off..off + 4].try_into().unwrap());
+        assert_eq!(first.to_bits(), full.base.row(0)[0].to_bits());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cold_open_verifies_sections_it_does_not_decode() {
+        use crate::config::{GraphParams, PqParams, SearchParams};
+        use crate::coordinator::SearchService;
+        use crate::dataset::synth::tiny_uniform;
+        // An artifact carrying an unknown forward-compat section:
+        // corrupting THAT payload must be rejected by the cold open
+        // exactly like the resident open — residency can never change
+        // the open-time validation outcome.
+        let ds = tiny_uniform(40, 8, Metric::L2, 6);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 6,
+                build_l: 12,
+                alpha: 1.2,
+                seed: 6,
+            },
+            &PqParams {
+                m: 4,
+                c: 8,
+                train_sample: 40,
+                kmeans_iters: 4,
+            },
+            SearchParams::default(),
+            false,
+        );
+        let mut w = ArtifactWriter::new(svc.spec.clone());
+        w.section(SEC_BASE, sections::encode_base(svc.resident_base().unwrap()));
+        w.section(SEC_GRAPH, sections::encode_graph(&svc.graph));
+        w.section(SEC_CODEBOOK, sections::encode_codebook(&svc.codebook));
+        w.section(SEC_CODES, sections::encode_codes(&svc.codes));
+        w.section(240, vec![0xEE; 64]); // unknown tag: preserved, still CRC'd
+        let mut bytes = w.to_bytes();
+        let path = tmp("unknown-section.pxa");
+        std::fs::write(&path, &bytes).unwrap();
+        ColdArtifact::open(&path, false).expect("intact unknown sections are fine");
+
+        // Flip a byte INSIDE the unknown payload (it is the last
+        // section, so the tail bytes belong to it).
+        let n = bytes.len();
+        bytes[n - 10] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(
+            ArtifactReader::from_bytes(bytes.clone()).unwrap_err().kind,
+            ArtifactErrorKind::Corrupt,
+            "resident reader rejects the corrupt unknown section"
+        );
+        let e = ColdArtifact::open(&path, false).unwrap_err();
+        assert_eq!(
+            e.kind,
+            ArtifactErrorKind::Corrupt,
+            "cold open must reject exactly what the resident open rejects: {e}"
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

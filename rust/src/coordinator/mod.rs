@@ -34,7 +34,10 @@
 //!
 //! # Components
 //!
-//! * [`SearchService`] — owns one loaded index (base vectors, graph, PQ,
+//! * [`SearchService`] — owns one loaded index (base vectors behind the
+//!   tiered [`VectorStore`] — fully resident by default, served in
+//!   place from the artifact file or hot_frac-pinned under
+//!   [`open_with`](SearchService::open_with) — plus graph, PQ,
 //!   gap encoding) and answers queries through the typed query API
 //!   ([`SearchService::query`] takes a [`QueryRequest`] — N vectors, `k`,
 //!   per-request [`QueryOptions`] — and returns a [`QueryResponse`] or a
@@ -64,7 +67,9 @@ pub mod shard;
 pub mod server;
 
 use crate::api::{ApiError, QueryOptions, QueryRequest, QueryResponse, SearchMode};
-use crate::artifact::{ArtifactError, ArtifactParts, IndexArtifact, IndexProvenance, IndexSpec};
+use crate::artifact::{
+    ArtifactError, ArtifactParts, ColdArtifact, IndexArtifact, IndexProvenance, IndexSpec,
+};
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
 use crate::distance::Metric;
@@ -79,6 +84,7 @@ use crate::search::beam::{accurate_beam_search_into, pq_beam_search_into, Search
 use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
 use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
+use crate::storage::{ColdVectors, OpenOptions, Residency, VectorStore};
 use std::cell::RefCell;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -94,6 +100,10 @@ pub struct ServiceStats {
     pub total_latency_us: AtomicU64,
     /// Total time queries sat in the exec-pool queue (µs).
     pub queue_wait_us: AtomicU64,
+    /// Cold-tier raw-vector fetches this epoch (0 under `Resident`).
+    pub cold_reads: AtomicU64,
+    /// Bytes those cold fetches read from the artifact file.
+    pub cold_bytes: AtomicU64,
 }
 
 /// Per-query scratch a service worker checks out: the walk state plus a
@@ -158,7 +168,11 @@ pub struct SearchService {
     /// artifact (and from which path).
     pub provenance: IndexProvenance,
     pub metric: Metric,
-    pub base: VectorSet,
+    /// Raw base vectors behind the tiered storage layer: fully resident
+    /// by default; [`Self::open_with`] can leave them on disk (`Cold`)
+    /// or pin only the §IV-E hot fraction (`Tiered`). Traversal
+    /// metadata (graph, codes, gap) is always resident.
+    pub storage: VectorStore,
     pub graph: Graph,
     pub codebook: PqCodebook,
     pub codes: PqCodes,
@@ -245,7 +259,7 @@ impl SearchService {
             spec,
             provenance: IndexProvenance::Built,
             metric: ds.metric,
-            base: ds.base.clone(),
+            storage: VectorStore::Resident(ds.base.clone()),
             graph,
             codebook,
             codes,
@@ -280,9 +294,21 @@ impl SearchService {
             .mapping
             .clone()
             .unwrap_or_else(|| self.default_mapping());
+        // A cold/tiered-opened service re-reads its cold tier once —
+        // save is an offline path, and I/O failures are typed here.
+        let materialized;
+        let base: &VectorSet = match self.storage.as_resident() {
+            Some(b) => b,
+            None => {
+                materialized = self.storage.materialize().map_err(|e| {
+                    ArtifactError::io(format!("reading cold vectors for save: {e}"))
+                })?;
+                &materialized
+            }
+        };
         ArtifactParts {
             spec: &self.spec,
-            base: &self.base,
+            base,
             graph: &self.graph,
             gap: self.gap.as_ref(),
             codebook: &self.codebook,
@@ -305,11 +331,11 @@ impl SearchService {
             .clamp(1, 32);
         DataMapping::new(
             &NandConfig::proxima(),
-            self.base.len() as u32,
+            self.n_base() as u32,
             self.graph.max_degree.max(1) as u32,
             b_index,
             (self.codebook.m * 8) as u32,
-            self.base.dim as u32,
+            self.dim() as u32,
             32,
             self.spec.hot_frac,
         )
@@ -319,20 +345,77 @@ impl SearchService {
     /// dataset, no graph build, no PQ training. The artifact is
     /// checksum-verified and structurally validated ([`IndexArtifact`]);
     /// every failure is a typed [`ArtifactError`], never a panic.
+    /// Vectors are fully resident; [`Self::open_with`] picks a tiered
+    /// [`Residency`] instead.
     pub fn open(
         path: &Path,
         params: SearchParams,
         use_xla: bool,
     ) -> Result<SearchService, ArtifactError> {
-        let art = IndexArtifact::open(path)?;
-        let gap = match art.gap {
+        Self::open_with(path, params, use_xla, &OpenOptions::default())
+    }
+
+    /// [`Self::open`] with an explicit vector [`Residency`]:
+    ///
+    /// * `Resident` — every section materialized into owned buffers
+    ///   (the default);
+    /// * `Cold` — the BASE payload is validated by one streaming CRC
+    ///   pass and then **served in place** from the artifact file
+    ///   ([`ColdArtifact`]): serving DRAM stops scaling with `n_base`;
+    /// * `Tiered` — additionally pins the `spec.hot_frac` hot prefix
+    ///   (ids `0..n_hot` after the §IV-E REORDER permutation) in DRAM,
+    ///   so only cold MISSES touch the file.
+    ///
+    /// Search results are bitwise-identical across all three (pinned by
+    /// `tests/storage_parity.rs`), and so is open-time validation: both
+    /// decode paths CRC every section and re-prove the same structural
+    /// invariants.
+    pub fn open_with(
+        path: &Path,
+        params: SearchParams,
+        use_xla: bool,
+        opts: &OpenOptions,
+    ) -> Result<SearchService, ArtifactError> {
+        // Residency decides only HOW the BASE payload is materialized;
+        // everything downstream of (spec, storage, sections) is one
+        // shared construction path.
+        let (spec, storage, graph, codebook, codes, gap, reorder, mapping) = match opts.residency {
+            Residency::Resident => {
+                let art = IndexArtifact::open(path)?;
+                (
+                    art.spec,
+                    VectorStore::Resident(art.base),
+                    art.graph,
+                    art.codebook,
+                    art.codes,
+                    art.gap,
+                    art.reorder,
+                    art.mapping,
+                )
+            }
+            residency => {
+                let art = ColdArtifact::open(path, residency == Residency::Tiered)?;
+                let cold =
+                    ColdVectors::new(art.file, art.base_data_offset, art.n_base, art.dim, path);
+                let storage = match residency {
+                    Residency::Cold => VectorStore::Cold(cold),
+                    Residency::Tiered => VectorStore::Tiered { hot: art.hot, cold },
+                    Residency::Resident => unreachable!("matched above"),
+                };
+                (
+                    art.spec, storage, art.graph, art.codebook, art.codes, art.gap, art.reorder,
+                    art.mapping,
+                )
+            }
+        };
+        let gap = match gap {
             Some(g) => g,
             // Minimal artifacts may omit the packed stream; re-encode
             // (cheap relative to a graph build).
-            None => GapGraph::encode(&art.graph.to_lists()),
+            None => GapGraph::encode(&graph.to_lists()),
         };
         let runtime = if use_xla {
-            RuntimeHandle::spawn_default(&art.codebook)
+            RuntimeHandle::spawn_default(&codebook)
         } else {
             None
         };
@@ -340,24 +423,23 @@ impl SearchService {
         // layout) space; results must still name ORIGINAL ids. Invert
         // the stored `perm[old] = new` once, map every output through it
         // (decode already proved it a bijection).
-        let id_map = art
-            .reorder
+        let id_map = reorder
             .as_ref()
             .map(|perm| crate::reorder::invert_permutation(perm));
         Ok(SearchService {
-            name: art.spec.dataset.clone(),
+            name: spec.dataset.clone(),
             provenance: IndexProvenance::Artifact {
                 path: path.display().to_string(),
             },
-            metric: art.spec.metric,
-            base: art.base,
-            graph: art.graph,
-            codebook: art.codebook,
-            codes: art.codes,
+            metric: spec.metric,
+            storage,
+            graph,
+            codebook,
+            codes,
             gap: Some(gap),
-            reorder: art.reorder,
+            reorder,
             id_map,
-            mapping: art.mapping,
+            mapping,
             params,
             features: ProximaFeatures::default(),
             runtime,
@@ -367,7 +449,7 @@ impl SearchService {
             exec: ExecPool::shared().clone(),
             scratch: ScratchPool::new(),
             adt_batches: ScratchPool::new(),
-            spec: art.spec,
+            spec,
         })
     }
 
@@ -401,13 +483,29 @@ impl SearchService {
     }
 
     fn context(&self) -> SearchContext<'_> {
+        // The default Resident path is literally the pre-storage code
+        // path (`storage: None` → providers borrow `base` directly);
+        // only tiered/cold stores route fetches through the store.
+        let tiered = self.storage.residency() != Residency::Resident;
         SearchContext {
-            base: &self.base,
+            base: self.storage.resident_set(),
             metric: self.metric,
             graph: &self.graph,
             codes: Some(&self.codes),
             gap: self.gap.as_ref(),
+            storage: tiered.then_some(&self.storage),
         }
+    }
+
+    /// Number of indexed base vectors (tier-independent).
+    pub fn n_base(&self) -> usize {
+        self.storage.len()
+    }
+
+    /// The full base vectors, when fully DRAM-resident (`None` under
+    /// `Cold`/`Tiered` residency — that is the point of those modes).
+    pub fn resident_base(&self) -> Option<&VectorSet> {
+        self.storage.as_resident()
     }
 
     /// Build the query's ADT — through XLA when attached, else natively.
@@ -443,7 +541,7 @@ impl SearchService {
     /// Index dimensionality (the API boundary validates queries against
     /// this).
     pub fn dim(&self) -> usize {
-        self.base.dim
+        self.storage.dim()
     }
 
     /// Validate a request against this index: non-empty batch, sane `k`
@@ -480,7 +578,7 @@ impl SearchService {
                 )));
             }
         }
-        let dim = self.base.dim;
+        let dim = self.dim();
         for (i, v) in req.vectors.iter().enumerate() {
             if v.len() != dim {
                 return Err(ApiError::dim_mismatch(format!(
@@ -508,7 +606,7 @@ impl SearchService {
             // Clamp to the local index size: a candidate list longer
             // than the index (or this shard of it) buys nothing but a
             // bigger up-front reserve.
-            params.l = l.min(self.base.len().max(1));
+            params.l = l.min(self.n_base().max(1));
         }
         params.k = k.min(params.l);
         let mut features = self.features;
@@ -897,6 +995,14 @@ impl SearchService {
         self.stats
             .exact_dists
             .fetch_add(s.exact_dists as u64, Ordering::Relaxed);
+        if s.cold_reads > 0 {
+            self.stats
+                .cold_reads
+                .fetch_add(s.cold_reads as u64, Ordering::Relaxed);
+            self.stats
+                .cold_bytes
+                .fetch_add(s.cold_bytes, Ordering::Relaxed);
+        }
         if s.early_terminated {
             self.stats.early_terminated.fetch_add(1, Ordering::Relaxed);
         }

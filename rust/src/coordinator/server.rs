@@ -65,6 +65,7 @@ use crate::anyhow;
 use crate::api::wire::{self, WireRequest};
 use crate::api::{ApiError, NeighborList, QueryOptions, QueryRequest, QueryResponse};
 use crate::artifact::IndexProvenance;
+use crate::storage::{OpenOptions, Residency};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
 use std::io::{BufRead, BufReader, Write};
@@ -172,7 +173,9 @@ fn handle_conn(
                 }
                 Ok(WireRequest::Stats) => stats_response(&cell.load()),
                 Ok(WireRequest::Status) => status_response(&cell.load()),
-                Ok(WireRequest::Reload { path }) => reload_response(&cell, &path),
+                Ok(WireRequest::Reload { path, residency }) => {
+                    reload_response(&cell, &path, residency)
+                }
                 Ok(WireRequest::Shutdown) => {
                     shutdown.store(true, Ordering::Relaxed);
                     writeln!(
@@ -278,8 +281,11 @@ fn stats_response(service: &SearchService) -> Json {
 
 /// The admin `status` op: the served index's [`IndexSpec`]
 /// (what was built and how), its provenance (fresh build vs opened
-/// artifact + path), and the service counters — everything an operator
-/// needs to tell replicas apart.
+/// artifact + path), the vector-storage tier (residency, DRAM
+/// `resident_bytes` — scaling with `hot_frac`, not `n_base`, under
+/// `tiered` — and this epoch's cold-tier read counters), and the
+/// service counters — everything an operator needs to tell replicas
+/// apart.
 ///
 /// [`IndexSpec`]: crate::artifact::IndexSpec
 fn status_response(service: &SearchService) -> Json {
@@ -290,25 +296,49 @@ fn status_response(service: &SearchService) -> Json {
             ("path", Json::str(path.clone())),
         ]),
     };
+    let storage = Json::obj(vec![
+        ("residency", Json::str(service.storage.residency().name())),
+        (
+            "resident_bytes",
+            Json::num(service.storage.resident_bytes() as f64),
+        ),
+        ("n_hot", Json::num(service.storage.n_hot() as f64)),
+        (
+            "cold_reads",
+            Json::num(service.stats.cold_reads.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "cold_bytes",
+            Json::num(service.stats.cold_bytes.load(Ordering::Relaxed) as f64),
+        ),
+    ]);
     Json::obj(vec![
         ("v", Json::num(wire::VERSION as f64)),
         ("spec", wire::encode_spec(&service.spec)),
         ("provenance", provenance),
+        ("storage", storage),
         ("stats", stats_response(service)),
     ])
 }
 
 /// The admin `reload` op: open the artifact at `path` (keeping the old
-/// index's search params and XLA preference) and swap it into the epoch
-/// cell. On ANY failure — missing file, truncation, corruption, version
+/// index's search params and XLA preference, and — unless the request
+/// names one — its vector residency) and swap it into the epoch cell.
+/// On ANY failure — missing file, truncation, corruption, version
 /// mismatch — the old index keeps serving and the client gets a
 /// structured error line.
-fn reload_response(cell: &ServiceCell, path: &str) -> Json {
+fn reload_response(cell: &ServiceCell, path: &str, residency: Option<Residency>) -> Json {
     let old = cell.load();
+    let residency = residency.unwrap_or_else(|| old.storage.residency());
     // Retry the XLA *preference*, not the old attach *outcome* — a
     // transient attach failure at boot must not disable XLA for every
     // subsequent reload (artifacts may exist by now).
-    match SearchService::open(Path::new(path), old.params, old.xla_preferred()) {
+    match SearchService::open_with(
+        Path::new(path),
+        old.params,
+        old.xla_preferred(),
+        &OpenOptions::with_residency(residency),
+    ) {
         Err(e) => wire::encode_error(&ApiError::from(e)),
         Ok(svc) => {
             // Carry the serve-time execution width across the swap: a
@@ -322,7 +352,7 @@ fn reload_response(cell: &ServiceCell, path: &str) -> Json {
             let info = Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("dataset", Json::str(svc.name.clone())),
-                ("n_base", Json::num(svc.base.len() as f64)),
+                ("n_base", Json::num(svc.n_base() as f64)),
                 ("path", Json::str(path)),
             ]);
             drop(cell.swap(Arc::new(svc)));
@@ -433,11 +463,22 @@ impl Client {
     /// Returns the server's confirmation line; a typed error (bad path,
     /// corrupt artifact, version mismatch) leaves the old index serving.
     pub fn reload(&mut self, path: &str) -> Result<Json> {
-        let resp = self.roundtrip(Json::obj(vec![
+        self.reload_opts(path, None)
+    }
+
+    /// [`Self::reload`] that also switches the new epoch's vector
+    /// residency (`"resident"` / `"cold"` / `"tiered"`); `None` keeps
+    /// the currently-served epoch's residency.
+    pub fn reload_opts(&mut self, path: &str, residency: Option<Residency>) -> Result<Json> {
+        let mut kvs = vec![
             ("v", Json::num(wire::VERSION as f64)),
             ("op", Json::str("reload")),
             ("path", Json::str(path)),
-        ]))?;
+        ];
+        if let Some(r) = residency {
+            kvs.push(("residency", Json::str(r.name())));
+        }
+        let resp = self.roundtrip(Json::obj(kvs))?;
         if let Some(err) = wire::decode_error(&resp) {
             return Err(anyhow!("server error: {err}"));
         }
@@ -536,6 +577,18 @@ mod tests {
                 .and_then(Json::as_usize),
             Some(4)
         );
+        // Built services serve fully resident: every vector byte in
+        // DRAM, zero cold-tier traffic.
+        let storage = status.get("storage").expect("status carries storage");
+        assert_eq!(
+            storage.get("residency").and_then(Json::as_str),
+            Some("resident")
+        );
+        assert_eq!(
+            storage.get("resident_bytes").and_then(Json::as_usize),
+            Some(200 * 8 * 4)
+        );
+        assert_eq!(storage.get("cold_reads").and_then(Json::as_usize), Some(0));
 
         // Reload with a bad path is a structured error; the connection
         // and the old index keep serving.

@@ -20,6 +20,7 @@
 use super::SearchService;
 use crate::api::{ApiError, NeighborList, QueryRequest, QueryResponse};
 use crate::artifact::ArtifactError;
+use crate::storage::OpenOptions;
 use crate::config::{GraphParams, PqParams, SearchParams};
 use crate::dataset::{Dataset, VectorSet};
 use crate::exec::ExecPool;
@@ -112,6 +113,17 @@ impl ShardedService {
         paths: &[PathBuf],
         params: SearchParams,
     ) -> Result<ShardedService, ArtifactError> {
+        Self::open_shards_with(paths, params, &OpenOptions::default())
+    }
+
+    /// [`Self::open_shards`] with an explicit vector residency — every
+    /// shard opens under the same tier (`cold`/`tiered` shards serve
+    /// their raw vectors in place from their own artifact file).
+    pub fn open_shards_with(
+        paths: &[PathBuf],
+        params: SearchParams,
+        opts: &OpenOptions,
+    ) -> Result<ShardedService, ArtifactError> {
         if paths.is_empty() {
             return Err(ArtifactError::spec_mismatch(
                 "open_shards requires at least one artifact path",
@@ -121,8 +133,9 @@ impl ShardedService {
         // shard in parallel on the shared pool — the dominant restart
         // cost is per-file and independent. Ordering/consistency checks
         // run afterwards, in shard order.
-        let results = ExecPool::shared()
-            .run_collect(paths.len(), |s| SearchService::open(&paths[s], params, false));
+        let results = ExecPool::shared().run_collect(paths.len(), |s| {
+            SearchService::open_with(&paths[s], params, false, opts)
+        });
         let mut opened = Vec::with_capacity(paths.len());
         for (s, r) in results.into_iter().enumerate() {
             let svc = r.value.ok_or_else(|| {
@@ -182,13 +195,13 @@ impl ShardedService {
                     )));
                 }
             }
-            if next_base + svc.base.len() as u64 > u32::MAX as u64 {
+            if next_base + svc.n_base() as u64 > u32::MAX as u64 {
                 return Err(ArtifactError::spec_mismatch(
                     "combined shards exceed the u32 global-id space",
                 ));
             }
             shard_base.push(next_base as u32);
-            next_base += svc.base.len() as u64;
+            next_base += svc.n_base() as u64;
             shards.push(svc);
         }
         Ok(ShardedService { shards, shard_base })
@@ -401,7 +414,7 @@ mod tests {
     #[test]
     fn uneven_partition_handled() {
         let (_, sh) = build_sharded(7); // 600 / 7 is uneven
-        let total: usize = sh.shards.iter().map(|s| s.base.len()).sum();
+        let total: usize = sh.shards.iter().map(|s| s.n_base()).sum();
         assert_eq!(total, 600);
     }
 
@@ -419,6 +432,20 @@ mod tests {
             let b = reopened.search(ds.queries.row(qi), 10);
             assert_eq!(a.ids, b.ids, "query {qi}: reopened shards must answer identically");
             assert_eq!(a.dists, b.dists);
+        }
+        // Cold-opened shards (each serving raw vectors in place from its
+        // own artifact file) answer identically and meter their reads.
+        let cold = ShardedService::open_shards_with(
+            &paths,
+            sh.shards[0].params,
+            &crate::storage::OpenOptions::with_residency(crate::storage::Residency::Cold),
+        )
+        .unwrap();
+        for qi in 0..4 {
+            let a = sh.search(ds.queries.row(qi), 10);
+            let b = cold.search(ds.queries.row(qi), 10);
+            assert_eq!(a.ids, b.ids, "query {qi}: cold shards must answer identically");
+            assert!(b.stats.cold_reads > 0, "query {qi}: cold shards must meter reads");
         }
         // A wrong-order path list is rejected (global ids would shift
         // into the wrong shard's range).

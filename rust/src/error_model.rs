@@ -250,6 +250,7 @@ mod tests {
                 graph: &g2,
                 codes: Some(&cor.codes),
                 gap: None,
+                storage: None,
             };
             let mut r = 0.0;
             for q in 0..ds.n_queries() {

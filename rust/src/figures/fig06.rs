@@ -50,6 +50,7 @@ pub fn traffic_vs_degree(name: &str, scale: f64, r_sweep: &[usize]) -> Vec<(usiz
             graph: &graph,
             codes: Some(&codes),
             gap: None,
+            storage: None,
         };
         // Traversal traffic (the quantity Fig 6b varies with R): a
         // PQ-guided beam search with a fixed top-2k rerank, so the rerank

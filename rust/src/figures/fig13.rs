@@ -55,6 +55,7 @@ pub fn proxima_hot_traces(
         graph: &re.graph,
         codes: Some(&re.codes),
         gap: Some(&gap),
+        storage: None,
     };
     let mut traces = Vec::with_capacity(w.ds.n_queries());
     for qi in 0..w.ds.n_queries() {

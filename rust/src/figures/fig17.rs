@@ -35,6 +35,7 @@ pub fn recall_at_ber(w: &Workbench, rate: f64, seed: u64) -> f64 {
             graph: &graph,
             codes: Some(&codes),
             gap: None,
+            storage: None,
         }
     } else {
         w.context_no_gap()

@@ -113,6 +113,7 @@ impl Workbench {
             graph: &self.graph,
             codes: Some(&self.codes),
             gap: Some(&self.gap),
+            storage: None,
         }
     }
 
@@ -124,6 +125,7 @@ impl Workbench {
             graph: &self.graph,
             codes: Some(&self.codes),
             gap: None,
+            storage: None,
         }
     }
 
@@ -211,6 +213,8 @@ pub fn per_query(stats: &crate::search::SearchStats, n: usize) -> crate::search:
         // truncate to 0 exactly when dedup worked (adt_builds < n).
         adt_builds: stats.adt_builds,
         queue_wait_us: stats.queue_wait_us / n as u64,
+        cold_reads: stats.cold_reads / n,
+        cold_bytes: stats.cold_bytes / n as u64,
     }
 }
 

@@ -158,6 +158,7 @@ mod tests {
             graph: &g,
             codes: None,
             gap: None,
+            storage: None,
         };
         let mut recall = 0.0;
         for qi in 0..ds.n_queries() {

@@ -57,6 +57,29 @@
 //! [`coordinator::ServiceCell`] as the swappable serving handle;
 //! `ShardedService::{save_shards, open_shards}` persist and reopen one
 //! artifact per shard.
+//!
+//! # Storage tiers (paper §IV memory model)
+//!
+//! The paper's premise is that full-precision vectors stay in dense 3D
+//! NAND and only traversal metadata plus a small **hot fraction** of
+//! vectors live in fast memory. The [`storage`] subsystem maps that
+//! model onto the serving stack — `serve --index x.pxa --residency ...`:
+//!
+//! | residency  | paper analogue                           | DRAM for vectors      |
+//! |------------|------------------------------------------|-----------------------|
+//! | `resident` | host-memory baseline                     | all of `n_base`       |
+//! | `cold`     | vectors in NAND, fetched per rerank      | none (OS page cache)  |
+//! | `tiered`   | §IV-E hot-node set pinned near compute   | `hot_frac · n_base`   |
+//!
+//! Graph, PQ codes and the gap stream stay resident in every mode (they
+//! are the "index memory" of the accelerator); only raw-vector fetches
+//! — the rerank path — go through the [`storage::VectorStore`]. Cold
+//! fetches are positioned reads against the artifact's TOC offsets,
+//! metered per query as `SearchStats::{cold_reads, cold_bytes}` and
+//! reported per epoch by the wire `status` op; [`storage::replay`]
+//! replays such measured access streams through the §IV-E mapping and
+//! the NAND timing model. Results are bitwise-identical across all
+//! three residencies (pinned by `tests/storage_parity.rs`).
 
 pub mod api;
 pub mod artifact;
@@ -66,6 +89,7 @@ pub mod dataset;
 pub mod distance;
 pub mod gap;
 pub mod pq;
+pub mod storage;
 pub mod util;
 
 pub mod graph;

@@ -9,6 +9,9 @@
 //! proxima search    --dataset sift-s --index data/sift-s.pxa   open, no build
 //! proxima serve     --dataset sift-s --scale 0.02 --port 7878
 //! proxima serve     --index data/sift-s.pxa --port 7878        open, no build
+//! proxima serve     --index data/sift-s.pxa --residency tiered
+//!                                          §IV tiered storage: hot_frac of
+//!                                          vectors in DRAM, rest from file
 //! proxima sim       --dataset sift-s --scale 0.02 --queues 256 --hot 0.03
 //! proxima figures   --fig all|3|6|9|11|12|13|14|15|16|17|t1|t2|t3
 //! ```
@@ -20,8 +23,11 @@
 //! writing). `search`/`serve` with `--index <path>` OPEN that artifact —
 //! the fast restart path: no graph build, no PQ training, and for
 //! `serve` no dataset at all. A running server hot-swaps its index via
-//! the wire admin plane (`{"v":2,"op":"reload","path":...}`; see
-//! `coordinator::server`).
+//! the wire admin plane (`{"v":2,"op":"reload","path":...}`, optionally
+//! with `"residency":"cold"|"tiered"|"resident"`; see
+//! `coordinator::server`). `--residency` controls where raw vectors
+//! live while serving (`storage::Residency`); the `status` op reports
+//! the tier plus `resident_bytes`/`cold_reads`/`cold_bytes`.
 //!
 //! Config file via `--config path` plus `--set key=value` overrides
 //! (see `config::Config`). The `search` subcommand also honors the
@@ -118,20 +124,35 @@ fn service_from_cfg(cfg: &Config) -> Result<(proxima::dataset::Dataset, SearchSe
 }
 
 /// Open a serialized index artifact (the `--index` path): no dataset
-/// generation, no graph build, no PQ training.
+/// generation, no graph build, no PQ training. `--residency
+/// {resident,cold,tiered}` picks the vector tier (default resident;
+/// `cold` serves raw vectors in place from the artifact file, `tiered`
+/// pins the spec's `hot_frac` prefix in DRAM).
 fn service_from_artifact(cfg: &Config, path: &str) -> Result<SearchService> {
     let params = SearchParams::from_config(cfg);
     let use_xla = !cfg.get_bool("no_xla", false);
+    let residency_name = cfg.get_str("residency").unwrap_or("resident");
+    let residency = proxima::storage::Residency::parse(residency_name).ok_or_else(|| {
+        proxima::anyhow!("unknown --residency '{residency_name}' (resident|cold|tiered)")
+    })?;
     let t0 = std::time::Instant::now();
-    let svc = SearchService::open(Path::new(path), params, use_xla)?;
+    let svc = SearchService::open_with(
+        Path::new(path),
+        params,
+        use_xla,
+        &proxima::storage::OpenOptions::with_residency(residency),
+    )?;
     logln!(
-        "[proxima] opened artifact {path} in {:.2}s: '{}' {} x {}d ({}), {} edges",
+        "[proxima] opened artifact {path} in {:.2}s: '{}' {} x {}d ({}), {} edges, \
+         residency {} ({} vector bytes resident)",
         t0.elapsed().as_secs_f64(),
         svc.name,
-        svc.base.len(),
+        svc.n_base(),
         svc.dim(),
         svc.metric.name(),
-        svc.graph.n_edges()
+        svc.graph.n_edges(),
+        svc.storage.residency().name(),
+        svc.storage.resident_bytes()
     );
     Ok(svc)
 }

@@ -7,14 +7,19 @@
 //! fused next to the index row, so one WL/page access serves the entire
 //! line 6-9 loop of Algorithm 1.
 
+use crate::artifact::{ArtifactError, ArtifactParts, IndexSpec};
 use crate::config::SearchParams;
 use crate::dataset::VectorSet;
+use crate::engine::mapping::DataMapping;
+use crate::gap::GapGraph;
+use crate::nand::NandConfig;
 use crate::pq::PqCodebook;
 use crate::pq::PqCodes;
 use crate::search::beam::SearchContext;
 use crate::search::proxima::{proxima_search, ProximaFeatures};
 use crate::graph::Graph;
 use crate::util::rng::Xoshiro256pp;
+use std::path::Path;
 
 /// Visit-frequency profile of a graph.
 #[derive(Clone, Debug)]
@@ -43,6 +48,7 @@ impl VisitProfile {
             graph,
             codes: Some(codes),
             gap: None,
+            storage: None,
         };
         for _ in 0..samples {
             let qid = rng.gen_range(base.len());
@@ -162,6 +168,79 @@ impl ReorderedIndex {
         ids.iter().map(|&id| self.inv[id as usize]).collect()
     }
 
+    /// Write the first-class **reordered-deployment artifact** for this
+    /// index: base rows permuted into the stored (NAND layout) space,
+    /// the already-permuted graph and PQ codes, a REORDER section
+    /// carrying `perm[old] = new`, `hot_frac` recorded in the spec, a
+    /// fresh gap encoding of the permuted graph, and the §IV-E
+    /// [`DataMapping`] for the paper's accelerator geometry.
+    ///
+    /// This is the one call that turns a [`ReorderedIndex`] into a
+    /// deployable `.pxa`: `SearchService::open` maps results back to
+    /// original ids via the REORDER section, and the `Tiered` residency
+    /// pins exactly the contiguous hot prefix `0..n_hot` this
+    /// reordering placed first. `spec` is the source index's spec
+    /// (`base`/`codebook` must be the UNpermuted originals it
+    /// describes); the returned spec is what was written (`hot_frac`
+    /// set to `n_hot / n`).
+    pub fn write_artifact(
+        &self,
+        spec: &IndexSpec,
+        base: &VectorSet,
+        codebook: &PqCodebook,
+        path: &Path,
+    ) -> Result<IndexSpec, ArtifactError> {
+        let n = self.graph.n();
+        assert_eq!(base.len(), n, "base set and reordered graph disagree on n");
+        assert_eq!(
+            self.codes.codes.len(),
+            n * self.codes.m,
+            "reordered codes and graph disagree on n"
+        );
+        // Permute base rows into the stored space: new row r holds the
+        // vector of original vertex inv[r].
+        let mut base2 = VectorSet::zeros(n, base.dim);
+        for new in 0..n {
+            base2
+                .row_mut(new)
+                .copy_from_slice(base.row(self.inv[new] as usize));
+        }
+        let mut spec2 = spec.clone();
+        // Clamp to the vertex count: the spec's hot_frac is a fraction
+        // by contract (the decoder rejects values outside [0, 1]), and
+        // the writer must never emit a file its own reader rejects.
+        spec2.hot_frac = if n == 0 {
+            0.0
+        } else {
+            self.n_hot.min(n) as f64 / n as f64
+        };
+        let gap = GapGraph::encode(&self.graph.to_lists());
+        let b_index = (gap.mean_bits_per_edge(self.graph.n_edges().max(1)).ceil() as u32)
+            .clamp(1, 32);
+        let mapping = DataMapping::new(
+            &NandConfig::proxima(),
+            n as u32,
+            self.graph.max_degree.max(1) as u32,
+            b_index,
+            (self.codes.m * 8) as u32,
+            base.dim as u32,
+            32,
+            spec2.hot_frac,
+        );
+        ArtifactParts {
+            spec: &spec2,
+            base: &base2,
+            graph: &self.graph,
+            gap: Some(&gap),
+            codebook,
+            codes: &self.codes,
+            reorder: Some(self.perm.as_slice()),
+            mapping: Some(&mapping),
+        }
+        .write(path)?;
+        Ok(spec2)
+    }
+
     /// Extra storage bits required by hot-node repetition (paper §IV-E):
     /// each hot node stores R x (b_index + b_pq) + b_pq.
     pub fn hot_storage_bits(&self, b_index: u32) -> u64 {
@@ -240,6 +319,7 @@ mod tests {
             graph: &g,
             codes: Some(&codes),
             gap: None,
+            storage: None,
         };
         let params = SearchParams {
             l: 60,
@@ -262,6 +342,7 @@ mod tests {
             graph: &re.graph,
             codes: Some(&re.codes),
             gap: None,
+            storage: None,
         };
         let out2 = proxima_search(&ctx2, &adt, q, &params, ProximaFeatures::default(), false);
         let mapped = re.ids_to_original(&out2.ids);
@@ -271,6 +352,42 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn write_artifact_is_the_one_call_deployment_builder() {
+        let (ds, g, cb, codes) = fixture();
+        let prof = VisitProfile::measure(&ds.base, &g, &cb, &codes, &SearchParams::default(), 20, 9);
+        let re = ReorderedIndex::build(&g, &codes, &prof, 0.05);
+        let spec = IndexSpec {
+            dataset: ds.name.clone(),
+            metric: ds.metric,
+            dim: ds.dim() as u32,
+            n_base: ds.n_base() as u64,
+            graph_r: 12,
+            graph_build_l: 32,
+            graph_alpha: 1.2,
+            pq_m: 6,
+            pq_c: 32,
+            hot_frac: 0.0,
+            build_seed: 61,
+        };
+        let path = std::env::temp_dir().join(format!("reorder-dep-{}.pxa", std::process::id()));
+        let written = re.write_artifact(&spec, &ds.base, &cb, &path).unwrap();
+        assert_eq!(written.hot_frac, re.n_hot as f64 / ds.n_base() as f64);
+
+        let art = crate::artifact::IndexArtifact::open(&path).unwrap();
+        assert_eq!(art.reorder.as_deref(), Some(re.perm.as_slice()));
+        assert_eq!(art.spec.hot_frac, written.hot_frac);
+        let mapping = art.mapping.expect("deployment artifact carries a mapping");
+        assert_eq!(mapping.n_hot as usize, re.n_hot, "mapping hot set == reorder hot set");
+        assert!(art.gap.is_some(), "deployment artifact carries the gap stream");
+        // Stored row r is the ORIGINAL vector of vertex inv[r] — the
+        // permuted layout the REORDER section describes.
+        for r in [0usize, 1, 57, 399] {
+            assert_eq!(art.base.row(r), ds.base.row(re.inv[r] as usize), "stored row {r}");
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

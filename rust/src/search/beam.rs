@@ -20,9 +20,13 @@ use crate::distance::Metric;
 use crate::gap::GapGraph;
 use crate::graph::Graph;
 use crate::pq::{Adt, PqCodes};
+use crate::storage::{RowSource, VectorStore};
 
 /// Shared context for searches over one index.
 pub struct SearchContext<'a> {
+    /// DRAM-resident vector tier. With `storage: None` (the default and
+    /// every direct literal construction) this is ALL raw vectors —
+    /// today's fully-resident behavior, byte for byte.
     pub base: &'a VectorSet,
     pub metric: Metric,
     pub graph: &'a Graph,
@@ -31,6 +35,10 @@ pub struct SearchContext<'a> {
     /// Gap-encoded adjacency (traffic accounting + error injection); when
     /// absent, index fetches are charged at uniform 32 b/edge.
     pub gap: Option<&'a GapGraph>,
+    /// Tiered vector storage. When `Some`, raw-vector fetches go through
+    /// the store (DRAM hot tier or in-place file reads) instead of
+    /// `base`, which then only mirrors the store's resident tier.
+    pub storage: Option<&'a VectorStore>,
 }
 
 impl<'a> SearchContext<'a> {
@@ -50,7 +58,30 @@ impl<'a> SearchContext<'a> {
 
     #[inline]
     pub fn raw_bits(&self) -> u32 {
-        self.base.dim as u32 * 32
+        self.vec_dim() as u32 * 32
+    }
+
+    /// Total vectors in the index, whichever tier they live in —
+    /// visited-set sizing must cover the COLD tier too, not just the
+    /// resident rows `base` holds.
+    #[inline]
+    pub fn n_vectors(&self) -> usize {
+        self.storage.map_or(self.base.len(), |s| s.len())
+    }
+
+    /// Vector dimensionality (tier-independent).
+    #[inline]
+    pub fn vec_dim(&self) -> usize {
+        self.storage.map_or(self.base.dim, |s| s.dim())
+    }
+
+    /// The raw-vector source the distance providers read from.
+    #[inline]
+    pub fn rows(&self) -> RowSource<'a> {
+        match self.storage {
+            Some(s) => RowSource::Store(s),
+            None => RowSource::Set(self.base),
+        }
     }
 }
 
@@ -182,13 +213,14 @@ pub fn accurate_beam_search_into(
 ) {
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
-    let mut provider = kernel::Accurate::new(ctx, q);
     let QueryScratch {
         visited,
         bloom,
         list,
+        cold,
         ..
     } = scratch;
+    let mut provider = kernel::Accurate::new(ctx, q, cold);
     list.reset(l);
     // Traced runs keep the paper's Bloom filter so the DES models §IV-B;
     // serving paths use the exact epoch bitset (no false-positive drops).
@@ -197,7 +229,7 @@ pub fn accurate_beam_search_into(
         kernel::seed_entry(ctx, &mut provider, bloom, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, bloom, list, l, &mut stats, &mut trace);
     } else {
-        visited.begin(ctx.base.len());
+        visited.begin(ctx.n_vectors());
         kernel::seed_entry(ctx, &mut provider, visited, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
@@ -263,21 +295,22 @@ pub fn pq_beam_search_into(
     if let Some(t) = trace.as_mut() {
         t.push(TraceOp::BuildAdt);
     }
-    let mut provider = kernel::PqAdt::new(ctx, adt, q);
     let QueryScratch {
         visited,
         bloom,
         list,
         rerank: rr,
+        cold,
         ..
     } = scratch;
+    let mut provider = kernel::PqAdt::new(ctx, adt, q, cold);
     list.reset(l);
     if want_trace {
         bloom.clear();
         kernel::seed_entry(ctx, &mut provider, bloom, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, bloom, list, l, &mut stats, &mut trace);
     } else {
-        visited.begin(ctx.base.len());
+        visited.begin(ctx.n_vectors());
         kernel::seed_entry(ctx, &mut provider, visited, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
@@ -395,6 +428,7 @@ mod tests {
             graph: &g,
             codes: None,
             gap: None,
+            storage: None,
         };
         let gt = brute_force(&ds, 10);
         let mut recall = 0.0;
@@ -415,6 +449,7 @@ mod tests {
             graph: &g,
             codes: Some(&codes),
             gap: None,
+            storage: None,
         };
         let gt = brute_force(&ds, 10);
         let mut recall = 0.0;
@@ -440,6 +475,7 @@ mod tests {
             graph: &g,
             codes: Some(&codes),
             gap: None,
+            storage: None,
         };
         let adt = cb.build_adt(ds.queries.row(0));
         let out = pq_beam_search(&ctx, &adt, ds.queries.row(0), 5, 30, 10, true);
@@ -465,6 +501,7 @@ mod tests {
             graph: &g,
             codes: Some(&codes),
             gap: None,
+            storage: None,
         };
         let ctx_gap = SearchContext {
             gap: Some(&gap),

@@ -22,9 +22,9 @@
 use super::beam::{CandidateList, SearchContext};
 use super::bloom::{seahash_diffuse, BloomFilter};
 use super::{SearchStats, Trace, TraceOp};
-use crate::dataset::VectorSet;
 use crate::distance::Metric;
 use crate::pq::{Adt, PqCodes};
+use crate::storage::{ReadBuf, RowSource};
 use std::sync::Mutex;
 
 // ---------------------------------------------------------------------------
@@ -249,18 +249,22 @@ pub trait DistanceProvider {
 }
 
 /// Full-precision distances throughout (the HNSW-like baseline): every
-/// guide distance fetches the raw vector.
-pub struct Accurate<'a> {
-    base: &'a VectorSet,
+/// guide distance fetches the raw vector — through the tiered storage
+/// layer when the context carries one (`rows`), with `buf` as the
+/// pooled cold-read scratch.
+pub struct Accurate<'a, 'c> {
+    rows: RowSource<'a>,
+    buf: &'c mut ReadBuf,
     metric: Metric,
     q: &'a [f32],
     raw_bits: u32,
 }
 
-impl<'a> Accurate<'a> {
-    pub fn new(ctx: &SearchContext<'a>, q: &'a [f32]) -> Accurate<'a> {
+impl<'a, 'c> Accurate<'a, 'c> {
+    pub fn new(ctx: &SearchContext<'a>, q: &'a [f32], buf: &'c mut ReadBuf) -> Accurate<'a, 'c> {
         Accurate {
-            base: ctx.base,
+            rows: ctx.rows(),
+            buf,
             metric: ctx.metric,
             q,
             raw_bits: ctx.raw_bits(),
@@ -268,7 +272,7 @@ impl<'a> Accurate<'a> {
     }
 }
 
-impl DistanceProvider for Accurate<'_> {
+impl DistanceProvider for Accurate<'_, '_> {
     #[inline]
     fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
         self.exact(id, stats, trace)
@@ -284,7 +288,8 @@ impl DistanceProvider for Accurate<'_> {
                 bits: self.raw_bits,
             });
         }
-        self.metric.distance(self.q, self.base.row(id as usize))
+        let v = self.rows.get(id, self.buf, stats);
+        self.metric.distance(self.q, v)
     }
 
     fn guide_compute_op(&self, count: u32) -> TraceOp {
@@ -294,24 +299,33 @@ impl DistanceProvider for Accurate<'_> {
 
 /// PQ distances guide the walk (ADT lookups, §III-B); exact distances
 /// fetch raw vectors without caching (DiskANN-PQ's one-shot final rerank
-/// touches each candidate once, so a cache would buy nothing).
-pub struct PqAdt<'a> {
+/// touches each candidate once, so a cache would buy nothing). Raw
+/// fetches go through the tiered storage layer — this rerank path is
+/// the main cold-read consumer under `Cold`/`Tiered` residency.
+pub struct PqAdt<'a, 'c> {
     adt: &'a Adt,
     codes: &'a PqCodes,
-    base: &'a VectorSet,
+    rows: RowSource<'a>,
+    buf: &'c mut ReadBuf,
     metric: Metric,
     q: &'a [f32],
     pq_bits: u32,
     raw_bits: u32,
 }
 
-impl<'a> PqAdt<'a> {
-    pub fn new(ctx: &SearchContext<'a>, adt: &'a Adt, q: &'a [f32]) -> PqAdt<'a> {
+impl<'a, 'c> PqAdt<'a, 'c> {
+    pub fn new(
+        ctx: &SearchContext<'a>,
+        adt: &'a Adt,
+        q: &'a [f32],
+        buf: &'c mut ReadBuf,
+    ) -> PqAdt<'a, 'c> {
         let codes = ctx.codes.expect("PQ-guided search requires ctx.codes");
         PqAdt {
             adt,
             codes,
-            base: ctx.base,
+            rows: ctx.rows(),
+            buf,
             metric: ctx.metric,
             q,
             pq_bits: ctx.pq_bits(),
@@ -320,7 +334,7 @@ impl<'a> PqAdt<'a> {
     }
 }
 
-impl DistanceProvider for PqAdt<'_> {
+impl DistanceProvider for PqAdt<'_, '_> {
     #[inline]
     fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
         stats.pq_dists += 1;
@@ -344,7 +358,8 @@ impl DistanceProvider for PqAdt<'_> {
                 bits: self.raw_bits,
             });
         }
-        self.metric.distance(self.q, self.base.row(id as usize))
+        let v = self.rows.get(id, self.buf, stats);
+        self.metric.distance(self.q, v)
     }
 
     fn guide_compute_op(&self, count: u32) -> TraceOp {
@@ -353,19 +368,21 @@ impl DistanceProvider for PqAdt<'_> {
 }
 
 /// Proxima's provider: PQ guide distances plus an exact-distance cache so
-/// iteration reranks and the final β-rerank never recompute a vertex.
-pub struct Hybrid<'a, 'c> {
-    pq: PqAdt<'a>,
+/// iteration reranks and the final β-rerank never recompute a vertex —
+/// under cold residency the cache also means each vertex's raw vector is
+/// read from storage at most once per query.
+pub struct Hybrid<'a, 'b, 'c> {
+    pq: PqAdt<'a, 'b>,
     cache: &'c mut ExactCache,
 }
 
-impl<'a, 'c> Hybrid<'a, 'c> {
-    pub fn new(pq: PqAdt<'a>, cache: &'c mut ExactCache) -> Hybrid<'a, 'c> {
+impl<'a, 'b, 'c> Hybrid<'a, 'b, 'c> {
+    pub fn new(pq: PqAdt<'a, 'b>, cache: &'c mut ExactCache) -> Hybrid<'a, 'b, 'c> {
         Hybrid { pq, cache }
     }
 }
 
-impl DistanceProvider for Hybrid<'_, '_> {
+impl DistanceProvider for Hybrid<'_, '_, '_> {
     #[inline]
     fn guide(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32 {
         self.pq.guide(id, stats, trace)
@@ -475,6 +492,10 @@ pub struct QueryScratch {
     pub prev_topk: Vec<u32>,
     /// Current iteration's top-k.
     pub topk: Vec<u32>,
+    /// Pooled cold-tier read buffer (one raw vector row): sized on the
+    /// first cold fetch, reused for the scratch lifetime, untouched by
+    /// fully-resident serving.
+    pub cold: ReadBuf,
 }
 
 impl QueryScratch {
@@ -487,6 +508,7 @@ impl QueryScratch {
             rerank: Vec::new(),
             prev_topk: Vec::new(),
             topk: Vec::new(),
+            cold: ReadBuf::new(),
         }
     }
 }

@@ -57,6 +57,14 @@ pub struct SearchStats {
     /// picked it up, in microseconds (0 when answered inline). Summed
     /// over the batch in aggregated stats.
     pub queue_wait_us: u64,
+    /// Raw-vector fetches served from the COLD storage tier (reads
+    /// against the artifact file; 0 under fully-resident serving and
+    /// for tiered hot hits). This is the measured per-query
+    /// storage-access count the NAND model replays
+    /// (`storage::replay`).
+    pub cold_reads: usize,
+    /// Bytes those cold fetches read from the file.
+    pub cold_bytes: u64,
 }
 
 impl SearchStats {
@@ -76,6 +84,8 @@ impl SearchStats {
         self.early_terminated |= o.early_terminated;
         self.adt_builds += o.adt_builds;
         self.queue_wait_us += o.queue_wait_us;
+        self.cold_reads += o.cold_reads;
+        self.cold_bytes += o.cold_bytes;
     }
 }
 
@@ -164,6 +174,8 @@ mod tests {
             early_terminated: true,
             adt_builds: 1,
             queue_wait_us: 40,
+            cold_reads: 3,
+            cold_bytes: 192,
         };
         a.add(&b);
         a.add(&b);
@@ -172,6 +184,8 @@ mod tests {
         assert!(a.early_terminated);
         assert_eq!(a.adt_builds, 2);
         assert_eq!(a.queue_wait_us, 80);
+        assert_eq!(a.cold_reads, 6);
+        assert_eq!(a.cold_bytes, 384);
     }
 
     #[test]

@@ -105,6 +105,7 @@ pub fn proxima_search_into(
         rerank,
         prev_topk,
         topk,
+        cold,
     } = scratch;
     list.reset(params.l);
     exact_cache.begin(params.l);
@@ -112,7 +113,7 @@ pub fn proxima_search_into(
     prev_topk.clear();
     topk.clear();
 
-    let pq = kernel::PqAdt::new(ctx, adt, q);
+    let pq = kernel::PqAdt::new(ctx, adt, q, cold);
     let mut provider = kernel::Hybrid::new(pq, exact_cache);
 
     // Traced runs keep the paper's Bloom filter (§IV-B fidelity for the
@@ -133,7 +134,7 @@ pub fn proxima_search_into(
             &mut trace,
         );
     } else {
-        visited.begin(ctx.base.len());
+        visited.begin(ctx.n_vectors());
         proxima_core(
             ctx,
             &mut provider,
@@ -316,6 +317,7 @@ mod tests {
             graph: &f.g,
             codes: Some(&f.codes),
             gap: None,
+            storage: None,
         }
     }
 

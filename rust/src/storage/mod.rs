@@ -1,0 +1,500 @@
+//! Tiered vector storage (paper §IV memory model): where raw base
+//! vectors live while an index serves.
+//!
+//! Proxima's premise is that full-precision vectors stay in dense
+//! storage — only traversal metadata (graph + PQ codes) and a small hot
+//! fraction of vectors occupy fast memory. This module makes that split
+//! a first-class serving concept: a [`VectorStore`] abstracts how the
+//! search kernels' `DistanceProvider`s obtain raw vectors, with three
+//! backends:
+//!
+//! * [`Residency::Resident`] — today's owned DRAM buffers (the default;
+//!   behaviorally identical to the pre-storage stack);
+//! * [`Residency::Cold`] — vectors are read **in place** from the opened
+//!   `.pxa` artifact via positioned reads (`FileExt::read_exact_at`)
+//!   against the artifact TOC offsets. The OS page cache is the cold
+//!   tier — no new dependencies, no user-space cache to mistune;
+//! * [`Residency::Tiered`] — the `hot_frac`-fraction of vectors (ids
+//!   `0..n_hot` after the §IV-E REORDER permutation, matching
+//!   [`DataMapping::is_hot`](crate::engine::mapping::DataMapping::is_hot))
+//!   is pinned in DRAM; cold misses fall through to the file.
+//!
+//! Reads go through a pooled per-query [`ReadBuf`] (one slot in
+//! `QueryScratch`), so the steady-state cold-read path performs zero
+//! heap allocations. Every cold fetch is metered into
+//! [`SearchStats::cold_reads`]/[`SearchStats::cold_bytes`] — the
+//! measured storage-access stream the NAND engine model can replay
+//! ([`replay`]) instead of a synthetic trace.
+//!
+//! # Failure contract
+//!
+//! All *structural* failures (truncated BASE section, checksum
+//! mismatch, unnormalized angular rows) surface as typed
+//! `ArtifactError`s at **open** time — the cold open streams the BASE
+//! payload once, CRC-verifying it without materializing it. A cold read
+//! that fails **after** open (the file shrank or the device errored
+//! underneath a serving process) panics the query task; the batch
+//! pipeline's per-query panic containment converts that into an
+//! `ApiError::Internal` for that query alone.
+
+pub mod replay;
+
+use crate::dataset::VectorSet;
+use crate::search::SearchStats;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+
+/// Which tier raw vectors are served from — the `--residency` knob of
+/// `serve`/`search` and the `residency` field of the wire `reload` op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Residency {
+    /// All vectors in owned DRAM buffers (the default).
+    #[default]
+    Resident,
+    /// All vectors served from the artifact file (OS page cache behind).
+    Cold,
+    /// `hot_frac` of vectors pinned in DRAM, the rest from the file.
+    Tiered,
+}
+
+impl Residency {
+    /// Stable wire/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Residency::Resident => "resident",
+            Residency::Cold => "cold",
+            Residency::Tiered => "tiered",
+        }
+    }
+
+    /// Parse a wire/CLI name.
+    pub fn parse(s: &str) -> Option<Residency> {
+        match s {
+            "resident" | "dram" => Some(Residency::Resident),
+            "cold" | "file" => Some(Residency::Cold),
+            "tiered" | "hot" => Some(Residency::Tiered),
+            _ => None,
+        }
+    }
+}
+
+/// How `SearchService::open_with` materializes an artifact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpenOptions {
+    pub residency: Residency,
+}
+
+impl OpenOptions {
+    pub fn with_residency(residency: Residency) -> OpenOptions {
+        OpenOptions { residency }
+    }
+}
+
+/// Pooled per-query read state for the cold tier: a byte buffer for the
+/// positioned read plus the decoded f32 row. Lives in `QueryScratch`,
+/// so once warmed (first cold read sizes it to one row) the cold-read
+/// path allocates nothing (`tests/zero_alloc.rs` proves it).
+#[derive(Default)]
+pub struct ReadBuf {
+    bytes: Vec<u8>,
+    vals: Vec<f32>,
+}
+
+impl ReadBuf {
+    pub fn new() -> ReadBuf {
+        ReadBuf::default()
+    }
+
+    #[inline]
+    fn ensure(&mut self, dim: usize) {
+        if self.vals.len() < dim {
+            self.bytes.resize(dim * 4, 0);
+            self.vals.resize(dim, 0.0);
+        }
+    }
+}
+
+/// The cold backend: raw vectors read in place from the artifact file.
+///
+/// Holds the opened file plus the absolute offset of BASE row 0's first
+/// f32 (from the artifact TOC) — a vector fetch is ONE positioned read
+/// of `dim * 4` bytes, served by the OS page cache after first touch.
+#[derive(Debug)]
+pub struct ColdVectors {
+    file: File,
+    /// Absolute file offset of row 0's first f32.
+    data_offset: u64,
+    n: usize,
+    dim: usize,
+    path: PathBuf,
+    /// Dim-carrying empty set, so resident-tier views of a fully-cold
+    /// store still report the right vector shape.
+    empty: VectorSet,
+}
+
+impl ColdVectors {
+    /// Wrap an already-validated artifact file (the cold open verified
+    /// the BASE payload's CRC and shape before handing the file here).
+    pub fn new(file: File, data_offset: u64, n: usize, dim: usize, path: &Path) -> ColdVectors {
+        assert!(dim > 0, "cold store requires dim >= 1");
+        ColdVectors {
+            file,
+            data_offset,
+            n,
+            dim,
+            path: path.to_path_buf(),
+            empty: VectorSet::zeros(0, dim),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The artifact file this store reads from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Read row `id` into `buf` and return the decoded floats.
+    ///
+    /// Panics on an I/O failure (see the module docs: structural
+    /// problems were rejected at open; a post-open failure means the
+    /// file changed underneath the server, and the per-query panic
+    /// containment answers that query as `internal`).
+    #[inline]
+    pub fn read_row<'b>(&self, id: u32, buf: &'b mut ReadBuf) -> &'b [f32] {
+        assert!((id as usize) < self.n, "vector id {id} out of range {}", self.n);
+        buf.ensure(self.dim);
+        let nbytes = self.dim * 4;
+        let off = self.data_offset + id as u64 * nbytes as u64;
+        read_exact_at(&self.file, &mut buf.bytes[..nbytes], off).unwrap_or_else(|e| {
+            panic!(
+                "cold read of vector {id} from {} failed: {e}",
+                self.path.display()
+            )
+        });
+        for (v, ch) in buf.vals[..self.dim]
+            .iter_mut()
+            .zip(buf.bytes[..nbytes].chunks_exact(4))
+        {
+            *v = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        &buf.vals[..self.dim]
+    }
+
+    /// Read the whole cold region back into an owned [`VectorSet`] —
+    /// the offline path (`save` of a cold-opened service). I/O failures
+    /// are typed here, not panics: nothing is on a query hot path.
+    pub fn read_all(&self) -> std::io::Result<VectorSet> {
+        let nbytes = self.n * self.dim * 4;
+        let mut bytes = vec![0u8; nbytes];
+        read_exact_at(&self.file, &mut bytes, self.data_offset)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(VectorSet {
+            dim: self.dim,
+            data,
+        })
+    }
+}
+
+/// Positioned read without moving a shared cursor, so concurrent query
+/// workers can read the same file handle without locking. Shared with
+/// the artifact codec (header reads, section reads, streaming CRC).
+#[cfg(unix)]
+pub(crate) fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(not(unix))]
+pub(crate) fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    // Windows' seek_read is also positional; other targets don't reach
+    // the cold path (open_with rejects them before a store exists).
+    #[cfg(windows)]
+    {
+        use std::os::windows::fs::FileExt;
+        let mut done = 0;
+        while done < buf.len() {
+            let n = file.seek_read(&mut buf[done..], off + done as u64)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "short read",
+                ));
+            }
+            done += n;
+        }
+        Ok(())
+    }
+    #[cfg(not(windows))]
+    {
+        let _ = (file, buf, off);
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "positioned reads unsupported on this target",
+        ))
+    }
+}
+
+/// Where an index's raw vectors live: the storage abstraction every
+/// `DistanceProvider` reads through.
+#[derive(Debug)]
+pub enum VectorStore {
+    /// All rows in one owned DRAM buffer (the pre-storage behavior).
+    Resident(VectorSet),
+    /// All rows on disk; OS page cache as the cold tier.
+    Cold(ColdVectors),
+    /// Rows `0..hot.len()` pinned in DRAM (the §IV-E hot prefix), the
+    /// rest on disk.
+    Tiered { hot: VectorSet, cold: ColdVectors },
+}
+
+impl VectorStore {
+    pub fn residency(&self) -> Residency {
+        match self {
+            VectorStore::Resident(_) => Residency::Resident,
+            VectorStore::Cold(_) => Residency::Cold,
+            VectorStore::Tiered { .. } => Residency::Tiered,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            VectorStore::Resident(s) => s.len(),
+            VectorStore::Cold(c) => c.len(),
+            VectorStore::Tiered { cold, .. } => cold.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            VectorStore::Resident(s) => s.dim,
+            VectorStore::Cold(c) => c.dim(),
+            VectorStore::Tiered { cold, .. } => cold.dim(),
+        }
+    }
+
+    /// Rows pinned in DRAM: everything for `Resident`, the hot prefix
+    /// for `Tiered`, none for `Cold`.
+    pub fn n_hot(&self) -> usize {
+        match self {
+            VectorStore::Resident(s) => s.len(),
+            VectorStore::Cold(_) => 0,
+            VectorStore::Tiered { hot, .. } => hot.len(),
+        }
+    }
+
+    /// DRAM bytes pinned by this store's vector payloads — the number
+    /// the wire `status` op reports as `resident_bytes`. Under `Tiered`
+    /// it scales with `hot_frac`, not `n_base`.
+    pub fn resident_bytes(&self) -> u64 {
+        match self {
+            VectorStore::Resident(s) => s.data.len() as u64 * 4,
+            VectorStore::Cold(_) => 0,
+            VectorStore::Tiered { hot, .. } => hot.data.len() as u64 * 4,
+        }
+    }
+
+    /// The DRAM-resident tier as a `VectorSet` view: the full set for
+    /// `Resident`, the hot prefix for `Tiered`, a dim-carrying empty
+    /// set for `Cold`.
+    pub fn resident_set(&self) -> &VectorSet {
+        match self {
+            VectorStore::Resident(s) => s,
+            VectorStore::Cold(c) => &c.empty,
+            VectorStore::Tiered { hot, .. } => hot,
+        }
+    }
+
+    /// The full vector set, when fully resident.
+    pub fn as_resident(&self) -> Option<&VectorSet> {
+        match self {
+            VectorStore::Resident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Fetch row `id`, charging cold-tier traffic to `stats`. Resident
+    /// rows (including tiered hot hits) are free borrows; cold misses
+    /// read through `buf`.
+    #[inline]
+    pub fn row<'r>(&'r self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32] {
+        match self {
+            VectorStore::Resident(s) => s.row(id as usize),
+            VectorStore::Tiered { hot, cold } => {
+                if (id as usize) < hot.len() {
+                    hot.row(id as usize)
+                } else {
+                    stats.cold_reads += 1;
+                    stats.cold_bytes += cold.dim() as u64 * 4;
+                    cold.read_row(id, buf)
+                }
+            }
+            VectorStore::Cold(c) => {
+                stats.cold_reads += 1;
+                stats.cold_bytes += c.dim() as u64 * 4;
+                c.read_row(id, buf)
+            }
+        }
+    }
+
+    /// Materialize the FULL vector set in DRAM (the offline `save`
+    /// path of a cold-opened service).
+    pub fn materialize(&self) -> std::io::Result<VectorSet> {
+        match self {
+            VectorStore::Resident(s) => Ok(s.clone()),
+            VectorStore::Cold(c) => c.read_all(),
+            VectorStore::Tiered { cold, .. } => cold.read_all(),
+        }
+    }
+}
+
+/// The raw-vector source a `DistanceProvider` reads from: a borrowed
+/// resident `VectorSet` (the default, zero-overhead path every direct
+/// `SearchContext { base, .. }` construction gets) or a tiered store.
+#[derive(Clone, Copy)]
+pub enum RowSource<'a> {
+    Set(&'a VectorSet),
+    Store(&'a VectorStore),
+}
+
+impl<'a> RowSource<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            RowSource::Set(s) => s.len(),
+            RowSource::Store(s) => s.len(),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        match self {
+            RowSource::Set(s) => s.dim,
+            RowSource::Store(s) => s.dim(),
+        }
+    }
+
+    /// Fetch row `id` (see [`VectorStore::row`] for the metering and
+    /// failure contract of the store-backed arm).
+    #[inline]
+    pub fn get<'r>(&self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32]
+    where
+        'a: 'r,
+    {
+        match self {
+            RowSource::Set(s) => s.row(id as usize),
+            RowSource::Store(s) => s.row(id, buf, stats),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn cold_fixture(n: usize, dim: usize) -> (ColdVectors, VectorSet, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("proxima-storage-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("cold-{n}x{dim}.bin"));
+        let data: Vec<f32> = (0..n * dim).map(|i| i as f32 * 0.5).collect();
+        let set = VectorSet::new(dim, data.clone());
+        let mut f = std::fs::File::create(&path).unwrap();
+        // A fake header before the vector payload, to prove offsets are
+        // honored (the real artifact has magic/spec/TOC there).
+        f.write_all(&[0xAA; 32]).unwrap();
+        for x in &data {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        f.sync_all().unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        (ColdVectors::new(file, 32, n, dim, &path), set, path)
+    }
+
+    #[test]
+    fn residency_names_roundtrip() {
+        for r in [Residency::Resident, Residency::Cold, Residency::Tiered] {
+            assert_eq!(Residency::parse(r.name()), Some(r));
+        }
+        assert_eq!(Residency::parse("mmap"), None);
+        assert_eq!(Residency::default(), Residency::Resident);
+    }
+
+    #[test]
+    fn cold_rows_match_resident_bitwise() {
+        let (cold, set, path) = cold_fixture(20, 7);
+        let mut buf = ReadBuf::new();
+        for id in [0u32, 1, 9, 19] {
+            let got = cold.read_row(id, &mut buf);
+            let want = set.row(id as usize);
+            assert!(
+                got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "row {id} differs"
+            );
+        }
+        let all = cold.read_all().unwrap();
+        assert_eq!(all.data, set.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_meters_cold_traffic_and_serves_hot_hits_free() {
+        let (cold, set, path) = cold_fixture(10, 4);
+        let hot = VectorSet::new(4, set.data[..3 * 4].to_vec());
+        let store = VectorStore::Tiered { hot, cold };
+        assert_eq!(store.residency(), Residency::Tiered);
+        assert_eq!(store.len(), 10);
+        assert_eq!(store.n_hot(), 3);
+        assert_eq!(store.resident_bytes(), 3 * 4 * 4);
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        // Hot hit: no cold traffic.
+        assert_eq!(store.row(2, &mut buf, &mut stats), set.row(2));
+        assert_eq!(stats.cold_reads, 0);
+        // Cold miss: one read of dim*4 bytes.
+        assert_eq!(store.row(7, &mut buf, &mut stats), set.row(7));
+        assert_eq!(stats.cold_reads, 1);
+        assert_eq!(stats.cold_bytes, 16);
+        // Materialize returns the full set.
+        assert_eq!(store.materialize().unwrap().data, set.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "cold read")]
+    fn short_read_after_open_panics_for_containment() {
+        let (cold, _set, path) = cold_fixture(10, 4);
+        // Shrink the file underneath the open handle: the next cold
+        // read must panic (the serving pipeline contains it per query).
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(32)
+            .unwrap();
+        let mut buf = ReadBuf::new();
+        let _ = cold.read_row(5, &mut buf);
+    }
+}

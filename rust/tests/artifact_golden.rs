@@ -14,6 +14,7 @@ use proxima::artifact::IndexArtifact;
 use proxima::config::SearchParams;
 use proxima::coordinator::SearchService;
 use proxima::distance::Metric;
+use proxima::storage::{OpenOptions, Residency};
 use std::path::PathBuf;
 
 fn golden_path() -> PathBuf {
@@ -89,7 +90,7 @@ fn golden_v1_artifact_still_serves() {
     .expect("the golden artifact must open as a serveable index");
     assert_eq!(svc.name, "golden-synth");
     // Every mode answers real queries off the fixture's own vectors.
-    let q = svc.base.row(0).to_vec();
+    let q = svc.resident_base().unwrap().row(0).to_vec();
     for mode in [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid] {
         let req = QueryRequest::single(&q, 4).with_options(QueryOptions {
             mode,
@@ -119,4 +120,61 @@ fn golden_v1_artifact_still_serves() {
         Some(64),
         "the opened service must carry the artifact's permutation"
     );
+}
+
+/// Format-stability for the STORAGE backends: the committed v1 fixture
+/// must open via the `Cold` and `Tiered` residencies (streaming BASE
+/// validation, in-place reads against the v1 TOC offsets) and answer
+/// byte-for-byte like a resident open. Part of the golden CI gate.
+#[test]
+fn golden_v1_artifact_opens_cold_and_tiered_identically() {
+    let params = SearchParams {
+        l: 16,
+        k: 4,
+        ..Default::default()
+    };
+    let resident = SearchService::open(&golden_path(), params, false).unwrap();
+    let q = resident.resident_base().unwrap().row(0).to_vec();
+    for residency in [Residency::Cold, Residency::Tiered] {
+        let svc = SearchService::open_with(
+            &golden_path(),
+            params,
+            false,
+            &OpenOptions::with_residency(residency),
+        )
+        .unwrap_or_else(|e| panic!("golden fixture must open {}: {e}", residency.name()));
+        assert_eq!(svc.storage.residency(), residency);
+        assert_eq!(svc.n_base(), 64);
+        // hot_frac = 0.03125 over 64 vectors → a 2-row DRAM hot tier.
+        match residency {
+            Residency::Tiered => {
+                assert_eq!(svc.storage.n_hot(), 2);
+                assert_eq!(svc.storage.resident_bytes(), 2 * 8 * 4);
+            }
+            _ => assert_eq!(svc.storage.resident_bytes(), 0),
+        }
+        for mode in [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid] {
+            let req = QueryRequest::single(&q, 4).with_options(QueryOptions {
+                mode,
+                want_stats: true,
+                ..Default::default()
+            });
+            let a = resident.query(&req).unwrap();
+            let b = svc.query(&req).unwrap();
+            assert_eq!(
+                a.results[0], b.results[0],
+                "{mode:?} under {} must match resident",
+                residency.name()
+            );
+            // The fixture's reorder contract holds in every tier.
+            assert_eq!(b.results[0].ids[0], 63);
+            // Every mode reranks with exact distances, so raw vectors
+            // were fetched — from the file in these residencies.
+            assert!(
+                b.stats.as_ref().unwrap().cold_reads > 0,
+                "{mode:?} under {} must read the cold tier",
+                residency.name()
+            );
+        }
+    }
 }

@@ -69,14 +69,16 @@ fn saved_and_opened_index_answers_identically_in_every_mode() {
         other => panic!("opened service has provenance {other:?}"),
     }
 
-    // Bitwise-equal stored structures.
-    assert_eq!(opened.base.dim, built.base.dim);
+    // Bitwise-equal stored structures (default opens are fully
+    // resident, so the whole base set is in DRAM to compare).
+    let built_base = built.resident_base().expect("built services are resident");
+    let opened_base = opened.resident_base().expect("default open is resident");
+    assert_eq!(opened_base.dim, built_base.dim);
     assert!(
-        opened
-            .base
+        opened_base
             .data
             .iter()
-            .zip(&built.base.data)
+            .zip(&built_base.data)
             .all(|(a, b)| a.to_bits() == b.to_bits()),
         "base vectors must round-trip bitwise"
     );
@@ -396,16 +398,16 @@ fn wire_reload_hot_swaps_the_served_index() {
 /// A REORDERED artifact (graph/codes/base permuted into the §IV-E NAND
 /// layout, REORDER section carrying `perm[old] = new`) must answer in
 /// the ORIGINAL id space — the permutation is a storage-layout detail,
-/// invisible to clients.
+/// invisible to clients. Assembled by the first-class deployment
+/// builder (`ReorderedIndex::write_artifact`), not by hand.
 #[test]
 fn reordered_artifacts_answer_in_original_id_space() {
-    use proxima::artifact::ArtifactParts;
-    use proxima::dataset::VectorSet;
     use proxima::reorder::{ReorderedIndex, VisitProfile};
     let dir = tmpdir();
     let (ds, svc) = service(41);
+    let base = svc.resident_base().expect("built services are resident");
     let profile = VisitProfile::measure(
-        &svc.base,
+        base,
         &svc.graph,
         &svc.codebook,
         &svc.codes,
@@ -414,29 +416,11 @@ fn reordered_artifacts_answer_in_original_id_space() {
         41,
     );
     let re = ReorderedIndex::build(&svc.graph, &svc.codes, &profile, 0.05);
-    // Permute the base rows into the stored (new) space, as the layout
-    // stage would.
-    let mut base2 = VectorSet::zeros(ds.n_base(), ds.dim());
-    for old in 0..ds.n_base() {
-        base2
-            .row_mut(re.perm[old] as usize)
-            .copy_from_slice(svc.base.row(old));
-    }
-    let mut spec = svc.spec.clone();
-    spec.hot_frac = re.n_hot as f64 / ds.n_base() as f64;
     let path = dir.join("reordered.pxa");
-    ArtifactParts {
-        spec: &spec,
-        base: &base2,
-        graph: &re.graph,
-        gap: None,
-        codebook: &svc.codebook,
-        codes: &re.codes,
-        reorder: Some(re.perm.as_slice()),
-        mapping: None,
-    }
-    .write(&path)
-    .unwrap();
+    let written = re
+        .write_artifact(&svc.spec, base, &svc.codebook, &path)
+        .unwrap();
+    assert_eq!(written.hot_frac, re.n_hot as f64 / ds.n_base() as f64);
 
     let opened = SearchService::open(&path, svc.params, false).unwrap();
     assert_eq!(opened.reorder.as_ref().map(|p| p.len()), Some(ds.n_base()));

@@ -59,6 +59,7 @@ fn ctx(f: &Fixture) -> SearchContext<'_> {
         graph: &f.g,
         codes: Some(&f.codes),
         gap: None,
+        storage: None,
     }
 }
 

@@ -1,0 +1,347 @@
+//! Tiered-storage acceptance tests (ISSUE 5): opening one artifact
+//! `Resident`, `Cold` and `Tiered` must serve all three kernel modes
+//! with bitwise-identical `SearchOutput`s; `Tiered` DRAM must scale
+//! with `hot_frac`, not `n_base`; and every storage failure — truncated
+//! BASE section at open, short reads after open — must surface as a
+//! typed error, never a torn result.
+
+use proxima::api::{ApiErrorCode, QueryOptions, QueryRequest, SearchMode};
+use proxima::artifact::{ArtifactErrorKind, ArtifactParts};
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::SearchService;
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::Dataset;
+use proxima::distance::Metric;
+use proxima::reorder::{ReorderedIndex, VisitProfile};
+use proxima::storage::{OpenOptions, Residency};
+use std::path::PathBuf;
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("proxima-storage-parity-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn service(seed: u64) -> (Dataset, SearchService) {
+    let ds = tiny_uniform(400, 12, Metric::L2, seed);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 6,
+        },
+        SearchParams {
+            l: 80,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    );
+    (ds, svc)
+}
+
+const MODES: [SearchMode; 3] = [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid];
+
+fn open_each(path: &PathBuf, params: SearchParams) -> Vec<SearchService> {
+    [Residency::Resident, Residency::Cold, Residency::Tiered]
+        .into_iter()
+        .map(|r| {
+            SearchService::open_with(path, params, false, &OpenOptions::with_residency(r))
+                .unwrap_or_else(|e| panic!("open {} failed: {e}", r.name()))
+        })
+        .collect()
+}
+
+/// Acceptance: the same artifact, opened under every residency, answers
+/// every mode bitwise-identically — the storage tier is invisible to
+/// results; only the metered cold traffic differs.
+#[test]
+fn all_residencies_answer_bitwise_identically_in_every_mode() {
+    let (ds, built) = service(7);
+    let path = tmpdir().join("parity.pxa");
+    built.save(&path).unwrap();
+    let opened = open_each(&path, built.params);
+
+    for mode in MODES {
+        let opts = QueryOptions {
+            mode,
+            want_stats: true,
+            ..Default::default()
+        };
+        for qi in 0..ds.n_queries() {
+            let req = QueryRequest::single(ds.queries.row(qi), 10).with_options(opts);
+            let resident = opened[0].query(&req).unwrap();
+            for svc in &opened[1..] {
+                let got = svc.query(&req).unwrap();
+                let name = svc.storage.residency().name();
+                assert_eq!(
+                    got.results[0].ids, resident.results[0].ids,
+                    "{mode:?} query {qi}: {name} ids diverge"
+                );
+                let a: Vec<u32> = resident.results[0].dists.iter().map(|d| d.to_bits()).collect();
+                let b: Vec<u32> = got.results[0].dists.iter().map(|d| d.to_bits()).collect();
+                assert_eq!(a, b, "{mode:?} query {qi}: {name} dists not bitwise equal");
+                // Every mode ends in exact-distance work, which under
+                // cold residency is file reads — metered per query.
+                let stats = got.stats.as_ref().unwrap();
+                assert!(
+                    stats.cold_reads > 0,
+                    "{mode:?} query {qi}: {name} reported no cold reads"
+                );
+                assert_eq!(stats.cold_bytes, stats.cold_reads as u64 * ds.dim() as u64 * 4);
+            }
+            assert_eq!(
+                resident.stats.as_ref().unwrap().cold_reads,
+                0,
+                "resident serving must never touch the cold tier"
+            );
+        }
+    }
+    // This spec has hot_frac = 0 (no reordering), so Tiered degrades to
+    // an empty hot tier: zero vector bytes resident, like Cold.
+    assert_eq!(opened[0].storage.resident_bytes(), 400 * 12 * 4);
+    assert_eq!(opened[1].storage.resident_bytes(), 0);
+    assert_eq!(opened[2].storage.resident_bytes(), 0);
+    assert_eq!(opened[2].storage.n_hot(), 0);
+    // Epoch-level counters accumulated on the cold services.
+    use std::sync::atomic::Ordering;
+    assert!(opened[1].stats.cold_reads.load(Ordering::Relaxed) > 0);
+    assert_eq!(opened[0].stats.cold_reads.load(Ordering::Relaxed), 0);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Acceptance: on a REORDER-bearing deployment artifact, `Tiered` pins
+/// exactly the `hot_frac` prefix — serving DRAM scales with `hot_frac`,
+/// not `n_base` — while answers (in ORIGINAL id space) stay identical
+/// across residencies, and the hot tier demonstrably absorbs reads.
+#[test]
+fn tiered_residency_pins_hot_frac_not_n_base_on_reordered_artifacts() {
+    let (ds, svc) = service(41);
+    let base = svc.resident_base().unwrap();
+    let profile = VisitProfile::measure(
+        base,
+        &svc.graph,
+        &svc.codebook,
+        &svc.codes,
+        &svc.params,
+        20,
+        41,
+    );
+    let re = ReorderedIndex::build(&svc.graph, &svc.codes, &profile, 0.1);
+    let path = tmpdir().join("reordered-parity.pxa");
+    re.write_artifact(&svc.spec, base, &svc.codebook, &path).unwrap();
+
+    let opened = open_each(&path, svc.params);
+    assert_eq!(opened[2].storage.n_hot(), re.n_hot);
+    assert_eq!(
+        opened[2].storage.resident_bytes(),
+        re.n_hot as u64 * ds.dim() as u64 * 4,
+        "tiered DRAM must be hot_frac-sized"
+    );
+    assert_eq!(
+        opened[0].storage.resident_bytes(),
+        ds.n_base() as u64 * ds.dim() as u64 * 4,
+        "resident DRAM scales with n_base"
+    );
+    assert!(opened[2].storage.resident_bytes() < opened[0].storage.resident_bytes() / 5);
+
+    let mut cold_reads = [0u64; 3];
+    for mode in MODES {
+        let opts = QueryOptions {
+            mode,
+            want_stats: true,
+            ..Default::default()
+        };
+        for qi in 0..ds.n_queries() {
+            let req = QueryRequest::single(ds.queries.row(qi), 10).with_options(opts);
+            let resident = opened[0].query(&req).unwrap();
+            for (s, svc) in opened.iter().enumerate() {
+                let got = svc.query(&req).unwrap();
+                assert_eq!(
+                    got.results[0].ids,
+                    resident.results[0].ids,
+                    "{mode:?} query {qi}: {} ids diverge on the reordered artifact",
+                    svc.storage.residency().name()
+                );
+                assert_eq!(got.results[0].dists, resident.results[0].dists);
+                cold_reads[s] += got.stats.as_ref().unwrap().cold_reads as u64;
+            }
+        }
+    }
+    assert_eq!(cold_reads[0], 0);
+    assert!(cold_reads[1] > 0);
+    // The frequency-ordered hot prefix absorbs fetches: tiered serving
+    // must do strictly fewer cold reads than fully-cold serving.
+    assert!(
+        cold_reads[2] < cold_reads[1],
+        "tiered {} !< cold {}",
+        cold_reads[2],
+        cold_reads[1]
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+/// Storage failure paths are typed: a BASE section truncated or
+/// corrupted on disk is rejected at cold open (the streaming validation
+/// pass), and a file shrinking AFTER a cold open turns the affected
+/// queries into per-query `internal` errors — not torn results, not a
+/// dead process.
+#[test]
+fn truncated_and_corrupt_base_sections_are_typed_errors() {
+    let dir = tmpdir();
+    let (ds, svc) = service(13);
+    let path = dir.join("failures.pxa");
+    svc.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Truncation inside the BASE payload (BASE is the first section, so
+    // any cut below ~19 KB lands in it): typed, never a panic.
+    for frac in [0.3, 0.6, 0.95] {
+        let cut = (good.len() as f64 * frac) as usize;
+        let t = dir.join("trunc.pxa");
+        std::fs::write(&t, &good[..cut]).unwrap();
+        let e = SearchService::open_with(
+            &t,
+            svc.params,
+            false,
+            &OpenOptions::with_residency(Residency::Cold),
+        )
+        .unwrap_err();
+        assert!(
+            matches!(e.kind, ArtifactErrorKind::Truncated | ArtifactErrorKind::Corrupt),
+            "cut at {cut}: {e}"
+        );
+    }
+
+    // A flipped byte inside the BASE rows is caught by the streaming
+    // CRC pass even though the payload is never materialized.
+    let mut flipped = good.clone();
+    flipped[1000] ^= 0x20;
+    let f = dir.join("flip.pxa");
+    std::fs::write(&f, &flipped).unwrap();
+    let e = SearchService::open_with(
+        &f,
+        svc.params,
+        false,
+        &OpenOptions::with_residency(Residency::Cold),
+    )
+    .unwrap_err();
+    assert_eq!(e.kind, ArtifactErrorKind::Corrupt, "{e}");
+
+    // Post-open short read: open cold, then shrink the file underneath
+    // the serving handle. The affected query is answered as a typed
+    // per-query `internal` error through the query API.
+    let cold = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions::with_residency(Residency::Cold),
+    )
+    .unwrap();
+    let ok = cold
+        .query(&QueryRequest::single(ds.queries.row(0), 5))
+        .unwrap();
+    assert_eq!(ok.results[0].ids.len(), 5);
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&path)
+        .unwrap()
+        .set_len(64)
+        .unwrap();
+    let resp = cold
+        .query(&QueryRequest::single(ds.queries.row(0), 5))
+        .unwrap();
+    let e = resp.error_for(0).expect("short read must fail the query");
+    assert_eq!(e.code, ApiErrorCode::Internal);
+    assert!(resp.results[0].ids.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+/// The cold open performs the SAME angular unit-norm validation the
+/// resident open does — streamed, without materializing the payload.
+#[test]
+fn cold_open_rejects_unnormalized_angular_bases() {
+    let dir = tmpdir();
+    let ds = tiny_uniform(80, 6, Metric::Angular, 3);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 6,
+            build_l: 12,
+            alpha: 1.2,
+            seed: 3,
+        },
+        &PqParams {
+            m: 3,
+            c: 8,
+            train_sample: 80,
+            kmeans_iters: 4,
+        },
+        SearchParams::default(),
+        false,
+    );
+    let mut bad_base = svc.resident_base().unwrap().clone();
+    for x in bad_base.data.iter_mut() {
+        *x *= 2.0;
+    }
+    let path = dir.join("bad-angular.pxa");
+    ArtifactParts {
+        spec: &svc.spec,
+        base: &bad_base,
+        graph: &svc.graph,
+        gap: None,
+        codebook: &svc.codebook,
+        codes: &svc.codes,
+        reorder: None,
+        mapping: None,
+    }
+    .write(&path)
+    .unwrap();
+    let e = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions::with_residency(Residency::Cold),
+    )
+    .unwrap_err();
+    assert_eq!(e.kind, ArtifactErrorKind::Corrupt);
+    assert!(e.message.contains("unnormalized"), "{e}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Batch serving over the exec pool works against a cold store (the
+/// file handle is shared by positioned reads, no cursor, no locks) and
+/// still matches resident batch results.
+#[test]
+fn cold_batches_on_the_worker_pool_match_resident() {
+    let (ds, built) = service(29);
+    let path = tmpdir().join("pool.pxa");
+    built.save(&path).unwrap();
+    let resident = SearchService::open(&path, built.params, false)
+        .unwrap()
+        .with_workers(4);
+    let cold = SearchService::open_with(
+        &path,
+        built.params,
+        false,
+        &OpenOptions::with_residency(Residency::Cold),
+    )
+    .unwrap()
+    .with_workers(4);
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|i| ds.queries.row(i)).collect();
+    let a = resident.search_batch(&queries, 10);
+    let b = cold.search_batch(&queries, 10);
+    for (qi, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.ids, y.ids, "query {qi}: pooled cold batch diverges");
+        assert_eq!(x.dists, y.dists);
+    }
+    std::fs::remove_file(&path).ok();
+}

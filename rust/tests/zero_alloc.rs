@@ -65,6 +65,7 @@ fn steady_state_query_path_does_not_allocate() {
         graph: &g,
         codes: Some(&codes),
         gap: None,
+        storage: None,
     };
     let params = SearchParams {
         l: 60,
@@ -121,6 +122,111 @@ fn steady_state_query_path_does_not_allocate() {
         ds.n_queries()
     );
     assert_eq!(out.ids.len(), 10);
+}
+
+#[test]
+fn steady_state_cold_reads_do_not_allocate() {
+    // The cold storage tier must honor the same bar as the resident hot
+    // path: once the pooled ReadBuf is sized (first cold fetch), a
+    // query that reranks entirely off the artifact FILE performs zero
+    // heap allocations — positioned reads land in the pooled buffer.
+    use proxima::config::PqParams;
+    use proxima::coordinator::SearchService;
+    use proxima::storage::{OpenOptions, Residency};
+
+    let ds = tiny_uniform(400, 16, Metric::L2, 79);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 79,
+        },
+        &PqParams {
+            m: 8,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 5,
+        },
+        SearchParams {
+            l: 60,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    );
+    let path = std::env::temp_dir().join(format!("zero-alloc-cold-{}.pxa", std::process::id()));
+    svc.save(&path).unwrap();
+    let cold = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions::with_residency(Residency::Cold),
+    )
+    .unwrap();
+    let ctx = SearchContext {
+        base: cold.storage.resident_set(),
+        metric: cold.metric,
+        graph: &cold.graph,
+        codes: Some(&cold.codes),
+        gap: None,
+        storage: Some(&cold.storage),
+    };
+    let params = SearchParams {
+        l: 60,
+        k: 10,
+        ..Default::default()
+    };
+    let mut scratch = QueryScratch::new();
+    let mut adt = Adt::default();
+    let mut out = SearchOutput::default();
+    for _ in 0..2 {
+        for qi in 0..ds.n_queries() {
+            let q = ds.queries.row(qi);
+            cold.codebook.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+        }
+    }
+
+    let before = THREAD_ALLOCS.with(|c| c.get());
+    let mut cold_reads = 0usize;
+    for qi in 0..ds.n_queries() {
+        let q = ds.queries.row(qi);
+        cold.codebook.build_adt_into(q, &mut adt);
+        proxima_search_into(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        cold_reads += out.stats.cold_reads;
+    }
+    let allocs = THREAD_ALLOCS.with(|c| c.get()) - before;
+    assert!(
+        cold_reads > 0,
+        "the measured pass must actually exercise the cold tier"
+    );
+    assert_eq!(
+        allocs, 0,
+        "steady-state COLD query path allocated {allocs} times over {} queries \
+         ({cold_reads} cold reads)",
+        ds.n_queries()
+    );
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
