@@ -16,6 +16,9 @@
 //!   sweep on a duplicate-heavy batch (`adt_batch` line)
 //! * artifact scale: resident vs cold open — vector DRAM footprint and
 //!   open wall-time per residency (`artifact_scale` line)
+//! * SIMD kernel throughput: dispatched vs scalar batch L2/dot over an
+//!   aligned padded row block (`kernel_throughput` line — the ≥2x GB/s
+//!   acceptance gate for the runtime-dispatch kernels)
 
 use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
@@ -87,6 +90,56 @@ fn main() {
         acc
     });
     println!("  -> {:.1} M dists/s", r.per_sec(1000.0) / 1e6);
+
+    // --- SIMD kernel throughput: dispatched vs scalar (D=128). ---
+    // One aligned, padded row block (the serving layout), swept by the
+    // BATCH kernels — scalar table vs whatever runtime dispatch picked.
+    // GB/s counts the row bytes streamed per sweep; the query stays in
+    // cache in both arms, so the ratio isolates the kernel itself.
+    {
+        use proxima::simd::{dispatch_name, kernels, scalar_kernels, stride_for};
+        let kdim = 128;
+        let stride = stride_for(kdim);
+        let n_rows = 4096usize;
+        let mut rows = vec![0.0f32; n_rows * stride];
+        for r in rows.chunks_exact_mut(stride) {
+            for x in r[..kdim].iter_mut() {
+                *x = rng.next_f32();
+            }
+        }
+        let kq: Vec<f32> = (0..kdim).map(|_| rng.next_f32()).collect();
+        let mut kout = vec![0.0f32; n_rows];
+        let sweep_bytes = (n_rows * stride * 4) as f64;
+        let scalar = scalar_kernels();
+        let simd = kernels();
+        let r_l2_scalar = bench("l2_sq_batch scalar d128 x4096", || {
+            (scalar.l2_sq_batch)(&kq, &rows, stride, &mut kout);
+            kout[0]
+        });
+        let r_l2_simd = bench("l2_sq_batch simd   d128 x4096", || {
+            (simd.l2_sq_batch)(&kq, &rows, stride, &mut kout);
+            kout[0]
+        });
+        let r_dot_scalar = bench("dot_batch   scalar d128 x4096", || {
+            (scalar.dot_batch)(&kq, &rows, stride, &mut kout);
+            kout[0]
+        });
+        let r_dot_simd = bench("dot_batch   simd   d128 x4096", || {
+            (simd.dot_batch)(&kq, &rows, stride, &mut kout);
+            kout[0]
+        });
+        // Machine-readable line for EXPERIMENTS.md extraction (the
+        // "SIMD ≥ 2x scalar GB/s" gate).
+        println!(
+            "kernel_throughput dim={kdim} l2_scalar_gbs={:.2} l2_simd_gbs={:.2} \
+             dot_scalar_gbs={:.2} dot_simd_gbs={:.2} dispatch={}",
+            r_l2_scalar.per_sec(sweep_bytes) / 1e9,
+            r_l2_simd.per_sec(sweep_bytes) / 1e9,
+            r_dot_scalar.per_sec(sweep_bytes) / 1e9,
+            r_dot_simd.per_sec(sweep_bytes) / 1e9,
+            dispatch_name(),
+        );
+    }
 
     // --- ADT build: native. ---
     bench("adt_build_native d128 m32 c256", || {

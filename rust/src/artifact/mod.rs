@@ -1364,7 +1364,7 @@ mod tests {
         // Re-encode the artifact with SCALED base vectors: checksums
         // are valid (the writer computes them over the tampered bytes),
         // but the angular unit-norm precondition is broken.
-        let mut bad_base = svc.resident_base().unwrap().clone();
+        let mut bad_base = svc.resident_base().unwrap();
         for x in bad_base.data.iter_mut() {
             *x *= 2.0;
         }
@@ -1383,9 +1383,10 @@ mod tests {
         assert_eq!(e.kind, ArtifactErrorKind::Corrupt);
         assert!(e.message.contains("unnormalized"), "{e}");
         // The untampered service round-trips fine.
+        let base = svc.resident_base().unwrap();
         let good = ArtifactParts {
             spec: &svc.spec,
-            base: svc.resident_base().unwrap(),
+            base: &base,
             graph: &svc.graph,
             gap: None,
             codebook: &svc.codebook,
@@ -1480,9 +1481,10 @@ mod tests {
         );
         let mut spec2 = svc.spec.clone();
         spec2.hot_frac = 0.1; // 6 of 60 rows hot
+        let base = svc.resident_base().unwrap();
         let parts = ArtifactParts {
             spec: &spec2,
-            base: svc.resident_base().unwrap(),
+            base: &base,
             graph: &svc.graph,
             gap: svc.gap.as_ref(),
             codebook: &svc.codebook,
@@ -1544,7 +1546,7 @@ mod tests {
             false,
         );
         let mut w = ArtifactWriter::new(svc.spec.clone());
-        w.section(SEC_BASE, sections::encode_base(svc.resident_base().unwrap()));
+        w.section(SEC_BASE, sections::encode_base(&svc.resident_base().unwrap()));
         w.section(SEC_GRAPH, sections::encode_graph(&svc.graph));
         w.section(SEC_CODEBOOK, sections::encode_codebook(&svc.codebook));
         w.section(SEC_CODES, sections::encode_codes(&svc.codes));

@@ -259,7 +259,7 @@ impl SearchService {
             spec,
             provenance: IndexProvenance::Built,
             metric: ds.metric,
-            storage: VectorStore::Resident(ds.base.clone()),
+            storage: VectorStore::resident(&ds.base),
             graph,
             codebook,
             codes,
@@ -294,21 +294,17 @@ impl SearchService {
             .mapping
             .clone()
             .unwrap_or_else(|| self.default_mapping());
-        // A cold/tiered-opened service re-reads its cold tier once —
-        // save is an offline path, and I/O failures are typed here.
-        let materialized;
-        let base: &VectorSet = match self.storage.as_resident() {
-            Some(b) => b,
-            None => {
-                materialized = self.storage.materialize().map_err(|e| {
-                    ArtifactError::io(format!("reading cold vectors for save: {e}"))
-                })?;
-                &materialized
-            }
-        };
+        // The artifact stores the LOGICAL (unpadded) vectors; resident
+        // tiers strip their SIMD padding here, and a cold/tiered-opened
+        // service re-reads its cold tier once — save is an offline path,
+        // and I/O failures are typed here.
+        let materialized = self
+            .storage
+            .materialize()
+            .map_err(|e| ArtifactError::io(format!("reading cold vectors for save: {e}")))?;
         ArtifactParts {
             spec: &self.spec,
-            base,
+            base: &materialized,
             graph: &self.graph,
             gap: self.gap.as_ref(),
             codebook: &self.codebook,
@@ -384,7 +380,7 @@ impl SearchService {
                 let art = IndexArtifact::open(path)?;
                 (
                     art.spec,
-                    VectorStore::Resident(art.base),
+                    VectorStore::resident(&art.base),
                     art.graph,
                     art.codebook,
                     art.codes,
@@ -398,8 +394,8 @@ impl SearchService {
                 let cold =
                     ColdVectors::new(art.file, art.base_data_offset, art.n_base, art.dim, path);
                 let storage = match residency {
-                    Residency::Cold => VectorStore::Cold(cold),
-                    Residency::Tiered => VectorStore::Tiered { hot: art.hot, cold },
+                    Residency::Cold => VectorStore::cold(cold),
+                    Residency::Tiered => VectorStore::tiered(&art.hot, cold),
                     Residency::Resident => unreachable!("matched above"),
                 };
                 (
@@ -483,17 +479,18 @@ impl SearchService {
     }
 
     fn context(&self) -> SearchContext<'_> {
-        // The default Resident path is literally the pre-storage code
-        // path (`storage: None` → providers borrow `base` directly);
-        // only tiered/cold stores route fetches through the store.
-        let tiered = self.storage.residency() != Residency::Resident;
+        // Every residency routes raw-vector fetches through the store,
+        // whose rows are SIMD-padded and 64-byte aligned (`base` is only
+        // the dim-carrying stub). Searches pad the query to the same
+        // stride, so service distances are evaluated entirely in the
+        // padded layout regardless of tier.
         SearchContext {
-            base: self.storage.resident_set(),
+            base: self.storage.base_stub(),
             metric: self.metric,
             graph: &self.graph,
             codes: Some(&self.codes),
             gap: self.gap.as_ref(),
-            storage: tiered.then_some(&self.storage),
+            storage: Some(&self.storage),
         }
     }
 
@@ -504,8 +501,13 @@ impl SearchService {
 
     /// The full base vectors, when fully DRAM-resident (`None` under
     /// `Cold`/`Tiered` residency — that is the point of those modes).
-    pub fn resident_base(&self) -> Option<&VectorSet> {
-        self.storage.as_resident()
+    /// Returns an owned, LOGICALLY-shaped copy: the resident tier stores
+    /// rows SIMD-padded, so callers get the padding stripped back out.
+    pub fn resident_base(&self) -> Option<VectorSet> {
+        match self.storage.residency() {
+            Residency::Resident => self.storage.materialize().ok(),
+            _ => None,
+        }
     }
 
     /// Build the query's ADT — through XLA when attached, else natively.

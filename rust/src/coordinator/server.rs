@@ -578,7 +578,8 @@ mod tests {
             Some(4)
         );
         // Built services serve fully resident: every vector byte in
-        // DRAM, zero cold-tier traffic.
+        // DRAM (SIMD-padded rows: dim 8 pads to stride 16), zero
+        // cold-tier traffic.
         let storage = status.get("storage").expect("status carries storage");
         assert_eq!(
             storage.get("residency").and_then(Json::as_str),
@@ -586,7 +587,7 @@ mod tests {
         );
         assert_eq!(
             storage.get("resident_bytes").and_then(Json::as_usize),
-            Some(200 * 8 * 4)
+            Some(200 * 16 * 4)
         );
         assert_eq!(storage.get("cold_reads").and_then(Json::as_usize), Some(0));
 

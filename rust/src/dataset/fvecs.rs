@@ -65,6 +65,9 @@ pub fn load_fvecs_dataset(
 /// are an error here — they cannot be normalized, and letting them
 /// through would only defer the failure to a misleading assertion (or a
 /// silently constant distance) deep inside graph build.
+///
+/// The whole-set norm scan rides the runtime-dispatched SIMD dot kernel
+/// (`distance::dot` → `simd::kernels()`), as does `normalize` itself.
 pub fn prepare_for_metric(vs: &mut VectorSet, metric: crate::distance::Metric) -> Result<()> {
     if metric == crate::distance::Metric::Angular {
         for i in 0..vs.len() {

@@ -177,7 +177,8 @@ pub fn load_dataset(path: &Path) -> Result<Dataset> {
     // computed on the raw data (wrong recall, no error) — so a foreign
     // container with unnormalized Angular vectors is rejected instead;
     // normalize at generation time (`fvecs::prepare_for_metric`) and
-    // recompute its ground truth.
+    // recompute its ground truth. The scan's per-row |v|^2 goes through
+    // the dispatched SIMD dot kernel (`distance::dot`).
     if metric == Metric::Angular {
         for (set, what) in [(&base, "base"), (&queries, "query")] {
             for i in 0..set.len() {

@@ -8,6 +8,14 @@
 //! * `Angular` — cosine distance `1 - cos(a,b)`; vectors are expected to be
 //!               pre-normalized by the dataset loader, reducing it to
 //!               `1 + Ip` on unit vectors.
+//!
+//! Since the SIMD refactor the arithmetic itself lives in [`crate::simd`]:
+//! every function here calls through the runtime-dispatched kernel table
+//! (`simd::kernels()`), so `l2_sq`/`dot`/`norm`/`normalize` — and with
+//! them the Angular unit-norm scans in the dataset loaders and artifact
+//! open — pick up AVX2/AVX-512/NEON automatically. `PROXIMA_FORCE_SCALAR`
+//! pins the original scalar loops for bitwise-reproducible runs; see the
+//! `simd` module docs for the FMA tolerance policy.
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Metric {
@@ -77,6 +85,62 @@ impl Metric {
         }
     }
 
+    /// Batched [`Metric::partial`]: the query against `out.len()`
+    /// contiguous rows, where row `i` is `rows[i * stride..][..q.len()]`.
+    /// Bitwise-identical to calling `partial` per row at the same
+    /// dispatch level (the `simd` batching invariant), so centroid
+    /// sweeps (ADT builds, k-means) can batch freely.
+    #[inline]
+    pub fn partial_batch(&self, q: &[f32], rows: &[f32], stride: usize, out: &mut [f32]) {
+        let k = crate::simd::kernels();
+        match self {
+            Metric::L2 => (k.l2_sq_batch)(q, rows, stride, out),
+            Metric::Ip | Metric::Angular => {
+                (k.dot_batch)(q, rows, stride, out);
+                for d in out.iter_mut() {
+                    *d = -*d;
+                }
+            }
+        }
+    }
+
+    /// Batched [`Metric::distance`] over rows picked by id from a flat
+    /// row-major matrix (`flat[id * stride..][..q.len()]`) — the rerank
+    /// gather. Bitwise-identical to calling `distance` per picked row at
+    /// the same dispatch level.
+    #[inline]
+    pub fn distance_gather(
+        &self,
+        q: &[f32],
+        flat: &[f32],
+        stride: usize,
+        ids: &[u32],
+        out: &mut [f32],
+    ) {
+        let k = crate::simd::kernels();
+        match self {
+            Metric::L2 => (k.l2_sq_gather)(q, flat, stride, ids, out),
+            Metric::Ip => {
+                (k.dot_gather)(q, flat, stride, ids, out);
+                for d in out.iter_mut() {
+                    *d = -*d;
+                }
+            }
+            Metric::Angular => {
+                debug_assert!(
+                    (dot(q, q) - 1.0).abs() < 1e-2,
+                    "Angular metric on non-unit-norm input (|a|^2 = {}): \
+                     normalize vectors in the dataset loader",
+                    dot(q, q)
+                );
+                (k.dot_gather)(q, flat, stride, ids, out);
+                for d in out.iter_mut() {
+                    *d = 1.0 - *d;
+                }
+            }
+        }
+    }
+
     /// Constant folded into the ADT so that partial sums equal distances.
     #[inline]
     pub fn adt_bias(&self) -> f32 {
@@ -87,60 +151,22 @@ impl Metric {
     }
 }
 
-/// Squared L2 distance, 4-way unrolled accumulators: the compiler
-/// auto-vectorizes this shape well, and separate accumulators break the
-/// add-latency chain on the 1-wide test box.
+/// Squared L2 distance through the runtime-dispatched kernel table.
+/// The scalar fallback is the original 4-way-unrolled loop, moved
+/// verbatim to `simd::scalar` (forced-scalar runs reproduce it bitwise).
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let mut s0 = 0.0f32;
-    let mut s1 = 0.0f32;
-    let mut s2 = 0.0f32;
-    let mut s3 = 0.0f32;
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2 = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        let d = a[j] - b[j];
-        s += d * d;
-    }
-    s
+    (crate::simd::kernels().l2_sq)(a, b)
 }
 
-/// Dot product with the same unrolling scheme.
+/// Dot product through the runtime-dispatched kernel table.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let n = a.len();
-    let mut s0 = 0.0f32;
-    let mut s1 = 0.0f32;
-    let mut s2 = 0.0f32;
-    let mut s3 = 0.0f32;
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    (crate::simd::kernels().dot)(a, b)
 }
 
-/// L2 norm.
+/// L2 norm (dispatched dot, so large unit-norm validation scans — the
+/// Angular loaders, cold artifact opens — get the SIMD path too).
 pub fn norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
@@ -217,6 +243,39 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn metric_batches_match_per_pair_bitwise() {
+        // The simd batching invariant, observed at the Metric level:
+        // batched/gathered forms equal the per-pair calls bit for bit.
+        let dim = 13;
+        let stride = 16;
+        let n = 6;
+        let mut rows = vec![0.0f32; n * stride];
+        for (i, r) in rows.chunks_exact_mut(stride).enumerate() {
+            for (j, x) in r[..dim].iter_mut().enumerate() {
+                *x = ((i * 31 + j) as f32 * 0.13).sin();
+            }
+        }
+        let mut q: Vec<f32> = (0..dim).map(|j| (j as f32 * 0.7).cos()).collect();
+        normalize(&mut q); // Angular requires a unit-norm first operand
+        let ids = vec![5u32, 0, 2, 2];
+        let mut out = vec![0.0f32; n];
+        let mut gout = vec![0.0f32; ids.len()];
+        for metric in [Metric::L2, Metric::Ip, Metric::Angular] {
+            metric.partial_batch(&q, &rows, stride, &mut out);
+            for (i, &o) in out.iter().enumerate() {
+                let want = metric.partial(&q, &rows[i * stride..i * stride + dim]);
+                assert_eq!(o.to_bits(), want.to_bits(), "{metric:?} partial row {i}");
+            }
+            metric.distance_gather(&q, &rows, stride, &ids, &mut gout);
+            for (&id, &o) in ids.iter().zip(&gout) {
+                let base = id as usize * stride;
+                let want = metric.distance(&q, &rows[base..base + dim]);
+                assert_eq!(o.to_bits(), want.to_bits(), "{metric:?} gather id {id}");
+            }
+        }
     }
 
     #[test]

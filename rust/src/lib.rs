@@ -80,6 +80,29 @@
 //! replays such measured access streams through the §IV-E mapping and
 //! the NAND timing model. Results are bitwise-identical across all
 //! three residencies (pinned by `tests/storage_parity.rs`).
+//!
+//! # Distance kernels
+//!
+//! All distance arithmetic flows through the [`simd`] module: explicit-
+//! width L2/dot kernels (AVX2+FMA on x86_64, NEON on aarch64, AVX-512
+//! behind the off-by-default `avx512` cargo feature) selected ONCE per
+//! process by runtime CPU-feature detection through a function-pointer
+//! table, with the original 4-way-unrolled scalar loops as the portable
+//! fallback. Batched "one query vs many rows" forms (`l2_sq_batch`,
+//! `dot_batch`, and the id-picking `*_gather` variants) are by
+//! construction the pairwise kernel mapped per row, so the ADT centroid
+//! sweeps, k-means assignment, and rerank loops batch without changing
+//! results. The serving layout is co-designed with the kernels:
+//! [`storage::VectorStore`] tiers and the pooled cold-read buffers hold
+//! rows on 64-byte boundaries with dims zero-padded to the 16-lane
+//! stride ([`simd::stride_for`]), and searches pad the query into
+//! per-query scratch to match — hot-path kernels never see a remainder
+//! loop. Numerical policy (FMA reassociation tolerance, the batching
+//! bitwise invariant, the padded/unpadded layout separation) is
+//! documented once in the [`simd`] module docs; `PROXIMA_FORCE_SCALAR=1`
+//! (or [`simd::force_scalar`]) pins the scalar table for
+//! bitwise-reproducible traced/DES runs, and CI runs the whole test
+//! suite under both dispatch arms.
 
 pub mod api;
 pub mod artifact;
@@ -89,6 +112,7 @@ pub mod dataset;
 pub mod distance;
 pub mod gap;
 pub mod pq;
+pub mod simd;
 pub mod storage;
 pub mod util;
 

@@ -1,6 +1,13 @@
 //! Lloyd's k-means with k-means++ seeding — the offline training step for
 //! PQ codebooks (paper §III-B: "C centroids of each subdimension from
 //! k-means"). Operates on flat row-major data; L2 objective.
+//!
+//! The seeding scans and the Lloyd assignment step run through the batched
+//! SIMD kernel (`l2_sq_batch`) over the contiguous row-major buffers. The
+//! batched form is bitwise the pairwise kernel per row, and squared L2 is
+//! bitwise symmetric in its arguments (negating the per-lane difference
+//! does not change its square), so results are unchanged at a given
+//! dispatch level — including the incumbent-favoring assignment ties.
 
 use crate::distance::l2_sq;
 use crate::util::rng::Xoshiro256pp;
@@ -19,10 +26,13 @@ pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Ve
     let row = |i: usize| &data[i * dim..(i + 1) * dim];
 
     // --- k-means++ seeding ---
+    let kern = crate::simd::kernels();
     let mut centers = vec![0.0f32; k * dim];
     let first = rng.gen_range(n);
     centers[..dim].copy_from_slice(row(first));
-    let mut min_d: Vec<f32> = (0..n).map(|i| l2_sq(row(i), &centers[..dim])).collect();
+    let mut min_d = vec![0.0f32; n];
+    (kern.l2_sq_batch)(&centers[..dim], data, dim, &mut min_d);
+    let mut cand_d = vec![0.0f32; n];
     for c in 1..k {
         let total: f64 = min_d.iter().map(|&d| d as f64).sum();
         let pick = if total <= 0.0 {
@@ -40,28 +50,31 @@ pub fn kmeans(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Ve
             chosen
         };
         centers[c * dim..(c + 1) * dim].copy_from_slice(row(pick));
-        for i in 0..n {
-            let d = l2_sq(row(i), &centers[c * dim..(c + 1) * dim]);
-            if d < min_d[i] {
-                min_d[i] = d;
+        (kern.l2_sq_batch)(&centers[c * dim..(c + 1) * dim], data, dim, &mut cand_d);
+        for (m, &d) in min_d.iter_mut().zip(cand_d.iter()) {
+            if d < *m {
+                *m = d;
             }
         }
     }
 
     // --- Lloyd iterations ---
     let mut assign = vec![0u32; n];
+    let mut dists = vec![0.0f32; k];
     for _ in 0..iters {
         let mut changed = false;
-        // Assignment step.
+        // Assignment step: batch the centroid sweep per point, then run
+        // the ORIGINAL incumbent-favoring argmin over the precomputed
+        // distances (start at the current assignment, strict `<`) so tie
+        // behavior — and thus convergence — is untouched.
         for i in 0..n {
-            let v = row(i);
+            (kern.l2_sq_batch)(row(i), &centers, dim, &mut dists);
             let mut best = assign[i] as usize;
-            let mut best_d = l2_sq(v, &centers[best * dim..(best + 1) * dim]);
-            for c in 0..k {
+            let mut best_d = dists[best];
+            for (c, &d) in dists.iter().enumerate() {
                 if c == best {
                     continue;
                 }
-                let d = l2_sq(v, &centers[c * dim..(c + 1) * dim]);
                 if d < best_d {
                     best_d = d;
                     best = c;

@@ -264,15 +264,21 @@ impl PqCodebook {
 
     /// Encode one vector: nearest centroid per subspace (always by L2 in the
     /// subspace — the standard PQ formulation; the metric enters via the
-    /// ADT, not the encoding).
+    /// ADT, not the encoding). The per-subspace centroid sweep runs through
+    /// the batched SIMD kernel (centroid blocks are contiguous, stride
+    /// `dsub`); the argmin keeps the original first-minimum/strict-`<`
+    /// semantics, so codes are unchanged at a given dispatch level.
     pub fn encode_one(&self, v: &[f32], out: &mut [u8]) {
         let dsub = self.dsub();
+        let k = crate::simd::kernels();
+        let mut dists = [0.0f32; 256]; // c <= 256 (codes fit u8)
         for sub in 0..self.m {
             let sv = &v[sub * dsub..(sub + 1) * dsub];
+            let rows = &self.centroids[sub * self.c * dsub..(sub + 1) * self.c * dsub];
+            (k.l2_sq_batch)(sv, rows, dsub, &mut dists[..self.c]);
             let mut best = 0usize;
             let mut best_d = f32::INFINITY;
-            for ci in 0..self.c {
-                let d = crate::distance::l2_sq(sv, self.centroid(sub, ci));
+            for (ci, &d) in dists[..self.c].iter().enumerate() {
                 if d < best_d {
                     best_d = d;
                     best = ci;
@@ -316,9 +322,11 @@ impl PqCodebook {
         let table = &mut adt.table;
         for sub in 0..self.m {
             let qv = &q[sub * dsub..(sub + 1) * dsub];
-            for ci in 0..self.c {
-                table[sub * self.c + ci] = self.metric.partial(qv, self.centroid(sub, ci));
-            }
+            // One batched sweep over the subspace's contiguous centroid
+            // block — bitwise the per-centroid `metric.partial` loop.
+            let rows = &self.centroids[sub * self.c * dsub..(sub + 1) * self.c * dsub];
+            let out = &mut table[sub * self.c..(sub + 1) * self.c];
+            self.metric.partial_batch(qv, rows, dsub, out);
         }
         // Fold the angular bias into subspace 0 so partial sums equal the
         // full-precision distance formula.
@@ -375,16 +383,20 @@ impl PqCodebook {
             t.table.resize(self.m * self.c, 0.0);
         }
         for sub in 0..self.m {
+            let sub_block = &self.centroids[sub * self.c * dsub..(sub + 1) * self.c * dsub];
             let mut ci0 = 0;
             while ci0 < self.c {
                 let ci1 = (ci0 + CI_BLOCK).min(self.c);
+                // Each centroid block is contiguous (stride dsub): one
+                // batched kernel call per (query, block) — bitwise the
+                // per-centroid `metric.partial` loop, so the batch build
+                // contract below still holds exactly.
+                let rows = &sub_block[ci0 * dsub..ci1 * dsub];
                 for (ti, t) in tables.iter_mut().enumerate() {
                     let q = queries[rep[ti] as usize];
                     let qv = &q[sub * dsub..(sub + 1) * dsub];
                     let row = &mut t.table[sub * self.c..(sub + 1) * self.c];
-                    for ci in ci0..ci1 {
-                        row[ci] = self.metric.partial(qv, self.centroid(sub, ci));
-                    }
+                    self.metric.partial_batch(qv, rows, dsub, &mut row[ci0..ci1]);
                 }
                 ci0 = ci1;
             }

@@ -37,7 +37,11 @@ pub struct SearchContext<'a> {
     pub gap: Option<&'a GapGraph>,
     /// Tiered vector storage. When `Some`, raw-vector fetches go through
     /// the store (DRAM hot tier or in-place file reads) instead of
-    /// `base`, which then only mirrors the store's resident tier.
+    /// `base`, which then serves only as the dim-carrying stub. Store
+    /// rows are SIMD-padded (`simd::stride_for(dim)` floats, zero tails),
+    /// so searches pad the query into `QueryScratch::qpad` to match;
+    /// `storage: None` contexts stay unpadded end to end — numerical
+    /// comparisons must stay within one layout (see the `simd` docs).
     pub storage: Option<&'a VectorStore>,
 }
 
@@ -218,9 +222,15 @@ pub fn accurate_beam_search_into(
         bloom,
         list,
         cold,
+        qpad,
         ..
     } = scratch;
-    let mut provider = kernel::Accurate::new(ctx, q, cold);
+    // Padded contexts serve stride-padded rows; pad the query to match.
+    let q_eff: &[f32] = match ctx.storage {
+        Some(s) => qpad.fill_padded(q, s.stride()),
+        None => q,
+    };
+    let mut provider = kernel::Accurate::new(ctx, q_eff, cold);
     list.reset(l);
     // Traced runs keep the paper's Bloom filter so the DES models §IV-B;
     // serving paths use the exact epoch bitset (no false-positive drops).
@@ -301,9 +311,17 @@ pub fn pq_beam_search_into(
         list,
         rerank: rr,
         cold,
+        qpad,
+        rerank_ids,
+        rerank_dists,
         ..
     } = scratch;
-    let mut provider = kernel::PqAdt::new(ctx, adt, q, cold);
+    // Padded contexts serve stride-padded rows; pad the query to match.
+    let q_eff: &[f32] = match ctx.storage {
+        Some(s) => qpad.fill_padded(q, s.stride()),
+        None => q,
+    };
+    let mut provider = kernel::PqAdt::new(ctx, adt, q_eff, cold);
     list.reset(l);
     if want_trace {
         bloom.clear();
@@ -315,13 +333,19 @@ pub fn pq_beam_search_into(
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
 
-    // Rerank the top candidates with accurate distances.
+    // Rerank the top candidates with accurate distances: one batched
+    // sweep through the provider (gathered SIMD kernel when rows are
+    // DRAM-resident; bitwise the per-id loop either way).
     use kernel::DistanceProvider;
     let take = rerank.max(k).min(list.len());
+    rerank_ids.clear();
+    rerank_ids.extend(list.items.iter().take(take).map(|c| c.id));
+    rerank_dists.clear();
+    rerank_dists.resize(take, 0.0);
+    provider.exact_batch(rerank_ids, rerank_dists, &mut stats, &mut trace);
     rr.clear();
-    for c in list.items.iter().take(take) {
-        let d = provider.exact(c.id, &mut stats, &mut trace);
-        rr.push((d, c.id));
+    for (&id, &d) in rerank_ids.iter().zip(rerank_dists.iter()) {
+        rr.push((d, id));
     }
     if let Some(t) = trace.as_mut() {
         t.push(TraceOp::ComputeExact { count: take as u32 });

@@ -24,6 +24,7 @@ use super::bloom::{seahash_diffuse, BloomFilter};
 use super::{SearchStats, Trace, TraceOp};
 use crate::distance::Metric;
 use crate::pq::{Adt, PqCodes};
+use crate::simd::AlignedBuf;
 use crate::storage::{ReadBuf, RowSource};
 use std::sync::Mutex;
 
@@ -244,6 +245,27 @@ pub trait DistanceProvider {
     /// Full-precision distance for vertex `id` (rerank phases).
     fn exact(&mut self, id: u32, stats: &mut SearchStats, trace: &mut Option<Trace>) -> f32;
 
+    /// Full-precision distances for a batch of vertices (rerank sweeps):
+    /// `out[i]` receives the distance for `ids[i]`. The default is the
+    /// definition — per-id [`exact`] calls. Providers whose rows are
+    /// contiguously DRAM-resident override this with the dispatched
+    /// gather kernel, which is bitwise-identical per row at the same
+    /// dispatch level (the `simd` batching invariant), charging the
+    /// same stats and trace ops in the same order.
+    ///
+    /// [`exact`]: DistanceProvider::exact
+    fn exact_batch(
+        &mut self,
+        ids: &[u32],
+        out: &mut [f32],
+        stats: &mut SearchStats,
+        trace: &mut Option<Trace>,
+    ) {
+        for (&id, o) in ids.iter().zip(out.iter_mut()) {
+            *o = self.exact(id, stats, trace);
+        }
+    }
+
     /// Trace op describing `count` guide-distance computations.
     fn guide_compute_op(&self, count: u32) -> TraceOp;
 }
@@ -256,12 +278,12 @@ pub struct Accurate<'a, 'c> {
     rows: RowSource<'a>,
     buf: &'c mut ReadBuf,
     metric: Metric,
-    q: &'a [f32],
+    q: &'c [f32],
     raw_bits: u32,
 }
 
 impl<'a, 'c> Accurate<'a, 'c> {
-    pub fn new(ctx: &SearchContext<'a>, q: &'a [f32], buf: &'c mut ReadBuf) -> Accurate<'a, 'c> {
+    pub fn new(ctx: &SearchContext<'a>, q: &'c [f32], buf: &'c mut ReadBuf) -> Accurate<'a, 'c> {
         Accurate {
             rows: ctx.rows(),
             buf,
@@ -292,6 +314,36 @@ impl DistanceProvider for Accurate<'_, '_> {
         self.metric.distance(self.q, v)
     }
 
+    fn exact_batch(
+        &mut self,
+        ids: &[u32],
+        out: &mut [f32],
+        stats: &mut SearchStats,
+        trace: &mut Option<Trace>,
+    ) {
+        match self.rows.flat() {
+            Some((flat, stride)) => {
+                stats.exact_dists += ids.len();
+                stats.bytes_raw += ids.len() as u64 * (self.raw_bits as u64 / 8);
+                if let Some(t) = trace.as_mut() {
+                    for &id in ids {
+                        t.push(TraceOp::FetchRaw {
+                            node: id,
+                            bits: self.raw_bits,
+                        });
+                    }
+                }
+                self.metric.distance_gather(self.q, flat, stride, ids, out);
+            }
+            // Cold/tiered rows: per-id reads through the storage layer.
+            None => {
+                for (&id, o) in ids.iter().zip(out.iter_mut()) {
+                    *o = self.exact(id, stats, trace);
+                }
+            }
+        }
+    }
+
     fn guide_compute_op(&self, count: u32) -> TraceOp {
         TraceOp::ComputeExact { count }
     }
@@ -308,7 +360,7 @@ pub struct PqAdt<'a, 'c> {
     rows: RowSource<'a>,
     buf: &'c mut ReadBuf,
     metric: Metric,
-    q: &'a [f32],
+    q: &'c [f32],
     pq_bits: u32,
     raw_bits: u32,
 }
@@ -317,7 +369,7 @@ impl<'a, 'c> PqAdt<'a, 'c> {
     pub fn new(
         ctx: &SearchContext<'a>,
         adt: &'a Adt,
-        q: &'a [f32],
+        q: &'c [f32],
         buf: &'c mut ReadBuf,
     ) -> PqAdt<'a, 'c> {
         let codes = ctx.codes.expect("PQ-guided search requires ctx.codes");
@@ -362,6 +414,36 @@ impl DistanceProvider for PqAdt<'_, '_> {
         self.metric.distance(self.q, v)
     }
 
+    fn exact_batch(
+        &mut self,
+        ids: &[u32],
+        out: &mut [f32],
+        stats: &mut SearchStats,
+        trace: &mut Option<Trace>,
+    ) {
+        match self.rows.flat() {
+            Some((flat, stride)) => {
+                stats.exact_dists += ids.len();
+                stats.bytes_raw += ids.len() as u64 * (self.raw_bits as u64 / 8);
+                if let Some(t) = trace.as_mut() {
+                    for &id in ids {
+                        t.push(TraceOp::FetchRaw {
+                            node: id,
+                            bits: self.raw_bits,
+                        });
+                    }
+                }
+                self.metric.distance_gather(self.q, flat, stride, ids, out);
+            }
+            // Cold/tiered rows: per-id reads through the storage layer.
+            None => {
+                for (&id, o) in ids.iter().zip(out.iter_mut()) {
+                    *o = self.exact(id, stats, trace);
+                }
+            }
+        }
+    }
+
     fn guide_compute_op(&self, count: u32) -> TraceOp {
         TraceOp::ComputePq { count }
     }
@@ -370,7 +452,10 @@ impl DistanceProvider for PqAdt<'_, '_> {
 /// Proxima's provider: PQ guide distances plus an exact-distance cache so
 /// iteration reranks and the final β-rerank never recompute a vertex —
 /// under cold residency the cache also means each vertex's raw vector is
-/// read from storage at most once per query.
+/// read from storage at most once per query. `Hybrid` deliberately keeps
+/// the per-id (default) `exact_batch`: the cache already computes each
+/// vertex at most once per query, so a gathered recompute would *add*
+/// kernel work, not save it.
 pub struct Hybrid<'a, 'b, 'c> {
     pq: PqAdt<'a, 'b>,
     cache: &'c mut ExactCache,
@@ -496,6 +581,16 @@ pub struct QueryScratch {
     /// first cold fetch, reused for the scratch lifetime, untouched by
     /// fully-resident serving.
     pub cold: ReadBuf,
+    /// Query padded to the store stride (64-byte aligned, zero tail) when
+    /// the context carries a [`VectorStore`] serving padded rows; unused
+    /// on unpadded literal contexts.
+    ///
+    /// [`VectorStore`]: crate::storage::VectorStore
+    pub qpad: AlignedBuf,
+    /// Rerank id batch handed to [`DistanceProvider::exact_batch`].
+    pub rerank_ids: Vec<u32>,
+    /// Rerank distance batch, parallel to `rerank_ids`.
+    pub rerank_dists: Vec<f32>,
 }
 
 impl QueryScratch {
@@ -509,6 +604,9 @@ impl QueryScratch {
             prev_topk: Vec::new(),
             topk: Vec::new(),
             cold: ReadBuf::new(),
+            qpad: AlignedBuf::new(),
+            rerank_ids: Vec::new(),
+            rerank_dists: Vec::new(),
         }
     }
 }

@@ -106,6 +106,8 @@ pub fn proxima_search_into(
         prev_topk,
         topk,
         cold,
+        qpad,
+        ..
     } = scratch;
     list.reset(params.l);
     exact_cache.begin(params.l);
@@ -113,7 +115,14 @@ pub fn proxima_search_into(
     prev_topk.clear();
     topk.clear();
 
-    let pq = kernel::PqAdt::new(ctx, adt, q, cold);
+    // Padded contexts serve stride-padded rows; pad the query to match.
+    // Rerank sweeps stay per-id here (not batched): the Hybrid provider's
+    // exact-distance cache computes each vertex at most once per query.
+    let q_eff: &[f32] = match ctx.storage {
+        Some(s) => qpad.fill_padded(q, s.stride()),
+        None => q,
+    };
+    let pq = kernel::PqAdt::new(ctx, adt, q_eff, cold);
     let mut provider = kernel::Hybrid::new(pq, exact_cache);
 
     // Traced runs keep the paper's Bloom filter (§IV-B fidelity for the

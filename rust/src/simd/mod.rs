@@ -1,0 +1,937 @@
+//! Explicit-width SIMD distance kernels with runtime dispatch, plus the
+//! 64-byte-aligned padded row layout the hot paths feed them.
+//!
+//! The paper's thesis is that distance arithmetic is the cost center
+//! worth co-designing hardware around (§III distance approximation,
+//! §IV-D compute units); on the host side the same arithmetic dominates
+//! every serving mode (full-precision L2/dot in Accurate and rerank,
+//! centroid sweeps in ADT builds and k-means). This module supplies:
+//!
+//! * **Kernels** — squared-L2 and dot product in pairwise
+//!   (`fn(a, b) -> f32`), batched ("one query vs `n` contiguous rows"),
+//!   and gathered ("one query vs `n` rows picked by id") forms, with
+//!   AVX2+FMA and (behind the off-by-default `avx512` cargo feature,
+//!   Rust 1.89+) AVX-512F implementations on x86-64, NEON on aarch64,
+//!   and the pre-existing 4-way-unrolled scalar loops as the portable
+//!   fallback.
+//! * **Dispatch** — [`kernels()`] resolves ONE function-pointer table
+//!   per process via `is_x86_feature_detected!` (cached in a
+//!   `OnceLock`), so call sites pay a table load, not a feature test.
+//!   `PROXIMA_FORCE_SCALAR` (any value other than empty/`0`/`false`/
+//!   `no`) or [`force_scalar`] pins the scalar table for
+//!   bitwise-reproducible runs (traced/DES figures, the CI
+//!   forced-scalar job).
+//! * **Layout** — [`AlignedBuf`]/[`AlignedVectors`] store rows on
+//!   64-byte boundaries with dims zero-padded to [`LANES`] floats
+//!   ([`stride_for`]), so the wide loops never take a remainder path on
+//!   service rows. The kernels themselves use unaligned loads:
+//!   alignment is a performance contract, not a soundness requirement,
+//!   and unpadded literal slices (tests, oracle ports, odd dims) stay
+//!   valid inputs.
+//!
+//! # FMA tolerance policy (decided once, here)
+//!
+//! SIMD kernels reassociate the reduction and contract `mul`+`add` into
+//! FMA, so their results differ from the scalar reference by ordinary
+//! floating-point drift. The repo-wide policy:
+//!
+//! 1. **One dispatch level is deterministic.** For a fixed table and
+//!    fixed operand slices, every kernel is a pure function — repeated
+//!    runs are bitwise identical.
+//! 2. **Batch ≡ pair, bitwise.** The batched and gathered forms are
+//!    definitionally the pairwise kernel mapped over rows *at the same
+//!    dispatch level*, so moving a call site between per-pair and
+//!    batched forms NEVER changes results (this is what keeps golden
+//!    parity and `batched_adt_build_matches_n_single_builds` exact).
+//! 3. **SIMD vs scalar is tolerance-checked**, at
+//!    `|simd - scalar| <= 1e-4 * max(1, Σ|terms|)` (property-tested for
+//!    every length in `1..=256`, odd dims, unaligned sources, padded
+//!    tails). Distance *comparisons* (candidate ordering) may therefore
+//!    tie-break differently across dispatch levels; anything asserting
+//!    bitwise results pins the level.
+//! 4. **Bitwise-exact reproduction** of the pre-SIMD implementation is
+//!    always reachable: the scalar table's pairwise kernels are the
+//!    original `distance.rs` loops moved here verbatim, selected by
+//!    `PROXIMA_FORCE_SCALAR=1` / [`force_scalar`] — on unpadded inputs
+//!    they reproduce historical results bit for bit.
+//! 5. **Padding changes the summation length** (a dim-12 row padded to
+//!    stride 16 sums four exact zeros, in SIMD lanes rather than the
+//!    scalar tail), so padded and unpadded evaluations of the same
+//!    logical vector are equal only within the policy tolerance. The
+//!    codebase keeps each comparison inside ONE layout: service paths
+//!    (`SearchService`) are padded end to end, literal
+//!    `SearchContext { storage: None, .. }` paths are unpadded end to
+//!    end. Zero-padding is exact for self-distance (identical prefix,
+//!    identical zero tail), so "query == stored row → distance 0.0"
+//!    survives padding bitwise.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::dataset::VectorSet;
+
+/// Padding unit in f32 lanes: 16 floats = one 64-byte cache line = one
+/// AVX-512 register = two AVX2 registers = four NEON registers.
+pub const LANES: usize = 16;
+
+/// Row stride (in f32s) for a logical dimension: `dim` rounded up to a
+/// multiple of [`LANES`]. The tail `stride - dim` floats are zero.
+#[inline]
+pub const fn stride_for(dim: usize) -> usize {
+    dim.div_ceil(LANES) * LANES
+}
+
+/// One cache line of f32s; the alignment carrier for [`AlignedBuf`].
+#[derive(Clone, Copy, Debug)]
+#[repr(C, align(64))]
+struct Chunk([f32; LANES]);
+
+/// A growable f32 buffer whose storage is 64-byte aligned. Exposes a
+/// plain `&[f32]` view of its logical length; the backing allocation
+/// only ever grows, so pooled users (scratch, `ReadBuf`) hit
+/// steady-state zero allocations.
+#[derive(Debug, Default)]
+pub struct AlignedBuf {
+    chunks: Vec<Chunk>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    pub const fn new() -> AlignedBuf {
+        AlignedBuf {
+            chunks: Vec::new(),
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set the logical length to `n` f32s. Newly allocated storage is
+    /// zero-filled; storage revealed by re-growing after a shrink may
+    /// hold stale values (users that pad MUST re-zero their tail — see
+    /// [`AlignedBuf::fill_padded`] and `storage::ReadBuf`).
+    #[inline]
+    pub fn grow_to(&mut self, n: usize) {
+        let need = n.div_ceil(LANES);
+        if need > self.chunks.len() {
+            self.chunks.resize(need, Chunk([0.0; LANES]));
+        }
+        self.len = n;
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        // Sound: `Chunk` is `#[repr(C)]` over `[f32; LANES]` with no
+        // padding, and `len <= chunks.len() * LANES` by construction.
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+
+    /// Copy `src` into the buffer zero-padded to `stride` f32s and
+    /// return the padded slice. Always re-zeroes the tail, so one
+    /// pooled buffer can serve callers of different dims.
+    #[inline]
+    pub fn fill_padded(&mut self, src: &[f32], stride: usize) -> &[f32] {
+        debug_assert!(stride >= src.len());
+        self.grow_to(stride);
+        let dst = self.as_mut_slice();
+        dst[..src.len()].copy_from_slice(src);
+        for x in &mut dst[src.len()..] {
+            *x = 0.0;
+        }
+        self.as_slice()
+    }
+}
+
+/// An owned matrix of vectors in the padded aligned layout: `n` rows of
+/// logical dimension `dim`, each occupying `stride_for(dim)` f32s
+/// starting on a 64-byte boundary, tails zeroed. The resident-tier
+/// storage format (`storage::VectorStore`).
+#[derive(Debug)]
+pub struct AlignedVectors {
+    dim: usize,
+    stride: usize,
+    n: usize,
+    buf: AlignedBuf,
+}
+
+impl AlignedVectors {
+    /// Copy a packed [`VectorSet`] into the padded layout.
+    pub fn from_set(set: &VectorSet) -> AlignedVectors {
+        let dim = set.dim;
+        let n = set.len();
+        let stride = stride_for(dim);
+        let mut buf = AlignedBuf::new();
+        buf.grow_to(n * stride);
+        for (i, row) in buf.as_mut_slice().chunks_exact_mut(stride).enumerate() {
+            row[..dim].copy_from_slice(set.row(i));
+        }
+        AlignedVectors {
+            dim,
+            stride,
+            n,
+            buf,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row stride in f32s (`stride_for(dim)`).
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Row `i` as its full padded `stride`-length slice (zero tail).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.buf.as_slice()[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// The whole matrix as one flat `n * stride` slice — the input the
+    /// gathered kernels index by row id.
+    #[inline]
+    pub fn flat(&self) -> &[f32] {
+        self.buf.as_slice()
+    }
+
+    /// DRAM footprint of the padded payload in bytes.
+    #[inline]
+    pub fn padded_bytes(&self) -> u64 {
+        (self.n * self.stride) as u64 * 4
+    }
+
+    /// Copy back out to the packed (unpadded) [`VectorSet`] layout —
+    /// the serialization/offline format.
+    pub fn to_set(&self) -> VectorSet {
+        let mut set = VectorSet::zeros(self.n, self.dim);
+        for (i, row) in self.buf.as_slice().chunks_exact(self.stride).enumerate() {
+            set.row_mut(i).copy_from_slice(&row[..self.dim]);
+        }
+        set
+    }
+}
+
+/// Pairwise kernel: `f(a, b)` over `a.len()` elements (`b` at least as
+/// long).
+pub type PairFn = fn(&[f32], &[f32]) -> f32;
+/// Batched kernel: query vs `out.len()` contiguous rows; row `i` is
+/// `rows[i * stride .. i * stride + q.len()]`.
+pub type BatchFn = fn(&[f32], &[f32], usize, &mut [f32]);
+/// Gathered kernel: query vs rows picked by id from a flat matrix; row
+/// `ids[i]` is `flat[ids[i] * stride ..][..q.len()]`.
+pub type GatherFn = fn(&[f32], &[f32], usize, &[u32], &mut [f32]);
+
+/// One dispatch level: a table of function pointers resolved once.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// Stable name for logs/benches: `"scalar"`, `"avx2"`, `"avx512"`,
+    /// `"neon"`.
+    pub name: &'static str,
+    pub l2_sq: PairFn,
+    pub dot: PairFn,
+    pub l2_sq_batch: BatchFn,
+    pub dot_batch: BatchFn,
+    pub l2_sq_gather: GatherFn,
+    pub dot_gather: GatherFn,
+}
+
+/// Define the batched + gathered forms of a pairwise kernel as exactly
+/// "the pairwise kernel mapped over rows" — the bitwise contract item 2
+/// of the module-level tolerance policy, by construction.
+macro_rules! batch_and_gather {
+    ($pair:path => $batch:ident, $gather:ident) => {
+        pub(super) fn $batch(q: &[f32], rows: &[f32], stride: usize, out: &mut [f32]) {
+            let d = q.len();
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = $pair(q, &rows[i * stride..i * stride + d]);
+            }
+        }
+        pub(super) fn $gather(q: &[f32], flat: &[f32], stride: usize, ids: &[u32], out: &mut [f32]) {
+            debug_assert_eq!(ids.len(), out.len());
+            let d = q.len();
+            for (&id, o) in ids.iter().zip(out.iter_mut()) {
+                let base = id as usize * stride;
+                *o = $pair(q, &flat[base..base + d]);
+            }
+        }
+    };
+}
+
+/// The portable fallback: the original `distance.rs` 4-way-unrolled
+/// loops, moved here verbatim so forced-scalar runs reproduce the
+/// pre-SIMD implementation bit for bit on unpadded inputs.
+pub(crate) mod scalar {
+    /// Squared L2 distance, 4-way unrolled accumulators: the compiler
+    /// auto-vectorizes this shape well, and separate accumulators break
+    /// the add-latency chain on 1-wide boxes.
+    #[inline]
+    pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut s0 = 0.0f32;
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        let mut s3 = 0.0f32;
+        let chunks = n / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            let d0 = a[j] - b[j];
+            let d1 = a[j + 1] - b[j + 1];
+            let d2 = a[j + 2] - b[j + 2];
+            let d3 = a[j + 3] - b[j + 3];
+            s0 += d0 * d0;
+            s1 += d1 * d1;
+            s2 += d2 * d2;
+            s3 += d3 * d3;
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for j in chunks * 4..n {
+            let d = a[j] - b[j];
+            s += d * d;
+        }
+        s
+    }
+
+    /// Dot product with the same unrolling scheme.
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut s0 = 0.0f32;
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        let mut s3 = 0.0f32;
+        let chunks = n / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            s0 += a[j] * b[j];
+            s1 += a[j + 1] * b[j + 1];
+            s2 += a[j + 2] * b[j + 2];
+            s3 += a[j + 3] * b[j + 3];
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for j in chunks * 4..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    batch_and_gather!(l2_sq => l2_sq_batch, l2_sq_gather);
+    batch_and_gather!(dot => dot_batch, dot_gather);
+}
+
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    l2_sq: scalar::l2_sq,
+    dot: scalar::dot,
+    l2_sq_batch: scalar::l2_sq_batch,
+    dot_batch: scalar::dot_batch,
+    l2_sq_gather: scalar::l2_sq_gather,
+    dot_gather: scalar::dot_gather,
+};
+
+/// AVX2+FMA kernels: two 8-lane accumulators (16 floats/iteration — one
+/// padded stride unit), FMA contraction, one 8-wide step then a scalar
+/// tail for unpadded lengths.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::Kernels;
+    use core::arch::x86_64::*;
+
+    pub(super) static TABLE: Kernels = Kernels {
+        name: "avx2",
+        l2_sq,
+        dot,
+        l2_sq_batch,
+        dot_batch,
+        l2_sq_gather,
+        dot_gather,
+    };
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let shuf = _mm_movehdup_ps(s);
+        let sums = _mm_add_ps(s, shuf);
+        _mm_cvtss_f32(_mm_add_ss(sums, _mm_movehl_ps(shuf, sums)))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn l2_sq_body(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            let d1 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+            acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+            acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc0 = _mm256_fmadd_ps(d, d, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_body(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+            i += 1;
+        }
+        s
+    }
+
+    // Safe wrappers: the bounds assert makes the raw-pointer bodies
+    // sound for any caller; the table only installs these after runtime
+    // AVX2+FMA detection.
+    fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        assert!(b.len() >= a.len());
+        unsafe { l2_sq_body(a, b) }
+    }
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert!(b.len() >= a.len());
+        unsafe { dot_body(a, b) }
+    }
+
+    batch_and_gather!(l2_sq => l2_sq_batch, l2_sq_gather);
+    batch_and_gather!(dot => dot_batch, dot_gather);
+}
+
+/// AVX-512F kernels (off-by-default `avx512` cargo feature; the
+/// `_mm512_*` intrinsics stabilized in Rust 1.89).
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512 {
+    use super::Kernels;
+    use core::arch::x86_64::*;
+
+    pub(super) static TABLE: Kernels = Kernels {
+        name: "avx512",
+        l2_sq,
+        dot,
+        l2_sq_batch,
+        dot_batch,
+        l2_sq_gather,
+        dot_gather,
+    };
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn l2_sq_body(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm512_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let d = _mm512_sub_ps(_mm512_loadu_ps(pa.add(i)), _mm512_loadu_ps(pb.add(i)));
+            acc = _mm512_fmadd_ps(d, d, acc);
+            i += 16;
+        }
+        let mut s = _mm512_reduce_add_ps(acc);
+        while i < n {
+            let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn dot_body(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm512_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            acc = _mm512_fmadd_ps(_mm512_loadu_ps(pa.add(i)), _mm512_loadu_ps(pb.add(i)), acc);
+            i += 16;
+        }
+        let mut s = _mm512_reduce_add_ps(acc);
+        while i < n {
+            s += *a.get_unchecked(i) * *b.get_unchecked(i);
+            i += 1;
+        }
+        s
+    }
+
+    fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        assert!(b.len() >= a.len());
+        unsafe { l2_sq_body(a, b) }
+    }
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert!(b.len() >= a.len());
+        unsafe { dot_body(a, b) }
+    }
+
+    batch_and_gather!(l2_sq => l2_sq_batch, l2_sq_gather);
+    batch_and_gather!(dot => dot_batch, dot_gather);
+}
+
+/// NEON kernels (baseline on every aarch64 target — no runtime
+/// detection needed): four 4-lane accumulators per iteration.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::Kernels;
+    use core::arch::aarch64::*;
+
+    pub(super) static TABLE: Kernels = Kernels {
+        name: "neon",
+        l2_sq,
+        dot,
+        l2_sq_batch,
+        dot_batch,
+        l2_sq_gather,
+        dot_gather,
+    };
+
+    #[allow(unused_unsafe)]
+    fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+        assert!(b.len() >= a.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut acc2 = vdupq_n_f32(0.0);
+            let mut acc3 = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 16 <= n {
+                let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+                let d2 = vsubq_f32(vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+                let d3 = vsubq_f32(vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+                acc0 = vfmaq_f32(acc0, d0, d0);
+                acc1 = vfmaq_f32(acc1, d1, d1);
+                acc2 = vfmaq_f32(acc2, d2, d2);
+                acc3 = vfmaq_f32(acc3, d3, d3);
+                i += 16;
+            }
+            while i + 4 <= n {
+                let d = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                acc0 = vfmaq_f32(acc0, d, d);
+                i += 4;
+            }
+            let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+            while i < n {
+                let d = *a.get_unchecked(i) - *b.get_unchecked(i);
+                s += d * d;
+                i += 1;
+            }
+            s
+        }
+    }
+
+    #[allow(unused_unsafe)]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        assert!(b.len() >= a.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut acc2 = vdupq_n_f32(0.0);
+            let mut acc3 = vdupq_n_f32(0.0);
+            let mut i = 0;
+            while i + 16 <= n {
+                acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+                acc2 = vfmaq_f32(acc2, vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+                acc3 = vfmaq_f32(acc3, vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+                i += 16;
+            }
+            while i + 4 <= n {
+                acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+                i += 4;
+            }
+            let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+            while i < n {
+                s += *a.get_unchecked(i) * *b.get_unchecked(i);
+                i += 1;
+            }
+            s
+        }
+    }
+
+    batch_and_gather!(l2_sq => l2_sq_batch, l2_sq_gather);
+    batch_and_gather!(dot => dot_batch, dot_gather);
+}
+
+// ---------------------------------------------------------------------
+// Dispatch
+// ---------------------------------------------------------------------
+
+/// Dispatch override state: 0 = unresolved (consult the env on next
+/// use), 1 = auto (hardware detection), 2 = forced scalar.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+const MODE_UNSET: u8 = 0;
+const MODE_AUTO: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+
+static DETECTED: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// `PROXIMA_FORCE_SCALAR` semantics: unset, empty, `0`, `false`, `no`
+/// (any case, surrounding whitespace ignored) leave auto dispatch; any
+/// other value forces the scalar table.
+fn env_forces_scalar(v: Option<&str>) -> bool {
+    match v {
+        None => false,
+        Some(s) => !matches!(
+            s.trim().to_ascii_lowercase().as_str(),
+            "" | "0" | "false" | "no"
+        ),
+    }
+}
+
+#[inline]
+fn resolve_mode() -> u8 {
+    let m = MODE.load(Ordering::Acquire);
+    if m != MODE_UNSET {
+        return m;
+    }
+    let forced = env_forces_scalar(std::env::var("PROXIMA_FORCE_SCALAR").ok().as_deref());
+    let m = if forced { MODE_SCALAR } else { MODE_AUTO };
+    // Racing resolvers agree (the env var is stable), so a plain store
+    // is fine.
+    MODE.store(m, Ordering::Release);
+    m
+}
+
+/// Programmatic dispatch override. `force_scalar(true)` pins the scalar
+/// table process-wide; `force_scalar(false)` resets to *unresolved*, so
+/// the next [`kernels()`] call re-consults `PROXIMA_FORCE_SCALAR` (a
+/// forced-scalar CI job stays scalar even after a test toggles back).
+pub fn force_scalar(on: bool) {
+    MODE.store(if on { MODE_SCALAR } else { MODE_UNSET }, Ordering::Release);
+}
+
+/// The active kernel table: scalar when forced (env or API), otherwise
+/// the widest implementation this CPU supports, detected once.
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    if resolve_mode() == MODE_SCALAR {
+        &SCALAR
+    } else {
+        DETECTED.get_or_init(detect)
+    }
+}
+
+/// The scalar reference table, regardless of dispatch state — benches
+/// and parity tests compare against this without touching the global
+/// override.
+pub fn scalar_kernels() -> &'static Kernels {
+    &SCALAR
+}
+
+/// Name of the table [`kernels()`] currently resolves to.
+pub fn dispatch_name() -> &'static str {
+    kernels().name
+}
+
+fn detect() -> &'static Kernels {
+    detect_arch().unwrap_or(&SCALAR)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Option<&'static Kernels> {
+    if let Some(k) = detect_avx512() {
+        return Some(k);
+    }
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        return Some(&avx2::TABLE);
+    }
+    None
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+fn detect_avx512() -> Option<&'static Kernels> {
+    if is_x86_feature_detected!("avx512f") {
+        Some(&avx512::TABLE)
+    } else {
+        None
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(feature = "avx512")))]
+fn detect_avx512() -> Option<&'static Kernels> {
+    None
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Option<&'static Kernels> {
+    Some(&neon::TABLE)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Option<&'static Kernels> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn naive_l2(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// The module-level policy bound: 1e-4 * max(1, Σ|terms|).
+    fn within_policy(got: f32, want: f32, scale: f32) -> Result<(), String> {
+        if (got - want).abs() <= 1e-4 * scale.max(1.0) {
+            Ok(())
+        } else {
+            Err(format!("got={got} want={want} scale={scale}"))
+        }
+    }
+
+    #[test]
+    fn stride_rounds_up_to_lane_multiples() {
+        assert_eq!(stride_for(1), 16);
+        assert_eq!(stride_for(8), 16);
+        assert_eq!(stride_for(16), 16);
+        assert_eq!(stride_for(17), 32);
+        assert_eq!(stride_for(128), 128);
+        assert_eq!(stride_for(130), 144);
+    }
+
+    #[test]
+    fn aligned_buf_is_64_byte_aligned_and_rezeroes_tails() {
+        let mut buf = AlignedBuf::new();
+        assert!(buf.is_empty());
+        // dim 7 in a stride-16 slot...
+        let padded = buf.fill_padded(&[1.0; 7], 16).to_vec();
+        assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
+        assert_eq!(&padded[..7], &[1.0; 7]);
+        assert_eq!(&padded[7..], &[0.0; 9]);
+        // ...then dim 4 reusing the same slot: the stale 1.0s at
+        // positions 4..7 must be re-zeroed.
+        let padded = buf.fill_padded(&[2.0; 4], 16);
+        assert_eq!(&padded[..4], &[2.0; 4]);
+        assert_eq!(&padded[4..], &[0.0; 12]);
+        // Growing across stride classes keeps alignment.
+        buf.grow_to(160);
+        assert_eq!(buf.len(), 160);
+        assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn aligned_vectors_roundtrip_with_zero_tails() {
+        let dim = 12; // pads to 16
+        let set = VectorSet::new(
+            dim,
+            (0..5 * dim).map(|i| i as f32 * 0.25 - 3.0).collect::<Vec<_>>(),
+        );
+        let av = AlignedVectors::from_set(&set);
+        assert_eq!(av.len(), 5);
+        assert_eq!(av.dim(), 12);
+        assert_eq!(av.stride(), 16);
+        assert_eq!(av.padded_bytes(), 5 * 16 * 4);
+        assert_eq!(av.flat().len(), 5 * 16);
+        assert_eq!(av.flat().as_ptr() as usize % 64, 0);
+        for i in 0..5 {
+            let row = av.row(i);
+            assert_eq!(row.len(), 16);
+            assert_eq!(&row[..dim], set.row(i));
+            assert_eq!(&row[dim..], &[0.0; 4], "row {i} tail must be zero");
+        }
+        assert_eq!(av.to_set().data, set.data);
+    }
+
+    #[test]
+    fn prop_dispatched_kernels_match_naive_within_policy() {
+        // Lengths 1..=256 — odd dims, sub-lane lengths, padded strides —
+        // on deliberately unaligned source slices (offset-by-one views),
+        // for both the detected and the scalar tables.
+        let tables = [kernels(), scalar_kernels()];
+        prop::check(
+            "simd-vs-naive-all-lengths",
+            601,
+            400,
+            |r| {
+                let n = prop::gen::len(r, 256);
+                (
+                    prop::gen::vec_f32(r, n + 1, -4.0, 4.0),
+                    prop::gen::vec_f32(r, n + 1, -4.0, 4.0),
+                )
+            },
+            |(av, bv)| {
+                let (a, b) = (&av[1..], &bv[1..]);
+                for k in tables {
+                    let l2_scale: f32 = naive_l2(a, b);
+                    within_policy((k.l2_sq)(a, b), naive_l2(a, b), l2_scale)
+                        .map_err(|e| format!("{} l2: {e}", k.name))?;
+                    let dot_scale: f32 = a.iter().zip(b).map(|(x, y)| (x * y).abs()).sum();
+                    within_policy((k.dot)(a, b), naive_dot(a, b), dot_scale)
+                        .map_err(|e| format!("{} dot: {e}", k.name))?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn padded_evaluation_matches_unpadded_within_policy() {
+        // Zero tails add exact zeros: padding may reorder the sum but
+        // not change its value beyond the policy tolerance.
+        let mut qa = AlignedBuf::new();
+        let mut qb = AlignedBuf::new();
+        prop::check_default(
+            "padded-vs-unpadded",
+            603,
+            |r| {
+                let n = prop::gen::len(r, 96);
+                (
+                    prop::gen::vec_f32(r, n, -4.0, 4.0),
+                    prop::gen::vec_f32(r, n, -4.0, 4.0),
+                )
+            },
+            |(a, b)| {
+                let k = kernels();
+                let stride = stride_for(a.len());
+                let ap = qa.fill_padded(a, stride).to_vec();
+                let bp = qb.fill_padded(b, stride);
+                let scale = naive_l2(a, b);
+                within_policy((k.l2_sq)(&ap, bp), (k.l2_sq)(a, b), scale)?;
+                let dscale: f32 = a.iter().zip(b).map(|(x, y)| (x * y).abs()).sum();
+                within_policy((k.dot)(&ap, bp), (k.dot)(a, b), dscale)
+            },
+        );
+    }
+
+    #[test]
+    fn batch_and_gather_are_bitwise_the_pair_kernel() {
+        // Tolerance-policy item 2: for BOTH tables, the batched and
+        // gathered forms equal the pairwise kernel per row, bitwise.
+        for k in [kernels(), scalar_kernels()] {
+            for dim in [3usize, 8, 12, 16, 31, 64, 128] {
+                let stride = stride_for(dim);
+                let n = 9;
+                let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.7).sin()).collect();
+                let mut rows = vec![0.0f32; n * stride];
+                for (i, row) in rows.chunks_exact_mut(stride).enumerate() {
+                    for (j, x) in row[..dim].iter_mut().enumerate() {
+                        *x = ((i * dim + j) as f32 * 0.3).cos();
+                    }
+                }
+                let mut out = vec![0.0f32; n];
+                (k.l2_sq_batch)(&q, &rows, stride, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    let want = (k.l2_sq)(&q, &rows[i * stride..i * stride + dim]);
+                    assert_eq!(o.to_bits(), want.to_bits(), "{} l2 batch row {i}", k.name);
+                }
+                (k.dot_batch)(&q, &rows, stride, &mut out);
+                for (i, &o) in out.iter().enumerate() {
+                    let want = (k.dot)(&q, &rows[i * stride..i * stride + dim]);
+                    assert_eq!(o.to_bits(), want.to_bits(), "{} dot batch row {i}", k.name);
+                }
+                let ids: Vec<u32> = vec![8, 0, 3, 3, 7];
+                let mut gout = vec![0.0f32; ids.len()];
+                (k.l2_sq_gather)(&q, &rows, stride, &ids, &mut gout);
+                for (&id, &o) in ids.iter().zip(&gout) {
+                    let base = id as usize * stride;
+                    let want = (k.l2_sq)(&q, &rows[base..base + dim]);
+                    assert_eq!(o.to_bits(), want.to_bits(), "{} l2 gather id {id}", k.name);
+                }
+                (k.dot_gather)(&q, &rows, stride, &ids, &mut gout);
+                for (&id, &o) in ids.iter().zip(&gout) {
+                    let base = id as usize * stride;
+                    let want = (k.dot)(&q, &rows[base..base + dim]);
+                    assert_eq!(o.to_bits(), want.to_bits(), "{} dot gather id {id}", k.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_table_reproduces_the_reference_values() {
+        let k = scalar_kernels();
+        assert_eq!(k.name, "scalar");
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [0.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!((k.l2_sq)(&a, &b), 55.0);
+        assert_eq!((k.dot)(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn env_flag_parser_semantics() {
+        for off in [None, Some(""), Some("0"), Some("false"), Some("no"), Some(" FALSE ")] {
+            assert!(!env_forces_scalar(off), "{off:?} must not force scalar");
+        }
+        for on in [Some("1"), Some("true"), Some("yes"), Some("scalar")] {
+            assert!(env_forces_scalar(on), "{on:?} must force scalar");
+        }
+    }
+
+    // NOTE: the force_scalar()/PROXIMA_FORCE_SCALAR dispatch test lives
+    // in `tests/simd_dispatch.rs` — its own process — because toggling
+    // the global table would race the bitwise parity tests above under
+    // the parallel test harness.
+}

@@ -26,6 +26,19 @@
 //! measured storage-access stream the NAND engine model can replay
 //! ([`replay`]) instead of a synthetic trace.
 //!
+//! # Row layout (SIMD contract)
+//!
+//! Every row a store serves — resident, tiered-hot, or decoded from a
+//! cold read — is handed out in the [`crate::simd`] padded layout: a
+//! 64-byte-aligned slice of [`VectorStore::stride`] f32s (`dim` rounded
+//! up to [`crate::simd::LANES`]) whose tail is zero. Search contexts
+//! that read through a store pad the query to the same stride
+//! (`QueryScratch::qpad`), so the wide kernels never take a remainder
+//! path on the serving hot loop. Cold-tier *metering* stays logical
+//! (`dim * 4` bytes per fetch): padding is a DRAM-side layout choice,
+//! not file I/O. DRAM accounting ([`VectorStore::resident_bytes`]) does
+//! report padded bytes — that is what the process actually pins.
+//!
 //! # Failure contract
 //!
 //! All *structural* failures (truncated BASE section, checksum
@@ -41,6 +54,7 @@ pub mod replay;
 
 use crate::dataset::VectorSet;
 use crate::search::SearchStats;
+use crate::simd::{stride_for, AlignedBuf, AlignedVectors};
 use std::fs::File;
 use std::path::{Path, PathBuf};
 
@@ -91,13 +105,19 @@ impl OpenOptions {
 }
 
 /// Pooled per-query read state for the cold tier: a byte buffer for the
-/// positioned read plus the decoded f32 row. Lives in `QueryScratch`,
-/// so once warmed (first cold read sizes it to one row) the cold-read
-/// path allocates nothing (`tests/zero_alloc.rs` proves it).
+/// positioned read plus the decoded f32 row in the aligned padded
+/// layout. Lives in `QueryScratch`, so once warmed (first cold read
+/// sizes it to one row) the cold-read path allocates nothing
+/// (`tests/zero_alloc.rs` proves it).
 #[derive(Default)]
 pub struct ReadBuf {
     bytes: Vec<u8>,
-    vals: Vec<f32>,
+    vals: AlignedBuf,
+    /// The dim whose padded tail is currently zeroed in `vals`. One
+    /// pooled buffer may serve stores of different dims across batches;
+    /// without re-zeroing, a dim-4 row decoded after a dim-7 row would
+    /// expose the stale floats at positions 4..7 of the shared tail.
+    pad_dim: usize,
 }
 
 impl ReadBuf {
@@ -107,9 +127,16 @@ impl ReadBuf {
 
     #[inline]
     fn ensure(&mut self, dim: usize) {
-        if self.vals.len() < dim {
+        let stride = stride_for(dim);
+        if self.bytes.len() < dim * 4 {
             self.bytes.resize(dim * 4, 0);
-            self.vals.resize(dim, 0.0);
+        }
+        if self.vals.len() != stride || self.pad_dim != dim {
+            self.vals.grow_to(stride);
+            for x in &mut self.vals.as_mut_slice()[dim..] {
+                *x = 0.0;
+            }
+            self.pad_dim = dim;
         }
     }
 }
@@ -127,9 +154,6 @@ pub struct ColdVectors {
     n: usize,
     dim: usize,
     path: PathBuf,
-    /// Dim-carrying empty set, so resident-tier views of a fully-cold
-    /// store still report the right vector shape.
-    empty: VectorSet,
 }
 
 impl ColdVectors {
@@ -143,7 +167,6 @@ impl ColdVectors {
             n,
             dim,
             path: path.to_path_buf(),
-            empty: VectorSet::zeros(0, dim),
         }
     }
 
@@ -164,7 +187,9 @@ impl ColdVectors {
         &self.path
     }
 
-    /// Read row `id` into `buf` and return the decoded floats.
+    /// Read row `id` into `buf` and return the decoded floats as a
+    /// padded `stride_for(dim)`-length slice (zero tail), matching the
+    /// resident-tier row layout bit for bit.
     ///
     /// Panics on an I/O failure (see the module docs: structural
     /// problems were rejected at open; a post-open failure means the
@@ -182,13 +207,13 @@ impl ColdVectors {
                 self.path.display()
             )
         });
-        for (v, ch) in buf.vals[..self.dim]
+        for (v, ch) in buf.vals.as_mut_slice()[..self.dim]
             .iter_mut()
             .zip(buf.bytes[..nbytes].chunks_exact(4))
         {
             *v = f32::from_le_bytes(ch.try_into().unwrap());
         }
-        &buf.vals[..self.dim]
+        buf.vals.as_slice()
     }
 
     /// Read the whole cold region back into an owned [`VectorSet`] —
@@ -249,32 +274,73 @@ pub(crate) fn read_exact_at(file: &File, buf: &mut [u8], off: u64) -> std::io::R
 }
 
 /// Where an index's raw vectors live: the storage abstraction every
-/// `DistanceProvider` reads through.
+/// `DistanceProvider` reads through. DRAM tiers hold rows in the
+/// [`AlignedVectors`] padded layout; every row this store serves is a
+/// `stride()`-length 64-byte-aligned slice with a zero tail.
 #[derive(Debug)]
-pub enum VectorStore {
+pub struct VectorStore {
+    tier: Tier,
+    /// Zero-row, dim-carrying set lent to `SearchContext.base` when the
+    /// context reads rows through the store instead.
+    stub: VectorSet,
+}
+
+#[derive(Debug)]
+enum Tier {
     /// All rows in one owned DRAM buffer (the pre-storage behavior).
-    Resident(VectorSet),
+    Resident(AlignedVectors),
     /// All rows on disk; OS page cache as the cold tier.
     Cold(ColdVectors),
     /// Rows `0..hot.len()` pinned in DRAM (the §IV-E hot prefix), the
     /// rest on disk.
-    Tiered { hot: VectorSet, cold: ColdVectors },
+    Tiered {
+        hot: AlignedVectors,
+        cold: ColdVectors,
+    },
 }
 
 impl VectorStore {
+    /// Fully DRAM-resident store: copies `set` into the padded layout.
+    pub fn resident(set: &VectorSet) -> VectorStore {
+        VectorStore {
+            stub: VectorSet::zeros(0, set.dim),
+            tier: Tier::Resident(AlignedVectors::from_set(set)),
+        }
+    }
+
+    /// Fully cold store: every read hits the artifact file.
+    pub fn cold(cold: ColdVectors) -> VectorStore {
+        VectorStore {
+            stub: VectorSet::zeros(0, cold.dim()),
+            tier: Tier::Cold(cold),
+        }
+    }
+
+    /// Tiered store: `hot` (the reordered prefix, ids `0..hot.len()`)
+    /// pinned in DRAM, the rest served from `cold`.
+    pub fn tiered(hot: &VectorSet, cold: ColdVectors) -> VectorStore {
+        VectorStore {
+            stub: VectorSet::zeros(0, cold.dim()),
+            tier: Tier::Tiered {
+                hot: AlignedVectors::from_set(hot),
+                cold,
+            },
+        }
+    }
+
     pub fn residency(&self) -> Residency {
-        match self {
-            VectorStore::Resident(_) => Residency::Resident,
-            VectorStore::Cold(_) => Residency::Cold,
-            VectorStore::Tiered { .. } => Residency::Tiered,
+        match &self.tier {
+            Tier::Resident(_) => Residency::Resident,
+            Tier::Cold(_) => Residency::Cold,
+            Tier::Tiered { .. } => Residency::Tiered,
         }
     }
 
     pub fn len(&self) -> usize {
-        match self {
-            VectorStore::Resident(s) => s.len(),
-            VectorStore::Cold(c) => c.len(),
-            VectorStore::Tiered { cold, .. } => cold.len(),
+        match &self.tier {
+            Tier::Resident(s) => s.len(),
+            Tier::Cold(c) => c.len(),
+            Tier::Tiered { cold, .. } => cold.len(),
         }
     }
 
@@ -282,62 +348,66 @@ impl VectorStore {
         self.len() == 0
     }
 
+    /// Logical vector dimension (unpadded).
     pub fn dim(&self) -> usize {
-        match self {
-            VectorStore::Resident(s) => s.dim,
-            VectorStore::Cold(c) => c.dim(),
-            VectorStore::Tiered { cold, .. } => cold.dim(),
-        }
+        self.stub.dim
+    }
+
+    /// Served-row length in f32s: [`stride_for`]`(dim)`. Queries must be
+    /// padded to this stride before being compared against store rows.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        stride_for(self.dim())
     }
 
     /// Rows pinned in DRAM: everything for `Resident`, the hot prefix
     /// for `Tiered`, none for `Cold`.
     pub fn n_hot(&self) -> usize {
-        match self {
-            VectorStore::Resident(s) => s.len(),
-            VectorStore::Cold(_) => 0,
-            VectorStore::Tiered { hot, .. } => hot.len(),
+        match &self.tier {
+            Tier::Resident(s) => s.len(),
+            Tier::Cold(_) => 0,
+            Tier::Tiered { hot, .. } => hot.len(),
         }
     }
 
-    /// DRAM bytes pinned by this store's vector payloads — the number
-    /// the wire `status` op reports as `resident_bytes`. Under `Tiered`
-    /// it scales with `hot_frac`, not `n_base`.
+    /// DRAM bytes pinned by this store's vector payloads (padded rows —
+    /// what the process actually maps) — the number the wire `status`
+    /// op reports as `resident_bytes`. Under `Tiered` it scales with
+    /// `hot_frac`, not `n_base`.
     pub fn resident_bytes(&self) -> u64 {
-        match self {
-            VectorStore::Resident(s) => s.data.len() as u64 * 4,
-            VectorStore::Cold(_) => 0,
-            VectorStore::Tiered { hot, .. } => hot.data.len() as u64 * 4,
+        match &self.tier {
+            Tier::Resident(s) => s.padded_bytes(),
+            Tier::Cold(_) => 0,
+            Tier::Tiered { hot, .. } => hot.padded_bytes(),
         }
     }
 
-    /// The DRAM-resident tier as a `VectorSet` view: the full set for
-    /// `Resident`, the hot prefix for `Tiered`, a dim-carrying empty
-    /// set for `Cold`.
-    pub fn resident_set(&self) -> &VectorSet {
-        match self {
-            VectorStore::Resident(s) => s,
-            VectorStore::Cold(c) => &c.empty,
-            VectorStore::Tiered { hot, .. } => hot,
-        }
+    /// A zero-row, dim-carrying `VectorSet` for `SearchContext.base`:
+    /// contexts that read through a store never touch `base` rows, but
+    /// the field still anchors the context's shape.
+    pub fn base_stub(&self) -> &VectorSet {
+        &self.stub
     }
 
-    /// The full vector set, when fully resident.
-    pub fn as_resident(&self) -> Option<&VectorSet> {
-        match self {
-            VectorStore::Resident(s) => Some(s),
+    /// The full padded row matrix plus its stride, when every row is
+    /// DRAM-resident — the input to the gathered rerank kernels. `None`
+    /// for cold/tiered stores (their rerank falls back to per-id reads).
+    #[inline]
+    pub fn resident_rows(&self) -> Option<(&[f32], usize)> {
+        match &self.tier {
+            Tier::Resident(s) => Some((s.flat(), s.stride())),
             _ => None,
         }
     }
 
-    /// Fetch row `id`, charging cold-tier traffic to `stats`. Resident
-    /// rows (including tiered hot hits) are free borrows; cold misses
-    /// read through `buf`.
+    /// Fetch row `id` as its padded `stride()`-length slice, charging
+    /// cold-tier traffic to `stats`. Resident rows (including tiered
+    /// hot hits) are free borrows; cold misses read through `buf`.
     #[inline]
     pub fn row<'r>(&'r self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32] {
-        match self {
-            VectorStore::Resident(s) => s.row(id as usize),
-            VectorStore::Tiered { hot, cold } => {
+        match &self.tier {
+            Tier::Resident(s) => s.row(id as usize),
+            Tier::Tiered { hot, cold } => {
                 if (id as usize) < hot.len() {
                     hot.row(id as usize)
                 } else {
@@ -346,7 +416,7 @@ impl VectorStore {
                     cold.read_row(id, buf)
                 }
             }
-            VectorStore::Cold(c) => {
+            Tier::Cold(c) => {
                 stats.cold_reads += 1;
                 stats.cold_bytes += c.dim() as u64 * 4;
                 c.read_row(id, buf)
@@ -354,13 +424,13 @@ impl VectorStore {
         }
     }
 
-    /// Materialize the FULL vector set in DRAM (the offline `save`
-    /// path of a cold-opened service).
+    /// Materialize the FULL vector set in DRAM, unpadded (the offline
+    /// `save`/serialization path).
     pub fn materialize(&self) -> std::io::Result<VectorSet> {
-        match self {
-            VectorStore::Resident(s) => Ok(s.clone()),
-            VectorStore::Cold(c) => c.read_all(),
-            VectorStore::Tiered { cold, .. } => cold.read_all(),
+        match &self.tier {
+            Tier::Resident(s) => Ok(s.to_set()),
+            Tier::Cold(c) => c.read_all(),
+            Tier::Tiered { cold, .. } => cold.read_all(),
         }
     }
 }
@@ -397,7 +467,8 @@ impl<'a> RowSource<'a> {
     }
 
     /// Fetch row `id` (see [`VectorStore::row`] for the metering and
-    /// failure contract of the store-backed arm).
+    /// failure contract of the store-backed arm). Store-backed rows are
+    /// padded to the store stride; `Set` rows are packed (`dim`-length).
     #[inline]
     pub fn get<'r>(&self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32]
     where
@@ -406,6 +477,20 @@ impl<'a> RowSource<'a> {
         match self {
             RowSource::Set(s) => s.row(id as usize),
             RowSource::Store(s) => s.row(id, buf, stats),
+        }
+    }
+
+    /// The backing rows as one flat row-major slice plus stride, when
+    /// contiguously DRAM-resident: a packed `VectorSet` (stride = dim)
+    /// or a fully-resident store (padded stride). `None` when rows may
+    /// come from the cold tier — callers fall back to per-id [`get`].
+    ///
+    /// [`get`]: RowSource::get
+    #[inline]
+    pub fn flat(&self) -> Option<(&'a [f32], usize)> {
+        match *self {
+            RowSource::Set(s) => Some((&s.data, s.dim)),
+            RowSource::Store(s) => s.resident_rows(),
         }
     }
 }
@@ -448,9 +533,13 @@ mod tests {
         let mut buf = ReadBuf::new();
         for id in [0u32, 1, 9, 19] {
             let got = cold.read_row(id, &mut buf);
+            // Decoded rows come back in the padded layout: stride-length,
+            // zero tail, prefix bitwise-equal to the packed source.
+            assert_eq!(got.len(), stride_for(7));
+            assert!(got[7..].iter().all(|&x| x == 0.0), "row {id} tail");
             let want = set.row(id as usize);
             assert!(
-                got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                got[..7].iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "row {id} differs"
             );
         }
@@ -460,26 +549,76 @@ mod tests {
     }
 
     #[test]
+    fn read_buf_rezeroes_tail_when_dim_changes() {
+        // One pooled ReadBuf serving stores of different dims must not
+        // leak a larger dim's floats into a smaller dim's padded tail.
+        let (cold7, set7, path7) = cold_fixture(4, 7);
+        let (cold4, set4, path4) = cold_fixture(4, 4);
+        let mut buf = ReadBuf::new();
+        let row7 = cold7.read_row(1, &mut buf).to_vec();
+        assert_eq!(&row7[..7], set7.row(1));
+        let row4 = cold4.read_row(1, &mut buf);
+        assert_eq!(&row4[..4], set4.row(1));
+        assert!(row4[4..].iter().all(|&x| x == 0.0), "stale tail survived");
+        std::fs::remove_file(&path7).ok();
+        std::fs::remove_file(&path4).ok();
+    }
+
+    #[test]
     fn store_meters_cold_traffic_and_serves_hot_hits_free() {
         let (cold, set, path) = cold_fixture(10, 4);
         let hot = VectorSet::new(4, set.data[..3 * 4].to_vec());
-        let store = VectorStore::Tiered { hot, cold };
+        let store = VectorStore::tiered(&hot, cold);
         assert_eq!(store.residency(), Residency::Tiered);
         assert_eq!(store.len(), 10);
+        assert_eq!(store.dim(), 4);
+        assert_eq!(store.stride(), 16);
         assert_eq!(store.n_hot(), 3);
-        assert_eq!(store.resident_bytes(), 3 * 4 * 4);
+        // DRAM accounting is over PADDED rows (what the process pins).
+        assert_eq!(store.resident_bytes(), 3 * 16 * 4);
+        assert!(store.resident_rows().is_none(), "tiered is not fully resident");
         let mut buf = ReadBuf::new();
         let mut stats = SearchStats::default();
-        // Hot hit: no cold traffic.
-        assert_eq!(store.row(2, &mut buf, &mut stats), set.row(2));
+        // Hot hit: no cold traffic; padded stride-length row.
+        let row = store.row(2, &mut buf, &mut stats);
+        assert_eq!(row.len(), 16);
+        assert_eq!(&row[..4], set.row(2));
+        assert!(row[4..].iter().all(|&x| x == 0.0));
         assert_eq!(stats.cold_reads, 0);
-        // Cold miss: one read of dim*4 bytes.
-        assert_eq!(store.row(7, &mut buf, &mut stats), set.row(7));
+        // Cold miss: one read of LOGICAL dim*4 bytes (padding is a
+        // DRAM-side layout, not file traffic).
+        assert_eq!(&store.row(7, &mut buf, &mut stats)[..4], set.row(7));
         assert_eq!(stats.cold_reads, 1);
         assert_eq!(stats.cold_bytes, 16);
-        // Materialize returns the full set.
+        // Materialize returns the full packed (unpadded) set.
         assert_eq!(store.materialize().unwrap().data, set.data);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resident_store_serves_padded_aligned_rows() {
+        let set = VectorSet::new(3, (0..12).map(|i| i as f32).collect::<Vec<_>>());
+        let store = VectorStore::resident(&set);
+        assert_eq!(store.residency(), Residency::Resident);
+        assert_eq!(store.dim(), 3);
+        assert_eq!(store.stride(), 16);
+        assert_eq!(store.n_hot(), 4);
+        assert_eq!(store.resident_bytes(), 4 * 16 * 4);
+        assert_eq!(store.base_stub().dim, 3);
+        assert_eq!(store.base_stub().len(), 0);
+        let (flat, stride) = store.resident_rows().expect("fully resident");
+        assert_eq!(stride, 16);
+        assert_eq!(flat.len(), 4 * 16);
+        assert_eq!(flat.as_ptr() as usize % 64, 0, "rows must be 64-byte aligned");
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        for i in 0..4u32 {
+            let row = store.row(i, &mut buf, &mut stats);
+            assert_eq!(&row[..3], set.row(i as usize));
+            assert!(row[3..].iter().all(|&x| x == 0.0));
+        }
+        assert_eq!(stats.cold_reads, 0);
+        assert_eq!(store.materialize().unwrap().data, set.data);
     }
 
     #[test]

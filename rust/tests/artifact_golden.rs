@@ -145,11 +145,12 @@ fn golden_v1_artifact_opens_cold_and_tiered_identically() {
         .unwrap_or_else(|e| panic!("golden fixture must open {}: {e}", residency.name()));
         assert_eq!(svc.storage.residency(), residency);
         assert_eq!(svc.n_base(), 64);
-        // hot_frac = 0.03125 over 64 vectors → a 2-row DRAM hot tier.
+        // hot_frac = 0.03125 over 64 vectors → a 2-row DRAM hot tier
+        // (rows SIMD-padded: dim 8 pads to stride 16).
         match residency {
             Residency::Tiered => {
                 assert_eq!(svc.storage.n_hot(), 2);
-                assert_eq!(svc.storage.resident_bytes(), 2 * 8 * 4);
+                assert_eq!(svc.storage.resident_bytes(), 2 * 16 * 4);
             }
             _ => assert_eq!(svc.storage.resident_bytes(), 0),
         }

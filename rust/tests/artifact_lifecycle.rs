@@ -407,7 +407,7 @@ fn reordered_artifacts_answer_in_original_id_space() {
     let (ds, svc) = service(41);
     let base = svc.resident_base().expect("built services are resident");
     let profile = VisitProfile::measure(
-        base,
+        &base,
         &svc.graph,
         &svc.codebook,
         &svc.codes,
@@ -418,7 +418,7 @@ fn reordered_artifacts_answer_in_original_id_space() {
     let re = ReorderedIndex::build(&svc.graph, &svc.codes, &profile, 0.05);
     let path = dir.join("reordered.pxa");
     let written = re
-        .write_artifact(&svc.spec, base, &svc.codebook, &path)
+        .write_artifact(&svc.spec, &base, &svc.codebook, &path)
         .unwrap();
     assert_eq!(written.hot_frac, re.n_hot as f64 / ds.n_base() as f64);
 

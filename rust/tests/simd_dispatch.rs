@@ -1,0 +1,86 @@
+//! Dispatch-control acceptance tests for the SIMD kernel layer. These
+//! live in their own integration binary (own process) because they
+//! toggle the process-wide dispatch mode — running them alongside the
+//! unit tests would race every concurrently-executing distance call.
+
+use proxima::simd;
+
+/// One test fn drives every scenario IN ORDER — `force_scalar` is
+/// process-global state, so independent #[test] fns (which run on a
+/// shared thread pool) would interleave toggles.
+#[test]
+fn dispatch_controls_select_and_restore_kernel_tables() {
+    let env_forced = std::env::var("PROXIMA_FORCE_SCALAR")
+        .map(|v| {
+            let t = v.trim().to_ascii_lowercase();
+            !(t.is_empty() || t == "0" || t == "false" || t == "no")
+        })
+        .unwrap_or(false);
+
+    // 1. The env contract: a forcing PROXIMA_FORCE_SCALAR (the CI
+    //    forced-scalar job sets "1") must pin the scalar table from the
+    //    very first dispatch; otherwise auto-detection picks the best
+    //    table for this host.
+    if env_forced {
+        assert_eq!(simd::dispatch_name(), "scalar", "env must force scalar");
+    } else {
+        let name = simd::dispatch_name();
+        assert!(
+            ["scalar", "avx2", "avx512", "neon"].contains(&name),
+            "unknown dispatch table {name:?}"
+        );
+    }
+
+    // 2. The API escape hatch selects the fallback regardless of host
+    //    features, and kernels() then IS the scalar table.
+    simd::force_scalar(true);
+    assert_eq!(simd::dispatch_name(), "scalar");
+    let forced = simd::kernels();
+    let scalar = simd::scalar_kernels();
+    assert_eq!(forced.name, scalar.name);
+    assert!(std::ptr::eq(forced, scalar), "forced table must BE the scalar table");
+
+    // 3. Forced-scalar results are bitwise the reference scalar loops.
+    let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.37).sin()).collect();
+    let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.73).cos()).collect();
+    assert_eq!((forced.l2_sq)(&a, &b).to_bits(), (scalar.l2_sq)(&a, &b).to_bits());
+    assert_eq!((forced.dot)(&a, &b).to_bits(), (scalar.dot)(&a, &b).to_bits());
+
+    // 4. Releasing the override re-resolves the ENV (it does not blindly
+    //    flip to auto): under the CI forced-scalar job the table must
+    //    stay scalar after a force_scalar(true)/false round trip.
+    simd::force_scalar(false);
+    if env_forced {
+        assert_eq!(
+            simd::dispatch_name(),
+            "scalar",
+            "force_scalar(false) must yield back to PROXIMA_FORCE_SCALAR"
+        );
+    } else {
+        let name = simd::dispatch_name();
+        assert!(
+            ["scalar", "avx2", "avx512", "neon"].contains(&name),
+            "auto dispatch must be restored, got {name:?}"
+        );
+    }
+
+    // 5. Whatever table is live, the batch forms remain bitwise the
+    //    pairwise kernel per row (the invariant every caller leans on).
+    let k = simd::kernels();
+    let dim = 24;
+    let stride = simd::stride_for(dim);
+    assert_eq!(stride, 32);
+    let mut rows = vec![0.0f32; 4 * stride];
+    for (i, r) in rows.chunks_exact_mut(stride).enumerate() {
+        for (j, x) in r[..dim].iter_mut().enumerate() {
+            *x = ((i * 17 + j) as f32 * 0.21).sin();
+        }
+    }
+    let q: Vec<f32> = (0..dim).map(|j| (j as f32 * 0.11).cos()).collect();
+    let mut out = vec![0.0f32; 4];
+    (k.l2_sq_batch)(&q, &rows, stride, &mut out);
+    for (i, &o) in out.iter().enumerate() {
+        let want = (k.l2_sq)(&q, &rows[i * stride..i * stride + dim]);
+        assert_eq!(o.to_bits(), want.to_bits(), "row {i}");
+    }
+}

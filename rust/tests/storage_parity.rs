@@ -106,8 +106,12 @@ fn all_residencies_answer_bitwise_identically_in_every_mode() {
         }
     }
     // This spec has hot_frac = 0 (no reordering), so Tiered degrades to
-    // an empty hot tier: zero vector bytes resident, like Cold.
-    assert_eq!(opened[0].storage.resident_bytes(), 400 * 12 * 4);
+    // an empty hot tier: zero vector bytes resident, like Cold. Resident
+    // DRAM counts the SIMD-padded rows (dim 12 pads to stride 16).
+    assert_eq!(
+        opened[0].storage.resident_bytes(),
+        400 * proxima::simd::stride_for(12) as u64 * 4
+    );
     assert_eq!(opened[1].storage.resident_bytes(), 0);
     assert_eq!(opened[2].storage.resident_bytes(), 0);
     assert_eq!(opened[2].storage.n_hot(), 0);
@@ -127,7 +131,7 @@ fn tiered_residency_pins_hot_frac_not_n_base_on_reordered_artifacts() {
     let (ds, svc) = service(41);
     let base = svc.resident_base().unwrap();
     let profile = VisitProfile::measure(
-        base,
+        &base,
         &svc.graph,
         &svc.codebook,
         &svc.codes,
@@ -137,18 +141,19 @@ fn tiered_residency_pins_hot_frac_not_n_base_on_reordered_artifacts() {
     );
     let re = ReorderedIndex::build(&svc.graph, &svc.codes, &profile, 0.1);
     let path = tmpdir().join("reordered-parity.pxa");
-    re.write_artifact(&svc.spec, base, &svc.codebook, &path).unwrap();
+    re.write_artifact(&svc.spec, &base, &svc.codebook, &path).unwrap();
 
     let opened = open_each(&path, svc.params);
+    let stride_bytes = proxima::simd::stride_for(ds.dim()) as u64 * 4;
     assert_eq!(opened[2].storage.n_hot(), re.n_hot);
     assert_eq!(
         opened[2].storage.resident_bytes(),
-        re.n_hot as u64 * ds.dim() as u64 * 4,
-        "tiered DRAM must be hot_frac-sized"
+        re.n_hot as u64 * stride_bytes,
+        "tiered DRAM must be hot_frac-sized (padded rows)"
     );
     assert_eq!(
         opened[0].storage.resident_bytes(),
-        ds.n_base() as u64 * ds.dim() as u64 * 4,
+        ds.n_base() as u64 * stride_bytes,
         "resident DRAM scales with n_base"
     );
     assert!(opened[2].storage.resident_bytes() < opened[0].storage.resident_bytes() / 5);
@@ -288,7 +293,7 @@ fn cold_open_rejects_unnormalized_angular_bases() {
         SearchParams::default(),
         false,
     );
-    let mut bad_base = svc.resident_base().unwrap().clone();
+    let mut bad_base = svc.resident_base().unwrap();
     for x in bad_base.data.iter_mut() {
         *x *= 2.0;
     }

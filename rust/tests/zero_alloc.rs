@@ -166,7 +166,7 @@ fn steady_state_cold_reads_do_not_allocate() {
     )
     .unwrap();
     let ctx = SearchContext {
-        base: cold.storage.resident_set(),
+        base: cold.storage.base_stub(),
         metric: cold.metric,
         graph: &cold.graph,
         codes: Some(&cold.codes),
@@ -227,6 +227,90 @@ fn steady_state_cold_reads_do_not_allocate() {
         ds.n_queries()
     );
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn steady_state_resident_store_aligned_path_does_not_allocate() {
+    // The SIMD-padded service path (storage: Some over a fully-resident
+    // aligned store, query padded into scratch.qpad each call) must hold
+    // the same zero-allocation bar as the plain unpadded path above —
+    // for both the Proxima walk and the DiskANN-PQ gathered rerank
+    // (scratch.rerank_ids / rerank_dists through exact_batch).
+    use proxima::search::beam::pq_beam_search_into;
+    use proxima::storage::VectorStore;
+
+    let ds = tiny_uniform(500, 12, Metric::L2, 81); // dim 12: padded tail in play
+    let g = vamana::build(
+        &ds.base,
+        ds.metric,
+        &GraphParams {
+            r: 16,
+            build_l: 32,
+            alpha: 1.2,
+            seed: 81,
+        },
+    );
+    let cb = PqCodebook::train(&ds.base, ds.metric, 6, 32, 500, 6, 81);
+    let codes = cb.encode(&ds.base);
+    let store = VectorStore::resident(&ds.base);
+    let ctx = SearchContext {
+        base: store.base_stub(),
+        metric: ds.metric,
+        graph: &g,
+        codes: Some(&codes),
+        gap: None,
+        storage: Some(&store),
+    };
+    let params = SearchParams {
+        l: 60,
+        k: 10,
+        ..Default::default()
+    };
+
+    let mut scratch = QueryScratch::new();
+    let mut adt = Adt::default();
+    let mut out = SearchOutput::default();
+    for _ in 0..2 {
+        for qi in 0..ds.n_queries() {
+            let q = ds.queries.row(qi);
+            cb.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+            pq_beam_search_into(&ctx, &adt, q, 10, 60, 30, false, &mut scratch, &mut out);
+        }
+    }
+
+    let before = THREAD_ALLOCS.with(|c| c.get());
+    for qi in 0..ds.n_queries() {
+        let q = ds.queries.row(qi);
+        cb.build_adt_into(q, &mut adt);
+        proxima_search_into(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        pq_beam_search_into(&ctx, &adt, q, 10, 60, 30, false, &mut scratch, &mut out);
+    }
+    let allocs = THREAD_ALLOCS.with(|c| c.get()) - before;
+    assert_eq!(
+        allocs, 0,
+        "steady-state ALIGNED query path allocated {allocs} times over {} queries",
+        ds.n_queries()
+    );
+    assert_eq!(out.ids.len(), 10);
 }
 
 #[test]
