@@ -43,6 +43,13 @@
 //! {"v":2,"op":"status"}  /  {"v":2,"op":"reload","path":...}  # operate
 //! ```
 //!
+//! The served index is also MUTABLE over the same wire: the final phase
+//! drives the v2 write plane (`{"v":2,"op":"insert"|"delete"|"flush"}`)
+//! — insert a vector and find it immediately, tombstone it and watch it
+//! vanish from results, then `flush` a compacted artifact back to disk
+//! and hot-swap onto it, all while the connection keeps answering
+//! queries.
+//!
 //! # The execution model behind the wire
 //!
 //! Every batch — a v2 multi-query line, a batcher flush, a shard
@@ -316,6 +323,60 @@ fn main() -> proxima::util::error::Result<()> {
     assert!(cs.cold_reads > 0, "cold serving must meter its file reads");
     assert!(storage_of(&status, "cold_reads") >= cs.cold_reads as f64);
     println!("cold parity         : in-place file serving matches resident answers");
+
+    // --- Online updates over the same wire: insert → query → delete →
+    // flush. Writers serialize behind a single-writer queue and publish
+    // epoch snapshots; queries pin one snapshot per walk and never block
+    // on a writer. `flush` (no path) compacts back to the artifact the
+    // served index was opened from and hot-swaps the successor — the
+    // write is atomic (temp + rename), so the old epoch keeps serving
+    // its inode until its last in-flight query completes.
+    println!("\n=== online updates (insert -> query -> delete -> flush) ===");
+    let (new_id, epoch) = c.insert(probe_q)?;
+    println!("insert              : id={new_id} epoch={epoch}");
+    let found = c.search_with_options(probe_q, 1, &QueryOptions::default())?;
+    assert_eq!(
+        found.results[0].ids,
+        vec![new_id],
+        "an insert must be findable the moment it returns"
+    );
+    let (deleted, epoch) = c.delete(new_id)?;
+    assert!(deleted);
+    println!("delete              : id={new_id} epoch={epoch} (tombstoned, still traversable)");
+    let gone = c.search_with_options(probe_q, k, &QueryOptions::default())?;
+    assert!(
+        !gone.results[0].ids.contains(&new_id),
+        "a delete must be excluded the moment it returns"
+    );
+    let flushed = c.flush(None)?;
+    println!(
+        "flush               : path={} n_live={} epoch={}",
+        flushed.get("path").and_then(Json::as_str).unwrap_or("?"),
+        flushed.get("n_live").and_then(Json::as_f64).unwrap_or(-1.0),
+        flushed.get("epoch").and_then(Json::as_f64).unwrap_or(-1.0),
+    );
+    let status = c.status()?;
+    let online_of = |s: &Json, key: &str| {
+        s.get("online")
+            .and_then(|o| o.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0)
+    };
+    assert_eq!(
+        online_of(&status, "n_tombstoned"),
+        0.0,
+        "flush compacts tombstones away"
+    );
+    assert_eq!(online_of(&status, "inserts_total"), 1.0);
+    assert_eq!(online_of(&status, "deletes_total"), 1.0);
+    assert_eq!(online_of(&status, "flushes_total"), 1.0);
+    let after_flush = c.search_with_options(probe_q, k, &QueryOptions::default())?;
+    let flush_recall = proxima::dataset::recall_at_k(&after_flush.results[0].ids, gt.row(0), k);
+    println!("post-flush recall@{k}: {flush_recall:.2} (exact ground truth, all base ids survived)");
+    assert!(
+        flush_recall >= 0.6,
+        "compaction must not crater graph quality: {flush_recall}"
+    );
     std::fs::remove_file(&art_path).ok();
 
     // Shut down cleanly.

@@ -46,6 +46,14 @@ pub enum WireRequest {
         path: String,
         residency: Option<Residency>,
     },
+    /// v2 write plane: insert one vector into the served index.
+    Insert { vector: Vec<f32> },
+    /// v2 write plane: tombstone one id (original id space).
+    Delete { id: u32 },
+    /// v2 write plane: compact + re-save the served index and hot-swap
+    /// the successor. `None` flushes back to the artifact the index was
+    /// opened from.
+    Flush { path: Option<String> },
     Shutdown,
 }
 
@@ -79,6 +87,37 @@ pub fn encode_request_v1(query: &[f32], k: usize) -> Json {
         ("query", Json::arr_num(query.iter().map(|&x| x as f64))),
         ("k", Json::num(k as f64)),
     ])
+}
+
+/// Encode a v2 write-plane insert request.
+pub fn encode_insert(vector: &[f32]) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(VERSION as f64)),
+        ("op", Json::str("insert")),
+        ("vector", Json::arr_num(vector.iter().map(|&x| x as f64))),
+    ])
+}
+
+/// Encode a v2 write-plane delete request.
+pub fn encode_delete(id: u32) -> Json {
+    Json::obj(vec![
+        ("v", Json::num(VERSION as f64)),
+        ("op", Json::str("delete")),
+        ("id", Json::num(id as f64)),
+    ])
+}
+
+/// Encode a v2 write-plane flush request (`None` = flush back to the
+/// artifact the served index was opened from).
+pub fn encode_flush(path: Option<&str>) -> Json {
+    let mut kvs = vec![
+        ("v", Json::num(VERSION as f64)),
+        ("op", Json::str("flush")),
+    ];
+    if let Some(p) = path {
+        kvs.push(("path", Json::str(p)));
+    }
+    Json::obj(kvs)
 }
 
 /// Decode one request line (any version) into a [`WireRequest`].
@@ -126,6 +165,37 @@ pub fn decode_request(j: &Json) -> Result<WireRequest, ApiError> {
                 path: path.to_string(),
                 residency,
             })
+        }
+        // Write-plane ops (v2): new names like the admin ops above, so
+        // the same no-collision argument lets them decode regardless of
+        // the line's `v`.
+        "insert" => {
+            let vector = j
+                .get("vector")
+                .ok_or_else(|| ApiError::bad_request("insert requires a 'vector' array"))?;
+            Ok(WireRequest::Insert {
+                vector: decode_vector(vector)
+                    .map_err(|e| ApiError::bad_request(format!("insert vector: {}", e.message)))?,
+            })
+        }
+        "delete" => {
+            let id = j
+                .get("id")
+                .ok_or_else(|| ApiError::bad_request("delete requires an 'id'"))?;
+            Ok(WireRequest::Delete {
+                id: as_index(id, "delete 'id'")? as u32,
+            })
+        }
+        "flush" => {
+            let path = match j.get("path") {
+                None => None,
+                Some(p) => Some(
+                    p.as_str()
+                        .ok_or_else(|| ApiError::bad_request("flush 'path' must be a string"))?
+                        .to_string(),
+                ),
+            };
+            Ok(WireRequest::Flush { path })
         }
         "shutdown" => Ok(WireRequest::Shutdown),
         "search" => {
@@ -659,6 +729,47 @@ mod tests {
         let e = decode_request(&j).unwrap_err();
         assert_eq!(e.code, ApiErrorCode::BadRequest);
         assert!(e.message.contains("residency"), "{}", e.message);
+    }
+
+    #[test]
+    fn write_plane_ops_roundtrip() {
+        // insert: encoder → decoder carries the vector bit-exactly.
+        let line = reparse(&encode_insert(&[0.5, -2.25, 7.0]));
+        match decode_request(&line).unwrap() {
+            WireRequest::Insert { vector } => assert_eq!(vector, vec![0.5, -2.25, 7.0]),
+            other => panic!("wrong op: {other:?}"),
+        }
+        // delete carries the id through the strict integer decode.
+        let line = reparse(&encode_delete(4_000_000_000));
+        match decode_request(&line).unwrap() {
+            WireRequest::Delete { id } => assert_eq!(id, 4_000_000_000),
+            other => panic!("wrong op: {other:?}"),
+        }
+        // flush: with and without an explicit path.
+        let line = reparse(&encode_flush(Some("/tmp/x.pxa")));
+        match decode_request(&line).unwrap() {
+            WireRequest::Flush { path } => assert_eq!(path.as_deref(), Some("/tmp/x.pxa")),
+            other => panic!("wrong op: {other:?}"),
+        }
+        let line = reparse(&encode_flush(None));
+        match decode_request(&line).unwrap() {
+            WireRequest::Flush { path } => assert_eq!(path, None),
+            other => panic!("wrong op: {other:?}"),
+        }
+        // Malformed write-plane lines are typed rejections.
+        for bad in [
+            r#"{"v":2,"op":"insert"}"#,
+            r#"{"v":2,"op":"insert","vector":"oops"}"#,
+            r#"{"v":2,"op":"insert","vector":[1,"x"]}"#,
+            r#"{"v":2,"op":"delete"}"#,
+            r#"{"v":2,"op":"delete","id":-3}"#,
+            r#"{"v":2,"op":"delete","id":2.5}"#,
+            r#"{"v":2,"op":"flush","path":7}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            let e = decode_request(&j).expect_err(bad);
+            assert_eq!(e.code, ApiErrorCode::BadRequest, "{bad}");
+        }
     }
 
     #[test]

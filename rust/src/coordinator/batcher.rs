@@ -12,6 +12,14 @@
 //! share a single ADT build, per-query tasks rebalance by work-stealing,
 //! and a panicking request is answered `Err(Internal)` for that request
 //! only — the loop, the pool, and the batch-mates all survive.
+//!
+//! Interaction with the online write plane: the batcher loads its
+//! [`SearchService`] from the [`ServiceCell`] per FLUSH, and each query
+//! in the flushed batch pins one write-plane snapshot for its walk
+//! (`crate::online`), so batched queries never block on concurrent
+//! `insert`/`delete`/`flush` — a batch dispatched before a mutation
+//! publishes simply answers from the pre-mutation epoch, exactly like
+//! an un-batched query.
 
 use super::{BatchQuery, ServiceCell};
 use crate::api::{ApiError, QueryOptions};

@@ -7,6 +7,13 @@
 //!   driving the v2 batch RPC ([`Client::search_batch`]), so throughput
 //!   numbers reflect amortized round-trips (B queries per line turn)
 //!   instead of one-query-per-round-trip chatter.
+//! * [`run_mixed`] — mixed read/write churn against the online write
+//!   plane (`SearchService::{insert, delete}` interleaved with
+//!   searches), reporting **recall over time**: recall@k is re-measured
+//!   against the exact LIVE ground truth
+//!   ([`SearchService::exact_nn_live`]) at checkpoints through the
+//!   churn, so index-quality decay under mutation is a first-class
+//!   load-test output, not just latency.
 
 use super::server::Client;
 use super::SearchService;
@@ -184,6 +191,91 @@ pub fn run_rpc(
     })
 }
 
+/// Result of one mixed read/write churn run ([`run_mixed`]).
+#[derive(Debug, Clone)]
+pub struct MixedLoadReport {
+    /// Searches issued (across all checkpoints).
+    pub queries: usize,
+    /// Write ops that succeeded.
+    pub inserts: usize,
+    pub deletes: usize,
+    /// Mean recall@k against the exact live ground truth: entry 0 is
+    /// measured before any churn, then one entry per checkpoint. A
+    /// healthy write plane keeps this flat; a decaying one trends down.
+    pub recall_timeline: Vec<f64>,
+    /// Query latency percentiles (µs) over the whole run.
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+/// Churn `writes` insert+delete pairs through `service`'s write plane,
+/// interleaved with searches: each step inserts one synthetic vector
+/// (seeded, reproducible) and tombstones one random base id, and at
+/// `checkpoints` evenly spaced points the full query sample is searched
+/// and scored against [`SearchService::exact_nn_live`] — ground truth
+/// that tracks the live id set, so the score isolates GRAPH-quality
+/// decay from membership drift. Runs in the calling thread: the
+/// concurrency contract is pinned by `tests/online_stress.rs`; this
+/// measures quality-over-churn deterministically.
+pub fn run_mixed(
+    service: &SearchService,
+    queries: &crate::dataset::VectorSet,
+    k: usize,
+    writes: usize,
+    checkpoints: usize,
+    seed: u64,
+) -> MixedLoadReport {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let dim = service.dim();
+    let n0 = service.n_base().max(1) as u64;
+    let sample = queries.len().min(16).max(1);
+    let mut inserts = 0usize;
+    let mut deletes = 0usize;
+    let mut nq = 0usize;
+    let mut lats: Vec<f64> = Vec::new();
+    let mut recall_timeline: Vec<f64> = Vec::new();
+
+    let measure = |lats: &mut Vec<f64>, nq: &mut usize| -> f64 {
+        let mut r = 0.0;
+        for qi in 0..sample {
+            let q = queries.row(qi);
+            let gt = service.exact_nn_live(q, k);
+            let t0 = Instant::now();
+            let out = service.search(q, k);
+            lats.push(t0.elapsed().as_secs_f64() * 1e6);
+            *nq += 1;
+            r += crate::dataset::recall_at_k(&out.ids, &gt, k);
+        }
+        r / sample as f64
+    };
+
+    recall_timeline.push(measure(&mut lats, &mut nq)); // pre-churn baseline
+    let per_cp = writes.max(1).div_ceil(checkpoints.max(1));
+    for w in 0..writes {
+        let v: Vec<f32> = (0..dim).map(|_| rng.next_f64() as f32).collect();
+        if service.insert(&v).is_ok() {
+            inserts += 1;
+        }
+        // Random victim in the ORIGINAL base id space; an already-
+        // tombstoned pick is an idempotent no-op (deleted=false).
+        let victim = (rng.next_u64() % n0) as u32;
+        if matches!(service.delete(victim), Ok((true, _))) {
+            deletes += 1;
+        }
+        if (w + 1) % per_cp == 0 || w + 1 == writes {
+            recall_timeline.push(measure(&mut lats, &mut nq));
+        }
+    }
+    MixedLoadReport {
+        queries: nq,
+        inserts,
+        deletes,
+        recall_timeline,
+        p50_us: crate::util::percentile(&lats, 50.0),
+        p95_us: crate::util::percentile(&lats, 95.0),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +326,48 @@ mod tests {
             report.achieved_qps,
             report.offered_qps
         );
+    }
+
+    #[test]
+    fn mixed_loadgen_reports_recall_over_time() {
+        let ds = tiny_uniform(300, 8, Metric::L2, 47);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 47,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 300,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 40,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        );
+        // 10% churn in 3 checkpoints.
+        let rep = run_mixed(&svc, &ds.queries, 5, 30, 3, 7);
+        assert_eq!(rep.inserts, 30);
+        assert!(rep.deletes > 0 && rep.deletes <= 30);
+        assert_eq!(
+            rep.recall_timeline.len(),
+            4,
+            "baseline + one entry per checkpoint"
+        );
+        assert!(rep.queries >= 4 * 16);
+        assert!(rep.p95_us >= rep.p50_us);
+        // Recall is measured against the LIVE ground truth, so churn
+        // must not crater it (tombstones stay traversable).
+        for (i, r) in rep.recall_timeline.iter().enumerate() {
+            assert!(*r > 0.6, "checkpoint {i}: recall {r}");
+        }
     }
 
     #[test]

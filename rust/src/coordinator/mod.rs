@@ -78,15 +78,17 @@ use crate::exec::ExecPool;
 use crate::gap::GapGraph;
 use crate::graph::{vamana, Graph};
 use crate::nand::NandConfig;
+use crate::online::{compact, IndexRefs, OnlineSnapshot, OnlineState};
 use crate::pq::{Adt, AdtBatch, PqCodebook, PqCodes};
 use crate::runtime::service::RuntimeHandle;
 use crate::search::beam::{accurate_beam_search_into, pq_beam_search_into, SearchContext};
 use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
 use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
-use crate::storage::{ColdVectors, OpenOptions, Residency, VectorStore};
+use crate::simd::AlignedBuf;
+use crate::storage::{ColdVectors, OpenOptions, ReadBuf, Residency, RowSource, VectorStore};
 use std::cell::RefCell;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -191,6 +193,13 @@ pub struct SearchService {
     pub mapping: Option<DataMapping>,
     pub params: SearchParams,
     pub features: ProximaFeatures,
+    /// Graph-build parameters (degree bound R, prune slack α, build-time
+    /// search width) — the write plane reuses them for online inserts,
+    /// repair re-pruning, and flush compaction.
+    pub graph_params: GraphParams,
+    /// The online write plane: epoch-published mutation snapshots plus
+    /// the single-writer queue (`SearchService::{insert, delete, flush}`).
+    pub online: OnlineState,
     /// AOT runtime service thread; when present the per-query ADT (and
     /// batch APIs) run through the compiled XLA artifacts. The PJRT
     /// handles are pinned to that thread (they are not `Send`).
@@ -269,6 +278,8 @@ impl SearchService {
             mapping: None,
             params,
             features: ProximaFeatures::default(),
+            graph_params: gp.clone(),
+            online: OnlineState::new(ds.n_base(), ds.dim(), pq.m),
             runtime,
             xla_preferred: use_xla,
             stats: ServiceStats::default(),
@@ -422,6 +433,13 @@ impl SearchService {
         let id_map = reorder
             .as_ref()
             .map(|perm| crate::reorder::invert_permutation(perm));
+        let graph_params = GraphParams {
+            r: spec.graph_r as usize,
+            build_l: spec.graph_build_l as usize,
+            alpha: spec.graph_alpha,
+            seed: spec.build_seed,
+        };
+        let online = OnlineState::new(storage.len(), storage.dim(), spec.pq_m as usize);
         Ok(SearchService {
             name: spec.dataset.clone(),
             provenance: IndexProvenance::Artifact {
@@ -438,6 +456,8 @@ impl SearchService {
             mapping,
             params,
             features: ProximaFeatures::default(),
+            graph_params,
+            online,
             runtime,
             xla_preferred: use_xla,
             stats: ServiceStats::default(),
@@ -491,6 +511,32 @@ impl SearchService {
             codes: Some(&self.codes),
             gap: self.gap.as_ref(),
             storage: Some(&self.storage),
+            online: None,
+        }
+    }
+
+    /// [`Self::context`] pinned to one write-plane snapshot. A clean
+    /// snapshot (no mutation ever applied) degrades to the frozen
+    /// context, so unmutated serving pays zero overlay overhead and
+    /// stays byte-for-byte identical to pre-write-plane behavior.
+    fn context_at<'s>(&'s self, snap: &'s OnlineSnapshot) -> SearchContext<'s> {
+        SearchContext {
+            online: (!snap.is_clean()).then_some(snap),
+            ..self.context()
+        }
+    }
+
+    /// Borrowed index pieces the write plane operates on.
+    fn index_refs(&self) -> IndexRefs<'_> {
+        IndexRefs {
+            graph: &self.graph,
+            storage: &self.storage,
+            base_stub: self.storage.base_stub(),
+            metric: self.metric,
+            codes: Some(&self.codes),
+            gap: self.gap.as_ref(),
+            codebook: Some(&self.codebook),
+            params: &self.graph_params,
         }
     }
 
@@ -712,46 +758,26 @@ impl SearchService {
     ) -> SearchOutput {
         let t0 = std::time::Instant::now();
         let (params, features) = self.effective(k, options);
+        // Pin ONE write-plane snapshot for the whole walk: the query
+        // sees exactly that epoch's inserts/tombstones and never blocks
+        // on (or races with) concurrent writers.
+        let snap = self.online.load();
+        let ctx = self.context_at(&snap);
         let mut out = SearchOutput::default();
         match options.mode {
             SearchMode::Accurate => {
-                accurate_beam_search_into(
-                    &self.context(),
-                    q,
-                    params.k,
-                    params.l,
-                    false,
-                    walk,
-                    &mut out,
-                );
+                accurate_beam_search_into(&ctx, q, params.k, params.l, false, walk, &mut out);
             }
             SearchMode::PqAdt => {
                 let adt = adt.expect("PqAdt query requires a staged ADT");
                 let rerank = options.rerank.unwrap_or(params.l);
                 pq_beam_search_into(
-                    &self.context(),
-                    adt,
-                    q,
-                    params.k,
-                    params.l,
-                    rerank,
-                    false,
-                    walk,
-                    &mut out,
+                    &ctx, adt, q, params.k, params.l, rerank, false, walk, &mut out,
                 );
             }
             SearchMode::Hybrid => {
                 let adt = adt.expect("Hybrid query requires a staged ADT");
-                proxima_search_into(
-                    &self.context(),
-                    adt,
-                    q,
-                    &params,
-                    features,
-                    false,
-                    walk,
-                    &mut out,
-                );
+                proxima_search_into(&ctx, adt, q, &params, features, false, walk, &mut out);
             }
         }
         out.stats.adt_builds = fresh_adt as usize;
@@ -762,11 +788,14 @@ impl SearchService {
 
     /// Translate stored-space result ids back to original ids when this
     /// index was opened from a reordered artifact (k lookups per query —
-    /// off the traversal hot loop).
+    /// off the traversal hot loop). Delta ids (online inserts, past the
+    /// frozen permutation) are never permuted: they name themselves.
     fn map_ids(&self, out: &mut SearchOutput) {
         if let Some(map) = &self.id_map {
             for id in out.ids.iter_mut() {
-                *id = map[*id as usize];
+                if (*id as usize) < map.len() {
+                    *id = map[*id as usize];
+                }
             }
         }
     }
@@ -779,8 +808,9 @@ impl SearchService {
         params.k = k.min(params.l);
         let mut scratch = self.scratch.checkout();
         let mut out = SearchOutput::default();
+        let snap = self.online.load();
         proxima_search_into(
-            &self.context(),
+            &self.context_at(&snap),
             adt,
             q,
             &params,
@@ -792,6 +822,218 @@ impl SearchService {
         self.map_ids(&mut out);
         self.record(&out.stats, t0.elapsed());
         out
+    }
+
+    // -----------------------------------------------------------------
+    // Write plane: insert / delete / flush (the `online` subsystem,
+    // threaded through the typed API). Queries admitted concurrently
+    // never block on these — they pin a published snapshot and walk it.
+    // -----------------------------------------------------------------
+
+    /// Insert one vector into the served index. Returns `(id, epoch)`:
+    /// the id names the vector in results (delta ids start at `n_base`
+    /// and are never permuted by a §IV-E reorder — they name
+    /// themselves), and any query admitted after this returns can find
+    /// it. Under `Metric::Angular` the stored copy is normalized, like
+    /// the offline build path.
+    pub fn insert(&self, vector: &[f32]) -> Result<(u32, u64), ApiError> {
+        if vector.len() != self.dim() {
+            return Err(ApiError::dim_mismatch(format!(
+                "insert: expected dim {}, got {}",
+                self.dim(),
+                vector.len()
+            )));
+        }
+        if let Some(x) = vector.iter().find(|x| !x.is_finite()) {
+            return Err(ApiError::bad_request(format!(
+                "insert: non-finite value {x}"
+            )));
+        }
+        let mut scratch = self.scratch.checkout();
+        self.online
+            .insert(&self.index_refs(), vector, &mut scratch.walk)
+            .map_err(ApiError::internal)
+    }
+
+    /// Tombstone `id` (ORIGINAL id space, like every result list).
+    /// Returns `(deleted, epoch)` — `deleted` is false when the id was
+    /// already tombstoned (idempotent). The vector stops being
+    /// returnable the moment this returns but stays traversable until
+    /// repair/flush splices it out, so recall survives churn.
+    pub fn delete(&self, id: u32) -> Result<(bool, u64), ApiError> {
+        // A reordered artifact stores base vectors in the permuted
+        // space; clients speak original ids. Delta ids (past the
+        // permutation) are identical in both spaces.
+        let stored = match &self.reorder {
+            Some(perm) if (id as usize) < perm.len() => perm[id as usize],
+            _ => id,
+        };
+        self.online
+            .delete(&self.index_refs(), stored)
+            .map_err(ApiError::bad_request)
+    }
+
+    /// Current write-plane publish epoch (monotonic across flush swaps).
+    pub fn online_epoch(&self) -> u64 {
+        self.online.epoch()
+    }
+
+    /// Compact the live index (tombstones dropped, delta merged,
+    /// PQ codes recomputed), re-save it as a versioned artifact, and
+    /// open the successor service the caller hot-swaps in (via
+    /// [`ServiceCell::swap`] on the serving path).
+    ///
+    /// `path` defaults to the artifact this service was opened from; a
+    /// built (never-saved) index must name one explicitly. The whole
+    /// critical section — compact, persist, reopen — runs under the
+    /// writer lock ([`OnlineState::run_exclusive`]), so no insert or
+    /// delete can land between the compacted image and the swap and be
+    /// silently dropped; queries are never blocked (they read published
+    /// snapshots only). The successor's write plane starts clean at
+    /// `epoch + 1` with the predecessor's lifetime counters and
+    /// repair cadence carried over.
+    pub fn flush(&self, path: Option<&Path>) -> Result<FlushOutcome, ApiError> {
+        let path: PathBuf = match path {
+            Some(p) => p.to_path_buf(),
+            None => match &self.provenance {
+                IndexProvenance::Artifact { path } => PathBuf::from(path),
+                IndexProvenance::Built => {
+                    return Err(ApiError::bad_request(
+                        "flush of a built (unsaved) index requires an explicit path",
+                    ));
+                }
+            },
+        };
+        let idx = self.index_refs();
+        // NOTE: the closure must not call self.online.insert/delete —
+        // the writer mutex is not reentrant.
+        self.online.run_exclusive(|| {
+            let cur = self.online.load();
+            let image = compact(&cur, &idx).map_err(ApiError::bad_request)?;
+            let n_live = image.base.len();
+
+            // Rebuild the derived structures over the compacted id
+            // space: codes are REcomputed (not carried stale), the
+            // graph/gap come from the spliced+renumbered lists.
+            let codes = self.codebook.encode(&image.base);
+            let graph = Graph::from_lists(&image.lists, image.entry_point, self.graph_params.r);
+            let gap = GapGraph::encode(&image.lists);
+
+            // Re-stamp the spec for the compacted reality so
+            // `check_compatible`/`open` see a consistent artifact.
+            let mut spec = self.spec.clone();
+            spec.n_base = n_live as u64;
+
+            // Fresh §IV-E layout: the compaction renumbered ids, so the
+            // predecessor's physical addresses are meaningless here.
+            let b_index = gap
+                .mean_bits_per_edge(graph.n_edges().max(1))
+                .ceil() as u32;
+            let mapping = DataMapping::new(
+                &NandConfig::proxima(),
+                n_live as u32,
+                graph.max_degree.max(1) as u32,
+                b_index.clamp(1, 32),
+                (self.codebook.m * 8) as u32,
+                self.dim() as u32,
+                32,
+                spec.hot_frac,
+            );
+
+            ArtifactParts {
+                spec: &spec,
+                base: &image.base,
+                graph: &graph,
+                gap: Some(&gap),
+                codebook: &self.codebook,
+                codes: &codes,
+                reorder: None,
+                mapping: Some(&mapping),
+            }
+            .write(&path)
+            .map_err(|e| ApiError::internal(format!("flush write: {e}")))?;
+
+            let mut svc = SearchService::open_with(
+                &path,
+                self.params,
+                self.xla_preferred,
+                &OpenOptions::with_residency(self.storage.residency()),
+            )
+            .map_err(|e| ApiError::internal(format!("flush reopen: {e}")))?;
+            if !self.uses_shared_pool() {
+                svc = svc.with_workers(self.workers);
+            }
+            svc.features = self.features;
+            // Seed the successor's write plane past this epoch so
+            // clients observe monotonic epochs across the swap, and
+            // carry the lifetime totals (status reports since-boot
+            // numbers, not since-flush).
+            self.online
+                .counters()
+                .flushes_total
+                .fetch_add(1, Ordering::Relaxed);
+            svc.online =
+                OnlineState::with_epoch(svc.n_base(), svc.dim(), svc.codebook.m, cur.epoch + 1);
+            svc.online.counters().adopt(self.online.counters());
+            svc.online.set_repair_every(self.online.repair_every());
+            // Compaction renumbered STORED ids; translate to the
+            // client-visible space (delta ids past the permutation are
+            // identical in both).
+            let new_to_old: Vec<u32> = image
+                .new_to_old
+                .iter()
+                .map(|&old| match &self.id_map {
+                    Some(map) if (old as usize) < map.len() => map[old as usize],
+                    _ => old,
+                })
+                .collect();
+            Ok(FlushOutcome {
+                service: Arc::new(svc),
+                path: path.display().to_string(),
+                n_live,
+                epoch: cur.epoch + 1,
+                new_to_old,
+            })
+        })
+    }
+
+    /// Exact (linear-scan) nearest neighbors over the LIVE id set —
+    /// base rows minus tombstones plus the delta region — in ORIGINAL
+    /// id space. The ground truth for recall-over-time measurement
+    /// under churn (`loadgen::run_mixed`); O(n·dim) per call, not a
+    /// serving path.
+    pub fn exact_nn_live(&self, q: &[f32], k: usize) -> Vec<u32> {
+        let snap = self.online.load();
+        let src = if snap.delta().is_empty() {
+            RowSource::Store(&self.storage)
+        } else {
+            RowSource::StoreDelta(&self.storage, snap.delta())
+        };
+        // Pad the query to the stored stride so distances run in the
+        // padded layout, exactly like the serving path.
+        let mut qbuf = AlignedBuf::new();
+        let qp = qbuf.fill_padded(q, self.storage.stride());
+        let mut buf = ReadBuf::default();
+        let mut stats = SearchStats::default();
+        let mut best: Vec<(f32, u32)> = Vec::with_capacity(src.len());
+        for id in 0..src.len() as u32 {
+            if snap.is_tombstoned(id) {
+                continue;
+            }
+            let row = src.get(id, &mut buf, &mut stats);
+            best.push((self.metric.distance(qp, row), id));
+        }
+        best.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        best.truncate(k);
+        let mut ids: Vec<u32> = best.into_iter().map(|(_, id)| id).collect();
+        if let Some(map) = &self.id_map {
+            for id in ids.iter_mut() {
+                if (*id as usize) < map.len() {
+                    *id = map[*id as usize];
+                }
+            }
+        }
+        ids
     }
 
     /// Answer a whole batch with service-default options (see
@@ -1028,6 +1270,28 @@ impl SearchService {
 /// list reserves L slots up front, so this bounds the scratch allocation
 /// one request can demand. Beam widths beyond this are never useful.
 pub const MAX_L_OVERRIDE: usize = 1 << 20;
+
+/// Everything one [`SearchService::flush`] produced: the successor
+/// service (already opened from the compacted artifact, write plane
+/// seeded past the predecessor's epoch) plus the numbers the wire
+/// response reports. The caller hot-swaps `service` in (the server's
+/// flush op does this through its [`ServiceCell`]).
+pub struct FlushOutcome {
+    pub service: Arc<SearchService>,
+    /// Where the compacted artifact was written.
+    pub path: String,
+    /// Live vectors in the compacted index (`spec.n_base` of the
+    /// successor).
+    pub n_live: usize,
+    /// The successor's starting epoch (predecessor's last + 1).
+    pub epoch: u64,
+    /// `new_to_old[new]` = the ORIGINAL (client-visible) id each
+    /// compacted id was renumbered from — compaction packs survivors
+    /// densely, so pre-flush ids shift whenever a base vector was
+    /// tombstoned. Clients that cached pre-flush ids translate through
+    /// this; with zero deletions it is the identity.
+    pub new_to_old: Vec<u32>,
+}
 
 /// The swappable serving handle: an `ArcSwap`-style epoch cell holding
 /// the currently served [`SearchService`].
@@ -1434,6 +1698,69 @@ mod tests {
             assert_eq!(a.ids, b.ids);
             assert_eq!(a.ids, c.ids);
         }
+    }
+
+    #[test]
+    fn write_plane_insert_delete_flush_round_trip() {
+        let (ds, svc) = service();
+        let q = ds.queries.row(0);
+
+        // Boundary validation mirrors the query path.
+        let e = svc.insert(&vec![1.0f32; ds.dim() + 1]).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::DimMismatch);
+        let mut bad = q.to_vec();
+        bad[0] = f32::NAN;
+        let e = svc.insert(&bad).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+
+        // An inserted vector is its own nearest neighbor immediately.
+        let (id, e1) = svc.insert(q).unwrap();
+        assert_eq!(id as usize, ds.n_base());
+        let out = svc.search(q, 1);
+        assert_eq!(out.ids, vec![id]);
+
+        // Delete excludes it from results at once (idempotently).
+        let (deleted, e2) = svc.delete(id).unwrap();
+        assert!(deleted && e2 > e1);
+        assert!(!svc.delete(id).unwrap().0, "re-delete is a no-op");
+        let out = svc.search(q, 5);
+        assert!(!out.ids.contains(&id));
+
+        // A built index refuses a pathless flush; with a path it
+        // compacts, persists, and hands back a swappable successor.
+        let e = svc.flush(None).unwrap_err();
+        assert_eq!(e.code, crate::api::ApiErrorCode::BadRequest);
+        let path = std::env::temp_dir().join(format!(
+            "proxima-coord-flush-{}.pxa",
+            std::process::id()
+        ));
+        let fo = svc.flush(Some(&path)).unwrap();
+        assert_eq!(fo.n_live, ds.n_base(), "one insert minus one delete");
+        assert_eq!(fo.service.spec.n_base as usize, fo.n_live);
+        assert!(fo.epoch > e2, "epochs stay monotonic across the swap");
+        assert_eq!(fo.service.online_epoch(), fo.epoch);
+        let c = fo.service.online.counters();
+        assert_eq!(c.inserts_total.load(Ordering::Relaxed), 1);
+        assert_eq!(c.deletes_total.load(Ordering::Relaxed), 1);
+        assert_eq!(c.flushes_total.load(Ordering::Relaxed), 1);
+        // The successor serves sane results for the surviving ids.
+        let out = fo.service.search(ds.queries.row(1), 10);
+        assert_eq!(out.ids.len(), 10);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn exact_nn_live_tracks_churn() {
+        let (ds, svc) = service();
+        let q = ds.queries.row(2);
+        let base_gt = svc.exact_nn_live(q, 5);
+        assert_eq!(base_gt.len(), 5);
+        // Insert the query itself: it becomes the exact top-1.
+        let (id, _) = svc.insert(q).unwrap();
+        assert_eq!(svc.exact_nn_live(q, 1), vec![id]);
+        // Delete it: ground truth reverts to the base answer.
+        svc.delete(id).unwrap();
+        assert_eq!(svc.exact_nn_live(q, 5), base_gt);
     }
 
     #[test]

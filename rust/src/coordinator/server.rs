@@ -41,6 +41,24 @@
 //! epoch's `Arc` and complete on the old index; requests dispatched
 //! after it run on the new one. Service counters (`stats`) belong to an
 //! index instance and start fresh after a reload.
+//!
+//! # v2 write plane (online mutation)
+//!
+//! Three ops mutate the served index in place (`crate::online`; queries
+//! concurrent with them never block — they pin epoch-published
+//! snapshots):
+//! ```text
+//! -> {"v":2,"op":"insert","vector":[f32...]}
+//! <- {"v":2,"op":"insert","id":N,"epoch":E}
+//! -> {"v":2,"op":"delete","id":N}
+//! <- {"v":2,"op":"delete","deleted":true|false,"epoch":E}
+//! -> {"v":2,"op":"flush","path":"/optional/target.pxa"}
+//! <- {"v":2,"op":"flush","ok":true,"path":...,"n_live":N,"epoch":E}
+//! ```
+//! `flush` compacts tombstones away, re-saves the artifact, and swaps
+//! the successor into the cell exactly like `reload`; the `status`
+//! response's `"online"` block reports the write plane's live/tombstone
+//! census and lifetime op counters.
 //! Every `options` field is optional (defaults in [`crate::api`] module
 //! docs). A request without `"v"` is a v1 request — the compatibility
 //! path, answered in the original single-query shape:
@@ -176,6 +194,9 @@ fn handle_conn(
                 Ok(WireRequest::Reload { path, residency }) => {
                     reload_response(&cell, &path, residency)
                 }
+                Ok(WireRequest::Insert { vector }) => insert_response(&cell.load(), &vector),
+                Ok(WireRequest::Delete { id }) => delete_response(&cell.load(), id),
+                Ok(WireRequest::Flush { path }) => flush_response(&cell, path.as_deref()),
                 Ok(WireRequest::Shutdown) => {
                     shutdown.store(true, Ordering::Relaxed);
                     writeln!(
@@ -312,13 +333,91 @@ fn status_response(service: &SearchService) -> Json {
             Json::num(service.stats.cold_bytes.load(Ordering::Relaxed) as f64),
         ),
     ]);
+    let snap = service.online.load();
+    let c = service.online.counters();
+    let online = Json::obj(vec![
+        ("epoch", Json::num(snap.epoch as f64)),
+        ("n_live", Json::num(snap.n_live() as f64)),
+        ("n_tombstoned", Json::num(snap.n_tombstoned() as f64)),
+        (
+            "inserts_total",
+            Json::num(c.inserts_total.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "deletes_total",
+            Json::num(c.deletes_total.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "flushes_total",
+            Json::num(c.flushes_total.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "repair_splices_total",
+            Json::num(c.repair_splices_total.load(Ordering::Relaxed) as f64),
+        ),
+    ]);
     Json::obj(vec![
         ("v", Json::num(wire::VERSION as f64)),
         ("spec", wire::encode_spec(&service.spec)),
         ("provenance", provenance),
         ("storage", storage),
+        ("online", online),
         ("stats", stats_response(service)),
     ])
+}
+
+/// The write-plane `insert` op: typed boundary validation (wrong dim,
+/// non-finite values) then the service's single-writer insert. The
+/// returned id names the vector in every subsequent result list.
+fn insert_response(service: &SearchService, vector: &[f32]) -> Json {
+    match service.insert(vector) {
+        Err(e) => wire::encode_error(&e),
+        Ok((id, epoch)) => Json::obj(vec![
+            ("v", Json::num(wire::VERSION as f64)),
+            ("op", Json::str("insert")),
+            ("id", Json::num(id as f64)),
+            ("epoch", Json::num(epoch as f64)),
+        ]),
+    }
+}
+
+/// The write-plane `delete` op: tombstone one id (original id space).
+/// `deleted:false` means the id was already tombstoned — idempotent,
+/// not an error; an out-of-range id IS a structured error.
+fn delete_response(service: &SearchService, id: u32) -> Json {
+    match service.delete(id) {
+        Err(e) => wire::encode_error(&e),
+        Ok((deleted, epoch)) => Json::obj(vec![
+            ("v", Json::num(wire::VERSION as f64)),
+            ("op", Json::str("delete")),
+            ("deleted", Json::Bool(deleted)),
+            ("epoch", Json::num(epoch as f64)),
+        ]),
+    }
+}
+
+/// The write-plane `flush` op: compact the served index (tombstones
+/// dropped, delta merged, PQ codes recomputed), re-save the artifact,
+/// and swap the successor into the cell — the same epoch semantics as
+/// `reload`: in-flight requests finish on the old index. On ANY failure
+/// the old index keeps serving, uncompacted but intact.
+fn flush_response(cell: &ServiceCell, path: Option<&str>) -> Json {
+    let old = cell.load();
+    match old.flush(path.map(Path::new)) {
+        Err(e) => wire::encode_error(&e),
+        Ok(fo) => {
+            let info = Json::obj(vec![
+                ("v", Json::num(wire::VERSION as f64)),
+                ("op", Json::str("flush")),
+                ("ok", Json::Bool(true)),
+                ("path", Json::str(fo.path.clone())),
+                ("n_live", Json::num(fo.n_live as f64)),
+                ("epoch", Json::num(fo.epoch as f64)),
+            ]);
+            drop(cell.swap(fo.service));
+            info
+        }
+    }
 }
 
 /// The admin `reload` op: open the artifact at `path` (keeping the old
@@ -485,6 +584,49 @@ impl Client {
         Ok(resp)
     }
 
+    /// v2 write plane: insert one vector into the served index; returns
+    /// `(id, epoch)`. The vector is findable by any request sent after
+    /// this returns.
+    pub fn insert(&mut self, vector: &[f32]) -> Result<(u32, u64)> {
+        let resp = self.roundtrip(wire::encode_insert(vector))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        let id = resp
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("insert response missing 'id'"))? as u32;
+        let epoch = resp.get("epoch").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        Ok((id, epoch))
+    }
+
+    /// v2 write plane: tombstone `id`; returns `(deleted, epoch)` —
+    /// `deleted` is false when the id was already tombstoned.
+    pub fn delete(&mut self, id: u32) -> Result<(bool, u64)> {
+        let resp = self.roundtrip(wire::encode_delete(id))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        let deleted = resp
+            .get("deleted")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow!("delete response missing 'deleted'"))?;
+        let epoch = resp.get("epoch").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        Ok((deleted, epoch))
+    }
+
+    /// v2 write plane: compact + re-save the served index and hot-swap
+    /// the successor in. `None` flushes back to the artifact the index
+    /// was opened from. Returns the server's confirmation line
+    /// (`path`, `n_live`, `epoch`).
+    pub fn flush(&mut self, path: Option<&str>) -> Result<Json> {
+        let resp = self.roundtrip(wire::encode_flush(path))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(resp)
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.roundtrip(Json::obj(vec![("op", Json::str("shutdown"))]))?;
         Ok(())
@@ -599,5 +741,90 @@ mod tests {
 
         client.shutdown().unwrap();
         server.stop();
+    }
+
+    #[test]
+    fn server_write_plane_roundtrip() {
+        let ds = tiny_uniform(200, 8, Metric::L2, 104);
+        let svc = Arc::new(SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 104,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 200,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 30,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        ));
+        let cell = Arc::new(ServiceCell::new(svc));
+        let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+        let server = Server::start(cell, handle, 0).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+
+        // Insert the first query vector: it becomes its own top-1.
+        let q = ds.queries.row(0);
+        let (id, e1) = client.insert(q).unwrap();
+        assert_eq!(id as usize, 200);
+        let (ids, _, _) = client.search(q, 1).unwrap();
+        assert_eq!(ids, vec![id]);
+
+        // A wrong-dim insert is a typed error; the connection survives.
+        assert!(client.insert(&[1.0, 2.0]).is_err());
+
+        // Delete excludes it immediately and is idempotent.
+        let (deleted, e2) = client.delete(id).unwrap();
+        assert!(deleted && e2 > e1);
+        assert!(!client.delete(id).unwrap().0);
+        let (ids, _, _) = client.search(q, 5).unwrap();
+        assert!(!ids.contains(&id));
+        assert!(client.delete(1_000_000).is_err(), "out-of-range id");
+
+        // status reports the write plane's census and counters.
+        let status = client.status().unwrap();
+        let online = status.get("online").expect("status carries online");
+        assert_eq!(online.get("n_live").and_then(Json::as_usize), Some(200));
+        assert_eq!(online.get("n_tombstoned").and_then(Json::as_usize), Some(1));
+        assert_eq!(online.get("inserts_total").and_then(Json::as_usize), Some(1));
+        assert_eq!(online.get("deletes_total").and_then(Json::as_usize), Some(1));
+
+        // A built index refuses a pathless flush...
+        assert!(client.flush(None).is_err());
+        // ...and flushes to an explicit path, hot-swapping the compacted
+        // successor (the tombstoned insert is gone from its census).
+        let path = std::env::temp_dir().join(format!(
+            "proxima-server-flush-{}.pxa",
+            std::process::id()
+        ));
+        let resp = client.flush(path.to_str()).unwrap();
+        assert_eq!(resp.get("n_live").and_then(Json::as_usize), Some(200));
+        let status = client.status().unwrap();
+        let online = status.get("online").expect("status carries online");
+        assert_eq!(online.get("n_tombstoned").and_then(Json::as_usize), Some(0));
+        assert_eq!(online.get("flushes_total").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            status
+                .get("provenance")
+                .and_then(|p| p.get("source"))
+                .and_then(Json::as_str),
+            Some("artifact")
+        );
+        // The successor keeps serving.
+        let (ids, _, _) = client.search(q, 5).unwrap();
+        assert_eq!(ids.len(), 5);
+
+        client.shutdown().unwrap();
+        server.stop();
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -251,6 +251,7 @@ mod tests {
                 codes: Some(&cor.codes),
                 gap: None,
                 storage: None,
+                online: None,
             };
             let mut r = 0.0;
             for q in 0..ds.n_queries() {

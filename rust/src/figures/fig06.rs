@@ -51,6 +51,7 @@ pub fn traffic_vs_degree(name: &str, scale: f64, r_sweep: &[usize]) -> Vec<(usiz
             codes: Some(&codes),
             gap: None,
             storage: None,
+            online: None,
         };
         // Traversal traffic (the quantity Fig 6b varies with R): a
         // PQ-guided beam search with a fixed top-2k rerank, so the rerank

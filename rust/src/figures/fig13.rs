@@ -56,6 +56,7 @@ pub fn proxima_hot_traces(
         codes: Some(&re.codes),
         gap: Some(&gap),
         storage: None,
+        online: None,
     };
     let mut traces = Vec::with_capacity(w.ds.n_queries());
     for qi in 0..w.ds.n_queries() {

@@ -36,6 +36,7 @@ pub fn recall_at_ber(w: &Workbench, rate: f64, seed: u64) -> f64 {
             codes: Some(&codes),
             gap: None,
             storage: None,
+            online: None,
         }
     } else {
         w.context_no_gap()

@@ -114,6 +114,7 @@ impl Workbench {
             codes: Some(&self.codes),
             gap: Some(&self.gap),
             storage: None,
+            online: None,
         }
     }
 
@@ -126,6 +127,7 @@ impl Workbench {
             codes: Some(&self.codes),
             gap: None,
             storage: None,
+            online: None,
         }
     }
 

@@ -159,6 +159,7 @@ mod tests {
             codes: None,
             gap: None,
             storage: None,
+            online: None,
         };
         let mut recall = 0.0;
         for qi in 0..ds.n_queries() {

@@ -160,9 +160,26 @@ fn robust_prune_from(
     base: &VectorSet,
     metric: Metric,
     p: u32,
+    cand: Vec<(f32, u32)>,
+    alpha: f32,
+    r: usize,
+) -> Vec<u32> {
+    robust_prune_with(p, cand, alpha, r, |v, u| {
+        metric.distance(base.row(v as usize), base.row(u as usize))
+    })
+}
+
+/// The α-pruning rule over an arbitrary pairwise-distance oracle. The
+/// online write plane (`online::`) reuses this with distances resolved
+/// through `RowSource::StoreDelta` (ids may point past the frozen base
+/// into the delta region), so the insert-time neighborhood selection is
+/// the same rule the offline builder applies — not a reimplementation.
+pub fn robust_prune_with(
+    p: u32,
     mut cand: Vec<(f32, u32)>,
     alpha: f32,
     r: usize,
+    mut dist: impl FnMut(u32, u32) -> f32,
 ) -> Vec<u32> {
     cand.retain(|&(_, v)| v != p);
     cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
@@ -183,7 +200,7 @@ fn robust_prune_from(
                 continue;
             }
             let (d_pu, u) = cand[j];
-            let d_vu = metric.distance(base.row(v as usize), base.row(u as usize));
+            let d_vu = dist(v, u);
             if alpha * d_vu <= d_pu && d_pv <= d_pu {
                 alive[j] = false;
             }

@@ -103,6 +103,39 @@
 //! (or [`simd::force_scalar`]) pins the scalar table for
 //! bitwise-reproducible traced/DES runs, and CI runs the whole test
 //! suite under both dispatch arms.
+//!
+//! # Online updates
+//!
+//! The served index is mutable: the [`online`] write plane layers
+//! Vamana-style **insert** (greedy search → α-prune → bounded-degree
+//! backlinks), tombstone **delete**, and compacting **flush** over the
+//! frozen artifact, exposed as `SearchService::{insert, delete, flush}`
+//! and the v2 wire ops `{"op":"insert"|"delete"|"flush"}`.
+//!
+//! *Mutation model.* Inserted vectors append to a padded
+//! [`storage::DeltaVectors`] region (ids `n_base..`), with PQ codes
+//! encoded at insert time, so every search mode — including the SIMD
+//! kernels and the zero-alloc scratch path — serves them unchanged.
+//! Adjacency rows that diverge from the frozen CSR live in a per-vertex
+//! overlay; untouched vertices keep reading the CSR.
+//!
+//! *Visibility & epochs.* Single writer, epoch-published snapshots
+//! ([`online::OnlineState`]): each write clones the current immutable
+//! [`online::OnlineSnapshot`] (rows are `Arc`'d — pointer copies),
+//! mutates the clone, and publishes it with a pointer swap. Queries
+//! pin one snapshot for their whole run and **never block on a
+//! writer**; epochs are monotonic, an insert is findable the moment
+//! `insert` returns, and a delete stops being returnable the moment
+//! `delete` returns.
+//!
+//! *Tombstones & repair.* Deleted ids stay traversable (connectivity —
+//! hence recall — survives churn) but are excluded from results.
+//! Every `repair_every` deletes, a local repair splices tombstoned
+//! vertices out of their in-neighbors' lists (replacing the dead hop
+//! with the dead vertex's live neighbors, re-pruned to ≤ R). `flush`
+//! compacts tombstones away entirely, re-stamps the `IndexSpec`
+//! (`n_base` = live count), recomputes PQ codes, re-saves the `.pxa`,
+//! and hot-swaps via [`coordinator::ServiceCell`].
 
 pub mod api;
 pub mod artifact;
@@ -117,6 +150,7 @@ pub mod storage;
 pub mod util;
 
 pub mod graph;
+pub mod online;
 pub mod search;
 
 pub mod error_model;

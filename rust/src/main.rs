@@ -29,6 +29,14 @@
 //! live while serving (`storage::Residency`); the `status` op reports
 //! the tier plus `resident_bytes`/`cold_reads`/`cold_bytes`.
 //!
+//! The v2 write plane mutates the served index in place —
+//! `{"v":2,"op":"insert"|"delete"|"flush"}` (see `coordinator::server`
+//! and the `online` module): inserts/deletes publish epoch snapshots
+//! queries never block on, and `flush` compacts + re-saves the artifact
+//! and hot-swaps the successor. `--repair_every N` tunes how many
+//! deletes accumulate between tombstone-repair passes (default 8,
+//! 0 = repair only at flush).
+//!
 //! Config file via `--config path` plus `--set key=value` overrides
 //! (see `config::Config`). The `search` subcommand also honors the
 //! `[api]` section (`api.mode`, `api.l_override`, `api.early_term_tau`,
@@ -260,6 +268,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         0 => svc,
         w => svc.with_workers(w),
     };
+    // `--repair_every N`: deletes between local tombstone-repair passes
+    // on the online write plane (0 disables periodic repair — splices
+    // then happen only at flush).
+    svc.online
+        .set_repair_every(cfg.get_u64("repair_every", svc.online.repair_every()));
     // The epoch cell is what the wire admin plane hot-swaps on
     // `{"v":2,"op":"reload","path":...}`.
     let cell = Arc::new(ServiceCell::new(Arc::new(svc)));

@@ -1,0 +1,957 @@
+//! The online write plane: concurrent insert / delete / flush over a
+//! served index.
+//!
+//! Every index in this repo used to be frozen after `build`/`open`; the
+//! deployment story (Fig. 1: NAND-resident shards behind a front door)
+//! presumes churn. This module adds a Vamana-style mutable overlay on
+//! top of the immutable artifact, served concurrently with queries:
+//!
+//! * **insert** — greedy-search the current graph for the new vector's
+//!   neighborhood (the same [`kernel`] traversal queries run), α-prune
+//!   it with the *builder's* rule ([`vamana::robust_prune_with`]), and
+//!   install bounded-degree backlinks (neighbors over `R` are re-pruned,
+//!   evicting their worst edge — never growing without bound). The new
+//!   vector is appended to a padded [`DeltaVectors`] region, so SIMD
+//!   kernels and the zero-alloc query path are unchanged.
+//! * **delete** — tombstone the id. Tombstoned vertices are excluded
+//!   from results *immediately* (the searches skip them during result
+//!   assembly) but stay traversable, so graph connectivity — and
+//!   therefore recall — does not collapse as churn accumulates. Every
+//!   `repair_every` deletes, a local repair pass splices tombstoned
+//!   vertices out of their in-neighbors' adjacency lists (replacing the
+//!   dead hop with the dead vertex's own live neighbors, re-pruned).
+//! * **flush** — [`compact`] drops tombstones, renumbers the survivors,
+//!   splices + re-prunes every adjacency list into the new id space and
+//!   returns the packed pieces the coordinator re-saves as a fresh
+//!   `.pxa` (PQ codes recomputed, spec re-stamped) and hot-swaps via
+//!   `ServiceCell`.
+//!
+//! # Concurrency contract
+//!
+//! Single writer + epoch-published snapshots. All mutable state lives in
+//! one immutable [`OnlineSnapshot`] behind `RwLock<Arc<..>>`; queries
+//! [`OnlineState::load`] the `Arc` (a pointer clone under a momentarily
+//! held read lock — never the writer mutex) and run against that
+//! snapshot for their whole lifetime. Writers serialize on a separate
+//! mutex, clone the snapshot (cheap: adjacency rows and delta rows are
+//! individually `Arc`'d), mutate the clone, and publish it with a
+//! pointer swap. Queries therefore **never block on a writer** and
+//! observe a monotonically increasing `epoch`; a query admitted at epoch
+//! `e` sees exactly the state of epoch `e` end to end.
+//!
+//! Visibility: an insert is findable the moment `insert` returns (the
+//! snapshot containing it was published first); a delete stops being
+//! returnable the moment `delete` returns.
+
+use crate::config::GraphParams;
+use crate::dataset::VectorSet;
+use crate::distance::Metric;
+use crate::gap::GapGraph;
+use crate::graph::{vamana, Graph};
+use crate::pq::{PqCodebook, PqCodes};
+use crate::search::beam::SearchContext;
+use crate::search::kernel::{self, QueryScratch};
+use crate::search::SearchStats;
+use crate::storage::{DeltaVectors, ReadBuf, RowSource, VectorStore};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Default number of tombstoned deletes that accumulate before a local
+/// repair pass splices them out of in-neighbors' lists.
+pub const DEFAULT_REPAIR_EVERY: u64 = 8;
+
+// ---------------------------------------------------------------------------
+// Snapshot
+// ---------------------------------------------------------------------------
+
+/// One immutable, epoch-stamped view of the write plane, layered over
+/// the frozen index:
+///
+/// * `overlay` — adjacency rows that diverged from the frozen CSR
+///   (plus every delta vertex's row). Rows are `Arc<[u32]>`, so cloning
+///   the snapshot copies pointers.
+/// * `delta` — vectors appended after the frozen base; id `base_n + i`
+///   is delta row `i`, served padded exactly like store rows.
+/// * `delta_codes` — PQ codes for delta ids (`pq_m` bytes per row), so
+///   PQ-guided searches traverse inserted vectors without a rebuild.
+/// * `tombstones` — deleted ids: excluded from results, traversable.
+#[derive(Clone, Debug)]
+pub struct OnlineSnapshot {
+    epoch: u64,
+    base_n: usize,
+    overlay: HashMap<u32, Arc<[u32]>>,
+    delta: DeltaVectors,
+    delta_codes: Vec<u8>,
+    pq_m: usize,
+    tombstones: HashSet<u32>,
+}
+
+impl OnlineSnapshot {
+    /// The clean (no mutations yet) snapshot over a frozen index of
+    /// `base_n` vectors of `dim` floats, with `pq_m`-byte PQ codes
+    /// (`pq_m == 0` when the index serves without PQ).
+    pub fn empty(base_n: usize, dim: usize, pq_m: usize) -> OnlineSnapshot {
+        OnlineSnapshot {
+            epoch: 0,
+            base_n,
+            overlay: HashMap::new(),
+            delta: DeltaVectors::new(dim),
+            delta_codes: Vec::new(),
+            pq_m,
+            tombstones: HashSet::new(),
+        }
+    }
+
+    /// Monotonic publish stamp; bumped exactly once per published write.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Vectors in the frozen base region (delta ids start here).
+    #[inline]
+    pub fn base_n(&self) -> usize {
+        self.base_n
+    }
+
+    /// Total addressable ids: frozen base + delta appends.
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.base_n + self.delta.len()
+    }
+
+    /// Ids that can still be returned by queries.
+    #[inline]
+    pub fn n_live(&self) -> usize {
+        self.n_total() - self.tombstones.len()
+    }
+
+    #[inline]
+    pub fn n_tombstoned(&self) -> usize {
+        self.tombstones.len()
+    }
+
+    /// No mutation has ever been applied (serving can skip the overlay
+    /// entirely and run the frozen fast path).
+    #[inline]
+    pub fn is_clean(&self) -> bool {
+        self.overlay.is_empty() && self.tombstones.is_empty() && self.delta.is_empty()
+    }
+
+    /// Adjacency row of `v` where the write plane diverged from the
+    /// frozen CSR; `None` means the CSR row is still current.
+    #[inline]
+    pub fn overlay_row(&self, v: u32) -> Option<&[u32]> {
+        self.overlay.get(&v).map(|r| r.as_ref())
+    }
+
+    #[inline]
+    pub fn is_tombstoned(&self, id: u32) -> bool {
+        self.tombstones.contains(&id)
+    }
+
+    /// The padded delta vector region (ids `base_n..n_total`).
+    #[inline]
+    pub fn delta(&self) -> &DeltaVectors {
+        &self.delta
+    }
+
+    /// PQ code row for a delta id; `None` for base ids (frozen code
+    /// table) and for indexes serving without PQ.
+    #[inline]
+    pub fn code_row(&self, id: u32) -> Option<&[u8]> {
+        if self.pq_m == 0 {
+            return None;
+        }
+        let i = (id as usize).checked_sub(self.base_n)?;
+        if i >= self.delta.len() {
+            return None;
+        }
+        Some(&self.delta_codes[i * self.pq_m..(i + 1) * self.pq_m])
+    }
+
+    /// Adjacency row of `v` (overlay first, frozen CSR otherwise).
+    #[inline]
+    fn row_of<'a>(&'a self, graph: &'a Graph, v: u32) -> &'a [u32] {
+        match self.overlay_row(v) {
+            Some(r) => r,
+            None => graph.neighbors(v),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Borrowed index pieces the write ops need
+// ---------------------------------------------------------------------------
+
+/// Borrowed views of the frozen index a write operation runs against.
+/// The coordinator assembles this from its `SearchService` fields; tests
+/// assemble it from loose parts.
+pub struct IndexRefs<'a> {
+    pub graph: &'a Graph,
+    pub storage: &'a VectorStore,
+    /// Dim-carrying stub for [`SearchContext::base`] (rows come from
+    /// `storage`).
+    pub base_stub: &'a VectorSet,
+    pub metric: Metric,
+    pub codes: Option<&'a PqCodes>,
+    pub gap: Option<&'a GapGraph>,
+    /// Codebook for encoding inserted vectors; `None` only for indexes
+    /// serving without PQ (then delta ids carry no codes).
+    pub codebook: Option<&'a PqCodebook>,
+    /// Build-time graph parameters: `r` bounds degrees, `alpha` is the
+    /// prune slack, `build_l` the insert-time search width.
+    pub params: &'a GraphParams,
+}
+
+/// Pairwise full-precision distance over base ∪ delta rows, id-addressed.
+/// Both regions serve padded rows (zero tails), so the SIMD kernels see
+/// equal-length slices regardless of which side an id lives on.
+struct PairDist<'a> {
+    rows: RowSource<'a>,
+    metric: Metric,
+    buf_a: ReadBuf,
+    buf_b: ReadBuf,
+    stats: SearchStats,
+}
+
+impl<'a> PairDist<'a> {
+    fn new(storage: &'a VectorStore, delta: &'a DeltaVectors, metric: Metric) -> PairDist<'a> {
+        PairDist {
+            rows: RowSource::StoreDelta(storage, delta),
+            metric,
+            buf_a: ReadBuf::new(),
+            buf_b: ReadBuf::new(),
+            stats: SearchStats::default(),
+        }
+    }
+
+    #[inline]
+    fn d(&mut self, u: u32, v: u32) -> f32 {
+        let PairDist {
+            rows,
+            metric,
+            buf_a,
+            buf_b,
+            stats,
+        } = self;
+        let a = rows.get(u, buf_a, stats);
+        let b = rows.get(v, buf_b, stats);
+        metric.distance(a, b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Insert
+// ---------------------------------------------------------------------------
+
+/// Vamana insert against snapshot `cur`: returns the successor snapshot
+/// (epoch bumped, not yet published) and the new vector's id.
+///
+/// Steps: (1) greedy-search the current graph for the new vector's
+/// neighborhood with the shared traversal kernel; (2) α-prune the
+/// visited pool into a ≤ `R` out-neighborhood; (3) install backlinks,
+/// re-pruning any neighbor that overflows `R` (bounded-degree eviction).
+fn insert_snapshot(
+    cur: &OnlineSnapshot,
+    idx: &IndexRefs<'_>,
+    q: &[f32],
+    scratch: &mut QueryScratch,
+) -> Result<(OnlineSnapshot, u32), String> {
+    let dim = idx.storage.dim();
+    if q.len() != dim {
+        return Err(format!("insert dim {} != index dim {}", q.len(), dim));
+    }
+    if !q.iter().all(|x| x.is_finite()) {
+        return Err("insert vector has non-finite components".to_string());
+    }
+    let mut row = q.to_vec();
+    if idx.metric == Metric::Angular {
+        // The artifact invariant (and PQ training) assume unit-norm rows
+        // under Angular; keep inserted rows on the same sphere.
+        crate::distance::normalize(&mut row);
+    }
+
+    let r = idx.params.r;
+    let alpha = idx.params.alpha;
+    let build_l = idx.params.build_l.max(r + 1);
+
+    // (1) Greedy search for the insertion neighborhood — the same kernel
+    // queries run, over the same snapshot-aware context.
+    let ctx = SearchContext {
+        base: idx.base_stub,
+        metric: idx.metric,
+        graph: idx.graph,
+        codes: idx.codes,
+        gap: idx.gap,
+        storage: Some(idx.storage),
+        online: Some(cur),
+    };
+    let QueryScratch {
+        visited,
+        list,
+        cold,
+        qpad,
+        ..
+    } = scratch;
+    let q_eff: &[f32] = qpad.fill_padded(&row, idx.storage.stride());
+    let mut provider = kernel::Accurate::new(&ctx, q_eff, cold);
+    list.reset(build_l);
+    visited.begin(ctx.n_vectors());
+    let mut stats = SearchStats::default();
+    let mut no_trace = None;
+    kernel::seed_entry(&ctx, &mut provider, visited, list, &mut stats);
+    kernel::expand_prefix(
+        &ctx,
+        &mut provider,
+        visited,
+        list,
+        build_l,
+        &mut stats,
+        &mut no_trace,
+    );
+    // Tombstoned vertices guided the walk but must not become edges of
+    // the new vertex (they are on their way out).
+    let cand: Vec<(f32, u32)> = list
+        .items
+        .iter()
+        .filter(|c| !cur.is_tombstoned(c.id))
+        .map(|c| (c.dist, c.id))
+        .collect();
+
+    let mut next = cur.clone();
+    let new_id = next.n_total() as u32;
+    next.delta.push(&row);
+    if let Some(cb) = idx.codebook {
+        debug_assert_eq!(next.pq_m, cb.m, "snapshot pq_m != codebook m");
+        let start = next.delta_codes.len();
+        next.delta_codes.resize(start + next.pq_m, 0);
+        cb.encode_one(&row, &mut next.delta_codes[start..]);
+    }
+
+    // (2) α-prune the pool into the new vertex's out-neighborhood with
+    // the builder's exact rule; distances resolve through base ∪ delta.
+    let mut pd = PairDist::new(idx.storage, &next.delta, idx.metric);
+    let out = vamana::robust_prune_with(new_id, cand, alpha, r, |u, v| pd.d(u, v));
+
+    // (3) Backlinks with bounded-degree eviction.
+    for &nb in &out {
+        let nb_row = next.row_of(idx.graph, nb);
+        if nb_row.contains(&new_id) {
+            continue;
+        }
+        if nb_row.len() < r {
+            let mut grown: Vec<u32> = Vec::with_capacity(nb_row.len() + 1);
+            grown.extend_from_slice(nb_row);
+            grown.push(new_id);
+            next.overlay.insert(nb, grown.into());
+        } else {
+            let mut cand: Vec<(f32, u32)> = Vec::with_capacity(nb_row.len() + 1);
+            for &t in nb_row {
+                cand.push((pd.d(nb, t), t));
+            }
+            cand.push((pd.d(nb, new_id), new_id));
+            let pruned = vamana::robust_prune_with(nb, cand, alpha, r, |u, v| pd.d(u, v));
+            next.overlay.insert(nb, pruned.into());
+        }
+    }
+    next.overlay.insert(new_id, out.into());
+    next.epoch += 1;
+    Ok((next, new_id))
+}
+
+// ---------------------------------------------------------------------------
+// Delete + repair
+// ---------------------------------------------------------------------------
+
+/// Tombstone `id` in a successor of `cur` (epoch bumped, not published).
+/// `None` when the id is already tombstoned (idempotent no-op — nothing
+/// to publish). The caller validates `id < n_total`.
+fn delete_snapshot(cur: &OnlineSnapshot, id: u32) -> Option<OnlineSnapshot> {
+    if cur.is_tombstoned(id) {
+        return None;
+    }
+    let mut next = cur.clone();
+    next.tombstones.insert(id);
+    next.epoch += 1;
+    Some(next)
+}
+
+/// Local repair: splice each id in `pending` (all tombstoned) out of its
+/// in-neighbors' adjacency lists, replacing the dead hop with the dead
+/// vertex's own live neighbors, re-pruned when the list overflows `R`.
+/// Mutates `next` in place (no epoch bump — the caller publishes once);
+/// returns the number of spliced lists.
+fn repair_in_place(next: &mut OnlineSnapshot, idx: &IndexRefs<'_>, pending: &[u32]) -> u64 {
+    if pending.is_empty() {
+        return 0;
+    }
+    let dead: HashSet<u32> = pending.iter().copied().collect();
+    let r = idx.params.r;
+    let alpha = idx.params.alpha;
+    let n_total = next.n_total() as u32;
+
+    // Read adjacency from the pre-repair snapshot so the pass is
+    // order-independent; write rewritten rows into the overlay.
+    let before = next.clone();
+    let mut pd = PairDist::new(idx.storage, &before.delta, idx.metric);
+    let mut splices = 0u64;
+    let mut rewritten: Vec<(u32, Arc<[u32]>)> = Vec::new();
+    for v in 0..n_total {
+        if before.is_tombstoned(v) {
+            // A dead vertex's own row stays as-is: it remains a usable
+            // waypoint until the flush drops it entirely.
+            continue;
+        }
+        let row = before.row_of(idx.graph, v);
+        if !row.iter().any(|t| dead.contains(t)) {
+            continue;
+        }
+        let mut spliced: Vec<u32> = Vec::with_capacity(row.len());
+        for &t in row {
+            if !dead.contains(&t) {
+                if !spliced.contains(&t) {
+                    spliced.push(t);
+                }
+                continue;
+            }
+            // Replace the dead hop with the dead vertex's live
+            // neighbors (one splice level keeps repair local; deeper
+            // chains resolve over successive repair passes or at flush).
+            for &u in before.row_of(idx.graph, t) {
+                if u != v && !before.is_tombstoned(u) && !spliced.contains(&u) {
+                    spliced.push(u);
+                }
+            }
+        }
+        let new_row: Vec<u32> = if spliced.len() > r {
+            let cand: Vec<(f32, u32)> = spliced.iter().map(|&t| (pd.d(v, t), t)).collect();
+            vamana::robust_prune_with(v, cand, alpha, r, |a, b| pd.d(a, b))
+        } else {
+            spliced
+        };
+        rewritten.push((v, new_row.into()));
+        splices += 1;
+    }
+    for (v, row) in rewritten {
+        next.overlay.insert(v, row);
+    }
+    splices
+}
+
+// ---------------------------------------------------------------------------
+// Compaction (the flush substrate)
+// ---------------------------------------------------------------------------
+
+/// A compacted, tombstone-free image of the live index, renumbered to a
+/// dense id space — the pieces the coordinator turns into a fresh
+/// artifact (graph re-encoded, PQ codes recomputed, spec re-stamped).
+pub struct CompactedIndex {
+    /// Packed live vectors, row `i` is new id `i`.
+    pub base: VectorSet,
+    /// Adjacency lists in the new id space (≤ `R` each).
+    pub lists: Vec<Vec<u32>>,
+    pub entry_point: u32,
+    /// `new_to_old[new]` = pre-compaction id.
+    pub new_to_old: Vec<u32>,
+    /// `old_to_new[old]` = surviving id, `None` for tombstoned ids.
+    pub old_to_new: Vec<Option<u32>>,
+}
+
+/// Drop tombstones and renumber: every surviving vertex keeps its
+/// adjacency with dead hops spliced through (one level of the dead
+/// vertex's live neighbors) and re-pruned to ≤ `R` where the splice
+/// overflowed. Errors when fewer than two vertices survive (a graph
+/// needs an edge).
+pub fn compact(
+    snap: &OnlineSnapshot,
+    idx: &IndexRefs<'_>,
+) -> Result<CompactedIndex, String> {
+    let n_total = snap.n_total();
+    let n_live = snap.n_live();
+    if n_live < 2 {
+        return Err(format!(
+            "compaction needs >= 2 live vectors, have {n_live}"
+        ));
+    }
+    let dim = idx.storage.dim();
+    let r = idx.params.r;
+    let alpha = idx.params.alpha;
+
+    // Dense renumbering of survivors, preserving id order.
+    let mut old_to_new: Vec<Option<u32>> = vec![None; n_total];
+    let mut new_to_old: Vec<u32> = Vec::with_capacity(n_live);
+    for old in 0..n_total as u32 {
+        if !snap.is_tombstoned(old) {
+            old_to_new[old as usize] = Some(new_to_old.len() as u32);
+            new_to_old.push(old);
+        }
+    }
+
+    // Packed live rows (padded tails dropped).
+    let mut data: Vec<f32> = Vec::with_capacity(n_live * dim);
+    {
+        let rows = RowSource::StoreDelta(idx.storage, snap.delta());
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        for &old in &new_to_old {
+            data.extend_from_slice(&rows.get(old, &mut buf, &mut stats)[..dim]);
+        }
+    }
+    let base = VectorSet::new(dim, data);
+
+    // Splice + renumber + re-prune each survivor's adjacency.
+    let metric = idx.metric;
+    let dist = |a: u32, b: u32| metric.distance(base.row(a as usize), base.row(b as usize));
+    let mut lists: Vec<Vec<u32>> = Vec::with_capacity(n_live);
+    for (new_v, &old_v) in new_to_old.iter().enumerate() {
+        let new_v = new_v as u32;
+        let row = snap.row_of(idx.graph, old_v);
+        let mut spliced: Vec<u32> = Vec::with_capacity(row.len());
+        let mut push = |spliced: &mut Vec<u32>, old_t: u32| {
+            if let Some(new_t) = old_to_new[old_t as usize] {
+                if new_t != new_v && !spliced.contains(&new_t) {
+                    spliced.push(new_t);
+                }
+            }
+        };
+        for &t in row {
+            if snap.is_tombstoned(t) {
+                for &u in snap.row_of(idx.graph, t) {
+                    push(&mut spliced, u);
+                }
+            } else {
+                push(&mut spliced, t);
+            }
+        }
+        if spliced.is_empty() {
+            // Fully isolated by churn: re-anchor at the nearest other
+            // survivor so the graph stays navigable.
+            let mut best = (f32::INFINITY, u32::MAX);
+            for other in 0..n_live as u32 {
+                if other != new_v {
+                    let d = dist(new_v, other);
+                    if d < best.0 {
+                        best = (d, other);
+                    }
+                }
+            }
+            spliced.push(best.1);
+        }
+        let pruned = if spliced.len() > r {
+            let cand: Vec<(f32, u32)> = spliced.iter().map(|&t| (dist(new_v, t), t)).collect();
+            vamana::robust_prune_with(new_v, cand, alpha, r, dist)
+        } else {
+            spliced
+        };
+        lists.push(pruned);
+    }
+
+    // Entry point: the old entry if it survived, else the survivor
+    // nearest to the old entry's vector.
+    let entry_point = match old_to_new[idx.graph.entry_point as usize] {
+        Some(e) => e,
+        None => {
+            let rows = RowSource::StoreDelta(idx.storage, snap.delta());
+            let mut buf = ReadBuf::new();
+            let mut stats = SearchStats::default();
+            let entry_row = rows.get(idx.graph.entry_point, &mut buf, &mut stats)[..dim].to_vec();
+            let mut best = (f32::INFINITY, 0u32);
+            for new_v in 0..n_live {
+                let d = metric.distance(&entry_row, base.row(new_v));
+                if d < best.0 {
+                    best = (d, new_v as u32);
+                }
+            }
+            best.1
+        }
+    };
+
+    Ok(CompactedIndex {
+        base,
+        lists,
+        entry_point,
+        new_to_old,
+        old_to_new,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shared write-plane state
+// ---------------------------------------------------------------------------
+
+/// Lifetime totals of the write plane, surfaced by the wire `status` op.
+#[derive(Debug, Default)]
+pub struct OnlineCounters {
+    pub inserts_total: AtomicU64,
+    pub deletes_total: AtomicU64,
+    pub flushes_total: AtomicU64,
+    pub repair_splices_total: AtomicU64,
+}
+
+impl OnlineCounters {
+    /// Carry totals across a flush hot-swap (the successor service keeps
+    /// reporting lifetime numbers, not since-flush numbers).
+    pub fn adopt(&self, from: &OnlineCounters) {
+        self.inserts_total
+            .store(from.inserts_total.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.deletes_total
+            .store(from.deletes_total.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.flushes_total
+            .store(from.flushes_total.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.repair_splices_total.store(
+            from.repair_splices_total.load(Ordering::Relaxed),
+            Ordering::Relaxed,
+        );
+    }
+}
+
+struct WriterInner {
+    /// Tombstoned ids awaiting the next repair pass.
+    pending_repair: Vec<u32>,
+}
+
+/// The write plane of one served index: the published snapshot plus the
+/// single-writer queue and counters. Queries only ever touch [`load`]
+/// (read lock → `Arc` clone); all mutations serialize on the writer
+/// mutex and publish with a pointer swap.
+///
+/// [`load`]: OnlineState::load
+pub struct OnlineState {
+    snap: RwLock<Arc<OnlineSnapshot>>,
+    writer: Mutex<WriterInner>,
+    counters: OnlineCounters,
+    repair_every: AtomicU64,
+}
+
+impl OnlineState {
+    pub fn new(base_n: usize, dim: usize, pq_m: usize) -> OnlineState {
+        Self::with_epoch(base_n, dim, pq_m, 0)
+    }
+
+    /// Fresh state whose clean snapshot starts at `epoch` — the flush
+    /// hot-swap seeds the successor past the predecessor's last epoch so
+    /// clients observe monotonic epochs across the swap.
+    pub fn with_epoch(base_n: usize, dim: usize, pq_m: usize, epoch: u64) -> OnlineState {
+        let mut snap = OnlineSnapshot::empty(base_n, dim, pq_m);
+        snap.epoch = epoch;
+        OnlineState {
+            snap: RwLock::new(Arc::new(snap)),
+            writer: Mutex::new(WriterInner {
+                pending_repair: Vec::new(),
+            }),
+            counters: OnlineCounters::default(),
+            repair_every: AtomicU64::new(DEFAULT_REPAIR_EVERY),
+        }
+    }
+
+    /// The current snapshot (wait-free in practice: a pointer clone
+    /// under a momentarily held read lock; writers hold the write lock
+    /// only for the swap itself).
+    #[inline]
+    pub fn load(&self) -> Arc<OnlineSnapshot> {
+        self.snap.read().unwrap().clone()
+    }
+
+    /// Current publish epoch.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.load().epoch
+    }
+
+    pub fn counters(&self) -> &OnlineCounters {
+        &self.counters
+    }
+
+    pub fn repair_every(&self) -> u64 {
+        self.repair_every.load(Ordering::Relaxed)
+    }
+
+    /// Deletes between repair passes (`0` disables periodic repair —
+    /// splices then happen only at flush).
+    pub fn set_repair_every(&self, every: u64) {
+        self.repair_every.store(every, Ordering::Relaxed);
+    }
+
+    fn publish(&self, next: OnlineSnapshot) {
+        *self.snap.write().unwrap() = Arc::new(next);
+    }
+
+    /// Insert `q`; returns `(id, epoch)` of the publish that made it
+    /// visible. The vector is findable by queries admitted after this
+    /// returns.
+    pub fn insert(
+        &self,
+        idx: &IndexRefs<'_>,
+        q: &[f32],
+        scratch: &mut QueryScratch,
+    ) -> Result<(u32, u64), String> {
+        let _w = self.writer.lock().unwrap();
+        let cur = self.load();
+        let (next, id) = insert_snapshot(&cur, idx, q, scratch)?;
+        let epoch = next.epoch;
+        self.publish(next);
+        self.counters.inserts_total.fetch_add(1, Ordering::Relaxed);
+        Ok((id, epoch))
+    }
+
+    /// Tombstone `id`; returns `(deleted, epoch)` — `deleted` is false
+    /// when the id was already tombstoned (idempotent). Every
+    /// `repair_every` deletes, the accumulated tombstones are spliced
+    /// out of their in-neighbors' lists in the same publish.
+    pub fn delete(&self, idx: &IndexRefs<'_>, id: u32) -> Result<(bool, u64), String> {
+        let mut w = self.writer.lock().unwrap();
+        let cur = self.load();
+        if (id as usize) >= cur.n_total() {
+            return Err(format!(
+                "delete id {} out of range (n_total {})",
+                id,
+                cur.n_total()
+            ));
+        }
+        let Some(mut next) = delete_snapshot(&cur, id) else {
+            return Ok((false, cur.epoch));
+        };
+        w.pending_repair.push(id);
+        let every = self.repair_every();
+        if every > 0 && w.pending_repair.len() as u64 >= every {
+            let pending = std::mem::take(&mut w.pending_repair);
+            let splices = repair_in_place(&mut next, idx, &pending);
+            self.counters
+                .repair_splices_total
+                .fetch_add(splices, Ordering::Relaxed);
+        }
+        let epoch = next.epoch;
+        self.publish(next);
+        self.counters.deletes_total.fetch_add(1, Ordering::Relaxed);
+        Ok((true, epoch))
+    }
+
+    /// Run compaction under the writer lock (no concurrent mutation can
+    /// slip between the snapshot read and the compacted image) and
+    /// account the flush. The caller persists the returned image and
+    /// hot-swaps the service.
+    pub fn compact_for_flush(
+        &self,
+        idx: &IndexRefs<'_>,
+    ) -> Result<(CompactedIndex, u64), String> {
+        self.run_exclusive(|| {
+            let cur = self.load();
+            let image = compact(&cur, idx)?;
+            self.counters.flushes_total.fetch_add(1, Ordering::Relaxed);
+            Ok((image, cur.epoch))
+        })
+    }
+
+    /// Run `f` while holding the writer lock. The service-level flush
+    /// uses this to keep any insert/delete from landing between
+    /// compaction and the hot swap (such a write would be silently
+    /// dropped by the swap). Queries are unaffected — they never take
+    /// this lock; only other writers queue behind `f`. `f` must not
+    /// call back into `insert`/`delete`/`compact_for_flush` on the same
+    /// state: the mutex is not reentrant.
+    pub fn run_exclusive<T>(&self, f: impl FnOnce() -> T) -> T {
+        let _w = self.writer.lock().unwrap();
+        f()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::search::beam::accurate_beam_search;
+
+    struct Fix {
+        ds: crate::dataset::Dataset,
+        g: Graph,
+        store: VectorStore,
+        cb: PqCodebook,
+        codes: PqCodes,
+        params: GraphParams,
+    }
+
+    fn fixture(n: usize, seed: u64) -> Fix {
+        let ds = tiny_uniform(n, 16, Metric::L2, seed);
+        let params = GraphParams {
+            r: 16,
+            build_l: 32,
+            alpha: 1.2,
+            seed,
+        };
+        let g = vamana::build(&ds.base, ds.metric, &params);
+        let store = VectorStore::resident(&ds.base);
+        let cb = PqCodebook::train(&ds.base, ds.metric, 8, 32, n, 8, seed);
+        let codes = cb.encode(&ds.base);
+        Fix {
+            ds,
+            g,
+            store,
+            cb,
+            codes,
+            params,
+        }
+    }
+
+    fn refs<'a>(f: &'a Fix) -> IndexRefs<'a> {
+        IndexRefs {
+            graph: &f.g,
+            storage: &f.store,
+            base_stub: f.store.base_stub(),
+            metric: f.ds.metric,
+            codes: Some(&f.codes),
+            gap: None,
+            codebook: Some(&f.cb),
+            params: &f.params,
+        }
+    }
+
+    fn search_ids(f: &Fix, snap: &OnlineSnapshot, q: &[f32], k: usize) -> Vec<u32> {
+        let ctx = SearchContext {
+            base: f.store.base_stub(),
+            metric: f.ds.metric,
+            graph: &f.g,
+            codes: Some(&f.codes),
+            gap: None,
+            storage: Some(&f.store),
+            online: Some(snap),
+        };
+        accurate_beam_search(&ctx, q, k, 64, false).ids
+    }
+
+    #[test]
+    fn inserted_vector_is_its_own_nearest_neighbor() {
+        let f = fixture(300, 21);
+        let state = OnlineState::new(f.ds.n_base(), f.ds.dim(), 8);
+        let idx = refs(&f);
+        let mut scratch = QueryScratch::new();
+        let q: Vec<f32> = f.ds.queries.row(0).to_vec();
+        let (id, epoch) = state.insert(&idx, &q, &mut scratch).unwrap();
+        assert_eq!(id as usize, f.ds.n_base());
+        assert_eq!(epoch, 1);
+        let snap = state.load();
+        assert_eq!(snap.n_total(), f.ds.n_base() + 1);
+        assert_eq!(snap.n_live(), f.ds.n_base() + 1);
+        // Findable immediately: the inserted vector is its own NN.
+        let ids = search_ids(&f, &snap, &q, 1);
+        assert_eq!(ids, vec![id]);
+        // Its PQ codes exist, its overlay row is bounded by R.
+        assert_eq!(snap.code_row(id).unwrap().len(), 8);
+        let row = snap.overlay_row(id).unwrap();
+        assert!(!row.is_empty() && row.len() <= f.params.r);
+        // Bounded-degree invariant holds everywhere it was touched.
+        for (&v, row) in snap.overlay.iter() {
+            assert!(row.len() <= f.params.r, "vertex {v} degree {}", row.len());
+        }
+    }
+
+    #[test]
+    fn delete_excludes_immediately_and_repair_splices() {
+        let f = fixture(300, 22);
+        let state = OnlineState::new(f.ds.n_base(), f.ds.dim(), 8);
+        state.set_repair_every(4);
+        let idx = refs(&f);
+        // The id nearest to query 0 must vanish from results.
+        let q: Vec<f32> = f.ds.queries.row(0).to_vec();
+        let before = search_ids(&f, &state.load(), &q, 5);
+        let victim = before[0];
+        let (deleted, e1) = state.delete(&idx, victim).unwrap();
+        assert!(deleted);
+        let after = search_ids(&f, &state.load(), &q, 5);
+        assert!(!after.contains(&victim), "tombstoned id in results");
+        // Idempotent: re-delete reports false, epoch unchanged.
+        let (again, e2) = state.delete(&idx, victim).unwrap();
+        assert!(!again);
+        assert_eq!(e1, e2);
+        // Out-of-range ids are rejected.
+        assert!(state.delete(&idx, 10_000).is_err());
+        // Three more deletes trip the repair pass (every = 4); pick ids
+        // distinct from the victim so all four land in pending_repair.
+        let more: Vec<u32> = (0..4u32).filter(|&i| i != victim).take(3).collect();
+        for &id in &more {
+            state.delete(&idx, id).unwrap();
+        }
+        let splices = state
+            .counters()
+            .repair_splices_total
+            .load(Ordering::Relaxed);
+        assert!(splices > 0, "repair never spliced");
+        // Post-repair, no live vertex links to a spliced tombstone.
+        let mut dead = more.clone();
+        dead.push(victim);
+        let snap = state.load();
+        for v in 0..snap.n_total() as u32 {
+            if snap.is_tombstoned(v) {
+                continue;
+            }
+            for &t in snap.row_of(&f.g, v) {
+                assert!(
+                    !dead.contains(&t),
+                    "vertex {v} still links to spliced tombstone {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compact_drops_tombstones_and_keeps_neighborhoods() {
+        let f = fixture(300, 23);
+        let state = OnlineState::new(f.ds.n_base(), f.ds.dim(), 8);
+        let idx = refs(&f);
+        let mut scratch = QueryScratch::new();
+        // Churn: 12 inserts, 10 deletes.
+        for qi in 0..12 {
+            let q: Vec<f32> = f.ds.queries.row(qi % f.ds.n_queries()).to_vec();
+            state.insert(&idx, &q, &mut scratch).unwrap();
+        }
+        for id in 0..10u32 {
+            state.delete(&idx, id).unwrap();
+        }
+        let (image, _) = state.compact_for_flush(&idx).unwrap();
+        let snap = state.load();
+        assert_eq!(image.base.len(), snap.n_live());
+        assert_eq!(image.lists.len(), image.base.len());
+        assert_eq!(image.new_to_old.len(), image.base.len());
+        assert!((image.entry_point as usize) < image.base.len());
+        for (v, lst) in image.lists.iter().enumerate() {
+            assert!(!lst.is_empty(), "vertex {v} isolated after compaction");
+            assert!(lst.len() <= f.params.r);
+            for &t in lst {
+                assert!((t as usize) < image.base.len(), "edge out of range");
+                assert_ne!(t as usize, v, "self loop after compaction");
+            }
+        }
+        // Renumbering is consistent both ways and skips every tombstone.
+        for (new, &old) in image.new_to_old.iter().enumerate() {
+            assert_eq!(image.old_to_new[old as usize], Some(new as u32));
+            assert!(!snap.is_tombstoned(old));
+        }
+        // The compacted graph still answers: its CSR form validates.
+        let g2 = Graph::from_lists(&image.lists, image.entry_point, f.params.r);
+        g2.validate().unwrap();
+        // Degenerate: fewer than two survivors cannot form a graph.
+        assert!(compact(&OnlineSnapshot::empty(1, 4, 0), &idx).is_err());
+    }
+
+    #[test]
+    fn snapshot_isolation_pins_old_epochs() {
+        let f = fixture(200, 24);
+        let state = OnlineState::new(f.ds.n_base(), f.ds.dim(), 8);
+        let idx = refs(&f);
+        let pinned = state.load();
+        let q: Vec<f32> = f.ds.queries.row(1).to_vec();
+        let mut scratch = QueryScratch::new();
+        let (id, _) = state.insert(&idx, &q, &mut scratch).unwrap();
+        state.delete(&idx, 3).unwrap();
+        // The pinned snapshot still sees the pre-write world...
+        assert!(pinned.is_clean());
+        assert_eq!(pinned.n_total(), f.ds.n_base());
+        assert!(!pinned.is_tombstoned(3));
+        // ...while the published one has both writes, in epoch order.
+        let now = state.load();
+        assert_eq!(now.epoch(), 2);
+        assert!(now.is_tombstoned(3));
+        assert_eq!(now.n_total() as u32, id + 1);
+    }
+}

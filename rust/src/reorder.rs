@@ -49,6 +49,7 @@ impl VisitProfile {
             codes: Some(codes),
             gap: None,
             storage: None,
+            online: None,
         };
         for _ in 0..samples {
             let qid = rng.gen_range(base.len());
@@ -320,6 +321,7 @@ mod tests {
             codes: Some(&codes),
             gap: None,
             storage: None,
+            online: None,
         };
         let params = SearchParams {
             l: 60,
@@ -343,6 +345,7 @@ mod tests {
             codes: Some(&re.codes),
             gap: None,
             storage: None,
+            online: None,
         };
         let out2 = proxima_search(&ctx2, &adt, q, &params, ProximaFeatures::default(), false);
         let mapped = re.ids_to_original(&out2.ids);

@@ -19,6 +19,7 @@ use crate::dataset::VectorSet;
 use crate::distance::Metric;
 use crate::gap::GapGraph;
 use crate::graph::Graph;
+use crate::online::OnlineSnapshot;
 use crate::pq::{Adt, PqCodes};
 use crate::storage::{RowSource, VectorStore};
 
@@ -43,16 +44,50 @@ pub struct SearchContext<'a> {
     /// `storage: None` contexts stay unpadded end to end — numerical
     /// comparisons must stay within one layout (see the `simd` docs).
     pub storage: Option<&'a VectorStore>,
+    /// Online write-plane snapshot (`online::`). When `Some`, adjacency
+    /// rows diverging from the frozen CSR come from the snapshot's
+    /// overlay, vectors appended after `base`/`storage` come from its
+    /// padded delta region (requires `storage: Some` so both layouts are
+    /// padded), and tombstoned ids are excluded from final results while
+    /// staying traversable. `None` (every offline/figure/test literal)
+    /// keeps the immutable-index behavior byte for byte.
+    pub online: Option<&'a OnlineSnapshot>,
 }
 
 impl<'a> SearchContext<'a> {
-    /// Bits for fetching vertex v's adjacency row.
+    /// Adjacency row of vertex v: the snapshot overlay when the write
+    /// plane diverged from the CSR (including all delta vertices), the
+    /// frozen CSR row otherwise.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &'a [u32] {
+        if let Some(o) = self.online {
+            if let Some(row) = o.overlay_row(v) {
+                return row;
+            }
+        }
+        self.graph.neighbors(v)
+    }
+
+    /// Bits for fetching vertex v's adjacency row. Overlay rows are not
+    /// gap-encoded, so they charge the uniform 32 b/edge rate.
     #[inline]
     pub fn index_bits(&self, v: u32) -> u32 {
+        if let Some(o) = self.online {
+            if let Some(row) = o.overlay_row(v) {
+                return (row.len() as u32) * 32;
+            }
+        }
         match self.gap {
             Some(g) => g.row_bits(v as usize) as u32,
             None => (self.graph.neighbors(v).len() as u32) * 32,
         }
+    }
+
+    /// Is `id` tombstoned (deleted but still traversable)? Result
+    /// assembly skips excluded ids; traversal does not.
+    #[inline]
+    pub fn is_excluded(&self, id: u32) -> bool {
+        self.online.is_some_and(|o| o.is_tombstoned(id))
     }
 
     #[inline]
@@ -66,11 +101,12 @@ impl<'a> SearchContext<'a> {
     }
 
     /// Total vectors in the index, whichever tier they live in —
-    /// visited-set sizing must cover the COLD tier too, not just the
-    /// resident rows `base` holds.
+    /// visited-set sizing must cover the COLD tier and the online delta
+    /// region too, not just the resident rows `base` holds.
     #[inline]
     pub fn n_vectors(&self) -> usize {
-        self.storage.map_or(self.base.len(), |s| s.len())
+        let frozen = self.storage.map_or(self.base.len(), |s| s.len());
+        frozen + self.online.map_or(0, |o| o.delta().len())
     }
 
     /// Vector dimensionality (tier-independent).
@@ -82,9 +118,10 @@ impl<'a> SearchContext<'a> {
     /// The raw-vector source the distance providers read from.
     #[inline]
     pub fn rows(&self) -> RowSource<'a> {
-        match self.storage {
-            Some(s) => RowSource::Store(s),
-            None => RowSource::Set(self.base),
+        match (self.storage, self.online) {
+            (Some(s), Some(o)) if !o.delta().is_empty() => RowSource::StoreDelta(s, o.delta()),
+            (Some(s), _) => RowSource::Store(s),
+            (None, _) => RowSource::Set(self.base),
         }
     }
 }
@@ -244,9 +281,17 @@ pub fn accurate_beam_search_into(
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
 
+    // Tombstoned ids were traversable but may not be results: scan the
+    // whole list (not just the top k) until k live candidates are kept.
     out.ids.clear();
     out.dists.clear();
-    for c in list.items.iter().take(k) {
+    for c in list.items.iter() {
+        if out.ids.len() == k {
+            break;
+        }
+        if ctx.is_excluded(c.id) {
+            continue;
+        }
         out.ids.push(c.id);
         out.dists.push(c.dist);
     }
@@ -354,6 +399,9 @@ pub fn pq_beam_search_into(
     rr.sort_unstable_by(|a, b| {
         a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
     });
+    // Tombstoned candidates guided the walk and were reranked, but may
+    // not surface as results — drop them before taking the top k.
+    rr.retain(|&(_, id)| !ctx.is_excluded(id));
     rr.truncate(k);
 
     out.ids.clear();
@@ -453,6 +501,7 @@ mod tests {
             codes: None,
             gap: None,
             storage: None,
+            online: None,
         };
         let gt = brute_force(&ds, 10);
         let mut recall = 0.0;
@@ -474,6 +523,7 @@ mod tests {
             codes: Some(&codes),
             gap: None,
             storage: None,
+            online: None,
         };
         let gt = brute_force(&ds, 10);
         let mut recall = 0.0;
@@ -500,6 +550,7 @@ mod tests {
             codes: Some(&codes),
             gap: None,
             storage: None,
+            online: None,
         };
         let adt = cb.build_adt(ds.queries.row(0));
         let out = pq_beam_search(&ctx, &adt, ds.queries.row(0), 5, 30, 10, true);
@@ -526,6 +577,7 @@ mod tests {
             codes: Some(&codes),
             gap: None,
             storage: None,
+            online: None,
         };
         let ctx_gap = SearchContext {
             gap: Some(&gap),

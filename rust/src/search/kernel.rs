@@ -357,6 +357,9 @@ impl DistanceProvider for Accurate<'_, '_> {
 pub struct PqAdt<'a, 'c> {
     adt: &'a Adt,
     codes: &'a PqCodes,
+    /// Online write-plane snapshot: PQ codes for delta-region ids (those
+    /// past the frozen base) live here, not in `codes`.
+    online: Option<&'a crate::online::OnlineSnapshot>,
     rows: RowSource<'a>,
     buf: &'c mut ReadBuf,
     metric: Metric,
@@ -376,6 +379,7 @@ impl<'a, 'c> PqAdt<'a, 'c> {
         PqAdt {
             adt,
             codes,
+            online: ctx.online,
             rows: ctx.rows(),
             buf,
             metric: ctx.metric,
@@ -383,6 +387,18 @@ impl<'a, 'c> PqAdt<'a, 'c> {
             pq_bits: ctx.pq_bits(),
             raw_bits: ctx.raw_bits(),
         }
+    }
+
+    /// PQ code row for `id`: the frozen code table for base ids, the
+    /// snapshot's delta codes for appended ids.
+    #[inline]
+    fn code_row(&self, id: u32) -> &'a [u8] {
+        if let Some(o) = self.online {
+            if let Some(row) = o.code_row(id) {
+                return row;
+            }
+        }
+        self.codes.row(id as usize)
     }
 }
 
@@ -397,7 +413,7 @@ impl DistanceProvider for PqAdt<'_, '_> {
                 bits: self.pq_bits,
             });
         }
-        self.adt.pq_distance(self.codes.row(id as usize))
+        self.adt.pq_distance(self.code_row(id))
     }
 
     #[inline]
@@ -535,7 +551,7 @@ pub fn expand_prefix<P: DistanceProvider, V: VisitedSet>(
             });
         }
         let mut fresh = 0u32;
-        for &nb in ctx.graph.neighbors(v) {
+        for &nb in ctx.neighbors(v) {
             if visited.test_and_set(nb) {
                 continue;
             }

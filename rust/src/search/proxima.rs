@@ -282,6 +282,9 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     rerank.sort_unstable_by(|a, b| {
         a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
     });
+    // Tombstoned ids were traversable (and rerankable) but must never be
+    // returned — drop them before the final cut.
+    rerank.retain(|&(_, id)| !ctx.is_excluded(id));
     rerank.truncate(k);
 }
 
@@ -327,6 +330,7 @@ mod tests {
             codes: Some(&f.codes),
             gap: None,
             storage: None,
+            online: None,
         }
     }
 

@@ -435,13 +435,93 @@ impl VectorStore {
     }
 }
 
+/// Append-only padded delta region for online inserts (the write plane's
+/// vector tier, `online::`): rows appended after the frozen base region
+/// get ids `base_n..base_n + len`, each held as its own 64-byte-aligned
+/// [`stride_for`]`(dim)`-length buffer with a zero tail — the exact row
+/// layout [`VectorStore`] serves, so the SIMD kernels and the padded
+/// query scratch treat delta rows and base rows identically.
+///
+/// Rows are immutable once pushed and individually `Arc`'d, so cloning a
+/// delta (each epoch publish snapshots one) copies `len` pointers, never
+/// vector payloads.
+#[derive(Clone, Default)]
+pub struct DeltaVectors {
+    rows: Vec<std::sync::Arc<AlignedBuf>>,
+    dim: usize,
+}
+
+impl DeltaVectors {
+    pub fn new(dim: usize) -> DeltaVectors {
+        assert!(dim > 0, "delta region requires dim >= 1");
+        DeltaVectors {
+            rows: Vec::new(),
+            dim,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Served-row length in f32s ([`stride_for`]`(dim)`).
+    #[inline]
+    pub fn stride(&self) -> usize {
+        stride_for(self.dim)
+    }
+
+    /// Append one packed `dim`-length row; it is padded into its own
+    /// aligned buffer. Returns the row's delta-local index.
+    pub fn push(&mut self, row: &[f32]) -> usize {
+        assert_eq!(row.len(), self.dim, "delta row dim mismatch");
+        let mut buf = AlignedBuf::new();
+        buf.fill_padded(row, stride_for(self.dim));
+        self.rows.push(std::sync::Arc::new(buf));
+        self.rows.len() - 1
+    }
+
+    /// Delta-local row `i` as its padded `stride()`-length slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        self.rows[i].as_slice()
+    }
+
+    /// DRAM bytes pinned by the delta rows (padded payloads).
+    pub fn padded_bytes(&self) -> u64 {
+        (self.rows.len() * stride_for(self.dim)) as u64 * 4
+    }
+}
+
+impl std::fmt::Debug for DeltaVectors {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DeltaVectors")
+            .field("len", &self.rows.len())
+            .field("dim", &self.dim)
+            .finish()
+    }
+}
+
 /// The raw-vector source a `DistanceProvider` reads from: a borrowed
 /// resident `VectorSet` (the default, zero-overhead path every direct
-/// `SearchContext { base, .. }` construction gets) or a tiered store.
+/// `SearchContext { base, .. }` construction gets), a tiered store, or a
+/// tiered store extended by an online delta region (ids `store.len()..`
+/// resolve to delta rows).
 #[derive(Clone, Copy)]
 pub enum RowSource<'a> {
     Set(&'a VectorSet),
     Store(&'a VectorStore),
+    StoreDelta(&'a VectorStore, &'a DeltaVectors),
 }
 
 impl<'a> RowSource<'a> {
@@ -450,6 +530,7 @@ impl<'a> RowSource<'a> {
         match self {
             RowSource::Set(s) => s.len(),
             RowSource::Store(s) => s.len(),
+            RowSource::StoreDelta(s, d) => s.len() + d.len(),
         }
     }
 
@@ -463,12 +544,15 @@ impl<'a> RowSource<'a> {
         match self {
             RowSource::Set(s) => s.dim,
             RowSource::Store(s) => s.dim(),
+            RowSource::StoreDelta(s, _) => s.dim(),
         }
     }
 
     /// Fetch row `id` (see [`VectorStore::row`] for the metering and
     /// failure contract of the store-backed arm). Store-backed rows are
     /// padded to the store stride; `Set` rows are packed (`dim`-length).
+    /// Under `StoreDelta`, ids past the store resolve to delta rows
+    /// (already padded, DRAM-resident, never metered as cold).
     #[inline]
     pub fn get<'r>(&self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32]
     where
@@ -477,13 +561,21 @@ impl<'a> RowSource<'a> {
         match self {
             RowSource::Set(s) => s.row(id as usize),
             RowSource::Store(s) => s.row(id, buf, stats),
+            RowSource::StoreDelta(s, d) => {
+                if (id as usize) < s.len() {
+                    s.row(id, buf, stats)
+                } else {
+                    d.row(id as usize - s.len())
+                }
+            }
         }
     }
 
     /// The backing rows as one flat row-major slice plus stride, when
     /// contiguously DRAM-resident: a packed `VectorSet` (stride = dim)
     /// or a fully-resident store (padded stride). `None` when rows may
-    /// come from the cold tier — callers fall back to per-id [`get`].
+    /// come from the cold tier or an online delta region — callers fall
+    /// back to per-id [`get`].
     ///
     /// [`get`]: RowSource::get
     #[inline]
@@ -491,6 +583,7 @@ impl<'a> RowSource<'a> {
         match *self {
             RowSource::Set(s) => Some((&s.data, s.dim)),
             RowSource::Store(s) => s.resident_rows(),
+            RowSource::StoreDelta(..) => None,
         }
     }
 }
@@ -619,6 +712,38 @@ mod tests {
         }
         assert_eq!(stats.cold_reads, 0);
         assert_eq!(store.materialize().unwrap().data, set.data);
+    }
+
+    #[test]
+    fn delta_rows_are_padded_and_resolve_past_the_store() {
+        let set = VectorSet::new(3, (0..6).map(|i| i as f32).collect::<Vec<_>>());
+        let store = VectorStore::resident(&set);
+        let mut delta = DeltaVectors::new(3);
+        assert!(delta.is_empty());
+        assert_eq!(delta.push(&[9.0, 8.0, 7.0]), 0);
+        assert_eq!(delta.push(&[6.0, 5.0, 4.0]), 1);
+        assert_eq!(delta.len(), 2);
+        assert_eq!(delta.stride(), stride_for(3));
+        // Rows come back padded: stride-length, zero tail, 64-byte aligned.
+        let row = delta.row(1);
+        assert_eq!(row.len(), stride_for(3));
+        assert_eq!(&row[..3], &[6.0, 5.0, 4.0]);
+        assert!(row[3..].iter().all(|&x| x == 0.0));
+        assert_eq!(row.as_ptr() as usize % 64, 0, "delta rows must be aligned");
+        // Cheap clone: payloads shared, not copied.
+        let snap = delta.clone();
+        assert_eq!(snap.row(0), delta.row(0));
+        // StoreDelta source: base ids hit the store, overflow ids the delta.
+        let src = RowSource::StoreDelta(&store, &delta);
+        assert_eq!(src.len(), 4);
+        assert_eq!(src.dim(), 3);
+        assert!(src.flat().is_none(), "delta sources rerank per id");
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        assert_eq!(&src.get(1, &mut buf, &mut stats)[..3], set.row(1));
+        assert_eq!(&src.get(2, &mut buf, &mut stats)[..3], &[9.0, 8.0, 7.0]);
+        assert_eq!(&src.get(3, &mut buf, &mut stats)[..3], &[6.0, 5.0, 4.0]);
+        assert_eq!(stats.cold_reads, 0);
     }
 
     #[test]

@@ -60,6 +60,7 @@ fn ctx(f: &Fixture) -> SearchContext<'_> {
         codes: Some(&f.codes),
         gap: None,
         storage: None,
+        online: None,
     }
 }
 

@@ -1,0 +1,251 @@
+//! Integration tests for the online write plane (ISSUE 7 acceptance
+//! criteria): an insert is findable the moment it returns, a delete is
+//! excluded the moment it returns (while staying traversable), and
+//! `flush` → `open` round-trips — the successor service and a fresh
+//! open of the flushed artifact answer bitwise-identically, the spec is
+//! re-stamped to the live count, and recall after 10% churn + flush
+//! stays within two points of a fresh build over the same vectors.
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::SearchService;
+use proxima::dataset::ground_truth::brute_force;
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::{recall_at_k, Dataset, VectorSet};
+use proxima::distance::Metric;
+use std::path::PathBuf;
+
+fn tmpdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("proxima-online-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn service(seed: u64) -> (Dataset, SearchService) {
+    let ds = tiny_uniform(400, 12, Metric::L2, seed);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 6,
+        },
+        SearchParams {
+            l: 100,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    );
+    (ds, svc)
+}
+
+/// Acceptance: an inserted vector is returnable by the very next query;
+/// a deleted one is excluded by the very next query (and the delete is
+/// idempotent). Epochs advance monotonically through both.
+#[test]
+fn insert_is_findable_and_delete_is_excluded_immediately() {
+    let (ds, svc) = service(51);
+    let probe = ds.queries.row(0);
+
+    let e0 = svc.online_epoch();
+    let (id, e1) = svc.insert(probe).unwrap();
+    assert_eq!(id as usize, ds.n_base(), "first insert takes the next id");
+    assert!(e1 > e0);
+    let found = svc.search(probe, 1);
+    assert_eq!(
+        found.ids,
+        vec![id],
+        "an exact duplicate of the query must be its own nearest neighbor"
+    );
+    assert_eq!(svc.exact_nn_live(probe, 1), vec![id]);
+
+    let (deleted, e2) = svc.delete(id).unwrap();
+    assert!(deleted);
+    assert!(e2 > e1);
+    let gone = svc.search(probe, 10);
+    assert!(
+        !gone.ids.contains(&id),
+        "a tombstoned id must never appear in results"
+    );
+    assert!(!svc.exact_nn_live(probe, 10).contains(&id));
+    // Idempotent: the second delete is a no-op, not an error.
+    let (again, _) = svc.delete(id).unwrap();
+    assert!(!again);
+}
+
+/// Acceptance: flush → open round-trips. The successor service the
+/// flush returns and a FRESH open of the flushed artifact answer
+/// bitwise-identically; the spec is re-stamped to the live count; and
+/// through `FlushOutcome::new_to_old` the compacted answers match the
+/// live (pre-flush) index on surviving ids.
+#[test]
+fn flush_open_round_trip_matches_live_on_surviving_ids() {
+    let (ds, svc) = service(53);
+    let k = 10;
+    let extra = tiny_uniform(20, 12, Metric::L2, 530);
+    for i in 0..20 {
+        svc.insert(extra.base.row(i)).unwrap();
+    }
+
+    // Victims chosen OUTSIDE the current result lists, so the surviving
+    // answers have a stable reference to compare against.
+    let queries: Vec<&[f32]> = (0..8).map(|qi| ds.queries.row(qi)).collect();
+    let mut in_results = std::collections::HashSet::new();
+    for q in &queries {
+        in_results.extend(svc.search(q, k).ids);
+    }
+    let victims: Vec<u32> = (0..ds.n_base() as u32)
+        .filter(|id| !in_results.contains(id))
+        .take(20)
+        .collect();
+    assert_eq!(victims.len(), 20);
+    for &v in &victims {
+        svc.delete(v).unwrap();
+    }
+    // Live answers AFTER the full churn (periodic repair splices change
+    // traversal, so this is the reference state the flush compacts).
+    let live: Vec<Vec<u32>> = queries.iter().map(|q| svc.search(q, k).ids).collect();
+
+    let path = tmpdir().join("flush-roundtrip.pxa");
+    let fo = svc.flush(Some(&path)).unwrap();
+    assert_eq!(fo.n_live, 400, "20 in, 20 out");
+    assert_eq!(fo.service.spec.n_base, 400, "spec must be re-stamped");
+    assert_eq!(fo.new_to_old.len(), 400);
+    assert!(fo.epoch > 0);
+
+    // The successor and a fresh open of the artifact are the same index:
+    // bitwise-identical answers on every query.
+    let reopened = SearchService::open(&path, svc.params, false).unwrap();
+    assert_eq!(reopened.spec, fo.service.spec);
+    for (qi, q) in queries.iter().enumerate() {
+        let a = fo.service.search(q, k);
+        let b = reopened.search(q, k);
+        assert_eq!(a.ids, b.ids, "query {qi}: flushed vs reopened ids");
+        assert_eq!(a.dists, b.dists, "query {qi}: flushed vs reopened dists");
+    }
+
+    // Surviving-id match against the live index: every compacted answer
+    // maps back to a LIVE pre-flush id, and the mapped top-k keeps a
+    // strong majority of the live top-k (compaction splices the victims'
+    // backlinks and re-prunes, so exact list equality is not promised).
+    for (qi, q) in queries.iter().enumerate() {
+        let flushed_ids = fo.service.search(q, k).ids;
+        let mapped: Vec<u32> = flushed_ids
+            .iter()
+            .map(|&new| fo.new_to_old[new as usize])
+            .collect();
+        assert!(
+            mapped.iter().all(|old| !victims.contains(old)),
+            "query {qi}: a flushed answer resolved to a deleted id"
+        );
+        let overlap = mapped.iter().filter(|old| live[qi].contains(old)).count();
+        assert!(
+            overlap * 10 >= k * 6,
+            "query {qi}: only {overlap}/{k} of the live answers survived the flush"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// With zero deletions the compaction renumbering is the identity: the
+/// flushed index answers in exactly the pre-flush id space.
+#[test]
+fn flush_without_deletions_preserves_ids() {
+    let (ds, svc) = service(59);
+    let extra = tiny_uniform(10, 12, Metric::L2, 590);
+    for i in 0..10 {
+        svc.insert(extra.base.row(i)).unwrap();
+    }
+    let live: Vec<Vec<u32>> = (0..8).map(|qi| svc.search(ds.queries.row(qi), 10).ids).collect();
+    let path = tmpdir().join("flush-identity.pxa");
+    let fo = svc.flush(Some(&path)).unwrap();
+    assert!(fo.new_to_old.iter().enumerate().all(|(new, &old)| new as u32 == old));
+    for (qi, expect) in live.iter().enumerate() {
+        assert_eq!(
+            &fo.service.search(ds.queries.row(qi), 10).ids,
+            expect,
+            "query {qi}: no-deletion flush must answer identically"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Acceptance: recall after 10% churn + flush stays within two points
+/// of a FRESH build over the exact same post-churn vectors — the
+/// incremental graph (insert backlinks, repair splices, compaction
+/// re-prune) must not rot relative to a from-scratch Vamana pass.
+#[test]
+fn recall_after_ten_percent_churn_and_flush_is_within_two_points_of_fresh() {
+    let (ds, svc) = service(61);
+    let k = 10;
+    let n = ds.n_base();
+    let churn = n / 10;
+    let fresh_vecs = tiny_uniform(churn, 12, Metric::L2, 610);
+    for i in 0..churn {
+        svc.insert(fresh_vecs.base.row(i)).unwrap();
+    }
+    for id in 0..churn as u32 {
+        let (deleted, _) = svc.delete(id).unwrap();
+        assert!(deleted);
+    }
+    let path = tmpdir().join("flush-churn.pxa");
+    let flushed = svc.flush(Some(&path)).unwrap();
+    assert_eq!(flushed.n_live, n);
+
+    // The post-churn vector set, in exactly the compacted id order:
+    // survivors ascending (old ids churn..n), then the delta inserts in
+    // insertion order — so flushed id i IS post-churn dataset id i.
+    let dim = ds.dim();
+    let mut data: Vec<f32> = Vec::with_capacity(n * dim);
+    for old in churn..n {
+        data.extend_from_slice(ds.base.row(old));
+    }
+    data.extend_from_slice(&fresh_vecs.base.data);
+    let churned = Dataset {
+        name: format!("{}-churned", ds.name),
+        metric: ds.metric,
+        base: VectorSet::new(dim, data),
+        queries: ds.queries.clone(),
+    };
+    let gt = brute_force(&churned, k);
+    let fresh = SearchService::build(
+        &churned,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 61,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: n,
+            kmeans_iters: 6,
+        },
+        svc.params,
+        false,
+    );
+
+    let nq = churned.n_queries();
+    let (mut r_flushed, mut r_fresh) = (0.0, 0.0);
+    for qi in 0..nq {
+        let q = churned.queries.row(qi);
+        r_flushed += recall_at_k(&flushed.service.search(q, k).ids, gt.row(qi), k);
+        r_fresh += recall_at_k(&fresh.search(q, k).ids, gt.row(qi), k);
+    }
+    r_flushed /= nq as f64;
+    r_fresh /= nq as f64;
+    assert!(
+        r_flushed >= r_fresh - 0.02,
+        "post-churn flushed recall {r_flushed:.4} fell more than 2 points \
+         below the fresh build's {r_fresh:.4}"
+    );
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,132 @@
+//! Concurrency stress for the online write plane (ISSUE 7 acceptance):
+//! one writer thread churning insert/delete against N query threads.
+//! The contract under fire —
+//!
+//! * queries NEVER block on the writer (they pin published snapshots);
+//!   no panic on either side;
+//! * a query started after a delete returned never surfaces that id
+//!   (readers track a deleted-id watermark the writer advances only
+//!   AFTER each delete returns);
+//! * the publish epoch is monotonic from every thread's view;
+//! * the post-churn flush compacts to exactly the live census and the
+//!   successor serves.
+//!
+//! CI runs this in release and again under `PROXIMA_FORCE_SCALAR=1`, so
+//! snapshot pinning is exercised on both sides of the kernel dispatch.
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::SearchService;
+use proxima::dataset::synth::tiny_uniform;
+use proxima::distance::Metric;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+const N_BASE: usize = 400;
+const DIM: usize = 12;
+const INSERTS: usize = 150;
+const DELETES: usize = 100;
+const READERS: usize = 3;
+const QUERIES_PER_READER: usize = 150;
+
+#[test]
+fn concurrent_writer_and_readers_uphold_the_snapshot_contract() {
+    let ds = tiny_uniform(N_BASE, DIM, Metric::L2, 71);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 71,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: N_BASE,
+            kmeans_iters: 6,
+        },
+        SearchParams {
+            l: 60,
+            k: 5,
+            ..Default::default()
+        },
+        false,
+    );
+    let fresh = tiny_uniform(INSERTS, DIM, Metric::L2, 710);
+
+    // The writer deletes base ids ASCENDING and advances this watermark
+    // only after each delete has returned — so any query that starts at
+    // watermark w is guaranteed ids 0..w were already tombstoned, and
+    // must not return them.
+    let deleted_watermark = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        let svc = &svc;
+        let watermark = &deleted_watermark;
+        let fresh = &fresh;
+        let ds = &ds;
+
+        scope.spawn(move || {
+            let mut last_epoch = svc.online_epoch();
+            for i in 0..INSERTS {
+                let (id, e) = svc.insert(fresh.base.row(i)).unwrap();
+                assert_eq!(id as usize, N_BASE + i, "delta ids are sequential");
+                assert!(e > last_epoch, "insert must advance the epoch");
+                last_epoch = e;
+                if i < DELETES {
+                    let (deleted, e) = svc.delete(i as u32).unwrap();
+                    assert!(deleted, "base id {i} was live");
+                    assert!(e > last_epoch, "delete must advance the epoch");
+                    last_epoch = e;
+                    watermark.store(i + 1, Ordering::Release);
+                }
+            }
+        });
+
+        for r in 0..READERS {
+            scope.spawn(move || {
+                let mut last_epoch = 0u64;
+                for j in 0..QUERIES_PER_READER {
+                    let w = watermark.load(Ordering::Acquire);
+                    let q = ds.queries.row((r * QUERIES_PER_READER + j) % ds.n_queries());
+                    let out = svc.search(q, 5);
+                    assert_eq!(out.ids.len(), 5);
+                    for &id in &out.ids {
+                        assert!(
+                            (id as usize) >= w,
+                            "reader {r} query {j}: id {id} was tombstoned at watermark {w}"
+                        );
+                    }
+                    let e = svc.online_epoch();
+                    assert!(
+                        e >= last_epoch,
+                        "reader {r}: epoch went backwards ({e} < {last_epoch})"
+                    );
+                    last_epoch = e;
+                }
+            });
+        }
+    });
+
+    // Post-churn census and a flush of the settled state: compaction
+    // must land on exactly the live count and the successor must serve.
+    assert_eq!(deleted_watermark.load(Ordering::Acquire), DELETES);
+    let counters = svc.online.counters();
+    assert_eq!(counters.inserts_total.load(Ordering::Relaxed), INSERTS as u64);
+    assert_eq!(counters.deletes_total.load(Ordering::Relaxed), DELETES as u64);
+
+    let path = std::env::temp_dir().join(format!("proxima-stress-{}.pxa", std::process::id()));
+    let fo = svc.flush(Some(&path)).unwrap();
+    assert_eq!(fo.n_live, N_BASE + INSERTS - DELETES);
+    assert_eq!(fo.service.spec.n_base as usize, N_BASE + INSERTS - DELETES);
+    assert!(fo.epoch > (INSERTS + DELETES) as u64);
+    let out = fo.service.search(ds.queries.row(0), 5);
+    assert_eq!(out.ids.len(), 5);
+    // Nothing the successor returns maps back to a deleted id.
+    for &id in &out.ids {
+        assert!(
+            fo.new_to_old[id as usize] as usize >= DELETES,
+            "successor returned compacted id {id} mapping to a deleted base id"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}

@@ -66,6 +66,7 @@ fn steady_state_query_path_does_not_allocate() {
         codes: Some(&codes),
         gap: None,
         storage: None,
+        online: None,
     };
     let params = SearchParams {
         l: 60,
@@ -172,6 +173,7 @@ fn steady_state_cold_reads_do_not_allocate() {
         codes: Some(&cold.codes),
         gap: None,
         storage: Some(&cold.storage),
+        online: None,
     };
     let params = SearchParams {
         l: 60,
@@ -260,6 +262,7 @@ fn steady_state_resident_store_aligned_path_does_not_allocate() {
         codes: Some(&codes),
         gap: None,
         storage: Some(&store),
+        online: None,
     };
     let params = SearchParams {
         l: 60,
