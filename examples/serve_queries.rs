@@ -324,6 +324,72 @@ fn main() -> proxima::util::error::Result<()> {
     assert!(storage_of(&status, "cold_reads") >= cs.cold_reads as f64);
     println!("cold parity         : in-place file serving matches resident answers");
 
+    // --- The adaptive hot set over the same wire: reload the SAME
+    // artifact with the CACHED residency (S3-FIFO cold-row cache, 4 MiB
+    // here) and repeat a fixed workload — the status storage block now
+    // carries the cache counters, and the cumulative hit_rate climbs as
+    // the hot rows settle into the arena. The typed decode
+    // (`wire::decode_storage_status`) is forward-compatible: unknown
+    // keys are ignored, absent cache keys mean "no cache attached".
+    use proxima::api::wire::decode_storage_status;
+    use proxima::storage::cache::{CachePolicy, DEFAULT_CACHE_BYTES};
+    c.reload_with(
+        &art_path.display().to_string(),
+        Some(Residency::Cached {
+            capacity_bytes: DEFAULT_CACHE_BYTES,
+        }),
+        Some(4), // --cache_mb 4 overrides the default capacity
+        Some(CachePolicy::S3Fifo),
+        None,
+    )?;
+    println!("\n=== adaptive hot set (cached reload -> hit_rate climbs) ===");
+    let decode = |c: &mut Client| {
+        let s = c.status().expect("status");
+        decode_storage_status(s.get("storage").expect("storage block"))
+    };
+    let st0 = decode(&mut c);
+    assert_eq!(st0.residency, "cached");
+    let cache0 = st0.cache.expect("cached residency must report its cache");
+    assert_eq!(cache0.policy, "s3fifo");
+    assert_eq!(cache0.capacity_bytes, 4 << 20);
+    assert_eq!(cache0.hit_rate, 0.0, "fresh epoch, no lookups yet");
+    let mut last_rate = 0.0;
+    for round in 1..=3 {
+        let resp = c.search_batch(
+            &probe,
+            k,
+            &QueryOptions {
+                want_stats: true,
+                ..Default::default()
+            },
+        )?;
+        assert_eq!(
+            resp.results[0].ids, before.ids,
+            "cached serving must answer exactly like resident serving"
+        );
+        let rs = resp.stats.unwrap();
+        assert!(
+            rs.cache_hits + rs.cache_misses > 0,
+            "cached serving must route rerank fetches through the cache"
+        );
+        let cache = decode(&mut c).cache.expect("cache block");
+        println!(
+            "round {round}             : batch hits={} misses={} cumulative hit_rate={:.3}",
+            rs.cache_hits, rs.cache_misses, cache.hit_rate
+        );
+        assert!(
+            cache.hit_rate >= last_rate,
+            "a repeated workload must not cool the cache: {} < {last_rate}",
+            cache.hit_rate
+        );
+        last_rate = cache.hit_rate;
+    }
+    assert!(
+        last_rate > 0.5,
+        "after three identical rounds most lookups must hit: {last_rate}"
+    );
+    println!("cached parity       : S3-FIFO serving matches resident answers, hit_rate={last_rate:.3}");
+
     // --- Online updates over the same wire: insert → query → delete →
     // flush. Writers serialize behind a single-writer queue and publish
     // epoch snapshots; queries pin one snapshot per walk and never block

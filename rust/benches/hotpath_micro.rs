@@ -19,6 +19,10 @@
 //! * SIMD kernel throughput: dispatched vs scalar batch L2/dot over an
 //!   aligned padded row block (`kernel_throughput` line — the ≥2x GB/s
 //!   acceptance gate for the runtime-dispatch kernels)
+//! * adaptive hot set: resident / uncached-cold / S3-FIFO-cached-cold
+//!   QPS on a skewed trace at 10% capacity, plus fixed-entry vs LSH
+//!   warm-start mean hops (`cache_replay` line — the ≥2x cached-vs-cold
+//!   QPS acceptance gate)
 
 use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
@@ -443,6 +447,131 @@ fn main() {
             cold.storage.resident_bytes(),
             r_open_res.mean.as_secs_f64() * 1e3,
             r_open_cold.mean.as_secs_f64() * 1e3,
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    // --- Adaptive hot set: cached-cold replay + LSH warm starts. ---
+    // A skewed serving trace (90% of lookups cycle 8 hot queries — the
+    // paper's Fig. 15 heavy tail) against three residencies of the SAME
+    // artifact: resident (DRAM ceiling), uncached cold (file floor) and
+    // cached cold with an S3-FIFO arena sized to 10% of the base vector
+    // bytes. The `cache_replay` line feeds the EXPERIMENTS.md gate
+    // "cached-cold ≥ 2x uncached-cold QPS at 10% capacity"; the same
+    // line records mean hops with the fixed medoid entry vs LSH warm
+    // starts so the entry-point claim is captured by the same run.
+    {
+        use proxima::search::lsh_start::LshIndex;
+        use proxima::storage::cache::CachePolicy;
+        use proxima::storage::{OpenOptions, Residency};
+        let path = std::env::temp_dir().join(format!("hotpath-cache-{}.pxa", std::process::id()));
+        svc.save(&path).expect("bench artifact save");
+        let params = svc.params;
+        let nq_all = w.ds.n_queries();
+        let trace: Vec<&[f32]> = (0..256)
+            .map(|i| {
+                if i % 10 < 9 {
+                    w.ds.queries.row(i % 8)
+                } else {
+                    w.ds.queries.row(8 + (i * 7) % (nq_all - 8))
+                }
+            })
+            .collect();
+        let base_bytes =
+            (svc.n_base() * proxima::simd::stride_for(w.ds.dim()) * 4) as u64;
+        let cap = base_bytes / 10;
+        let resident = SearchService::open(&path, params, false).unwrap();
+        let cold = SearchService::open_with(
+            &path,
+            params,
+            false,
+            &OpenOptions::with_residency(Residency::Cold),
+        )
+        .unwrap();
+        let cached = SearchService::open_with(
+            &path,
+            params,
+            false,
+            &OpenOptions {
+                residency: Residency::Cached {
+                    capacity_bytes: cap,
+                },
+                cache_policy: CachePolicy::S3Fifo,
+                tiered_cache_bytes: None,
+                lsh_start: false,
+            },
+        )
+        .unwrap();
+        let run = |s: &SearchService| {
+            let mut acc = 0u32;
+            for q in &trace {
+                acc = acc.wrapping_add(s.search(q, 10).ids[0]);
+            }
+            acc
+        };
+        // One warm pass so the cached arm is measured at steady state
+        // (the cold and resident arms are insensitive to warming).
+        run(&cached);
+        let r_resident = bench("cache_replay resident     x256", || run(&resident));
+        let r_cold = bench("cache_replay cold-uncached x256", || run(&cold));
+        let r_cached = bench("cache_replay cold-cached   x256", || run(&cached));
+        let hit_rate = cached
+            .storage
+            .cache_status()
+            .map(|st| st.hit_rate())
+            .unwrap_or(0.0);
+
+        // LSH warm starts vs the fixed medoid entry, kernel-level (same
+        // graph, same queries, hops counted per query).
+        let lsh = LshIndex::build(&w.ds.base, 16, 9);
+        let ctx_lsh = proxima::search::beam::SearchContext {
+            lsh: Some(&lsh),
+            ..w.context()
+        };
+        let ctx_fixed = w.context();
+        let mut hops_fixed = 0usize;
+        let mut hops_lsh = 0usize;
+        let mut adt = Adt::default();
+        let mut scratch = QueryScratch::new();
+        let mut out = SearchOutput::default();
+        for qi in 0..nq_all {
+            let q = w.ds.queries.row(qi);
+            w.codebook.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx_fixed,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+            hops_fixed += out.stats.hops;
+            proxima_search_into(
+                &ctx_lsh,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+            hops_lsh += out.stats.hops;
+        }
+
+        let qps_resident = r_resident.per_sec(trace.len() as f64);
+        let qps_cold = r_cold.per_sec(trace.len() as f64);
+        let qps_cached = r_cached.per_sec(trace.len() as f64);
+        println!(
+            "cache_replay policy=s3fifo capacity_frac=0.10 trace=256 hit_rate={hit_rate:.3} \
+             resident_qps={qps_resident:.0} cold_qps={qps_cold:.0} cached_qps={qps_cached:.0} \
+             cached_vs_cold={:.2} lsh_bits=16 fixed_hops_mean={:.1} lsh_hops_mean={:.1} hop_ratio={:.2}",
+            qps_cached / qps_cold,
+            hops_fixed as f64 / nq_all as f64,
+            hops_lsh as f64 / nq_all as f64,
+            hops_lsh as f64 / hops_fixed.max(1) as f64,
         );
         std::fs::remove_file(&path).ok();
     }

@@ -25,6 +25,7 @@ use super::{
 use crate::artifact::IndexSpec;
 use crate::distance::Metric;
 use crate::search::SearchStats;
+use crate::storage::cache::CachePolicy;
 use crate::storage::Residency;
 use crate::util::json::Json;
 
@@ -41,10 +42,19 @@ pub enum WireRequest {
     Status,
     /// v2 admin plane: hot-swap the served index to the artifact at
     /// `path`, optionally switching the vector [`Residency`] (`None`
-    /// keeps the currently-served epoch's residency).
+    /// keeps the currently-served epoch's residency), the row-cache
+    /// sizing/policy, and LSH warm starts.
     Reload {
         path: String,
         residency: Option<Residency>,
+        /// Row-cache capacity in MiB (sizes `cached`, or layers a cache
+        /// under `tiered`); `None` keeps the epoch's capacity.
+        cache_mb: Option<u64>,
+        /// Eviction policy for the row cache; `None` keeps the epoch's.
+        cache_policy: Option<CachePolicy>,
+        /// Enable/disable LSH entry-point warm starts; `None` keeps the
+        /// epoch's setting.
+        lsh_start: Option<bool>,
     },
     /// v2 write plane: insert one vector into the served index.
     Insert { vector: Vec<f32> },
@@ -156,14 +166,40 @@ pub fn decode_request(j: &Json) -> Result<WireRequest, ApiError> {
                     })?;
                     Some(Residency::parse(s).ok_or_else(|| {
                         ApiError::bad_request(format!(
-                            "unknown residency '{s}' (resident|cold|tiered)"
+                            "unknown residency '{s}' (resident|cold|tiered|cached)"
                         ))
                     })?)
                 }
             };
+            let cache_mb = match j.get("cache_mb") {
+                None => None,
+                Some(v) => Some(as_index(v, "reload 'cache_mb'")? as u64),
+            };
+            let cache_policy = match j.get("cache_policy") {
+                None => None,
+                Some(p) => {
+                    let s = p.as_str().ok_or_else(|| {
+                        ApiError::bad_request("reload 'cache_policy' must be a string")
+                    })?;
+                    Some(CachePolicy::parse(s).ok_or_else(|| {
+                        ApiError::bad_request(format!(
+                            "unknown cache_policy '{s}' (s3fifo|clock)"
+                        ))
+                    })?)
+                }
+            };
+            let lsh_start = match j.get("lsh_start") {
+                None => None,
+                Some(b) => Some(b.as_bool().ok_or_else(|| {
+                    ApiError::bad_request("reload 'lsh_start' must be a bool")
+                })?),
+            };
             Ok(WireRequest::Reload {
                 path: path.to_string(),
                 residency,
+                cache_mb,
+                cache_policy,
+                lsh_start,
             })
         }
         // Write-plane ops (v2): new names like the admin ops above, so
@@ -546,6 +582,9 @@ pub fn encode_stats(s: &SearchStats) -> Json {
         ("queue_wait_us", Json::num(s.queue_wait_us as f64)),
         ("cold_reads", Json::num(s.cold_reads as f64)),
         ("cold_bytes", Json::num(s.cold_bytes as f64)),
+        ("cache_hits", Json::num(s.cache_hits as f64)),
+        ("cache_misses", Json::num(s.cache_misses as f64)),
+        ("lsh_probes", Json::num(s.lsh_probes as f64)),
     ])
 }
 
@@ -568,6 +607,69 @@ pub fn decode_stats(j: &Json) -> SearchStats {
         queue_wait_us: n("queue_wait_us") as u64,
         cold_reads: n("cold_reads") as usize,
         cold_bytes: n("cold_bytes") as u64,
+        // Added after v2 shipped: absent on lines from older servers, so
+        // (like every stats field) they default to 0 rather than erroring.
+        cache_hits: n("cache_hits") as usize,
+        cache_misses: n("cache_misses") as usize,
+        lsh_probes: n("lsh_probes") as usize,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Storage status block (the `status` admin op)
+// ---------------------------------------------------------------------------
+
+/// Typed view of the `status` response's `storage` block. Cache fields
+/// are `None` when the served residency carries no row cache — and when
+/// talking to an older server that predates them.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StorageStatus {
+    pub residency: String,
+    pub resident_bytes: u64,
+    pub n_hot: usize,
+    pub cold_reads: u64,
+    pub cold_bytes: u64,
+    pub cache: Option<CacheStatusWire>,
+}
+
+/// The row-cache sub-block of [`StorageStatus`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CacheStatusWire {
+    pub policy: String,
+    pub capacity_bytes: u64,
+    pub hit_rate: f64,
+    pub evictions: u64,
+    pub ghost_hits: u64,
+}
+
+/// Decode a `status` response's `storage` block. FORWARD-COMPATIBLE by
+/// contract: unknown keys are ignored and absent keys default, so an
+/// old client reading a new server's block (or vice versa) never
+/// errors — the admin plane must stay inspectable across mixed-version
+/// fleets. The cache sub-block is recognized by its `cache_policy` key.
+pub fn decode_storage_status(j: &Json) -> StorageStatus {
+    let n = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let cache = j
+        .get("cache_policy")
+        .and_then(Json::as_str)
+        .map(|policy| CacheStatusWire {
+            policy: policy.to_string(),
+            capacity_bytes: n("cache_capacity_bytes") as u64,
+            hit_rate: n("cache_hit_rate"),
+            evictions: n("cache_evictions") as u64,
+            ghost_hits: n("cache_ghost_hits") as u64,
+        });
+    StorageStatus {
+        residency: j
+            .get("residency")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+        resident_bytes: n("resident_bytes") as u64,
+        n_hot: n("n_hot") as usize,
+        cold_reads: n("cold_reads") as u64,
+        cold_bytes: n("cold_bytes") as u64,
+        cache,
     }
 }
 
@@ -703,9 +805,18 @@ mod tests {
         assert!(matches!(decode_request(&j).unwrap(), WireRequest::Status));
         let j = json::parse(r#"{"v":2,"op":"reload","path":"/tmp/x.pxa"}"#).unwrap();
         match decode_request(&j).unwrap() {
-            WireRequest::Reload { path, residency } => {
+            WireRequest::Reload {
+                path,
+                residency,
+                cache_mb,
+                cache_policy,
+                lsh_start,
+            } => {
                 assert_eq!(path, "/tmp/x.pxa");
                 assert_eq!(residency, None, "absent residency keeps the epoch's");
+                assert_eq!(cache_mb, None);
+                assert_eq!(cache_policy, None);
+                assert_eq!(lsh_start, None);
             }
             other => panic!("wrong op: {other:?}"),
         }
@@ -729,6 +840,80 @@ mod tests {
         let e = decode_request(&j).unwrap_err();
         assert_eq!(e.code, ApiErrorCode::BadRequest);
         assert!(e.message.contains("residency"), "{}", e.message);
+        // The adaptive-cache knobs ride along: residency "cached" plus
+        // capacity, policy, and LSH warm-start toggles.
+        let j = json::parse(
+            r#"{"v":2,"op":"reload","path":"/x","residency":"cached",
+                "cache_mb":64,"cache_policy":"clock","lsh_start":true}"#,
+        )
+        .unwrap();
+        match decode_request(&j).unwrap() {
+            WireRequest::Reload {
+                residency,
+                cache_mb,
+                cache_policy,
+                lsh_start,
+                ..
+            } => {
+                assert!(matches!(residency, Some(Residency::Cached { .. })));
+                assert_eq!(cache_mb, Some(64));
+                assert_eq!(cache_policy, Some(CachePolicy::Clock));
+                assert_eq!(lsh_start, Some(true));
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+        // Malformed cache knobs are typed rejections.
+        for bad in [
+            r#"{"v":2,"op":"reload","path":"/x","cache_mb":-1}"#,
+            r#"{"v":2,"op":"reload","path":"/x","cache_policy":"lru"}"#,
+            r#"{"v":2,"op":"reload","path":"/x","lsh_start":"yes"}"#,
+        ] {
+            let j = json::parse(bad).unwrap();
+            assert_eq!(
+                decode_request(&j).unwrap_err().code,
+                ApiErrorCode::BadRequest,
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn storage_status_block_is_forward_compatible() {
+        // New-server block: cache sub-fields present plus a key this
+        // client version has never heard of — both must decode cleanly.
+        let j = json::parse(
+            r#"{"residency":"cached","resident_bytes":4096,"n_hot":0,
+                "cold_reads":17,"cold_bytes":1088,
+                "cache_policy":"s3fifo","cache_capacity_bytes":4096,
+                "cache_hit_rate":0.75,"cache_evictions":3,"cache_ghost_hits":2,
+                "some_future_key":{"nested":true}}"#,
+        )
+        .unwrap();
+        let s = decode_storage_status(&j);
+        assert_eq!(s.residency, "cached");
+        assert_eq!(s.cold_reads, 17);
+        let c = s.cache.expect("cache block present");
+        assert_eq!(c.policy, "s3fifo");
+        assert_eq!(c.capacity_bytes, 4096);
+        assert!((c.hit_rate - 0.75).abs() < 1e-12);
+        assert_eq!(c.evictions, 3);
+        assert_eq!(c.ghost_hits, 2);
+
+        // Old-server block (predates the cache keys entirely): absent
+        // keys default instead of erroring.
+        let j = json::parse(
+            r#"{"residency":"tiered","resident_bytes":128,"n_hot":2,
+                "cold_reads":0,"cold_bytes":0}"#,
+        )
+        .unwrap();
+        let s = decode_storage_status(&j);
+        assert_eq!(s.residency, "tiered");
+        assert_eq!(s.n_hot, 2);
+        assert_eq!(s.cache, None, "no cache keys → no cache block");
+
+        // Degenerate/empty block still yields a usable default.
+        let s = decode_storage_status(&json::parse("{}").unwrap());
+        assert_eq!(s, StorageStatus::default());
     }
 
     #[test]
@@ -879,6 +1064,9 @@ mod tests {
                 queue_wait_us: 57,
                 cold_reads: 4,
                 cold_bytes: 2048,
+                cache_hits: 9,
+                cache_misses: 4,
+                lsh_probes: 6,
             }),
             errors: Vec::new(),
             server_latency_us: 321,
@@ -896,6 +1084,9 @@ mod tests {
         assert_eq!(s.queue_wait_us, 57, "queue-wait must cross the wire");
         assert_eq!(s.cold_reads, 4, "cold-tier reads must cross the wire");
         assert_eq!(s.cold_bytes, 2048, "cold-tier bytes must cross the wire");
+        assert_eq!(s.cache_hits, 9, "row-cache hits must cross the wire");
+        assert_eq!(s.cache_misses, 4, "row-cache misses must cross the wire");
+        assert_eq!(s.lsh_probes, 6, "LSH probes must cross the wire");
     }
 
     #[test]

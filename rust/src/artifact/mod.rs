@@ -54,6 +54,7 @@ use crate::engine::mapping::DataMapping;
 use crate::gap::GapGraph;
 use crate::graph::Graph;
 use crate::pq::{PqCodebook, PqCodes};
+use crate::search::lsh_start::LshIndex;
 use std::fmt;
 use std::ops::Range;
 use std::path::Path;
@@ -74,6 +75,7 @@ pub const SEC_CODEBOOK: u32 = 4;
 pub const SEC_CODES: u32 = 5;
 pub const SEC_REORDER: u32 = 6;
 pub const SEC_MAPPING: u32 = 7;
+pub const SEC_LSH: u32 = 8;
 
 /// Upper bound on TOC entries: a corrupt count field must not drive a
 /// huge allocation before the header CRC gets a chance to reject it.
@@ -621,6 +623,8 @@ pub struct ArtifactParts<'a> {
     /// §IV-E data-allocation layout, so the NAND engine/sim can open the
     /// same artifact.
     pub mapping: Option<&'a DataMapping>,
+    /// LSH entry-point index (`--lsh_start` warm starts), when built.
+    pub lsh: Option<&'a LshIndex>,
 }
 
 impl ArtifactParts<'_> {
@@ -638,6 +642,9 @@ impl ArtifactParts<'_> {
         }
         if let Some(m) = self.mapping {
             w.section(SEC_MAPPING, sections::encode_mapping(m));
+        }
+        if let Some(l) = self.lsh {
+            w.section(SEC_LSH, sections::encode_lsh(l));
         }
         w
     }
@@ -665,6 +672,7 @@ pub struct IndexArtifact {
     pub codes: PqCodes,
     pub reorder: Option<Vec<u32>>,
     pub mapping: Option<DataMapping>,
+    pub lsh: Option<LshIndex>,
 }
 
 impl IndexArtifact {
@@ -693,6 +701,7 @@ impl IndexArtifact {
             .section(SEC_MAPPING)
             .map(sections::decode_mapping)
             .transpose()?;
+        let lsh = r.section(SEC_LSH).map(sections::decode_lsh).transpose()?;
 
         // Cross-section consistency (shared with the cold open, which
         // validates the same invariants without materializing BASE).
@@ -706,6 +715,7 @@ impl IndexArtifact {
             gap.as_ref(),
             reorder.as_deref(),
             mapping.as_ref(),
+            lsh.as_ref(),
         )?;
         // Angular math (`1 - dot`) is cosine distance only on unit-norm
         // vectors — the dataset loaders normalize on load, but an
@@ -728,6 +738,7 @@ impl IndexArtifact {
             codes,
             reorder,
             mapping,
+            lsh,
         })
     }
 }
@@ -748,6 +759,7 @@ fn cross_validate(
     gap: Option<&GapGraph>,
     reorder: Option<&[u32]>,
     mapping: Option<&DataMapping>,
+    lsh: Option<&LshIndex>,
 ) -> Result<(), ArtifactError> {
     let n = base_n;
     if n as u64 != spec.n_base {
@@ -834,6 +846,22 @@ fn cross_validate(
             return Err(ArtifactError::corrupt(format!(
                 "mapping laid out for {} nodes, index holds {n}",
                 m.n_nodes
+            )));
+        }
+    }
+    // LSH warm starts seed traversal with raw ids from the bucket CSR —
+    // the kernels index them unchecked, so coverage and dim must match.
+    if let Some(l) = lsh {
+        if l.len() != n {
+            return Err(ArtifactError::corrupt(format!(
+                "LSH signatures cover {} rows for {n} base vectors",
+                l.len()
+            )));
+        }
+        if l.dim() != base_dim {
+            return Err(ArtifactError::corrupt(format!(
+                "LSH planes have dim {} but base holds dim {base_dim}",
+                l.dim()
             )));
         }
     }
@@ -1028,6 +1056,7 @@ pub struct ColdArtifact {
     pub codes: PqCodes,
     pub reorder: Option<Vec<u32>>,
     pub mapping: Option<DataMapping>,
+    pub lsh: Option<LshIndex>,
     /// BASE shape, from the section header (cross-validated vs spec).
     pub n_base: usize,
     pub dim: usize,
@@ -1064,6 +1093,7 @@ impl ColdArtifact {
             SEC_CODES,
             SEC_REORDER,
             SEC_MAPPING,
+            SEC_LSH,
         ] {
             if let Some(i) = af.first_index_of(tag) {
                 covered[i] = true;
@@ -1092,6 +1122,10 @@ impl ColdArtifact {
         let mapping = af
             .read_section(SEC_MAPPING)?
             .map(|p| sections::decode_mapping(&p))
+            .transpose()?;
+        let lsh = af
+            .read_section(SEC_LSH)?
+            .map(|p| sections::decode_lsh(&p))
             .transpose()?;
 
         // BASE header: dim u32, n u64 (see `sections::encode_base`).
@@ -1133,6 +1167,7 @@ impl ColdArtifact {
             gap.as_ref(),
             reorder.as_deref(),
             mapping.as_ref(),
+            lsh.as_ref(),
         )?;
 
         // ONE streaming pass over the BASE payload: CRC every byte
@@ -1197,6 +1232,7 @@ impl ColdArtifact {
             codes,
             reorder,
             mapping,
+            lsh,
             n_base: n,
             dim,
             base_data_offset: base_off + 12,
@@ -1377,6 +1413,7 @@ mod tests {
             codes: &svc.codes,
             reorder: None,
             mapping: None,
+            lsh: None,
         };
         let r = ArtifactReader::from_bytes(parts.to_bytes()).unwrap();
         let e = IndexArtifact::from_reader(&r).unwrap_err();
@@ -1393,6 +1430,7 @@ mod tests {
             codes: &svc.codes,
             reorder: None,
             mapping: None,
+            lsh: None,
         };
         let r = ArtifactReader::from_bytes(good.to_bytes()).unwrap();
         IndexArtifact::from_reader(&r).unwrap();
@@ -1491,6 +1529,7 @@ mod tests {
             codes: &svc.codes,
             reorder: None,
             mapping: None,
+            lsh: None,
         };
         let path = tmp("cold-open.pxa");
         parts.write(&path).unwrap();
@@ -1515,6 +1554,73 @@ mod tests {
         let off = cold.base_data_offset as usize;
         let first = f32::from_le_bytes(raw[off..off + 4].try_into().unwrap());
         assert_eq!(first.to_bits(), full.base.row(0)[0].to_bits());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lsh_section_roundtrips_at_both_residencies() {
+        use crate::config::{GraphParams, PqParams, SearchParams};
+        use crate::coordinator::SearchService;
+        use crate::dataset::synth::tiny_uniform;
+        let ds = tiny_uniform(50, 8, Metric::L2, 9);
+        let svc = SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 6,
+                build_l: 12,
+                alpha: 1.2,
+                seed: 9,
+            },
+            &PqParams {
+                m: 4,
+                c: 8,
+                train_sample: 50,
+                kmeans_iters: 4,
+            },
+            SearchParams::default(),
+            false,
+        );
+        let base = svc.resident_base().unwrap();
+        let lsh = LshIndex::build(&base, 5, 0xA11CE);
+        let parts = ArtifactParts {
+            spec: &svc.spec,
+            base: &base,
+            graph: &svc.graph,
+            gap: None,
+            codebook: &svc.codebook,
+            codes: &svc.codes,
+            reorder: None,
+            mapping: None,
+            lsh: Some(&lsh),
+        };
+        let path = tmp("lsh-roundtrip.pxa");
+        parts.write(&path).unwrap();
+
+        let full = IndexArtifact::open(&path).unwrap();
+        let cold = ColdArtifact::open(&path, false).unwrap();
+        for got in [full.lsh.as_ref().unwrap(), cold.lsh.as_ref().unwrap()] {
+            assert_eq!(got.n_bits(), lsh.n_bits());
+            assert_eq!(got.seed(), lsh.seed());
+            assert_eq!(got.signatures(), lsh.signatures());
+            assert_eq!(got.planes(), lsh.planes());
+        }
+        // Coverage mismatch (signatures for a different n) is corruption.
+        let short = LshIndex::build(
+            &VectorSet {
+                dim: base.dim,
+                data: base.data[..base.dim * 10].to_vec(),
+            },
+            5,
+            0xA11CE,
+        );
+        let bad = ArtifactParts {
+            lsh: Some(&short),
+            ..parts
+        };
+        let r = ArtifactReader::from_bytes(bad.to_bytes()).unwrap();
+        let e = IndexArtifact::from_reader(&r).unwrap_err();
+        assert_eq!(e.kind, ArtifactErrorKind::Corrupt);
+        assert!(e.message.contains("LSH"), "{e}");
         std::fs::remove_file(&path).ok();
     }
 

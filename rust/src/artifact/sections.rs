@@ -19,6 +19,8 @@
 //!               idx_frames_per_page, raw_frames_per_page,
 //!               hot_frames_per_page, n_hot, idx_frame_bits,
 //!               hot_frame_bits, raw_frame_bits
+//! LSH      (8): n_bits u32, seed u64, dim u32, n u64,
+//!               planes f32 × n_bits·dim, signatures u32 × n
 //! ```
 //!
 //! Decoders validate per-section structural invariants (dimensions,
@@ -33,6 +35,7 @@ use crate::engine::mapping::DataMapping;
 use crate::gap::GapGraph;
 use crate::graph::Graph;
 use crate::pq::{PqCodebook, PqCodes};
+use crate::search::lsh_start::{LshIndex, MAX_BITS};
 
 /// Every decoder consumes its payload EXACTLY: trailing bytes inside a
 /// section are rejected just like trailing bytes after the last section
@@ -282,6 +285,47 @@ pub fn decode_mapping(payload: &[u8]) -> Result<DataMapping, ArtifactError> {
     Ok(m)
 }
 
+pub fn encode_lsh(lsh: &LshIndex) -> Vec<u8> {
+    let mut buf =
+        Vec::with_capacity(24 + lsh.planes().len() * 4 + lsh.signatures().len() * 4);
+    bio::put_u32(&mut buf, lsh.n_bits());
+    bio::put_u64(&mut buf, lsh.seed());
+    bio::put_u32(&mut buf, lsh.dim() as u32);
+    bio::put_u64(&mut buf, lsh.len() as u64);
+    bio::put_f32_slice(&mut buf, lsh.planes());
+    bio::put_u32_slice(&mut buf, lsh.signatures());
+    buf
+}
+
+pub fn decode_lsh(payload: &[u8]) -> Result<LshIndex, ArtifactError> {
+    let mut r = bio::Reader::new(payload);
+    let n_bits = rd(r.u32())?;
+    let seed = rd(r.u64())?;
+    let dim = rd(r.u32())? as usize;
+    let n = rd(r.u64())? as usize;
+    if !(1..=MAX_BITS).contains(&n_bits) {
+        return Err(ArtifactError::corrupt(format!(
+            "LSH: n_bits {n_bits} outside 1..={MAX_BITS}"
+        )));
+    }
+    if dim == 0 {
+        return Err(ArtifactError::corrupt("LSH: dim must be >= 1"));
+    }
+    let n_plane = (n_bits as usize)
+        .checked_mul(dim)
+        .ok_or_else(|| ArtifactError::corrupt("LSH: n_bits * dim overflows"))?;
+    let planes = rd(r.f32_vec(n_plane))?;
+    let signatures = rd(r.u32_vec(n))?;
+    let mask = if n_bits == 32 { u32::MAX } else { (1u32 << n_bits) - 1 };
+    if let Some(&bad) = signatures.iter().find(|&&s| s & !mask != 0) {
+        return Err(ArtifactError::corrupt(format!(
+            "LSH: signature {bad:#x} wider than {n_bits} bits"
+        )));
+    }
+    finish(&r, "LSH", payload)?;
+    Ok(LshIndex::from_parts(n_bits, seed, dim, planes, signatures))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,6 +373,42 @@ mod tests {
         assert_eq!(decode_reorder(&encode_reorder(&[2, 0, 1])).unwrap(), vec![2, 0, 1]);
         assert!(decode_reorder(&encode_reorder(&[0, 0, 1])).is_err());
         assert!(decode_reorder(&encode_reorder(&[0, 1, 3])).is_err());
+    }
+
+    #[test]
+    fn lsh_codec_roundtrips_and_rejects_bad_shapes() {
+        use crate::dataset::synth::tiny_uniform;
+        use crate::distance::Metric;
+        let base = tiny_uniform(64, 8, Metric::L2, 0xA11CE).base;
+        let lsh = LshIndex::build(&base, 5, 99);
+        let back = decode_lsh(&encode_lsh(&lsh)).unwrap();
+        assert_eq!(back.n_bits(), 5);
+        assert_eq!(back.seed(), 99);
+        assert_eq!(back.dim(), 8);
+        assert_eq!(back.planes(), lsh.planes());
+        assert_eq!(back.signatures(), lsh.signatures());
+        // Probes (bucket CSR rebuilt on decode) must agree exactly.
+        let mut a = [0u32; 4];
+        let mut b = [0u32; 4];
+        for i in 0..8 {
+            assert_eq!(lsh.probe_into(base.row(i), &mut a), back.probe_into(base.row(i), &mut b));
+            assert_eq!(a, b);
+        }
+
+        // n_bits outside 1..=24 rejected.
+        let mut p = encode_lsh(&lsh);
+        p[0] = 25;
+        assert!(decode_lsh(&p).is_err());
+        // A signature wider than n_bits rejected (flip a high bit of the
+        // first signature, which sits after header + planes).
+        let mut p = encode_lsh(&lsh);
+        let sig_off = 24 + lsh.planes().len() * 4 + 3;
+        p[sig_off] ^= 0x80;
+        assert!(decode_lsh(&p).is_err());
+        // Trailing bytes rejected.
+        let mut p = encode_lsh(&lsh);
+        p.push(0);
+        assert!(decode_lsh(&p).is_err());
     }
 
     #[test]

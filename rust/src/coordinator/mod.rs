@@ -83,6 +83,7 @@ use crate::pq::{Adt, AdtBatch, PqCodebook, PqCodes};
 use crate::runtime::service::RuntimeHandle;
 use crate::search::beam::{accurate_beam_search_into, pq_beam_search_into, SearchContext};
 use crate::search::kernel::{Pooled, QueryScratch, ScratchPool};
+use crate::search::lsh_start::LshIndex;
 use crate::search::proxima::{proxima_search_into, ProximaFeatures};
 use crate::search::{SearchOutput, SearchStats};
 use crate::simd::AlignedBuf;
@@ -106,6 +107,15 @@ pub struct ServiceStats {
     pub cold_reads: AtomicU64,
     /// Bytes those cold fetches read from the artifact file.
     pub cold_bytes: AtomicU64,
+    /// Row-cache hits (cold fetches answered from the adaptive hot set
+    /// without touching the artifact file; 0 without a cache tier).
+    pub cache_hits: AtomicU64,
+    /// Row-cache misses (cold fetches that went to the file and were
+    /// then admitted under the cache policy).
+    pub cache_misses: AtomicU64,
+    /// LSH entry-point buckets examined across queries (0 unless the
+    /// service was opened with `lsh_start`).
+    pub lsh_probes: AtomicU64,
 }
 
 /// Per-query scratch a service worker checks out: the walk state plus a
@@ -191,6 +201,15 @@ pub struct SearchService {
     /// only when absent (a freshly built index) does `save` compute
     /// [`Self::default_mapping`].
     pub mapping: Option<DataMapping>,
+    /// LSH entry-point index (persisted as the optional `SEC_LSH`
+    /// artifact section). Carried even when warm starts are off so
+    /// `save` round-trips it; [`Self::use_lsh`] gates query use.
+    pub lsh: Option<LshIndex>,
+    /// Whether queries seed from LSH warm starts (`--lsh_start` /
+    /// `OpenOptions::lsh_start`). Off by default: extra seeds change
+    /// traversal order, and the default path stays bitwise-compatible
+    /// with the fixed-entry oracles.
+    use_lsh: bool,
     pub params: SearchParams,
     pub features: ProximaFeatures,
     /// Graph-build parameters (degree bound R, prune slack α, build-time
@@ -276,6 +295,8 @@ impl SearchService {
             reorder: None,
             id_map: None,
             mapping: None,
+            lsh: None,
+            use_lsh: false,
             params,
             features: ProximaFeatures::default(),
             graph_params: gp.clone(),
@@ -322,8 +343,34 @@ impl SearchService {
             codes: &self.codes,
             reorder: self.reorder.as_deref(),
             mapping: Some(&mapping),
+            lsh: self.lsh.as_ref(),
         }
         .write(path)
+    }
+
+    /// Build (or rebuild) the LSH entry-point index over the resident
+    /// base — the index-construction half of `--lsh_start` (persisted by
+    /// [`Self::save`] as `SEC_LSH`). Returns false under `Cold`/`Tiered`
+    /// residency, where the base is not materialized.
+    pub fn build_lsh(&mut self, n_bits: u32) -> bool {
+        let Some(base) = self.resident_base() else {
+            return false;
+        };
+        // Derive the hash seed from the build seed so rebuilds of the
+        // same index draw the same hyperplanes.
+        self.lsh = Some(LshIndex::build(&base, n_bits, self.spec.build_seed ^ 0x15A8));
+        true
+    }
+
+    /// Toggle LSH warm starts at query time (no-op signal when no LSH
+    /// index is loaded — [`Self::lsh_active`] reports the outcome).
+    pub fn set_use_lsh(&mut self, on: bool) {
+        self.use_lsh = on;
+    }
+
+    /// Whether queries currently seed from LSH warm starts.
+    pub fn lsh_active(&self) -> bool {
+        self.use_lsh && self.lsh.is_some()
     }
 
     /// The §IV-E layout for this index on the paper's accelerator
@@ -386,35 +433,51 @@ impl SearchService {
         // Residency decides only HOW the BASE payload is materialized;
         // everything downstream of (spec, storage, sections) is one
         // shared construction path.
-        let (spec, storage, graph, codebook, codes, gap, reorder, mapping) = match opts.residency {
-            Residency::Resident => {
-                let art = IndexArtifact::open(path)?;
-                (
-                    art.spec,
-                    VectorStore::resident(&art.base),
-                    art.graph,
-                    art.codebook,
-                    art.codes,
-                    art.gap,
-                    art.reorder,
-                    art.mapping,
-                )
-            }
-            residency => {
-                let art = ColdArtifact::open(path, residency == Residency::Tiered)?;
-                let cold =
-                    ColdVectors::new(art.file, art.base_data_offset, art.n_base, art.dim, path);
-                let storage = match residency {
-                    Residency::Cold => VectorStore::cold(cold),
-                    Residency::Tiered => VectorStore::tiered(&art.hot, cold),
-                    Residency::Resident => unreachable!("matched above"),
-                };
-                (
-                    art.spec, storage, art.graph, art.codebook, art.codes, art.gap, art.reorder,
-                    art.mapping,
-                )
-            }
-        };
+        let (spec, storage, graph, codebook, codes, gap, reorder, mapping, lsh) =
+            match opts.residency {
+                Residency::Resident => {
+                    let art = IndexArtifact::open(path)?;
+                    (
+                        art.spec,
+                        VectorStore::resident(&art.base),
+                        art.graph,
+                        art.codebook,
+                        art.codes,
+                        art.gap,
+                        art.reorder,
+                        art.mapping,
+                        art.lsh,
+                    )
+                }
+                residency => {
+                    let art = ColdArtifact::open(path, residency == Residency::Tiered)?;
+                    let cold =
+                        ColdVectors::new(art.file, art.base_data_offset, art.n_base, art.dim, path);
+                    let storage = match residency {
+                        Residency::Cold => VectorStore::cold(cold),
+                        Residency::Tiered => match opts.tiered_cache_bytes {
+                            // A cache layer under the static hot prefix:
+                            // the prefix becomes the warm-start set, the
+                            // cache adapts to the query-time tail.
+                            Some(bytes) => VectorStore::tiered_cached(
+                                &art.hot,
+                                cold,
+                                bytes,
+                                opts.cache_policy,
+                            ),
+                            None => VectorStore::tiered(&art.hot, cold),
+                        },
+                        Residency::Cached { capacity_bytes } => {
+                            VectorStore::cached(cold, capacity_bytes, opts.cache_policy)
+                        }
+                        Residency::Resident => unreachable!("matched above"),
+                    };
+                    (
+                        art.spec, storage, art.graph, art.codebook, art.codes, art.gap,
+                        art.reorder, art.mapping, art.lsh,
+                    )
+                }
+            };
         let gap = match gap {
             Some(g) => g,
             // Minimal artifacts may omit the packed stream; re-encode
@@ -440,6 +503,13 @@ impl SearchService {
             seed: spec.build_seed,
         };
         let online = OnlineState::new(storage.len(), storage.dim(), spec.pq_m as usize);
+        if opts.lsh_start && lsh.is_none() {
+            crate::logln!(
+                "[service] --lsh_start requested but {} carries no LSH section; \
+                 rebuild with --lsh_bits to enable warm starts",
+                path.display()
+            );
+        }
         Ok(SearchService {
             name: spec.dataset.clone(),
             provenance: IndexProvenance::Artifact {
@@ -454,6 +524,8 @@ impl SearchService {
             reorder,
             id_map,
             mapping,
+            use_lsh: opts.lsh_start && lsh.is_some(),
+            lsh,
             params,
             features: ProximaFeatures::default(),
             graph_params,
@@ -512,6 +584,7 @@ impl SearchService {
             gap: self.gap.as_ref(),
             storage: Some(&self.storage),
             online: None,
+            lsh: if self.use_lsh { self.lsh.as_ref() } else { None },
         }
     }
 
@@ -940,6 +1013,14 @@ impl SearchService {
                 spec.hot_frac,
             );
 
+            // Compaction renumbered ids and rewrote the base rows, so
+            // the persisted LSH signatures must be recomputed (same bit
+            // count and seed: the hyperplanes are a function of both).
+            let lsh = self
+                .lsh
+                .as_ref()
+                .map(|l| LshIndex::build(&image.base, l.n_bits(), l.seed()));
+
             ArtifactParts {
                 spec: &spec,
                 base: &image.base,
@@ -949,15 +1030,32 @@ impl SearchService {
                 codes: &codes,
                 reorder: None,
                 mapping: Some(&mapping),
+                lsh: lsh.as_ref(),
             }
             .write(&path)
             .map_err(|e| ApiError::internal(format!("flush write: {e}")))?;
 
+            // The successor inherits the full open configuration, not
+            // just the residency: cache layer (policy + capacity) and
+            // LSH warm starts survive a flush swap.
+            let reopen_opts = OpenOptions {
+                residency: self.storage.residency(),
+                cache_policy: self
+                    .storage
+                    .row_cache()
+                    .map(|c| c.policy())
+                    .unwrap_or_default(),
+                tiered_cache_bytes: match self.storage.residency() {
+                    Residency::Tiered => self.storage.row_cache().map(|c| c.capacity_bytes()),
+                    _ => None,
+                },
+                lsh_start: self.use_lsh,
+            };
             let mut svc = SearchService::open_with(
                 &path,
                 self.params,
                 self.xla_preferred,
-                &OpenOptions::with_residency(self.storage.residency()),
+                &reopen_opts,
             )
             .map_err(|e| ApiError::internal(format!("flush reopen: {e}")))?;
             if !self.uses_shared_pool() {
@@ -1204,11 +1302,37 @@ impl SearchService {
     fn stage_adt_batch(&self, queries: &[&[f32]], batch: &mut AdtBatch) {
         batch.plan(queries);
         let (rep, tables) = batch.split();
-        if self.runtime.is_some() {
-            for (di, table) in tables.iter_mut().enumerate() {
-                self.build_adt_into(queries[rep[di] as usize], table);
+        if let Some(rt) = &self.runtime {
+            // ONE runtime submission for the whole distinct set: the
+            // distinct queries cross the runtime-thread channel once and
+            // the tables come back concatenated — the per-distinct
+            // round-trips (send, device dispatch, recv per table) were
+            // the staged path's XLA overhead. Any failure falls back to
+            // the native blocked sweep below, exactly like the
+            // single-query path does.
+            let dim = self.dim();
+            let mut flat: Vec<f32> = Vec::with_capacity(tables.len() * dim);
+            for &r in rep.iter() {
+                flat.extend_from_slice(queries[r as usize]);
             }
-            return;
+            match rt.build_adt_batch(&flat, tables.len()) {
+                Ok(out) => {
+                    let stride = self.codebook.m * self.codebook.c;
+                    debug_assert_eq!(out.len(), tables.len() * stride);
+                    for (di, table) in tables.iter_mut().enumerate() {
+                        table.m = self.codebook.m;
+                        table.c = self.codebook.c;
+                        table.table.clear();
+                        table
+                            .table
+                            .extend_from_slice(&out[di * stride..(di + 1) * stride]);
+                    }
+                    return;
+                }
+                Err(e) => {
+                    crate::logln!("[service] XLA batch ADT failed ({e:#}); using native path");
+                }
+            }
         }
         const PAR_GROUP: usize = 8;
         if tables.len() >= 2 * PAR_GROUP {
@@ -1246,6 +1370,21 @@ impl SearchService {
             self.stats
                 .cold_bytes
                 .fetch_add(s.cold_bytes, Ordering::Relaxed);
+        }
+        if s.cache_hits > 0 {
+            self.stats
+                .cache_hits
+                .fetch_add(s.cache_hits as u64, Ordering::Relaxed);
+        }
+        if s.cache_misses > 0 {
+            self.stats
+                .cache_misses
+                .fetch_add(s.cache_misses as u64, Ordering::Relaxed);
+        }
+        if s.lsh_probes > 0 {
+            self.stats
+                .lsh_probes
+                .fetch_add(s.lsh_probes as u64, Ordering::Relaxed);
         }
         if s.early_terminated {
             self.stats.early_terminated.fetch_add(1, Ordering::Relaxed);

@@ -83,6 +83,7 @@ use crate::anyhow;
 use crate::api::wire::{self, WireRequest};
 use crate::api::{ApiError, NeighborList, QueryOptions, QueryRequest, QueryResponse};
 use crate::artifact::IndexProvenance;
+use crate::storage::cache::CachePolicy;
 use crate::storage::{OpenOptions, Residency};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
@@ -191,9 +192,13 @@ fn handle_conn(
                 }
                 Ok(WireRequest::Stats) => stats_response(&cell.load()),
                 Ok(WireRequest::Status) => status_response(&cell.load()),
-                Ok(WireRequest::Reload { path, residency }) => {
-                    reload_response(&cell, &path, residency)
-                }
+                Ok(WireRequest::Reload {
+                    path,
+                    residency,
+                    cache_mb,
+                    cache_policy,
+                    lsh_start,
+                }) => reload_response(&cell, &path, residency, cache_mb, cache_policy, lsh_start),
                 Ok(WireRequest::Insert { vector }) => insert_response(&cell.load(), &vector),
                 Ok(WireRequest::Delete { id }) => delete_response(&cell.load(), id),
                 Ok(WireRequest::Flush { path }) => flush_response(&cell, path.as_deref()),
@@ -296,6 +301,18 @@ fn stats_response(service: &SearchService) -> Json {
             "queue_wait_us_total",
             Json::num(service.stats.queue_wait_us.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "cache_hits",
+            Json::num(service.stats.cache_hits.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "cache_misses",
+            Json::num(service.stats.cache_misses.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "lsh_probes",
+            Json::num(service.stats.lsh_probes.load(Ordering::Relaxed) as f64),
+        ),
         ("dataset", Json::str(service.name.clone())),
     ])
 }
@@ -317,7 +334,7 @@ fn status_response(service: &SearchService) -> Json {
             ("path", Json::str(path.clone())),
         ]),
     };
-    let storage = Json::obj(vec![
+    let mut storage_kvs = vec![
         ("residency", Json::str(service.storage.residency().name())),
         (
             "resident_bytes",
@@ -332,7 +349,18 @@ fn status_response(service: &SearchService) -> Json {
             "cold_bytes",
             Json::num(service.stats.cold_bytes.load(Ordering::Relaxed) as f64),
         ),
-    ]);
+    ];
+    // Row-cache block, present only when the residency carries one.
+    // Decoders must treat these keys as optional
+    // (`wire::decode_storage_status` is lenient by contract).
+    if let Some(cs) = service.storage.cache_status() {
+        storage_kvs.push(("cache_policy", Json::str(cs.policy.name())));
+        storage_kvs.push(("cache_capacity_bytes", Json::num(cs.capacity_bytes as f64)));
+        storage_kvs.push(("cache_hit_rate", Json::num(cs.hit_rate())));
+        storage_kvs.push(("cache_evictions", Json::num(cs.evictions as f64)));
+        storage_kvs.push(("cache_ghost_hits", Json::num(cs.ghost_hits as f64)));
+    }
+    let storage = Json::obj(storage_kvs);
     let snap = service.online.load();
     let c = service.online.counters();
     let online = Json::obj(vec![
@@ -422,22 +450,46 @@ fn flush_response(cell: &ServiceCell, path: Option<&str>) -> Json {
 
 /// The admin `reload` op: open the artifact at `path` (keeping the old
 /// index's search params and XLA preference, and — unless the request
-/// names one — its vector residency) and swap it into the epoch cell.
-/// On ANY failure — missing file, truncation, corruption, version
-/// mismatch — the old index keeps serving and the client gets a
-/// structured error line.
-fn reload_response(cell: &ServiceCell, path: &str, residency: Option<Residency>) -> Json {
+/// names them — its vector residency, row-cache configuration, and LSH
+/// warm-start setting) and swap it into the epoch cell. On ANY failure
+/// — missing file, truncation, corruption, version mismatch — the old
+/// index keeps serving and the client gets a structured error line.
+fn reload_response(
+    cell: &ServiceCell,
+    path: &str,
+    residency: Option<Residency>,
+    cache_mb: Option<u64>,
+    cache_policy: Option<CachePolicy>,
+    lsh_start: Option<bool>,
+) -> Json {
     let old = cell.load();
-    let residency = residency.unwrap_or_else(|| old.storage.residency());
+    let mut residency = residency.unwrap_or_else(|| old.storage.residency());
+    // `cache_mb` sizes the new epoch's adaptive layer (the wire decoder
+    // gives `cached` the default capacity when the request named none).
+    if let (Residency::Cached { capacity_bytes }, Some(mb)) = (&mut residency, cache_mb) {
+        *capacity_bytes = mb << 20;
+    }
+    let old_cache = old.storage.row_cache();
+    let opts = OpenOptions {
+        residency,
+        cache_policy: cache_policy
+            .or_else(|| old_cache.map(|c| c.policy()))
+            .unwrap_or_default(),
+        tiered_cache_bytes: match residency {
+            Residency::Tiered => cache_mb.map(|mb| mb << 20).or_else(|| {
+                match old.storage.residency() {
+                    Residency::Tiered => old_cache.map(|c| c.capacity_bytes()),
+                    _ => None,
+                }
+            }),
+            _ => None,
+        },
+        lsh_start: lsh_start.unwrap_or_else(|| old.lsh_active()),
+    };
     // Retry the XLA *preference*, not the old attach *outcome* — a
     // transient attach failure at boot must not disable XLA for every
     // subsequent reload (artifacts may exist by now).
-    match SearchService::open_with(
-        Path::new(path),
-        old.params,
-        old.xla_preferred(),
-        &OpenOptions::with_residency(residency),
-    ) {
+    match SearchService::open_with(Path::new(path), old.params, old.xla_preferred(), &opts) {
         Err(e) => wire::encode_error(&ApiError::from(e)),
         Ok(svc) => {
             // Carry the serve-time execution width across the swap: a
@@ -566,9 +618,23 @@ impl Client {
     }
 
     /// [`Self::reload`] that also switches the new epoch's vector
-    /// residency (`"resident"` / `"cold"` / `"tiered"`); `None` keeps
-    /// the currently-served epoch's residency.
+    /// residency (`"resident"` / `"cold"` / `"tiered"` / `"cached"`);
+    /// `None` keeps the currently-served epoch's residency.
     pub fn reload_opts(&mut self, path: &str, residency: Option<Residency>) -> Result<Json> {
+        self.reload_with(path, residency, None, None, None)
+    }
+
+    /// Full-knob reload: residency plus row-cache capacity (MiB),
+    /// eviction policy, and LSH warm-start toggle. Every `None` keeps
+    /// the currently-served epoch's setting.
+    pub fn reload_with(
+        &mut self,
+        path: &str,
+        residency: Option<Residency>,
+        cache_mb: Option<u64>,
+        cache_policy: Option<CachePolicy>,
+        lsh_start: Option<bool>,
+    ) -> Result<Json> {
         let mut kvs = vec![
             ("v", Json::num(wire::VERSION as f64)),
             ("op", Json::str("reload")),
@@ -576,6 +642,15 @@ impl Client {
         ];
         if let Some(r) = residency {
             kvs.push(("residency", Json::str(r.name())));
+        }
+        if let Some(mb) = cache_mb {
+            kvs.push(("cache_mb", Json::num(mb as f64)));
+        }
+        if let Some(p) = cache_policy {
+            kvs.push(("cache_policy", Json::str(p.name())));
+        }
+        if let Some(on) = lsh_start {
+            kvs.push(("lsh_start", Json::Bool(on)));
         }
         let resp = self.roundtrip(Json::obj(kvs))?;
         if let Some(err) = wire::decode_error(&resp) {

@@ -252,6 +252,7 @@ mod tests {
                 gap: None,
                 storage: None,
                 online: None,
+                lsh: None,
             };
             let mut r = 0.0;
             for q in 0..ds.n_queries() {

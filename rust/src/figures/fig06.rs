@@ -52,6 +52,7 @@ pub fn traffic_vs_degree(name: &str, scale: f64, r_sweep: &[usize]) -> Vec<(usiz
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         // Traversal traffic (the quantity Fig 6b varies with R): a
         // PQ-guided beam search with a fixed top-2k rerank, so the rerank

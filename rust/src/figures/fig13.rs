@@ -57,6 +57,7 @@ pub fn proxima_hot_traces(
         gap: Some(&gap),
         storage: None,
         online: None,
+        lsh: None,
     };
     let mut traces = Vec::with_capacity(w.ds.n_queries());
     for qi in 0..w.ds.n_queries() {

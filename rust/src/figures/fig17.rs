@@ -37,6 +37,7 @@ pub fn recall_at_ber(w: &Workbench, rate: f64, seed: u64) -> f64 {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         }
     } else {
         w.context_no_gap()

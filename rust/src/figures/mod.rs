@@ -115,6 +115,7 @@ impl Workbench {
             gap: Some(&self.gap),
             storage: None,
             online: None,
+            lsh: None,
         }
     }
 
@@ -128,6 +129,7 @@ impl Workbench {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         }
     }
 
@@ -217,6 +219,9 @@ pub fn per_query(stats: &crate::search::SearchStats, n: usize) -> crate::search:
         queue_wait_us: stats.queue_wait_us / n as u64,
         cold_reads: stats.cold_reads / n,
         cold_bytes: stats.cold_bytes / n as u64,
+        cache_hits: stats.cache_hits / n,
+        cache_misses: stats.cache_misses / n,
+        lsh_probes: stats.lsh_probes / n,
     }
 }
 

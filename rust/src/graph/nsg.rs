@@ -160,6 +160,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let mut recall = 0.0;
         for qi in 0..ds.n_queries() {

@@ -70,6 +70,7 @@
 //! | `resident` | host-memory baseline                     | all of `n_base`       |
 //! | `cold`     | vectors in NAND, fetched per rerank      | none (OS page cache)  |
 //! | `tiered`   | §IV-E hot-node set pinned near compute   | `hot_frac · n_base`   |
+//! | `cached`   | adaptive hot set tracking the workload   | `--cache_mb` arena    |
 //!
 //! Graph, PQ codes and the gap stream stay resident in every mode (they
 //! are the "index memory" of the accelerator); only raw-vector fetches
@@ -79,7 +80,42 @@
 //! reported per epoch by the wire `status` op; [`storage::replay`]
 //! replays such measured access streams through the §IV-E mapping and
 //! the NAND timing model. Results are bitwise-identical across all
-//! three residencies (pinned by `tests/storage_parity.rs`).
+//! residencies (pinned by `tests/storage_parity.rs`).
+//!
+//! # Adaptive hot set (paper Fig. 15 skew)
+//!
+//! `tiered` pins a hot set chosen at BUILD time, but Fig. 15 shows the
+//! traversal's row-access distribution is heavy-tailed *and moves with
+//! the query workload* — a static prefix leaves reuse on the table.
+//! Two serving-time mechanisms adapt to the live workload instead:
+//!
+//! * **S3-FIFO cold-row cache** ([`storage::cache`]) — the `cached`
+//!   residency (also layered under `tiered` via `--cache_mb`) puts a
+//!   fixed-capacity arena of padded-row slots between rerank misses and
+//!   the positioned `.pxa` reads. Admission/eviction is S3-FIFO
+//!   (small/main/ghost queues — scan-resistant, so one-shot sweeps
+//!   cannot flush the genuinely hot rows) with CLOCK behind
+//!   `--cache_policy` as the simpler fallback. Hits are one memcpy from
+//!   the arena into the pooled per-query buffer: zero allocations at
+//!   steady state and bitwise-identical to an uncached cold read
+//!   (`tests/zero_alloc.rs`, `tests/storage_parity.rs`). The same
+//!   policy core replays offline under
+//!   [`storage::replay::post_cache_stream`], pricing only post-cache
+//!   misses through the NAND timing model, and reports live through
+//!   `status` (`cache_policy`, `cache_hit_rate`, `cache_evictions`,
+//!   `cache_ghost_hits`) and per query via
+//!   `SearchStats::{cache_hits, cache_misses}`.
+//! * **LSH entry-point warm starts** ([`search::lsh_start`]) — the
+//!   walk's other workload-independent constant is its entry point.
+//!   `build --lsh_bits N` signs every base row with N random
+//!   hyperplanes (persisted as an optional artifact section); at query
+//!   time the query's own signature picks a handful of near-bucket seeds
+//!   (own bucket + Hamming-1 probes), so the traversal starts next to
+//!   the answer instead of at the global medoid — fewer hops at equal
+//!   recall (`tests/adaptive_hot.rs`), counted per query as
+//!   `SearchStats::{lsh_probes, hops}`. Seed selection is
+//!   `DistanceProvider`-independent and identical across residencies;
+//!   `serve`/`reload --lsh_start` toggles it per epoch.
 //!
 //! # Distance kernels
 //!

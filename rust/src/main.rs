@@ -12,6 +12,12 @@
 //! proxima serve     --index data/sift-s.pxa --residency tiered
 //!                                          §IV tiered storage: hot_frac of
 //!                                          vectors in DRAM, rest from file
+//! proxima serve     --index data/sift-s.pxa --residency cached --cache_mb 64
+//!                                          adaptive hot set: S3-FIFO row
+//!                                          cache over the cold artifact
+//! proxima build     --dataset sift-s --lsh_bits 16
+//!                                          also persist LSH signatures for
+//!                                          --lsh_start entry-point warm starts
 //! proxima sim       --dataset sift-s --scale 0.02 --queues 256 --hot 0.03
 //! proxima figures   --fig all|3|6|9|11|12|13|14|15|16|17|t1|t2|t3
 //! ```
@@ -24,7 +30,8 @@
 //! the fast restart path: no graph build, no PQ training, and for
 //! `serve` no dataset at all. A running server hot-swaps its index via
 //! the wire admin plane (`{"v":2,"op":"reload","path":...}`, optionally
-//! with `"residency":"cold"|"tiered"|"resident"`; see
+//! with `"residency":"cold"|"tiered"|"resident"|"cached"`, `"cache_mb"`,
+//! `"cache_policy"`, and `"lsh_start"`; see
 //! `coordinator::server`). `--residency` controls where raw vectors
 //! live while serving (`storage::Residency`); the `status` op reports
 //! the tier plus `resident_bytes`/`cold_reads`/`cold_bytes`.
@@ -133,23 +140,43 @@ fn service_from_cfg(cfg: &Config) -> Result<(proxima::dataset::Dataset, SearchSe
 
 /// Open a serialized index artifact (the `--index` path): no dataset
 /// generation, no graph build, no PQ training. `--residency
-/// {resident,cold,tiered}` picks the vector tier (default resident;
-/// `cold` serves raw vectors in place from the artifact file, `tiered`
-/// pins the spec's `hot_frac` prefix in DRAM).
+/// {resident,cold,tiered,cached}` picks the vector tier (default
+/// resident; `cold` serves raw vectors in place from the artifact file,
+/// `tiered` pins the spec's `hot_frac` prefix in DRAM, `cached` serves
+/// cold with an adaptive S3-FIFO row cache — size it with `--cache_mb N`,
+/// pick the eviction policy with `--cache_policy {s3fifo,clock}`; under
+/// `tiered`, `--cache_mb` layers the cache beneath the pinned prefix).
+/// `--lsh_start true` enables LSH entry-point warm starts when the
+/// artifact carries an LSH section (`build --lsh_bits`).
 fn service_from_artifact(cfg: &Config, path: &str) -> Result<SearchService> {
     let params = SearchParams::from_config(cfg);
     let use_xla = !cfg.get_bool("no_xla", false);
     let residency_name = cfg.get_str("residency").unwrap_or("resident");
-    let residency = proxima::storage::Residency::parse(residency_name).ok_or_else(|| {
-        proxima::anyhow!("unknown --residency '{residency_name}' (resident|cold|tiered)")
+    let mut residency = proxima::storage::Residency::parse(residency_name).ok_or_else(|| {
+        proxima::anyhow!("unknown --residency '{residency_name}' (resident|cold|tiered|cached)")
     })?;
+    let cache_mb = cfg.get_u64("cache_mb", 0);
+    if let proxima::storage::Residency::Cached { capacity_bytes } = &mut residency {
+        if cache_mb > 0 {
+            *capacity_bytes = cache_mb << 20;
+        }
+    }
+    let policy_name = cfg.get_str("cache_policy").unwrap_or("s3fifo");
+    let cache_policy = proxima::storage::cache::CachePolicy::parse(policy_name)
+        .ok_or_else(|| {
+            proxima::anyhow!("unknown --cache_policy '{policy_name}' (s3fifo|clock)")
+        })?;
+    let opts = proxima::storage::OpenOptions {
+        residency,
+        cache_policy,
+        tiered_cache_bytes: match residency {
+            proxima::storage::Residency::Tiered if cache_mb > 0 => Some(cache_mb << 20),
+            _ => None,
+        },
+        lsh_start: cfg.get_bool("lsh_start", false),
+    };
     let t0 = std::time::Instant::now();
-    let svc = SearchService::open_with(
-        Path::new(path),
-        params,
-        use_xla,
-        &proxima::storage::OpenOptions::with_residency(residency),
-    )?;
+    let svc = SearchService::open_with(Path::new(path), params, use_xla, &opts)?;
     logln!(
         "[proxima] opened artifact {path} in {:.2}s: '{}' {} x {}d ({}), {} edges, \
          residency {} ({} vector bytes resident)",
@@ -174,7 +201,22 @@ fn cmd_gen_data(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_build(cfg: &Config) -> Result<()> {
-    let (_ds, svc) = service_from_cfg(cfg)?;
+    let (_ds, mut svc) = service_from_cfg(cfg)?;
+    // `--lsh_bits N`: build random-hyperplane signatures over the base
+    // and persist them (SEC_LSH) so serving can enable `--lsh_start`.
+    let lsh_bits = cfg.get_usize("lsh_bits", 0);
+    if lsh_bits > 0 {
+        if svc.build_lsh(lsh_bits as u32) {
+            let l = svc.lsh.as_ref().expect("just built");
+            println!(
+                "lsh: {} hyperplane bits over {} rows (seed-derived, persisted)",
+                l.n_bits(),
+                l.len()
+            );
+        } else {
+            println!("lsh: skipped (base rows not DRAM-resident)");
+        }
+    }
     println!(
         "graph: {} vertices, {} edges, mean degree {:.1}, connectivity {:.3}",
         svc.graph.n(),

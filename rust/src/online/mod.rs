@@ -287,6 +287,7 @@ fn insert_snapshot(
         gap: idx.gap,
         storage: Some(idx.storage),
         online: Some(cur),
+        lsh: None,
     };
     let QueryScratch {
         visited,
@@ -816,6 +817,7 @@ mod tests {
             gap: None,
             storage: Some(&f.store),
             online: Some(snap),
+            lsh: None,
         };
         accurate_beam_search(&ctx, q, k, 64, false).ids
     }

@@ -50,6 +50,7 @@ impl VisitProfile {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         for _ in 0..samples {
             let qid = rng.gen_range(base.len());
@@ -237,6 +238,10 @@ impl ReorderedIndex {
             codes: &self.codes,
             reorder: Some(self.perm.as_slice()),
             mapping: Some(&mapping),
+            // LSH signatures index rows by id; the permutation renumbers
+            // them, so a reordered artifact ships without SEC_LSH —
+            // rebuild via `build_lsh` over the reopened index if wanted.
+            lsh: None,
         }
         .write(path)?;
         Ok(spec2)
@@ -322,6 +327,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let params = SearchParams {
             l: 60,
@@ -346,6 +352,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let out2 = proxima_search(&ctx2, &adt, q, &params, ProximaFeatures::default(), false);
         let mapped = re.ids_to_original(&out2.ids);

@@ -92,6 +92,32 @@ impl<'rt> XlaDistance<'rt> {
         })
     }
 
+    /// Build ADTs for a whole distinct-query batch (`queries.len() ==
+    /// n * dim`), returning the `n` tables concatenated (`n * m * c`).
+    ///
+    /// The `adt_*` artifact's input shape is a single query, so the
+    /// device still executes once per distinct query — but the loop runs
+    /// here, on the thread that owns the PJRT context, so the whole
+    /// batch costs ONE submission through the runtime-service channel
+    /// instead of one round-trip per distinct query. Each table is
+    /// produced by the exact same executable and bias fold as
+    /// [`XlaDistance::build_adt`], so results are bitwise-identical to
+    /// the per-distinct path.
+    pub fn build_adt_batch(
+        &self,
+        codebook: &PqCodebook,
+        queries: &[f32],
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(queries.len(), n * self.dim);
+        let mut out = Vec::with_capacity(n * self.m * self.c);
+        for q in queries.chunks_exact(self.dim) {
+            let adt = self.build_adt(codebook, q)?;
+            out.extend_from_slice(&adt.table);
+        }
+        Ok(out)
+    }
+
     /// Rerank: accurate distances between `q` and `ids` rows of `base`,
     /// batched through the fixed-size `rerank_*` artifact with padding.
     pub fn rerank(&self, base: &VectorSet, q: &[f32], ids: &[u32]) -> Result<Vec<f32>> {

@@ -17,6 +17,11 @@ enum Req {
         q: Vec<f32>,
         reply: mpsc::Sender<Result<Adt>>,
     },
+    BuildAdtBatch {
+        queries: Vec<f32>, // n flattened distinct queries
+        n: usize,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
     Rerank {
         q: Vec<f32>,
         rows: Vec<f32>, // flattened candidate vectors
@@ -75,6 +80,25 @@ impl RuntimeHandle {
         rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
     }
 
+    /// Build ADTs for `n` flattened distinct queries in ONE submission
+    /// to the runtime thread (`queries.len() == n * dim`). Returns the
+    /// concatenated tables (`n * m * c`), bitwise-identical to calling
+    /// [`RuntimeHandle::build_adt`] per query — the win is that the
+    /// whole distinct set crosses the channel (and wakes the runtime
+    /// thread) once per batch instead of once per query.
+    pub fn build_adt_batch(&self, queries: &[f32], n: usize) -> Result<Vec<f32>> {
+        assert_eq!(queries.len(), n * self.dim);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::BuildAdtBatch {
+                queries: queries.to_vec(),
+                n,
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread gone"))?
+    }
+
     /// Rerank a flattened row batch (`rows.len() == n * dim`).
     pub fn rerank_rows(&self, q: &[f32], rows: Vec<f32>) -> Result<Vec<f32>> {
         let (reply, rx) = mpsc::channel();
@@ -121,6 +145,9 @@ fn runtime_loop(
             Req::BuildAdt { q, reply } => {
                 let _ = reply.send(dist.build_adt(&codebook, &q));
             }
+            Req::BuildAdtBatch { queries, n, reply } => {
+                let _ = reply.send(dist.build_adt_batch(&codebook, &queries, n));
+            }
             Req::Rerank { q, rows, reply } => {
                 let n = rows.len() / dim;
                 let vs = crate::dataset::VectorSet::new(dim, rows);
@@ -165,6 +192,37 @@ mod tests {
         assert_eq!(adt_xla.m, adt_nat.m);
         for (a, b) in adt_xla.table.iter().zip(&adt_nat.table) {
             assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn handle_batch_matches_per_query_bitwise() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let ds = tiny_uniform(300, 128, Metric::L2, 9);
+        let cb = PqCodebook::train(&ds.base, Metric::L2, 32, 256, 300, 6, 9);
+        let Some(h) = RuntimeHandle::spawn_default(&cb) else {
+            eprintln!("skipping: runtime spawn failed");
+            return;
+        };
+        let n = 3usize;
+        let mut flat = Vec::new();
+        for qi in 0..n {
+            flat.extend_from_slice(ds.queries.row(qi));
+        }
+        let batched = h.build_adt_batch(&flat, n).unwrap();
+        for qi in 0..n {
+            let single = h.build_adt(ds.queries.row(qi)).unwrap();
+            let got = &batched[qi * single.table.len()..(qi + 1) * single.table.len()];
+            assert!(
+                got.iter()
+                    .zip(&single.table)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "query {qi}: one-submission batch diverged from per-query calls"
+            );
         }
         h.shutdown();
     }

@@ -52,6 +52,12 @@ pub struct SearchContext<'a> {
     /// staying traversable. `None` (every offline/figure/test literal)
     /// keeps the immutable-index behavior byte for byte.
     pub online: Option<&'a OnlineSnapshot>,
+    /// LSH entry-point index (`search::lsh_start`). When `Some`, every
+    /// mode seeds the walk with LSH-selected warm starts next to the
+    /// fixed medoid (`kernel::seed_starts`); `None` — the default and
+    /// every existing literal — keeps fixed-entry traversal bit for
+    /// bit.
+    pub lsh: Option<&'a super::lsh_start::LshIndex>,
 }
 
 impl<'a> SearchContext<'a> {
@@ -273,11 +279,11 @@ pub fn accurate_beam_search_into(
     // serving paths use the exact epoch bitset (no false-positive drops).
     if want_trace {
         bloom.clear();
-        kernel::seed_entry(ctx, &mut provider, bloom, list, &mut stats);
+        kernel::seed_starts(ctx, q_eff, &mut provider, bloom, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, bloom, list, l, &mut stats, &mut trace);
     } else {
         visited.begin(ctx.n_vectors());
-        kernel::seed_entry(ctx, &mut provider, visited, list, &mut stats);
+        kernel::seed_starts(ctx, q_eff, &mut provider, visited, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
 
@@ -370,11 +376,11 @@ pub fn pq_beam_search_into(
     list.reset(l);
     if want_trace {
         bloom.clear();
-        kernel::seed_entry(ctx, &mut provider, bloom, list, &mut stats);
+        kernel::seed_starts(ctx, q_eff, &mut provider, bloom, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, bloom, list, l, &mut stats, &mut trace);
     } else {
         visited.begin(ctx.n_vectors());
-        kernel::seed_entry(ctx, &mut provider, visited, list, &mut stats);
+        kernel::seed_starts(ctx, q_eff, &mut provider, visited, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
 
@@ -502,6 +508,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let gt = brute_force(&ds, 10);
         let mut recall = 0.0;
@@ -524,6 +531,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let gt = brute_force(&ds, 10);
         let mut recall = 0.0;
@@ -551,6 +559,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let adt = cb.build_adt(ds.queries.row(0));
         let out = pq_beam_search(&ctx, &adt, ds.queries.row(0), 5, 30, 10, true);
@@ -578,6 +587,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         };
         let ctx_gap = SearchContext {
             gap: Some(&gap),

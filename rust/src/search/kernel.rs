@@ -523,6 +523,44 @@ pub fn seed_entry<P: DistanceProvider, V: VisitedSet>(
     visited.test_and_set(entry);
 }
 
+/// Seed the walk: the fixed graph entry point, plus — when the context
+/// carries an [`LshIndex`](super::lsh_start::LshIndex) — up to
+/// [`MAX_STARTS`](super::lsh_start::MAX_STARTS) LSH-selected warm
+/// starts near the query. Every mode shares this seeding (the warm
+/// start is `DistanceProvider`-independent): candidates pay the normal
+/// guide distance and enter the candidate list like any other vertex,
+/// so the walk simply *begins* closer to the target — under cold
+/// residency each hop that saves is a NAND read that never happens.
+/// Probes charge [`SearchStats::lsh_probes`]; like [`seed_entry`],
+/// seeding records no trace ops (DES replay compatibility).
+///
+/// `q` is the query in the context's row layout (padded is fine — the
+/// LSH hash reads only the first `dim` components).
+pub fn seed_starts<P: DistanceProvider, V: VisitedSet>(
+    ctx: &SearchContext,
+    q: &[f32],
+    provider: &mut P,
+    visited: &mut V,
+    list: &mut CandidateList,
+    stats: &mut SearchStats,
+) {
+    seed_entry(ctx, provider, visited, list, stats);
+    let Some(lsh) = ctx.lsh else {
+        return;
+    };
+    let mut no_trace: Option<Trace> = None;
+    let mut starts = [0u32; super::lsh_start::MAX_STARTS];
+    let (n, probes) = lsh.probe_into(q, &mut starts);
+    stats.lsh_probes += probes;
+    for &id in &starts[..n] {
+        if visited.test_and_set(id) {
+            continue;
+        }
+        let d = provider.guide(id, stats, &mut no_trace);
+        list.insert(d, id);
+    }
+}
+
 /// THE shared expansion loop (Alg. 1 lines 4–10 and the identical loops
 /// the two baselines used to duplicate): repeatedly take the best
 /// unevaluated candidate inside the top-`t_limit` prefix, fetch its

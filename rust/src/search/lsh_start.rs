@@ -1,0 +1,294 @@
+//! LSH entry-point warm starts ("catapults"): start each query's walk
+//! O(1) hash probes from a near neighbor instead of the fixed medoid.
+//!
+//! Random-hyperplane LSH over the base: `n_bits` hyperplanes are drawn
+//! deterministically from a seed at index construction; every base
+//! vector's signature (one sign bit per plane) is precomputed and the
+//! ids are bucketed by signature in a CSR table. At query time the
+//! query's own signature selects a bucket, widened by Hamming-distance-1
+//! multi-probe until a handful of candidate entry points is found. Under
+//! cold residency every traversal hop saved this way is a NAND read
+//! saved (Kim et al.'s computational-storage argument — entry quality
+//! multiplies into device reads).
+//!
+//! The signatures, planes, seed and bit count persist in the `.pxa`
+//! artifact as the optional `SEC_LSH` section, so warm starts survive
+//! save/open at every residency. Warm starts are **opt-in**
+//! (`--lsh_start`): seeding extra entries changes traversal order, so
+//! the default path stays bitwise-compatible with the fixed-entry
+//! oracles.
+//!
+//! # Dispatch independence
+//!
+//! Signatures must agree between build time and query time regardless
+//! of SIMD dispatch level, or a query built on an AVX2 host could hash
+//! into the wrong bucket on a NEON host (or under
+//! `PROXIMA_FORCE_SCALAR`). The wide kernels are only
+//! tolerance-identical (FMA contraction), so signatures never touch
+//! them: [`scalar_dot`] is a plain ordered scalar loop — Rust does not
+//! contract or reorder float arithmetic — making `sign(dot)` exactly
+//! reproducible everywhere.
+
+use crate::dataset::VectorSet;
+use crate::util::rng::Xoshiro256pp;
+
+/// Maximum entry-point candidates a probe returns (callers size their
+/// fixed scratch with this — the query path stays allocation-free).
+pub const MAX_STARTS: usize = 4;
+
+/// Valid `n_bits` range: at least 1 plane; at most 24 keeps the bucket
+/// table (2^n_bits + 1 CSR offsets) bounded.
+pub const MAX_BITS: u32 = 24;
+
+/// Ordered scalar dot product — the dispatch-independent hash kernel.
+/// Deliberately NOT the `simd::` dispatched dot (see module docs).
+#[inline]
+pub fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert!(b.len() >= a.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// The persisted LSH structure: hyperplanes + per-base-vector signatures
+/// (both serialized in `SEC_LSH`), plus a bucket CSR rebuilt on decode.
+#[derive(Clone, Debug)]
+pub struct LshIndex {
+    n_bits: u32,
+    seed: u64,
+    dim: usize,
+    /// `n_bits` rows of `dim` plane coefficients.
+    planes: Vec<f32>,
+    /// Signature per base id.
+    signatures: Vec<u32>,
+    /// CSR over signatures: ids of bucket `s` are
+    /// `bucket_ids[bucket_start[s]..bucket_start[s+1]]`, ascending.
+    bucket_start: Vec<u32>,
+    bucket_ids: Vec<u32>,
+}
+
+impl LshIndex {
+    /// Draw `n_bits` hyperplanes from `seed` and signature every row of
+    /// `base`. Deterministic: same (base, n_bits, seed) → same index.
+    pub fn build(base: &VectorSet, n_bits: u32, seed: u64) -> LshIndex {
+        assert!((1..=MAX_BITS).contains(&n_bits), "n_bits must be in 1..={MAX_BITS}");
+        assert!(base.dim > 0, "LSH requires dim >= 1");
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let planes: Vec<f32> = (0..n_bits as usize * base.dim)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        let signatures = (0..base.len())
+            .map(|i| signature_of(base.row(i), &planes, n_bits, base.dim))
+            .collect();
+        Self::from_parts(n_bits, seed, base.dim, planes, signatures)
+    }
+
+    /// Reassemble from serialized parts (the `SEC_LSH` decode path),
+    /// rebuilding the bucket CSR. Panics on structurally-invalid parts —
+    /// the codec validates shapes before calling this.
+    pub fn from_parts(
+        n_bits: u32,
+        seed: u64,
+        dim: usize,
+        planes: Vec<f32>,
+        signatures: Vec<u32>,
+    ) -> LshIndex {
+        assert!((1..=MAX_BITS).contains(&n_bits));
+        assert_eq!(planes.len(), n_bits as usize * dim, "plane matrix shape");
+        let n_buckets = 1usize << n_bits;
+        let mask = (n_buckets - 1) as u32;
+        // Counting sort: stable, so ids within a bucket stay ascending.
+        let mut counts = vec![0u32; n_buckets + 1];
+        for &s in &signatures {
+            debug_assert_eq!(s & !mask, 0, "signature wider than n_bits");
+            counts[(s & mask) as usize + 1] += 1;
+        }
+        for b in 0..n_buckets {
+            counts[b + 1] += counts[b];
+        }
+        let bucket_start = counts.clone();
+        let mut cursor = counts;
+        let mut bucket_ids = vec![0u32; signatures.len()];
+        for (id, &s) in signatures.iter().enumerate() {
+            let b = (s & mask) as usize;
+            bucket_ids[cursor[b] as usize] = id as u32;
+            cursor[b] += 1;
+        }
+        LshIndex {
+            n_bits,
+            seed,
+            dim,
+            planes,
+            signatures,
+            bucket_start,
+            bucket_ids,
+        }
+    }
+
+    pub fn n_bits(&self) -> u32 {
+        self.n_bits
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Base vectors covered.
+    pub fn len(&self) -> usize {
+        self.signatures.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.signatures.is_empty()
+    }
+
+    /// Serialized plane matrix (`n_bits × dim`, row-major).
+    pub fn planes(&self) -> &[f32] {
+        &self.planes
+    }
+
+    /// Serialized per-id signatures.
+    pub fn signatures(&self) -> &[u32] {
+        &self.signatures
+    }
+
+    /// Signature of `v` (first `dim` components; padded tails are fine —
+    /// plane coefficients stop at `dim`).
+    #[inline]
+    pub fn signature(&self, v: &[f32]) -> u32 {
+        signature_of(v, &self.planes, self.n_bits, self.dim)
+    }
+
+    #[inline]
+    fn bucket(&self, s: u32) -> &[u32] {
+        let b = s as usize;
+        &self.bucket_ids[self.bucket_start[b] as usize..self.bucket_start[b + 1] as usize]
+    }
+
+    /// Select up to `out.len()` entry-point candidates for query `q`:
+    /// the query's own bucket first, then Hamming-1 neighbors until
+    /// `out` fills or probes run out. Returns `(n_starts, probes)`.
+    /// Allocation-free; deterministic for a given query.
+    pub fn probe_into(&self, q: &[f32], out: &mut [u32]) -> (usize, usize) {
+        if out.is_empty() {
+            return (0, 0);
+        }
+        let sig = self.signature(q);
+        let mut n = 0;
+        let mut probes = 1;
+        for &id in self.bucket(sig) {
+            if n == out.len() {
+                return (n, probes);
+            }
+            out[n] = id;
+            n += 1;
+        }
+        for bit in 0..self.n_bits {
+            if n == out.len() {
+                break;
+            }
+            probes += 1;
+            for &id in self.bucket(sig ^ (1 << bit)) {
+                if n == out.len() {
+                    break;
+                }
+                out[n] = id;
+                n += 1;
+            }
+        }
+        (n, probes)
+    }
+}
+
+#[inline]
+fn signature_of(v: &[f32], planes: &[f32], n_bits: u32, dim: usize) -> u32 {
+    let mut sig = 0u32;
+    for b in 0..n_bits as usize {
+        let plane = &planes[b * dim..(b + 1) * dim];
+        // Ties (dot == 0.0) hash to 0 — consistent everywhere because
+        // the scalar dot is exactly reproducible.
+        if scalar_dot(plane, v) > 0.0 {
+            sig |= 1 << b;
+        }
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::tiny_uniform;
+    use crate::distance::Metric;
+
+    fn base() -> VectorSet {
+        tiny_uniform(200, 8, Metric::L2, 0xC0DE).base
+    }
+
+    #[test]
+    fn build_is_deterministic_and_roundtrips_parts() {
+        let b = base();
+        let a = LshIndex::build(&b, 6, 42);
+        let c = LshIndex::build(&b, 6, 42);
+        assert_eq!(a.signatures(), c.signatures());
+        assert_eq!(a.planes(), c.planes());
+        // from_parts over the serialized fields reproduces the probes.
+        let r = LshIndex::from_parts(6, 42, 8, a.planes().to_vec(), a.signatures().to_vec());
+        let mut s1 = [0u32; MAX_STARTS];
+        let mut s2 = [0u32; MAX_STARTS];
+        for i in 0..20 {
+            let q = b.row(i);
+            assert_eq!(a.probe_into(q, &mut s1), r.probe_into(q, &mut s2));
+            assert_eq!(s1, s2);
+        }
+        // A different seed draws different planes.
+        let d = LshIndex::build(&b, 6, 43);
+        assert_ne!(a.planes(), d.planes());
+    }
+
+    #[test]
+    fn own_row_probe_finds_itself() {
+        let b = base();
+        let lsh = LshIndex::build(&b, 4, 7);
+        // Probing with base row i must surface ids from i's own bucket —
+        // in particular the bucket containing i itself.
+        let mut hits = 0;
+        for i in 0..b.len() {
+            let mut starts = [0u32; 64];
+            let (n, probes) = lsh.probe_into(b.row(i), &mut starts);
+            assert!(probes >= 1);
+            if starts[..n].contains(&(i as u32)) {
+                hits += 1;
+            }
+        }
+        // With 2^4 buckets over 200 ids and a 64-wide scratch, nearly
+        // every row finds itself; demand a strong majority.
+        assert!(hits * 2 > b.len(), "only {hits}/200 rows found themselves");
+    }
+
+    #[test]
+    fn padded_queries_hash_like_packed_ones() {
+        let b = base();
+        let lsh = LshIndex::build(&b, 6, 9);
+        let q = b.row(3);
+        let mut padded = q.to_vec();
+        padded.extend_from_slice(&[0.0; 8]);
+        assert_eq!(lsh.signature(q), lsh.signature(&padded));
+    }
+
+    #[test]
+    fn signatures_fit_n_bits_and_buckets_partition_ids() {
+        let b = base();
+        let lsh = LshIndex::build(&b, 5, 11);
+        let mask = (1u32 << 5) - 1;
+        assert!(lsh.signatures().iter().all(|&s| s & !mask == 0));
+        let mut seen: Vec<u32> = (0..1u32 << 5).flat_map(|s| lsh.bucket(s).to_vec()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..b.len() as u32).collect::<Vec<_>>());
+    }
+}

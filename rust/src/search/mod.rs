@@ -21,6 +21,7 @@ pub mod bitonic;
 pub mod bloom;
 pub mod ivf;
 pub mod kernel;
+pub mod lsh_start;
 pub mod proxima;
 
 /// Counters accumulated during one query (or summed over a batch).
@@ -65,6 +66,15 @@ pub struct SearchStats {
     pub cold_reads: usize,
     /// Bytes those cold fetches read from the file.
     pub cold_bytes: u64,
+    /// Raw-vector fetches answered by the adaptive row cache
+    /// (`storage::cache`) — would have been cold reads without it.
+    pub cache_hits: usize,
+    /// Row-cache lookups that fell through to a cold read (every such
+    /// miss is also counted in `cold_reads`).
+    pub cache_misses: usize,
+    /// LSH bucket probes spent selecting entry points for this query
+    /// (0 when warm starts are disabled).
+    pub lsh_probes: usize,
 }
 
 impl SearchStats {
@@ -86,6 +96,9 @@ impl SearchStats {
         self.queue_wait_us += o.queue_wait_us;
         self.cold_reads += o.cold_reads;
         self.cold_bytes += o.cold_bytes;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.lsh_probes += o.lsh_probes;
     }
 }
 
@@ -176,6 +189,9 @@ mod tests {
             queue_wait_us: 40,
             cold_reads: 3,
             cold_bytes: 192,
+            cache_hits: 4,
+            cache_misses: 3,
+            lsh_probes: 2,
         };
         a.add(&b);
         a.add(&b);
@@ -186,6 +202,9 @@ mod tests {
         assert_eq!(a.queue_wait_us, 80);
         assert_eq!(a.cold_reads, 6);
         assert_eq!(a.cold_bytes, 384);
+        assert_eq!(a.cache_hits, 8);
+        assert_eq!(a.cache_misses, 6);
+        assert_eq!(a.lsh_probes, 4);
     }
 
     #[test]

@@ -131,6 +131,7 @@ pub fn proxima_search_into(
         bloom.clear();
         proxima_core(
             ctx,
+            q_eff,
             &mut provider,
             bloom,
             list,
@@ -146,6 +147,7 @@ pub fn proxima_search_into(
         visited.begin(ctx.n_vectors());
         proxima_core(
             ctx,
+            q_eff,
             &mut provider,
             visited,
             list,
@@ -176,6 +178,7 @@ pub fn proxima_search_into(
 #[allow(clippy::too_many_arguments)]
 fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     ctx: &SearchContext,
+    q_eff: &[f32],
     provider: &mut P,
     visited: &mut V,
     list: &mut CandidateList,
@@ -191,8 +194,9 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     let k = params.k;
     let mut t_limit = params.t_init.clamp(k, l_cap);
 
-    // Line 1: initialize with the entry point.
-    kernel::seed_entry(ctx, provider, visited, list, stats);
+    // Line 1: initialize with the entry point (plus LSH warm starts
+    // when the context carries an `lsh_start` index).
+    kernel::seed_starts(ctx, q_eff, provider, visited, list, stats);
 
     let mut stable_iters = 0usize;
 
@@ -331,6 +335,7 @@ mod tests {
             gap: None,
             storage: None,
             online: None,
+            lsh: None,
         }
     }
 

@@ -1,0 +1,658 @@
+//! Adaptive cold-row cache (the "adaptive hot set", ROADMAP item 5).
+//!
+//! `Tiered` residency pins a static build-time prefix, but the paper's
+//! Fig. 15 shows hot-node access under traversal is heavy-tailed *and
+//! query-dependent*: the right hot set moves with the workload. This
+//! module puts a real user-space cache between [`RowSource`] misses and
+//! the positioned `.pxa` reads:
+//!
+//! * [`RowCache`] — fixed-capacity arena of padded-row slots (the same
+//!   `stride_for(dim)` 64-byte-aligned layout [`ReadBuf`] decodes into),
+//!   so a cache hit is one `memcpy` into the pooled per-query buffer —
+//!   zero allocations on the steady-state path and bitwise-identical to
+//!   an uncached cold read.
+//! * [`PolicyCore`] — the payload-free admission/eviction policy:
+//!   **S3-FIFO** (small/main/ghost queues; the scan-resistant default)
+//!   or **CLOCK** (one ref bit + a hand) behind the [`CachePolicy`]
+//!   knob. The core is separated from the slot arena so
+//!   [`replay::post_cache_stream`](super::replay::post_cache_stream)
+//!   can drive the exact serving policy over a measured access stream
+//!   and price only the *post-cache* misses through the NAND model.
+//!
+//! S3-FIFO in one paragraph: new ids enter a small probationary FIFO
+//! (~10% of slots). Ids evicted from small with at most one re-access
+//! go to a key-only **ghost** FIFO (no payload, ~one entry per slot);
+//! ids re-accessed while probationary are promoted to the main FIFO.
+//! A miss whose id is still remembered by the ghost readmits straight
+//! to main — the "second chance" that makes one-hit-wonder scans cheap
+//! while genuinely re-used rows stick.
+//!
+//! [`RowSource`]: super::RowSource
+//! [`ReadBuf`]: super::ReadBuf
+
+use super::{ColdVectors, ReadBuf};
+use crate::search::SearchStats;
+use crate::simd::{stride_for, AlignedBuf};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Default capacity when `--residency cached` is given without
+/// `--cache_mb`: 64 MiB of padded-row slots.
+pub const DEFAULT_CACHE_BYTES: u64 = 64 << 20;
+
+/// Eviction policy knob (`--cache_policy`, wire `cache_policy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Small/main/ghost queues (scan-resistant; the default).
+    #[default]
+    S3Fifo,
+    /// One ref bit per slot and a sweeping hand — the simpler fallback.
+    Clock,
+}
+
+impl CachePolicy {
+    /// Stable wire/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CachePolicy::S3Fifo => "s3fifo",
+            CachePolicy::Clock => "clock",
+        }
+    }
+
+    /// Parse a wire/CLI name.
+    pub fn parse(s: &str) -> Option<CachePolicy> {
+        match s {
+            "s3fifo" | "s3-fifo" => Some(CachePolicy::S3Fifo),
+            "clock" => Some(CachePolicy::Clock),
+            _ => None,
+        }
+    }
+}
+
+/// One cache lookup's outcome (policy core level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lookup {
+    Hit,
+    Miss,
+}
+
+/// Counter snapshot for the wire `status` storage block.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStatus {
+    pub policy: CachePolicy,
+    pub capacity_bytes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub ghost_hits: u64,
+}
+
+impl CacheStatus {
+    /// Hit fraction over all lookups so far (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+const ABSENT: u8 = 0;
+const IN_SMALL: u8 = 1;
+const IN_MAIN: u8 = 2;
+/// Per-entry re-access counter saturates here (the S3-FIFO paper's cap).
+const FREQ_CAP: u8 = 3;
+
+/// The payload-free policy state machine: which ids are resident and who
+/// leaves when a new one is admitted. Drives both the serving
+/// [`RowCache`] (which pairs it with a slot arena) and the offline
+/// replay comparison (ids only, no payloads). All queues are pre-sized
+/// at construction; steady-state operation allocates nothing.
+#[derive(Debug)]
+pub struct PolicyCore {
+    policy: CachePolicy,
+    cap: usize,
+    small_cap: usize,
+    live: usize,
+    /// Per-id residency: ABSENT / IN_SMALL / IN_MAIN (CLOCK uses IN_MAIN).
+    state: Vec<u8>,
+    /// Per-id saturating re-access count (S3-FIFO) / ref bit (CLOCK).
+    freq: Vec<u8>,
+    small: VecDeque<u32>,
+    main: VecDeque<u32>,
+    /// Key-only ghost FIFO: (id, generation). An entry is live iff its
+    /// generation matches `ghost_gen[id]` and `in_ghost[id]` is set —
+    /// stale entries left behind by readmissions age out harmlessly.
+    ghost: VecDeque<(u32, u32)>,
+    ghost_cap: usize,
+    in_ghost: Vec<bool>,
+    ghost_gen: Vec<u32>,
+    /// CLOCK: resident ids in slot order + the sweeping hand.
+    ring: Vec<u32>,
+    hand: usize,
+}
+
+impl PolicyCore {
+    /// Policy over ids `0..n_ids` with room for `n_slots` resident
+    /// entries (clamped to at least one).
+    pub fn new(n_ids: usize, n_slots: usize, policy: CachePolicy) -> PolicyCore {
+        let cap = n_slots.max(1);
+        PolicyCore {
+            policy,
+            cap,
+            small_cap: (cap / 10).max(1),
+            live: 0,
+            state: vec![ABSENT; n_ids],
+            freq: vec![0; n_ids],
+            small: VecDeque::with_capacity(cap + 1),
+            main: VecDeque::with_capacity(cap + 1),
+            ghost: VecDeque::with_capacity(cap + 1),
+            ghost_cap: cap,
+            in_ghost: vec![false; n_ids],
+            ghost_gen: vec![0; n_ids],
+            ring: Vec::with_capacity(if policy == CachePolicy::Clock { cap } else { 0 }),
+            hand: 0,
+        }
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Resident capacity in entries.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.state[id as usize] != ABSENT
+    }
+
+    /// Look up `id`, bumping its re-use signal on a hit. Misses mutate
+    /// nothing — admission is the caller's separate decision ([`admit`]),
+    /// so the serving cache can drop the lock across the cold read.
+    ///
+    /// [`admit`]: PolicyCore::admit
+    #[inline]
+    pub fn lookup(&mut self, id: u32) -> Lookup {
+        let i = id as usize;
+        if self.state[i] != ABSENT {
+            self.freq[i] = (self.freq[i] + 1).min(FREQ_CAP);
+            Lookup::Hit
+        } else {
+            Lookup::Miss
+        }
+    }
+
+    /// Admit `id` after a miss. Returns `(evicted, ghost_hit)`: the id
+    /// whose slot the caller should reuse (None while filling), and
+    /// whether the ghost remembered `id` (→ readmitted straight to
+    /// main). Admitting an id that raced to residency returns
+    /// `(None, false)` and leaves the policy untouched.
+    pub fn admit(&mut self, id: u32) -> (Option<u32>, bool) {
+        let i = id as usize;
+        if self.state[i] != ABSENT {
+            return (None, false);
+        }
+        let evicted = if self.live >= self.cap {
+            Some(self.evict())
+        } else {
+            None
+        };
+        self.live += 1;
+        self.freq[i] = 0;
+        match self.policy {
+            CachePolicy::Clock => {
+                self.state[i] = IN_MAIN;
+                self.ring.push(id);
+                (evicted, false)
+            }
+            CachePolicy::S3Fifo => {
+                let ghost_hit = self.in_ghost[i];
+                if ghost_hit {
+                    self.in_ghost[i] = false;
+                    self.state[i] = IN_MAIN;
+                    self.main.push_back(id);
+                } else {
+                    self.state[i] = IN_SMALL;
+                    self.small.push_back(id);
+                }
+                (evicted, ghost_hit)
+            }
+        }
+    }
+
+    /// Pick and remove the victim (caller guaranteed `live == cap > 0`).
+    fn evict(&mut self) -> u32 {
+        self.live -= 1;
+        match self.policy {
+            CachePolicy::Clock => self.evict_clock(),
+            CachePolicy::S3Fifo => {
+                if self.small.len() >= self.small_cap || self.main.is_empty() {
+                    self.evict_small()
+                } else {
+                    self.evict_main()
+                }
+            }
+        }
+    }
+
+    /// S3-FIFO small-queue eviction: re-used probationers promote to
+    /// main; one-hit wonders leave, remembered by the ghost.
+    fn evict_small(&mut self) -> u32 {
+        while let Some(t) = self.small.pop_front() {
+            let i = t as usize;
+            if self.freq[i] > 1 {
+                self.freq[i] = 0;
+                self.state[i] = IN_MAIN;
+                self.main.push_back(t);
+            } else {
+                self.state[i] = ABSENT;
+                self.push_ghost(t);
+                return t;
+            }
+        }
+        // Every probationer earned promotion: evict from main instead.
+        self.evict_main()
+    }
+
+    /// S3-FIFO main-queue eviction: lazy second chances via the
+    /// saturating counter; evicted main entries are NOT ghosted (they
+    /// had their chance).
+    fn evict_main(&mut self) -> u32 {
+        loop {
+            let t = self.main.pop_front().expect("evict from empty cache");
+            let i = t as usize;
+            if self.freq[i] > 0 {
+                self.freq[i] -= 1;
+                self.main.push_back(t);
+            } else {
+                self.state[i] = ABSENT;
+                return t;
+            }
+        }
+    }
+
+    fn push_ghost(&mut self, id: u32) {
+        let i = id as usize;
+        self.ghost_gen[i] = self.ghost_gen[i].wrapping_add(1);
+        self.in_ghost[i] = true;
+        self.ghost.push_back((id, self.ghost_gen[i]));
+        while self.ghost.len() > self.ghost_cap {
+            let (g, gen) = self.ghost.pop_front().unwrap();
+            if self.ghost_gen[g as usize] == gen {
+                self.in_ghost[g as usize] = false;
+            }
+        }
+    }
+
+    /// CLOCK: sweep the hand, clearing ref bits, until an unreferenced
+    /// resident is found; its ring position is recycled by the next
+    /// `admit`'s push (swap-remove keeps the ring dense).
+    fn evict_clock(&mut self) -> u32 {
+        loop {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            let t = self.ring[self.hand];
+            let i = t as usize;
+            if self.freq[i] > 0 {
+                self.freq[i] = 0;
+                self.hand += 1;
+            } else {
+                self.state[i] = ABSENT;
+                self.ring.swap_remove(self.hand);
+                return t;
+            }
+        }
+    }
+}
+
+const SLOT_NONE: u32 = u32::MAX;
+
+/// Arena + id↔slot maps behind the serving lock.
+#[derive(Debug)]
+struct CacheInner {
+    core: PolicyCore,
+    /// `n_slots × stride` f32s, 64-byte aligned — each slot is exactly
+    /// one padded decoded row, bit-for-bit what `ColdVectors::read_row`
+    /// would produce.
+    arena: AlignedBuf,
+    slot_of: Vec<u32>,
+    next_free: u32,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    ghost_hits: u64,
+}
+
+/// The serving cold-row cache: [`PolicyCore`] + a padded-row slot arena.
+///
+/// Shared by concurrent query workers (`&self` methods, one internal
+/// mutex); the lock is never held across file I/O — a miss reads the
+/// row through the caller's pooled [`ReadBuf`] outside the lock, then
+/// re-locks to admit. Hits copy one `stride` row out of the arena into
+/// the same pooled buffer: the query path stays allocation-free and
+/// rows stay bitwise-identical to uncached cold reads.
+#[derive(Debug)]
+pub struct RowCache {
+    dim: usize,
+    stride: usize,
+    capacity_bytes: u64,
+    policy: CachePolicy,
+    inner: Mutex<CacheInner>,
+}
+
+impl RowCache {
+    /// Cache over ids `0..n_ids` of `dim`-dimensional rows, holding as
+    /// many padded slots as fit in `capacity_bytes` (at least one).
+    pub fn new(dim: usize, n_ids: usize, capacity_bytes: u64, policy: CachePolicy) -> RowCache {
+        assert!(dim > 0, "row cache requires dim >= 1");
+        let stride = stride_for(dim);
+        let slot_bytes = (stride * 4) as u64;
+        let n_slots = ((capacity_bytes / slot_bytes) as usize).clamp(1, n_ids.max(1));
+        let mut arena = AlignedBuf::new();
+        arena.grow_to(n_slots * stride);
+        RowCache {
+            dim,
+            stride,
+            capacity_bytes,
+            policy,
+            inner: Mutex::new(CacheInner {
+                core: PolicyCore::new(n_ids, n_slots, policy),
+                arena,
+                slot_of: vec![SLOT_NONE; n_ids],
+                next_free: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                ghost_hits: 0,
+            }),
+        }
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// DRAM actually pinned by the slot arena (padded rows).
+    pub fn arena_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        (inner.core.capacity() * self.stride * 4) as u64
+    }
+
+    /// Slot capacity in rows.
+    pub fn capacity_rows(&self) -> usize {
+        self.inner.lock().unwrap().core.capacity()
+    }
+
+    /// On a hit, copy the cached padded row into `buf` (the caller then
+    /// borrows `buf.vals`); on a miss, just record it. No I/O either way.
+    #[inline]
+    pub fn fill_hit(&self, id: u32, buf: &mut ReadBuf) -> bool {
+        buf.ensure(self.dim);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.core.lookup(id) == Lookup::Hit {
+            inner.hits += 1;
+            let slot = inner.slot_of[id as usize] as usize;
+            debug_assert_ne!(slot as u32, SLOT_NONE, "resident id without a slot");
+            let start = slot * self.stride;
+            buf.vals
+                .as_mut_slice()
+                .copy_from_slice(&inner.arena.as_slice()[start..start + self.stride]);
+            true
+        } else {
+            inner.misses += 1;
+            false
+        }
+    }
+
+    /// Admit `row` (the padded `stride`-length decoded row just read
+    /// from the cold tier) for `id`, evicting per policy. A concurrent
+    /// admit that won the race is refreshed in place — same bytes, no
+    /// double-count.
+    pub fn admit(&self, id: u32, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.stride, "cache slots hold padded rows");
+        let mut inner = self.inner.lock().unwrap();
+        let slot = if inner.core.contains(id) {
+            inner.slot_of[id as usize]
+        } else {
+            let (evicted, ghost_hit) = inner.core.admit(id);
+            if ghost_hit {
+                inner.ghost_hits += 1;
+            }
+            match evicted {
+                Some(v) => {
+                    inner.evictions += 1;
+                    let s = inner.slot_of[v as usize];
+                    inner.slot_of[v as usize] = SLOT_NONE;
+                    s
+                }
+                None => {
+                    let s = inner.next_free;
+                    inner.next_free += 1;
+                    s
+                }
+            }
+        };
+        inner.slot_of[id as usize] = slot;
+        let start = slot as usize * self.stride;
+        inner.arena.as_mut_slice()[start..start + self.stride].copy_from_slice(row);
+    }
+
+    /// Full read path: serve `id` from the cache, falling through to
+    /// `cold` on a miss (metered into `stats` exactly like an uncached
+    /// cold read) and admitting the fetched row.
+    #[inline]
+    pub fn read_through(&self, id: u32, cold: &ColdVectors, buf: &mut ReadBuf, stats: &mut SearchStats) {
+        if self.fill_hit(id, buf) {
+            stats.cache_hits += 1;
+            return;
+        }
+        stats.cache_misses += 1;
+        stats.cold_reads += 1;
+        stats.cold_bytes += cold.dim() as u64 * 4;
+        cold.read_row(id, buf);
+        self.admit(id, buf.vals.as_slice());
+    }
+
+    /// Counter snapshot for `status`.
+    pub fn status(&self) -> CacheStatus {
+        let inner = self.inner.lock().unwrap();
+        CacheStatus {
+            policy: self.policy,
+            capacity_bytes: self.capacity_bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            ghost_hits: inner.ghost_hits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(core: &mut PolicyCore, id: u32) -> (Lookup, bool) {
+        match core.lookup(id) {
+            Lookup::Hit => (Lookup::Hit, false),
+            Lookup::Miss => {
+                let (_, ghost) = core.admit(id);
+                (Lookup::Miss, ghost)
+            }
+        }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [CachePolicy::S3Fifo, CachePolicy::Clock] {
+            assert_eq!(CachePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(CachePolicy::parse("lru"), None);
+        assert_eq!(CachePolicy::default(), CachePolicy::S3Fifo);
+    }
+
+    #[test]
+    fn s3fifo_counts_and_capacity_invariants() {
+        let mut core = PolicyCore::new(100, 10, CachePolicy::S3Fifo);
+        for id in 0..10u32 {
+            assert_eq!(drive(&mut core, id).0, Lookup::Miss);
+        }
+        assert_eq!(core.len(), 10);
+        for id in 0..10u32 {
+            assert_eq!(drive(&mut core, id).0, Lookup::Hit);
+        }
+        // Admissions past capacity always evict exactly one.
+        for id in 10..50u32 {
+            let before = core.len();
+            drive(&mut core, id);
+            assert_eq!(core.len(), before, "len stays pinned at capacity");
+            assert!(core.contains(id), "the admitted id is resident");
+        }
+        assert_eq!(core.len(), 10);
+    }
+
+    #[test]
+    fn s3fifo_keeps_reused_ids_through_a_scan() {
+        // Hot ids re-accessed repeatedly must survive a long one-shot
+        // scan — the scan-resistance property that motivates S3-FIFO.
+        let mut core = PolicyCore::new(1000, 20, CachePolicy::S3Fifo);
+        let hot = [1u32, 2, 3];
+        for _ in 0..5 {
+            for &h in &hot {
+                drive(&mut core, h);
+            }
+        }
+        for id in 100..600u32 {
+            drive(&mut core, id);
+        }
+        for &h in &hot {
+            assert!(core.contains(h), "hot id {h} evicted by the scan");
+        }
+    }
+
+    #[test]
+    fn s3fifo_ghost_readmits_to_main() {
+        let mut core = PolicyCore::new(1000, 10, CachePolicy::S3Fifo);
+        // One-hit wonder: in, out via small, remembered by the ghost.
+        drive(&mut core, 7);
+        for id in 100..200u32 {
+            drive(&mut core, id);
+        }
+        assert!(!core.contains(7), "7 must have been evicted");
+        // Its return is a ghost hit and lands in main...
+        let (lk, ghost) = drive(&mut core, 7);
+        assert_eq!(lk, Lookup::Miss);
+        assert!(ghost, "ghost must remember a recently-evicted id");
+        assert!(core.contains(7));
+        // ...where it now survives another short scan (main evicts after
+        // small's probationers, and 7 gains lazy second chances on hits).
+        core.lookup(7);
+        for id in 300..320u32 {
+            drive(&mut core, id);
+        }
+        assert!(core.contains(7), "readmitted id evicted too eagerly");
+        // A *stale* ghost entry must not fire twice: evict 7 again via
+        // main (no ghost on main evictions), then readmit — no ghost hit.
+        for id in 400..700u32 {
+            drive(&mut core, id);
+        }
+        assert!(!core.contains(7));
+        let (_, ghost2) = drive(&mut core, 7);
+        assert!(!ghost2, "main evictions are not ghosted");
+    }
+
+    #[test]
+    fn clock_evicts_unreferenced_first() {
+        let mut core = PolicyCore::new(100, 4, CachePolicy::Clock);
+        for id in 0..4u32 {
+            drive(&mut core, id);
+        }
+        // Reference 0 and 2; the next two admissions must evict 1 and 3.
+        core.lookup(0);
+        core.lookup(2);
+        drive(&mut core, 10);
+        drive(&mut core, 11);
+        assert!(core.contains(0) && core.contains(2), "referenced ids survive");
+        assert!(!core.contains(1) && !core.contains(3));
+        assert_eq!(core.len(), 4);
+    }
+
+    #[test]
+    fn row_cache_serves_bitwise_identical_rows_and_counts() {
+        use crate::dataset::VectorSet;
+        use std::io::Write;
+        // Cold fixture identical in shape to storage::tests::cold_fixture.
+        let dir = std::env::temp_dir().join(format!("proxima-cache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache-rows.bin");
+        let (n, dim) = (32usize, 7usize);
+        let data: Vec<f32> = (0..n * dim).map(|i| (i as f32).sin()).collect();
+        let set = VectorSet::new(dim, data.clone());
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&[0xBB; 16]).unwrap();
+        for x in &data {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        f.sync_all().unwrap();
+        let cold = ColdVectors::new(std::fs::File::open(&path).unwrap(), 16, n, dim, &path);
+
+        // Capacity for exactly 4 padded rows.
+        let slot_bytes = (stride_for(dim) * 4) as u64;
+        let cache = RowCache::new(dim, n, 4 * slot_bytes, CachePolicy::S3Fifo);
+        assert_eq!(cache.capacity_rows(), 4);
+        assert_eq!(cache.arena_bytes(), 4 * slot_bytes);
+
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        // First touch: miss + cold read, admitted.
+        cache.read_through(3, &cold, &mut buf, &mut stats);
+        assert_eq!((stats.cache_hits, stats.cache_misses, stats.cold_reads), (0, 1, 1));
+        let first = buf.vals.as_slice().to_vec();
+        assert_eq!(&first[..dim], set.row(3));
+        assert!(first[dim..].iter().all(|&x| x == 0.0), "padded tail must be zero");
+        // Second touch: hit, no cold traffic, bitwise-identical row.
+        cache.read_through(3, &cold, &mut buf, &mut stats);
+        assert_eq!((stats.cache_hits, stats.cache_misses, stats.cold_reads), (1, 1, 1));
+        assert!(buf
+            .vals
+            .as_slice()
+            .iter()
+            .zip(&first)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Churn past capacity: hits + misses == lookups, evictions flow.
+        for id in 0..16u32 {
+            cache.read_through(id, &cold, &mut buf, &mut stats);
+            assert_eq!(&buf.vals.as_slice()[..dim], set.row(id as usize), "row {id}");
+        }
+        let st = cache.status();
+        assert_eq!(st.hits + st.misses, 18, "every lookup is a hit or a miss");
+        assert!(st.evictions >= 12, "churn past 4 slots must evict");
+        assert!(st.hit_rate() > 0.0 && st.hit_rate() < 1.0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn row_cache_clamps_slots_to_id_universe() {
+        // A huge capacity over few ids must not allocate an arena bigger
+        // than the id universe.
+        let cache = RowCache::new(4, 8, 1 << 30, CachePolicy::Clock);
+        assert_eq!(cache.capacity_rows(), 8);
+        // And a tiny capacity still holds one row.
+        let cache = RowCache::new(4, 8, 1, CachePolicy::S3Fifo);
+        assert_eq!(cache.capacity_rows(), 1);
+    }
+}

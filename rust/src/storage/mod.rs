@@ -50,9 +50,11 @@
 //! pipeline's per-query panic containment converts that into an
 //! `ApiError::Internal` for that query alone.
 
+pub mod cache;
 pub mod replay;
 
 use crate::dataset::VectorSet;
+use cache::{CachePolicy, CacheStatus, RowCache, DEFAULT_CACHE_BYTES};
 use crate::search::SearchStats;
 use crate::simd::{stride_for, AlignedBuf, AlignedVectors};
 use std::fs::File;
@@ -69,6 +71,11 @@ pub enum Residency {
     Cold,
     /// `hot_frac` of vectors pinned in DRAM, the rest from the file.
     Tiered,
+    /// Cold serving through an adaptive user-space row cache
+    /// ([`cache::RowCache`]) holding `capacity_bytes` of padded-row
+    /// slots — the hot set follows the query stream instead of a
+    /// build-time prefix.
+    Cached { capacity_bytes: u64 },
 }
 
 impl Residency {
@@ -78,15 +85,21 @@ impl Residency {
             Residency::Resident => "resident",
             Residency::Cold => "cold",
             Residency::Tiered => "tiered",
+            Residency::Cached { .. } => "cached",
         }
     }
 
-    /// Parse a wire/CLI name.
+    /// Parse a wire/CLI name. `cached` carries the default capacity
+    /// ([`DEFAULT_CACHE_BYTES`]); `--cache_mb` / the wire `cache_mb`
+    /// field override it downstream.
     pub fn parse(s: &str) -> Option<Residency> {
         match s {
             "resident" | "dram" => Some(Residency::Resident),
             "cold" | "file" => Some(Residency::Cold),
             "tiered" | "hot" => Some(Residency::Tiered),
+            "cached" => Some(Residency::Cached {
+                capacity_bytes: DEFAULT_CACHE_BYTES,
+            }),
             _ => None,
         }
     }
@@ -96,11 +109,23 @@ impl Residency {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OpenOptions {
     pub residency: Residency,
+    /// Eviction policy for `Cached` (and the tiered cache layer).
+    pub cache_policy: CachePolicy,
+    /// When set under `Tiered`, layer a [`cache::RowCache`] of this many
+    /// bytes under the pinned prefix — the static prefix becomes the
+    /// warm-start set, the cache the adaptive policy.
+    pub tiered_cache_bytes: Option<u64>,
+    /// Enable LSH entry-point warm starts when the artifact carries an
+    /// LSH section (ignored otherwise).
+    pub lsh_start: bool,
 }
 
 impl OpenOptions {
     pub fn with_residency(residency: Residency) -> OpenOptions {
-        OpenOptions { residency }
+        OpenOptions {
+            residency,
+            ..OpenOptions::default()
+        }
     }
 }
 
@@ -292,11 +317,15 @@ enum Tier {
     /// All rows on disk; OS page cache as the cold tier.
     Cold(ColdVectors),
     /// Rows `0..hot.len()` pinned in DRAM (the §IV-E hot prefix), the
-    /// rest on disk.
+    /// rest on disk — optionally through an adaptive row cache, making
+    /// the prefix a warm start rather than the whole policy.
     Tiered {
         hot: AlignedVectors,
         cold: ColdVectors,
+        cache: Option<RowCache>,
     },
+    /// All rows on disk, served through an adaptive row cache.
+    Cached { cache: RowCache, cold: ColdVectors },
 }
 
 impl VectorStore {
@@ -324,7 +353,38 @@ impl VectorStore {
             tier: Tier::Tiered {
                 hot: AlignedVectors::from_set(hot),
                 cold,
+                cache: None,
             },
+        }
+    }
+
+    /// Tiered store with an adaptive row cache of `capacity_bytes`
+    /// under the pinned prefix: prefix hits stay free borrows, cold
+    /// misses go through the cache.
+    pub fn tiered_cached(
+        hot: &VectorSet,
+        cold: ColdVectors,
+        capacity_bytes: u64,
+        policy: CachePolicy,
+    ) -> VectorStore {
+        let cache = RowCache::new(cold.dim(), cold.len(), capacity_bytes, policy);
+        VectorStore {
+            stub: VectorSet::zeros(0, cold.dim()),
+            tier: Tier::Tiered {
+                hot: AlignedVectors::from_set(hot),
+                cold,
+                cache: Some(cache),
+            },
+        }
+    }
+
+    /// Cached-cold store: every row lives on disk; an adaptive
+    /// [`RowCache`] of `capacity_bytes` absorbs the hot set.
+    pub fn cached(cold: ColdVectors, capacity_bytes: u64, policy: CachePolicy) -> VectorStore {
+        let cache = RowCache::new(cold.dim(), cold.len(), capacity_bytes, policy);
+        VectorStore {
+            stub: VectorSet::zeros(0, cold.dim()),
+            tier: Tier::Cached { cache, cold },
         }
     }
 
@@ -333,7 +393,25 @@ impl VectorStore {
             Tier::Resident(_) => Residency::Resident,
             Tier::Cold(_) => Residency::Cold,
             Tier::Tiered { .. } => Residency::Tiered,
+            Tier::Cached { cache, .. } => Residency::Cached {
+                capacity_bytes: cache.capacity_bytes(),
+            },
         }
+    }
+
+    /// The adaptive row cache serving this store's cold misses, if any
+    /// (`Cached`, or `Tiered` opened with a cache layer).
+    pub fn row_cache(&self) -> Option<&RowCache> {
+        match &self.tier {
+            Tier::Cached { cache, .. } => Some(cache),
+            Tier::Tiered { cache, .. } => cache.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Counter snapshot of the row cache, for the wire `status` op.
+    pub fn cache_status(&self) -> Option<CacheStatus> {
+        self.row_cache().map(|c| c.status())
     }
 
     pub fn len(&self) -> usize {
@@ -341,6 +419,7 @@ impl VectorStore {
             Tier::Resident(s) => s.len(),
             Tier::Cold(c) => c.len(),
             Tier::Tiered { cold, .. } => cold.len(),
+            Tier::Cached { cold, .. } => cold.len(),
         }
     }
 
@@ -365,7 +444,7 @@ impl VectorStore {
     pub fn n_hot(&self) -> usize {
         match &self.tier {
             Tier::Resident(s) => s.len(),
-            Tier::Cold(_) => 0,
+            Tier::Cold(_) | Tier::Cached { .. } => 0,
             Tier::Tiered { hot, .. } => hot.len(),
         }
     }
@@ -373,12 +452,14 @@ impl VectorStore {
     /// DRAM bytes pinned by this store's vector payloads (padded rows —
     /// what the process actually maps) — the number the wire `status`
     /// op reports as `resident_bytes`. Under `Tiered` it scales with
-    /// `hot_frac`, not `n_base`.
+    /// `hot_frac`, not `n_base`; cache slot arenas count too (they are
+    /// pinned DRAM, just adaptively filled).
     pub fn resident_bytes(&self) -> u64 {
+        let cache_bytes = self.row_cache().map_or(0, |c| c.arena_bytes());
         match &self.tier {
             Tier::Resident(s) => s.padded_bytes(),
-            Tier::Cold(_) => 0,
-            Tier::Tiered { hot, .. } => hot.padded_bytes(),
+            Tier::Cold(_) | Tier::Cached { .. } => cache_bytes,
+            Tier::Tiered { hot, .. } => hot.padded_bytes() + cache_bytes,
         }
     }
 
@@ -407,14 +488,21 @@ impl VectorStore {
     pub fn row<'r>(&'r self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32] {
         match &self.tier {
             Tier::Resident(s) => s.row(id as usize),
-            Tier::Tiered { hot, cold } => {
+            Tier::Tiered { hot, cold, cache } => {
                 if (id as usize) < hot.len() {
                     hot.row(id as usize)
+                } else if let Some(cache) = cache {
+                    cache.read_through(id, cold, buf, stats);
+                    buf.vals.as_slice()
                 } else {
                     stats.cold_reads += 1;
                     stats.cold_bytes += cold.dim() as u64 * 4;
                     cold.read_row(id, buf)
                 }
+            }
+            Tier::Cached { cache, cold } => {
+                cache.read_through(id, cold, buf, stats);
+                buf.vals.as_slice()
             }
             Tier::Cold(c) => {
                 stats.cold_reads += 1;
@@ -431,6 +519,7 @@ impl VectorStore {
             Tier::Resident(s) => Ok(s.to_set()),
             Tier::Cold(c) => c.read_all(),
             Tier::Tiered { cold, .. } => cold.read_all(),
+            Tier::Cached { cold, .. } => cold.read_all(),
         }
     }
 }
@@ -616,8 +705,68 @@ mod tests {
         for r in [Residency::Resident, Residency::Cold, Residency::Tiered] {
             assert_eq!(Residency::parse(r.name()), Some(r));
         }
+        // `cached` carries the default capacity through parse; any other
+        // capacity still names itself `cached` on the wire.
+        assert_eq!(
+            Residency::parse("cached"),
+            Some(Residency::Cached {
+                capacity_bytes: DEFAULT_CACHE_BYTES
+            })
+        );
+        assert_eq!(Residency::Cached { capacity_bytes: 123 }.name(), "cached");
         assert_eq!(Residency::parse("mmap"), None);
         assert_eq!(Residency::default(), Residency::Resident);
+    }
+
+    #[test]
+    fn cached_store_serves_bitwise_rows_and_meters_misses_once() {
+        let (cold, set, path) = cold_fixture(12, 4);
+        let slot = (stride_for(4) * 4) as u64;
+        let store = VectorStore::cached(cold, 4 * slot, cache::CachePolicy::S3Fifo);
+        assert_eq!(
+            store.residency(),
+            Residency::Cached {
+                capacity_bytes: 4 * slot
+            }
+        );
+        assert_eq!(store.n_hot(), 0);
+        assert_eq!(store.resident_bytes(), 4 * slot, "slot arena is pinned DRAM");
+        assert!(store.resident_rows().is_none());
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        // Miss then hit: one cold read total, rows bitwise-equal.
+        let first = store.row(5, &mut buf, &mut stats).to_vec();
+        assert_eq!(&first[..4], set.row(5));
+        let again = store.row(5, &mut buf, &mut stats);
+        assert!(again.iter().zip(&first).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(stats.cold_reads, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cache_misses, 1);
+        let st = store.cache_status().expect("cached store has a cache");
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(store.materialize().unwrap().data, set.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tiered_cache_layer_covers_cold_misses_only() {
+        let (cold, set, path) = cold_fixture(10, 4);
+        let hot = VectorSet::new(4, set.data[..3 * 4].to_vec());
+        let slot = (stride_for(4) * 4) as u64;
+        let store = VectorStore::tiered_cached(&hot, cold, 2 * slot, cache::CachePolicy::Clock);
+        assert_eq!(store.residency(), Residency::Tiered, "tiered stays tiered");
+        assert_eq!(store.n_hot(), 3);
+        assert_eq!(store.resident_bytes(), 3 * 16 * 4 + 2 * slot);
+        let mut buf = ReadBuf::new();
+        let mut stats = SearchStats::default();
+        // Prefix hit: free borrow, no cache involvement.
+        store.row(1, &mut buf, &mut stats);
+        assert_eq!((stats.cache_hits, stats.cache_misses, stats.cold_reads), (0, 0, 0));
+        // Cold miss caches; the repeat is a cache hit.
+        assert_eq!(&store.row(8, &mut buf, &mut stats)[..4], set.row(8));
+        assert_eq!(&store.row(8, &mut buf, &mut stats)[..4], set.row(8));
+        assert_eq!((stats.cache_hits, stats.cache_misses, stats.cold_reads), (1, 1, 1));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! Adaptive hot set acceptance (ISSUE 8), LSH half: per-query LSH
+//! entry-point warm starts must (a) reduce mean hops at equal recall on
+//! a clustered dataset — the walk starts O(1) hash probes from a near
+//! neighbor instead of the fixed medoid — and (b) stay bitwise-identical
+//! ACROSS residencies when enabled uniformly, exactly like every other
+//! traversal feature. Both gates are counter-based (hops, recall), not
+//! wall-clock.
+
+use proxima::api::{QueryOptions, QueryRequest, SearchMode};
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::SearchService;
+use proxima::dataset::ground_truth::brute_force;
+use proxima::dataset::{recall_at_k, Dataset, VectorSet};
+use proxima::distance::Metric;
+use proxima::graph::vamana;
+use proxima::search::beam::{accurate_beam_search, SearchContext};
+use proxima::search::lsh_start::LshIndex;
+use proxima::storage::cache::CachePolicy;
+use proxima::storage::{OpenOptions, Residency};
+use proxima::util::rng::Xoshiro256pp;
+
+/// 8 well-separated corner clusters in 8-d (centers at ±10 per
+/// coordinate by the cluster id's bits, unit gaussian jitter); queries
+/// land near the centers. The medoid entry point sits in ONE cluster,
+/// so fixed-entry walks must cross clusters while LSH starts inside the
+/// right one.
+fn corner_clusters(per_cluster: usize, n_queries: usize, seed: u64) -> Dataset {
+    let dim = 8usize;
+    let n_clusters = 8usize;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let center = |c: usize, j: usize| -> f32 {
+        if (c >> j) & 1 == 1 {
+            10.0
+        } else {
+            -10.0
+        }
+    };
+    let mut base = Vec::with_capacity(n_clusters * per_cluster * dim);
+    for c in 0..n_clusters {
+        for _ in 0..per_cluster {
+            for j in 0..dim {
+                base.push(center(c, j) + rng.next_gaussian() as f32);
+            }
+        }
+    }
+    let mut queries = Vec::with_capacity(n_queries * dim);
+    for qi in 0..n_queries {
+        let c = qi % n_clusters;
+        for j in 0..dim {
+            queries.push(center(c, j) + rng.next_gaussian() as f32);
+        }
+    }
+    Dataset {
+        name: "corner-clusters".into(),
+        metric: Metric::L2,
+        base: VectorSet::new(dim, base),
+        queries: VectorSet::new(dim, queries),
+    }
+}
+
+/// ISSUE 8 acceptance: LSH warm starts reduce MEAN HOPS vs the fixed
+/// entry point at equal recall, asserted via counters.
+#[test]
+fn lsh_warm_starts_reduce_mean_hops_at_equal_recall() {
+    let ds = corner_clusters(50, 40, 91);
+    let g = vamana::build(
+        &ds.base,
+        ds.metric,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 91,
+        },
+    );
+    let lsh = LshIndex::build(&ds.base, 12, 0xC0FFEE);
+    let gt = brute_force(&ds, 10);
+
+    let ctx_plain = SearchContext {
+        base: &ds.base,
+        metric: ds.metric,
+        graph: &g,
+        codes: None,
+        gap: None,
+        storage: None,
+        online: None,
+        lsh: None,
+    };
+    let ctx_lsh = SearchContext {
+        lsh: Some(&lsh),
+        ..ctx_plain
+    };
+
+    let (mut hops_plain, mut hops_lsh) = (0usize, 0usize);
+    let (mut recall_plain, mut recall_lsh) = (0.0f64, 0.0f64);
+    let mut probes = 0usize;
+    for qi in 0..ds.n_queries() {
+        let q = ds.queries.row(qi);
+        let a = accurate_beam_search(&ctx_plain, q, 10, 20, false);
+        let b = accurate_beam_search(&ctx_lsh, q, 10, 20, false);
+        hops_plain += a.stats.hops;
+        hops_lsh += b.stats.hops;
+        recall_plain += recall_at_k(&a.ids, gt.row(qi), 10);
+        recall_lsh += recall_at_k(&b.ids, gt.row(qi), 10);
+        assert_eq!(a.stats.lsh_probes, 0, "no LSH context, no probes");
+        probes += b.stats.lsh_probes;
+    }
+    let n = ds.n_queries() as f64;
+    assert!(probes > 0, "warm starts must actually probe buckets");
+    assert!(
+        hops_lsh < hops_plain,
+        "LSH warm starts must cut mean hops: {} !< {} over {} queries",
+        hops_lsh,
+        hops_plain,
+        ds.n_queries()
+    );
+    assert!(
+        recall_lsh / n >= recall_plain / n - 1e-9,
+        "hop savings must not cost recall: {} vs {}",
+        recall_lsh / n,
+        recall_plain / n
+    );
+    assert!(
+        recall_plain / n > 0.9,
+        "fixture sanity: the clustered graph should be searchable ({})",
+        recall_plain / n
+    );
+}
+
+/// With warm starts enabled UNIFORMLY, every residency — resident,
+/// cold, cached — answers every mode bitwise-identically: the LSH seed
+/// set is a pure function of the persisted signatures and the query,
+/// never of where the vectors live.
+#[test]
+fn lsh_outputs_are_bitwise_identical_across_residencies() {
+    let ds = corner_clusters(50, 24, 57);
+    let mut built = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 57,
+        },
+        &PqParams {
+            m: 4,
+            c: 16,
+            train_sample: 400,
+            kmeans_iters: 5,
+        },
+        SearchParams {
+            l: 40,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    );
+    assert!(built.build_lsh(10), "resident build must accept LSH");
+    let path = std::env::temp_dir().join(format!("adaptive-hot-lsh-{}.pxa", std::process::id()));
+    built.save(&path).unwrap();
+
+    let slot = proxima::simd::stride_for(ds.dim()) as u64 * 4;
+    let open = |residency: Residency| {
+        SearchService::open_with(
+            &path,
+            built.params,
+            false,
+            &OpenOptions {
+                residency,
+                cache_policy: CachePolicy::S3Fifo,
+                tiered_cache_bytes: None,
+                lsh_start: true,
+            },
+        )
+        .unwrap_or_else(|e| panic!("open {} failed: {e}", residency.name()))
+    };
+    let resident = open(Residency::Resident);
+    let cold = open(Residency::Cold);
+    let cached = open(Residency::Cached {
+        capacity_bytes: 40 * slot,
+    });
+    assert!(resident.lsh_active() && cold.lsh_active() && cached.lsh_active());
+
+    for mode in [SearchMode::Accurate, SearchMode::PqAdt, SearchMode::Hybrid] {
+        let opts = QueryOptions {
+            mode,
+            want_stats: true,
+            ..Default::default()
+        };
+        for qi in 0..ds.n_queries() {
+            let req = QueryRequest::single(ds.queries.row(qi), 10).with_options(opts);
+            let want = resident.query(&req).unwrap();
+            assert!(
+                want.stats.as_ref().unwrap().lsh_probes > 0,
+                "{mode:?} query {qi}: warm starts should be live"
+            );
+            for svc in [&cold, &cached] {
+                let got = svc.query(&req).unwrap();
+                let name = svc.storage.residency().name();
+                assert_eq!(
+                    got.results[0].ids, want.results[0].ids,
+                    "{mode:?} query {qi}: {name} ids diverge with LSH starts on"
+                );
+                let a: Vec<u32> = want.results[0].dists.iter().map(|d| d.to_bits()).collect();
+                let b: Vec<u32> = got.results[0].dists.iter().map(|d| d.to_bits()).collect();
+                assert_eq!(a, b, "{mode:?} query {qi}: {name} dists not bitwise equal");
+                assert_eq!(
+                    got.stats.as_ref().unwrap().lsh_probes,
+                    want.stats.as_ref().unwrap().lsh_probes,
+                    "{mode:?} query {qi}: {name} probe count diverges"
+                );
+            }
+        }
+    }
+    // The service-level counter aggregated the probes.
+    use std::sync::atomic::Ordering;
+    assert!(resident.stats.lsh_probes.load(Ordering::Relaxed) > 0);
+
+    // An artifact WITHOUT an LSH section still opens with --lsh_start
+    // requested: warm starts simply stay off (logged, not an error).
+    let plain = corner_clusters(30, 4, 5);
+    let no_lsh = SearchService::build(
+        &plain,
+        &GraphParams {
+            r: 8,
+            build_l: 16,
+            alpha: 1.2,
+            seed: 5,
+        },
+        &PqParams {
+            m: 4,
+            c: 16,
+            train_sample: 240,
+            kmeans_iters: 4,
+        },
+        SearchParams::default(),
+        false,
+    );
+    let path2 =
+        std::env::temp_dir().join(format!("adaptive-hot-nolsh-{}.pxa", std::process::id()));
+    no_lsh.save(&path2).unwrap();
+    let svc = SearchService::open_with(
+        &path2,
+        no_lsh.params,
+        false,
+        &OpenOptions {
+            residency: Residency::Resident,
+            cache_policy: CachePolicy::S3Fifo,
+            tiered_cache_bytes: None,
+            lsh_start: true,
+        },
+    )
+    .unwrap();
+    assert!(!svc.lsh_active(), "no section → warm starts stay off");
+    let out = svc.query(&QueryRequest::single(plain.queries.row(0), 5)).unwrap();
+    assert_eq!(out.results[0].ids.len(), 5);
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&path2).ok();
+}

@@ -61,6 +61,7 @@ fn ctx(f: &Fixture) -> SearchContext<'_> {
         gap: None,
         storage: None,
         online: None,
+        lsh: None,
     }
 }
 

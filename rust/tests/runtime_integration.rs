@@ -57,6 +57,35 @@ fn adt_xla_matches_native_all_dims_metrics() {
 }
 
 #[test]
+fn adt_batch_is_bitwise_identical_to_per_distinct_calls() {
+    // The staged batch path submits ALL distinct queries to the runtime
+    // thread in one request; the device still runs the per-query adt_*
+    // executable, so the concatenated tables must match the per-distinct
+    // path BIT FOR BIT — same executable, same inputs, same bias fold.
+    let Some(rt) = runtime() else { return };
+    let ds = tiny_uniform(400, 128, Metric::L2, 8);
+    let cb = PqCodebook::train(&ds.base, Metric::L2, 32, 256, 400, 6, 8);
+    let dist = XlaDistance::new(&rt, Metric::L2, 128, 32, 256).unwrap();
+    let n = 7usize;
+    let mut flat = Vec::with_capacity(n * 128);
+    for qi in 0..n {
+        flat.extend_from_slice(ds.queries.row(qi));
+    }
+    let batched = dist.build_adt_batch(&cb, &flat, n).unwrap();
+    assert_eq!(batched.len(), n * 32 * 256);
+    for qi in 0..n {
+        let single = dist.build_adt(&cb, ds.queries.row(qi)).unwrap();
+        let got = &batched[qi * single.table.len()..(qi + 1) * single.table.len()];
+        assert!(
+            got.iter()
+                .zip(&single.table)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "query {qi}: batched ADT table diverged bitwise from the per-distinct call"
+        );
+    }
+}
+
+#[test]
 fn rerank_xla_matches_native() {
     let Some(rt) = runtime() else { return };
     for metric in [Metric::L2, Metric::Angular] {

@@ -13,6 +13,7 @@ use proxima::dataset::synth::tiny_uniform;
 use proxima::dataset::Dataset;
 use proxima::distance::Metric;
 use proxima::reorder::{ReorderedIndex, VisitProfile};
+use proxima::storage::cache::CachePolicy;
 use proxima::storage::{OpenOptions, Residency};
 use std::path::PathBuf;
 
@@ -194,6 +195,213 @@ fn tiered_residency_pins_hot_frac_not_n_base_on_reordered_artifacts() {
     std::fs::remove_file(&path).ok();
 }
 
+/// ISSUE 8 acceptance: the adaptive-cache residencies — `cached` (cold
+/// + S3-FIFO row cache), `cached` with the CLOCK fallback, and `tiered`
+/// with a cache layered under the pinned prefix — answer every mode
+/// bitwise-identically to resident serving, and their hit/miss counters
+/// obey the invariants (every miss is a metered cold read; hits appear
+/// once the working set re-reads rows; evictions only under pressure).
+#[test]
+fn cached_residencies_answer_bitwise_identically_in_every_mode() {
+    let (ds, built) = service(17);
+    let path = tmpdir().join("cached-parity.pxa");
+    built.save(&path).unwrap();
+
+    let slot = proxima::simd::stride_for(ds.dim()) as u64 * 4;
+    // 40 of 400 rows fit: small enough to force evictions under search.
+    let cap = 40 * slot;
+    let resident = SearchService::open(&path, built.params, false).unwrap();
+    let cached_opts = |policy| OpenOptions {
+        residency: Residency::Cached {
+            capacity_bytes: cap,
+        },
+        cache_policy: policy,
+        tiered_cache_bytes: None,
+        lsh_start: false,
+    };
+    let opened = vec![
+        SearchService::open_with(&path, built.params, false, &cached_opts(CachePolicy::S3Fifo))
+            .unwrap(),
+        SearchService::open_with(&path, built.params, false, &cached_opts(CachePolicy::Clock))
+            .unwrap(),
+        SearchService::open_with(
+            &path,
+            built.params,
+            false,
+            &OpenOptions {
+                residency: Residency::Tiered,
+                cache_policy: CachePolicy::S3Fifo,
+                tiered_cache_bytes: Some(cap),
+                lsh_start: false,
+            },
+        )
+        .unwrap(),
+    ];
+
+    for mode in MODES {
+        let opts = QueryOptions {
+            mode,
+            want_stats: true,
+            ..Default::default()
+        };
+        // Two passes so the second revisits cached rows (hits > 0).
+        for pass in 0..2 {
+            for qi in 0..ds.n_queries() {
+                let req = QueryRequest::single(ds.queries.row(qi), 10).with_options(opts);
+                let want = resident.query(&req).unwrap();
+                for svc in &opened {
+                    let got = svc.query(&req).unwrap();
+                    let name = svc.storage.residency().name();
+                    assert_eq!(
+                        got.results[0].ids, want.results[0].ids,
+                        "{mode:?} pass {pass} query {qi}: {name} ids diverge"
+                    );
+                    let a: Vec<u32> =
+                        want.results[0].dists.iter().map(|d| d.to_bits()).collect();
+                    let b: Vec<u32> =
+                        got.results[0].dists.iter().map(|d| d.to_bits()).collect();
+                    assert_eq!(
+                        a, b,
+                        "{mode:?} pass {pass} query {qi}: {name} dists not bitwise equal"
+                    );
+                    // Per-query invariant: a cache miss IS a cold read.
+                    let stats = got.stats.as_ref().unwrap();
+                    assert_eq!(
+                        stats.cache_misses, stats.cold_reads,
+                        "{mode:?} {name}: every miss must be a metered cold read"
+                    );
+                }
+            }
+        }
+    }
+
+    use std::sync::atomic::Ordering;
+    for svc in &opened {
+        let name = svc.storage.residency().name();
+        let cs = svc.storage.cache_status().expect("cache residency");
+        // Epoch counters and the cache's own counters must agree.
+        assert_eq!(
+            cs.hits,
+            svc.stats.cache_hits.load(Ordering::Relaxed),
+            "{name}: hit counters disagree"
+        );
+        assert_eq!(
+            cs.misses,
+            svc.stats.cache_misses.load(Ordering::Relaxed),
+            "{name}: miss counters disagree"
+        );
+        assert!(cs.hits > 0, "{name}: repeated queries must hit the cache");
+        assert!(cs.misses > 0, "{name}: a 10% cache must still miss");
+        assert!(
+            cs.evictions > 0,
+            "{name}: an over-subscribed cache must evict"
+        );
+        assert!(cs.evictions <= cs.misses, "{name}: evictions outnumber admissions");
+        assert!(cs.hit_rate() > 0.0 && cs.hit_rate() < 1.0);
+        assert_eq!(cs.capacity_bytes, cap);
+        // Ghost readmissions only exist under S3-FIFO.
+        if cs.policy == CachePolicy::Clock {
+            assert_eq!(cs.ghost_hits, 0, "CLOCK has no ghost queue");
+        }
+    }
+    // The cached stores pin only the slot arena, not the base.
+    assert!(opened[0].storage.resident_bytes() <= cap + slot);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Cached residencies on a REORDER-bearing artifact: answers stay in
+/// the ORIGINAL id space and bitwise-match resident serving, and
+/// layering the cache under the tiered prefix strictly reduces cold
+/// reads vs the same prefix without a cache.
+#[test]
+fn cached_residencies_match_resident_on_reordered_artifacts() {
+    let (ds, svc) = service(43);
+    let base = svc.resident_base().unwrap();
+    let profile = VisitProfile::measure(
+        &base,
+        &svc.graph,
+        &svc.codebook,
+        &svc.codes,
+        &svc.params,
+        20,
+        43,
+    );
+    let re = ReorderedIndex::build(&svc.graph, &svc.codes, &profile, 0.1);
+    let path = tmpdir().join("cached-reordered.pxa");
+    re.write_artifact(&svc.spec, &base, &svc.codebook, &path).unwrap();
+
+    let slot = proxima::simd::stride_for(ds.dim()) as u64 * 4;
+    let cap = 40 * slot;
+    let resident = SearchService::open(&path, svc.params, false).unwrap();
+    let tiered = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions::with_residency(Residency::Tiered),
+    )
+    .unwrap();
+    let tiered_cached = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions {
+            residency: Residency::Tiered,
+            cache_policy: CachePolicy::S3Fifo,
+            tiered_cache_bytes: Some(cap),
+            lsh_start: false,
+        },
+    )
+    .unwrap();
+    let cached = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions {
+            residency: Residency::Cached {
+                capacity_bytes: cap,
+            },
+            cache_policy: CachePolicy::S3Fifo,
+            tiered_cache_bytes: None,
+            lsh_start: false,
+        },
+    )
+    .unwrap();
+
+    for mode in MODES {
+        let opts = QueryOptions {
+            mode,
+            want_stats: true,
+            ..Default::default()
+        };
+        for _pass in 0..2 {
+            for qi in 0..ds.n_queries() {
+                let req = QueryRequest::single(ds.queries.row(qi), 10).with_options(opts);
+                let want = resident.query(&req).unwrap();
+                for svc in [&tiered_cached, &cached] {
+                    let got = svc.query(&req).unwrap();
+                    assert_eq!(
+                        got.results[0].ids,
+                        want.results[0].ids,
+                        "{mode:?} query {qi}: {} ids diverge on reordered artifact",
+                        svc.storage.residency().name()
+                    );
+                    assert_eq!(got.results[0].dists, want.results[0].dists);
+                }
+                let _ = tiered.query(&req).unwrap();
+            }
+        }
+    }
+    use std::sync::atomic::Ordering;
+    let plain = tiered.stats.cold_reads.load(Ordering::Relaxed);
+    let layered = tiered_cached.stats.cold_reads.load(Ordering::Relaxed);
+    assert!(
+        layered < plain,
+        "cache under the tiered prefix must absorb cold reads: {layered} !< {plain}"
+    );
+    assert!(tiered_cached.storage.cache_status().unwrap().hits > 0);
+    std::fs::remove_file(&path).ok();
+}
+
 /// Storage failure paths are typed: a BASE section truncated or
 /// corrupted on disk is rejected at cold open (the streaming validation
 /// pass), and a file shrinking AFTER a cold open turns the affected
@@ -307,6 +515,7 @@ fn cold_open_rejects_unnormalized_angular_bases() {
         codes: &svc.codes,
         reorder: None,
         mapping: None,
+        lsh: None,
     }
     .write(&path)
     .unwrap();

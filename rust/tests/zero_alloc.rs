@@ -67,6 +67,7 @@ fn steady_state_query_path_does_not_allocate() {
         gap: None,
         storage: None,
         online: None,
+        lsh: None,
     };
     let params = SearchParams {
         l: 60,
@@ -174,6 +175,7 @@ fn steady_state_cold_reads_do_not_allocate() {
         gap: None,
         storage: Some(&cold.storage),
         online: None,
+        lsh: None,
     };
     let params = SearchParams {
         l: 60,
@@ -232,6 +234,126 @@ fn steady_state_cold_reads_do_not_allocate() {
 }
 
 #[test]
+fn steady_state_cached_reads_do_not_allocate() {
+    // The adaptive cold-row cache must not relax the cold-tier bar: with
+    // `Cached` residency, a measured pass mixing cache HITS (arena memcpy
+    // into the pooled ReadBuf) and MISSES (positioned read + admit, with
+    // evictions recycling slots) performs zero heap allocations — all
+    // policy queues and the slot arena are pre-sized at open.
+    use proxima::config::PqParams;
+    use proxima::coordinator::SearchService;
+    use proxima::storage::cache::CachePolicy;
+    use proxima::storage::{OpenOptions, Residency};
+
+    let ds = tiny_uniform(400, 16, Metric::L2, 83);
+    let svc = SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 83,
+        },
+        &PqParams {
+            m: 8,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 5,
+        },
+        SearchParams {
+            l: 60,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    );
+    let path = std::env::temp_dir().join(format!("zero-alloc-cached-{}.pxa", std::process::id()));
+    svc.save(&path).unwrap();
+    // Half the rows fit: steady state keeps evicting, so the measured
+    // pass exercises hit, miss and slot-recycle paths together.
+    let slot_bytes = proxima::simd::stride_for(ds.dim()) as u64 * 4;
+    let cached = SearchService::open_with(
+        &path,
+        svc.params,
+        false,
+        &OpenOptions {
+            residency: Residency::Cached {
+                capacity_bytes: 200 * slot_bytes,
+            },
+            cache_policy: CachePolicy::S3Fifo,
+            tiered_cache_bytes: None,
+            lsh_start: false,
+        },
+    )
+    .unwrap();
+    let ctx = SearchContext {
+        base: cached.storage.base_stub(),
+        metric: cached.metric,
+        graph: &cached.graph,
+        codes: Some(&cached.codes),
+        gap: None,
+        storage: Some(&cached.storage),
+        online: None,
+        lsh: None,
+    };
+    let params = SearchParams {
+        l: 60,
+        k: 10,
+        ..Default::default()
+    };
+    let mut scratch = QueryScratch::new();
+    let mut adt = Adt::default();
+    let mut out = SearchOutput::default();
+    for _ in 0..2 {
+        for qi in 0..ds.n_queries() {
+            let q = ds.queries.row(qi);
+            cached.codebook.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+        }
+    }
+
+    let before = THREAD_ALLOCS.with(|c| c.get());
+    let (mut hits, mut misses) = (0usize, 0usize);
+    for qi in 0..ds.n_queries() {
+        let q = ds.queries.row(qi);
+        cached.codebook.build_adt_into(q, &mut adt);
+        proxima_search_into(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        hits += out.stats.cache_hits;
+        misses += out.stats.cache_misses;
+    }
+    let allocs = THREAD_ALLOCS.with(|c| c.get()) - before;
+    assert!(hits > 0, "the measured pass must serve some rows from cache");
+    assert!(misses > 0, "200 of 400 rows: the pass must also miss");
+    assert_eq!(
+        allocs, 0,
+        "steady-state CACHED query path allocated {allocs} times over {} queries \
+         ({hits} hits / {misses} misses)",
+        ds.n_queries()
+    );
+    let st = cached.storage.cache_status().unwrap();
+    assert!(st.evictions > 0, "half-capacity churn must recycle slots");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn steady_state_resident_store_aligned_path_does_not_allocate() {
     // The SIMD-padded service path (storage: Some over a fully-resident
     // aligned store, query padded into scratch.qpad each call) must hold
@@ -263,6 +385,7 @@ fn steady_state_resident_store_aligned_path_does_not_allocate() {
         gap: None,
         storage: Some(&store),
         online: None,
+        lsh: None,
     };
     let params = SearchParams {
         l: 60,
