@@ -24,7 +24,11 @@
 //! * in-process calls — `SearchService::query(&req)`;
 //! * the dynamic batcher — each queued request keeps its own options;
 //! * the TCP wire — `Client::search` (v1 compat, single query) and
-//!   `Client::search_batch` (v2: N queries in ONE round-trip).
+//!   `Client::search_batch` (v2: N queries in ONE round-trip);
+//! * the binary plane — [`proxima::net::BinClient`] speaks the
+//!   length-prefixed PXW3 frame format on the SAME port (the server
+//!   sniffs the first byte) and pipelines: many request ids in flight
+//!   on one connection, answers matched back by id.
 //!
 //! # The index lifecycle
 //!
@@ -71,7 +75,8 @@
 use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
-use proxima::coordinator::server::{Client, Server};
+use proxima::coordinator::server::Client;
+use proxima::net::{BinClient, NetConfig, NetServer};
 use proxima::coordinator::{loadgen, SearchService, ServiceCell};
 use proxima::dataset::ground_truth::brute_force;
 use proxima::dataset::synth::SynthSpec;
@@ -115,8 +120,11 @@ fn main() -> proxima::util::error::Result<()> {
             max_wait: std::time::Duration::from_millis(2),
         },
     );
-    let server = Server::start(cell, handle, 0)?;
-    println!("[serve] listening on {}", server.addr);
+    let server = NetServer::start(cell, handle, NetConfig::default())?;
+    println!(
+        "[serve] listening on {} (JSON + PXW3 binary planes, one port)",
+        server.addr
+    );
 
     // Closed-loop clients.
     let addr = server.addr;
@@ -190,6 +198,99 @@ fn main() -> proxima::util::error::Result<()> {
         rep.p50_us,
         rep.p99_us,
         rep.p50_us / batch as f64
+    );
+
+    // --- The binary plane (PXW3) on the SAME port: length-prefixed
+    // frames instead of JSON lines, matched back by request id, so one
+    // connection can hold many requests in flight. Serial round-trips
+    // first, then the identical queries pipelined `depth` deep — same
+    // answers, fewer round-trip stalls.
+    let depth = batch.max(4).min(ds.n_queries());
+    let mut bin = BinClient::connect(addr)?;
+    let t = std::time::Instant::now();
+    let mut serial = Vec::with_capacity(depth);
+    for qi in 0..depth {
+        let req = proxima::api::QueryRequest::single(ds.queries.row(qi), k);
+        let resp = bin
+            .query(&req)?
+            .map_err(|e| proxima::anyhow!("binary query failed: {}", e.message))?;
+        serial.push(resp);
+    }
+    let serial_us = t.elapsed().as_secs_f64() * 1e6;
+    let t = std::time::Instant::now();
+    let mut in_flight = std::collections::HashMap::new();
+    for qi in 0..depth {
+        let req = proxima::api::QueryRequest::single(ds.queries.row(qi), k);
+        in_flight.insert(bin.send_query(&req, 0)?, qi);
+    }
+    let mut pipelined: Vec<Option<proxima::api::QueryResponse>> = vec![None; depth];
+    while !in_flight.is_empty() {
+        let (rid, outcome) = bin.recv()?;
+        let qi = in_flight
+            .remove(&rid)
+            .ok_or_else(|| proxima::anyhow!("unexpected response id {rid}"))?;
+        match outcome {
+            Ok(proxima::net::frame::FrameBody::QueryOk { response }) => {
+                pipelined[qi] = Some(response);
+            }
+            Ok(_) => proxima::bail!("pipelined query {qi}: non-query response"),
+            Err(e) => proxima::bail!("pipelined query {qi} failed: {}", e.message),
+        }
+    }
+    let pipelined_us = t.elapsed().as_secs_f64() * 1e6;
+    println!("\n=== binary plane (PXW3 frames, {depth} in flight) ===");
+    println!("serial round-trips  : {serial_us:.0} us total");
+    println!(
+        "pipelined           : {pipelined_us:.0} us total ({:.1}x)",
+        serial_us / pipelined_us.max(1.0)
+    );
+    for (qi, resp) in pipelined.iter().enumerate() {
+        let resp = resp.as_ref().expect("every in-flight id must be answered");
+        assert_eq!(
+            resp.results, serial[qi].results,
+            "pipelined answers must match serial answers bitwise"
+        );
+    }
+    println!("pipelining parity   : {depth} in-flight answers match serial round-trips");
+
+    // Open-loop Poisson sweep on the binary plane: offered load is set
+    // by the arrival schedule, not by round-trip completion, so the
+    // knee — the highest offered rate still achieved (≥90%) without
+    // shedding (≤1%) — is visible instead of hidden by closed-loop
+    // self-throttling. The `wire_knee` line is the machine-readable
+    // record EXPERIMENTS.md tracks; `json_qps` is the closed-loop v1
+    // figure from the first phase, same queries, same k.
+    let json_qps = served as f64 / wall;
+    let rates = [500.0, 1000.0, 2000.0, 4000.0];
+    let sweep = loadgen::sweep_open(
+        addr,
+        &ds.queries,
+        k,
+        &rates,
+        std::time::Duration::from_millis(400),
+        77,
+    )?;
+    println!("\n=== open-loop sweep (binary plane, Poisson arrivals) ===");
+    for r in &sweep {
+        println!(
+            "offered={:>6.0} qps : achieved={:>6.0} shed={} errors={} p50/p99={:.0}/{:.0} us",
+            r.offered_qps, r.achieved_qps, r.shed, r.errors, r.p50_us, r.p99_us
+        );
+    }
+    let knee_qps = loadgen::knee(&sweep).unwrap_or(0.0);
+    let binary_qps = sweep
+        .iter()
+        .filter(|r| r.offered_qps == knee_qps)
+        .map(|r| r.achieved_qps)
+        .next()
+        .unwrap_or(0.0);
+    println!(
+        "wire_knee rates={:?} knee_qps={:.0} binary_qps={:.0} json_qps={:.0} speedup={:.2}",
+        rates,
+        knee_qps,
+        binary_qps,
+        json_qps,
+        binary_qps / json_qps.max(1.0)
     );
 
     // --- Per-request options through the same contract: a stats-bearing

@@ -23,6 +23,10 @@
 //!   QPS on a skewed trace at 10% capacity, plus fixed-entry vs LSH
 //!   warm-start mean hops (`cache_replay` line — the ≥2x cached-vs-cold
 //!   QPS acceptance gate)
+//! * wire frame codec: v3 binary frame encode/decode throughput vs the
+//!   equivalent v2 JSON line for the same 16x128 query batch
+//!   (`frame_codec` line — the serialization side of the binary-plane
+//!   QPS claim)
 
 use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
@@ -574,5 +578,60 @@ fn main() {
             hops_lsh as f64 / hops_fixed.max(1) as f64,
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    // --- Wire frame codec: v3 binary vs v2 JSON, same payload. ---
+    // One 16-query x 128-dim batch request, the serving-plane shape.
+    // Binary ships raw LE f32; JSON formats and reparses every float.
+    // GB/s counts the encoded bytes each arm actually moves, so the
+    // per-query serialization gap feeding the `wire_knee` experiment is
+    // measured at the codec level, with no socket noise.
+    {
+        use proxima::api::wire;
+        use proxima::api::QueryRequest;
+        use proxima::net::frame;
+        let wdim = 128usize;
+        let vectors: Vec<Vec<f32>> = (0..16)
+            .map(|_| (0..wdim).map(|_| rng.next_f32()).collect())
+            .collect();
+        let req = QueryRequest {
+            vectors,
+            k: 10,
+            options: QueryOptions::default(),
+        };
+        let mut fbuf = Vec::new();
+        frame::encode_query(&mut fbuf, 1, &req, 0);
+        let frame_bytes = fbuf.len() as f64;
+        let r_enc = bench("frame_encode 16x128      ", || {
+            fbuf.clear();
+            frame::encode_query(&mut fbuf, 1, &req, 0);
+            fbuf.len()
+        });
+        let r_dec = bench("frame_decode 16x128      ", || {
+            let len = frame::parse_header(&fbuf[..frame::HEADER_LEN]).unwrap();
+            frame::decode_payload(&fbuf[frame::HEADER_LEN..frame::HEADER_LEN + len])
+                .unwrap()
+                .request_id
+        });
+        let jline = wire::encode_request_v2(&req).to_string_compact();
+        let json_bytes = jline.len() as f64;
+        let r_jenc = bench("json_encode  16x128      ", || {
+            wire::encode_request_v2(&req).to_string_compact().len()
+        });
+        let r_jdec = bench("json_decode  16x128      ", || {
+            let parsed = proxima::util::json::parse(&jline).unwrap();
+            wire::decode_request(&parsed).unwrap();
+        });
+        println!(
+            "frame_codec batch=16 dim={wdim} frame_bytes={frame_bytes:.0} json_bytes={json_bytes:.0} \
+             enc_gbs={:.2} dec_gbs={:.2} json_enc_gbs={:.3} json_dec_gbs={:.3} \
+             enc_speedup={:.1} dec_speedup={:.1}",
+            r_enc.per_sec(frame_bytes) / 1e9,
+            r_dec.per_sec(frame_bytes) / 1e9,
+            r_jenc.per_sec(json_bytes) / 1e9,
+            r_jdec.per_sec(json_bytes) / 1e9,
+            r_jenc.mean.as_secs_f64() / r_enc.mean.as_secs_f64(),
+            r_jdec.mean.as_secs_f64() / r_dec.mean.as_secs_f64(),
+        );
     }
 }

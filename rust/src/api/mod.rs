@@ -120,7 +120,7 @@ impl QueryOptions {
 }
 
 /// A batch of queries answered in one call / one wire round-trip.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct QueryRequest {
     /// Row-major query vectors; every row must match the index dimension.
     pub vectors: Vec<Vec<f32>>,
@@ -163,7 +163,7 @@ pub struct NeighborList {
 }
 
 /// Answer to a [`QueryRequest`]: `results[i]` answers `vectors[i]`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct QueryResponse {
     pub results: Vec<NeighborList>,
     /// Per-query failures. Empty when every query succeeded (the common
@@ -254,6 +254,10 @@ pub enum ApiErrorCode {
     Closed,
     /// Unexpected server-side failure (`internal`).
     Internal,
+    /// Admission control shed the request — over the in-flight budget,
+    /// past its deadline, or queued beyond the shed threshold
+    /// (`overloaded`). Retryable by the client after backoff.
+    Overloaded,
 }
 
 impl ApiErrorCode {
@@ -263,6 +267,7 @@ impl ApiErrorCode {
             ApiErrorCode::DimMismatch => "dim_mismatch",
             ApiErrorCode::Closed => "closed",
             ApiErrorCode::Internal => "internal",
+            ApiErrorCode::Overloaded => "overloaded",
         }
     }
 
@@ -272,6 +277,7 @@ impl ApiErrorCode {
             "dim_mismatch" => Some(ApiErrorCode::DimMismatch),
             "closed" => Some(ApiErrorCode::Closed),
             "internal" => Some(ApiErrorCode::Internal),
+            "overloaded" => Some(ApiErrorCode::Overloaded),
             _ => None,
         }
     }
@@ -302,6 +308,9 @@ impl ApiError {
     }
     pub fn internal(message: impl Into<String>) -> ApiError {
         Self::new(ApiErrorCode::Internal, message)
+    }
+    pub fn overloaded(message: impl Into<String>) -> ApiError {
+        Self::new(ApiErrorCode::Overloaded, message)
     }
 }
 
@@ -340,6 +349,7 @@ mod tests {
             ApiErrorCode::DimMismatch,
             ApiErrorCode::Closed,
             ApiErrorCode::Internal,
+            ApiErrorCode::Overloaded,
         ] {
             assert_eq!(ApiErrorCode::parse(c.name()), Some(c));
         }

@@ -18,6 +18,18 @@
 //! these bytes before; a version bump was deliberately avoided because
 //! it would make NEW clients unintelligible to OLD servers for an
 //! error-only path.
+//!
+//! v3 is NOT a JSON revision: it is the length-prefixed binary frame
+//! format in [`crate::net::frame`], sharing this module's typed
+//! `QueryRequest`/`QueryResponse`/`ApiError` vocabulary (admin ops ride
+//! inside binary frames as v2 JSON lines, so this module stays the
+//! single source of truth for op semantics). Both planes share one port:
+//! the server sniffs the first byte of a connection — `{` or whitespace
+//! selects this JSON plane, the `PXW3` magic selects the binary plane.
+//! The `overloaded` error code is emitted by admission control on either
+//! plane; decoders predating it degrade it to `internal` (see
+//! [`decode_error`]), which is safe because shed requests carry no
+//! results.
 
 use super::{
     ApiError, ApiErrorCode, NeighborList, QueryOptions, QueryRequest, QueryResponse, SearchMode,
@@ -1150,5 +1162,18 @@ mod tests {
         assert_eq!(got.message, "batcher closed");
         let ok = json::parse(r#"{"ids":[1]}"#).unwrap();
         assert_eq!(decode_error(&ok), None);
+    }
+
+    #[test]
+    fn overloaded_error_roundtrips_and_degrades_gracefully() {
+        // The shed error introduced with the binary plane must survive the
+        // JSON compat plane too — same typed code on both wires.
+        let e = ApiError::overloaded("queue_wait_us 81000 > shed threshold 50000");
+        let line = reparse(&encode_error(&e));
+        assert_eq!(decode_error(&line), Some(e));
+        // Forward compat: an old client parsing a code it does not know
+        // degrades to Internal instead of failing the decode.
+        let future = json::parse(r#"{"error":{"code":"quota_exceeded","message":"m"}}"#).unwrap();
+        assert_eq!(decode_error(&future).unwrap().code, ApiErrorCode::Internal);
     }
 }

@@ -14,6 +14,13 @@
 //!   ([`SearchService::exact_nn_live`]) at checkpoints through the
 //!   churn, so index-quality decay under mutation is a first-class
 //!   load-test output, not just latency.
+//! * [`run_open`] — open-loop over the WIRE: Poisson arrivals pushed
+//!   down one pipelined binary-plane connection to a
+//!   [`crate::net::NetServer`], send and receive halves on separate
+//!   threads, so offered load does NOT back off when the server slows
+//!   down (the closed-loop fallacy). Reports completion/shed split and
+//!   completed-request latency; [`sweep_open`] + [`knee`] locate the
+//!   saturation knee across offered rates.
 
 use super::server::Client;
 use super::SearchService;
@@ -276,6 +283,201 @@ pub fn run_mixed(
     }
 }
 
+/// Result of one open-loop wire run ([`run_open`]).
+#[derive(Debug, Clone)]
+pub struct OpenLoadReport {
+    pub offered_qps: f64,
+    /// Requests written to the socket.
+    pub sent: usize,
+    /// Requests answered with a result set.
+    pub completed: usize,
+    /// Requests the server shed typed (`overloaded`).
+    pub shed: usize,
+    /// Requests that failed with any OTHER typed error.
+    pub errors: usize,
+    /// Completed requests / wall seconds (first send → last response).
+    pub achieved_qps: f64,
+    /// Wire round-trip latency of COMPLETED requests only, µs. Shed
+    /// requests answer fast by design; mixing them in would flatter the
+    /// tail exactly when the server is in trouble.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Sends that fell > 10 ms behind the Poisson schedule — the
+    /// GENERATOR saturating, so offered load is below nominal.
+    pub late_sends: usize,
+}
+
+/// Drive a binary-plane server open-loop: Poisson arrivals at
+/// `target_qps` for `duration`, all pushed down ONE pipelined
+/// connection (requests don't wait for responses — a sender thread
+/// writes on schedule while a reader thread drains responses from a
+/// [`TcpStream::try_clone`]'d handle and matches them by request id).
+/// Queries cycle through `queries`; requests carry no deadline, so
+/// shedding reflects the server's queue-wait policy alone.
+pub fn run_open(
+    addr: std::net::SocketAddr,
+    queries: &crate::dataset::VectorSet,
+    k: usize,
+    target_qps: f64,
+    duration: Duration,
+    seed: u64,
+) -> crate::util::error::Result<OpenLoadReport> {
+    use crate::net::frame::{self, FrameBody};
+    use std::io::{Read, Write};
+
+    if queries.is_empty() {
+        crate::bail!("run_open requires a non-empty query set");
+    }
+    // Pre-draw the Poisson schedule (ids are 1-based: id = i + 1).
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut schedule: Vec<f64> = Vec::new();
+    let mut t = 0.0f64;
+    while t < duration.as_secs_f64() {
+        let gap = -rng.next_f64().max(1e-12).ln() / target_qps;
+        t += gap;
+        schedule.push(t);
+    }
+    let n = schedule.len();
+    let send_stream = std::net::TcpStream::connect(addr)?;
+    send_stream.set_nodelay(true)?;
+    let mut recv_stream = send_stream.try_clone()?;
+
+    let start = Instant::now();
+    let (sent_info, recv_info) = std::thread::scope(|scope| {
+        let schedule = &schedule;
+        let sender = scope.spawn(move || -> crate::util::error::Result<(Vec<Instant>, usize)> {
+            let mut stream = send_stream;
+            let mut sent_at: Vec<Instant> = Vec::with_capacity(n);
+            let mut late = 0usize;
+            let mut buf = Vec::new();
+            for (i, due_s) in schedule.iter().enumerate() {
+                let due = Duration::from_secs_f64(*due_s);
+                let now = start.elapsed();
+                if now < due {
+                    std::thread::sleep(due - now);
+                } else if now - due > Duration::from_millis(10) {
+                    late += 1;
+                }
+                let req = crate::api::QueryRequest::single(queries.row(i % queries.len()), k);
+                buf.clear();
+                frame::encode_query(&mut buf, (i + 1) as u64, &req, 0);
+                stream.write_all(&buf)?;
+                sent_at.push(Instant::now());
+            }
+            Ok((sent_at, late))
+        });
+        let reader = scope.spawn(move || -> crate::util::error::Result<Vec<(u64, Instant, bool, bool)>> {
+            // (id, received_at, completed, shed) per response.
+            let mut out = Vec::with_capacity(n);
+            let mut inbuf: Vec<u8> = Vec::new();
+            let mut chunk = [0u8; 16 * 1024];
+            while out.len() < n {
+                while inbuf.len() >= frame::HEADER_LEN {
+                    let payload_len = match frame::parse_header(&inbuf[..frame::HEADER_LEN]) {
+                        Ok(len) => len,
+                        Err(e) => crate::bail!("bad response header: {}", e.message),
+                    };
+                    let total = frame::HEADER_LEN + payload_len;
+                    if inbuf.len() < total {
+                        break;
+                    }
+                    let (id, outcome) = match frame::decode_payload(&inbuf[frame::HEADER_LEN..total])
+                    {
+                        Ok(f) => frame::response_outcome(f),
+                        Err((id, e)) => crate::bail!("bad response payload (id {id}): {}", e.message),
+                    };
+                    inbuf.drain(..total);
+                    let at = Instant::now();
+                    match outcome {
+                        Ok(FrameBody::QueryOk { .. }) => out.push((id, at, true, false)),
+                        Ok(_) => crate::bail!("non-query response on the query stream (id {id})"),
+                        Err(e) => {
+                            let shed = e.code == crate::api::ApiErrorCode::Overloaded;
+                            out.push((id, at, false, shed));
+                        }
+                    }
+                }
+                if out.len() >= n {
+                    break;
+                }
+                let got = recv_stream.read(&mut chunk)?;
+                if got == 0 {
+                    crate::bail!("server closed mid-run after {} of {n} responses", out.len());
+                }
+                inbuf.extend_from_slice(&chunk[..got]);
+            }
+            Ok(out)
+        });
+        (sender.join().unwrap(), reader.join().unwrap())
+    });
+    let (sent_at, late_sends) = sent_info?;
+    let responses = recv_info?;
+    let wall = start.elapsed().as_secs_f64();
+
+    let mut completed = 0usize;
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    let mut lats: Vec<f64> = Vec::with_capacity(responses.len());
+    for (id, at, ok, was_shed) in responses {
+        let idx = (id as usize).wrapping_sub(1);
+        if ok {
+            completed += 1;
+            if let Some(t0) = sent_at.get(idx) {
+                lats.push(at.duration_since(*t0).as_secs_f64() * 1e6);
+            }
+        } else if was_shed {
+            shed += 1;
+        } else {
+            errors += 1;
+        }
+    }
+    Ok(OpenLoadReport {
+        offered_qps: target_qps,
+        sent: sent_at.len(),
+        completed,
+        shed,
+        errors,
+        achieved_qps: completed as f64 / wall,
+        p50_us: crate::util::percentile(&lats, 50.0),
+        p95_us: crate::util::percentile(&lats, 95.0),
+        p99_us: crate::util::percentile(&lats, 99.0),
+        late_sends,
+    })
+}
+
+/// [`run_open`] across a ladder of offered rates (one fresh connection
+/// per rate), for locating the saturation [`knee`].
+pub fn sweep_open(
+    addr: std::net::SocketAddr,
+    queries: &crate::dataset::VectorSet,
+    k: usize,
+    rates_qps: &[f64],
+    duration: Duration,
+    seed: u64,
+) -> crate::util::error::Result<Vec<OpenLoadReport>> {
+    let mut reports = Vec::with_capacity(rates_qps.len());
+    for (i, &qps) in rates_qps.iter().enumerate() {
+        reports.push(run_open(addr, queries, k, qps, duration, seed + i as u64)?);
+    }
+    Ok(reports)
+}
+
+/// The saturation knee of a [`sweep_open`] ladder: the highest offered
+/// rate the server still KEEPS UP with — achieved ≥ 90% of offered and
+/// ≤ 1% of requests shed. `None` if it kept up with nothing.
+pub fn knee(reports: &[OpenLoadReport]) -> Option<f64> {
+    reports
+        .iter()
+        .filter(|r| {
+            r.sent > 0
+                && r.achieved_qps >= 0.9 * r.offered_qps
+                && (r.shed as f64) <= 0.01 * r.sent as f64
+        })
+        .map(|r| r.offered_qps)
+        .fold(None, |best, q| Some(best.map_or(q, |b: f64| b.max(q))))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -412,6 +614,63 @@ mod tests {
         assert_eq!(rep.queries, 40, "each round-trip carries 4 queries");
         assert!(rep.qps > 0.0);
         assert!(rep.p99_us >= rep.p50_us);
+        server.stop();
+    }
+
+    #[test]
+    fn open_loop_loadgen_keeps_up_under_light_load() {
+        let ds = tiny_uniform(200, 8, Metric::L2, 45);
+        let svc = Arc::new(SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 45,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 200,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 30,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        ));
+        let cell = Arc::new(crate::coordinator::ServiceCell::new(svc));
+        let (handle, _join) =
+            crate::coordinator::batcher::spawn(cell.clone(), Default::default());
+        let server =
+            crate::net::NetServer::start(cell, handle, crate::net::NetConfig::default()).unwrap();
+        let rep = run_open(
+            server.addr,
+            &ds.queries,
+            5,
+            200.0,
+            Duration::from_millis(300),
+            9,
+        )
+        .unwrap();
+        assert!(rep.sent > 20, "sent {}", rep.sent);
+        // Every request gets exactly one response: completion accounting
+        // must balance, and a tiny index under 200 qps sheds nothing.
+        assert_eq!(rep.completed + rep.shed + rep.errors, rep.sent);
+        assert_eq!(rep.shed, 0, "shed under light load");
+        assert_eq!(rep.errors, 0, "errors under light load");
+        assert!(rep.p99_us >= rep.p50_us);
+        assert!(
+            rep.achieved_qps > rep.offered_qps * 0.5,
+            "achieved {} of {}",
+            rep.achieved_qps,
+            rep.offered_qps
+        );
+        // A one-point "sweep" at a rate the server kept up with must
+        // place the knee at that rate.
+        assert_eq!(knee(&[rep]), Some(200.0));
         server.stop();
     }
 }

@@ -59,7 +59,16 @@
 //!   protocol, multi-query v2 batches + v1 compat), on std threads
 //!   (the offline image has no tokio; see DESIGN.md §1). The v2
 //!   multi-query path rides the same pool, so `queue_wait_us` is
-//!   measurable per response via `want_stats`.
+//!   measurable per response via `want_stats`. This is the JSON-only
+//!   debug/compat front end; the throughput path is
+//!   [`crate::net::NetServer`], which serves the v3 binary frame plane
+//!   AND these same JSON ops on one port (first-byte sniff), routing
+//!   every JSON line through the shared
+//!   [`server::respond_json_line`](server) dispatch so op semantics
+//!   cannot drift between the two servers.
+//! * [`loadgen`] — closed-loop, mixed-churn, and open-loop (Poisson
+//!   arrivals over the binary wire, [`loadgen::run_open`]) load
+//!   generators.
 
 pub mod batcher;
 pub mod loadgen;

@@ -9,6 +9,17 @@
 //! task panics is answered as an inline `{"error":...}` entry in ITS
 //! result slot; batch-mates are unaffected.
 //!
+//! This threaded server is the JSON-only front end; the scalable front
+//! door is [`crate::net::NetServer`], whose readiness event loop serves
+//! the binary v3 frame plane AND this same JSON protocol on one port
+//! (first-byte sniff), with admission control. The per-line dispatch
+//! below ([`respond_json_line`]) is shared by both servers, so op
+//! semantics cannot drift between them. Connections here idle out after
+//! `idle_timeout` ([`Server::start_with`]) instead of pinning their
+//! thread forever, and `stop()` drains: in-flight requests finish,
+//! handler threads notice the shutdown flag within ~100 ms, and the
+//! listener refuses new connections.
+//!
 //! Protocol v2 (one JSON object per line; codecs in [`crate::api::wire`]):
 //! ```text
 //! -> {"v":2,"op":"search","queries":[[f32...],[f32...],...],"k":10,
@@ -103,11 +114,26 @@ pub struct Server {
 
 impl Server {
     /// Bind to `127.0.0.1:port` (0 = ephemeral) and serve whatever index
-    /// `cell` holds — which the wire `reload` op can hot-swap.
+    /// `cell` holds — which the wire `reload` op can hot-swap. Idle
+    /// connections are dropped after 5 minutes ([`Server::start_with`]
+    /// tunes this).
     pub fn start(
         cell: Arc<ServiceCell>,
         batcher: BatcherHandle,
         port: u16,
+    ) -> Result<Server> {
+        Self::start_with(cell, batcher, port, std::time::Duration::from_secs(300))
+    }
+
+    /// [`Server::start`] with an explicit idle read timeout: a
+    /// connection that sends nothing for `idle_timeout` is closed,
+    /// releasing its handler thread (an idle connection used to pin one
+    /// forever — and made `stop()` wait on it).
+    pub fn start_with(
+        cell: Arc<ServiceCell>,
+        batcher: BatcherHandle,
+        port: u16,
+        idle_timeout: std::time::Duration,
     ) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
@@ -127,7 +153,7 @@ impl Server {
                         let bh = batcher.clone();
                         let f = flag.clone();
                         handlers.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, cell, bh, f);
+                            let _ = handle_conn(stream, cell, bh, f, idle_timeout);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -136,6 +162,9 @@ impl Server {
                     Err(_) => break,
                 }
             }
+            // Graceful drain: the listener is gone (refusing new
+            // connections) and every handler exits after finishing its
+            // in-flight request — within one 100 ms poll tick.
             for h in handlers {
                 let _ = h.join();
             }
@@ -155,70 +184,119 @@ impl Server {
     }
 }
 
-/// Serve one connection. Only I/O failures end the loop; every
-/// request-level failure is answered with a structured error line so the
-/// connection survives bad input (a malformed line used to kill the whole
-/// connection silently). The served index is loaded from the epoch cell
-/// per line, so a concurrent `reload` applies from the next request on —
-/// never mid-request.
+/// Serve one connection. Only I/O failures (and the idle timeout) end
+/// the loop; every request-level failure is answered with a structured
+/// error line so the connection survives bad input (a malformed line
+/// used to kill the whole connection silently). The served index is
+/// loaded from the epoch cell per line, so a concurrent `reload`
+/// applies from the next request on — never mid-request.
+///
+/// Reads tick every 100 ms so the thread notices both the shutdown flag
+/// (graceful drain) and its own idleness; partial lines accumulate
+/// across ticks (`read_until` keeps already-received bytes on a
+/// timeout), so a slow writer is never corrupted by the timer.
 fn handle_conn(
     stream: TcpStream,
     cell: Arc<ServiceCell>,
     batcher: BatcherHandle,
     shutdown: Arc<AtomicBool>,
+    idle_timeout: std::time::Duration,
 ) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    let mut raw: Vec<u8> = Vec::new();
+    let mut last_activity = Instant::now();
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
         }
-        let resp = match json::parse(&line) {
-            Err(e) => wire::encode_error(&ApiError::bad_request(format!("malformed JSON: {e}"))),
-            Ok(req) => match wire::decode_request(&req) {
-                // Shape decode failures for the request's version too: a
-                // versionless (or explicit `"v":1`) line with an unknown
-                // op used to get the legacy string error, and must
-                // still. Any other `v` — including malformed values like
-                // 1.5 — gets the structured shape (version 0 here).
-                Err(e) => {
-                    let version = match req.get("v") {
-                        None => 1,
-                        Some(v) if v.as_f64() == Some(1.0) => 1,
-                        Some(_) => 0,
-                    };
-                    error_line(version, &e)
-                }
-                Ok(WireRequest::Stats) => stats_response(&cell.load()),
-                Ok(WireRequest::Status) => status_response(&cell.load()),
-                Ok(WireRequest::Reload {
-                    path,
-                    residency,
-                    cache_mb,
-                    cache_policy,
-                    lsh_start,
-                }) => reload_response(&cell, &path, residency, cache_mb, cache_policy, lsh_start),
-                Ok(WireRequest::Insert { vector }) => insert_response(&cell.load(), &vector),
-                Ok(WireRequest::Delete { id }) => delete_response(&cell.load(), id),
-                Ok(WireRequest::Flush { path }) => flush_response(&cell, path.as_deref()),
-                Ok(WireRequest::Shutdown) => {
-                    shutdown.store(true, Ordering::Relaxed);
-                    writeln!(
-                        writer,
-                        "{}",
-                        Json::obj(vec![("ok", Json::Bool(true))]).to_string_compact()
-                    )?;
+        let eof = match reader.read_until(b'\n', &mut raw) {
+            Ok(0) => true,
+            Ok(_) => false,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Timer tick: bytes read so far stay in `raw`.
+                if last_activity.elapsed() >= idle_timeout {
                     break;
                 }
-                Ok(WireRequest::Search { version, request }) => {
-                    answer_search(&cell.load(), &batcher, version, request)
-                }
-            },
+                continue;
+            }
+            Err(e) => return Err(e.into()),
         };
-        writeln!(writer, "{}", resp.to_string_compact())?;
+        if !eof && raw.last() != Some(&b'\n') {
+            continue; // stream ended mid-line; the next read reports EOF
+        }
+        let line = String::from_utf8_lossy(&raw).trim().to_string();
+        raw.clear();
+        last_activity = Instant::now();
+        if !line.is_empty() {
+            let (resp, quit) = respond_json_line(&line, &cell, &batcher);
+            writeln!(writer, "{}", resp.to_string_compact())?;
+            if quit {
+                shutdown.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+        if eof {
+            break;
+        }
     }
     Ok(())
+}
+
+/// Dispatch one JSON request line against the served cell and shape the
+/// response line. Returns `(response, shutdown_requested)`. This is THE
+/// op dispatch for the JSON protocol — shared verbatim by this threaded
+/// server and by [`crate::net::NetServer`]'s dispatchers (both the JSON
+/// compat plane and binary `OP_ADMIN` frames), so the two front ends
+/// cannot drift.
+pub(crate) fn respond_json_line(
+    line: &str,
+    cell: &ServiceCell,
+    batcher: &BatcherHandle,
+) -> (Json, bool) {
+    let resp = match json::parse(line) {
+        Err(e) => wire::encode_error(&ApiError::bad_request(format!("malformed JSON: {e}"))),
+        Ok(req) => match wire::decode_request(&req) {
+            // Shape decode failures for the request's version too: a
+            // versionless (or explicit `"v":1`) line with an unknown
+            // op used to get the legacy string error, and must
+            // still. Any other `v` — including malformed values like
+            // 1.5 — gets the structured shape (version 0 here).
+            Err(e) => {
+                let version = match req.get("v") {
+                    None => 1,
+                    Some(v) if v.as_f64() == Some(1.0) => 1,
+                    Some(_) => 0,
+                };
+                error_line(version, &e)
+            }
+            Ok(WireRequest::Stats) => stats_response(&cell.load()),
+            Ok(WireRequest::Status) => status_response(&cell.load()),
+            Ok(WireRequest::Reload {
+                path,
+                residency,
+                cache_mb,
+                cache_policy,
+                lsh_start,
+            }) => reload_response(cell, &path, residency, cache_mb, cache_policy, lsh_start),
+            Ok(WireRequest::Insert { vector }) => insert_response(&cell.load(), &vector),
+            Ok(WireRequest::Delete { id }) => delete_response(&cell.load(), id),
+            Ok(WireRequest::Flush { path }) => flush_response(cell, path.as_deref()),
+            Ok(WireRequest::Shutdown) => {
+                return (Json::obj(vec![("ok", Json::Bool(true))]), true);
+            }
+            Ok(WireRequest::Search { version, request }) => {
+                answer_search(&cell.load(), batcher, version, request)
+            }
+        },
+    };
+    (resp, false)
 }
 
 /// Dispatch one search request: validate at the boundary, route
@@ -515,9 +593,19 @@ fn reload_response(
 /// Minimal blocking client for examples/tests. [`Client::search`] speaks
 /// the v1 compat path; [`Client::search_batch`] /
 /// [`Client::search_with_options`] speak v2.
+///
+/// Idempotent admin ops (`stats`/`status`/`reload*`) transparently
+/// reconnect with exponential backoff on transient transport errors —
+/// a server restart, an idle-timeout disconnect, a half-open socket —
+/// so loadgen and ops scripts survive a hot-swap restart. Search and
+/// write-plane ops do NOT retry: re-sending a possibly-executed
+/// `insert`/`flush` is not idempotent, and a failed search is the
+/// caller's retry decision.
 pub struct Client {
+    addr: std::net::SocketAddr,
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    admin_retries: u32,
 }
 
 impl Client {
@@ -525,7 +613,18 @@ impl Client {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { stream, reader })
+        Ok(Client {
+            addr,
+            stream,
+            reader,
+            admin_retries: 3,
+        })
+    }
+
+    /// Override the admin-op reconnect budget (0 disables retries).
+    pub fn with_admin_retries(mut self, retries: u32) -> Client {
+        self.admin_retries = retries;
+        self
     }
 
     fn roundtrip(&mut self, req: Json) -> Result<Json> {
@@ -535,10 +634,56 @@ impl Client {
     /// Send one raw line and read one response line (the escape hatch for
     /// protocol tests — e.g. deliberately malformed input).
     pub fn send_raw(&mut self, line: &str) -> Result<Json> {
+        match self.transport_roundtrip(line) {
+            Ok(resp) => resp,
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// One wire round-trip, separating TRANSPORT failures (outer `Err`:
+    /// connect/read/write/EOF — candidates for reconnect-and-retry)
+    /// from response-level failures (inner `Err`: unparseable line).
+    fn transport_roundtrip(&mut self, line: &str) -> std::io::Result<Result<Json>> {
         writeln!(self.stream, "{line}")?;
         let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
-        json::parse(&resp).map_err(|e| anyhow!("bad response: {e}"))
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Ok(json::parse(&resp).map_err(|e| anyhow!("bad response: {e}")))
+    }
+
+    /// Round-trip for idempotent admin ops: on a transport error,
+    /// reconnect with doubling backoff (10 ms start) up to
+    /// `admin_retries` times, then re-send. Safe precisely because the
+    /// retried ops are idempotent — issuing `status` or re-`reload`ing
+    /// the same artifact twice is indistinguishable from once.
+    fn admin_roundtrip(&mut self, req: Json) -> Result<Json> {
+        let line = req.to_string_compact();
+        let mut backoff = std::time::Duration::from_millis(10);
+        let mut attempt = 0u32;
+        loop {
+            match self.transport_roundtrip(&line) {
+                Ok(resp) => return resp,
+                Err(e) => {
+                    if attempt >= self.admin_retries {
+                        return Err(e.into());
+                    }
+                    attempt += 1;
+                    std::thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2);
+                    if let Ok(fresh) = Client::connect(self.addr) {
+                        self.stream = fresh.stream;
+                        self.reader = fresh.reader;
+                    }
+                    // Reconnect failure: loop and burn another attempt —
+                    // the server may still be coming back up.
+                }
+            }
+        }
     }
 
     /// v1 single-query search RPC (compat path); returns
@@ -595,12 +740,13 @@ impl Client {
     }
 
     pub fn stats(&mut self) -> Result<Json> {
-        self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
+        self.admin_roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
     }
 
     /// v2 admin: spec + provenance + counters of the served index.
+    /// Transparently reconnects on transient transport errors.
     pub fn status(&mut self) -> Result<Json> {
-        let resp = self.roundtrip(Json::obj(vec![
+        let resp = self.admin_roundtrip(Json::obj(vec![
             ("v", Json::num(wire::VERSION as f64)),
             ("op", Json::str("status")),
         ]))?;
@@ -652,7 +798,7 @@ impl Client {
         if let Some(on) = lsh_start {
             kvs.push(("lsh_start", Json::Bool(on)));
         }
-        let resp = self.roundtrip(Json::obj(kvs))?;
+        let resp = self.admin_roundtrip(Json::obj(kvs))?;
         if let Some(err) = wire::decode_error(&resp) {
             return Err(anyhow!("server error: {err}"));
         }
@@ -901,5 +1047,56 @@ mod tests {
         client.shutdown().unwrap();
         server.stop();
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn idle_timeout_drops_connection_and_admin_ops_reconnect() {
+        let ds = tiny_uniform(200, 8, Metric::L2, 7);
+        let svc = Arc::new(SearchService::build(
+            &ds,
+            &GraphParams {
+                r: 8,
+                build_l: 16,
+                alpha: 1.2,
+                seed: 7,
+            },
+            &PqParams {
+                m: 4,
+                c: 16,
+                train_sample: 200,
+                kmeans_iters: 4,
+            },
+            SearchParams {
+                l: 30,
+                k: 5,
+                ..Default::default()
+            },
+            false,
+        ));
+        let cell = Arc::new(ServiceCell::new(svc));
+        let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+        let server =
+            Server::start_with(cell, handle, 0, std::time::Duration::from_millis(200)).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        let (ids, _, _) = client.search(ds.queries.row(0), 5).unwrap();
+        assert_eq!(ids.len(), 5);
+
+        // Sit idle past the timeout: the server drops the connection.
+        std::thread::sleep(std::time::Duration::from_millis(500));
+
+        // Search does NOT retry — the dead socket surfaces as an error...
+        assert!(client.search(ds.queries.row(0), 5).is_err());
+        // ...but admin ops transparently reconnect and succeed.
+        let status = client.status().unwrap();
+        assert!(status.get("spec").is_some());
+        // The reconnected socket serves searches again too.
+        let (ids2, _, _) = client.search(ds.queries.row(0), 5).unwrap();
+        assert_eq!(ids2, ids);
+
+        client.shutdown().unwrap();
+        // stop() returns promptly even though a (reconnected) client
+        // socket is still open — idle handlers drain instead of pinning
+        // their threads.
+        server.stop();
     }
 }

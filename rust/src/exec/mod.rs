@@ -182,6 +182,14 @@ impl ExecPool {
         self.threads.len()
     }
 
+    /// Tasks published but not yet executed — an instantaneous queue
+    /// depth. The admission layer and load tooling read this as a
+    /// saturation signal; it is racy by nature (a snapshot, not a
+    /// fence) and must only inform policy, never correctness.
+    pub fn pending(&self) -> usize {
+        self.shared.pending.load(Ordering::Acquire)
+    }
+
     /// Execute `f(0..n)` across the pool, blocking until every task has
     /// run. Task panics are contained per index. The calling thread
     /// executes pending tasks while it waits.

@@ -172,6 +172,39 @@
 //! compacts tombstones away entirely, re-stamps the `IndexSpec`
 //! (`n_base` = live count), recomputes PQ codes, re-saves the `.pxa`,
 //! and hot-swaps via [`coordinator::ServiceCell`].
+//!
+//! # Wire protocol
+//!
+//! Two planes share one serving port, selected by the first byte a
+//! connection sends:
+//!
+//! - **JSON lines** (`{` or leading whitespace) — the v1/v2 protocol of
+//!   [`api::wire`]: one JSON object per `\n`-terminated line, human
+//!   readable, stable, and kept as the compat/debug plane. The
+//!   thread-per-connection [`coordinator::Server`] speaks only this.
+//! - **v3 binary frames** (`PXW3` magic) — the throughput plane of
+//!   [`net::frame`]. Each frame is `magic(4) | payload_len u32 LE |
+//!   request_id u64 | op u8 | body`; query vectors are raw
+//!   little-endian `f32` rows (the [`dataset::io`] codec primitives),
+//!   so a query costs no float formatting and no JSON parse. The
+//!   request id makes the connection a multiplexed pipe: clients keep
+//!   many requests in flight and match responses out of order.
+//!   Decoding is strictly bounded — declared lengths are checked
+//!   against bytes actually present (and a 64 MiB frame cap) before
+//!   anything is allocated, so a hostile length field cannot balloon
+//!   memory.
+//!
+//! [`net::NetServer`] serves both planes from one readiness event loop
+//! (raw epoll/poll, no added dependencies) plus a dispatcher pool, with
+//! typed admission control in front: a bounded in-flight budget, a
+//! queue-wait shedding threshold, and per-request deadlines, all
+//! surfacing as the retryable `overloaded` error code
+//! ([`api::ApiErrorCode::Overloaded`]) rather than silent queueing
+//! collapse. Version skew is handled the JSON way on the JSON plane
+//! (`version` field negotiation) and the magic way on the binary plane:
+//! a future `PXW4` changes the magic, and v3 decoders reject it typed.
+//! The open-loop generator [`coordinator::loadgen::run_open`] measures
+//! the resulting latency/QPS knee with Poisson arrivals.
 
 pub mod api;
 pub mod artifact;
@@ -198,4 +231,5 @@ pub mod nand;
 
 pub mod coordinator;
 pub mod figures;
+pub mod net;
 pub mod runtime;

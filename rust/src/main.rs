@@ -7,7 +7,16 @@
 //!                                          build index, persist the artifact
 //! proxima search    --dataset sift-s --scale 0.05 --l 100 --k 10
 //! proxima search    --dataset sift-s --index data/sift-s.pxa   open, no build
+//! proxima search    --dataset sift-s --server 127.0.0.1:7878 --depth 8
+//!                                          drive a live server over the v3
+//!                                          binary wire, pipelined
 //! proxima serve     --dataset sift-s --scale 0.02 --port 7878
+//! proxima serve     --index data/sift-s.pxa --max_inflight 1024
+//!                   --shed_queue_ms 50 --deadline_ms 0 --idle_timeout_s 300
+//!                                          event-loop server: v3 binary +
+//!                                          JSON planes, typed load shedding
+//! proxima serve     --index data/sift-s.pxa --threaded true
+//!                                          legacy thread-per-conn JSON server
 //! proxima serve     --index data/sift-s.pxa --port 7878        open, no build
 //! proxima serve     --index data/sift-s.pxa --residency tiered
 //!                                          §IV tiered storage: hot_frac of
@@ -247,6 +256,13 @@ fn cmd_build(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_search(cfg: &Config) -> Result<()> {
+    // `--server host:port`: drive a LIVE server over the v3 binary wire
+    // (pipelined, `--depth` requests in flight) instead of searching
+    // in-process. Recall is still scored locally against brute force.
+    if let Some(addr) = cfg.get_str("server") {
+        let addr = addr.to_string();
+        return search_over_wire(cfg, &addr);
+    }
     let (ds, svc) = match cfg.get_str("index") {
         // Open the artifact for serving; the dataset is still generated
         // as the QUERY source (and ground truth), with spec-vs-dataset
@@ -293,6 +309,61 @@ fn cmd_search(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// The `search --server` path: same query set and scoring as the
+/// in-process mode, but every query crosses the binary plane of a
+/// running server, with up to `--depth` (default 8) requests pipelined
+/// on one connection — so the printed QPS measures the WIRE serving
+/// stack, not just the index.
+fn search_over_wire(cfg: &Config, addr: &str) -> Result<()> {
+    let ds = dataset_from_cfg(cfg)?;
+    let k = cfg.get_usize("k", 10);
+    let depth = cfg.get_usize("depth", 8).max(1);
+    let n = ds.n_queries();
+    if n == 0 {
+        proxima::bail!("dataset has no queries");
+    }
+    let gt = proxima::dataset::ground_truth::brute_force(&ds, k);
+    let mut client = proxima::net::BinClient::connect(addr)?;
+    let mut results: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut outstanding: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::new();
+    let mut next = 0usize;
+    let mut done = 0usize;
+    let t0 = std::time::Instant::now();
+    while done < n {
+        while next < n && outstanding.len() < depth {
+            let req = proxima::api::QueryRequest::single(ds.queries.row(next), k);
+            let id = client.send_query(&req, 0)?;
+            outstanding.insert(id, next);
+            next += 1;
+        }
+        let (rid, outcome) = client.recv()?;
+        let qi = outstanding
+            .remove(&rid)
+            .ok_or_else(|| proxima::anyhow!("response for unknown request id {rid}"))?;
+        match outcome {
+            Ok(proxima::net::frame::FrameBody::QueryOk { response }) => {
+                results[qi] = response
+                    .results
+                    .into_iter()
+                    .next()
+                    .map(|nl| nl.ids)
+                    .unwrap_or_default();
+            }
+            Ok(_) => proxima::bail!("non-query response for request id {rid}"),
+            Err(e) => proxima::bail!("query {qi} failed [{}]: {}", e.code.name(), e.message),
+        }
+        done += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let recall = proxima::dataset::mean_recall(&results, &gt, k);
+    println!(
+        "recall@{k} = {recall:.4}   QPS = {:.0}   (binary wire to {addr}, depth {depth})",
+        n as f64 / secs
+    );
+    Ok(())
+}
+
 fn cmd_serve(cfg: &Config) -> Result<()> {
     // `--index` is the restart path: open the artifact, never touching
     // the raw dataset; otherwise build from the configured dataset.
@@ -324,9 +395,42 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     };
     let (handle, _join) = spawn(cell.clone(), policy);
     let port = cfg.get_usize("port", 7878) as u16;
-    let server = Server::start(cell, handle, port)?;
-    println!("proxima serving on {}", server.addr);
-    println!("protocol: one JSON per line; see coordinator::server docs");
+    // `--threaded true` keeps the legacy thread-per-connection JSON-only
+    // server; the default front door is the event-loop NetServer, which
+    // serves BOTH planes (v3 binary frames + v1/v2 JSON lines) on one
+    // port with admission control in front of the query path.
+    if cfg.get_bool("threaded", false) {
+        let idle = std::time::Duration::from_secs(cfg.get_u64("idle_timeout_s", 300));
+        let server = Server::start_with(cell, handle, port, idle)?;
+        println!("proxima serving on {} (threaded, JSON plane only)", server.addr);
+        println!("protocol: one JSON per line; see coordinator::server docs");
+        std::mem::forget(server);
+    } else {
+        let net_cfg = proxima::net::NetConfig {
+            port,
+            admission: proxima::net::AdmissionConfig {
+                max_in_flight: cfg.get_usize("max_inflight", 1024),
+                shed_queue_us: cfg.get_u64("shed_queue_ms", 50) * 1000,
+                default_deadline_us: cfg.get_u64("deadline_ms", 0) * 1000,
+            },
+            idle_timeout: std::time::Duration::from_secs(cfg.get_u64("idle_timeout_s", 300)),
+            dispatchers: cfg.get_usize("dispatchers", 0),
+            clock: proxima::net::Clock::wall(),
+        };
+        let server = proxima::net::NetServer::start(cell, handle, net_cfg)?;
+        println!("proxima serving on {}", server.addr);
+        println!(
+            "protocol: v3 binary frames (PXW3) + v1/v2 JSON lines on one port; \
+             see the `net` module docs. admission: max_inflight={}, shed_queue_ms={}, \
+             deadline_ms={}",
+            cfg.get_usize("max_inflight", 1024),
+            cfg.get_u64("shed_queue_ms", 50),
+            cfg.get_u64("deadline_ms", 0)
+        );
+        // Keep the server alive for the process lifetime: dropping it
+        // would drain and stop.
+        std::mem::forget(server);
+    }
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,0 +1,163 @@
+//! Binary-plane client: speaks the [`frame`] format over one TCP
+//! connection and pipelines — many requests may be in flight before the
+//! first response is read, matched back by request id.
+//!
+//! This is deliberately thinner than [`crate::coordinator::server::Client`]
+//! (the JSON-plane client): no reconnect machinery, blocking I/O, and
+//! the send/receive halves are exposed separately so tests and the
+//! open-loop load generator can drive them from different threads via
+//! [`TcpStream::try_clone`].
+
+use super::frame::{self, Frame, FrameBody};
+use crate::anyhow;
+use crate::api::{ApiError, QueryRequest, QueryResponse};
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// One binary-plane connection.
+pub struct BinClient {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    next_id: u64,
+}
+
+impl BinClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<BinClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(BinClient {
+            stream,
+            inbuf: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    /// The underlying stream — `try_clone` it to split send/receive
+    /// across threads (open-loop load generation).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send a query frame with an auto-assigned id; returns the id to
+    /// match the response with. Does NOT wait for the response.
+    pub fn send_query(&mut self, req: &QueryRequest, deadline_us: u32) -> Result<u64> {
+        let id = self.fresh_id();
+        self.send_query_with_id(id, req, deadline_us)?;
+        Ok(id)
+    }
+
+    /// Send a query frame with an EXPLICIT id (tests exercise duplicate
+    /// in-flight ids with this).
+    pub fn send_query_with_id(
+        &mut self,
+        id: u64,
+        req: &QueryRequest,
+        deadline_us: u32,
+    ) -> Result<()> {
+        let mut buf = Vec::new();
+        frame::encode_query(&mut buf, id, req, deadline_us);
+        self.stream.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Send an admin op (a JSON op line, e.g. `{"op":"status"}`) on the
+    /// binary plane; returns the request id.
+    pub fn send_admin(&mut self, line: &str) -> Result<u64> {
+        let id = self.fresh_id();
+        let mut buf = Vec::new();
+        frame::encode_admin(&mut buf, id, line);
+        self.stream.write_all(&buf)?;
+        Ok(id)
+    }
+
+    /// Write raw bytes verbatim (adversarial protocol tests).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Block until one full frame arrives. An `Err` here is a transport
+    /// or codec failure — server-reported errors come back as
+    /// well-formed [`FrameBody::Error`] frames via [`recv`].
+    ///
+    /// [`recv`]: BinClient::recv
+    pub fn recv_frame(&mut self) -> Result<Frame> {
+        self.fill(frame::HEADER_LEN)?;
+        let payload_len = frame::parse_header(&self.inbuf[..frame::HEADER_LEN])
+            .map_err(|e| anyhow!("bad response header: {}", e.message))?;
+        let total = frame::HEADER_LEN + payload_len;
+        self.fill(total)?;
+        let decoded = frame::decode_payload(&self.inbuf[frame::HEADER_LEN..total])
+            .map_err(|(id, e)| anyhow!("bad response payload (id {}): {}", id, e.message));
+        self.inbuf.drain(..total);
+        decoded
+    }
+
+    /// Receive one response: `(request_id, Ok(body) | Err(api_error))`.
+    /// Typed server-side failures (overloaded, bad_request, ...) land in
+    /// the inner `Err` with the id they belong to.
+    pub fn recv(&mut self) -> Result<(u64, std::result::Result<FrameBody, ApiError>)> {
+        let f = self.recv_frame()?;
+        Ok(frame::response_outcome(f))
+    }
+
+    /// One blocking round trip; the common non-pipelined path. The
+    /// inner result carries typed server-side errors.
+    pub fn query(
+        &mut self,
+        req: &QueryRequest,
+    ) -> Result<std::result::Result<QueryResponse, ApiError>> {
+        let id = self.send_query(req, 0)?;
+        let (rid, outcome) = self.recv()?;
+        if rid != id {
+            return Err(anyhow!(
+                "response id {} does not match request id {} (interleaved use of a \
+                 round-trip helper on a pipelined connection?)",
+                rid,
+                id
+            ));
+        }
+        match outcome {
+            Ok(FrameBody::QueryOk { response }) => Ok(Ok(response)),
+            Ok(_) => Err(anyhow!("server answered a query with a non-query op")),
+            Err(e) => Ok(Err(e)),
+        }
+    }
+
+    /// One blocking admin round trip; parses the response line back to
+    /// JSON (same shape as the JSON plane returns for the op).
+    pub fn admin(&mut self, line: &str) -> Result<Json> {
+        let id = self.send_admin(line)?;
+        let (rid, outcome) = self.recv()?;
+        if rid != id {
+            return Err(anyhow!("response id {} does not match admin id {}", rid, id));
+        }
+        match outcome {
+            Ok(FrameBody::AdminOk { line }) => {
+                json::parse(&line).map_err(|e| anyhow!("bad admin response JSON: {:?}", e))
+            }
+            Ok(_) => Err(anyhow!("server answered an admin op with a non-admin op")),
+            Err(e) => Err(anyhow!("admin op failed [{}]: {}", e.code.name(), e.message)),
+        }
+    }
+
+    fn fill(&mut self, need: usize) -> Result<()> {
+        let mut chunk = [0u8; 4096];
+        while self.inbuf.len() < need {
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(anyhow!("server closed the connection"));
+            }
+            self.inbuf.extend_from_slice(&chunk[..n]);
+        }
+        Ok(())
+    }
+}

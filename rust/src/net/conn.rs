@@ -1,0 +1,436 @@
+//! Per-connection byte-stream state machine: plane sniffing and
+//! incremental framing, pure over byte slices so every adversarial
+//! shape is unit-testable without a socket.
+//!
+//! The first byte a connection sends picks its plane for life:
+//! `{` or ASCII whitespace → the line-delimited JSON compat plane,
+//! the `P` of the `PXW3` magic → the binary frame plane, anything
+//! else → a fatal protocol error. On the binary plane the reader
+//! enforces the bounded-decode contract: the internal buffer only ever
+//! grows by bytes actually received, a declared length above
+//! [`frame::MAX_FRAME_LEN`] is rejected at header time (typed,
+//! non-fatal) and the stream resynchronizes by scanning for the next
+//! magic, so one malicious or buggy frame cannot take down a pipelined
+//! connection's other in-flight requests.
+
+use super::frame::{self, Frame, HEADER_LEN, MAGIC};
+use crate::api::ApiError;
+
+/// Which protocol a connection speaks (decided by its first byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// No bytes seen yet.
+    Unknown,
+    /// Line-delimited v1/v2 JSON.
+    Json,
+    /// Length-prefixed v3 binary frames.
+    Binary,
+}
+
+/// One unit of decoded inbound traffic.
+#[derive(Debug, PartialEq)]
+pub enum ConnEvent {
+    /// A complete JSON request line (without the trailing newline).
+    JsonLine(String),
+    /// A complete, well-formed binary frame.
+    Frame(Frame),
+    /// A malformed unit. `fatal` means the stream can no longer be
+    /// framed and the connection must close after the error is sent;
+    /// otherwise the connection survives and later frames still parse.
+    ProtocolError {
+        request_id: u64,
+        error: ApiError,
+        fatal: bool,
+    },
+}
+
+/// Incremental decoder for one connection's inbound bytes.
+pub struct ConnReader {
+    plane: Plane,
+    buf: Vec<u8>,
+    /// Binary plane: payload length from an accepted header, while the
+    /// payload is still arriving.
+    pending_len: Option<usize>,
+    /// Framing lost; scanning for the next magic. One typed error is
+    /// emitted when the state is entered, not per garbage byte.
+    resyncing: bool,
+}
+
+impl Default for ConnReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConnReader {
+    pub fn new() -> ConnReader {
+        ConnReader {
+            plane: Plane::Unknown,
+            buf: Vec::new(),
+            pending_len: None,
+            resyncing: false,
+        }
+    }
+
+    pub fn plane(&self) -> Plane {
+        self.plane
+    }
+
+    /// Bytes buffered but not yet decodable (partial line or frame).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Feed freshly-received bytes; append every decodable unit to
+    /// `out`. After an event with `fatal: true` the caller must stop
+    /// feeding and close.
+    pub fn push(&mut self, bytes: &[u8], out: &mut Vec<ConnEvent>) {
+        if bytes.is_empty() {
+            return;
+        }
+        self.buf.extend_from_slice(bytes);
+        if self.plane == Plane::Unknown {
+            // Skip leading whitespace before sniffing, so `  {"op"..`
+            // and a bare keepalive newline both stay on the JSON plane.
+            let first = match self.buf.iter().find(|b| !b" \t\r\n".contains(b)) {
+                Some(&b) => b,
+                None => {
+                    // All whitespace so far: harmless JSON-plane filler.
+                    self.plane = Plane::Json;
+                    b'{'
+                }
+            };
+            self.plane = match first {
+                b'{' => Plane::Json,
+                b if b == MAGIC[0] => Plane::Binary,
+                other => {
+                    out.push(ConnEvent::ProtocolError {
+                        request_id: 0,
+                        error: ApiError::bad_request(format!(
+                            "unrecognized protocol (first byte {other:#04x})"
+                        )),
+                        fatal: true,
+                    });
+                    self.buf.clear();
+                    return;
+                }
+            };
+        }
+        match self.plane {
+            Plane::Json => self.drain_json(out),
+            Plane::Binary => self.drain_binary(out),
+            Plane::Unknown => unreachable!(),
+        }
+    }
+
+    fn drain_json(&mut self, out: &mut Vec<ConnEvent>) {
+        while let Some(nl) = self.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.buf.drain(..=nl).collect();
+            let line = String::from_utf8_lossy(&line).trim().to_string();
+            if !line.is_empty() {
+                out.push(ConnEvent::JsonLine(line));
+            }
+        }
+    }
+
+    fn drain_binary(&mut self, out: &mut Vec<ConnEvent>) {
+        loop {
+            // Finish a frame whose header was already accepted.
+            if let Some(len) = self.pending_len {
+                if self.buf.len() < HEADER_LEN + len {
+                    return; // payload still arriving
+                }
+                let payload: Vec<u8> = self.buf.drain(..HEADER_LEN + len).collect();
+                self.pending_len = None;
+                match frame::decode_payload(&payload[HEADER_LEN..]) {
+                    Ok(f) => out.push(ConnEvent::Frame(f)),
+                    Err((request_id, error)) => out.push(ConnEvent::ProtocolError {
+                        request_id,
+                        error,
+                        fatal: false,
+                    }),
+                }
+                continue;
+            }
+            // A stray JSON line on the binary plane (a confused client
+            // mixing planes): consume through its newline and reject
+            // typed, keeping the frame stream alive.
+            if self.buf.first() == Some(&b'{') {
+                match self.buf.iter().position(|&b| b == b'\n') {
+                    Some(nl) => {
+                        self.buf.drain(..=nl);
+                        out.push(ConnEvent::ProtocolError {
+                            request_id: 0,
+                            error: ApiError::bad_request(
+                                "JSON line on the binary plane; use the PXW3 frame format \
+                                 or a fresh connection for the JSON plane",
+                            ),
+                            fatal: false,
+                        });
+                        continue;
+                    }
+                    None => return, // wait for the newline
+                }
+            }
+            if self.buf.len() < HEADER_LEN {
+                return;
+            }
+            match frame::parse_header(&self.buf[..HEADER_LEN]) {
+                Ok(len) => {
+                    self.pending_len = Some(len);
+                    self.resyncing = false;
+                    // loop: payload may already be buffered
+                }
+                Err(error) => {
+                    if self.buf[..4] == MAGIC {
+                        // Good magic, bad length (runt/giant). The
+                        // declared length is untrustworthy, so skipping
+                        // it would desync: consume just the header,
+                        // report typed, and scan for the next frame.
+                        out.push(ConnEvent::ProtocolError {
+                            request_id: 0,
+                            error,
+                            fatal: false,
+                        });
+                        self.buf.drain(..HEADER_LEN);
+                        self.resync();
+                    } else {
+                        // Framing lost mid-stream: report once, then
+                        // scan quietly for the next magic.
+                        if !self.resyncing {
+                            self.resyncing = true;
+                            out.push(ConnEvent::ProtocolError {
+                                request_id: 0,
+                                error,
+                                fatal: false,
+                            });
+                        }
+                        if !self.resync() {
+                            return; // need more bytes to find a magic
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drop garbage up to the next `MAGIC` occurrence (exclusive).
+    /// Returns true when a full magic is positioned at the buffer head.
+    /// The caller guarantees position 0 is not a valid header, so this
+    /// cannot loop without consuming.
+    fn resync(&mut self) -> bool {
+        match find_magic(&self.buf) {
+            Some(i) => {
+                self.buf.drain(..i);
+                true
+            }
+            None => {
+                // Keep a tail shorter than the magic: it may be the
+                // prefix of a magic whose rest is still in flight.
+                let keep = self.buf.len().min(MAGIC.len() - 1);
+                self.buf.drain(..self.buf.len() - keep);
+                false
+            }
+        }
+    }
+}
+
+fn find_magic(hay: &[u8]) -> Option<usize> {
+    hay.windows(MAGIC.len()).position(|w| w == MAGIC)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ApiErrorCode, QueryOptions, QueryRequest};
+    use crate::net::frame::FrameBody;
+
+    fn query_frame(id: u64) -> Vec<u8> {
+        let req = QueryRequest {
+            vectors: vec![vec![1.0, 2.0]],
+            k: 3,
+            options: QueryOptions::default(),
+        };
+        let mut buf = Vec::new();
+        frame::encode_query(&mut buf, id, &req, 0);
+        buf
+    }
+
+    fn push_all(r: &mut ConnReader, bytes: &[u8]) -> Vec<ConnEvent> {
+        let mut out = Vec::new();
+        r.push(bytes, &mut out);
+        out
+    }
+
+    #[test]
+    fn sniffs_json_plane_and_splits_lines() {
+        let mut r = ConnReader::new();
+        assert_eq!(r.plane(), Plane::Unknown);
+        let ev = push_all(&mut r, b"  {\"op\":\"stats\"}\n{\"op\":");
+        assert_eq!(r.plane(), Plane::Json);
+        assert_eq!(ev, vec![ConnEvent::JsonLine("{\"op\":\"stats\"}".into())]);
+        let ev = push_all(&mut r, b"\"status\"}\n");
+        assert_eq!(ev, vec![ConnEvent::JsonLine("{\"op\":\"status\"}".into())]);
+    }
+
+    #[test]
+    fn sniffs_binary_plane_and_reassembles_split_frames() {
+        let mut r = ConnReader::new();
+        let buf = query_frame(11);
+        // Byte-at-a-time delivery: exactly one frame event at the end.
+        let mut events = Vec::new();
+        for b in &buf {
+            r.push(std::slice::from_ref(b), &mut events);
+        }
+        assert_eq!(r.plane(), Plane::Binary);
+        assert_eq!(events.len(), 1);
+        match &events[0] {
+            ConnEvent::Frame(f) => assert_eq!(f.request_id, 11),
+            other => panic!("wrong event: {other:?}"),
+        }
+        assert_eq!(r.buffered(), 0);
+    }
+
+    #[test]
+    fn pipelined_frames_in_one_read() {
+        let mut r = ConnReader::new();
+        let mut buf = query_frame(1);
+        buf.extend_from_slice(&query_frame(2));
+        buf.extend_from_slice(&query_frame(3));
+        let ev = push_all(&mut r, &buf);
+        let ids: Vec<u64> = ev
+            .iter()
+            .map(|e| match e {
+                ConnEvent::Frame(f) => f.request_id,
+                other => panic!("wrong event: {other:?}"),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn unknown_first_byte_is_fatal() {
+        let mut r = ConnReader::new();
+        let ev = push_all(&mut r, b"GET / HTTP/1.1\r\n");
+        assert_eq!(ev.len(), 1);
+        match &ev[0] {
+            ConnEvent::ProtocolError { fatal, error, .. } => {
+                assert!(*fatal);
+                assert_eq!(error.code, ApiErrorCode::BadRequest);
+            }
+            other => panic!("wrong event: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn giant_declared_length_rejected_then_resyncs_on_next_magic() {
+        let mut r = ConnReader::new();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes()); // 4 GiB claim
+        buf.extend_from_slice(b"garbage-that-is-not-a-frame");
+        buf.extend_from_slice(&query_frame(21));
+        let ev = push_all(&mut r, &buf);
+        assert_eq!(ev.len(), 2, "events: {ev:?}");
+        match &ev[0] {
+            ConnEvent::ProtocolError { error, fatal, .. } => {
+                assert!(!fatal, "giant length must not kill the connection");
+                assert!(error.message.contains("exceeds max"));
+            }
+            other => panic!("wrong event: {other:?}"),
+        }
+        match &ev[1] {
+            ConnEvent::Frame(f) => assert_eq!(f.request_id, 21),
+            other => panic!("wrong event: {other:?}"),
+        }
+        // Never buffered anything near the declared 4 GiB.
+        assert!(r.buffered() < 64);
+    }
+
+    #[test]
+    fn corrupt_magic_midstream_resyncs_without_killing_later_frames() {
+        let mut r = ConnReader::new();
+        let mut buf = query_frame(1);
+        buf.extend_from_slice(b"PXXXnoise"); // starts like magic, is not
+        buf.extend_from_slice(&query_frame(2));
+        let ev = push_all(&mut r, &buf);
+        let frames: Vec<u64> = ev
+            .iter()
+            .filter_map(|e| match e {
+                ConnEvent::Frame(f) => Some(f.request_id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(frames, vec![1, 2]);
+        assert!(ev.iter().any(|e| matches!(
+            e,
+            ConnEvent::ProtocolError { fatal: false, .. }
+        )));
+    }
+
+    #[test]
+    fn truncated_payload_within_declared_length_is_typed_nonfatal() {
+        let mut r = ConnReader::new();
+        let good = query_frame(31);
+        // Keep the header but declare the true length while cutting the
+        // body content: corrupt a count field so decode fails inside a
+        // fully-delivered payload.
+        let mut bad = good.clone();
+        let n_off = HEADER_LEN + 8 + 1 + 4 + 4 + 1 + 1 + 4 + 4 + 4;
+        bad[n_off..n_off + 4].copy_from_slice(&900u32.to_le_bytes()); // n lies
+        let mut buf = bad;
+        buf.extend_from_slice(&query_frame(32));
+        let ev = push_all(&mut r, &buf);
+        assert_eq!(ev.len(), 2);
+        match &ev[0] {
+            ConnEvent::ProtocolError {
+                request_id,
+                error,
+                fatal,
+            } => {
+                assert_eq!(*request_id, 31);
+                assert_eq!(error.code, ApiErrorCode::BadRequest);
+                assert!(!fatal);
+            }
+            other => panic!("wrong event: {other:?}"),
+        }
+        match &ev[1] {
+            ConnEvent::Frame(f) => assert_eq!(f.request_id, 32),
+            other => panic!("wrong event: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_line_on_binary_plane_rejected_typed_frames_continue() {
+        let mut r = ConnReader::new();
+        let mut buf = query_frame(41);
+        buf.extend_from_slice(b"{\"v\":2,\"op\":\"status\"}\n");
+        buf.extend_from_slice(&query_frame(42));
+        let ev = push_all(&mut r, &buf);
+        assert_eq!(ev.len(), 3);
+        assert!(matches!(&ev[0], ConnEvent::Frame(f) if f.request_id == 41));
+        match &ev[1] {
+            ConnEvent::ProtocolError { error, fatal, .. } => {
+                assert!(!fatal);
+                assert!(error.message.contains("JSON line on the binary plane"));
+            }
+            other => panic!("wrong event: {other:?}"),
+        }
+        assert!(matches!(&ev[2], ConnEvent::Frame(f) if f.request_id == 42));
+    }
+
+    #[test]
+    fn admin_frame_decodes_on_binary_plane() {
+        let mut r = ConnReader::new();
+        let mut buf = Vec::new();
+        frame::encode_admin(&mut buf, 51, r#"{"v":2,"op":"status"}"#);
+        let ev = push_all(&mut r, &buf);
+        match &ev[0] {
+            ConnEvent::Frame(Frame {
+                request_id: 51,
+                body: FrameBody::Admin { line },
+            }) => assert_eq!(line, r#"{"v":2,"op":"status"}"#),
+            other => panic!("wrong event: {other:?}"),
+        }
+    }
+}

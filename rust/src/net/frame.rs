@@ -1,0 +1,734 @@
+//! Binary v3 frame codec — the length-prefixed wire format of the
+//! binary plane.
+//!
+//! # Frame grammar
+//!
+//! ```text
+//! frame   := magic[4]="PXW3"  payload_len:u32  payload
+//! payload := request_id:u64  op:u8  body
+//! ```
+//!
+//! All integers and floats are little-endian, written through the same
+//! `dataset::io` bulk codecs the artifact format uses (`put_f32_slice`
+//! is one memcpy on LE targets), so query payloads ship as raw f32
+//! bytes instead of JSON decimal text. The trailing `3` in the magic is
+//! the protocol version: a future incompatible revision changes the
+//! magic, so an old server sees a bad magic (fatal, typed) rather than
+//! misparsing. The first magic byte `P` is disjoint from `{` and
+//! whitespace, which is what lets one port carry both planes via a
+//! first-byte sniff.
+//!
+//! # Ops
+//!
+//! Request ops (client → server): [`OP_QUERY`] carries a typed
+//! [`QueryRequest`] plus a per-request deadline; [`OP_ADMIN`] carries
+//! one v2 JSON admin line verbatim (status/reload/insert/...), so the
+//! JSON codec in [`crate::api::wire`] remains the single source of
+//! truth for admin semantics. Response ops (server → client):
+//! [`OP_QUERY_OK`] (typed [`QueryResponse`]), [`OP_ADMIN_OK`] (JSON
+//! response line), [`OP_ERROR`] (typed [`ApiError`] — decode failures,
+//! admission sheds). Responses echo the request id, which is how one
+//! connection pipelines many in-flight requests: ids need not return in
+//! send order.
+//!
+//! # Bounded decode
+//!
+//! Decoding NEVER allocates a frame's self-declared length up front.
+//! The connection layer caps `payload_len` at [`MAX_FRAME_LEN`] before
+//! buffering and only ever grows buffers by bytes actually received;
+//! [`decode_payload`] then parses a fully-received slice through
+//! [`Reader`], whose `take` bounds every vector length against the real
+//! remaining bytes (with `checked_mul` on counts) before allocating.
+
+use crate::api::wire;
+use crate::api::{
+    ApiError, ApiErrorCode, NeighborList, QueryOptions, QueryRequest, QueryResponse, SearchMode,
+    MAX_BATCH_QUERIES,
+};
+use crate::dataset::io::{put_f32_slice, put_str, put_u32, put_u32_slice, put_u64, Reader};
+use crate::search::SearchStats;
+use crate::util::json::{self, Json};
+
+/// Frame magic; the trailing ASCII digit is the wire protocol version.
+pub const MAGIC: [u8; 4] = *b"PXW3";
+/// Fixed bytes before the payload: magic + u32 payload length.
+pub const HEADER_LEN: usize = 8;
+/// Upper bound on a payload a peer may declare (64 MiB — comfortably
+/// above `MAX_BATCH_QUERIES` float queries, far below an allocation
+/// that could be weaponized).
+pub const MAX_FRAME_LEN: usize = 1 << 26;
+
+/// Client → server: typed query batch.
+pub const OP_QUERY: u8 = 0x01;
+/// Client → server: one v2 JSON admin line in the body.
+pub const OP_ADMIN: u8 = 0x02;
+/// Server → client: typed [`QueryResponse`].
+pub const OP_QUERY_OK: u8 = 0x81;
+/// Server → client: JSON admin response line in the body.
+pub const OP_ADMIN_OK: u8 = 0x82;
+/// Server → client: typed [`ApiError`] for the echoed request id.
+pub const OP_ERROR: u8 = 0x83;
+
+/// One decoded frame: the multiplexing id plus a typed body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub request_id: u64,
+    pub body: FrameBody,
+}
+
+/// Typed frame bodies (see module docs for the op inventory).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FrameBody {
+    Query {
+        request: QueryRequest,
+        /// Per-request deadline in µs of queue wait the client will
+        /// tolerate; 0 means "server default".
+        deadline_us: u32,
+    },
+    Admin {
+        line: String,
+    },
+    QueryOk {
+        response: QueryResponse,
+    },
+    AdminOk {
+        line: String,
+    },
+    Error {
+        error: ApiError,
+    },
+}
+
+fn code_to_u8(c: ApiErrorCode) -> u8 {
+    match c {
+        ApiErrorCode::BadRequest => 1,
+        ApiErrorCode::DimMismatch => 2,
+        ApiErrorCode::Closed => 3,
+        ApiErrorCode::Internal => 4,
+        ApiErrorCode::Overloaded => 5,
+    }
+}
+
+fn code_from_u8(b: u8) -> ApiErrorCode {
+    match b {
+        1 => ApiErrorCode::BadRequest,
+        2 => ApiErrorCode::DimMismatch,
+        3 => ApiErrorCode::Closed,
+        5 => ApiErrorCode::Overloaded,
+        // Unknown codes degrade to Internal — same forward-compat rule
+        // as the JSON plane's decode_error.
+        _ => ApiErrorCode::Internal,
+    }
+}
+
+fn mode_to_u8(m: SearchMode) -> u8 {
+    match m {
+        SearchMode::Accurate => 0,
+        SearchMode::PqAdt => 1,
+        SearchMode::Hybrid => 2,
+    }
+}
+
+fn mode_from_u8(b: u8) -> Result<SearchMode, ApiError> {
+    match b {
+        0 => Ok(SearchMode::Accurate),
+        1 => Ok(SearchMode::PqAdt),
+        2 => Ok(SearchMode::Hybrid),
+        _ => Err(ApiError::bad_request(format!("frame: unknown mode {b}"))),
+    }
+}
+
+/// `Option<usize>` on the wire: `u32::MAX` is `None`.
+fn opt_to_u32(o: Option<usize>) -> u32 {
+    match o {
+        Some(v) => (v as u32).min(u32::MAX - 1),
+        None => u32::MAX,
+    }
+}
+
+fn opt_from_u32(x: u32) -> Option<usize> {
+    if x == u32::MAX {
+        None
+    } else {
+        Some(x as usize)
+    }
+}
+
+/// Start a frame: magic + length placeholder. Returns the payload start
+/// offset for [`finish_frame`].
+fn begin_frame(buf: &mut Vec<u8>, request_id: u64, op: u8) -> usize {
+    buf.extend_from_slice(&MAGIC);
+    put_u32(buf, 0); // patched by finish_frame
+    let start = buf.len();
+    put_u64(buf, request_id);
+    buf.push(op);
+    start
+}
+
+fn finish_frame(buf: &mut Vec<u8>, start: usize) {
+    let len = (buf.len() - start) as u32;
+    buf[start - 4..start].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Append an [`OP_QUERY`] frame.
+pub fn encode_query(buf: &mut Vec<u8>, request_id: u64, req: &QueryRequest, deadline_us: u32) {
+    let start = begin_frame(buf, request_id, OP_QUERY);
+    put_u32(buf, req.k as u32);
+    put_u32(buf, deadline_us);
+    buf.push(req.options.want_stats as u8);
+    buf.push(mode_to_u8(req.options.mode));
+    put_u32(buf, opt_to_u32(req.options.l_override));
+    put_u32(buf, opt_to_u32(req.options.early_term_tau));
+    put_u32(buf, opt_to_u32(req.options.rerank));
+    put_u32(buf, req.vectors.len() as u32);
+    let dim = req.vectors.first().map_or(0, Vec::len);
+    put_u32(buf, dim as u32);
+    for v in &req.vectors {
+        debug_assert_eq!(v.len(), dim, "ragged batches are not encodable");
+        put_f32_slice(buf, v);
+    }
+    finish_frame(buf, start);
+}
+
+/// Append an [`OP_ADMIN`] frame carrying one v2 JSON request line.
+pub fn encode_admin(buf: &mut Vec<u8>, request_id: u64, line: &str) {
+    let start = begin_frame(buf, request_id, OP_ADMIN);
+    buf.extend_from_slice(line.as_bytes());
+    finish_frame(buf, start);
+}
+
+/// Append an [`OP_QUERY_OK`] frame.
+pub fn encode_query_ok(buf: &mut Vec<u8>, request_id: u64, resp: &QueryResponse) {
+    let start = begin_frame(buf, request_id, OP_QUERY_OK);
+    put_u64(buf, resp.server_latency_us);
+    match &resp.stats {
+        Some(s) => {
+            buf.push(1);
+            put_stats(buf, s);
+        }
+        None => buf.push(0),
+    }
+    put_u32(buf, resp.results.len() as u32);
+    for (i, nl) in resp.results.iter().enumerate() {
+        match resp.errors.get(i).and_then(Option::as_ref) {
+            Some(e) => {
+                buf.push(1);
+                buf.push(code_to_u8(e.code));
+                put_str(buf, &e.message);
+            }
+            None => {
+                buf.push(0);
+                put_u32(buf, nl.ids.len() as u32);
+                put_u32_slice(buf, &nl.ids);
+                put_f32_slice(buf, &nl.dists);
+            }
+        }
+    }
+    finish_frame(buf, start);
+}
+
+/// Append an [`OP_ADMIN_OK`] frame carrying one JSON response line.
+pub fn encode_admin_ok(buf: &mut Vec<u8>, request_id: u64, line: &str) {
+    let start = begin_frame(buf, request_id, OP_ADMIN_OK);
+    buf.extend_from_slice(line.as_bytes());
+    finish_frame(buf, start);
+}
+
+/// Append an [`OP_ERROR`] frame.
+pub fn encode_error_frame(buf: &mut Vec<u8>, request_id: u64, e: &ApiError) {
+    let start = begin_frame(buf, request_id, OP_ERROR);
+    buf.push(code_to_u8(e.code));
+    put_str(buf, &e.message);
+    finish_frame(buf, start);
+}
+
+fn put_stats(buf: &mut Vec<u8>, s: &SearchStats) {
+    put_u64(buf, s.pq_dists as u64);
+    put_u64(buf, s.exact_dists as u64);
+    put_u64(buf, s.hops as u64);
+    put_u64(buf, s.sorts as u64);
+    put_u64(buf, s.bytes_index);
+    put_u64(buf, s.bytes_pq);
+    put_u64(buf, s.bytes_raw);
+    put_u64(buf, s.et_iterations as u64);
+    put_u64(buf, s.adt_builds as u64);
+    put_u64(buf, s.queue_wait_us);
+    put_u64(buf, s.cold_reads as u64);
+    put_u64(buf, s.cold_bytes);
+    put_u64(buf, s.cache_hits as u64);
+    put_u64(buf, s.cache_misses as u64);
+    put_u64(buf, s.lsh_probes as u64);
+    buf.push(s.early_terminated as u8);
+}
+
+fn read_stats(r: &mut Reader<'_>) -> crate::util::error::Result<SearchStats> {
+    Ok(SearchStats {
+        pq_dists: r.u64()? as usize,
+        exact_dists: r.u64()? as usize,
+        hops: r.u64()? as usize,
+        sorts: r.u64()? as usize,
+        bytes_index: r.u64()?,
+        bytes_pq: r.u64()?,
+        bytes_raw: r.u64()?,
+        et_iterations: r.u64()? as usize,
+        adt_builds: r.u64()? as usize,
+        queue_wait_us: r.u64()?,
+        cold_reads: r.u64()? as usize,
+        cold_bytes: r.u64()?,
+        cache_hits: r.u64()? as usize,
+        cache_misses: r.u64()? as usize,
+        lsh_probes: r.u64()? as usize,
+        early_terminated: r.take(1)?[0] != 0,
+    })
+}
+
+/// Validate a frame header. `h` must hold at least [`HEADER_LEN`]
+/// bytes; returns the declared payload length, rejecting a bad magic or
+/// a length above [`MAX_FRAME_LEN`] BEFORE anyone allocates for it.
+pub fn parse_header(h: &[u8]) -> Result<usize, ApiError> {
+    assert!(h.len() >= HEADER_LEN);
+    if h[..4] != MAGIC {
+        return Err(ApiError::bad_request(format!(
+            "frame: bad magic {:02x}{:02x}{:02x}{:02x}",
+            h[0], h[1], h[2], h[3]
+        )));
+    }
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if len < 9 {
+        // request_id + op is the minimum payload.
+        return Err(ApiError::bad_request(format!("frame: runt payload {len}")));
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(ApiError::bad_request(format!(
+            "frame: declared payload {len} exceeds max {MAX_FRAME_LEN}"
+        )));
+    }
+    Ok(len)
+}
+
+/// Decode one fully-received payload (the bytes after the header).
+///
+/// On failure the error is attributed to the best-effort request id
+/// parsed from the payload prefix (0 when even that is missing), so the
+/// server can answer the offending request with a typed [`OP_ERROR`]
+/// frame while the connection survives.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, (u64, ApiError)> {
+    let mut r = Reader::new(payload);
+    let request_id = r.u64().map_err(|_| {
+        (0u64, ApiError::bad_request("frame: payload too short for request id"))
+    })?;
+    let fail = |m: String| (request_id, ApiError::bad_request(m));
+    let op = r.take(1).map_err(|e| fail(format!("frame: {e}")))?[0];
+    let body = match op {
+        OP_QUERY => decode_query_body(&mut r).map_err(|e| (request_id, e))?,
+        OP_ADMIN => FrameBody::Admin {
+            line: utf8_rest(&mut r, payload).map_err(|e| (request_id, e))?,
+        },
+        OP_QUERY_OK => decode_query_ok_body(&mut r).map_err(|e| (request_id, e))?,
+        OP_ADMIN_OK => FrameBody::AdminOk {
+            line: utf8_rest(&mut r, payload).map_err(|e| (request_id, e))?,
+        },
+        OP_ERROR => {
+            let code = code_from_u8(r.take(1).map_err(|e| fail(format!("frame: {e}")))?[0]);
+            let message = r.str().map_err(|e| fail(format!("frame: {e}")))?;
+            FrameBody::Error {
+                error: ApiError::new(code, message),
+            }
+        }
+        other => return Err(fail(format!("frame: unknown op tag {other:#04x}"))),
+    };
+    if r.pos() != payload.len() {
+        return Err(fail(format!(
+            "frame: {} trailing bytes after body",
+            payload.len() - r.pos()
+        )));
+    }
+    Ok(Frame { request_id, body })
+}
+
+fn utf8_rest(r: &mut Reader<'_>, payload: &[u8]) -> Result<String, ApiError> {
+    let rest = r
+        .take(payload.len() - r.pos())
+        .map_err(|e| ApiError::bad_request(format!("frame: {e}")))?;
+    String::from_utf8(rest.to_vec())
+        .map_err(|_| ApiError::bad_request("frame: admin body is not UTF-8"))
+}
+
+fn decode_query_body(r: &mut Reader<'_>) -> Result<FrameBody, ApiError> {
+    let bad = |e: crate::util::error::Error| ApiError::bad_request(format!("frame: {e}"));
+    let k = r.u32().map_err(bad)? as usize;
+    let deadline_us = r.u32().map_err(bad)?;
+    let flags = r.take(1).map_err(bad)?[0];
+    let mode = mode_from_u8(r.take(1).map_err(bad)?[0])?;
+    let l_override = opt_from_u32(r.u32().map_err(bad)?);
+    let early_term_tau = opt_from_u32(r.u32().map_err(bad)?);
+    let rerank = opt_from_u32(r.u32().map_err(bad)?);
+    let n = r.u32().map_err(bad)? as usize;
+    let dim = r.u32().map_err(bad)? as usize;
+    if n > MAX_BATCH_QUERIES {
+        return Err(ApiError::bad_request(format!(
+            "frame: batch of {n} exceeds max {MAX_BATCH_QUERIES}"
+        )));
+    }
+    // f32_vec bounds dim against the bytes actually present (take +
+    // checked_mul), so a lying dim fails typed instead of allocating.
+    let mut vectors = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        vectors.push(r.f32_vec(dim).map_err(bad)?);
+    }
+    Ok(FrameBody::Query {
+        request: QueryRequest {
+            vectors,
+            k,
+            options: QueryOptions {
+                mode,
+                l_override,
+                early_term_tau,
+                rerank,
+                want_stats: flags & 1 != 0,
+            },
+        },
+        deadline_us,
+    })
+}
+
+fn decode_query_ok_body(r: &mut Reader<'_>) -> Result<FrameBody, ApiError> {
+    let bad = |e: crate::util::error::Error| ApiError::bad_request(format!("frame: {e}"));
+    let server_latency_us = r.u64().map_err(bad)?;
+    let stats = match r.take(1).map_err(bad)?[0] {
+        0 => None,
+        _ => Some(read_stats(r).map_err(bad)?),
+    };
+    let n = r.u32().map_err(bad)? as usize;
+    if n > MAX_BATCH_QUERIES {
+        return Err(ApiError::bad_request(format!(
+            "frame: response batch of {n} exceeds max {MAX_BATCH_QUERIES}"
+        )));
+    }
+    let mut results = Vec::with_capacity(n.min(1024));
+    let mut errors = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        match r.take(1).map_err(bad)?[0] {
+            0 => {
+                let m = r.u32().map_err(bad)? as usize;
+                let ids = r.u32_vec(m).map_err(bad)?;
+                let dists = r.f32_vec(m).map_err(bad)?;
+                results.push(NeighborList { ids, dists });
+                errors.push(None);
+            }
+            1 => {
+                let code = code_from_u8(r.take(1).map_err(bad)?[0]);
+                let message = r.str().map_err(bad)?;
+                results.push(NeighborList {
+                    ids: Vec::new(),
+                    dists: Vec::new(),
+                });
+                errors.push(Some(ApiError::new(code, message)));
+            }
+            t => {
+                return Err(ApiError::bad_request(format!(
+                    "frame: unknown result tag {t}"
+                )))
+            }
+        }
+    }
+    Ok(FrameBody::QueryOk {
+        response: QueryResponse {
+            results,
+            errors,
+            stats,
+            server_latency_us,
+        },
+    })
+}
+
+/// Encode one whole frame from its typed form — the symmetric inverse
+/// of header parse + [`decode_payload`]; used by the loopback bench and
+/// anywhere a [`Frame`] value is already in hand.
+pub fn encode_frame(buf: &mut Vec<u8>, frame: &Frame) {
+    match &frame.body {
+        FrameBody::Query {
+            request,
+            deadline_us,
+        } => encode_query(buf, frame.request_id, request, *deadline_us),
+        FrameBody::Admin { line } => encode_admin(buf, frame.request_id, line),
+        FrameBody::QueryOk { response } => encode_query_ok(buf, frame.request_id, response),
+        FrameBody::AdminOk { line } => encode_admin_ok(buf, frame.request_id, line),
+        FrameBody::Error { error } => encode_error_frame(buf, frame.request_id, error),
+    }
+}
+
+/// Decode one whole frame from a buffer that holds exactly one frame.
+pub fn decode_frame(buf: &[u8]) -> Result<Frame, ApiError> {
+    if buf.len() < HEADER_LEN {
+        return Err(ApiError::bad_request("frame: short header"));
+    }
+    let len = parse_header(&buf[..HEADER_LEN])?;
+    if buf.len() != HEADER_LEN + len {
+        return Err(ApiError::bad_request(format!(
+            "frame: buffer holds {} payload bytes, header declares {len}",
+            buf.len() - HEADER_LEN
+        )));
+    }
+    decode_payload(&buf[HEADER_LEN..]).map_err(|(_, e)| e)
+}
+
+/// Convenience used by clients: turn a decoded response-plane frame into
+/// the per-request outcome, typed. Request-plane ops are a protocol
+/// violation in a response stream.
+pub fn response_outcome(frame: Frame) -> (u64, Result<FrameBody, ApiError>) {
+    let id = frame.request_id;
+    match frame.body {
+        FrameBody::Error { error } => (id, Err(error)),
+        FrameBody::Query { .. } | FrameBody::Admin { .. } => (
+            id,
+            Err(ApiError::bad_request(
+                "frame: request op on the response plane",
+            )),
+        ),
+        ok => (id, Ok(ok)),
+    }
+}
+
+/// Parse an admin response line back into [`Json`] (clients of
+/// [`OP_ADMIN_OK`] bodies).
+pub fn parse_admin_line(line: &str) -> Result<Json, ApiError> {
+    json::parse(line).map_err(|e| ApiError::internal(format!("admin line: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> QueryRequest {
+        QueryRequest {
+            vectors: vec![vec![1.0, -2.5, 3.25], vec![0.0, 7.5, -0.125]],
+            k: 9,
+            options: QueryOptions {
+                mode: SearchMode::Accurate,
+                l_override: Some(77),
+                early_term_tau: None,
+                rerank: Some(3),
+                want_stats: true,
+            },
+        }
+    }
+
+    #[test]
+    fn query_frame_roundtrip() {
+        let req = sample_request();
+        let mut buf = Vec::new();
+        encode_query(&mut buf, 42, &req, 1500);
+        let f = decode_frame(&buf).unwrap();
+        assert_eq!(f.request_id, 42);
+        match f.body {
+            FrameBody::Query {
+                request,
+                deadline_us,
+            } => {
+                assert_eq!(deadline_us, 1500);
+                assert_eq!(request.k, req.k);
+                assert_eq!(request.vectors, req.vectors);
+                assert_eq!(request.options.mode, req.options.mode);
+                assert_eq!(request.options.l_override, req.options.l_override);
+                assert_eq!(request.options.early_term_tau, None);
+                assert_eq!(request.options.rerank, Some(3));
+                assert!(request.options.want_stats);
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_and_default_option_queries_roundtrip() {
+        // None options map through the u32::MAX sentinel; empty batch is
+        // representable (the service rejects it, but the wire must not).
+        let req = QueryRequest {
+            vectors: vec![],
+            k: 1,
+            options: QueryOptions::default(),
+        };
+        let mut buf = Vec::new();
+        encode_query(&mut buf, 7, &req, 0);
+        match decode_frame(&buf).unwrap().body {
+            FrameBody::Query { request, .. } => {
+                assert!(request.vectors.is_empty());
+                assert_eq!(request.options, QueryOptions::default());
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn query_ok_roundtrip_with_stats_and_per_query_error() {
+        let response = QueryResponse {
+            results: vec![
+                NeighborList {
+                    ids: vec![3, 1, 4],
+                    dists: vec![0.5, 1.5, 2.5],
+                },
+                NeighborList {
+                    ids: vec![],
+                    dists: vec![],
+                },
+            ],
+            errors: vec![None, Some(ApiError::internal("worker panic"))],
+            stats: Some(SearchStats {
+                pq_dists: 10,
+                exact_dists: 20,
+                hops: 30,
+                sorts: 40,
+                bytes_index: 50,
+                bytes_pq: 60,
+                bytes_raw: 70,
+                et_iterations: 80,
+                early_terminated: true,
+                adt_builds: 90,
+                queue_wait_us: 100,
+                cold_reads: 110,
+                cold_bytes: 120,
+                cache_hits: 130,
+                cache_misses: 140,
+                lsh_probes: 150,
+            }),
+            server_latency_us: 777,
+        };
+        let mut buf = Vec::new();
+        encode_query_ok(&mut buf, 999, &response);
+        let f = decode_frame(&buf).unwrap();
+        assert_eq!(f.request_id, 999);
+        match f.body {
+            FrameBody::QueryOk { response: got } => {
+                assert_eq!(got.server_latency_us, 777);
+                assert_eq!(got.results, response.results);
+                assert_eq!(got.errors, response.errors);
+                let s = got.stats.unwrap();
+                assert_eq!(s, response.stats.unwrap());
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admin_and_error_frames_roundtrip() {
+        let mut buf = Vec::new();
+        encode_admin(&mut buf, 1, r#"{"v":2,"op":"status"}"#);
+        encode_admin_ok(&mut buf, 1, r#"{"ok":true}"#);
+        encode_error_frame(&mut buf, 2, &ApiError::overloaded("shed"));
+        // Three frames back to back: walk them via the header.
+        let mut off = 0;
+        let mut frames = Vec::new();
+        while off < buf.len() {
+            let len = parse_header(&buf[off..off + HEADER_LEN]).unwrap();
+            frames.push(decode_payload(&buf[off + HEADER_LEN..off + HEADER_LEN + len]).unwrap());
+            off += HEADER_LEN + len;
+        }
+        assert_eq!(frames.len(), 3);
+        assert_eq!(
+            frames[0].body,
+            FrameBody::Admin {
+                line: r#"{"v":2,"op":"status"}"#.into()
+            }
+        );
+        assert_eq!(
+            frames[1].body,
+            FrameBody::AdminOk {
+                line: r#"{"ok":true}"#.into()
+            }
+        );
+        match &frames[2].body {
+            FrameBody::Error { error } => {
+                assert_eq!(error.code, ApiErrorCode::Overloaded);
+                assert_eq!(error.message, "shed");
+            }
+            other => panic!("wrong body: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_runt_and_giant_lengths() {
+        let mut h = [0u8; HEADER_LEN];
+        h[..4].copy_from_slice(b"JUNK");
+        assert!(parse_header(&h).unwrap_err().message.contains("bad magic"));
+        h[..4].copy_from_slice(&MAGIC);
+        h[4..].copy_from_slice(&3u32.to_le_bytes());
+        assert!(parse_header(&h).unwrap_err().message.contains("runt"));
+        h[4..].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let e = parse_header(&h).unwrap_err();
+        assert_eq!(e.code, ApiErrorCode::BadRequest);
+        assert!(e.message.contains("exceeds max"));
+        h[4..].copy_from_slice(&(MAX_FRAME_LEN as u32).to_le_bytes());
+        assert_eq!(parse_header(&h).unwrap(), MAX_FRAME_LEN);
+    }
+
+    #[test]
+    fn truncated_payload_fails_typed_with_attributed_id() {
+        let mut buf = Vec::new();
+        encode_query(&mut buf, 12345, &sample_request(), 0);
+        // Chop bytes off the payload tail: every prefix that still holds
+        // the request id must attribute the error to id 12345.
+        for cut in HEADER_LEN + 9..buf.len() - 1 {
+            let (id, e) = decode_payload(&buf[HEADER_LEN..cut]).unwrap_err();
+            assert_eq!(id, 12345, "cut at {cut}");
+            assert_eq!(e.code, ApiErrorCode::BadRequest);
+        }
+        // Shorter than the id: attribution falls back to 0.
+        let (id, _) = decode_payload(&buf[HEADER_LEN..HEADER_LEN + 4]).unwrap_err();
+        assert_eq!(id, 0);
+    }
+
+    #[test]
+    fn unknown_op_and_trailing_garbage_fail_typed() {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 5);
+        payload.push(0x7f);
+        let (id, e) = decode_payload(&payload).unwrap_err();
+        assert_eq!(id, 5);
+        assert!(e.message.contains("unknown op"));
+
+        let mut buf = Vec::new();
+        encode_admin(&mut buf, 6, "{}");
+        // Rewrite the op to OP_ERROR whose body won't consume the rest.
+        let mut payload = buf[HEADER_LEN..].to_vec();
+        payload[8] = OP_QUERY;
+        let (id, e) = decode_payload(&payload).unwrap_err();
+        assert_eq!(id, 6);
+        assert_eq!(e.code, ApiErrorCode::BadRequest);
+    }
+
+    #[test]
+    fn oversized_batch_count_rejected_before_allocation() {
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 9);
+        payload.push(OP_QUERY);
+        put_u32(&mut payload, 10); // k
+        put_u32(&mut payload, 0); // deadline
+        payload.push(0); // flags
+        payload.push(2); // mode hybrid
+        put_u32(&mut payload, u32::MAX);
+        put_u32(&mut payload, u32::MAX);
+        put_u32(&mut payload, u32::MAX);
+        put_u32(&mut payload, u32::MAX); // n: absurd
+        put_u32(&mut payload, 1024); // dim
+        let (id, e) = decode_payload(&payload).unwrap_err();
+        assert_eq!(id, 9);
+        assert!(e.message.contains("exceeds max"));
+    }
+
+    #[test]
+    fn response_outcome_types_errors_and_rejects_request_ops() {
+        let (id, out) = response_outcome(Frame {
+            request_id: 3,
+            body: FrameBody::Error {
+                error: ApiError::overloaded("x"),
+            },
+        });
+        assert_eq!(id, 3);
+        assert_eq!(out.unwrap_err().code, ApiErrorCode::Overloaded);
+        let (_, out) = response_outcome(Frame {
+            request_id: 4,
+            body: FrameBody::Admin { line: "{}".into() },
+        });
+        assert_eq!(out.unwrap_err().code, ApiErrorCode::BadRequest);
+    }
+}

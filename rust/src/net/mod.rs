@@ -1,0 +1,46 @@
+//! Scalable wire front end: binary framed protocol, readiness event
+//! loop, request multiplexing, and admission control.
+//!
+//! The JSON line protocol in [`crate::api::wire`] is a fine debug and
+//! compat plane, but it pays float-to-text costs per vector and the
+//! threaded server behind it pins one OS thread per connection. This
+//! module is the serving path built for throughput:
+//!
+//! - [`frame`] — the v3 length-prefixed binary frame format (`PXW3`
+//!   magic). Query vectors travel as raw little-endian `f32`, responses
+//!   carry the same [`crate::api::QueryResponse`] payloads bit for bit,
+//!   and every frame carries a `u64` request id so one connection can
+//!   pipeline many requests and match responses out of order. Decoding
+//!   is strictly bounded: declared lengths are validated against bytes
+//!   actually present before any allocation.
+//! - [`conn`] — per-connection incremental decoder. Sniffs the first
+//!   byte to pick the plane (`{` = JSON lines, `P` = binary frames), so
+//!   both protocols share one port; resynchronises on corrupt framing
+//!   instead of dying.
+//! - [`poll`] — the readiness primitive: raw `epoll(7)` on Linux,
+//!   `poll(2)` on other unix, both via direct syscall declarations (no
+//!   new dependencies), plus a loopback-socket [`poll::Waker`].
+//! - [`admission`] — typed load shedding. A bounded in-flight budget
+//!   rejects at arrival; queue-wait and per-request deadlines reject at
+//!   dispatch; both surface as [`crate::api::ApiErrorCode::Overloaded`]
+//!   so clients can tell "backoff and retry" from "your request is
+//!   broken". A [`Clock`] injection point keeps the policy testable
+//!   with simulated time.
+//! - [`server`] — [`NetServer`]: one acceptor + event-loop thread
+//!   owning all sockets, a dispatcher pool executing decoded requests
+//!   on the existing [`crate::coordinator::SearchService`] path, and
+//!   graceful drain shared by both planes.
+//! - [`client`] — [`BinClient`]: the pipelining binary-plane client the
+//!   tests, examples, and open-loop load generator build on.
+
+pub mod admission;
+pub mod client;
+pub mod conn;
+pub mod frame;
+pub mod poll;
+pub mod server;
+
+pub use admission::{Admission, AdmissionConfig, AdmissionCounters, Clock};
+pub use client::BinClient;
+pub use conn::{ConnEvent, ConnReader, Plane};
+pub use server::{NetConfig, NetServer};

@@ -1,0 +1,597 @@
+//! The event-loop front door: one acceptor + readiness loop owning
+//! every connection, a small dispatcher pool executing decoded work on
+//! the existing [`SearchService`]/[`BatcherHandle`] path, and the
+//! [`Admission`] layer between them.
+//!
+//! ```text
+//!            ┌──────────────── event-loop thread ───────────────┐
+//! accept ─▶  │ Poller: listener, waker, N conns (nonblocking)   │
+//!            │  read → ConnReader → {JsonLine, Frame, ProtoErr} │
+//!            │  admission.try_admit (queries) → work queue      │
+//!            │  outbox flush ← waker ← dispatchers              │
+//!            └──────────────────────────────────────────────────┘
+//!                 │ Work::{Query, Admin, JsonLine}      ▲ bytes
+//!                 ▼                                     │
+//!            dispatcher threads: check_dispatch → ServiceCell
+//!            query / respond_json_line → encode → conn outbox
+//! ```
+//!
+//! One thread owns ALL socket I/O (the readiness loop); dispatchers
+//! never touch sockets — they append encoded responses to a per-conn
+//! outbox and ring the [`Waker`]. A connection therefore pipelines
+//! freely: the loop keeps decoding new frames while dispatchers run
+//! earlier ones, and responses are matched by request id, not order.
+//!
+//! Both planes ride one port: the sniff in [`ConnReader`] routes JSON
+//! lines through the same [`respond_json_line`] dispatch as the
+//! threaded [`crate::coordinator::Server`], so op semantics are shared
+//! by construction. Admission control gates QUERY work only — the
+//! admin plane must stay responsive exactly when the server is in
+//! trouble.
+//!
+//! Shutdown (`stop()`, or a wire `shutdown` op on either plane) drains:
+//! the listener refuses new connections, queued work finishes, outboxes
+//! flush, and then the loop exits — with a 5 s hard cap so a wedged
+//! peer cannot hold the process open.
+
+use super::admission::{Admission, AdmissionConfig, Clock};
+use super::conn::{ConnEvent, ConnReader, Plane};
+use super::frame::{self, FrameBody};
+use super::poll::{source_fd, Event, Poller, Waker};
+use crate::api::{ApiError, QueryRequest};
+use crate::coordinator::batcher::BatcherHandle;
+use crate::coordinator::server::respond_json_line;
+use crate::coordinator::ServiceCell;
+use crate::util::error::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Tunables for [`NetServer::start`].
+#[derive(Clone)]
+pub struct NetConfig {
+    /// `127.0.0.1` port to bind (0 = ephemeral).
+    pub port: u16,
+    pub admission: AdmissionConfig,
+    /// Close connections that send nothing for this long.
+    pub idle_timeout: Duration,
+    /// Dispatcher threads (0 = auto: half the cores, clamped to 2..=8).
+    pub dispatchers: usize,
+    /// Time source for admission (tests inject [`Clock::fake`]).
+    pub clock: Clock,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            port: 0,
+            admission: AdmissionConfig::default(),
+            idle_timeout: Duration::from_secs(300),
+            dispatchers: 0,
+            clock: Clock::wall(),
+        }
+    }
+}
+
+const ST_RUNNING: u8 = 0;
+const ST_DRAINING: u8 = 1;
+const ST_STOPPED: u8 = 2;
+
+/// Per-connection state shared between the loop and dispatchers.
+struct ConnShared {
+    /// Encoded response bytes awaiting the loop's write.
+    out: Mutex<Vec<u8>>,
+    /// Set when the loop tore the connection down (dispatchers then
+    /// drop their output instead of queueing bytes nobody will send).
+    closed: AtomicBool,
+    /// Binary request ids currently in flight on this connection
+    /// (duplicate detection + response bookkeeping).
+    in_flight: Mutex<HashSet<u64>>,
+}
+
+impl ConnShared {
+    fn push_out(&self, bytes: &[u8]) {
+        if !self.closed.load(Ordering::Acquire) {
+            self.out.lock().unwrap().extend_from_slice(bytes);
+        }
+    }
+}
+
+/// One decoded unit for the dispatcher pool.
+enum Work {
+    JsonLine {
+        conn: Arc<ConnShared>,
+        line: String,
+    },
+    Query {
+        conn: Arc<ConnShared>,
+        request_id: u64,
+        request: QueryRequest,
+        deadline_us: u32,
+        ticket: super::admission::AdmitTicket,
+    },
+    Admin {
+        conn: Arc<ConnShared>,
+        request_id: u64,
+        line: String,
+    },
+}
+
+struct Shared {
+    state: AtomicU8,
+    admission: Arc<Admission>,
+    queue: Mutex<VecDeque<Work>>,
+    cond: Condvar,
+    waker: Waker,
+    /// Work items enqueued or executing (drain-completion signal).
+    pending: AtomicUsize,
+}
+
+impl Shared {
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    fn begin_drain(&self) {
+        let _ = self
+            .state
+            .compare_exchange(ST_RUNNING, ST_DRAINING, Ordering::AcqRel, Ordering::Relaxed);
+        self.cond.notify_all();
+        self.waker.wake();
+    }
+
+    fn enqueue(&self, w: Work) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        self.queue.lock().unwrap().push_back(w);
+        self.cond.notify_one();
+    }
+}
+
+/// Running binary+JSON front door. Dropping without [`stop`] drains too.
+///
+/// [`stop`]: NetServer::stop
+pub struct NetServer {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    loop_thread: Option<std::thread::JoinHandle<()>>,
+    dispatch_threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `127.0.0.1:cfg.port` and serve whatever `cell` holds.
+    pub fn start(cell: Arc<ServiceCell>, batcher: BatcherHandle, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            state: AtomicU8::new(ST_RUNNING),
+            admission: Arc::new(Admission::new(cfg.admission.clone(), cfg.clock.clone())),
+            queue: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            waker: Waker::new()?,
+            pending: AtomicUsize::new(0),
+        });
+        let n_dispatch = if cfg.dispatchers > 0 {
+            cfg.dispatchers
+        } else {
+            std::thread::available_parallelism()
+                .map(|p| p.get() / 2)
+                .unwrap_or(2)
+                .clamp(2, 8)
+        };
+        let mut dispatch_threads = Vec::with_capacity(n_dispatch);
+        for _ in 0..n_dispatch {
+            let sh = shared.clone();
+            let cell = cell.clone();
+            let bh = batcher.clone();
+            dispatch_threads.push(std::thread::spawn(move || dispatch_loop(&sh, &cell, &bh)));
+        }
+        let sh = shared.clone();
+        let idle_timeout = cfg.idle_timeout;
+        let loop_thread =
+            std::thread::spawn(move || event_loop(listener, &sh, idle_timeout));
+        Ok(NetServer {
+            addr,
+            shared,
+            loop_thread: Some(loop_thread),
+            dispatch_threads,
+        })
+    }
+
+    /// Admission counters (tests, ops introspection).
+    pub fn admission(&self) -> &Admission {
+        &self.shared.admission
+    }
+
+    /// Drain and stop: refuse new connections, finish queued work,
+    /// flush outboxes, then tear down (5 s hard cap).
+    pub fn stop(mut self) {
+        self.shutdown_and_join();
+    }
+
+    fn shutdown_and_join(&mut self) {
+        self.shared.begin_drain();
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
+        }
+        // The loop sets ST_STOPPED on exit; wake every dispatcher so
+        // they observe it.
+        self.shared.cond.notify_all();
+        for t in self.dispatch_threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.loop_thread.is_some() {
+            self.shutdown_and_join();
+        }
+    }
+}
+
+/// Dispatcher: execute one [`Work`] item against the served index and
+/// hand the encoded response back to the loop via the conn outbox.
+fn dispatch_loop(sh: &Shared, cell: &ServiceCell, batcher: &BatcherHandle) {
+    loop {
+        let work = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(w) = q.pop_front() {
+                    break Some(w);
+                }
+                if sh.state() == ST_STOPPED {
+                    break None;
+                }
+                let (guard, _) = sh
+                    .cond
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        let Some(work) = work else { return };
+        match work {
+            Work::JsonLine { conn, line } => {
+                let (resp, quit) = respond_json_line(&line, cell, batcher);
+                let mut bytes = resp.to_string_compact().into_bytes();
+                bytes.push(b'\n');
+                conn.push_out(&bytes);
+                if quit {
+                    sh.begin_drain();
+                }
+            }
+            Work::Query {
+                conn,
+                request_id,
+                request,
+                deadline_us,
+                ticket,
+            } => {
+                let mut buf = Vec::new();
+                match sh.admission.check_dispatch(&ticket, deadline_us) {
+                    Err(e) => frame::encode_error_frame(&mut buf, request_id, &e),
+                    Ok(_wait) => match cell.load().query(&request) {
+                        Ok(resp) => frame::encode_query_ok(&mut buf, request_id, &resp),
+                        Err(e) => frame::encode_error_frame(&mut buf, request_id, &e),
+                    },
+                }
+                sh.admission.finish();
+                conn.in_flight.lock().unwrap().remove(&request_id);
+                conn.push_out(&buf);
+            }
+            Work::Admin {
+                conn,
+                request_id,
+                line,
+            } => {
+                let (resp, quit) = respond_json_line(&line, cell, batcher);
+                let mut buf = Vec::new();
+                frame::encode_admin_ok(&mut buf, request_id, &resp.to_string_compact());
+                conn.in_flight.lock().unwrap().remove(&request_id);
+                conn.push_out(&buf);
+                if quit {
+                    sh.begin_drain();
+                }
+            }
+        }
+        sh.pending.fetch_sub(1, Ordering::AcqRel);
+        sh.waker.wake();
+    }
+}
+
+/// Loop-side connection bookkeeping.
+struct Conn {
+    stream: TcpStream,
+    reader: ConnReader,
+    shared: Arc<ConnShared>,
+    last_activity: Instant,
+    want_write: bool,
+    /// A fatal protocol error was queued: close once the outbox drains.
+    close_after_flush: bool,
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_FIRST_CONN: u64 = 2;
+const READ_CHUNK: usize = 16 * 1024;
+
+fn event_loop(listener: TcpListener, sh: &Shared, idle_timeout: Duration) {
+    let mut poller = match Poller::new() {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    if poller.add(source_fd(&listener), TOKEN_LISTENER, false).is_err() {
+        return;
+    }
+    let _ = poller.add(source_fd(sh.waker.rx()), TOKEN_WAKER, false);
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = TOKEN_FIRST_CONN;
+    let mut events: Vec<Event> = Vec::new();
+    let mut drain_started: Option<Instant> = None;
+    loop {
+        events.clear();
+        if poller.wait(&mut events, 100).is_err() {
+            break;
+        }
+        let draining = sh.state() != ST_RUNNING;
+        if draining && drain_started.is_none() {
+            drain_started = Some(Instant::now());
+        }
+        for ev in events.iter().copied() {
+            match ev.token {
+                TOKEN_LISTENER => loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if draining {
+                                drop(stream); // refuse: drain means drain
+                                continue;
+                            }
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            stream.set_nodelay(true).ok();
+                            let token = next_token;
+                            next_token += 1;
+                            if poller.add(source_fd(&stream), token, false).is_err() {
+                                continue;
+                            }
+                            conns.insert(
+                                token,
+                                Conn {
+                                    stream,
+                                    reader: ConnReader::new(),
+                                    shared: Arc::new(ConnShared {
+                                        out: Mutex::new(Vec::new()),
+                                        closed: AtomicBool::new(false),
+                                        in_flight: Mutex::new(HashSet::new()),
+                                    }),
+                                    last_activity: Instant::now(),
+                                    want_write: false,
+                                    close_after_flush: false,
+                                },
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(_) => break,
+                    }
+                },
+                TOKEN_WAKER => sh.waker.drain(),
+                token => {
+                    let mut dead = false;
+                    if let Some(conn) = conns.get_mut(&token) {
+                        if ev.readable {
+                            dead = read_conn(conn, sh);
+                        }
+                        if !dead && ev.writable {
+                            dead = flush_conn(conn, &mut poller, token).is_err();
+                        }
+                    }
+                    if dead {
+                        close_conn(&mut conns, &mut poller, token);
+                    }
+                }
+            }
+        }
+        // Flush every outbox the dispatchers filled (waker rang, or we
+        // were awake anyway). Scanning all conns is fine at these
+        // connection counts; partial writes arm write interest.
+        let tokens: Vec<u64> = conns.keys().copied().collect();
+        for token in tokens {
+            let mut dead = false;
+            let mut idle = false;
+            if let Some(conn) = conns.get_mut(&token) {
+                dead = flush_conn(conn, &mut poller, token).is_err();
+                if !dead && conn.close_after_flush && conn.shared.out.lock().unwrap().is_empty() {
+                    dead = true;
+                }
+                idle = !dead && conn.last_activity.elapsed() >= idle_timeout;
+            }
+            if dead || idle {
+                close_conn(&mut conns, &mut poller, token);
+            }
+        }
+        if draining {
+            let work_done = sh.pending.load(Ordering::Acquire) == 0;
+            let flushed = conns
+                .values()
+                .all(|c| c.shared.out.lock().unwrap().is_empty());
+            let expired = drain_started
+                .map(|t| t.elapsed() > Duration::from_secs(5))
+                .unwrap_or(false);
+            if (work_done && flushed) || expired {
+                break;
+            }
+        }
+    }
+    // Teardown: mark conns closed so dispatchers drop late output.
+    for (_, conn) in conns.iter() {
+        conn.shared.closed.store(true, Ordering::Release);
+    }
+    sh.state.store(ST_STOPPED, Ordering::Release);
+    sh.cond.notify_all();
+}
+
+/// Drain readable bytes into the conn's `ConnReader` and act on every
+/// decoded event. Returns true when the connection is dead (EOF, I/O
+/// error, fatal protocol error with nothing left to flush).
+fn read_conn(conn: &mut Conn, sh: &Shared) -> bool {
+    let mut chunk = [0u8; READ_CHUNK];
+    let mut events = Vec::new();
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => return true, // EOF
+            Ok(n) => {
+                conn.last_activity = Instant::now();
+                conn.reader.push(&chunk[..n], &mut events);
+                // Keep reading: more may be buffered in the kernel.
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+    let draining = sh.state() != ST_RUNNING;
+    for event in events {
+        match event {
+            ConnEvent::JsonLine(line) => {
+                if draining {
+                    let mut bytes = crate::api::wire::encode_error(&ApiError::closed(
+                        "server draining; connection refused new work",
+                    ))
+                    .to_string_compact()
+                    .into_bytes();
+                    bytes.push(b'\n');
+                    conn.shared.push_out(&bytes);
+                } else {
+                    sh.enqueue(Work::JsonLine {
+                        conn: conn.shared.clone(),
+                        line,
+                    });
+                }
+            }
+            ConnEvent::Frame(f) => handle_frame(conn, sh, f, draining),
+            ConnEvent::ProtocolError {
+                request_id,
+                error,
+                fatal,
+            } => {
+                let mut buf = Vec::new();
+                if conn.reader.plane() == Plane::Json {
+                    buf = crate::api::wire::encode_error(&error)
+                        .to_string_compact()
+                        .into_bytes();
+                    buf.push(b'\n');
+                } else {
+                    frame::encode_error_frame(&mut buf, request_id, &error);
+                }
+                conn.shared.push_out(&buf);
+                if fatal {
+                    conn.close_after_flush = true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Route one well-formed inbound frame: admission for queries, straight
+/// enqueue for admin, typed rejection for response-plane ops and
+/// duplicate ids.
+fn handle_frame(conn: &mut Conn, sh: &Shared, f: frame::Frame, draining: bool) {
+    let request_id = f.request_id;
+    let reject = |e: &ApiError| {
+        let mut buf = Vec::new();
+        frame::encode_error_frame(&mut buf, request_id, e);
+        conn.shared.push_out(&buf);
+    };
+    match f.body {
+        FrameBody::Query {
+            request,
+            deadline_us,
+        } => {
+            if draining {
+                return reject(&ApiError::closed("server draining"));
+            }
+            if !conn.shared.in_flight.lock().unwrap().insert(request_id) {
+                return reject(&ApiError::bad_request(format!(
+                    "duplicate in-flight request id {request_id}"
+                )));
+            }
+            match sh.admission.try_admit() {
+                Ok(ticket) => sh.enqueue(Work::Query {
+                    conn: conn.shared.clone(),
+                    request_id,
+                    request,
+                    deadline_us,
+                    ticket,
+                }),
+                Err(e) => {
+                    conn.shared.in_flight.lock().unwrap().remove(&request_id);
+                    reject(&e);
+                }
+            }
+        }
+        FrameBody::Admin { line } => {
+            if draining {
+                return reject(&ApiError::closed("server draining"));
+            }
+            if !conn.shared.in_flight.lock().unwrap().insert(request_id) {
+                return reject(&ApiError::bad_request(format!(
+                    "duplicate in-flight request id {request_id}"
+                )));
+            }
+            sh.enqueue(Work::Admin {
+                conn: conn.shared.clone(),
+                request_id,
+                line,
+            });
+        }
+        FrameBody::QueryOk { .. } | FrameBody::AdminOk { .. } | FrameBody::Error { .. } => {
+            reject(&ApiError::bad_request(
+                "response op on the request plane",
+            ));
+        }
+    }
+}
+
+/// Write as much of the outbox as the socket accepts; arm or disarm
+/// write interest on partial/complete writes. `Err` = connection dead.
+fn flush_conn(conn: &mut Conn, poller: &mut Poller, token: u64) -> std::io::Result<()> {
+    let mut out = conn.shared.out.lock().unwrap();
+    let mut written = 0;
+    while written < out.len() {
+        match conn.stream.write(&out[written..]) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if written > 0 {
+        out.drain(..written);
+        conn.last_activity = Instant::now();
+    }
+    let need_write = !out.is_empty();
+    drop(out);
+    if need_write != conn.want_write {
+        conn.want_write = need_write;
+        let _ = poller.modify(source_fd(&conn.stream), token, need_write);
+    }
+    Ok(())
+}
+
+fn close_conn(conns: &mut HashMap<u64, Conn>, poller: &mut Poller, token: u64) {
+    if let Some(conn) = conns.remove(&token) {
+        // Admission slots held by this connection's queued work release
+        // normally: the dispatcher still runs each item, sees the conn
+        // marked closed, and drops the encoded bytes.
+        conn.shared.closed.store(true, Ordering::Release);
+        let _ = poller.remove(source_fd(&conn.stream));
+    }
+}

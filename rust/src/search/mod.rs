@@ -30,7 +30,7 @@ pub mod proxima;
 /// [`crate::api::QueryRequest`] with `want_stats` set gets the batch's
 /// aggregate back in [`crate::api::QueryResponse::stats`], and the same
 /// counters cross the TCP wire via [`crate::api::wire::encode_stats`].
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SearchStats {
     /// PQ (approximate) distance computations.
     pub pq_dists: usize,

@@ -1,0 +1,321 @@
+//! Integration tests for the `net` subsystem: the v3 binary frame
+//! plane, the JSON compat plane on the SAME port, pipelining, typed
+//! admission shedding, adversarial framing, and graceful drain (ISSUE 9
+//! acceptance criteria live here).
+
+use proxima::api::{ApiErrorCode, QueryOptions, QueryRequest};
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::Client;
+use proxima::coordinator::{SearchService, ServiceCell};
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::Dataset;
+use proxima::distance::Metric;
+use proxima::net::frame::{self, FrameBody, HEADER_LEN, MAGIC, MAX_FRAME_LEN, OP_QUERY};
+use proxima::net::{AdmissionConfig, BinClient, NetConfig, NetServer};
+use std::sync::Arc;
+
+fn service() -> (Dataset, Arc<SearchService>) {
+    let ds = tiny_uniform(400, 12, Metric::L2, 7);
+    let svc = Arc::new(SearchService::build(
+        &ds,
+        &GraphParams {
+            r: 12,
+            build_l: 24,
+            alpha: 1.2,
+            seed: 7,
+        },
+        &PqParams {
+            m: 6,
+            c: 32,
+            train_sample: 400,
+            kmeans_iters: 6,
+        },
+        SearchParams {
+            l: 80,
+            k: 10,
+            ..Default::default()
+        },
+        false,
+    ));
+    (ds, svc)
+}
+
+fn net_serve(svc: Arc<SearchService>, cfg: NetConfig) -> NetServer {
+    let cell = Arc::new(ServiceCell::new(svc));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+    NetServer::start(cell, handle, cfg).unwrap()
+}
+
+/// Acceptance criterion: the same query answered over the v3 binary
+/// plane and over the v2 JSON plane — both against ONE live server on
+/// ONE port — returns bitwise-identical `NeighborList`s.
+#[test]
+fn binary_v3_matches_json_v2_bitwise_on_one_port() {
+    let (ds, svc) = service();
+    let server = net_serve(svc, NetConfig::default());
+
+    let mut json = Client::connect(server.addr).unwrap();
+    let mut bin = BinClient::connect(server.addr).unwrap();
+    for qi in 0..8 {
+        let q = ds.queries.row(qi);
+        let (json_ids, json_dists, _) = json.search(q, 10).unwrap();
+        let resp = bin
+            .query(&QueryRequest::single(q, 10))
+            .unwrap()
+            .expect("typed OK");
+        assert_eq!(resp.results.len(), 1);
+        assert_eq!(resp.results[0].ids, json_ids, "query {qi}: ids");
+        // Bitwise: the JSON plane's float text must round-trip exactly,
+        // and the binary plane ships raw LE f32 — so both planes agree
+        // to the bit or something is lossy.
+        assert_eq!(resp.results[0].dists, json_dists, "query {qi}: dists");
+    }
+    server.stop();
+}
+
+/// Acceptance criterion: N requests pipelined down one connection (all
+/// written before any response is read) return the same results as N
+/// serial round-trips, matched by request id.
+#[test]
+fn pipelined_in_flight_matches_serial_round_trips() {
+    let (ds, svc) = service();
+    let server = net_serve(svc, NetConfig::default());
+    let mut bin = BinClient::connect(server.addr).unwrap();
+
+    const N: usize = 8;
+    let serial: Vec<_> = (0..N)
+        .map(|qi| {
+            bin.query(&QueryRequest::single(ds.queries.row(qi), 10))
+                .unwrap()
+                .expect("typed OK")
+        })
+        .collect();
+
+    // Pipelined: N sends, then N receives, responses in ANY order.
+    let mut id_to_qi = std::collections::HashMap::new();
+    for qi in 0..N {
+        let id = bin
+            .send_query(&QueryRequest::single(ds.queries.row(qi), 10), 0)
+            .unwrap();
+        id_to_qi.insert(id, qi);
+    }
+    let mut seen = 0;
+    while seen < N {
+        let (id, outcome) = bin.recv().unwrap();
+        let qi = id_to_qi.remove(&id).expect("response id matches a request");
+        match outcome.expect("typed OK") {
+            FrameBody::QueryOk { response } => {
+                assert_eq!(
+                    response.results, serial[qi].results,
+                    "query {qi}: pipelined vs serial"
+                );
+            }
+            other => panic!("unexpected response body {other:?}"),
+        }
+        seen += 1;
+    }
+    server.stop();
+}
+
+/// The JSON compat plane speaks the FULL v1/v2 op surface through the
+/// event-loop server: search, stats, status — same semantics as the
+/// threaded server, same port as the binary plane.
+#[test]
+fn json_plane_serves_admin_ops_on_the_shared_port() {
+    let (ds, svc) = service();
+    let server = net_serve(svc, NetConfig::default());
+    let mut client = Client::connect(server.addr).unwrap();
+
+    let (ids, _, _) = client.search(ds.queries.row(0), 10).unwrap();
+    assert_eq!(ids.len(), 10);
+    let status = client.status().unwrap();
+    assert!(status.get("n_base").and_then(|j| j.as_f64()).unwrap_or(0.0) > 0.0);
+    let stats = client.stats().unwrap();
+    assert!(stats.get("queries").is_some());
+
+    // And the binary plane can run the same admin ops, framed.
+    let mut bin = BinClient::connect(server.addr).unwrap();
+    let status2 = bin.admin("{\"v\":2,\"op\":\"status\"}").unwrap();
+    assert_eq!(
+        status2.get("n_base").and_then(|j| j.as_f64()),
+        status.get("n_base").and_then(|j| j.as_f64()),
+        "both planes report the same index"
+    );
+    server.stop();
+}
+
+/// Adversarial framing, all on connections that must SURVIVE: every
+/// malformed input gets a typed error frame and the next well-formed
+/// request still answers.
+#[test]
+fn adversarial_frames_are_rejected_typed_on_a_surviving_connection() {
+    let (ds, svc) = service();
+    let server = net_serve(svc, NetConfig::default());
+    let mut bin = BinClient::connect(server.addr).unwrap();
+    let good = QueryRequest::single(ds.queries.row(0), 10);
+    let good_resp = bin.query(&good).unwrap().expect("typed OK");
+
+    // 1. Truncated frame: header declares 13 payload bytes, body runs
+    //    out mid-request. Typed error, id attributed.
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&MAGIC);
+    raw.extend_from_slice(&13u32.to_le_bytes());
+    raw.extend_from_slice(&42u64.to_le_bytes()); // request id
+    raw.push(OP_QUERY);
+    raw.extend_from_slice(&10u32.to_le_bytes()); // k, then nothing
+    bin.send_raw(&raw).unwrap();
+    let (id, outcome) = bin.recv().unwrap();
+    assert_eq!(id, 42, "truncation error attributed to the culprit id");
+    assert_eq!(outcome.unwrap_err().code, ApiErrorCode::BadRequest);
+
+    // 2. Giant declared length: a header claiming MAX_FRAME_LEN + 1.
+    //    Rejected BEFORE allocation, typed, and the stream resyncs.
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&MAGIC);
+    raw.extend_from_slice(&((MAX_FRAME_LEN + 1) as u32).to_le_bytes());
+    bin.send_raw(&raw).unwrap();
+    let (_, outcome) = bin.recv().unwrap();
+    let e = outcome.unwrap_err();
+    assert_eq!(e.code, ApiErrorCode::BadRequest);
+    assert!(e.message.contains("exceeds"), "got: {}", e.message);
+
+    // 3. Unknown op tag.
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&MAGIC);
+    raw.extend_from_slice(&9u32.to_le_bytes());
+    raw.extend_from_slice(&77u64.to_le_bytes());
+    raw.push(0x7f);
+    bin.send_raw(&raw).unwrap();
+    let (id, outcome) = bin.recv().unwrap();
+    assert_eq!(id, 77);
+    assert_eq!(outcome.unwrap_err().code, ApiErrorCode::BadRequest);
+
+    // 4. A v2 JSON line on the binary plane: typed rejection, frames
+    //    continue afterwards.
+    bin.send_raw(b"{\"v\":2,\"op\":\"status\"}\n").unwrap();
+    let (_, outcome) = bin.recv().unwrap();
+    let e = outcome.unwrap_err();
+    assert_eq!(e.code, ApiErrorCode::BadRequest);
+    assert!(e.message.contains("JSON"), "got: {}", e.message);
+
+    // The SAME connection still answers real queries, identically.
+    let again = bin.query(&good).unwrap().expect("typed OK");
+    assert_eq!(again.results, good_resp.results, "connection survived");
+    server.stop();
+}
+
+/// Duplicate in-flight request ids are a protocol error for the SECOND
+/// use only: the first request completes normally, the duplicate is
+/// rejected typed, the connection survives.
+#[test]
+fn duplicate_in_flight_request_id_rejected_typed() {
+    let (ds, svc) = service();
+    let server = net_serve(svc, NetConfig::default());
+    let mut bin = BinClient::connect(server.addr).unwrap();
+
+    // A heavy batch keeps id 7 in flight while its duplicate arrives in
+    // the same TCP segment (both frames in one write).
+    let heavy = QueryRequest {
+        vectors: (0..32).map(|qi| ds.queries.row(qi % ds.queries.len()).to_vec()).collect(),
+        k: 10,
+        options: QueryOptions::default(),
+    };
+    let mut raw = Vec::new();
+    frame::encode_query(&mut raw, 7, &heavy, 0);
+    frame::encode_query(&mut raw, 7, &QueryRequest::single(ds.queries.row(0), 10), 0);
+    bin.send_raw(&raw).unwrap();
+
+    // Two responses, both for id 7: one typed duplicate rejection, one
+    // full result set (order not guaranteed).
+    let mut ok = None;
+    let mut err = None;
+    for _ in 0..2 {
+        let (id, outcome) = bin.recv().unwrap();
+        assert_eq!(id, 7);
+        match outcome {
+            Ok(FrameBody::QueryOk { response }) => ok = Some(response),
+            Ok(other) => panic!("unexpected body {other:?}"),
+            Err(e) => err = Some(e),
+        }
+    }
+    let e = err.expect("one duplicate rejection");
+    assert_eq!(e.code, ApiErrorCode::BadRequest);
+    assert!(e.message.contains("duplicate"), "got: {}", e.message);
+    assert_eq!(ok.expect("one result").results.len(), 32);
+
+    // The id is free again once the first request finished.
+    bin.send_query_with_id(7, &QueryRequest::single(ds.queries.row(1), 10), 0)
+        .unwrap();
+    let (id, outcome) = bin.recv().unwrap();
+    assert_eq!(id, 7);
+    assert!(matches!(outcome, Ok(FrameBody::QueryOk { .. })));
+    server.stop();
+}
+
+/// Acceptance criterion: under synthetic overload (a zero-size
+/// admission budget — deterministic, no timing games) every query sheds
+/// with the typed `overloaded` code, the connection survives, and the
+/// ungated admin plane keeps answering.
+#[test]
+fn overload_sheds_typed_while_admin_plane_stays_up() {
+    let (ds, svc) = service();
+    let cfg = NetConfig {
+        admission: AdmissionConfig {
+            max_in_flight: 0, // always over budget
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = net_serve(svc, cfg);
+    let mut bin = BinClient::connect(server.addr).unwrap();
+
+    for qi in 0..4 {
+        let outcome = bin
+            .query(&QueryRequest::single(ds.queries.row(qi), 10))
+            .unwrap();
+        let e = outcome.expect_err("must shed");
+        assert_eq!(e.code, ApiErrorCode::Overloaded, "typed shed, attempt {qi}");
+    }
+    // Admin ops are NOT gated by admission: the ops plane must stay
+    // responsive exactly when the server is shedding.
+    let status = bin.admin("{\"v\":2,\"op\":\"status\"}").unwrap();
+    assert!(status.get("n_base").is_some());
+    let c = server.admission().counters();
+    assert_eq!(c.shed_admit, 4, "every query shed at admission");
+    assert_eq!(c.admitted, 0);
+    server.stop();
+}
+
+/// Graceful drain: a wire `shutdown` op answers first, THEN the server
+/// refuses new connections and `stop()` joins cleanly.
+#[test]
+fn shutdown_op_drains_and_refuses_new_connections() {
+    let (ds, svc) = service();
+    let server = net_serve(svc, NetConfig::default());
+    let addr = server.addr;
+    let mut bin = BinClient::connect(addr).unwrap();
+    // Prove the connection works, then shut down over the wire.
+    bin.query(&QueryRequest::single(ds.queries.row(0), 10))
+        .unwrap()
+        .expect("typed OK");
+    let resp = bin.admin("{\"v\":2,\"op\":\"shutdown\"}").unwrap();
+    assert_eq!(resp.get("ok").and_then(|j| j.as_bool()), Some(true));
+
+    server.stop(); // joins the drained loop + dispatchers
+    // The listener is gone: connecting now fails outright, or the
+    // accepted-then-dropped socket reads immediate EOF.
+    match std::net::TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(s) => {
+            use std::io::Read;
+            s.set_read_timeout(Some(std::time::Duration::from_secs(2))).unwrap();
+            let mut buf = [0u8; 1];
+            let mut s = s;
+            match s.read(&mut buf) {
+                Ok(0) => {}
+                other => panic!("server accepted work after drain: {other:?}"),
+            }
+        }
+    }
+}
