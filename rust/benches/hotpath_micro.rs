@@ -27,6 +27,10 @@
 //!   equivalent v2 JSON line for the same 16x128 query batch
 //!   (`frame_codec` line — the serialization side of the binary-plane
 //!   QPS claim)
+//! * observability overhead: the pooled kernel loop with the full
+//!   per-query metrics sink (engine + stage histograms, slowlog offer)
+//!   vs the same loop raw (`obs_overhead` line — the ≤5% QPS
+//!   instrumentation gate)
 
 use proxima::api::QueryOptions;
 use proxima::config::{GraphParams, PqParams, SearchParams};
@@ -329,6 +333,65 @@ fn main() {
         "qps_baseline serial={qps_serial:.0} batch={qps_batch:.0} speedup={:.2} workers={cores} pooled_allocs={pooled_allocs} fresh_allocs={fresh_allocs}",
         qps_batch / qps_serial
     );
+
+    // --- Observability overhead: instrumented vs raw hot path. ---
+    // The pooled single-thread kernel loop from above, with the full
+    // per-query metrics sink added in the instrumented arm: engine +
+    // per-stage histogram records plus a slow-query ring offer — what
+    // `SearchService::run_query` pays per query when serving. The
+    // `obs_overhead` line feeds the EXPERIMENTS.md gate
+    // "instrumentation costs ≤ 5% of hot-path QPS".
+    {
+        let obs = proxima::obs::Metrics::new();
+        let r_raw = bench("obs raw-loop           x64q L=100", || {
+            let mut acc = 0u32;
+            for qi in 0..nq {
+                let q = w.ds.queries.row(qi);
+                w.codebook.build_adt_into(q, &mut adt);
+                proxima_search_into(
+                    &ctx,
+                    &adt,
+                    q,
+                    &params,
+                    ProximaFeatures::default(),
+                    false,
+                    &mut scratch,
+                    &mut out,
+                );
+                acc = acc.wrapping_add(out.ids[0]);
+            }
+            acc
+        });
+        let r_instr = bench("obs instrumented-loop  x64q L=100", || {
+            let mut acc = 0u32;
+            for qi in 0..nq {
+                let q = w.ds.queries.row(qi);
+                w.codebook.build_adt_into(q, &mut adt);
+                proxima_search_into(
+                    &ctx,
+                    &adt,
+                    q,
+                    &params,
+                    ProximaFeatures::default(),
+                    false,
+                    &mut scratch,
+                    &mut out,
+                );
+                obs.record_query(&out.spans, &out.stats);
+                acc = acc.wrapping_add(out.ids[0]);
+            }
+            acc
+        });
+        let raw_qps = r_raw.per_sec(nq as f64);
+        let instr_qps = r_instr.per_sec(nq as f64);
+        println!(
+            "obs_overhead queries={nq} raw_qps={raw_qps:.0} instr_qps={instr_qps:.0} \
+             overhead_frac={:.4} engine_count={} slowlog_len={}",
+            1.0 - instr_qps / raw_qps,
+            obs.engine_us.count(),
+            obs.slowlog().len(),
+        );
+    }
 
     // --- Skewed batch: contiguous chunking vs work-stealing. ---
     // Every 8th query runs with a wide list and no early termination

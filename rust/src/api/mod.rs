@@ -380,6 +380,7 @@ mod tests {
                 ..Default::default()
             },
             trace: None,
+            spans: Default::default(),
         };
         let r = QueryResponse::from_outputs(vec![mk(3), mk(4)], true, 42);
         assert_eq!(r.results.len(), 2);
@@ -401,6 +402,7 @@ mod tests {
                 ..Default::default()
             },
             trace: None,
+            spans: Default::default(),
         };
         let r = QueryResponse::from_results(
             vec![

@@ -52,6 +52,16 @@ pub enum WireRequest {
     Stats,
     /// v2 admin plane: spec + provenance + counters of the served index.
     Status,
+    /// v2 admin plane: Prometheus text exposition of the lifetime
+    /// metrics (`crate::obs`) — counters, gauges, and the log-linear
+    /// latency histograms — embedded as the `"exposition"` string field
+    /// of the JSON response line (the line protocol carries no raw
+    /// multi-line bodies).
+    Metrics,
+    /// v2 admin plane: the slow-query flight recorder — the N slowest
+    /// recent queries with their per-stage span breakdowns and
+    /// [`SearchStats`]. Cleared on `reload`/`flush` hot-swaps.
+    Slowlog,
     /// v2 admin plane: hot-swap the served index to the artifact at
     /// `path`, optionally switching the vector [`Residency`] (`None`
     /// keeps the currently-served epoch's residency), the row-cache
@@ -165,6 +175,8 @@ pub fn decode_request(j: &Json) -> Result<WireRequest, ApiError> {
         // accepting them regardless of the line's `v` cannot collide
         // with compat behavior; responses are always structured.
         "status" => Ok(WireRequest::Status),
+        "metrics" => Ok(WireRequest::Metrics),
+        "slowlog" => Ok(WireRequest::Slowlog),
         "reload" => {
             let path = j
                 .get("path")
@@ -815,6 +827,16 @@ mod tests {
     fn admin_ops_decode() {
         let j = json::parse(r#"{"v":2,"op":"status"}"#).unwrap();
         assert!(matches!(decode_request(&j).unwrap(), WireRequest::Status));
+        let j = json::parse(r#"{"v":2,"op":"metrics"}"#).unwrap();
+        assert!(matches!(decode_request(&j).unwrap(), WireRequest::Metrics));
+        let j = json::parse(r#"{"v":2,"op":"slowlog"}"#).unwrap();
+        assert!(matches!(decode_request(&j).unwrap(), WireRequest::Slowlog));
+        // The no-collision argument: observability ops decode on
+        // versionless lines too (no v1 client ever sent these names).
+        let j = json::parse(r#"{"op":"metrics"}"#).unwrap();
+        assert!(matches!(decode_request(&j).unwrap(), WireRequest::Metrics));
+        let j = json::parse(r#"{"op":"slowlog"}"#).unwrap();
+        assert!(matches!(decode_request(&j).unwrap(), WireRequest::Slowlog));
         let j = json::parse(r#"{"v":2,"op":"reload","path":"/tmp/x.pxa"}"#).unwrap();
         match decode_request(&j).unwrap() {
             WireRequest::Reload {

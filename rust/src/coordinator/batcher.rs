@@ -159,6 +159,9 @@ fn run_loop(
         // the new index.
         let service = cell.load();
         let batch: Vec<Request> = std::mem::take(&mut pending);
+        // Coalesced size distribution: how well arrival bursts fill
+        // batches (the `proxima_batch_size` histogram).
+        service.obs.record_batch(batch.len());
         // Each request was validated at enqueue against THAT moment's
         // epoch; a hot reload may have swapped in a differently-shaped
         // index since. Re-check the one epoch-dependent precondition

@@ -19,18 +19,28 @@
 //!   [`crate::net::NetServer`], send and receive halves on separate
 //!   threads, so offered load does NOT back off when the server slows
 //!   down (the closed-loop fallacy). Reports completion/shed split and
-//!   completed-request latency; [`sweep_open`] + [`knee`] locate the
+//!   BOTH latency views — completed-only and all-outcome (see
+//!   [`OpenLoadReport`]); [`sweep_open`] + [`knee`] locate the
 //!   saturation knee across offered rates.
+//!
+//! All percentile reporting runs through the shared log-linear
+//! [`Histogram`] (`crate::obs`) — the same distribution machinery the
+//! serving stack exposes on its metrics plane — so loadgen threads
+//! record lock-free into one histogram instead of collecting per-thread
+//! latency vectors. Reported percentiles are bucket upper bounds
+//! (relative error ≤ 6.25%).
 
 use super::server::Client;
 use super::SearchService;
 use crate::api::QueryOptions;
+use crate::obs::Histogram;
 use crate::util::rng::Xoshiro256pp;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Result of one load-generation run.
+/// Result of one load-generation run. Percentiles are log-linear
+/// histogram bucket upper bounds in µs ([`Histogram::percentile`]).
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     pub offered_qps: f64,
@@ -66,48 +76,51 @@ pub fn run(
     let n = schedule.len();
     let next = AtomicUsize::new(0);
     let late = AtomicUsize::new(0);
+    // One shared atomic histogram instead of per-thread latency vectors:
+    // workers record lock-free, and the percentiles come from the same
+    // log-linear machinery the serving metrics plane exposes.
+    let hist = Histogram::new();
     let start = Instant::now();
 
-    let lat_chunks: Vec<Vec<f64>> = std::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for _ in 0..workers.max(1) {
             let svc = service.clone();
             let next = &next;
             let late = &late;
             let schedule = &schedule;
-            handles.push(scope.spawn(move || {
-                let mut lats = Vec::new();
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let due = Duration::from_secs_f64(schedule[i]);
-                    let now = start.elapsed();
-                    if now < due {
-                        std::thread::sleep(due - now);
-                    } else if now - due > Duration::from_millis(10) {
-                        late.fetch_add(1, Ordering::Relaxed);
-                    }
-                    let qi = i % queries.len();
-                    let t0 = Instant::now();
-                    let _ = svc.search(queries.row(qi), k);
-                    lats.push(t0.elapsed().as_secs_f64() * 1e6);
+            let hist = &hist;
+            handles.push(scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
-                lats
+                let due = Duration::from_secs_f64(schedule[i]);
+                let now = start.elapsed();
+                if now < due {
+                    std::thread::sleep(due - now);
+                } else if now - due > Duration::from_millis(10) {
+                    late.fetch_add(1, Ordering::Relaxed);
+                }
+                let qi = i % queries.len();
+                let t0 = Instant::now();
+                let _ = svc.search(queries.row(qi), k);
+                hist.record(t0.elapsed().as_micros() as u64);
             }));
         }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        for h in handles {
+            h.join().unwrap();
+        }
     });
     let wall = start.elapsed().as_secs_f64();
-    let lats: Vec<f64> = lat_chunks.into_iter().flatten().collect();
+    let completed = hist.count() as usize;
     LoadReport {
         offered_qps: target_qps,
-        achieved_qps: lats.len() as f64 / wall,
-        completed: lats.len(),
-        p50_us: crate::util::percentile(&lats, 50.0),
-        p95_us: crate::util::percentile(&lats, 95.0),
-        p99_us: crate::util::percentile(&lats, 99.0),
+        achieved_qps: completed as f64 / wall,
+        completed,
+        p50_us: hist.percentile(50.0) as f64,
+        p95_us: hist.percentile(95.0) as f64,
+        p99_us: hist.percentile(99.0) as f64,
         late_starts: late.load(Ordering::Relaxed),
     }
 }
@@ -121,8 +134,9 @@ pub struct RpcLoadReport {
     pub queries: usize,
     /// Query throughput: queries / wall seconds.
     pub qps: f64,
-    /// Per-ROUND-TRIP latency percentiles in µs (a round-trip amortizes
-    /// `batch` queries; divide by the batch size for per-query cost).
+    /// Per-ROUND-TRIP latency percentiles in µs, histogram bucket upper
+    /// bounds (a round-trip amortizes `batch` queries; divide by the
+    /// batch size for per-query cost).
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
@@ -153,14 +167,15 @@ pub fn run_rpc(
     for _ in 0..clients {
         conns.push(Client::connect(addr)?);
     }
+    let hist = Histogram::new();
     let start = Instant::now();
-    let lat_chunks: Vec<crate::util::error::Result<Vec<f64>>> = std::thread::scope(|scope| {
+    let results: Vec<crate::util::error::Result<()>> = std::thread::scope(|scope| {
+        let hist = &hist;
         let handles: Vec<_> = conns
             .into_iter()
             .enumerate()
             .map(|(c, mut client)| {
                 scope.spawn(move || {
-                    let mut lats = Vec::with_capacity(requests_per_client);
                     for r in 0..requests_per_client {
                         let base = (c * requests_per_client + r) * batch;
                         let refs: Vec<&[f32]> = (0..batch)
@@ -174,27 +189,26 @@ pub fn run_rpc(
                                 resp.results.len()
                             );
                         }
-                        lats.push(t0.elapsed().as_secs_f64() * 1e6);
+                        hist.record(t0.elapsed().as_micros() as u64);
                     }
-                    Ok(lats)
+                    Ok(())
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
     let wall = start.elapsed().as_secs_f64();
-    let mut lats = Vec::new();
-    for chunk in lat_chunks {
-        lats.extend(chunk?);
+    for r in results {
+        r?;
     }
-    let round_trips = lats.len();
+    let round_trips = hist.count() as usize;
     Ok(RpcLoadReport {
         round_trips,
         queries: round_trips * batch,
         qps: (round_trips * batch) as f64 / wall,
-        p50_us: crate::util::percentile(&lats, 50.0),
-        p95_us: crate::util::percentile(&lats, 95.0),
-        p99_us: crate::util::percentile(&lats, 99.0),
+        p50_us: hist.percentile(50.0) as f64,
+        p95_us: hist.percentile(95.0) as f64,
+        p99_us: hist.percentile(99.0) as f64,
     })
 }
 
@@ -210,7 +224,8 @@ pub struct MixedLoadReport {
     /// measured before any churn, then one entry per checkpoint. A
     /// healthy write plane keeps this flat; a decaying one trends down.
     pub recall_timeline: Vec<f64>,
-    /// Query latency percentiles (µs) over the whole run.
+    /// Query latency percentiles (µs, histogram bucket upper bounds)
+    /// over the whole run.
     pub p50_us: f64,
     pub p95_us: f64,
 }
@@ -239,24 +254,24 @@ pub fn run_mixed(
     let mut inserts = 0usize;
     let mut deletes = 0usize;
     let mut nq = 0usize;
-    let mut lats: Vec<f64> = Vec::new();
+    let hist = Histogram::new();
     let mut recall_timeline: Vec<f64> = Vec::new();
 
-    let measure = |lats: &mut Vec<f64>, nq: &mut usize| -> f64 {
+    let measure = |hist: &Histogram, nq: &mut usize| -> f64 {
         let mut r = 0.0;
         for qi in 0..sample {
             let q = queries.row(qi);
             let gt = service.exact_nn_live(q, k);
             let t0 = Instant::now();
             let out = service.search(q, k);
-            lats.push(t0.elapsed().as_secs_f64() * 1e6);
+            hist.record(t0.elapsed().as_micros() as u64);
             *nq += 1;
             r += crate::dataset::recall_at_k(&out.ids, &gt, k);
         }
         r / sample as f64
     };
 
-    recall_timeline.push(measure(&mut lats, &mut nq)); // pre-churn baseline
+    recall_timeline.push(measure(&hist, &mut nq)); // pre-churn baseline
     let per_cp = writes.max(1).div_ceil(checkpoints.max(1));
     for w in 0..writes {
         let v: Vec<f32> = (0..dim).map(|_| rng.next_f64() as f32).collect();
@@ -270,7 +285,7 @@ pub fn run_mixed(
             deletes += 1;
         }
         if (w + 1) % per_cp == 0 || w + 1 == writes {
-            recall_timeline.push(measure(&mut lats, &mut nq));
+            recall_timeline.push(measure(&hist, &mut nq));
         }
     }
     MixedLoadReport {
@@ -278,8 +293,8 @@ pub fn run_mixed(
         inserts,
         deletes,
         recall_timeline,
-        p50_us: crate::util::percentile(&lats, 50.0),
-        p95_us: crate::util::percentile(&lats, 95.0),
+        p50_us: hist.percentile(50.0) as f64,
+        p95_us: hist.percentile(95.0) as f64,
     }
 }
 
@@ -297,12 +312,22 @@ pub struct OpenLoadReport {
     pub errors: usize,
     /// Completed requests / wall seconds (first send → last response).
     pub achieved_qps: f64,
-    /// Wire round-trip latency of COMPLETED requests only, µs. Shed
-    /// requests answer fast by design; mixing them in would flatter the
-    /// tail exactly when the server is in trouble.
+    /// Wire round-trip latency of COMPLETED requests only, µs
+    /// (histogram bucket upper bounds). Shed requests answer fast by
+    /// design; mixing them in would flatter the tail exactly when the
+    /// server is in trouble — so this stays the headline number.
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
+    /// Wire round-trip latency over ALL outcomes — completed, shed, and
+    /// errors alike, µs. Earlier versions reported ONLY the
+    /// completed-only view, silently dropping shed/error responses from
+    /// the distribution; under overload the two views diverge (fast
+    /// shed answers pull these percentiles DOWN while completed-only
+    /// climbs), and reporting both makes that divergence visible.
+    pub p50_all_us: f64,
+    pub p95_all_us: f64,
+    pub p99_all_us: f64,
     /// Sends that fell > 10 ms behind the Poisson schedule — the
     /// GENERATOR saturating, so offered load is below nominal.
     pub late_sends: usize,
@@ -418,13 +443,23 @@ pub fn run_open(
     let mut completed = 0usize;
     let mut shed = 0usize;
     let mut errors = 0usize;
-    let mut lats: Vec<f64> = Vec::with_capacity(responses.len());
+    // Two latency views in one pass: completed-only (the headline
+    // percentiles) and all-outcome (every response, shed and errors
+    // included — what a CLIENT of this connection actually saw).
+    let completed_hist = Histogram::new();
+    let all_hist = Histogram::new();
     for (id, at, ok, was_shed) in responses {
         let idx = (id as usize).wrapping_sub(1);
+        let lat_us = sent_at
+            .get(idx)
+            .map(|t0| at.duration_since(*t0).as_micros() as u64);
+        if let Some(us) = lat_us {
+            all_hist.record(us);
+        }
         if ok {
             completed += 1;
-            if let Some(t0) = sent_at.get(idx) {
-                lats.push(at.duration_since(*t0).as_secs_f64() * 1e6);
+            if let Some(us) = lat_us {
+                completed_hist.record(us);
             }
         } else if was_shed {
             shed += 1;
@@ -439,9 +474,12 @@ pub fn run_open(
         shed,
         errors,
         achieved_qps: completed as f64 / wall,
-        p50_us: crate::util::percentile(&lats, 50.0),
-        p95_us: crate::util::percentile(&lats, 95.0),
-        p99_us: crate::util::percentile(&lats, 99.0),
+        p50_us: completed_hist.percentile(50.0) as f64,
+        p95_us: completed_hist.percentile(95.0) as f64,
+        p99_us: completed_hist.percentile(99.0) as f64,
+        p50_all_us: all_hist.percentile(50.0) as f64,
+        p95_all_us: all_hist.percentile(95.0) as f64,
+        p99_all_us: all_hist.percentile(99.0) as f64,
         late_sends,
     })
 }
@@ -662,6 +700,11 @@ mod tests {
         assert_eq!(rep.shed, 0, "shed under light load");
         assert_eq!(rep.errors, 0, "errors under light load");
         assert!(rep.p99_us >= rep.p50_us);
+        // With nothing shed and no errors, the completed-only and
+        // all-outcome distributions saw the same samples — the two
+        // views must agree exactly.
+        assert_eq!(rep.p50_all_us, rep.p50_us);
+        assert_eq!(rep.p99_all_us, rep.p99_us);
         assert!(
             rep.achieved_qps > rep.offered_qps * 0.5,
             "achieved {} of {}",

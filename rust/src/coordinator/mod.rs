@@ -237,6 +237,13 @@ pub struct SearchService {
     /// retry the preference, not inherit a transient attach failure.
     xla_preferred: bool,
     pub stats: ServiceStats,
+    /// The observability plane (`crate::obs`): latency histograms,
+    /// stage breakdowns, gauges, and the slow-query flight recorder.
+    /// Unlike `stats` (per-epoch), this handle is ADOPTED by the
+    /// successor service on `reload`/`flush` hot-swaps — histogram
+    /// series are lifetime series — while its slowlog is cleared
+    /// (cross-epoch spans are not comparable).
+    pub obs: Arc<crate::obs::Metrics>,
     /// Parallelism width for batch execution: the exec pool's worker
     /// threads plus the submitting thread, which helps execute while it
     /// waits. `1` = serial inline execution.
@@ -313,6 +320,7 @@ impl SearchService {
             runtime,
             xla_preferred: use_xla,
             stats: ServiceStats::default(),
+            obs: Arc::new(crate::obs::Metrics::new()),
             workers: default_workers(),
             exec: ExecPool::shared().clone(),
             scratch: ScratchPool::new(),
@@ -513,8 +521,8 @@ impl SearchService {
         };
         let online = OnlineState::new(storage.len(), storage.dim(), spec.pq_m as usize);
         if opts.lsh_start && lsh.is_none() {
-            crate::logln!(
-                "[service] --lsh_start requested but {} carries no LSH section; \
+            crate::log_warn!(
+                "--lsh_start requested but {} carries no LSH section; \
                  rebuild with --lsh_bits to enable warm starts",
                 path.display()
             );
@@ -542,6 +550,7 @@ impl SearchService {
             runtime,
             xla_preferred: use_xla,
             stats: ServiceStats::default(),
+            obs: Arc::new(crate::obs::Metrics::new()),
             workers: default_workers(),
             exec: ExecPool::shared().clone(),
             scratch: ScratchPool::new(),
@@ -661,7 +670,7 @@ impl SearchService {
                 Err(e) => {
                     // Fall back but surface the problem (suppressed in
                     // quiet mode like all progress/diagnostic chatter).
-                    crate::logln!("[service] XLA ADT failed ({e:#}); using native path");
+                    crate::log_warn!("XLA ADT failed ({e:#}); using native path");
                 }
             }
         }
@@ -818,10 +827,21 @@ impl SearchService {
     ) -> SearchOutput {
         let ServiceScratch { adt, walk } = scratch;
         let needs_adt = options.mode != SearchMode::Accurate;
+        let mut adt_build_us = 0u64;
         if needs_adt {
+            let b0 = self.obs.now_us();
             self.build_adt_into(q, adt);
+            adt_build_us = self.obs.now_us().saturating_sub(b0);
         }
-        self.run_query(q, k, options, needs_adt.then_some(&*adt), needs_adt, walk)
+        self.run_query(
+            q,
+            k,
+            options,
+            needs_adt.then_some(&*adt),
+            needs_adt,
+            adt_build_us,
+            walk,
+        )
     }
 
     /// The per-query engine: run one walk over the unified kernel with an
@@ -829,6 +849,10 @@ impl SearchService {
     /// charges `stats.adt_builds` to the query that triggered its
     /// table's build — batch dedup makes the batch aggregate equal the
     /// number of DISTINCT tables built, not the number of queries.
+    /// `adt_build_us` is the caller-measured table-build time for THIS
+    /// query (0 when the table came staged from a batch — the batch
+    /// path charges its build to the stage histogram directly).
+    #[allow(clippy::too_many_arguments)]
     fn run_query(
         &self,
         q: &[f32],
@@ -836,9 +860,14 @@ impl SearchService {
         options: &QueryOptions,
         adt: Option<&Adt>,
         fresh_adt: bool,
+        adt_build_us: u64,
         walk: &mut QueryScratch,
     ) -> SearchOutput {
-        let t0 = std::time::Instant::now();
+        // Service-level timing runs on the obs clock (wall by default,
+        // fake in tests) so end-to-end latency histograms are
+        // deterministic under an injected clock; the kernel stages
+        // inside `out.spans` stay `Instant`-timed.
+        let c0 = self.obs.now_us();
         let (params, features) = self.effective(k, options);
         // Pin ONE write-plane snapshot for the whole walk: the query
         // sees exactly that epoch's inserts/tombstones and never blocks
@@ -864,7 +893,12 @@ impl SearchService {
         }
         out.stats.adt_builds = fresh_adt as usize;
         self.map_ids(&mut out);
-        self.record(&out.stats, t0.elapsed());
+        out.spans.add(crate::obs::Stage::AdtBuild, adt_build_us);
+        // The clock total REPLACES the kernel's Instant-based total:
+        // one time source end to end keeps the engine histogram
+        // deterministic under an injected fake clock.
+        out.spans.total_us = self.obs.now_us().saturating_sub(c0) + adt_build_us;
+        self.record(&out.stats, &out.spans);
         out
     }
 
@@ -885,7 +919,7 @@ impl SearchService {
     /// Answer one query with an externally provided ADT (the batcher's
     /// path: ADTs built in a batch up front).
     pub fn search_with_adt(&self, q: &[f32], adt: &Adt, k: usize) -> SearchOutput {
-        let t0 = std::time::Instant::now();
+        let c0 = self.obs.now_us();
         let mut params = self.params;
         params.k = k.min(params.l);
         let mut scratch = self.scratch.checkout();
@@ -902,7 +936,8 @@ impl SearchService {
             &mut out,
         );
         self.map_ids(&mut out);
-        self.record(&out.stats, t0.elapsed());
+        out.spans.total_us = self.obs.now_us().saturating_sub(c0);
+        self.record(&out.stats, &out.spans);
         out
     }
 
@@ -1083,6 +1118,12 @@ impl SearchService {
                 OnlineState::with_epoch(svc.n_base(), svc.dim(), svc.codebook.m, cur.epoch + 1);
             svc.online.counters().adopt(self.online.counters());
             svc.online.set_repair_every(self.online.repair_every());
+            // The observability plane is lifetime, not per-epoch: the
+            // successor adopts the same histogram/counter handle, but
+            // the slow-query ring is cleared — its spans were measured
+            // against the predecessor's graph and residency.
+            svc.obs = self.obs.clone();
+            svc.obs.slowlog().clear();
             // Compaction renumbered STORED ids; translate to the
             // client-visible space (delta ids past the permutation are
             // identical in both).
@@ -1221,10 +1262,19 @@ impl SearchService {
             // builds INSIDE its per-query catch — the malformed query
             // then fails alone instead of killing the caller (the
             // batcher-loop survival contract).
+            let b0 = self.obs.now_us();
             let staged_ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 self.stage_adt_batch(&pq_queries, batch)
             }))
             .is_ok();
+            // Staged builds are shared across the batch, so their time
+            // is charged to the stage histogram ONCE per batch rather
+            // than split across per-query spans (which report 0 for
+            // staged tables).
+            self.obs.record_stage(
+                crate::obs::Stage::AdtBuild,
+                self.obs.now_us().saturating_sub(b0),
+            );
             if staged_ok {
                 for (f, &i) in pq_items.iter().enumerate() {
                     adt_slot[i] = Some((batch.table_index(f), batch.is_fresh(f)));
@@ -1239,15 +1289,20 @@ impl SearchService {
         let run_item = |i: usize, scratch: &mut ServiceScratch| -> SearchOutput {
             let it = &items[i];
             let ServiceScratch { adt, walk } = scratch;
-            let (adt_ref, fresh) = match adt_slot[i] {
-                Some((d, fresh)) => (Some(staged.expect("staged batch").table(d)), fresh),
+            let (adt_ref, fresh, adt_build_us) = match adt_slot[i] {
+                Some((d, fresh)) => (Some(staged.expect("staged batch").table(d)), fresh, 0),
                 None if it.options.mode != SearchMode::Accurate => {
+                    let b0 = self.obs.now_us();
                     self.build_adt_into(it.q, adt);
-                    (Some(&*adt), true)
+                    (
+                        Some(&*adt),
+                        true,
+                        self.obs.now_us().saturating_sub(b0),
+                    )
                 }
-                None => (None, false),
+                None => (None, false, 0),
             };
-            self.run_query(it.q, it.k, &it.options, adt_ref, fresh, walk)
+            self.run_query(it.q, it.k, &it.options, adt_ref, fresh, adt_build_us, walk)
         };
 
         if items.len() == 1 || self.workers <= 1 {
@@ -1286,9 +1341,16 @@ impl SearchService {
             .enumerate()
             .map(|(i, r)| {
                 queue_wait_total += r.queue_wait_us;
+                // Queue wait is only knowable here (after the pool ran
+                // the task), so it reaches the stage histogram and the
+                // output spans but NOT the slowlog entry recorded
+                // inside `run_query`.
+                self.obs
+                    .record_stage(crate::obs::Stage::QueueWait, r.queue_wait_us);
                 match r.value {
                     Some(mut out) => {
                         out.stats.queue_wait_us = r.queue_wait_us;
+                        out.spans.add(crate::obs::Stage::QueueWait, r.queue_wait_us);
                         Ok(out)
                     }
                     None => Err(ApiError::internal(format!(
@@ -1339,7 +1401,7 @@ impl SearchService {
                     return;
                 }
                 Err(e) => {
-                    crate::logln!("[service] XLA batch ADT failed ({e:#}); using native path");
+                    crate::log_warn!("XLA batch ADT failed ({e:#}); using native path");
                 }
             }
         }
@@ -1364,7 +1426,10 @@ impl SearchService {
         }
     }
 
-    fn record(&self, s: &SearchStats, elapsed: std::time::Duration) {
+    /// Record one finished query into BOTH planes: the per-epoch
+    /// `ServiceStats` counters and the lifetime `obs` histograms +
+    /// slowlog (`spans.total_us` is the query's end-to-end latency).
+    fn record(&self, s: &SearchStats, spans: &crate::obs::StageSpans) {
         self.stats.queries.fetch_add(1, Ordering::Relaxed);
         self.stats
             .pq_dists
@@ -1400,7 +1465,15 @@ impl SearchService {
         }
         self.stats
             .total_latency_us
-            .fetch_add(elapsed.as_micros() as u64, Ordering::Relaxed);
+            .fetch_add(spans.total_us, Ordering::Relaxed);
+        self.obs.record_query(spans, s);
+    }
+
+    /// Tasks currently queued or executing on this service's exec pool
+    /// (the shed signal; exported as the `proxima_exec_pending` gauge
+    /// and the status op's `admission.exec_pending` field).
+    pub fn exec_pending(&self) -> usize {
+        self.exec.pending()
     }
 
     /// Mean service latency in microseconds.

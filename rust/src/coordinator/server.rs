@@ -202,6 +202,23 @@ fn handle_conn(
     shutdown: Arc<AtomicBool>,
     idle_timeout: std::time::Duration,
 ) -> Result<()> {
+    // The obs handle is adopted across hot-swaps, so the open/close
+    // pair below always hits the same lifetime gauge even if a reload
+    // lands mid-connection.
+    let obs = cell.load().obs.clone();
+    obs.conn_opened();
+    let r = conn_loop(stream, cell, batcher, shutdown, idle_timeout);
+    obs.conn_closed();
+    r
+}
+
+fn conn_loop(
+    stream: TcpStream,
+    cell: Arc<ServiceCell>,
+    batcher: BatcherHandle,
+    shutdown: Arc<AtomicBool>,
+    idle_timeout: std::time::Duration,
+) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -235,7 +252,7 @@ fn handle_conn(
         raw.clear();
         last_activity = Instant::now();
         if !line.is_empty() {
-            let (resp, quit) = respond_json_line(&line, &cell, &batcher);
+            let (resp, quit) = respond_json_line(&line, &cell, &batcher, crate::obs::Plane::Json);
             writeln!(writer, "{}", resp.to_string_compact())?;
             if quit {
                 shutdown.store(true, Ordering::Relaxed);
@@ -254,12 +271,20 @@ fn handle_conn(
 /// op dispatch for the JSON protocol — shared verbatim by this threaded
 /// server and by [`crate::net::NetServer`]'s dispatchers (both the JSON
 /// compat plane and binary `OP_ADMIN` frames), so the two front ends
-/// cannot drift.
+/// cannot drift. `plane` tags the per-op latency histogram with the
+/// wire plane the line arrived on; the obs clock (wall by default, fake
+/// in tests) times the full decode→dispatch→encode span.
 pub(crate) fn respond_json_line(
     line: &str,
     cell: &ServiceCell,
     batcher: &BatcherHandle,
+    plane: crate::obs::Plane,
 ) -> (Json, bool) {
+    // Adopted across hot-swaps, so a reload racing this request still
+    // records into the lifetime series.
+    let obs = cell.load().obs.clone();
+    let t0 = obs.now_us();
+    let mut op_class = crate::obs::OpClass::Admin;
     let resp = match json::parse(line) {
         Err(e) => wire::encode_error(&ApiError::bad_request(format!("malformed JSON: {e}"))),
         Ok(req) => match wire::decode_request(&req) {
@@ -276,26 +301,48 @@ pub(crate) fn respond_json_line(
                 };
                 error_line(version, &e)
             }
-            Ok(WireRequest::Stats) => stats_response(&cell.load()),
-            Ok(WireRequest::Status) => status_response(&cell.load()),
-            Ok(WireRequest::Reload {
-                path,
-                residency,
-                cache_mb,
-                cache_policy,
-                lsh_start,
-            }) => reload_response(cell, &path, residency, cache_mb, cache_policy, lsh_start),
-            Ok(WireRequest::Insert { vector }) => insert_response(&cell.load(), &vector),
-            Ok(WireRequest::Delete { id }) => delete_response(&cell.load(), id),
-            Ok(WireRequest::Flush { path }) => flush_response(cell, path.as_deref()),
-            Ok(WireRequest::Shutdown) => {
-                return (Json::obj(vec![("ok", Json::Bool(true))]), true);
-            }
-            Ok(WireRequest::Search { version, request }) => {
-                answer_search(&cell.load(), batcher, version, request)
+            Ok(w) => {
+                op_class = match &w {
+                    WireRequest::Search { .. } => crate::obs::OpClass::Search,
+                    WireRequest::Insert { .. }
+                    | WireRequest::Delete { .. }
+                    | WireRequest::Flush { .. } => crate::obs::OpClass::Write,
+                    _ => crate::obs::OpClass::Admin,
+                };
+                match w {
+                    WireRequest::Stats => stats_response(&cell.load()),
+                    WireRequest::Status => status_response(&cell.load()),
+                    WireRequest::Metrics => metrics_response(&cell.load()),
+                    WireRequest::Slowlog => slowlog_response(&cell.load()),
+                    WireRequest::Reload {
+                        path,
+                        residency,
+                        cache_mb,
+                        cache_policy,
+                        lsh_start,
+                    } => reload_response(cell, &path, residency, cache_mb, cache_policy, lsh_start),
+                    WireRequest::Insert { vector } => insert_response(&cell.load(), &vector),
+                    WireRequest::Delete { id } => delete_response(&cell.load(), id),
+                    WireRequest::Flush { path } => flush_response(cell, path.as_deref()),
+                    WireRequest::Shutdown => {
+                        // Not recorded: the process is going away and a
+                        // scrape will never see the point.
+                        return (Json::obj(vec![("ok", Json::Bool(true))]), true);
+                    }
+                    WireRequest::Search { version, request } => {
+                        answer_search(&cell.load(), batcher, version, request)
+                    }
+                }
             }
         },
     };
+    // Top-level error lines (decode failures AND op-level failures)
+    // share one counter; per-result inline errors inside a v2 batch
+    // response are the per-query contract, not a request failure.
+    if wire::decode_error(&resp).is_some() {
+        obs.inc_errors();
+    }
+    obs.record_request(op_class, plane, obs.now_us().saturating_sub(t0));
     (resp, false)
 }
 
@@ -462,13 +509,233 @@ fn status_response(service: &SearchService) -> Json {
             Json::num(c.repair_splices_total.load(Ordering::Relaxed) as f64),
         ),
     ]);
+    // Load-shedding signals: the exec pool's queue depth is always
+    // present; the admission counters appear once a `NetServer` has
+    // registered its controller (the threaded JSON server has none).
+    let mut admission_kvs = vec![("exec_pending", Json::num(service.exec_pending() as f64))];
+    if let Some(adm) = service.obs.admission() {
+        let c = adm.counters();
+        admission_kvs.push(("in_flight", Json::num(c.in_flight as f64)));
+        admission_kvs.push(("admitted", Json::num(c.admitted as f64)));
+        admission_kvs.push(("shed_admit", Json::num(c.shed_admit as f64)));
+        admission_kvs.push(("shed_dispatch", Json::num(c.shed_dispatch as f64)));
+    }
     Json::obj(vec![
         ("v", Json::num(wire::VERSION as f64)),
         ("spec", wire::encode_spec(&service.spec)),
         ("provenance", provenance),
         ("storage", storage),
         ("online", online),
+        ("admission", Json::obj(admission_kvs)),
         ("stats", stats_response(service)),
+    ])
+}
+
+/// The admin `metrics` op: assemble the Prometheus text exposition
+/// (format 0.0.4) from the lifetime [`crate::obs::Metrics`] handle plus
+/// live service/storage/online counters, and embed it as the
+/// `"exposition"` string of the JSON response line (the line protocol
+/// carries no raw multi-line bodies). Every histogram cell and stage is
+/// emitted unconditionally — fixed label sets keep dashboards stable —
+/// and the whole text is rebuilt per request, so there is no retained
+/// registry to drift from the live counters.
+fn metrics_response(service: &SearchService) -> Json {
+    use crate::obs::{Histogram, OpClass, Plane, Stage};
+    let obs = &service.obs;
+    let mut r = crate::obs::Registry::new();
+
+    // Wire latency: one series per (op, plane).
+    let req_labels: Vec<(String, &Histogram)> = OpClass::ALL
+        .iter()
+        .flat_map(|&op| {
+            Plane::ALL.iter().map(move |&plane| {
+                (
+                    format!("op=\"{}\",plane=\"{}\"", op.name(), plane.name()),
+                    &obs.request_us[op as usize][plane as usize],
+                )
+            })
+        })
+        .collect();
+    let req_refs: Vec<(&str, &Histogram)> =
+        req_labels.iter().map(|(l, h)| (l.as_str(), *h)).collect();
+    r.histogram(
+        "proxima_request_duration_us",
+        "End-to-end wire request latency (us), decode to encode.",
+        &req_refs,
+    );
+    r.histogram(
+        "proxima_engine_duration_us",
+        "In-service query latency (us), excluding wire time.",
+        &[("", &obs.engine_us)],
+    );
+    // Stage breakdown. Stages are NOT disjoint (cold reads happen
+    // inside the walk/rerank), so stage sums can exceed the engine sum.
+    let stage_labels: Vec<(String, &Histogram)> = Stage::ALL
+        .iter()
+        .map(|&st| {
+            (
+                format!("stage=\"{}\"", st.name()),
+                &obs.stage_us[st as usize],
+            )
+        })
+        .collect();
+    let stage_refs: Vec<(&str, &Histogram)> =
+        stage_labels.iter().map(|(l, h)| (l.as_str(), *h)).collect();
+    r.histogram(
+        "proxima_stage_duration_us",
+        "Per-stage query latency (us); stages may overlap.",
+        &stage_refs,
+    );
+    r.histogram(
+        "proxima_batch_size",
+        "Coalesced batch sizes dispatched by the dynamic batcher.",
+        &[("", &obs.batch_size)],
+    );
+
+    r.counter(
+        "proxima_errors_total",
+        "Requests answered with a top-level error line.",
+        &[("", obs.errors() as f64)],
+    );
+    r.gauge(
+        "proxima_connections",
+        "Currently open connections (both planes).",
+        &[("", obs.connections() as f64)],
+    );
+    r.gauge(
+        "proxima_exec_pending",
+        "Tasks queued or executing on the exec pool (shed signal).",
+        &[("", service.exec_pending() as f64)],
+    );
+    r.gauge(
+        "proxima_exec_workers",
+        "Parallelism width of the serving exec pool.",
+        &[("", service.workers as f64)],
+    );
+    if let Some(adm) = obs.admission() {
+        let c = adm.counters();
+        r.gauge(
+            "proxima_admission_in_flight",
+            "Admitted queries currently executing or queued.",
+            &[("", c.in_flight as f64)],
+        );
+        r.counter(
+            "proxima_admission_admitted_total",
+            "Queries admitted by the front-door controller.",
+            &[("", c.admitted as f64)],
+        );
+        r.counter(
+            "proxima_admission_shed_total",
+            "Queries shed, by gate.",
+            &[
+                ("gate=\"admit\"", c.shed_admit as f64),
+                ("gate=\"dispatch\"", c.shed_dispatch as f64),
+            ],
+        );
+    }
+
+    // Per-epoch service counters (reset by reload/flush hot-swaps,
+    // unlike everything above).
+    let s = &service.stats;
+    r.counter(
+        "proxima_epoch_queries_total",
+        "Queries answered by the current epoch.",
+        &[("", s.queries.load(Ordering::Relaxed) as f64)],
+    );
+    r.counter(
+        "proxima_epoch_early_terminated_total",
+        "Early-terminated queries in the current epoch.",
+        &[("", s.early_terminated.load(Ordering::Relaxed) as f64)],
+    );
+    r.counter(
+        "proxima_epoch_cold_reads_total",
+        "Cold-tier raw-vector fetches in the current epoch.",
+        &[("", s.cold_reads.load(Ordering::Relaxed) as f64)],
+    );
+    r.counter(
+        "proxima_epoch_cache_requests_total",
+        "Row-cache lookups in the current epoch, by outcome.",
+        &[
+            ("outcome=\"hit\"", s.cache_hits.load(Ordering::Relaxed) as f64),
+            (
+                "outcome=\"miss\"",
+                s.cache_misses.load(Ordering::Relaxed) as f64,
+            ),
+        ],
+    );
+    if let Some(cs) = service.storage.cache_status() {
+        r.gauge(
+            "proxima_cache_hit_rate",
+            "Lifetime row-cache hit rate of the current epoch's cache.",
+            &[("", cs.hit_rate())],
+        );
+    }
+    let snap = service.online.load();
+    r.gauge(
+        "proxima_online_epoch",
+        "Write-plane epoch of the served snapshot.",
+        &[("", snap.epoch as f64)],
+    );
+    r.gauge(
+        "proxima_online_live",
+        "Live vectors in the served snapshot.",
+        &[("", snap.n_live() as f64)],
+    );
+
+    Json::obj(vec![
+        ("v", Json::num(wire::VERSION as f64)),
+        ("ok", Json::Bool(true)),
+        ("format", Json::str("prometheus-text-0.0.4")),
+        ("exposition", Json::str(r.render())),
+    ])
+}
+
+/// The admin `slowlog` op: dump the flight recorder — the N slowest
+/// recent queries, slowest first, each with its per-stage span
+/// breakdown (µs, keyed by [`Stage::name`]) and key `SearchStats`
+/// counters. Cleared when a hot-swap installs a new epoch.
+///
+/// [`Stage::name`]: crate::obs::Stage::name
+fn slowlog_response(service: &SearchService) -> Json {
+    use crate::obs::Stage;
+    let slowlog = service.obs.slowlog();
+    let entries: Vec<Json> = slowlog
+        .snapshot()
+        .into_iter()
+        .map(|e| {
+            let stages = Stage::ALL
+                .iter()
+                .map(|&st| (st.name(), Json::num(e.spans.get(st) as f64)))
+                .collect();
+            Json::obj(vec![
+                ("seq", Json::num(e.seq as f64)),
+                ("latency_us", Json::num(e.latency_us as f64)),
+                ("stages", Json::obj(stages)),
+                (
+                    "stats",
+                    Json::obj(vec![
+                        ("hops", Json::num(e.stats.hops as f64)),
+                        ("pq_dists", Json::num(e.stats.pq_dists as f64)),
+                        ("exact_dists", Json::num(e.stats.exact_dists as f64)),
+                        ("adt_builds", Json::num(e.stats.adt_builds as f64)),
+                        ("queue_wait_us", Json::num(e.stats.queue_wait_us as f64)),
+                        ("cold_reads", Json::num(e.stats.cold_reads as f64)),
+                        ("cache_hits", Json::num(e.stats.cache_hits as f64)),
+                        ("cache_misses", Json::num(e.stats.cache_misses as f64)),
+                        (
+                            "early_terminated",
+                            Json::Bool(e.stats.early_terminated),
+                        ),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("v", Json::num(wire::VERSION as f64)),
+        ("ok", Json::Bool(true)),
+        ("capacity", Json::num(slowlog.capacity() as f64)),
+        ("entries", Json::Arr(entries)),
     ])
 }
 
@@ -573,11 +840,18 @@ fn reload_response(
             // Carry the serve-time execution width across the swap: a
             // dedicated pool installed by `--workers` must not silently
             // revert to the machine-sized shared pool on reload.
-            let svc = if old.uses_shared_pool() {
+            let mut svc = if old.uses_shared_pool() {
                 svc
             } else {
                 svc.with_workers(old.workers)
             };
+            // Adopt the lifetime observability plane (histograms,
+            // counters, gauges survive the swap — scrape pipelines need
+            // continuous series); the slow-query flight recorder is
+            // cleared because its spans describe the OLD epoch's
+            // graph/residency. `ServiceStats` stays per-epoch.
+            svc.obs = old.obs.clone();
+            svc.obs.slowlog().clear();
             let info = Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("dataset", Json::str(svc.name.clone())),
@@ -749,6 +1023,37 @@ impl Client {
         let resp = self.admin_roundtrip(Json::obj(vec![
             ("v", Json::num(wire::VERSION as f64)),
             ("op", Json::str("status")),
+        ]))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(resp)
+    }
+
+    /// v2 admin: the Prometheus text exposition of the server's
+    /// lifetime metrics (extracted from the response's `"exposition"`
+    /// field). Transparently reconnects on transient transport errors.
+    pub fn metrics(&mut self) -> Result<String> {
+        let resp = self.admin_roundtrip(Json::obj(vec![
+            ("v", Json::num(wire::VERSION as f64)),
+            ("op", Json::str("metrics")),
+        ]))?;
+        if let Some(err) = wire::decode_error(&resp) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        resp.get("exposition")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("metrics response missing 'exposition'"))
+    }
+
+    /// v2 admin: the slow-query flight recorder (slowest recent queries
+    /// with stage spans). Returns the full response line; `"entries"`
+    /// holds the records, slowest first.
+    pub fn slowlog(&mut self) -> Result<Json> {
+        let resp = self.admin_roundtrip(Json::obj(vec![
+            ("v", Json::num(wire::VERSION as f64)),
+            ("op", Json::str("slowlog")),
         ]))?;
         if let Some(err) = wire::decode_error(&resp) {
             return Err(anyhow!("server error: {err}"));

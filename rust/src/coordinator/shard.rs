@@ -305,6 +305,7 @@ impl ShardedService {
             dists: nl.dists,
             stats: resp.stats.unwrap_or_default(),
             trace: None,
+            spans: Default::default(),
         }
     }
 }

@@ -186,6 +186,12 @@ impl ExecPool {
     /// depth. The admission layer and load tooling read this as a
     /// saturation signal; it is racy by nature (a snapshot, not a
     /// fence) and must only inform policy, never correctness.
+    ///
+    /// User-visible exports of this probe: the `proxima_exec_pending`
+    /// gauge in the `{"op":"metrics"}` Prometheus exposition and the
+    /// `exec_pending` field of the `status` op's `admission` block —
+    /// the shed signal an operator watches next to the admission
+    /// in-flight/shed counters.
     pub fn pending(&self) -> usize {
         self.shared.pending.load(Ordering::Acquire)
     }

@@ -205,6 +205,46 @@
 //! a future `PXW4` changes the magic, and v3 decoders reject it typed.
 //! The open-loop generator [`coordinator::loadgen::run_open`] measures
 //! the resulting latency/QPS knee with Poisson arrivals.
+//!
+//! # Observability
+//!
+//! The [`obs`] plane answers "where did that p99 go?" on a live
+//! server. One `Arc<obs::Metrics>` hangs off the served
+//! [`coordinator::SearchService`]; the serving stack records into it
+//! and two admin ops read it back on **both** wire planes:
+//!
+//! - `{"op":"metrics"}` → Prometheus text exposition (format 0.0.4)
+//!   embedded as the `exposition` string field of the JSON response
+//!   (the line protocol cannot carry raw multi-line text). Metric
+//!   names: `proxima_request_duration_us{op,plane}` (wire
+//!   decode→encode, op ∈ search|write|admin, plane ∈ json|bin),
+//!   `proxima_engine_duration_us` (in-service query latency),
+//!   `proxima_stage_duration_us{stage}` (stage ∈ admission_wait |
+//!   queue_wait | adt_build | graph_walk | rerank | cold_read |
+//!   frame_encode | frame_decode), `proxima_batch_size`, lifetime
+//!   counters (`proxima_errors_total`, admission admitted/shed), and
+//!   point gauges (`proxima_connections`, `proxima_exec_pending`,
+//!   `proxima_admission_in_flight`, epoch counters, cache hit rate).
+//!   Histograms are log-linear ([`obs::Histogram`]: exact below 16µs,
+//!   16 sub-buckets per octave, ≤6.25% relative error, capped at
+//!   ~67s) and exposed at exact octave bounds `le = 2^j − 1`.
+//! - `{"op":"slowlog"}` → the flight recorder: the N slowest recent
+//!   queries with their full per-stage spans and `SearchStats`.
+//!
+//! Stage semantics: spans are **not disjoint** — `cold_read` is the
+//! storage-wait share *inside* `graph_walk`/`rerank`, and the wait
+//! stages precede engine time — so stages must not be summed against
+//! the end-to-end histogram. Lifetime-vs-epoch: the metrics handle is
+//! *adopted* across `reload`/`flush` hot-swaps (histograms/counters
+//! are lifetime series), the slowlog is *cleared* (cross-epoch spans
+//! are not comparable), and `stats` stays per-epoch.
+//!
+//! Overhead policy: recording is zero-alloc and lock-free on the
+//! steady-state path (atomic histogram adds, `Copy` span buffers
+//! pooled in `QueryScratch`, an atomic-floor slowlog fast path) —
+//! enforced by `tests/zero_alloc.rs` — and the `obs_overhead` line of
+//! `benches/hotpath_micro.rs` gates the instrumented-vs-raw QPS cost
+//! at ≤5%.
 
 pub mod api;
 pub mod artifact;
@@ -232,4 +272,5 @@ pub mod nand;
 pub mod coordinator;
 pub mod figures;
 pub mod net;
+pub mod obs;
 pub mod runtime;

@@ -29,6 +29,9 @@
 //!                                          --lsh_start entry-point warm starts
 //! proxima sim       --dataset sift-s --scale 0.02 --queues 256 --hot 0.03
 //! proxima figures   --fig all|3|6|9|11|12|13|14|15|16|17|t1|t2|t3
+//! proxima metrics   --server 127.0.0.1:7878      Prometheus exposition of a
+//!                                                live server; --slowlog true
+//!                                                dumps the flight recorder
 //! ```
 //!
 //! # Index lifecycle
@@ -58,8 +61,10 @@
 //! `[api]` section (`api.mode`, `api.l_override`, `api.early_term_tau`,
 //! `api.rerank` — see `api::QueryOptions::from_config`), so e.g.
 //! `--set api.mode=accurate` runs the HNSW-like baseline through the
-//! same typed request path the server uses. `--quiet true` (or the
-//! `PROXIMA_QUIET` env var) silences progress chatter on stderr.
+//! same typed request path the server uses. Logging is leveled
+//! (`util::log`): `--log error|warn|info|debug` or the `PROXIMA_LOG`
+//! env var set the verbosity (default info); `--quiet true` (or the
+//! legacy `PROXIMA_QUIET` env var) is shorthand for errors-only.
 
 use proxima::config::{Config, GraphParams, PqParams, SearchParams};
 use proxima::coordinator::batcher::{spawn, BatchPolicy};
@@ -82,7 +87,12 @@ fn main() -> Result<()> {
         None => Config::new(),
     };
     cfg.overlay_args(&args);
-    if cfg.get_bool("quiet", false) {
+    if let Some(level) = cfg.get_str("log") {
+        let parsed = proxima::util::log::Level::parse(level).ok_or_else(|| {
+            proxima::anyhow!("unknown --log '{level}' (error|warn|info|debug)")
+        })?;
+        proxima::util::log::set_level(parsed);
+    } else if cfg.get_bool("quiet", false) {
         proxima::util::log::set_quiet(true);
     }
 
@@ -96,12 +106,14 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&cfg)?,
         Some("sim") => cmd_sim(&cfg)?,
         Some("figures") => cmd_figures(&cfg)?,
+        Some("metrics") => cmd_metrics(&cfg)?,
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand: {o}");
             }
             eprintln!(
-                "usage: proxima <datasets|gen-data|build|search|serve|sim|figures> [--options]"
+                "usage: proxima <datasets|gen-data|build|search|serve|sim|figures|metrics> \
+                 [--options]"
             );
             std::process::exit(2);
         }
@@ -361,6 +373,27 @@ fn search_over_wire(cfg: &Config, addr: &str) -> Result<()> {
         "recall@{k} = {recall:.4}   QPS = {:.0}   (binary wire to {addr}, depth {depth})",
         n as f64 / secs
     );
+    Ok(())
+}
+
+/// The `metrics` subcommand: scrape a LIVE server's observability plane
+/// over the JSON line protocol (works against both front ends — the
+/// NetServer sniffs JSON on the shared port). Prints the raw Prometheus
+/// text exposition (pipe it into a scrape file or `promtool`); with
+/// `--slowlog true` prints the slow-query flight recorder JSON instead.
+fn cmd_metrics(cfg: &Config) -> Result<()> {
+    let addr = cfg
+        .get_str("server")
+        .ok_or_else(|| proxima::anyhow!("metrics requires --server host:port"))?;
+    let sock: std::net::SocketAddr = addr
+        .parse()
+        .map_err(|e| proxima::anyhow!("bad --server '{addr}': {e}"))?;
+    let mut client = proxima::coordinator::server::Client::connect(sock)?;
+    if cfg.get_bool("slowlog", false) {
+        println!("{}", client.slowlog()?.to_string_compact());
+    } else {
+        print!("{}", client.metrics()?);
+    }
     Ok(())
 }
 

@@ -123,6 +123,11 @@ enum Work {
 struct Shared {
     state: AtomicU8,
     admission: Arc<Admission>,
+    /// The served service's lifetime observability plane (adopted
+    /// across hot-swaps, so one handle is valid for the server's life):
+    /// per-plane request histograms, admission/frame stage timings, and
+    /// the connection gauge.
+    metrics: Arc<crate::obs::Metrics>,
     queue: Mutex<VecDeque<Work>>,
     cond: Condvar,
     waker: Waker,
@@ -166,9 +171,15 @@ impl NetServer {
         let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let admission = Arc::new(Admission::new(cfg.admission.clone(), cfg.clock.clone()));
+        let metrics = cell.load().obs.clone();
+        // Expose this front door's admission counters on the metrics /
+        // status planes (next to the exec-pool shed signal).
+        metrics.register_admission(admission.clone());
         let shared = Arc::new(Shared {
             state: AtomicU8::new(ST_RUNNING),
-            admission: Arc::new(Admission::new(cfg.admission.clone(), cfg.clock.clone())),
+            admission,
+            metrics,
             queue: Mutex::new(VecDeque::new()),
             cond: Condvar::new(),
             waker: Waker::new()?,
@@ -257,7 +268,7 @@ fn dispatch_loop(sh: &Shared, cell: &ServiceCell, batcher: &BatcherHandle) {
         let Some(work) = work else { return };
         match work {
             Work::JsonLine { conn, line } => {
-                let (resp, quit) = respond_json_line(&line, cell, batcher);
+                let (resp, quit) = respond_json_line(&line, cell, batcher, crate::obs::Plane::Json);
                 let mut bytes = resp.to_string_compact().into_bytes();
                 bytes.push(b'\n');
                 conn.push_out(&bytes);
@@ -272,24 +283,51 @@ fn dispatch_loop(sh: &Shared, cell: &ServiceCell, batcher: &BatcherHandle) {
                 deadline_us,
                 ticket,
             } => {
+                let t0 = sh.metrics.now_us();
                 let mut buf = Vec::new();
                 match sh.admission.check_dispatch(&ticket, deadline_us) {
-                    Err(e) => frame::encode_error_frame(&mut buf, request_id, &e),
-                    Ok(_wait) => match cell.load().query(&request) {
-                        Ok(resp) => frame::encode_query_ok(&mut buf, request_id, &resp),
-                        Err(e) => frame::encode_error_frame(&mut buf, request_id, &e),
-                    },
+                    Err(e) => {
+                        sh.metrics.inc_errors();
+                        frame::encode_error_frame(&mut buf, request_id, &e);
+                    }
+                    Ok(wait_us) => {
+                        // Time spent between admission and a dispatcher
+                        // lane picking the query up.
+                        sh.metrics
+                            .record_stage(crate::obs::Stage::AdmissionWait, wait_us);
+                        match cell.load().query(&request) {
+                            Ok(resp) => {
+                                let enc = Instant::now();
+                                frame::encode_query_ok(&mut buf, request_id, &resp);
+                                sh.metrics.record_stage(
+                                    crate::obs::Stage::FrameEncode,
+                                    enc.elapsed().as_micros() as u64,
+                                );
+                            }
+                            Err(e) => {
+                                sh.metrics.inc_errors();
+                                frame::encode_error_frame(&mut buf, request_id, &e);
+                            }
+                        }
+                    }
                 }
                 sh.admission.finish();
                 conn.in_flight.lock().unwrap().remove(&request_id);
                 conn.push_out(&buf);
+                sh.metrics.record_request(
+                    crate::obs::OpClass::Search,
+                    crate::obs::Plane::Bin,
+                    sh.metrics.now_us().saturating_sub(t0),
+                );
             }
             Work::Admin {
                 conn,
                 request_id,
                 line,
             } => {
-                let (resp, quit) = respond_json_line(&line, cell, batcher);
+                // Op classification and per-plane latency are recorded
+                // inside the shared dispatch (tagged `plane="bin"`).
+                let (resp, quit) = respond_json_line(&line, cell, batcher, crate::obs::Plane::Bin);
                 let mut buf = Vec::new();
                 frame::encode_admin_ok(&mut buf, request_id, &resp.to_string_compact());
                 conn.in_flight.lock().unwrap().remove(&request_id);
@@ -360,6 +398,7 @@ fn event_loop(listener: TcpListener, sh: &Shared, idle_timeout: Duration) {
                             if poller.add(source_fd(&stream), token, false).is_err() {
                                 continue;
                             }
+                            sh.metrics.conn_opened();
                             conns.insert(
                                 token,
                                 Conn {
@@ -392,7 +431,7 @@ fn event_loop(listener: TcpListener, sh: &Shared, idle_timeout: Duration) {
                         }
                     }
                     if dead {
-                        close_conn(&mut conns, &mut poller, token);
+                        close_conn(&mut conns, &mut poller, token, sh);
                     }
                 }
             }
@@ -412,7 +451,7 @@ fn event_loop(listener: TcpListener, sh: &Shared, idle_timeout: Duration) {
                 idle = !dead && conn.last_activity.elapsed() >= idle_timeout;
             }
             if dead || idle {
-                close_conn(&mut conns, &mut poller, token);
+                close_conn(&mut conns, &mut poller, token, sh);
             }
         }
         if draining {
@@ -429,8 +468,10 @@ fn event_loop(listener: TcpListener, sh: &Shared, idle_timeout: Duration) {
         }
     }
     // Teardown: mark conns closed so dispatchers drop late output.
+    // (Conns still here were never `close_conn`ed — balance the gauge.)
     for (_, conn) in conns.iter() {
         conn.shared.closed.store(true, Ordering::Release);
+        sh.metrics.conn_closed();
     }
     sh.state.store(ST_STOPPED, Ordering::Release);
     sh.cond.notify_all();
@@ -442,18 +483,27 @@ fn event_loop(listener: TcpListener, sh: &Shared, idle_timeout: Duration) {
 fn read_conn(conn: &mut Conn, sh: &Shared) -> bool {
     let mut chunk = [0u8; READ_CHUNK];
     let mut events = Vec::new();
+    let mut decode_us = 0u64;
     loop {
         match conn.stream.read(&mut chunk) {
             Ok(0) => return true, // EOF
             Ok(n) => {
                 conn.last_activity = Instant::now();
+                let dec = Instant::now();
                 conn.reader.push(&chunk[..n], &mut events);
+                decode_us += dec.elapsed().as_micros() as u64;
                 // Keep reading: more may be buffered in the kernel.
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(_) => return true,
         }
+    }
+    // One sample per drained read (not per chunk): how long this
+    // connection's bytes took to frame/parse into events.
+    if !events.is_empty() {
+        sh.metrics
+            .record_stage(crate::obs::Stage::FrameDecode, decode_us);
     }
     let draining = sh.state() != ST_RUNNING;
     for event in events {
@@ -586,12 +636,13 @@ fn flush_conn(conn: &mut Conn, poller: &mut Poller, token: u64) -> std::io::Resu
     Ok(())
 }
 
-fn close_conn(conns: &mut HashMap<u64, Conn>, poller: &mut Poller, token: u64) {
+fn close_conn(conns: &mut HashMap<u64, Conn>, poller: &mut Poller, token: u64, sh: &Shared) {
     if let Some(conn) = conns.remove(&token) {
         // Admission slots held by this connection's queued work release
         // normally: the dispatcher still runs each item, sees the conn
         // marked closed, and drops the encoded bytes.
         conn.shared.closed.store(true, Ordering::Release);
         let _ = poller.remove(source_fd(&conn.stream));
+        sh.metrics.conn_closed();
     }
 }

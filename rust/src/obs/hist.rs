@@ -1,0 +1,276 @@
+//! Atomic log-linear (HDR-style) latency histogram.
+//!
+//! Values are microseconds. The bucket layout is **log-linear**: exact
+//! buckets below [`SUB`] (one per value, so sub-16µs latencies lose no
+//! resolution), then [`SUB`] equal-width sub-buckets per power-of-two
+//! octave up to the cap `2^MAX_EXP - 1` µs (~67s) — the classic HDR
+//! trade: bounded relative error (≤ 1/SUB ≈ 6.25%) at every scale for a
+//! fixed 368-slot table. Everything is `AtomicU64` with relaxed
+//! ordering, so recording from the query hot path is one index
+//! computation plus three `fetch_add`s — no locks, no allocation —
+//! and histograms held in `Arc` can be recorded from any thread and
+//! merged (`merge_from`) or snapshotted while live.
+//!
+//! The histogram itself never reads a clock: callers time with
+//! [`crate::net::Clock`] (wall or fake) and record the measured µs, so
+//! every distribution in the metrics plane is fake-clock testable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the sub-bucket count per octave.
+pub const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave (and the top of the exact linear region).
+pub const SUB: usize = 1 << SUB_BITS;
+/// Values are clamped to `2^MAX_EXP - 1` µs (~67s) before bucketing.
+pub const MAX_EXP: u32 = 26;
+/// Total bucket count: one linear group + one group per octave.
+pub const BUCKETS: usize = (MAX_EXP - SUB_BITS + 1) as usize * SUB;
+
+const CAP: u64 = (1u64 << MAX_EXP) - 1;
+
+/// Bucket index for a (pre-clamped) value.
+fn index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS for v >= SUB
+        let group = (msb - (SUB_BITS - 1)) as usize;
+        let within = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        group * SUB + within
+    }
+}
+
+/// `[lo, hi]` value range covered by bucket `idx` (inclusive).
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    debug_assert!(idx < BUCKETS);
+    if idx < SUB {
+        (idx as u64, idx as u64)
+    } else {
+        let group = (idx / SUB) as u32;
+        let within = (idx % SUB) as u64;
+        let msb = group + (SUB_BITS - 1);
+        let width = 1u64 << (msb - SUB_BITS);
+        let lo = (1u64 << msb) + within * width;
+        (lo, lo + width - 1)
+    }
+}
+
+/// Mergeable atomic log-linear histogram of µs values.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (µs). Lock-free, allocation-free.
+    pub fn record(&self, v: u64) {
+        let c = v.min(CAP);
+        self.buckets[index(c)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded values (µs), un-clamped.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Add every bucket of `other` into `self` (both may be live).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Zero all buckets (not linearizable against concurrent `record`;
+    /// used only on explicit operator reset paths).
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the raw bucket counters.
+    pub fn bucket_snapshot(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Upper bound (µs) of the bucket holding the `p`-th percentile
+    /// (`p` in 0..=100). 0 when empty. Relative error ≤ 1/SUB.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts = self.bucket_snapshot();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_bounds(i).1;
+            }
+        }
+        bucket_bounds(BUCKETS - 1).1
+    }
+
+    /// Cumulative counts at octave upper bounds for Prometheus
+    /// exposition: `(le, cumulative)` for `le = 2^j - 1`, j = 1..=26.
+    /// These are EXACT boundaries — no bucket range straddles a power
+    /// of two — so the cumulative counts are not approximations.
+    pub fn octave_cumulative(&self) -> Vec<(u64, u64)> {
+        let counts = self.bucket_snapshot();
+        let mut out = Vec::with_capacity(MAX_EXP as usize);
+        for j in 1..=MAX_EXP {
+            let le = (1u64 << j) - 1;
+            let upto = if j <= SUB_BITS {
+                1usize << j
+            } else {
+                SUB * (j - SUB_BITS + 1) as usize
+            };
+            let cum: u64 = counts[..upto].iter().sum();
+            out.push((le, cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_region_is_exact() {
+        let h = Histogram::new();
+        for v in 0..SUB as u64 {
+            h.record(v);
+        }
+        let counts = h.bucket_snapshot();
+        for (i, c) in counts.iter().enumerate().take(SUB) {
+            assert_eq!(*c, 1, "bucket {i}");
+            assert_eq!(bucket_bounds(i), (i as u64, i as u64));
+        }
+        assert_eq!(h.count(), SUB as u64);
+        assert_eq!(h.sum(), (0..SUB as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn index_matches_bucket_bounds() {
+        // Every probe value must land in a bucket whose range holds it,
+        // and indices must be monotone in the value.
+        let mut last = 0usize;
+        for exp in 0..MAX_EXP {
+            for off in [0u64, 1, 3] {
+                let v = (1u64 << exp) + off;
+                if v > CAP {
+                    continue;
+                }
+                let i = index(v);
+                let (lo, hi) = bucket_bounds(i);
+                assert!(lo <= v && v <= hi, "v={v} i={i} range=[{lo},{hi}]");
+                assert!(i >= last, "index not monotone at v={v}");
+                last = i;
+            }
+        }
+        assert_eq!(index(CAP), BUCKETS - 1);
+        // Over-cap values clamp into the last bucket.
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.bucket_snapshot()[BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn percentile_bounded_relative_error() {
+        let h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        for (p, exact) in [(50.0, 5_000u64), (95.0, 9_500), (99.0, 9_900)] {
+            let est = h.percentile(p);
+            let err = (est as f64 - exact as f64).abs() / exact as f64;
+            assert!(err <= 1.0 / SUB as f64, "p{p}: est {est} vs {exact}");
+            assert!(est >= exact, "upper-bound estimate must not undershoot");
+        }
+        assert_eq!(h.percentile(0.0), h.percentile(0.01));
+        assert_eq!(Histogram::new().percentile(99.0), 0);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let u = Histogram::new();
+        for v in [3u64, 17, 900, 40_000] {
+            a.record(v);
+            u.record(v);
+        }
+        for v in [5u64, 17, 1_000_000] {
+            b.record(v);
+            u.record(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.bucket_snapshot(), u.bucket_snapshot());
+        assert_eq!(a.count(), u.count());
+        assert_eq!(a.sum(), u.sum());
+    }
+
+    #[test]
+    fn octave_cumulative_is_exact_and_monotone() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 15, 16, 31, 32, 1023, 1024, CAP] {
+            h.record(v);
+        }
+        let oct = h.octave_cumulative();
+        assert_eq!(oct.len(), MAX_EXP as usize);
+        // Exactness at hand-checkable boundaries.
+        let at = |le: u64| oct.iter().find(|(l, _)| *l == le).unwrap().1;
+        assert_eq!(at(1), 2); // 0, 1
+        assert_eq!(at(15), 4); // + 2, 15
+        assert_eq!(at(31), 6); // + 16, 31
+        assert_eq!(at(63), 7); // + 32
+        assert_eq!(at(1023), 8); // + 1023
+        assert_eq!(at((1 << MAX_EXP) - 1), 10); // everything
+        let mut prev = 0;
+        for (_, c) in oct {
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+}

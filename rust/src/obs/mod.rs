@@ -1,0 +1,286 @@
+//! Observability plane: stage-timed query spans, log-linear latency
+//! histograms, a Prometheus-text metrics registry, and a slow-query
+//! flight recorder.
+//!
+//! Everything here is zero-dependency and designed so the steady-state
+//! query path stays **zero-alloc and lock-free**: histograms are
+//! fixed-size atomic tables ([`hist::Histogram`]), stage spans are a
+//! `Copy` array pooled in `QueryScratch` ([`spans::StageSpans`]), and
+//! the slow-query ring ([`slowlog::SlowLog`]) is preallocated with an
+//! atomic-floor fast path. The one shared handle is [`Metrics`], held
+//! as an `Arc` by the serving stack:
+//!
+//! - `coordinator::SearchService` records per-query engine latency,
+//!   per-stage histograms, and slowlog entries;
+//! - `coordinator::server` / `net::server` record per-op, per-plane
+//!   request latency, connection gauges, and frame/admission stages;
+//! - `coordinator::server::metrics_response` assembles the Prometheus
+//!   text for `{"op":"metrics"}` from this handle plus live service
+//!   counters.
+//!
+//! **Lifetime vs epoch**: the `Arc<Metrics>` is *adopted* across index
+//! hot-swaps (`reload`/`flush`) — histograms and counters are lifetime
+//! series, which is what a scrape pipeline needs — while the slowlog
+//! is *cleared* on swap (spans from another epoch's graph/residency
+//! are not comparable) and `ServiceStats` stays per-epoch. That
+//! three-way split is pinned by `tests/obs_metrics.rs`.
+//!
+//! Timing uses [`crate::net::Clock`] (wall or fake) at the service and
+//! wire layers so latency distributions are fake-clock testable; the
+//! deep kernel stages (walk/rerank/cold-read) use `Instant` directly —
+//! they time real work inside one query, where simulated time has
+//! nothing to inject.
+
+pub mod hist;
+pub mod registry;
+pub mod slowlog;
+pub mod spans;
+
+pub use hist::Histogram;
+pub use registry::Registry;
+pub use slowlog::{SlowEntry, SlowLog};
+pub use spans::{Stage, StageSpans, STAGE_COUNT};
+
+use crate::net::admission::{Admission, Clock};
+use crate::search::SearchStats;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Request class for per-op latency series (label `op`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum OpClass {
+    /// Query-plane search (any version).
+    Search = 0,
+    /// Write plane: insert / delete / flush.
+    Write = 1,
+    /// Admin plane: stats / status / reload / metrics / slowlog.
+    Admin = 2,
+}
+
+/// Number of [`OpClass`] values.
+pub const OP_CLASSES: usize = 3;
+
+/// Which wire plane served the request (label `plane`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Plane {
+    /// Newline-delimited JSON (v1/v2).
+    Json = 0,
+    /// Length-prefixed binary frames (PXW3).
+    Bin = 1,
+}
+
+/// Number of [`Plane`] values.
+pub const PLANES: usize = 2;
+
+impl OpClass {
+    pub const ALL: [OpClass; OP_CLASSES] = [OpClass::Search, OpClass::Write, OpClass::Admin];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Search => "search",
+            OpClass::Write => "write",
+            OpClass::Admin => "admin",
+        }
+    }
+}
+
+impl Plane {
+    pub const ALL: [Plane; PLANES] = [Plane::Json, Plane::Bin];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Plane::Json => "json",
+            Plane::Bin => "bin",
+        }
+    }
+}
+
+/// The shared metrics handle: every latency histogram, counter, and
+/// gauge the serving stack records into, plus the slow-query ring.
+/// One `Arc<Metrics>` lives on `SearchService` and is adopted across
+/// hot-swaps (see module docs).
+pub struct Metrics {
+    clock: Clock,
+    /// End-to-end wire latency per `[OpClass][Plane]` (decode to
+    /// response-encode, µs).
+    pub request_us: [[Histogram; PLANES]; OP_CLASSES],
+    /// In-service query latency (µs): scratch checkout to result
+    /// mapping, excluding wire time.
+    pub engine_us: Histogram,
+    /// Per-stage latency, indexed by [`Stage`] discriminant.
+    pub stage_us: [Histogram; STAGE_COUNT],
+    /// Coalesced batch sizes dispatched by the batcher.
+    pub batch_size: Histogram,
+    /// Requests answered with an error (any op, any plane).
+    pub errors_total: AtomicU64,
+    /// Currently open connections (both planes).
+    pub connections: AtomicI64,
+    admission: Mutex<Option<Arc<Admission>>>,
+    slowlog: SlowLog,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::with_clock(Clock::wall())
+    }
+
+    /// Inject the time source (fake in tests: deterministic latencies).
+    pub fn with_clock(clock: Clock) -> Metrics {
+        Metrics {
+            clock,
+            request_us: std::array::from_fn(|_| std::array::from_fn(|_| Histogram::new())),
+            engine_us: Histogram::new(),
+            stage_us: std::array::from_fn(|_| Histogram::new()),
+            batch_size: Histogram::new(),
+            errors_total: AtomicU64::new(0),
+            connections: AtomicI64::new(0),
+            admission: Mutex::new(None),
+            slowlog: SlowLog::new(slowlog::DEFAULT_CAP),
+        }
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Current µs on the injected clock.
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Record one wire request's end-to-end latency.
+    pub fn record_request(&self, op: OpClass, plane: Plane, us: u64) {
+        self.request_us[op as usize][plane as usize].record(us);
+    }
+
+    /// Record one finished query: engine latency, every non-zero stage,
+    /// and a slowlog offer. Allocation-free.
+    pub fn record_query(&self, spans: &StageSpans, stats: &SearchStats) {
+        self.engine_us.record(spans.total_us);
+        for st in Stage::ALL {
+            let us = spans.get(st);
+            if us > 0 {
+                self.stage_us[st as usize].record(us);
+            }
+        }
+        self.slowlog.record(spans.total_us, *spans, stats.clone());
+    }
+
+    /// Record time into one stage histogram directly (used for stages
+    /// measured outside a query's own span buffer: batch-staged ADT
+    /// builds, admission wait, frame encode/decode).
+    pub fn record_stage(&self, stage: Stage, us: u64) {
+        self.stage_us[stage as usize].record(us);
+    }
+
+    /// Record one coalesced batch's size.
+    pub fn record_batch(&self, n: usize) {
+        self.batch_size.record(n as u64);
+    }
+
+    pub fn inc_errors(&self) {
+        self.errors_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors_total.load(Ordering::Relaxed)
+    }
+
+    pub fn conn_opened(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn connections(&self) -> i64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    /// Register the listener's admission controller so the metrics and
+    /// status planes can expose its counters (in-flight, admitted,
+    /// shed) next to the exec-pool shed signal.
+    pub fn register_admission(&self, adm: Arc<Admission>) {
+        *self.admission.lock().unwrap() = Some(adm);
+    }
+
+    pub fn admission(&self) -> Option<Arc<Admission>> {
+        self.admission.lock().unwrap().clone()
+    }
+
+    pub fn slowlog(&self) -> &SlowLog {
+        &self.slowlog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering as AtomOrd;
+
+    #[test]
+    fn record_query_fills_engine_stage_and_slowlog() {
+        let m = Metrics::new();
+        let mut spans = StageSpans::default();
+        spans.add(Stage::GraphWalk, 400);
+        spans.add(Stage::Rerank, 100);
+        spans.total_us = 520;
+        let stats = SearchStats {
+            hops: 9,
+            ..Default::default()
+        };
+        m.record_query(&spans, &stats);
+        assert_eq!(m.engine_us.count(), 1);
+        assert_eq!(m.engine_us.sum(), 520);
+        assert_eq!(m.stage_us[Stage::GraphWalk as usize].count(), 1);
+        assert_eq!(m.stage_us[Stage::Rerank as usize].count(), 1);
+        // Zero stages are not recorded (keeps their histograms sparse).
+        assert_eq!(m.stage_us[Stage::AdtBuild as usize].count(), 0);
+        let slow = m.slowlog().snapshot();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].latency_us, 520);
+        assert_eq!(slow[0].stats.hops, 9);
+    }
+
+    #[test]
+    fn fake_clock_drives_deterministic_request_latency() {
+        let (clock, t) = Clock::fake();
+        let m = Metrics::with_clock(clock);
+        let t0 = m.now_us();
+        t.store(1500, AtomOrd::Release);
+        m.record_request(OpClass::Search, Plane::Bin, m.now_us() - t0);
+        let h = &m.request_us[OpClass::Search as usize][Plane::Bin as usize];
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 1500);
+        // Other cells untouched.
+        assert_eq!(
+            m.request_us[OpClass::Admin as usize][Plane::Json as usize].count(),
+            0
+        );
+    }
+
+    #[test]
+    fn gauges_and_admission_registration() {
+        let m = Metrics::new();
+        m.conn_opened();
+        m.conn_opened();
+        m.conn_closed();
+        assert_eq!(m.connections(), 1);
+        m.inc_errors();
+        assert_eq!(m.errors(), 1);
+        assert!(m.admission().is_none());
+        let adm = Arc::new(Admission::new(Default::default(), Clock::wall()));
+        m.register_admission(adm.clone());
+        let got = m.admission().unwrap();
+        assert_eq!(got.counters(), adm.counters());
+    }
+}

@@ -1,0 +1,179 @@
+//! Prometheus text exposition (format 0.0.4) for the metrics plane.
+//!
+//! [`Registry`] is a streaming text builder, not a retained registry:
+//! the server assembles one per `{"op":"metrics"}` request from live
+//! counters/gauges/histograms and renders it, so there is no second
+//! copy of metric state to keep in sync. Histograms are exposed at
+//! octave granularity (`le = 2^j - 1`, exact bucket boundaries — see
+//! [`super::hist::Histogram::octave_cumulative`]) plus `+Inf`, `_sum`
+//! and `_count`, which is what `histogram_quantile()` consumes.
+//!
+//! Rendering is deterministic for a fixed set of inputs — the golden
+//! test below pins the exact text output — so clients and dashboards
+//! can rely on stable names and label sets.
+
+use super::hist::Histogram;
+use std::fmt::Write as _;
+
+/// Streaming Prometheus text-format builder.
+#[derive(Default)]
+pub struct Registry {
+    buf: String,
+}
+
+/// Format a sample value: integers render without a fraction so the
+/// output is stable and diff-friendly.
+fn fmt_val(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn series(name: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{labels}}}")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.buf, "# HELP {name} {help}");
+        let _ = writeln!(self.buf, "# TYPE {name} {kind}");
+    }
+
+    /// A counter with one or more label sets (`labels` like
+    /// `op="search",plane="json"`, or `""` for none).
+    pub fn counter(&mut self, name: &str, help: &str, samples: &[(&str, f64)]) {
+        self.header(name, help, "counter");
+        for (labels, v) in samples {
+            let _ = writeln!(self.buf, "{} {}", series(name, labels), fmt_val(*v));
+        }
+    }
+
+    /// A gauge with one or more label sets.
+    pub fn gauge(&mut self, name: &str, help: &str, samples: &[(&str, f64)]) {
+        self.header(name, help, "gauge");
+        for (labels, v) in samples {
+            let _ = writeln!(self.buf, "{} {}", series(name, labels), fmt_val(*v));
+        }
+    }
+
+    /// A histogram metric with one series per label set.
+    pub fn histogram(&mut self, name: &str, help: &str, samples: &[(&str, &Histogram)]) {
+        self.header(name, help, "histogram");
+        for (labels, h) in samples {
+            let sep = if labels.is_empty() { "" } else { "," };
+            for (le, cum) in h.octave_cumulative() {
+                let _ = writeln!(
+                    self.buf,
+                    "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}"
+                );
+            }
+            let _ = writeln!(
+                self.buf,
+                "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}",
+                h.count()
+            );
+            let _ = writeln!(self.buf, "{} {}", series(&format!("{name}_sum"), labels), h.sum());
+            let _ = writeln!(
+                self.buf,
+                "{} {}",
+                series(&format!("{name}_count"), labels),
+                h.count()
+            );
+        }
+    }
+
+    /// Finish and return the exposition text.
+    pub fn render(self) -> String {
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden test: exact exposition text for a fixed registry. Pins
+    /// the format (HELP/TYPE lines, label ordering, le bounds, value
+    /// formatting) so dashboards never silently break. CI runs this in
+    /// the `rust-obs` arm.
+    #[test]
+    fn golden_exposition_text() {
+        let h = Histogram::new();
+        h.record(3);
+        h.record(20);
+        h.record(20);
+        let mut r = Registry::new();
+        r.counter("proxima_errors_total", "Errored requests.", &[("", 7.0)]);
+        r.gauge(
+            "proxima_connections",
+            "Open connections.",
+            &[("plane=\"json\"", 2.0), ("plane=\"bin\"", 1.0)],
+        );
+        r.histogram(
+            "proxima_engine_duration_us",
+            "In-service query latency (us).",
+            &[("", &h)],
+        );
+        let text = r.render();
+
+        let mut want = String::new();
+        want.push_str("# HELP proxima_errors_total Errored requests.\n");
+        want.push_str("# TYPE proxima_errors_total counter\n");
+        want.push_str("proxima_errors_total 7\n");
+        want.push_str("# HELP proxima_connections Open connections.\n");
+        want.push_str("# TYPE proxima_connections gauge\n");
+        want.push_str("proxima_connections{plane=\"json\"} 2\n");
+        want.push_str("proxima_connections{plane=\"bin\"} 1\n");
+        want.push_str("# HELP proxima_engine_duration_us In-service query latency (us).\n");
+        want.push_str("# TYPE proxima_engine_duration_us histogram\n");
+        // le = 2^j - 1 for j = 1..=26: value 3 crosses at le=3, the two
+        // 20s at le=31.
+        for j in 1..=26u32 {
+            let le = (1u64 << j) - 1;
+            let cum = if le < 3 {
+                0
+            } else if le < 31 {
+                1
+            } else {
+                3
+            };
+            want.push_str(&format!(
+                "proxima_engine_duration_us_bucket{{le=\"{le}\"}} {cum}\n"
+            ));
+        }
+        want.push_str("proxima_engine_duration_us_bucket{le=\"+Inf\"} 3\n");
+        want.push_str("proxima_engine_duration_us_sum 43\n");
+        want.push_str("proxima_engine_duration_us_count 3\n");
+        assert_eq!(text, want);
+    }
+
+    #[test]
+    fn labeled_histogram_series() {
+        let h = Histogram::new();
+        h.record(100);
+        let mut r = Registry::new();
+        r.histogram("m", "h.", &[("op=\"search\"", &h)]);
+        let text = r.render();
+        assert!(text.contains("m_bucket{op=\"search\",le=\"127\"} 1"));
+        assert!(text.contains("m_bucket{op=\"search\",le=\"+Inf\"} 1"));
+        assert!(text.contains("m_sum{op=\"search\"} 100"));
+        assert!(text.contains("m_count{op=\"search\"} 1"));
+    }
+
+    #[test]
+    fn float_values_keep_fraction() {
+        let mut r = Registry::new();
+        r.gauge("g", "g.", &[("", 0.25)]);
+        assert!(r.render().contains("g 0.25\n"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Slow-query flight recorder: a fixed-size ring of the N slowest
+//! recent queries, each with its full stage spans and `SearchStats`.
+//!
+//! Recording is allocation-free after construction: the ring `Vec` is
+//! preallocated to capacity, entries are plain value moves (no heap
+//! fields), and an atomic floor lets the common case — a query no
+//! slower than everything already held — return without touching the
+//! lock. Dumped via the `{"op":"slowlog"}` admin op; cleared when an
+//! index hot-swap (`reload`/`flush`) installs a new epoch, because
+//! spans from the previous epoch's graph/residency are not comparable.
+
+use super::StageSpans;
+use crate::search::SearchStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default ring capacity (slowest N recent queries retained).
+pub const DEFAULT_CAP: usize = 32;
+
+/// One retained slow query.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    /// Monotonic sequence number of the recording (admission order of
+    /// retained entries, not of all queries).
+    pub seq: u64,
+    /// End-to-end service latency (µs).
+    pub latency_us: u64,
+    pub spans: StageSpans,
+    pub stats: SearchStats,
+}
+
+/// Fixed-capacity "keep the slowest" recorder.
+pub struct SlowLog {
+    cap: usize,
+    /// Once the ring is full: the smallest retained latency. Queries at
+    /// or below it skip the lock entirely. (Stays 0 while filling, so
+    /// only 0µs queries — by definition not slow — are ever skipped
+    /// early.)
+    floor_us: AtomicU64,
+    seq: AtomicU64,
+    ring: Mutex<Vec<SlowEntry>>,
+}
+
+impl SlowLog {
+    pub fn new(cap: usize) -> SlowLog {
+        SlowLog {
+            cap: cap.max(1),
+            floor_us: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(Vec::with_capacity(cap.max(1))),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Offer one finished query. Keeps it only if it beats the current
+    /// floor; allocation-free in all cases.
+    pub fn record(&self, latency_us: u64, spans: StageSpans, stats: SearchStats) {
+        if latency_us <= self.floor_us.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() < self.cap {
+            let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+            ring.push(SlowEntry {
+                seq,
+                latency_us,
+                spans,
+                stats,
+            });
+            if ring.len() == self.cap {
+                self.update_floor(&ring);
+            }
+            return;
+        }
+        // Full: replace the current minimum if we beat it (re-check
+        // under the lock — the floor may have risen since the fast
+        // path).
+        let (min_idx, min_lat) = ring
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.latency_us)
+            .map(|(i, e)| (i, e.latency_us))
+            .expect("ring is non-empty when full");
+        if latency_us <= min_lat {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        ring[min_idx] = SlowEntry {
+            seq,
+            latency_us,
+            spans,
+            stats,
+        };
+        self.update_floor(&ring);
+    }
+
+    fn update_floor(&self, ring: &[SlowEntry]) {
+        let floor = ring.iter().map(|e| e.latency_us).min().unwrap_or(0);
+        self.floor_us.store(floor, Ordering::Relaxed);
+    }
+
+    /// Drop everything (epoch hot-swap: old spans are not comparable).
+    pub fn clear(&self) {
+        let mut ring = self.ring.lock().unwrap();
+        ring.clear();
+        self.floor_us.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot sorted slowest-first (admin path; allocation is fine
+    /// here).
+    pub fn snapshot(&self) -> Vec<SlowEntry> {
+        let mut out = self.ring.lock().unwrap().clone();
+        out.sort_by(|a, b| b.latency_us.cmp(&a.latency_us).then(a.seq.cmp(&b.seq)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry_stats(hops: usize) -> SearchStats {
+        SearchStats {
+            hops,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn keeps_the_slowest_n() {
+        let log = SlowLog::new(3);
+        for lat in [10u64, 50, 20, 5, 60, 30, 1] {
+            log.record(lat, StageSpans::default(), entry_stats(lat as usize));
+        }
+        let snap = log.snapshot();
+        let lats: Vec<u64> = snap.iter().map(|e| e.latency_us).collect();
+        assert_eq!(lats, vec![60, 50, 30]);
+        // Payload rides along with its entry.
+        assert_eq!(snap[0].stats.hops, 60);
+        // Floor now blocks anything at or below the retained minimum.
+        log.record(30, StageSpans::default(), entry_stats(999));
+        assert_eq!(
+            log.snapshot().iter().map(|e| e.latency_us).collect::<Vec<_>>(),
+            vec![60, 50, 30]
+        );
+    }
+
+    #[test]
+    fn clear_resets_floor_and_contents() {
+        let log = SlowLog::new(2);
+        log.record(100, StageSpans::default(), SearchStats::default());
+        log.record(200, StageSpans::default(), SearchStats::default());
+        assert_eq!(log.len(), 2);
+        log.clear();
+        assert!(log.is_empty());
+        // After clear, small latencies are accepted again.
+        log.record(1, StageSpans::default(), SearchStats::default());
+        assert_eq!(log.len(), 1);
+        assert_eq!(log.snapshot()[0].latency_us, 1);
+    }
+
+    #[test]
+    fn spans_survive_in_entries() {
+        let log = SlowLog::new(4);
+        let mut spans = StageSpans::default();
+        spans.add(super::super::Stage::GraphWalk, 70);
+        spans.total_us = 90;
+        log.record(90, spans, SearchStats::default());
+        let snap = log.snapshot();
+        assert_eq!(snap[0].spans.get(super::super::Stage::GraphWalk), 70);
+        assert_eq!(snap[0].spans.total_us, 90);
+    }
+}

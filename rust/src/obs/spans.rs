@@ -1,0 +1,126 @@
+//! Per-query stage spans: a fixed, `Copy` breakdown of where one
+//! query's latency went.
+//!
+//! The span buffer lives in [`crate::search::QueryScratch`] (pooled)
+//! and is copied into [`crate::search::SearchOutput`], so collecting a
+//! breakdown allocates nothing on the steady-state path. Stages are
+//! **not disjoint**: [`Stage::ColdRead`] time is spent *inside* the
+//! graph walk and rerank stages (it is the storage-wait component of
+//! both), and the queue/admission waits precede engine time entirely —
+//! so spans must not be summed and compared against `total_us`.
+
+/// One timed stage of a query's life. The discriminant is the index
+/// into [`StageSpans::us`] and the per-stage histogram array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// Wait between admission (decode) and dispatch, binary plane.
+    AdmissionWait = 0,
+    /// Wait in the exec-pool queue before a worker lane picked it up.
+    QueueWait = 1,
+    /// Building the per-query ADT (PQ lookup tables).
+    AdtBuild = 2,
+    /// Beam traversal of the graph (seed + expand).
+    GraphWalk = 3,
+    /// Exact-distance rerank of surviving candidates.
+    Rerank = 4,
+    /// Raw-row fetches that missed DRAM: cold reads + cache fills
+    /// (overlaps GraphWalk/Rerank — it is their storage-wait share).
+    ColdRead = 5,
+    /// Encoding the response frame/line (binary plane).
+    FrameEncode = 6,
+    /// Decoding the request frame/line (binary plane).
+    FrameDecode = 7,
+}
+
+/// Number of stages (length of [`StageSpans::us`]).
+pub const STAGE_COUNT: usize = 8;
+
+impl Stage {
+    /// Every stage, in discriminant order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::AdmissionWait,
+        Stage::QueueWait,
+        Stage::AdtBuild,
+        Stage::GraphWalk,
+        Stage::Rerank,
+        Stage::ColdRead,
+        Stage::FrameEncode,
+        Stage::FrameDecode,
+    ];
+
+    /// Stable label used in metric names, slowlog dumps, and docs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::AdmissionWait => "admission_wait",
+            Stage::QueueWait => "queue_wait",
+            Stage::AdtBuild => "adt_build",
+            Stage::GraphWalk => "graph_walk",
+            Stage::Rerank => "rerank",
+            Stage::ColdRead => "cold_read",
+            Stage::FrameEncode => "frame_encode",
+            Stage::FrameDecode => "frame_decode",
+        }
+    }
+}
+
+/// Fixed-size per-query stage breakdown (µs). `Copy`, zero-alloc.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageSpans {
+    /// End-to-end latency of the query inside the service (µs).
+    pub total_us: u64,
+    /// Per-stage µs, indexed by [`Stage`] discriminant.
+    pub us: [u64; STAGE_COUNT],
+}
+
+impl StageSpans {
+    /// Zero every stage (reused across pooled queries).
+    pub fn reset(&mut self) {
+        *self = StageSpans::default();
+    }
+
+    /// Accumulate `us` microseconds into `stage`.
+    pub fn add(&mut self, stage: Stage, us: u64) {
+        self.us[stage as usize] += us;
+    }
+
+    pub fn get(&self, stage: Stage) -> u64 {
+        self.us[stage as usize]
+    }
+
+    /// True when no stage recorded any time (e.g. spans never wired).
+    pub fn is_empty(&self) -> bool {
+        self.total_us == 0 && self.us.iter().all(|&v| v == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_get_reset_roundtrip() {
+        let mut s = StageSpans::default();
+        assert!(s.is_empty());
+        s.add(Stage::GraphWalk, 120);
+        s.add(Stage::GraphWalk, 30);
+        s.add(Stage::Rerank, 55);
+        s.total_us = 210;
+        assert_eq!(s.get(Stage::GraphWalk), 150);
+        assert_eq!(s.get(Stage::Rerank), 55);
+        assert_eq!(s.get(Stage::AdtBuild), 0);
+        assert!(!s.is_empty());
+        s.reset();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn stage_names_are_unique_and_ordered() {
+        let mut seen = std::collections::HashSet::new();
+        for (i, st) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*st as usize, i, "discriminant order");
+            assert!(seen.insert(st.name()), "duplicate name {}", st.name());
+        }
+        assert_eq!(seen.len(), STAGE_COUNT);
+    }
+}

@@ -62,7 +62,7 @@ impl RuntimeHandle {
         match Self::spawn(dir, codebook.clone()) {
             Ok(h) => Some(h),
             Err(e) => {
-                crate::logln!("[runtime] service thread failed: {e:#}");
+                crate::log_warn!("service thread failed: {e:#}");
                 None
             }
         }

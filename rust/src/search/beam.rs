@@ -19,6 +19,7 @@ use crate::dataset::VectorSet;
 use crate::distance::Metric;
 use crate::gap::GapGraph;
 use crate::graph::Graph;
+use crate::obs::Stage;
 use crate::online::OnlineSnapshot;
 use crate::pq::{Adt, PqCodes};
 use crate::storage::{RowSource, VectorStore};
@@ -258,6 +259,7 @@ pub fn accurate_beam_search_into(
     scratch: &mut QueryScratch,
     out: &mut SearchOutput,
 ) {
+    let t_query = std::time::Instant::now();
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
     let QueryScratch {
@@ -266,8 +268,10 @@ pub fn accurate_beam_search_into(
         list,
         cold,
         qpad,
+        spans,
         ..
     } = scratch;
+    spans.reset();
     // Padded contexts serve stride-padded rows; pad the query to match.
     let q_eff: &[f32] = match ctx.storage {
         Some(s) => qpad.fill_padded(q, s.stride()),
@@ -277,6 +281,7 @@ pub fn accurate_beam_search_into(
     list.reset(l);
     // Traced runs keep the paper's Bloom filter so the DES models §IV-B;
     // serving paths use the exact epoch bitset (no false-positive drops).
+    let t_walk = std::time::Instant::now();
     if want_trace {
         bloom.clear();
         kernel::seed_starts(ctx, q_eff, &mut provider, bloom, list, &mut stats);
@@ -286,6 +291,8 @@ pub fn accurate_beam_search_into(
         kernel::seed_starts(ctx, q_eff, &mut provider, visited, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
+    spans.add(Stage::GraphWalk, t_walk.elapsed().as_micros() as u64);
+    spans.add(Stage::ColdRead, cold.take_cold_us());
 
     // Tombstoned ids were traversable but may not be results: scan the
     // whole list (not just the top k) until k live candidates are kept.
@@ -301,8 +308,10 @@ pub fn accurate_beam_search_into(
         out.ids.push(c.id);
         out.dists.push(c.dist);
     }
+    spans.total_us = t_query.elapsed().as_micros() as u64;
     out.stats = stats;
     out.trace = trace;
+    out.spans = *spans;
 }
 
 /// DiskANN-PQ beam search: PQ distances guide traversal; at the end the top
@@ -351,6 +360,7 @@ pub fn pq_beam_search_into(
     scratch: &mut QueryScratch,
     out: &mut SearchOutput,
 ) {
+    let t_query = std::time::Instant::now();
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
     if let Some(t) = trace.as_mut() {
@@ -365,8 +375,10 @@ pub fn pq_beam_search_into(
         qpad,
         rerank_ids,
         rerank_dists,
+        spans,
         ..
     } = scratch;
+    spans.reset();
     // Padded contexts serve stride-padded rows; pad the query to match.
     let q_eff: &[f32] = match ctx.storage {
         Some(s) => qpad.fill_padded(q, s.stride()),
@@ -374,6 +386,7 @@ pub fn pq_beam_search_into(
     };
     let mut provider = kernel::PqAdt::new(ctx, adt, q_eff, cold);
     list.reset(l);
+    let t_walk = std::time::Instant::now();
     if want_trace {
         bloom.clear();
         kernel::seed_starts(ctx, q_eff, &mut provider, bloom, list, &mut stats);
@@ -383,11 +396,13 @@ pub fn pq_beam_search_into(
         kernel::seed_starts(ctx, q_eff, &mut provider, visited, list, &mut stats);
         kernel::expand_prefix(ctx, &mut provider, visited, list, l, &mut stats, &mut trace);
     }
+    spans.add(Stage::GraphWalk, t_walk.elapsed().as_micros() as u64);
 
     // Rerank the top candidates with accurate distances: one batched
     // sweep through the provider (gathered SIMD kernel when rows are
     // DRAM-resident; bitwise the per-id loop either way).
     use kernel::DistanceProvider;
+    let t_rerank = std::time::Instant::now();
     let take = rerank.max(k).min(list.len());
     rerank_ids.clear();
     rerank_ids.extend(list.items.iter().take(take).map(|c| c.id));
@@ -409,6 +424,8 @@ pub fn pq_beam_search_into(
     // not surface as results — drop them before taking the top k.
     rr.retain(|&(_, id)| !ctx.is_excluded(id));
     rr.truncate(k);
+    spans.add(Stage::Rerank, t_rerank.elapsed().as_micros() as u64);
+    spans.add(Stage::ColdRead, cold.take_cold_us());
 
     out.ids.clear();
     out.dists.clear();
@@ -416,8 +433,10 @@ pub fn pq_beam_search_into(
         out.ids.push(id);
         out.dists.push(d);
     }
+    spans.total_us = t_query.elapsed().as_micros() as u64;
     out.stats = stats;
     out.trace = trace;
+    out.spans = *spans;
 }
 
 #[cfg(test)]

@@ -108,6 +108,7 @@ impl IvfPq {
             dists: reranked.iter().map(|&(d, _)| d).collect(),
             stats,
             trace: None,
+            spans: Default::default(),
         }
     }
 }

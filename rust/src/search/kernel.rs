@@ -645,6 +645,10 @@ pub struct QueryScratch {
     pub rerank_ids: Vec<u32>,
     /// Rerank distance batch, parallel to `rerank_ids`.
     pub rerank_dists: Vec<f32>,
+    /// Per-query stage span buffer (`Copy`, zero-alloc): search entry
+    /// points reset it, time their stages into it, and copy it to
+    /// [`SearchOutput::spans`](crate::search::SearchOutput::spans).
+    pub spans: crate::obs::StageSpans,
 }
 
 impl QueryScratch {
@@ -661,6 +665,7 @@ impl QueryScratch {
             qpad: AlignedBuf::new(),
             rerank_ids: Vec::new(),
             rerank_dists: Vec::new(),
+            spans: crate::obs::StageSpans::default(),
         }
     }
 }

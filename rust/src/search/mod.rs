@@ -166,6 +166,11 @@ pub struct SearchOutput {
     pub dists: Vec<f32>,
     pub stats: SearchStats,
     pub trace: Option<Trace>,
+    /// Stage timing breakdown copied from the query's scratch buffer
+    /// (wall-clock µs; all-zero on paths that do not time stages).
+    /// Deliberately NOT part of the wire stats payload — it feeds the
+    /// in-process metrics plane (`crate::obs`) and the slowlog.
+    pub spans: crate::obs::StageSpans,
 }
 
 #[cfg(test)]

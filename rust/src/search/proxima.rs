@@ -28,6 +28,7 @@ use super::beam::{CandidateList, SearchContext};
 use super::kernel::{self, DistanceProvider, QueryScratch, VisitedSet};
 use super::{SearchOutput, SearchStats, Trace, TraceOp};
 use crate::config::SearchParams;
+use crate::obs::Stage;
 use crate::pq::Adt;
 
 /// Feature toggles for the ablations in Fig 13/14 (G = gap encoding is a
@@ -91,6 +92,7 @@ pub fn proxima_search_into(
     scratch: &mut QueryScratch,
     out: &mut SearchOutput,
 ) {
+    let t_query = std::time::Instant::now();
     let mut stats = SearchStats::default();
     let mut trace = want_trace.then(Trace::default);
     if let Some(t) = trace.as_mut() {
@@ -107,8 +109,10 @@ pub fn proxima_search_into(
         topk,
         cold,
         qpad,
+        spans,
         ..
     } = scratch;
+    spans.reset();
     list.reset(params.l);
     exact_cache.begin(params.l);
     rerank.clear();
@@ -142,6 +146,7 @@ pub fn proxima_search_into(
             features,
             &mut stats,
             &mut trace,
+            spans,
         );
     } else {
         visited.begin(ctx.n_vectors());
@@ -158,8 +163,13 @@ pub fn proxima_search_into(
             features,
             &mut stats,
             &mut trace,
+            spans,
         );
     }
+    // Storage wait accumulated through the pooled read buffer: the
+    // cold-read / cache-fill share of the walk + rerank stages.
+    spans.add(Stage::ColdRead, cold.take_cold_us());
+    spans.total_us = t_query.elapsed().as_micros() as u64;
 
     // `rerank` holds the final sorted, truncated candidates.
     out.ids.clear();
@@ -170,6 +180,7 @@ pub fn proxima_search_into(
     }
     out.stats = stats;
     out.trace = trace;
+    out.spans = *spans;
 }
 
 /// The Proxima policy around the shared kernel, generic over the visited
@@ -189,6 +200,7 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     features: ProximaFeatures,
     stats: &mut SearchStats,
     trace: &mut Option<Trace>,
+    spans: &mut crate::obs::StageSpans,
 ) {
     let l_cap = params.l;
     let k = params.k;
@@ -196,7 +208,9 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
 
     // Line 1: initialize with the entry point (plus LSH warm starts
     // when the context carries an `lsh_start` index).
+    let t_walk = std::time::Instant::now();
     kernel::seed_starts(ctx, q_eff, provider, visited, list, stats);
+    spans.add(Stage::GraphWalk, t_walk.elapsed().as_micros() as u64);
 
     let mut stable_iters = 0usize;
 
@@ -204,10 +218,13 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     'outer: while t_limit <= l_cap {
         // Lines 4-10: expand until the top-T prefix is fully evaluated
         // (the unified kernel; PQ distances via the Hybrid provider).
+        let t_walk = std::time::Instant::now();
         kernel::expand_prefix(ctx, provider, visited, list, t_limit, stats, trace);
+        spans.add(Stage::GraphWalk, t_walk.elapsed().as_micros() as u64);
 
         // Line 11: all top-T evaluated -> rerank top T (line 12) through
         // the exact-distance cache.
+        let t_rerank = std::time::Instant::now();
         stats.et_iterations += 1;
         let t_eff = t_limit.min(list.len());
         rerank.clear();
@@ -226,6 +243,7 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
         });
         topk.clear();
         topk.extend(rerank.iter().take(k).map(|&(_, v)| v));
+        spans.add(Stage::Rerank, t_rerank.elapsed().as_micros() as u64);
 
         // Lines 13-15: early termination after r stable iterations.
         if features.early_termination {
@@ -259,6 +277,7 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     if t_eff == 0 {
         return;
     }
+    let t_rerank = std::time::Instant::now();
     let boundary = list.items[t_eff - 1].dist;
     let threshold = if features.beta_rerank {
         if boundary >= 0.0 {
@@ -290,6 +309,7 @@ fn proxima_core<P: DistanceProvider, V: VisitedSet>(
     // returned — drop them before the final cut.
     rerank.retain(|&(_, id)| !ctx.is_excluded(id));
     rerank.truncate(k);
+    spans.add(Stage::Rerank, t_rerank.elapsed().as_micros() as u64);
 }
 
 #[cfg(test)]

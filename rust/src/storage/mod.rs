@@ -143,11 +143,23 @@ pub struct ReadBuf {
     /// without re-zeroing, a dim-4 row decoded after a dim-7 row would
     /// expose the stale floats at positions 4..7 of the shared tail.
     pad_dim: usize,
+    /// µs spent on cold reads / cache fills through this buffer since
+    /// the last [`ReadBuf::take_cold_us`] drain. Accumulated by
+    /// [`VectorStore::row`] on its non-resident branches only, so
+    /// fully-resident serving (and tiered hot hits) pay nothing; the
+    /// search entry points drain it into the `cold_read` stage span.
+    cold_us: u64,
 }
 
 impl ReadBuf {
     pub fn new() -> ReadBuf {
         ReadBuf::default()
+    }
+
+    /// Drain the accumulated cold-read time (µs), resetting it to 0.
+    #[inline]
+    pub fn take_cold_us(&mut self) -> u64 {
+        std::mem::take(&mut self.cold_us)
     }
 
     #[inline]
@@ -483,7 +495,10 @@ impl VectorStore {
 
     /// Fetch row `id` as its padded `stride()`-length slice, charging
     /// cold-tier traffic to `stats`. Resident rows (including tiered
-    /// hot hits) are free borrows; cold misses read through `buf`.
+    /// hot hits) are free borrows; cold misses read through `buf`, and
+    /// their wall time accumulates in [`ReadBuf::take_cold_us`] (cache
+    /// hits and resident rows are never timed — no `Instant` syscall
+    /// on the DRAM path beyond the cached tiers' own read-through).
     #[inline]
     pub fn row<'r>(&'r self, id: u32, buf: &'r mut ReadBuf, stats: &mut SearchStats) -> &'r [f32] {
         match &self.tier {
@@ -492,23 +507,48 @@ impl VectorStore {
                 if (id as usize) < hot.len() {
                     hot.row(id as usize)
                 } else if let Some(cache) = cache {
-                    cache.read_through(id, cold, buf, stats);
+                    Self::timed_read_through(cache, id, cold, buf, stats);
                     buf.vals.as_slice()
                 } else {
                     stats.cold_reads += 1;
                     stats.cold_bytes += cold.dim() as u64 * 4;
-                    cold.read_row(id, buf)
+                    let t = std::time::Instant::now();
+                    cold.read_row(id, buf);
+                    buf.cold_us += t.elapsed().as_micros() as u64;
+                    buf.vals.as_slice()
                 }
             }
             Tier::Cached { cache, cold } => {
-                cache.read_through(id, cold, buf, stats);
+                Self::timed_read_through(cache, id, cold, buf, stats);
                 buf.vals.as_slice()
             }
             Tier::Cold(c) => {
                 stats.cold_reads += 1;
                 stats.cold_bytes += c.dim() as u64 * 4;
-                c.read_row(id, buf)
+                let t = std::time::Instant::now();
+                c.read_row(id, buf);
+                buf.cold_us += t.elapsed().as_micros() as u64;
+                buf.vals.as_slice()
             }
+        }
+    }
+
+    /// Cache read-through, charging ONLY miss-path (cold read + fill)
+    /// time to the buffer's cold accumulator: a hit is a DRAM copy and
+    /// must not inflate the `cold_read` stage.
+    #[inline]
+    fn timed_read_through(
+        cache: &RowCache,
+        id: u32,
+        cold: &ColdVectors,
+        buf: &mut ReadBuf,
+        stats: &mut SearchStats,
+    ) {
+        let misses = stats.cache_misses;
+        let t = std::time::Instant::now();
+        cache.read_through(id, cold, buf, stats);
+        if stats.cache_misses > misses {
+            buf.cold_us += t.elapsed().as_micros() as u64;
         }
     }
 

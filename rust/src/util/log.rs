@@ -1,61 +1,196 @@
-//! One stderr log helper for build/open/serve progress, with a quiet
-//! mode — so loadgen runs and tests can silence the serving stack's
-//! progress chatter instead of interleaving it with their own output.
+//! Leveled stderr logging for build/open/serve progress.
 //!
-//! Progress messages go through the crate-root [`logln!`](crate::logln)
-//! macro, which drops the line when quiet mode is on. Quiet mode is
-//! enabled by [`set_quiet`] (the CLI's `--quiet` flag) or by setting the
-//! `PROXIMA_QUIET` environment variable to anything but `0`/empty.
-//! Errors that callers must see (panics, typed API errors) do NOT go
-//! through this: it is for progress noise only.
+//! Four severities ([`Level`]): `error` > `warn` > `info` > `debug` in
+//! urgency, `error` < `warn` < `info` < `debug` in verbosity. The
+//! process-wide maximum defaults to `info` and is set by the
+//! `PROXIMA_LOG` environment variable (`error|warn|info|debug`) or
+//! programmatically via [`set_level`] (the CLI's `--quiet` flag maps to
+//! `error` through the [`set_quiet`] shim, as does the legacy
+//! `PROXIMA_QUIET` variable). Lines render as `[level target] message`
+//! where `target` is the emitting module (`module_path!`), so an
+//! operator can grep one subsystem out of the interleaved stream.
+//!
+//! Emit through the crate-root macros: [`log_error!`], [`log_warn!`],
+//! [`log_info!`], [`log_debug!`] — or [`logln!`], the historical
+//! progress macro, which is `info`-level. Errors that callers must see
+//! programmatically (panics, typed API errors) do NOT go through this:
+//! it is for human-facing progress and diagnostics only.
+//!
+//! [`log_error!`]: crate::log_error
+//! [`log_warn!`]: crate::log_warn
+//! [`log_info!`]: crate::log_info
+//! [`log_debug!`]: crate::log_debug
+//! [`logln!`]: crate::logln
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
-static QUIET: OnceLock<AtomicBool> = OnceLock::new();
+/// Log severity. Ordered by verbosity: a message is emitted when its
+/// level is at or below the process maximum ([`max_level`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
 
-fn cell() -> &'static AtomicBool {
-    QUIET.get_or_init(|| {
-        let env_quiet = std::env::var("PROXIMA_QUIET")
-            .map(|v| !v.is_empty() && v != "0")
-            .unwrap_or(false);
-        AtomicBool::new(env_quiet)
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `PROXIMA_LOG` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            3 => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+}
+
+static MAX: OnceLock<AtomicU8> = OnceLock::new();
+
+fn cell() -> &'static AtomicU8 {
+    MAX.get_or_init(|| {
+        // `PROXIMA_LOG` wins; the legacy `PROXIMA_QUIET` (anything but
+        // empty/`0`) degrades to errors-only, matching what the old
+        // binary quiet mode suppressed.
+        let level = std::env::var("PROXIMA_LOG")
+            .ok()
+            .and_then(|v| Level::parse(&v))
+            .unwrap_or_else(|| {
+                let quiet = std::env::var("PROXIMA_QUIET")
+                    .map(|v| !v.is_empty() && v != "0")
+                    .unwrap_or(false);
+                if quiet {
+                    Level::Error
+                } else {
+                    Level::Info
+                }
+            });
+        AtomicU8::new(level as u8)
     })
 }
 
-/// Enable/disable quiet mode process-wide (overrides `PROXIMA_QUIET`).
+/// Set the process-wide maximum level (overrides the environment).
+pub fn set_level(level: Level) {
+    cell().store(level as u8, Ordering::Relaxed);
+}
+
+/// The current process-wide maximum level.
+pub fn max_level() -> Level {
+    Level::from_u8(cell().load(Ordering::Relaxed))
+}
+
+/// Would a message at `level` be emitted right now?
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Legacy shim for the old binary quiet mode (the CLI `--quiet` flag):
+/// `true` = errors only, `false` = back to the `info` default.
 pub fn set_quiet(quiet: bool) {
-    cell().store(quiet, Ordering::Relaxed);
+    set_level(if quiet { Level::Error } else { Level::Info });
 }
 
-/// Is progress logging currently suppressed?
+/// Is progress logging (info and below) currently suppressed?
 pub fn is_quiet() -> bool {
-    cell().load(Ordering::Relaxed)
+    !enabled(Level::Info)
 }
 
-/// Progress log line to stderr, suppressed in quiet mode. `eprintln!`
-/// semantics otherwise.
+/// Emit one line as `[level target] message` if `level` is enabled.
+/// The macros below pass `module_path!()` as `target`.
+pub fn write(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{} {}] {}", level.name(), target, args);
+    }
+}
+
+/// Emit at an explicit [`Level`] with the calling module as target.
+#[macro_export]
+macro_rules! log_at {
+    ($level:expr, $($arg:tt)*) => {
+        $crate::util::log::write($level, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Error-level log line (never suppressed by `--quiet`).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::log::Level::Error, $($arg)*) };
+}
+
+/// Warn-level log line.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::log::Level::Warn, $($arg)*) };
+}
+
+/// Info-level log line.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::log::Level::Info, $($arg)*) };
+}
+
+/// Debug-level log line (off by default; `PROXIMA_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::log::Level::Debug, $($arg)*) };
+}
+
+/// Progress log line (the historical macro): `info`-level.
 #[macro_export]
 macro_rules! logln {
-    ($($arg:tt)*) => {
-        if !$crate::util::log::is_quiet() {
-            eprintln!($($arg)*);
-        }
-    };
+    ($($arg:tt)*) => { $crate::log_at!($crate::util::log::Level::Info, $($arg)*) };
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // One test owns the global level: these cases run sequentially
+    // inside it so a parallel test runner cannot interleave them.
     #[test]
-    fn quiet_mode_toggles() {
-        let before = is_quiet();
+    fn levels_parse_order_and_gate() {
+        assert_eq!(Level::parse("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Debug, "ordered by verbosity");
+
+        let before = max_level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        assert!(is_quiet(), "info suppressed under warn");
+        crate::log_debug!("this line must be suppressed");
+
+        // The quiet shim maps onto levels.
         set_quiet(true);
-        assert!(is_quiet());
-        crate::logln!("this line must be suppressed");
+        assert_eq!(max_level(), Level::Error);
         set_quiet(false);
+        assert_eq!(max_level(), Level::Info);
         assert!(!is_quiet());
-        set_quiet(before);
+        set_level(before);
     }
 }

@@ -1,0 +1,236 @@
+//! Integration tests for the observability plane: the `{"op":"metrics"}`
+//! Prometheus exposition and the `{"op":"slowlog"}` flight recorder over
+//! live servers, and the lifetime-vs-epoch split across a `reload`
+//! hot-swap (histograms ADOPTED, slowlog CLEARED, `ServiceStats` reset).
+
+use proxima::config::{GraphParams, PqParams, SearchParams};
+use proxima::coordinator::batcher::{spawn, BatchPolicy};
+use proxima::coordinator::server::{Client, Server};
+use proxima::coordinator::{SearchService, ServiceCell};
+use proxima::dataset::synth::tiny_uniform;
+use proxima::dataset::Dataset;
+use proxima::distance::Metric;
+use proxima::util::json::Json;
+use std::sync::Arc;
+
+fn build_service(ds: &Dataset, seed: u64) -> SearchService {
+    SearchService::build(
+        ds,
+        &GraphParams {
+            r: 8,
+            build_l: 16,
+            alpha: 1.2,
+            seed,
+        },
+        &PqParams {
+            m: 4,
+            c: 16,
+            train_sample: 200,
+            kmeans_iters: 4,
+        },
+        SearchParams {
+            l: 30,
+            k: 5,
+            ..Default::default()
+        },
+        false,
+    )
+}
+
+/// Pull one sample's value out of Prometheus text by its exact
+/// `name{labels}` prefix (followed by a space).
+fn metric_value(text: &str, series: &str) -> f64 {
+    let line = text
+        .lines()
+        .find(|l| l.strip_prefix(series).is_some_and(|r| r.starts_with(' ')))
+        .unwrap_or_else(|| panic!("series {series} not found in exposition"));
+    line.rsplit(' ').next().unwrap().parse().unwrap()
+}
+
+#[test]
+fn metrics_op_exposes_both_planes_and_stages() {
+    let ds = tiny_uniform(200, 8, Metric::L2, 111);
+    let svc = Arc::new(build_service(&ds, 111));
+    let cell = Arc::new(ServiceCell::new(svc));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+
+    // One service, both front doors: the threaded JSON server and the
+    // nonblocking binary+JSON front door share the service's metrics
+    // handle, so one scrape sees traffic from both planes.
+    let json_server = Server::start(cell.clone(), handle.clone(), 0).unwrap();
+    let net_server =
+        proxima::net::NetServer::start(cell, handle, proxima::net::NetConfig::default()).unwrap();
+
+    let mut client = Client::connect(json_server.addr).unwrap();
+    for qi in 0..3 {
+        client.search(ds.queries.row(qi), 5).unwrap();
+    }
+    // Binary-plane traffic: a short open-loop burst of framed queries.
+    let rep = proxima::coordinator::loadgen::run_open(
+        net_server.addr,
+        &ds.queries,
+        5,
+        300.0,
+        std::time::Duration::from_millis(100),
+        13,
+    )
+    .unwrap();
+    assert!(rep.completed > 0, "bin-plane burst must complete queries");
+
+    let text = client.metrics().unwrap();
+    // Valid exposition shape for the histogram family.
+    assert!(text.contains("# TYPE proxima_request_duration_us histogram"));
+    assert!(text.contains("# TYPE proxima_engine_duration_us histogram"));
+    assert!(text.contains("# TYPE proxima_stage_duration_us histogram"));
+
+    // End-to-end request series on BOTH planes.
+    let json_n = metric_value(
+        &text,
+        "proxima_request_duration_us_count{op=\"search\",plane=\"json\"}",
+    );
+    assert_eq!(json_n, 3.0, "three JSON-plane searches");
+    let bin_n = metric_value(
+        &text,
+        "proxima_request_duration_us_count{op=\"search\",plane=\"bin\"}",
+    );
+    assert!(
+        bin_n >= rep.completed as f64,
+        "every completed framed query leaves a bin-plane sample \
+         (got {bin_n} for {} completed)",
+        rep.completed,
+    );
+
+    // Engine latency recorded once per executed query on either plane.
+    let engine_n = metric_value(&text, "proxima_engine_duration_us_count");
+    assert_eq!(engine_n, 3.0 + rep.completed as f64);
+    // Every stage series exists with a fixed label set; zero-duration
+    // stage samples are skipped, so counts are bounded by engine_n.
+    let walk_n = metric_value(&text, "proxima_stage_duration_us_count{stage=\"graph_walk\"}");
+    assert!(walk_n <= engine_n);
+    for stage in [
+        "admission_wait",
+        "queue_wait",
+        "adt_build",
+        "rerank",
+        "cold_read",
+        "frame_encode",
+        "frame_decode",
+    ] {
+        assert!(
+            text.contains(&format!("proxima_stage_duration_us_count{{stage=\"{stage}\"}}")),
+            "stage {stage} series missing",
+        );
+    }
+
+    // Gauges and counters from the live service.
+    assert!(metric_value(&text, "proxima_connections") >= 1.0);
+    assert!(metric_value(&text, "proxima_errors_total") >= rep.errors as f64);
+    assert_eq!(metric_value(&text, "proxima_exec_pending"), 0.0);
+    // The net front door registered its admission controller: every
+    // completed query was admitted, and the shed counters split by gate
+    // account for exactly what the generator saw shed.
+    assert!(metric_value(&text, "proxima_admission_admitted_total") >= rep.completed as f64);
+    let shed_admit = metric_value(&text, "proxima_admission_shed_total{gate=\"admit\"}");
+    let shed_dispatch = metric_value(&text, "proxima_admission_shed_total{gate=\"dispatch\"}");
+    assert_eq!(shed_admit + shed_dispatch, rep.shed as f64);
+    // Per-epoch service counters ride along.
+    assert_eq!(metric_value(&text, "proxima_epoch_queries_total"), engine_n);
+
+    client.shutdown().unwrap();
+    json_server.stop();
+    net_server.stop();
+}
+
+#[test]
+fn slowlog_returns_stage_spans() {
+    let ds = tiny_uniform(200, 8, Metric::L2, 113);
+    let svc = Arc::new(build_service(&ds, 113));
+    let cell = Arc::new(ServiceCell::new(svc));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+    let server = Server::start(cell, handle, 0).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    for qi in 0..8 {
+        client.search(ds.queries.row(qi), 5).unwrap();
+    }
+    let log = client.slowlog().unwrap();
+    assert_eq!(
+        log.get("capacity").and_then(Json::as_usize),
+        Some(proxima::obs::slowlog::DEFAULT_CAP),
+    );
+    let entries = log.get("entries").and_then(Json::as_arr).unwrap();
+    assert!(!entries.is_empty(), "eight queries must leave slow entries");
+    let mut last = u64::MAX;
+    for e in entries {
+        let lat = e.get("latency_us").and_then(Json::as_f64).unwrap() as u64;
+        assert!(lat <= last, "entries sorted slowest-first");
+        last = lat;
+        // Each entry carries the full stage breakdown and SearchStats.
+        let stages = e.get("stages").expect("entry carries stages");
+        let walk = stages.get("graph_walk").and_then(Json::as_f64).unwrap();
+        assert!(walk >= 0.0);
+        let stats = e.get("stats").expect("entry carries stats");
+        assert!(stats.get("hops").and_then(Json::as_usize).unwrap() > 0);
+    }
+
+    client.shutdown().unwrap();
+    server.stop();
+}
+
+#[test]
+fn reload_adopts_histograms_clears_slowlog_resets_stats() {
+    let ds = tiny_uniform(200, 8, Metric::L2, 117);
+    let svc = build_service(&ds, 117);
+    let path = std::env::temp_dir().join(format!("obs-reload-{}.pxa", std::process::id()));
+    svc.save(&path).unwrap();
+
+    let cell = Arc::new(ServiceCell::new(Arc::new(svc)));
+    let (handle, _join) = spawn(cell.clone(), BatchPolicy::default());
+    let server = Server::start(cell, handle, 0).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+
+    for qi in 0..5 {
+        client.search(ds.queries.row(qi), 5).unwrap();
+    }
+    let before = client.metrics().unwrap();
+    let engine_before = metric_value(&before, "proxima_engine_duration_us_count");
+    assert_eq!(engine_before, 5.0);
+    let slow_before = client.slowlog().unwrap();
+    assert!(
+        !slow_before
+            .get("entries")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .is_empty(),
+        "slowlog holds entries before the swap",
+    );
+
+    client.reload(path.to_str().unwrap()).unwrap();
+
+    // The three-way split across the hot-swap:
+    let after = client.metrics().unwrap();
+    // 1. Lifetime histograms are ADOPTED — the scrape series continues
+    //    (the reload itself adds admin samples, not engine samples).
+    assert_eq!(metric_value(&after, "proxima_engine_duration_us_count"), engine_before);
+    // 2. The slowlog is CLEARED — old spans described the old epoch.
+    let slow_after = client.slowlog().unwrap();
+    assert!(
+        slow_after
+            .get("entries")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .is_empty(),
+        "slowlog cleared on hot-swap",
+    );
+    // 3. ServiceStats stays per-epoch: the query counter reset.
+    assert_eq!(client.stats().unwrap().get("queries").and_then(Json::as_usize), Some(0));
+
+    // Continuity: the next query extends the ADOPTED series.
+    client.search(ds.queries.row(0), 5).unwrap();
+    let resumed = client.metrics().unwrap();
+    assert_eq!(metric_value(&resumed, "proxima_engine_duration_us_count"), engine_before + 1.0);
+
+    client.shutdown().unwrap();
+    server.stop();
+    let _ = std::fs::remove_file(&path);
+}

@@ -127,6 +127,98 @@ fn steady_state_query_path_does_not_allocate() {
 }
 
 #[test]
+fn steady_state_query_path_with_obs_recording_does_not_allocate() {
+    // Observability must hold the same bar as the bare kernel: stage
+    // spans are recorded unconditionally into the Copy array pooled in
+    // `QueryScratch`, and the full `obs::Metrics` sink per query —
+    // engine + per-stage histograms (lock-free atomic tables) plus a
+    // slow-query ring offer (preallocated, atomic-floor fast path) —
+    // must add zero heap traffic on top.
+    use proxima::obs::Metrics;
+
+    let ds = tiny_uniform(500, 16, Metric::L2, 85);
+    let g = vamana::build(
+        &ds.base,
+        ds.metric,
+        &GraphParams {
+            r: 16,
+            build_l: 32,
+            alpha: 1.2,
+            seed: 85,
+        },
+    );
+    let cb = PqCodebook::train(&ds.base, ds.metric, 8, 32, 500, 6, 85);
+    let codes = cb.encode(&ds.base);
+    let ctx = SearchContext {
+        base: &ds.base,
+        metric: ds.metric,
+        graph: &g,
+        codes: Some(&codes),
+        gap: None,
+        storage: None,
+        online: None,
+        lsh: None,
+    };
+    let params = SearchParams {
+        l: 60,
+        k: 10,
+        ..Default::default()
+    };
+    let obs = Metrics::new();
+    let mut scratch = QueryScratch::new();
+    let mut adt = Adt::default();
+    let mut out = SearchOutput::default();
+
+    // Warm passes size the pooled buffers AND fill the slowlog ring, so
+    // the measured pass exercises both its fast path (floor rejection)
+    // and its replace-min path.
+    for _ in 0..2 {
+        for qi in 0..ds.n_queries() {
+            let q = ds.queries.row(qi);
+            cb.build_adt_into(q, &mut adt);
+            proxima_search_into(
+                &ctx,
+                &adt,
+                q,
+                &params,
+                ProximaFeatures::default(),
+                false,
+                &mut scratch,
+                &mut out,
+            );
+            obs.record_query(&out.spans, &out.stats);
+        }
+    }
+
+    let before = THREAD_ALLOCS.with(|c| c.get());
+    for qi in 0..ds.n_queries() {
+        let q = ds.queries.row(qi);
+        cb.build_adt_into(q, &mut adt);
+        proxima_search_into(
+            &ctx,
+            &adt,
+            q,
+            &params,
+            ProximaFeatures::default(),
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        obs.record_query(&out.spans, &out.stats);
+    }
+    let allocs = THREAD_ALLOCS.with(|c| c.get()) - before;
+    assert_eq!(
+        allocs, 0,
+        "instrumented steady-state query path allocated {allocs} times over {} queries",
+        ds.n_queries()
+    );
+    // The sink really recorded: three passes of engine samples, and the
+    // slowlog retained entries with live span payloads.
+    assert_eq!(obs.engine_us.count(), 3 * ds.n_queries() as u64);
+    assert!(!obs.slowlog().is_empty());
+}
+
+#[test]
 fn steady_state_cold_reads_do_not_allocate() {
     // The cold storage tier must honor the same bar as the resident hot
     // path: once the pooled ReadBuf is sized (first cold fetch), a
